@@ -1,0 +1,136 @@
+//! E7 — end-to-end validation: the full system on a real small workload.
+//!
+//! A Cora-statistics graph is materialized, its nodes' features uploaded
+//! through the coordinator (double-buffered state), and batched requests
+//! are served through router → batcher → PJRT running the *crossbar*
+//! 2-layer GCN artifact (`gcn2_cora`: the Pallas bit-serial MVM emulation
+//! lowered into the model).  The same batches also run through the exact
+//! f32 artifact (`gcn2_cora_exact`) to quantify the crossbar quantization
+//! error, and the edge-deployment latencies are modeled for both settings.
+//!
+//! This proves all layers compose: L1 kernel semantics inside the L2 model
+//! executed by the L3 coordinator, with the hardware/network model
+//! reporting the paper's figures for the same workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_inference
+//! ```
+
+use std::time::Instant;
+
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::graph::{datasets, NeighborSampler};
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::report::Table;
+use ima_gnn::runtime::{default_artifact_dir, ArtifactStore, Tensor};
+use ima_gnn::testing::Rng;
+
+const BATCH: usize = 64;
+const SAMPLE: usize = 8;
+const TABLE: usize = 256;
+const FEATURE: usize = 1433;
+const HIDDEN: usize = 64;
+const CLASSES: usize = 7;
+
+fn main() -> ima_gnn::Result<()> {
+    let stats = datasets::cora();
+    // Materialize a Cora-degree subgraph bounded by the artifact's table.
+    let graph = stats.materialize(TABLE, 11)?;
+    println!(
+        "materialized {}-stat graph: {} nodes, {} edges (avg degree {:.2})",
+        stats.name,
+        graph.num_nodes(),
+        graph.num_edges(),
+        graph.avg_degree()
+    );
+
+    let store = ArtifactStore::open(&default_artifact_dir())?;
+    let mut rng = Rng::new(2023);
+
+    // Sparse bag-of-words-like features (Cora features are 0/1).
+    let x_table: Vec<f32> = (0..TABLE * FEATURE)
+        .map(|_| if rng.chance(0.012) { 1.0 } else { 0.0 })
+        .collect();
+    let h_table: Vec<f32> =
+        (0..TABLE * HIDDEN).map(|_| rng.f64_in(0.0, 0.5) as f32).collect();
+    let glorot = |rng: &mut Rng, fi: usize, fo: usize| -> Vec<f32> {
+        let lim = (6.0 / (fi + fo) as f64).sqrt();
+        (0..fi * fo).map(|_| rng.f64_in(-lim, lim) as f32).collect()
+    };
+    let w1 = glorot(&mut rng, FEATURE, HIDDEN);
+    let w2 = glorot(&mut rng, HIDDEN, CLASSES);
+    let sampler = NeighborSampler::new(SAMPLE, 7);
+
+    // --- serve batched requests over the crossbar + exact artifacts ------
+    let n_batches = 4;
+    let mut wall_q = 0.0f64;
+    let mut wall_e = 0.0f64;
+    let mut agreement = Vec::new();
+    for batch_id in 0..n_batches {
+        let nodes: Vec<usize> =
+            (0..BATCH).map(|i| (batch_id * BATCH + i * 3) % graph.num_nodes()).collect();
+        let mut x_self = Vec::with_capacity(BATCH * FEATURE);
+        for &n in &nodes {
+            x_self.extend_from_slice(&x_table[n * FEATURE..(n + 1) * FEATURE]);
+        }
+        let nbr_idx = sampler.sample_batch(&graph, &nodes);
+        let inputs = vec![
+            Tensor::f32(&[BATCH, FEATURE], x_self)?,
+            Tensor::i32(&[BATCH, SAMPLE], nbr_idx)?,
+            Tensor::f32(&[TABLE, FEATURE], x_table.clone())?,
+            Tensor::f32(&[TABLE, HIDDEN], h_table.clone())?,
+            Tensor::f32(&[FEATURE, HIDDEN], w1.clone())?,
+            Tensor::f32(&[HIDDEN, CLASSES], w2.clone())?,
+        ];
+        let t0 = Instant::now();
+        let quant = store.run("gcn2_cora", &inputs)?;
+        wall_q += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let exact = store.run("gcn2_cora_exact", &inputs)?;
+        wall_e += t0.elapsed().as_secs_f64();
+
+        // Argmax agreement between the crossbar-emulated and exact paths.
+        let q = quant[0].as_f32()?;
+        let e = exact[0].as_f32()?;
+        let mut same = 0usize;
+        for b in 0..BATCH {
+            let am = |v: &[f32]| {
+                v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+            };
+            if am(&q[b * CLASSES..(b + 1) * CLASSES]) == am(&e[b * CLASSES..(b + 1) * CLASSES]) {
+                same += 1;
+            }
+        }
+        agreement.push(same as f64 / BATCH as f64);
+    }
+    let served = n_batches * BATCH;
+    let mean_agree = agreement.iter().sum::<f64>() / agreement.len() as f64;
+    println!(
+        "served {served} node inferences: crossbar path {:.1} ms/batch, exact path {:.1} ms/batch",
+        wall_q * 1e3 / n_batches as f64,
+        wall_e * 1e3 / n_batches as f64,
+    );
+    println!(
+        "crossbar-vs-exact argmax agreement: {:.1}% (4-bit weights / 8-bit inputs)",
+        mean_agree * 100.0
+    );
+    println!("throughput (crossbar path): {:.0} nodes/s", served as f64 / wall_q);
+
+    // --- the same workload on the edge, modeled --------------------------
+    let workload = GnnWorkload::gcn("cora", stats.feature_len, stats.avg_cs);
+    let model = NetModel::paper(&workload)?;
+    let topo = Topology { nodes: stats.nodes, cluster_size: stats.avg_cs };
+    let mut t = Table::new(
+        "modeled edge deployment for full Cora (Table 2 stats)",
+        &["Setting", "Compute", "Communicate", "Total"],
+    );
+    for s in [Setting::Centralized, Setting::Decentralized] {
+        let l = model.latency(s, topo);
+        t.row(&[format!("{s:?}"), l.compute.to_string(), l.communicate.to_string(), l.total().to_string()]);
+    }
+    t.print();
+
+    assert!(mean_agree > 0.6, "crossbar path diverged from exact ({mean_agree})");
+    println!("E2E OK — all three layers compose.");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! E3 — choosing a deployment for your dataset: Fig. 8 + DES cross-check.
+//!
+//! Walks the four Table 2 datasets, prints the Fig. 8 computation /
+//! communication breakdown for both settings, then validates the analytic
+//! numbers with the discrete-event simulator (including a jittered run and
+//! a CSMA shared-medium run the closed-form model cannot express).
+//!
+//! ```bash
+//! cargo run --release --example edge_deployment
+//! ```
+
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::experiments::Fig8;
+use ima_gnn::graph::datasets;
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::report::Table;
+use ima_gnn::sim::{simulate, SimConfig};
+
+fn main() -> ima_gnn::Result<()> {
+    // --- the analytic figure --------------------------------------------
+    let fig8 = Fig8::new()?;
+    fig8.render().print();
+    println!("\n{}\n", fig8.summary());
+
+    // --- DES cross-validation on a scaled topology ------------------------
+    let model = NetModel::paper(&GnnWorkload::taxi())?;
+    let mut t = Table::new(
+        "DES vs analytic (scaled to 2000 devices per dataset)",
+        &["Dataset", "Setting", "Analytic", "DES", "DES +20% jitter", "DES CSMA"],
+    );
+    for d in datasets::all() {
+        let m = NetModel::fig8(&d)?;
+        let topo = Topology { nodes: d.nodes.min(2000), cluster_size: d.avg_cs.min(64) };
+        for setting in [Setting::Centralized, Setting::Decentralized] {
+            let analytic = m.latency(setting, topo).total();
+            let des = simulate(&m, setting, topo, &SimConfig::default())?.completion;
+            let jit = simulate(
+                &m,
+                setting,
+                topo,
+                &SimConfig { link_jitter: 0.2, ..Default::default() },
+            )?
+            .completion;
+            let csma = if setting == Setting::Decentralized {
+                simulate(
+                    &m,
+                    setting,
+                    topo,
+                    &SimConfig { shared_medium: true, ..Default::default() },
+                )?
+                .completion
+                .to_string()
+            } else {
+                "-".into()
+            };
+            t.row(&[
+                d.name.to_string(),
+                format!("{setting:?}"),
+                analytic.to_string(),
+                des.to_string(),
+                jit.to_string(),
+                csma,
+            ]);
+        }
+    }
+    t.print();
+
+    // --- decision guide ----------------------------------------------------
+    println!("\ndeployment guide (lowest total latency per dataset):");
+    for d in datasets::all() {
+        let m = NetModel::fig8(&d)?;
+        let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
+        let cent = m.latency(Setting::Centralized, topo).total();
+        let dec = m.latency(Setting::Decentralized, topo).total();
+        let winner = if cent < dec { "centralized" } else { "decentralized" };
+        println!(
+            "  {:<12} -> {winner} (centralized {}, decentralized {})",
+            d.name, cent, dec
+        );
+    }
+    let _ = model;
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. model the accelerator analytically (Table 1 figures),
+//! 2. load the AOT-compiled Pallas/JAX artifact through PJRT,
+//! 3. run one GCN layer on it — no Python anywhere on this path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::runtime::{ArtifactStore, Tensor};
+use ima_gnn::testing::Rng;
+
+fn main() -> ima_gnn::Result<()> {
+    // --- Layer-3 analytics: the paper's network model -------------------
+    let model = NetModel::paper(&GnnWorkload::taxi())?;
+    let topo = Topology::taxi();
+    for setting in [Setting::Centralized, Setting::Decentralized] {
+        let l = model.latency(setting, topo);
+        println!(
+            "{setting:?}: compute {} + communicate {} = {}",
+            l.compute,
+            l.communicate,
+            l.total()
+        );
+    }
+
+    // --- Runtime: execute the AOT artifact ------------------------------
+    let store = ArtifactStore::open(&ima_gnn::runtime::default_artifact_dir())?;
+    println!("\nPJRT platform: {}", store.platform());
+    let mut rng = Rng::new(1);
+
+    // gcn_layer_small: batch 16, sample 4, feature 64, hidden 32, table 64.
+    let x_self = Tensor::f32(&[16, 64], (0..16 * 64).map(|_| rng.f64() as f32).collect())?;
+    let nbr_idx = Tensor::i32(
+        &[16, 4],
+        (0..64).map(|_| if rng.chance(0.25) { -1 } else { rng.index(64) as i32 }).collect(),
+    )?;
+    let x_table = Tensor::f32(&[64, 64], (0..64 * 64).map(|_| rng.f64() as f32).collect())?;
+    let w = Tensor::f32(
+        &[64, 32],
+        (0..64 * 32).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect(),
+    )?;
+
+    let t0 = std::time::Instant::now();
+    let out = store.run("gcn_layer_small", &[x_self, nbr_idx, x_table, w])?;
+    println!(
+        "gcn_layer_small -> {:?} in {:.2} ms (first call compiles)",
+        out[0].shape,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    let t0 = std::time::Instant::now();
+    let emb = out[0].as_f32()?;
+    println!(
+        "embedding[0][..6] = {:?}",
+        &emb[..6].iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    let _ = t0;
+    Ok(())
+}

@@ -1,0 +1,111 @@
+"""AOT entrypoint: lower every Layer-2 model to an HLO-text artifact.
+
+Python runs ONCE, at build time (``make artifacts``); the rust coordinator
+loads the emitted ``artifacts/*.hlo.txt`` through PJRT and never imports
+Python again.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/load_hlo and DESIGN.md.
+
+Every artifact is described in ``artifacts/manifest.json`` (name, file,
+input/output shapes and dtypes, model config) which the rust
+``runtime::manifest`` module parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .hetgnn import HetGnnConfig, hetgnn_fn
+from .model import GcnConfig, gcn2_fn, gcn_layer_fn, mvm_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# Registry of artifacts: name -> (builder returning (fn, example_args), config dict)
+def _registry() -> Dict[str, Tuple[Callable, dict]]:
+    # Quickstart: tiny single GCN layer.
+    small = GcnConfig(batch=16, sample=4, feature=64, hidden=32, classes=8, table=64)
+    # Dataset study: Cora-shaped 2-layer GCN over sampled subgraphs
+    # (feature length 1433 / 7 classes, Table 2).
+    cora = GcnConfig(batch=64, sample=8, feature=1433, hidden=64, classes=7, table=256)
+    cora_exact = cora._replace(use_crossbar=False)
+    # Citeseer-shaped single layer for the decentralized per-device path.
+    citeseer = GcnConfig(
+        batch=32, sample=4, feature=3703, hidden=64, classes=6, table=128
+    )
+    taxi = HetGnnConfig()
+
+    return {
+        "gcn_layer_small": (lambda: gcn_layer_fn(small), small._asdict()),
+        "gcn2_cora": (lambda: gcn2_fn(cora), cora._asdict()),
+        "gcn2_cora_exact": (lambda: gcn2_fn(cora_exact), cora_exact._asdict()),
+        "gcn_layer_citeseer": (lambda: gcn_layer_fn(citeseer), citeseer._asdict()),
+        "hetgnn_taxi": (lambda: hetgnn_fn(taxi), taxi._asdict()),
+        "mvm_512x512": (lambda: mvm_fn(512, 512, batch=8), {"rows": 512, "cols": 512, "batch": 8}),
+    }
+
+
+def _spec_dict(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(jnp.dtype(s.dtype).name)}
+
+
+def build(out_dir: str, only: Sequence[str] | None = None, verbose: bool = True) -> List[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries: List[dict] = []
+    for name, (builder, cfg) in _registry().items():
+        if only and name not in only:
+            continue
+        fn, example_args = builder()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *example_args)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [_spec_dict(a) for a in example_args],
+                "outputs": [_spec_dict(o) for o in out_specs],
+                "config": {k: (v if not isinstance(v, bool) else int(v)) for k, v in cfg.items()},
+            }
+        )
+        if verbose:
+            print(f"  lowered {name}: {len(text)} chars, {len(example_args)} inputs")
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", nargs="*", default=None, help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.out, args.only)
+
+
+if __name__ == "__main__":
+    main()

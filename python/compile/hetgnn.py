@@ -1,0 +1,158 @@
+"""Layer-2 JAX model for the taxi case study (paper §4.2, Fig. 7).
+
+The hetGNN-LSTM of paper ref [26]: heterogeneous message passing over the
+three taxi-graph edge types (road connectivity, location proximity,
+destination similarity), an LSTM capturing time dependency over the P
+historical frames, and a prediction head emitting the Q future
+demand/supply frames for the node's surrounding m x n region.
+
+Dense transforms (embedding, per-edge-type message weights, output head)
+route through the Layer-1 crossbar kernel -- these are what the
+feature-extraction core executes; the LSTM recurrence stays in float (the
+recurrent state is held digitally in the buffer array, not in RRAM).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import crossbar_linear, gather_mean
+
+EDGE_TYPES = 3  # road / proximity / destination-similarity
+
+
+class HetGnnConfig(NamedTuple):
+    """Static shapes for the hetGNN-LSTM taxi model."""
+
+    batch: int = 32  # taxi nodes per request (B)
+    sample: int = 8  # neighbors sampled per edge type (S)
+    table: int = 256  # neighbor embedding table rows (T)
+    grid_m: int = 8  # region rows (m)
+    grid_n: int = 8  # region cols (n)
+    hist: int = 12  # history length (P)
+    horizon: int = 3  # prediction length (Q)
+    hidden: int = 64  # embedding + LSTM width (H)
+    input_bits: int = 8
+    weight_bits: int = 4
+    adc_bits: int = 13
+    xbar_rows: int = 512
+    use_crossbar: bool = True
+
+    @property
+    def fin(self) -> int:
+        """Per-frame feature length: demand + supply over the m x n grid."""
+        return 2 * self.grid_m * self.grid_n
+
+
+class HetGnnParams(NamedTuple):
+    w_embed: jax.Array  # [Fin, H]
+    w_msg: jax.Array  # [EDGE_TYPES, H, H]
+    w_i: jax.Array  # [H, 4H]  LSTM input-to-hidden
+    w_h: jax.Array  # [H, 4H]  LSTM hidden-to-hidden
+    b: jax.Array  # [4H]
+    w_out: jax.Array  # [H, Q * Fin]
+
+
+def init_hetgnn(cfg: HetGnnConfig, key: jax.Array) -> HetGnnParams:
+    ks = jax.random.split(key, 6)
+
+    def glorot(k, shape):
+        lim = (6.0 / (shape[-2] + shape[-1])) ** 0.5
+        return jax.random.uniform(k, shape, jnp.float32, -lim, lim)
+
+    h = cfg.hidden
+    return HetGnnParams(
+        w_embed=glorot(ks[0], (cfg.fin, h)),
+        w_msg=glorot(ks[1], (EDGE_TYPES, h, h)),
+        w_i=glorot(ks[2], (h, 4 * h)),
+        w_h=glorot(ks[3], (h, 4 * h)),
+        b=jnp.zeros((4 * h,), jnp.float32),
+        w_out=glorot(ks[5], (h, cfg.horizon * cfg.fin)),
+    )
+
+
+def _linear(cfg: HetGnnConfig, x: jax.Array, w: jax.Array) -> jax.Array:
+    if cfg.use_crossbar:
+        return crossbar_linear(
+            x,
+            w,
+            input_bits=cfg.input_bits,
+            weight_bits=cfg.weight_bits,
+            adc_bits=cfg.adc_bits,
+            xbar_rows=cfg.xbar_rows,
+        )
+    return x @ w
+
+
+def _lstm_step(carry, xt, *, w_i, w_h, b, hidden):
+    h, c = carry
+    gates = xt @ w_i + h @ w_h + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def hetgnn_forward(
+    cfg: HetGnnConfig,
+    params: HetGnnParams,
+    x_hist: jax.Array,  # [B, P, Fin] own-region history
+    nbr_idx: jax.Array,  # [B, EDGE_TYPES, S] neighbor rows (-1 = pad)
+    nbr_table: jax.Array,  # [T, P, H] neighbor per-frame embeddings
+) -> jax.Array:
+    """Predict ``[B, Q, Fin]`` future demand/supply frames."""
+    b, p, fin = x_hist.shape
+    h = cfg.hidden
+
+    # Per-frame node embedding (feature-extraction core).
+    e = _linear(cfg, x_hist.reshape(b * p, fin), params.w_embed)
+    e = jax.nn.relu(e).reshape(b, p, h)
+
+    # Heterogeneous message passing: one aggregation per edge type
+    # (aggregation core, node-stationary), type-specific transform.
+    msg = jnp.zeros((b, p, h), jnp.float32)
+    flat_table = nbr_table.reshape(cfg.table, p * h)
+    for r in range(EDGE_TYPES):
+        agg = gather_mean(flat_table, nbr_idx[:, r, :])  # [B, P*H]
+        agg = agg.reshape(b * p, h)
+        msg = msg + jax.nn.relu(_linear(cfg, agg, params.w_msg[r])).reshape(b, p, h)
+
+    z = jax.nn.relu(e + msg)  # combined representation, [B, P, H]
+
+    # LSTM over the P frames (digital recurrence).
+    import functools
+
+    step = functools.partial(
+        _lstm_step, w_i=params.w_i, w_h=params.w_h, b=params.b, hidden=h
+    )
+    init = (jnp.zeros((b, h), jnp.float32), jnp.zeros((b, h), jnp.float32))
+    (h_t, _), _ = jax.lax.scan(step, init, jnp.swapaxes(z, 0, 1))
+
+    # Prediction head -> Q future frames.
+    y = _linear(cfg, h_t, params.w_out)
+    return y.reshape(b, cfg.horizon, fin)
+
+
+def hetgnn_fn(cfg: HetGnnConfig):
+    """Callable + example args for AOT lowering (params become inputs)."""
+
+    def fn(x_hist, nbr_idx, nbr_table, w_embed, w_msg, w_i, w_h, b, w_out):
+        params = HetGnnParams(w_embed, w_msg, w_i, w_h, b, w_out)
+        return (hetgnn_forward(cfg, params, x_hist, nbr_idx, nbr_table),)
+
+    h = cfg.hidden
+    args = (
+        jax.ShapeDtypeStruct((cfg.batch, cfg.hist, cfg.fin), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, EDGE_TYPES, cfg.sample), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.table, cfg.hist, h), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.fin, h), jnp.float32),
+        jax.ShapeDtypeStruct((EDGE_TYPES, h, h), jnp.float32),
+        jax.ShapeDtypeStruct((h, 4 * h), jnp.float32),
+        jax.ShapeDtypeStruct((h, 4 * h), jnp.float32),
+        jax.ShapeDtypeStruct((4 * h,), jnp.float32),
+        jax.ShapeDtypeStruct((h, cfg.horizon * cfg.fin), jnp.float32),
+    )
+    return fn, args

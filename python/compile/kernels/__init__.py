@@ -1,0 +1,37 @@
+"""IMA-GNN Layer-1 Pallas kernels.
+
+Every kernel is authored with ``interpret=True`` so it lowers to plain HLO
+ops executable by any PJRT backend (the rust CPU client in particular).
+Real-TPU lowering would emit Mosaic custom-calls the CPU plugin cannot run;
+see DESIGN.md §Hardware-Adaptation for the crossbar->TPU mapping.
+"""
+
+from .mvm_crossbar import (
+    DEFAULT_ADC_BITS,
+    DEFAULT_INPUT_BITS,
+    DEFAULT_WEIGHT_BITS,
+    DEFAULT_XBAR_ROWS,
+    crossbar_linear,
+    crossbar_mvm,
+    dequantize,
+    quantize_inputs,
+    quantize_weights,
+)
+from .cam import cam_scan, cam_search
+from .aggregate import gather_mean, gather_sum
+
+__all__ = [
+    "DEFAULT_ADC_BITS",
+    "DEFAULT_INPUT_BITS",
+    "DEFAULT_WEIGHT_BITS",
+    "DEFAULT_XBAR_ROWS",
+    "cam_scan",
+    "cam_search",
+    "crossbar_linear",
+    "crossbar_mvm",
+    "dequantize",
+    "gather_mean",
+    "gather_sum",
+    "quantize_inputs",
+    "quantize_weights",
+]

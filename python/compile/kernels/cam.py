@@ -1,0 +1,104 @@
+"""Resistive CAM crossbar ops of the IMA-GNN traversal core (paper Fig. 3).
+
+Two TCAM operations are modeled:
+
+* ``cam_search`` -- the *search CAM*: every stored key row performs an XNOR
+  match against the query on its match-line; rows equal to the query fire.
+  In the paper the stored keys are the CSR Column-Index (CI) array and the
+  query is a destination node id (Fig. 3(c)).
+
+* ``cam_scan`` -- the *scan CAM* compare operation: bit-lines are driven
+  with calibrated increasing voltages so each row reports an order
+  comparison rather than equality.  Given the CSR Row-Pointer (RP) array it
+  locates, for an edge position ``pos``, the owning source row ``i`` with
+  ``RP[i] <= pos < RP[i+1]`` (Fig. 3(d)).
+
+Both are Pallas kernels (interpret=True) over int32 lanes; a match-line is
+emulated as a 0/1 int32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _search_kernel(q_ref, keys_ref, o_ref):
+    # XNOR match: a row fires iff every cell matches, i.e. key == query.
+    q = q_ref[0]
+    o_ref[...] = (keys_ref[...] == q).astype(jnp.int32)
+
+
+def cam_search(
+    keys: jax.Array, query: jax.Array, *, block: int = 512, interpret: bool = True
+) -> jax.Array:
+    """Match-line vector: ``out[i] = 1`` iff ``keys[i] == query``.
+
+    ``keys`` is int32 ``[N]`` (the CI array), ``query`` an int32 scalar.
+    """
+    if keys.ndim != 1:
+        raise ValueError(f"keys must be 1-D, got shape {keys.shape}")
+    n = keys.shape[0]
+    b = min(block, n)
+    pad = (-n) % b
+    # Pad with an impossible key so padding rows never match.
+    keys_p = jnp.pad(keys, (0, pad), constant_values=-1)
+    q = jnp.asarray(query, jnp.int32).reshape((1,))
+    out = pl.pallas_call(
+        _search_kernel,
+        grid=((n + pad) // b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+        interpret=interpret,
+    )(q, keys_p)
+    return out[:n]
+
+
+def _scan_kernel(pos_ref, rp_ref, rp_next_ref, o_ref):
+    # Compare operation: calibrated voltages realize `<=` / `<` thresholds.
+    p = pos_ref[0]
+    rp = rp_ref[...]
+    rp_next = rp_next_ref[...]
+    o_ref[...] = ((rp <= p) & (p < rp_next)).astype(jnp.int32)
+
+
+def cam_scan(
+    rp: jax.Array, pos: jax.Array, *, block: int = 512, interpret: bool = True
+) -> jax.Array:
+    """Owning-row one-hot: ``out[i] = 1`` iff ``rp[i] <= pos < rp[i+1]``.
+
+    ``rp`` is the CSR row-pointer array ``[R+1]`` (int32); the result has
+    shape ``[R]``.  For a valid CSR pointer array and ``0 <= pos < rp[-1]``
+    exactly one row fires.
+    """
+    if rp.ndim != 1 or rp.shape[0] < 2:
+        raise ValueError(f"rp must be 1-D with >= 2 entries, got {rp.shape}")
+    r = rp.shape[0] - 1
+    lo = rp[:-1]
+    hi = rp[1:]
+    b = min(block, r)
+    pad = (-r) % b
+    # Pad with an empty range so padding rows never fire.
+    lo_p = jnp.pad(lo, (0, pad), constant_values=-1)
+    hi_p = jnp.pad(hi, (0, pad), constant_values=-1)
+    p = jnp.asarray(pos, jnp.int32).reshape((1,))
+    out = pl.pallas_call(
+        _scan_kernel,
+        grid=((r + pad) // b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r + pad,), jnp.int32),
+        interpret=interpret,
+    )(p, lo_p, hi_p)
+    return out[:r]

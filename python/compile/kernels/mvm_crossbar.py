@@ -1,0 +1,202 @@
+"""Bit-serial, conductance-quantized crossbar MVM as a Pallas kernel.
+
+This is the compute hot-spot of IMA-GNN's aggregation and feature-extraction
+cores (paper Fig. 2(b)).  The analog dataflow is reproduced digitally,
+bit-exactly reproducible against the pure-jnp oracle in ``ref.py``:
+
+  1. weights are quantized to signed RRAM conductance levels
+     (``weight_bits``, default 4 -> levels in [-8, 7]);
+  2. inputs are affine-quantized to unsigned ``input_bits`` integers
+     (the DAC applies one bit per cycle on the bit-lines);
+  3. for every input bit-plane, each crossbar column accumulates the
+     weighted currents of its rows -- an integer (plane @ G) matmul per
+     K-tile of ``xbar_rows`` rows (one physical crossbar);
+  4. the per-column analog sum is sampled and ADC-quantized: values are
+     clipped to the signed ``adc_bits`` range *per crossbar, per bit-plane*
+     -- exactly where the paper's Sample&Hold + ADC sit;
+  5. Shift & Add recombines the bit-plane partial products, and partial
+     sums from K-tiles (crossbars sharing an output column) are added
+     digitally.
+
+Hardware adaptation (DESIGN.md §3): a crossbar holds a weight tile
+stationary and streams inputs; here ``BlockSpec`` pins the quantized weight
+block in VMEM while the grid streams (M, N, K) tiles -- the HBM<->VMEM
+schedule standing in for the paper's buffer array + double buffering, and
+the MXU matmul per bit-plane standing in for the analog dot-product plane.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_WEIGHT_BITS = 4
+DEFAULT_INPUT_BITS = 8
+# 512 active rows x 4-bit weights need ceil(log2(512*8)) + 1 = 13 signed bits
+# for a loss-free ADC; smaller ADCs clip (supported, tested).
+DEFAULT_ADC_BITS = 13
+DEFAULT_XBAR_ROWS = 512
+
+
+def quantize_weights(
+    w: jax.Array, weight_bits: int = DEFAULT_WEIGHT_BITS
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric quantization of float weights to conductance levels.
+
+    Returns ``(gq, scale)`` with ``gq`` int32 in ``[-2^(b-1), 2^(b-1)-1]``
+    and ``w ~= gq * scale``.
+    """
+    if weight_bits < 2:
+        raise ValueError(f"weight_bits must be >= 2, got {weight_bits}")
+    qmax = (1 << (weight_bits - 1)) - 1
+    absmax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+    scale = absmax / qmax
+    gq = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return gq, scale
+
+
+def quantize_inputs(
+    x: jax.Array, input_bits: int = DEFAULT_INPUT_BITS
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Affine quantization of float inputs to unsigned DAC codes.
+
+    Returns ``(xq, scale, zero)`` with ``xq`` int32 in ``[0, 2^bits - 1]``
+    and ``x ~= xq * scale + zero``.
+    """
+    if input_bits < 1:
+        raise ValueError(f"input_bits must be >= 1, got {input_bits}")
+    qmax = (1 << input_bits) - 1
+    xmin = jnp.min(x)
+    xmax = jnp.max(x)
+    scale = jnp.maximum(xmax - xmin, 1e-12) / qmax
+    xq = jnp.clip(jnp.round((x - xmin) / scale), 0, qmax).astype(jnp.int32)
+    return xq, scale, xmin
+
+
+def dequantize(
+    acc: jax.Array,
+    x_scale: jax.Array,
+    x_zero: jax.Array,
+    w_scale: jax.Array,
+    g_colsum: jax.Array,
+) -> jax.Array:
+    """Invert the affine/symmetric quantization of ``crossbar_mvm``.
+
+    ``x @ w ~= x_scale * w_scale * acc + x_zero * w_scale * colsum(gq)``.
+    """
+    return x_scale * w_scale * acc.astype(jnp.float32) + x_zero * w_scale * g_colsum
+
+
+def _mvm_kernel(x_ref, g_ref, o_ref, *, input_bits: int, adc_bits: int, n_k: int):
+    """One (bm, bn) output tile; grid axis 2 streams K-tiles (crossbars)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [bm, bk] int32, unsigned codes
+    g = g_ref[...]  # [bk, bn] int32, signed conductance levels
+    lo = -(1 << (adc_bits - 1))
+    hi = (1 << (adc_bits - 1)) - 1
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    # DAC bit-serial streaming: one input bit-plane per cycle.  The python
+    # loop unrolls (input_bits is static) into input_bits MXU matmuls.
+    for b in range(input_bits):
+        plane = (x >> b) & 1
+        # Analog per-column accumulation of one crossbar (this K-tile).
+        ps = jax.lax.dot_general(
+            plane,
+            g,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        # Sample & Hold + ADC: clip to the converter range.
+        ps = jnp.clip(ps, lo, hi)
+        # Shift & Add unit.
+        acc = acc + (ps << b)
+    # Digital partial-sum combine across crossbars sharing this column.
+    o_ref[...] += acc
+
+
+def crossbar_mvm(
+    xq: jax.Array,
+    gq: jax.Array,
+    *,
+    input_bits: int = DEFAULT_INPUT_BITS,
+    adc_bits: int = DEFAULT_ADC_BITS,
+    xbar_rows: int = DEFAULT_XBAR_ROWS,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Integer crossbar MVM: ``xq [M,K] @ gq [K,N] -> int32 [M,N]``.
+
+    ``xq`` must hold unsigned codes of ``input_bits`` bits; ``gq`` signed
+    conductance levels.  The ADC clip is applied per K-tile of ``xbar_rows``
+    rows and per input bit-plane, matching the analog array boundary.
+    """
+    if xq.ndim != 2 or gq.ndim != 2:
+        raise ValueError(f"expected 2-D operands, got {xq.shape} @ {gq.shape}")
+    m, k = xq.shape
+    k2, n = gq.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {xq.shape} @ {gq.shape}")
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(xbar_rows, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    # Zero padding is exact: zero input codes contribute zero current and
+    # zero conductance rows contribute zero weight.
+    xp = jnp.pad(xq, ((0, pm), (0, pk)))
+    gp = jnp.pad(gq, ((0, pk), (0, pn)))
+    grid = ((m + pm) // bm, (n + pn) // bn, (k + pk) // bk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _mvm_kernel, input_bits=input_bits, adc_bits=adc_bits, n_k=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.int32),
+        interpret=interpret,
+    )(xp, gp)
+    return out[:m, :n]
+
+
+def crossbar_linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    input_bits: int = DEFAULT_INPUT_BITS,
+    weight_bits: int = DEFAULT_WEIGHT_BITS,
+    adc_bits: int = DEFAULT_ADC_BITS,
+    xbar_rows: int = DEFAULT_XBAR_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Float linear layer executed on the emulated crossbar.
+
+    Quantize -> bit-serial integer MVM -> dequantize (with zero-point
+    correction through the conductance column sums).
+    """
+    gq, w_scale = quantize_weights(w, weight_bits)
+    xq, x_scale, x_zero = quantize_inputs(x, input_bits)
+    acc = crossbar_mvm(
+        xq,
+        gq,
+        input_bits=input_bits,
+        adc_bits=adc_bits,
+        xbar_rows=xbar_rows,
+        interpret=interpret,
+    )
+    colsum = jnp.sum(gq.astype(jnp.float32), axis=0)
+    return dequantize(acc, x_scale, x_zero, w_scale, colsum)

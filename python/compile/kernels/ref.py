@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: integer paths must match
+bit-exactly, float paths to allclose tolerance.  No Pallas imports here --
+the point is an independent implementation of the same semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .mvm_crossbar import (
+    DEFAULT_ADC_BITS,
+    DEFAULT_INPUT_BITS,
+    DEFAULT_XBAR_ROWS,
+    dequantize,
+    quantize_inputs,
+    quantize_weights,
+)
+
+
+def crossbar_mvm_ref(
+    xq: jax.Array,
+    gq: jax.Array,
+    *,
+    input_bits: int = DEFAULT_INPUT_BITS,
+    adc_bits: int = DEFAULT_ADC_BITS,
+    xbar_rows: int = DEFAULT_XBAR_ROWS,
+) -> jax.Array:
+    """Bit-serial crossbar MVM with per-crossbar, per-bit-plane ADC clip."""
+    m, k = xq.shape
+    _, n = gq.shape
+    lo = -(1 << (adc_bits - 1))
+    hi = (1 << (adc_bits - 1)) - 1
+    out = jnp.zeros((m, n), jnp.int32)
+    for k0 in range(0, k, xbar_rows):
+        xs = xq[:, k0 : k0 + xbar_rows]
+        gs = gq[k0 : k0 + xbar_rows, :]
+        acc = jnp.zeros((m, n), jnp.int32)
+        for b in range(input_bits):
+            plane = (xs >> b) & 1
+            ps = jnp.clip(plane @ gs, lo, hi)
+            acc = acc + (ps << b)
+        out = out + acc
+    return out
+
+
+def crossbar_linear_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    input_bits: int = DEFAULT_INPUT_BITS,
+    weight_bits: int = 4,
+    adc_bits: int = DEFAULT_ADC_BITS,
+    xbar_rows: int = DEFAULT_XBAR_ROWS,
+) -> jax.Array:
+    gq, w_scale = quantize_weights(w, weight_bits)
+    xq, x_scale, x_zero = quantize_inputs(x, input_bits)
+    acc = crossbar_mvm_ref(
+        xq, gq, input_bits=input_bits, adc_bits=adc_bits, xbar_rows=xbar_rows
+    )
+    colsum = jnp.sum(gq.astype(jnp.float32), axis=0)
+    return dequantize(acc, x_scale, x_zero, w_scale, colsum)
+
+
+def cam_search_ref(keys: jax.Array, query) -> jax.Array:
+    return (keys == jnp.asarray(query, keys.dtype)).astype(jnp.int32)
+
+
+def cam_scan_ref(rp: jax.Array, pos) -> jax.Array:
+    p = jnp.asarray(pos, rp.dtype)
+    return ((rp[:-1] <= p) & (p < rp[1:])).astype(jnp.int32)
+
+
+def gather_sum_ref(x: jax.Array, idx: jax.Array) -> jax.Array:
+    n, f = x.shape
+    xz = jnp.concatenate([x, jnp.zeros((1, f), x.dtype)], axis=0)
+    idx_safe = jnp.where(idx < 0, n, idx)
+    return jnp.sum(jnp.take(xz, idx_safe, axis=0), axis=1)
+
+
+def gather_mean_ref(x: jax.Array, idx: jax.Array) -> jax.Array:
+    total = gather_sum_ref(x, idx)
+    count = jnp.maximum(jnp.sum((idx >= 0).astype(jnp.float32), axis=1, keepdims=True), 1.0)
+    return (total.astype(jnp.float32) / count).astype(x.dtype)
+
+
+def gcn_layer_ref(
+    x_self: jax.Array, x_nbrs_idx: jax.Array, x_table: jax.Array, w: jax.Array
+) -> jax.Array:
+    """Float oracle of one GCN layer: mean-aggregate then transform+ReLU."""
+    z = 0.5 * (x_self + gather_mean_ref(x_table, x_nbrs_idx))
+    return jax.nn.relu(z @ w)

@@ -1,0 +1,156 @@
+"""Layer-2 JAX model: the GNN compute graph of paper Fig. 1.
+
+One GNN layer = *aggregation* (the Z matrix: destination features combined
+with sampled neighbor features) followed by *feature extraction*
+(``O = sigma(Z @ W)``) -- exactly the two IMA-GNN compute cores.  The dense
+transforms route through the Layer-1 crossbar kernel so the whole model
+lowers into a single HLO module containing the emulated-crossbar dataflow.
+
+The module is lowered once by ``aot.py``; Python never runs at inference
+time -- the rust coordinator executes the HLO artifact through PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import crossbar_linear, gather_mean
+
+
+class GcnConfig(NamedTuple):
+    """Static shape/quantization configuration for a sampled-subgraph GCN."""
+
+    batch: int  # destination nodes per request (B)
+    sample: int  # fixed-size uniform neighbor sample (S), paper §4.3
+    feature: int  # input feature length (F), Table 2
+    hidden: int  # hidden width (H)
+    classes: int  # output classes (C)
+    table: int  # rows of the neighbor-feature table shipped per batch
+    input_bits: int = 8
+    weight_bits: int = 4
+    adc_bits: int = 13
+    xbar_rows: int = 512
+    use_crossbar: bool = True  # False = exact f32 matmuls (ablation)
+
+
+def _linear(cfg: GcnConfig, x: jax.Array, w: jax.Array) -> jax.Array:
+    if cfg.use_crossbar:
+        return crossbar_linear(
+            x,
+            w,
+            input_bits=cfg.input_bits,
+            weight_bits=cfg.weight_bits,
+            adc_bits=cfg.adc_bits,
+            xbar_rows=cfg.xbar_rows,
+        )
+    return x @ w
+
+
+def gcn_layer(
+    cfg: GcnConfig,
+    x_self: jax.Array,
+    nbr_idx: jax.Array,
+    x_table: jax.Array,
+    w: jax.Array,
+    *,
+    activate: bool = True,
+) -> jax.Array:
+    """One IMA-GNN layer over a sampled subgraph.
+
+    ``x_self [B, Fin]``: destination node features;
+    ``nbr_idx [B, S]``: sampled neighbor rows into ``x_table`` (-1 = pad);
+    ``x_table [T, Fin]``: neighbor feature table;
+    ``w [Fin, Fout]``: layer weights.
+    """
+    # Aggregation core: node-stationary gather + combine with self.
+    z = 0.5 * (x_self + gather_mean(x_table, nbr_idx))
+    # Feature-extraction core: MVM crossbar + activation unit.
+    o = _linear(cfg, z, w)
+    return jax.nn.relu(o) if activate else o
+
+
+class Gcn2Params(NamedTuple):
+    w1: jax.Array  # [F, H]
+    w2: jax.Array  # [H, C]
+
+
+def init_gcn2(cfg: GcnConfig, key: jax.Array) -> Gcn2Params:
+    """Glorot-uniform initialization of the 2-layer GCN."""
+    k1, k2 = jax.random.split(key)
+    lim1 = (6.0 / (cfg.feature + cfg.hidden)) ** 0.5
+    lim2 = (6.0 / (cfg.hidden + cfg.classes)) ** 0.5
+    return Gcn2Params(
+        w1=jax.random.uniform(k1, (cfg.feature, cfg.hidden), jnp.float32, -lim1, lim1),
+        w2=jax.random.uniform(k2, (cfg.hidden, cfg.classes), jnp.float32, -lim2, lim2),
+    )
+
+
+def gcn2_forward(
+    cfg: GcnConfig,
+    x_self: jax.Array,
+    nbr_idx: jax.Array,
+    x_table: jax.Array,
+    h_table: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+) -> jax.Array:
+    """Two-layer GCN over a sampled 2-hop subgraph.
+
+    Layer 1 consumes raw features; layer 2 consumes the hidden table
+    ``h_table [T, H]`` (the layer-1 embeddings of the sampled 1-hop
+    frontier, produced by the same artifact on the previous round or
+    shipped by the coordinator).  Returns class logits ``[B, C]``.
+    """
+    h_self = gcn_layer(cfg, x_self, nbr_idx, x_table, w1, activate=True)
+    logits = gcn_layer(cfg, h_self, nbr_idx, h_table, w2, activate=False)
+    return logits
+
+
+def gcn2_fn(cfg: GcnConfig):
+    """Callable + example args for AOT lowering of the 2-layer GCN."""
+
+    def fn(x_self, nbr_idx, x_table, h_table, w1, w2):
+        return (gcn2_forward(cfg, x_self, nbr_idx, x_table, h_table, w1, w2),)
+
+    args = (
+        jax.ShapeDtypeStruct((cfg.batch, cfg.feature), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.sample), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.table, cfg.feature), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.table, cfg.hidden), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.feature, cfg.hidden), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.hidden, cfg.classes), jnp.float32),
+    )
+    return fn, args
+
+
+def gcn_layer_fn(cfg: GcnConfig):
+    """Single-layer artifact (used by the decentralized per-device path)."""
+
+    def fn(x_self, nbr_idx, x_table, w):
+        return (gcn_layer(cfg, x_self, nbr_idx, x_table, w, activate=True),)
+
+    args = (
+        jax.ShapeDtypeStruct((cfg.batch, cfg.feature), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.sample), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.table, cfg.feature), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.feature, cfg.hidden), jnp.float32),
+    )
+    return fn, args
+
+
+def mvm_fn(rows: int, cols: int, batch: int = 1, xbar_rows: int = 512):
+    """Raw crossbar-MVM artifact for runtime microbenchmarks."""
+    from .kernels import crossbar_mvm
+
+    def fn(xq, gq):
+        return (crossbar_mvm(xq, gq, xbar_rows=xbar_rows),)
+
+    args = (
+        jax.ShapeDtypeStruct((batch, rows), jnp.int32),
+        jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+    )
+    return fn, args

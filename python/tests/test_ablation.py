@@ -1,0 +1,94 @@
+"""Quantization ablations on the crossbar kernel: the accuracy knobs the
+hardware design trades against (ADC resolution, weight levels, DAC bits,
+crossbar rows)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import crossbar_linear, crossbar_mvm
+from compile.kernels import ref
+
+RNG = np.random.default_rng(77)
+
+
+def _xw(m=8, k=256, n=16):
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    return x, w
+
+
+def _err(y, exact):
+    return float(jnp.mean(jnp.abs(y - exact)) / (jnp.mean(jnp.abs(exact)) + 1e-9))
+
+
+class TestAdcResolution:
+    def test_error_decreases_with_adc_bits(self):
+        x, w = _xw()
+        exact = x @ w
+        errs = []
+        for adc_bits in (5, 7, 9, 13):
+            y = crossbar_linear(x, w, adc_bits=adc_bits, xbar_rows=128)
+            errs.append(_err(y, exact))
+        assert errs[0] > errs[-1], f"tight ADC must hurt: {errs}"
+        # monotone within tolerance (quantization noise can tie)
+        for a, b in zip(errs, errs[1:]):
+            assert b <= a * 1.10, f"non-monotone ADC sweep: {errs}"
+
+    def test_lossless_adc_threshold(self):
+        # 128 rows x 1-bit plane x |w|<=8 needs ceil(log2(128*8))+1 = 11 bits.
+        xq = jnp.asarray(RNG.integers(0, 256, (4, 128)), jnp.int32)
+        gq = jnp.asarray(RNG.integers(-8, 8, (128, 8)), jnp.int32)
+        lossless = crossbar_mvm(xq, gq, adc_bits=11, xbar_rows=128)
+        np.testing.assert_array_equal(np.asarray(lossless), np.asarray(xq @ gq))
+
+
+class TestWeightLevels:
+    @pytest.mark.parametrize("pair", [(2, 4), (4, 6)])
+    def test_more_levels_less_error(self, pair):
+        lo, hi = pair
+        x, w = _xw()
+        exact = x @ w
+        e_lo = _err(crossbar_linear(x, w, weight_bits=lo), exact)
+        e_hi = _err(crossbar_linear(x, w, weight_bits=hi), exact)
+        assert e_hi < e_lo
+
+
+class TestDacBits:
+    def test_more_input_bits_less_error(self):
+        x, w = _xw()
+        exact = x @ w
+        e4 = _err(crossbar_linear(x, w, input_bits=4), exact)
+        e8 = _err(crossbar_linear(x, w, input_bits=8), exact)
+        assert e8 < e4
+
+    def test_one_bit_dac_still_correlates(self):
+        x, w = _xw()
+        y = crossbar_linear(x, w, input_bits=1)
+        exact = x @ w
+        corr = np.corrcoef(np.asarray(y).ravel(), np.asarray(exact).ravel())[0, 1]
+        assert corr > 0.7
+
+
+class TestCrossbarRows:
+    def test_row_partitioning_is_invariant_when_lossless(self):
+        # With a lossless ADC the K-tiling must not change the result.
+        xq = jnp.asarray(RNG.integers(0, 256, (5, 384)), jnp.int32)
+        gq = jnp.asarray(RNG.integers(-8, 8, (384, 12)), jnp.int32)
+        outs = [
+            np.asarray(crossbar_mvm(xq, gq, xbar_rows=r, adc_bits=20))
+            for r in (64, 128, 384)
+        ]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[1], outs[2])
+
+    def test_smaller_arrays_clip_less_under_tight_adc(self):
+        # Tight ADC: smaller crossbars saturate less (fewer rows per sum),
+        # so they track the true product better.
+        xq = jnp.asarray(RNG.integers(0, 256, (5, 512)), jnp.int32)
+        gq = jnp.asarray(RNG.integers(0, 8, (512, 12)), jnp.int32)  # all-positive worst case
+        exact = np.asarray(xq @ gq, dtype=np.float64)
+        def err(rows):
+            y = np.asarray(crossbar_mvm(xq, gq, xbar_rows=rows, adc_bits=8), dtype=np.float64)
+            return np.mean(np.abs(y - exact))
+        assert err(64) < err(512)

@@ -1,0 +1,92 @@
+"""Aggregation kernels (gather_sum / gather_mean) vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gather_mean, gather_sum
+from compile.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+class TestGatherSum:
+    @pytest.mark.parametrize("n,f,m,s,block", [(1, 1, 1, 1, 128), (50, 19, 23, 5, 8), (64, 128, 130, 8, 64)])
+    def test_matches_ref(self, n, f, m, s, block):
+        x = jnp.asarray(RNG.normal(size=(n, f)), jnp.float32)
+        idx = jnp.asarray(RNG.integers(-1, n, (m, s)), jnp.int32)
+        got = gather_sum(x, idx, block_m=block)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.gather_sum_ref(x, idx)), rtol=1e-6, atol=1e-6
+        )
+
+    def test_padding_neighbors_contribute_zero(self):
+        x = jnp.ones((4, 3), jnp.float32)
+        idx = jnp.asarray([[0, -1, -1], [-1, -1, -1]], jnp.int32)
+        got = np.asarray(gather_sum(x, idx))
+        np.testing.assert_allclose(got[0], 1.0)
+        np.testing.assert_allclose(got[1], 0.0)
+
+    def test_duplicate_neighbors_count_twice(self):
+        x = jnp.asarray([[1.0, 2.0]], jnp.float32)
+        idx = jnp.asarray([[0, 0]], jnp.int32)
+        np.testing.assert_allclose(np.asarray(gather_sum(x, idx))[0], [2.0, 4.0])
+
+    def test_integer_features(self):
+        x = jnp.asarray(RNG.integers(0, 100, (10, 4)), jnp.int32)
+        idx = jnp.asarray(RNG.integers(0, 10, (6, 3)), jnp.int32)
+        got = gather_sum(x, idx)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.gather_sum_ref(x, idx)))
+
+    def test_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            gather_sum(jnp.zeros((3,)), jnp.zeros((2, 2), jnp.int32))
+
+
+class TestGatherMean:
+    def test_matches_ref(self):
+        x = jnp.asarray(RNG.normal(size=(30, 7)), jnp.float32)
+        idx = jnp.asarray(RNG.integers(-1, 30, (11, 4)), jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(gather_mean(x, idx, block_m=4)),
+            np.asarray(ref.gather_mean_ref(x, idx)),
+            rtol=1e-6,
+            atol=1e-6,
+        )
+
+    def test_mean_counts_only_valid(self):
+        x = jnp.asarray([[2.0], [4.0]], jnp.float32)
+        idx = jnp.asarray([[0, 1, -1, -1]], jnp.int32)
+        np.testing.assert_allclose(np.asarray(gather_mean(x, idx))[0], [3.0])
+
+    def test_all_padding_yields_zero(self):
+        x = jnp.ones((3, 2), jnp.float32)
+        idx = jnp.full((2, 3), -1, jnp.int32)
+        np.testing.assert_allclose(np.asarray(gather_mean(x, idx)), 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 80),
+    f=st.integers(1, 40),
+    m=st.integers(1, 50),
+    s=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_gather_sweep(n, f, m, s, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-1, n, (m, s)), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(gather_sum(x, idx, block_m=16)),
+        np.asarray(ref.gather_sum_ref(x, idx)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(gather_mean(x, idx, block_m=16)),
+        np.asarray(ref.gather_mean_ref(x, idx)),
+        rtol=1e-5,
+        atol=1e-5,
+    )

@@ -1,0 +1,53 @@
+"""AOT lowering: artifacts are valid HLO text and the manifest is complete."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # Only the small artifact: fast enough for CI, exercises the full path.
+    entries = aot.build(str(out), only=["gcn_layer_small"], verbose=False)
+    return out, entries
+
+
+class TestAotBuild:
+    def test_writes_hlo_text(self, built):
+        out, entries = built
+        assert len(entries) == 1
+        path = out / entries[0]["file"]
+        text = path.read_text()
+        assert text.startswith("HloModule"), "artifact must be HLO text"
+        assert "ENTRY" in text
+
+    def test_manifest_structure(self, built):
+        out, entries = built
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert manifest["version"] == 1
+        art = manifest["artifacts"][0]
+        assert art["name"] == "gcn_layer_small"
+        assert art["file"] == "gcn_layer_small.hlo.txt"
+        # gcn_layer_fn takes (x_self, nbr_idx, x_table, w).
+        assert len(art["inputs"]) == 4
+        assert art["inputs"][0]["dtype"] == "float32"
+        assert art["inputs"][1]["dtype"] == "int32"
+        assert len(art["outputs"]) == 1
+        assert art["outputs"][0]["shape"] == [16, 32]
+
+    def test_config_recorded(self, built):
+        _, entries = built
+        cfg = entries[0]["config"]
+        assert cfg["feature"] == 64 and cfg["hidden"] == 32
+
+    def test_registry_names_are_unique_files(self):
+        reg = aot._registry()
+        files = [f"{name}.hlo.txt" for name in reg]
+        assert len(set(files)) == len(files)
+        # Registry contains everything DESIGN.md promises.
+        for required in ("gcn2_cora", "hetgnn_taxi", "mvm_512x512", "gcn_layer_small"):
+            assert required in reg

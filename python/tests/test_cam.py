@@ -1,0 +1,93 @@
+"""Traversal-core CAM kernels (search + scan) vs oracles and CSR invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cam_scan, cam_search
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+class TestCamSearch:
+    @pytest.mark.parametrize("n,block", [(1, 512), (100, 32), (513, 512), (2048, 256)])
+    def test_matches_ref(self, n, block):
+        keys = jnp.asarray(RNG.integers(0, 64, (n,)), jnp.int32)
+        q = int(RNG.integers(0, 64))
+        got = cam_search(keys, q, block=block)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.cam_search_ref(keys, q)))
+
+    def test_no_match(self):
+        keys = jnp.arange(10, dtype=jnp.int32)
+        assert int(jnp.sum(cam_search(keys, 999))) == 0
+
+    def test_all_match(self):
+        keys = jnp.full((77,), 5, jnp.int32)
+        assert int(jnp.sum(cam_search(keys, 5, block=16))) == 77
+
+    def test_padding_rows_never_fire(self):
+        # n=5 with block=4 pads 3 rows; a query of -1 must not match padding.
+        keys = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)
+        got = cam_search(keys, -1, block=4)
+        assert got.shape == (5,)
+        assert int(jnp.sum(got)) == 0
+
+    def test_rejects_bad_rank(self):
+        with pytest.raises(ValueError):
+            cam_search(jnp.zeros((2, 2), jnp.int32), 0)
+
+
+def _random_rp(rng, rows, max_deg=6):
+    degs = rng.integers(0, max_deg, (rows,))
+    return jnp.asarray(np.concatenate([[0], np.cumsum(degs)]), jnp.int32)
+
+
+class TestCamScan:
+    @pytest.mark.parametrize("rows,block", [(1, 512), (20, 8), (600, 512)])
+    def test_matches_ref(self, rows, block):
+        rp = _random_rp(RNG, rows)
+        total = int(rp[-1])
+        if total == 0:
+            pytest.skip("empty graph draw")
+        pos = int(RNG.integers(0, total))
+        got = cam_scan(rp, pos, block=block)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.cam_scan_ref(rp, pos)))
+
+    def test_exactly_one_owner_for_valid_pos(self):
+        rp = jnp.asarray([0, 2, 2, 5, 9], jnp.int32)  # row 1 is empty
+        for pos in range(9):
+            got = cam_scan(rp, pos)
+            assert int(jnp.sum(got)) == 1, f"pos={pos}"
+            owner = int(jnp.argmax(got))
+            assert int(rp[owner]) <= pos < int(rp[owner + 1])
+
+    def test_empty_rows_never_fire(self):
+        rp = jnp.asarray([0, 3, 3, 6], jnp.int32)
+        for pos in range(6):
+            assert int(cam_scan(rp, pos)[1]) == 0
+
+    def test_out_of_range_pos_fires_nothing(self):
+        rp = jnp.asarray([0, 2, 4], jnp.int32)
+        assert int(jnp.sum(cam_scan(rp, 4))) == 0
+        assert int(jnp.sum(cam_scan(rp, -1))) == 0
+
+    def test_rejects_too_short(self):
+        with pytest.raises(ValueError):
+            cam_scan(jnp.asarray([0], jnp.int32), 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 200), seed=st.integers(0, 2**31 - 1), block=st.sampled_from([8, 64, 512]))
+def test_hypothesis_scan_owner_invariant(rows, seed, block):
+    """For every valid edge position exactly one CSR row owns it (paper Fig 3d)."""
+    rng = np.random.default_rng(seed)
+    rp = _random_rp(rng, rows)
+    total = int(rp[-1])
+    if total == 0:
+        return
+    pos = int(rng.integers(0, total))
+    got = cam_scan(rp, pos, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.cam_scan_ref(rp, pos)))
+    assert int(jnp.sum(got)) == 1

@@ -1,0 +1,80 @@
+"""Layer-2 GCN model: shape contracts, crossbar-vs-exact agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import GcnConfig, Gcn2Params, gcn2_forward, gcn_layer, init_gcn2
+
+CFG = GcnConfig(batch=8, sample=4, feature=48, hidden=16, classes=5, table=32)
+RNG = np.random.default_rng(3)
+
+
+def _inputs(cfg):
+    x_self = jnp.asarray(RNG.normal(size=(cfg.batch, cfg.feature)), jnp.float32)
+    idx = jnp.asarray(RNG.integers(-1, cfg.table, (cfg.batch, cfg.sample)), jnp.int32)
+    x_table = jnp.asarray(RNG.normal(size=(cfg.table, cfg.feature)), jnp.float32)
+    return x_self, idx, x_table
+
+
+class TestGcnLayer:
+    def test_output_shape(self):
+        x_self, idx, x_table = _inputs(CFG)
+        w = jnp.asarray(RNG.normal(size=(CFG.feature, CFG.hidden)), jnp.float32)
+        out = gcn_layer(CFG, x_self, idx, x_table, w)
+        assert out.shape == (CFG.batch, CFG.hidden)
+
+    def test_exact_mode_matches_oracle(self):
+        cfg = CFG._replace(use_crossbar=False)
+        x_self, idx, x_table = _inputs(cfg)
+        w = jnp.asarray(RNG.normal(size=(cfg.feature, cfg.hidden)), jnp.float32)
+        got = gcn_layer(cfg, x_self, idx, x_table, w)
+        want = ref.gcn_layer_ref(x_self, idx, x_table, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_crossbar_mode_tracks_exact(self):
+        x_self, idx, x_table = _inputs(CFG)
+        w = jnp.asarray(RNG.normal(size=(CFG.feature, CFG.hidden)), jnp.float32)
+        approx = gcn_layer(CFG, x_self, idx, x_table, w)
+        exact = gcn_layer(CFG._replace(use_crossbar=False), x_self, idx, x_table, w)
+        denom = float(jnp.max(jnp.abs(exact))) + 1e-9
+        rel = float(jnp.max(jnp.abs(approx - exact))) / denom
+        assert rel < 0.4, f"crossbar quantization error too large: {rel}"
+        # ...and correlation should be strong (signal preserved).
+        a, e = np.asarray(approx).ravel(), np.asarray(exact).ravel()
+        assert np.corrcoef(a, e)[0, 1] > 0.95
+
+    def test_relu_applied(self):
+        x_self, idx, x_table = _inputs(CFG)
+        w = jnp.asarray(RNG.normal(size=(CFG.feature, CFG.hidden)), jnp.float32)
+        out = gcn_layer(CFG, x_self, idx, x_table, w, activate=True)
+        assert float(jnp.min(out)) >= 0.0
+
+
+class TestGcn2:
+    def test_forward_shape_and_jit(self):
+        cfg = CFG
+        params = init_gcn2(cfg, jax.random.PRNGKey(0))
+        x_self, idx, x_table = _inputs(cfg)
+        h_table = jnp.asarray(RNG.normal(size=(cfg.table, cfg.hidden)), jnp.float32)
+        out = jax.jit(
+            lambda *a: gcn2_forward(cfg, *a)
+        )(x_self, idx, x_table, h_table, params.w1, params.w2)
+        assert out.shape == (cfg.batch, cfg.classes)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_deterministic(self):
+        cfg = CFG._replace(use_crossbar=False)
+        params = init_gcn2(cfg, jax.random.PRNGKey(1))
+        x_self, idx, x_table = _inputs(cfg)
+        h_table = jnp.zeros((cfg.table, cfg.hidden), jnp.float32)
+        a = gcn2_forward(cfg, x_self, idx, x_table, h_table, params.w1, params.w2)
+        b = gcn2_forward(cfg, x_self, idx, x_table, h_table, params.w1, params.w2)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_init_shapes(self):
+        params = init_gcn2(CFG, jax.random.PRNGKey(0))
+        assert params.w1.shape == (CFG.feature, CFG.hidden)
+        assert params.w2.shape == (CFG.hidden, CFG.classes)

@@ -1,0 +1,154 @@
+"""Crossbar MVM kernel vs pure-jnp oracle: the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    crossbar_linear,
+    crossbar_mvm,
+    dequantize,
+    quantize_inputs,
+    quantize_weights,
+)
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand_operands(m, k, n, input_bits=8, weight_bits=4):
+    xq = jnp.asarray(RNG.integers(0, 1 << input_bits, (m, k)), jnp.int32)
+    lo, hi = -(1 << (weight_bits - 1)), (1 << (weight_bits - 1)) - 1
+    gq = jnp.asarray(RNG.integers(lo, hi + 1, (k, n)), jnp.int32)
+    return xq, gq
+
+
+class TestCrossbarMvmExact:
+    """Integer path must match the oracle bit-exactly."""
+
+    @pytest.mark.parametrize(
+        "m,k,n,xbar_rows",
+        [
+            (1, 1, 1, 512),  # degenerate
+            (4, 512, 32, 512),  # exactly one traversal-sized crossbar
+            (8, 512, 512, 512),  # one aggregation-sized crossbar
+            (8, 128, 128, 512),  # feature-extraction tile, k < xbar_rows
+            (17, 300, 33, 128),  # ragged: padding in every dimension
+            (3, 1537, 5, 512),  # k spans 4 crossbars with remainder
+        ],
+    )
+    def test_matches_ref(self, m, k, n, xbar_rows):
+        xq, gq = _rand_operands(m, k, n)
+        got = crossbar_mvm(xq, gq, xbar_rows=xbar_rows, block_m=16, block_n=16)
+        want = ref.crossbar_mvm_ref(xq, gq, xbar_rows=xbar_rows)
+        assert got.shape == (m, n)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_plain_matmul_when_adc_lossless(self):
+        # With a lossless ADC the bit-serial path is exactly x @ g.
+        xq, gq = _rand_operands(9, 200, 13)
+        got = crossbar_mvm(xq, gq, xbar_rows=512)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(xq @ gq))
+
+    @pytest.mark.parametrize("adc_bits", [4, 6, 8])
+    def test_adc_clipping_matches_ref(self, adc_bits):
+        xq, gq = _rand_operands(6, 600, 24)
+        got = crossbar_mvm(xq, gq, adc_bits=adc_bits, xbar_rows=256, block_m=8, block_n=8)
+        want = ref.crossbar_mvm_ref(xq, gq, adc_bits=adc_bits, xbar_rows=256)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # A tight ADC must actually clip somewhere on this workload,
+        # otherwise the test exercises nothing.
+        lossless = ref.crossbar_mvm_ref(xq, gq, adc_bits=24, xbar_rows=256)
+        if adc_bits == 4:
+            assert not np.array_equal(np.asarray(want), np.asarray(lossless))
+
+    @pytest.mark.parametrize("input_bits", [1, 2, 4, 8])
+    def test_input_bit_widths(self, input_bits):
+        xq = jnp.asarray(RNG.integers(0, 1 << input_bits, (5, 96)), jnp.int32)
+        gq = jnp.asarray(RNG.integers(-8, 8, (96, 7)), jnp.int32)
+        got = crossbar_mvm(xq, gq, input_bits=input_bits, xbar_rows=64, block_m=8, block_n=8)
+        want = ref.crossbar_mvm_ref(xq, gq, input_bits=input_bits, xbar_rows=64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            crossbar_mvm(jnp.zeros((2, 3), jnp.int32), jnp.zeros((4, 5), jnp.int32))
+        with pytest.raises(ValueError):
+            crossbar_mvm(jnp.zeros((2,), jnp.int32), jnp.zeros((2, 2), jnp.int32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 320),
+    n=st.integers(1, 24),
+    xbar_rows=st.sampled_from([32, 64, 128, 256]),
+    adc_bits=st.sampled_from([6, 10, 13]),
+    input_bits=st.sampled_from([2, 4, 8]),
+)
+def test_hypothesis_shape_sweep(m, k, n, xbar_rows, adc_bits, input_bits):
+    """Kernel == oracle over a randomized shape/param grid."""
+    rng = np.random.default_rng(m * 1000003 + k * 1009 + n)
+    xq = jnp.asarray(rng.integers(0, 1 << input_bits, (m, k)), jnp.int32)
+    gq = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int32)
+    got = crossbar_mvm(
+        xq, gq, input_bits=input_bits, adc_bits=adc_bits, xbar_rows=xbar_rows,
+        block_m=8, block_n=8,
+    )
+    want = ref.crossbar_mvm_ref(
+        xq, gq, input_bits=input_bits, adc_bits=adc_bits, xbar_rows=xbar_rows
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestQuantization:
+    def test_weight_quantization_roundtrip(self):
+        w = jnp.asarray(RNG.normal(size=(64, 32)), jnp.float32)
+        gq, scale = quantize_weights(w, 4)
+        assert int(jnp.max(gq)) <= 7 and int(jnp.min(gq)) >= -8
+        err = jnp.max(jnp.abs(gq * scale - w))
+        assert float(err) <= float(scale) / 2 + 1e-6
+
+    def test_input_quantization_range(self):
+        x = jnp.asarray(RNG.normal(size=(16, 8)) * 10, jnp.float32)
+        xq, scale, zero = quantize_inputs(x, 8)
+        assert int(jnp.min(xq)) >= 0 and int(jnp.max(xq)) <= 255
+        recon = xq * scale + zero
+        assert float(jnp.max(jnp.abs(recon - x))) <= float(scale) / 2 + 1e-5
+
+    def test_more_weight_bits_reduce_error(self):
+        w = jnp.asarray(RNG.normal(size=(128, 16)), jnp.float32)
+        errs = []
+        for bits in (2, 4, 6):
+            gq, s = quantize_weights(w, bits)
+            errs.append(float(jnp.max(jnp.abs(gq * s - w))))
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_rejects_bad_bits(self):
+        with pytest.raises(ValueError):
+            quantize_weights(jnp.ones((2, 2)), 1)
+        with pytest.raises(ValueError):
+            quantize_inputs(jnp.ones((2, 2)), 0)
+
+
+class TestCrossbarLinear:
+    def test_error_bounded_by_quantization(self):
+        x = jnp.asarray(RNG.normal(size=(8, 200)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(200, 16)), jnp.float32)
+        y = crossbar_linear(x, w, xbar_rows=128)
+        exact = x @ w
+        # 4-bit weights / 8-bit inputs: relative error stays moderate.
+        rel = float(jnp.max(jnp.abs(y - exact)) / jnp.max(jnp.abs(exact)))
+        assert rel < 0.35
+        # And matches its own oracle tightly.
+        y_ref = ref.crossbar_linear_ref(x, w, xbar_rows=128)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+    def test_higher_precision_tracks_exact(self):
+        x = jnp.asarray(RNG.normal(size=(4, 64)), jnp.float32)
+        w = jnp.asarray(RNG.normal(size=(64, 8)), jnp.float32)
+        coarse = crossbar_linear(x, w, weight_bits=2)
+        fine = crossbar_linear(x, w, weight_bits=6)
+        exact = x @ w
+        assert float(jnp.mean(jnp.abs(fine - exact))) < float(jnp.mean(jnp.abs(coarse - exact)))

@@ -1,0 +1,70 @@
+//! Comm bench — the Table 1 communication row (3.3 ms vs 406 ms) and the
+//! link-model sweeps behind Fig. 8's ~790× average.
+//!
+//! `cargo bench --bench comm`
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::comm::{InterClusterLink, InterNetworkLink};
+use ima_gnn::config::CommConfig;
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::graph::datasets;
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::report::{speedup, Table};
+
+fn main() {
+    let cfg = CommConfig::paper();
+    let v2x = InterNetworkLink::new(cfg.clone());
+    let adhoc = InterClusterLink::new(cfg);
+
+    // --- Table 1 communication row -----------------------------------------
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology::taxi();
+    let mut t = Table::new(
+        "Table 1 — communication (864-byte taxi message)",
+        &["Setting", "Modeled", "Paper"],
+    );
+    t.row(&[
+        "Centralized (V2X, Eq. 5)".into(),
+        model.communicate_latency(Setting::Centralized, topo).to_string(),
+        "3.30 ms".into(),
+    ]);
+    t.row(&[
+        "Decentralized (802.11n ad-hoc, Eq. 4)".into(),
+        model.communicate_latency(Setting::Decentralized, topo).to_string(),
+        "406 ms".into(),
+    ]);
+    t.print();
+
+    // --- per-dataset wire model (Fig. 8 communication series) ---------------
+    let mut t = Table::new(
+        "per-dataset communication (8-bit features on the wire)",
+        &["Dataset", "Message", "Centralized", "Decentralized", "Cent advantage"],
+    );
+    for d in datasets::all() {
+        let m = NetModel::fig8(&d).unwrap();
+        let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
+        let c = m.communicate_latency(Setting::Centralized, topo);
+        let dec = m.communicate_latency(Setting::Decentralized, topo);
+        t.row(&[
+            d.name.to_string(),
+            format!("{} B", d.feature_len),
+            c.to_string(),
+            dec.to_string(),
+            speedup(dec / c),
+        ]);
+    }
+    t.print();
+
+    // --- timing --------------------------------------------------------------
+    let mut b = Bench::new();
+    b.section("link model evaluation");
+    b.case("v2x transfer(864B)", || black_box(v2x.transfer(864)));
+    b.case("adhoc hop(864B)", || black_box(adhoc.hop(864)));
+    b.case("adhoc relay_chain(864B, 4 hops)", || black_box(adhoc.relay_chain(864, 4)));
+    b.case("comm row both settings", || {
+        black_box((
+            model.communicate_latency(Setting::Centralized, topo),
+            model.communicate_latency(Setting::Decentralized, topo),
+        ))
+    });
+}

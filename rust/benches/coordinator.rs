@@ -1,0 +1,129 @@
+//! P1 bench — coordinator hot path: router, batcher, feature store and the
+//! end-to-end served-request throughput (§Perf, Layer 3).
+//!
+//! Requires `make artifacts`.  `cargo bench --bench coordinator`
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::coordinator::{
+    Batcher, CentralizedLeader, FeatureStore, GcnLayerBinding, InferenceService, Request, Router,
+};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::graph::{fixed_size, generate};
+use ima_gnn::runtime::Manifest;
+use ima_gnn::testing::Rng;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(4);
+
+    b.section("router");
+    let clustering = fixed_size(10_000, 10).unwrap();
+    let mut router = Router::from_clustering(&clustering);
+    b.case("owner route + complete", || {
+        let d = router.route(black_box(4567)).unwrap();
+        router.complete(d);
+        black_box(d)
+    });
+    let mut replica = Router::centralized(10_000, 8).unwrap();
+    b.case("replica route + complete (8 replicas)", || {
+        let d = replica.route(black_box(123)).unwrap();
+        replica.complete(d);
+        black_box(d)
+    });
+
+    b.section("batcher");
+    let mut batcher = Batcher::new(64, Duration::from_millis(1)).unwrap();
+    let mut id = 0u64;
+    b.case("push (closing every 64th)", || {
+        id += 1;
+        black_box(batcher.push(Request { id, node: (id % 100) as usize }))
+    });
+
+    b.section("feature store");
+    let mut store = FeatureStore::new(256, 1433);
+    let row = vec![0.5f32; 1433];
+    b.case("write one 1433-wide row", || store.write(black_box(17), &row).unwrap());
+    store.swap();
+    let nodes: Vec<usize> = (0..64).map(|i| i * 3 % 256).collect();
+    b.case("gather 64 rows (batch assembly)", || black_box(store.gather(&nodes).unwrap()));
+    b.case("swap (round barrier, 256 nodes)", || store.swap());
+
+    b.section("end-to-end serving (PJRT)");
+    let dir = artifact_dir();
+    let (svc, manifest) = match (InferenceService::start(dir.clone()), Manifest::load(&dir)) {
+        (Ok(s), Ok(m)) => (s, m),
+        _ => {
+            eprintln!("skipping serving bench (run `make artifacts`)");
+            return;
+        }
+    };
+    let binding = GcnLayerBinding::from_spec(manifest.get("gcn_layer_small").unwrap()).unwrap();
+    let graph = generate::regular(48, 6, 3).unwrap();
+    let weights: Vec<f32> =
+        (0..binding.feature * binding.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    let mut leader = CentralizedLeader::new(
+        binding,
+        graph,
+        weights,
+        &GnnWorkload::gcn("bench", 64, 6),
+        Duration::from_millis(100),
+    )
+    .unwrap();
+    for node in 0..48 {
+        let f: Vec<f32> = (0..64).map(|_| rng.f64() as f32).collect();
+        leader.upload(node, &f).unwrap();
+    }
+    leader.end_round();
+    svc.warm("gcn_layer_small").unwrap();
+
+    let mut id = 0u64;
+    let st = b.case("submit 16 requests -> 1 served batch", || {
+        let mut out = Vec::new();
+        for _ in 0..16 {
+            id += 1;
+            out = leader.submit(&svc, Request { id, node: (id % 48) as usize }).unwrap();
+        }
+        black_box(out.len())
+    });
+    println!(
+        "    -> end-to-end serving throughput: {:.0} req/s",
+        16.0 * 1e9 / st.median_ns
+    );
+
+    // --- tail latency under a Poisson trace (virtual-time replay over
+    // measured PJRT batch walls) --------------------------------------------
+    use ima_gnn::coordinator::{generate_trace, replay_trace, TraceConfig};
+    use ima_gnn::report::Table;
+    use ima_gnn::units::Time;
+    let exe_wall = Time::ns(st.median_ns / 16.0 * 16.0); // batch wall
+    let mut t = Table::new(
+        "\ntail latency — Poisson trace, batch 16, 2 ms deadline",
+        &["offered load (req/s)", "p50", "p99", "max"],
+    );
+    for rate in [1_000.0, 10_000.0, 60_000.0] {
+        let trace = generate_trace(&TraceConfig {
+            rate_per_s: rate,
+            duration_s: 2.0,
+            diurnal: false,
+            nodes: 48,
+            seed: 7,
+        })
+        .unwrap();
+        let stats =
+            replay_trace(&trace, 16, Time::ms(2.0), |_nodes| Ok(exe_wall)).unwrap();
+        t.row(&[
+            format!("{rate:.0}"),
+            stats.p50().to_string(),
+            stats.p99().to_string(),
+            stats.max().to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,62 @@
+//! Microbench — the functional crossbar arrays (the simulator's compute
+//! hot spot): MVM evaluate at the paper's three core geometries, CAM
+//! search/scan, and the modeled-vs-host-wall comparison.
+//!
+//! `cargo bench --bench crossbar`
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::config::{presets, CrossbarGeometry, DeviceParams};
+use ima_gnn::crossbar::{CamCrossbar, MvmCrossbar};
+use ima_gnn::graph::generate;
+use ima_gnn::testing::Rng;
+
+fn mvm(rows: usize, cols: usize, adcs: usize) -> (MvmCrossbar, Vec<u32>) {
+    let mut rng = Rng::new(7);
+    let mut g = CrossbarGeometry::new(rows, cols);
+    g.adcs = adcs;
+    let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+    let w: Vec<i32> = (0..rows * cols).map(|_| rng.i64_in(-8, 7) as i32).collect();
+    xb.program(&w).unwrap();
+    let input: Vec<u32> = (0..rows).map(|_| rng.u64_in(0, 255) as u32).collect();
+    (xb, input)
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    b.section("MVM crossbar evaluate (bit-serial, 8-bit inputs)");
+    let (agg, agg_in) = mvm(512, 512, 8);
+    let st = b.case("aggregation geometry 512x512", || black_box(agg.evaluate(&agg_in).unwrap()));
+    println!(
+        "    modeled on-chip: {} per full MVM ({} per pass) vs host wall {:.1} µs",
+        agg.mvm_latency(),
+        agg.pass_latency(),
+        st.median_ns / 1e3
+    );
+    let (fe, fe_in) = mvm(128, 128, 32);
+    b.case("feature geometry 128x128", || black_box(fe.evaluate(&fe_in).unwrap()));
+    let (tr, tr_in) = mvm(512, 32, 8);
+    b.case("traversal geometry 512x32", || black_box(tr.evaluate(&tr_in).unwrap()));
+
+    b.section("CAM crossbar (traversal core ops)");
+    let cfg = presets::decentralized();
+    let mut cam = CamCrossbar::new(cfg.traversal.geometry, cfg.device.clone()).unwrap();
+    let mut rng = Rng::new(3);
+    let keys: Vec<u64> = (0..512).map(|_| rng.u64_in(0, 255)).collect();
+    cam.load(&keys).unwrap();
+    b.case("search over 512 rows", || black_box(cam.search(42)));
+    b.case("compare_le over 512 rows", || black_box(cam.compare_le(100)));
+    b.case("scan_owner", || black_box(cam.scan_owner(100)));
+
+    b.section("traversal core end-to-end lookup (Fig. 3 dataflow)");
+    use ima_gnn::cores::TraversalCore;
+    let g = generate::regular(256, 2, 1).unwrap();
+    let mut trav = TraversalCore::new(cfg.traversal, cfg.device).unwrap();
+    trav.load_graph(&g).unwrap();
+    let st = b.case("incoming(dst) on 256-node graph", || black_box(trav.incoming(17).unwrap()));
+    println!(
+        "    modeled on-chip t1 = {} vs host wall {:.2} µs (simulation overhead, not hw)",
+        trav.per_node_latency(),
+        st.median_ns / 1e3
+    );
+}

@@ -1,0 +1,38 @@
+//! E3 bench — regenerates Fig. 8 (per-dataset latency breakdown + headline
+//! averages) and times the per-dataset evaluation and the DES cross-check.
+//!
+//! `cargo bench --bench fig8`
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::experiments::Fig8;
+use ima_gnn::graph::datasets;
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::sim::{simulate, SimConfig};
+
+fn main() {
+    let f = Fig8::new().expect("fig8 builds");
+    f.render().print();
+    println!("\n{}\n", f.summary());
+
+    let mut b = Bench::new();
+    b.section("Fig. 8 evaluation");
+    b.case("all four datasets, both settings", || black_box(Fig8::new().unwrap()));
+    for d in datasets::all() {
+        let m = NetModel::fig8(&d).unwrap();
+        let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
+        b.case(&format!("analytic {}", d.name), || {
+            black_box((
+                m.latency(Setting::Centralized, topo),
+                m.latency(Setting::Decentralized, topo),
+            ))
+        });
+    }
+    b.section("DES cross-check (scaled to 1000 devices)");
+    for d in datasets::all() {
+        let m = NetModel::fig8(&d).unwrap();
+        let topo = Topology { nodes: d.nodes.min(1000), cluster_size: d.avg_cs.min(32) };
+        b.case(&format!("DES decentralized {}", d.name), || {
+            black_box(simulate(&m, Setting::Decentralized, topo, &SimConfig::default()).unwrap())
+        });
+    }
+}

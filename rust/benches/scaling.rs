@@ -1,0 +1,66 @@
+//! E4 bench — the §4.3 scaling study (performance vs crossbar count,
+//! saturation once features fit, power cost) plus the double-buffering /
+//! core-overlap ablations DESIGN.md calls out.
+//!
+//! `cargo bench --bench scaling`
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::config::presets;
+use ima_gnn::cores::{Accelerator, GnnWorkload};
+use ima_gnn::experiments::scaling_sweep;
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::report::{speedup, Table};
+use ima_gnn::sim::{simulate, SimConfig};
+
+fn main() {
+    // --- the scaling table -------------------------------------------------
+    let rows = scaling_sweep(&GnnWorkload::taxi()).unwrap();
+    let mut t = Table::new(
+        "§4.3 scaling — decentralized per-node figures vs crossbars per core",
+        &["Crossbars/core", "Per-node latency", "Per-node power (mW)", "Speedup"],
+    );
+    let base = rows[0].1;
+    for (k, lat, mw) in &rows {
+        t.row(&[k.to_string(), lat.to_string(), format!("{mw:.2}"), speedup(base / *lat)]);
+    }
+    t.print();
+
+    // --- ablation: core overlap (paper §2.3 parallel agg+FE) ---------------
+    let acc = Accelerator::new(presets::decentralized()).unwrap();
+    let bd = acc.per_node(&GnnWorkload::taxi());
+    let mut t = Table::new(
+        "ablation — §2.3 core overlap",
+        &["Schedule", "Per-node compute", "Saving"],
+    );
+    t.row(&["sequential (Table 1)".into(), bd.total_latency().to_string(), "-".into()]);
+    t.row(&[
+        "agg ∥ FE overlap".into(),
+        bd.overlapped_latency().to_string(),
+        format!("{}", bd.total_latency() - bd.overlapped_latency()),
+    ]);
+    t.print();
+
+    // --- ablation: shared-medium (CSMA) decentralized comm ------------------
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology { nodes: 200, cluster_size: 10 };
+    let ded = simulate(&model, Setting::Decentralized, topo, &SimConfig::default()).unwrap();
+    let csma = simulate(
+        &model,
+        Setting::Decentralized,
+        topo,
+        &SimConfig { shared_medium: true, ..Default::default() },
+    )
+    .unwrap();
+    let mut t = Table::new("ablation — intra-cluster medium", &["Medium", "Completion"]);
+    t.row(&["dedicated channels (Eq. 4)".into(), ded.completion.to_string()]);
+    t.row(&["shared medium (CSMA)".into(), csma.completion.to_string()]);
+    t.print();
+
+    // --- timing ------------------------------------------------------------
+    let mut b = Bench::new();
+    b.section("scaling sweep");
+    b.case("full 6-point sweep", || black_box(scaling_sweep(&GnnWorkload::taxi()).unwrap()));
+    b.case("accelerator construction", || {
+        black_box(Accelerator::new(presets::decentralized()).unwrap())
+    });
+}

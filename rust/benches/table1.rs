@@ -1,0 +1,39 @@
+//! E1 bench — regenerates Table 1 and times the analytic pipeline.
+//!
+//! `cargo bench --bench table1`
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::experiments::Table1;
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+
+fn main() {
+    let t1 = Table1::new().expect("model builds");
+    t1.render().print();
+    println!("max relative error vs paper: {:.3}%\n", t1.max_relative_error() * 100.0);
+
+    let mut b = Bench::new();
+    b.section("Table 1 model evaluation");
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology::taxi();
+    b.case("netmodel: full Table 1 (10 cells)", || {
+        let t = Table1::new().unwrap();
+        black_box(t.rows())
+    });
+    b.case("netmodel: latency both settings", || {
+        black_box((
+            model.latency(Setting::Centralized, topo),
+            model.latency(Setting::Decentralized, topo),
+        ))
+    });
+    b.case("netmodel: power both settings", || {
+        black_box((
+            model.power(Setting::Centralized, topo),
+            model.power(Setting::Decentralized, topo),
+        ))
+    });
+    b.case("accelerator: per-node breakdown", || {
+        let m = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+        black_box(*m.breakdown())
+    });
+}

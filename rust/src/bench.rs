@@ -1,0 +1,198 @@
+//! Micro-benchmark harness (offline `criterion` substitute).
+//!
+//! Warmup + timed iterations with median / MAD / min / mean reporting and a
+//! `black_box` to defeat constant folding.  Every `rust/benches/*.rs` target
+//! (declared `harness = false`) drives this.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Result statistics of one benchmark case, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iterations: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad_ns: f64,
+}
+
+impl Stats {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.median_ns > 0.0 {
+            1e9 / self.median_ns
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{:.1} ns", ns)
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} median {:>12}  mad {:>10}  min {:>12}  iters {}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            fmt_ns(self.min_ns),
+            self.iterations
+        )
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Modest budgets: the suite runs on a single shared core.
+        Bench {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(750),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, warmup: Duration, measure: Duration) -> Bench {
+        self.warmup = warmup;
+        self.measure = measure;
+        self
+    }
+
+    /// Time `f` and record the statistics under `name`.
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // Warmup until the budget elapses (at least one call).
+        let start = Instant::now();
+        let mut warm_iters: usize = 0;
+        loop {
+            black_box(f());
+            warm_iters += 1;
+            if start.elapsed() >= self.warmup || warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        // Measure individual iterations.
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(1024);
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_samples(name, &mut samples_ns);
+        println!("{stats}");
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded cases.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Print a section header the way criterion groups cases.
+    pub fn section(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, samples_ns: &mut [f64]) -> Stats {
+        assert!(!samples_ns.is_empty(), "no samples for {name}");
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let median = samples_ns[n / 2];
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let mut devs: Vec<f64> = samples_ns.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            name: name.to_string(),
+            iterations: n,
+            median_ns: median,
+            mean_ns: mean,
+            min_ns: samples_ns[0],
+            max_ns: samples_ns[n - 1],
+            mad_ns: devs[n / 2],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let mut s = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let st = Stats::from_samples("k", &mut s);
+        assert_eq!(st.median_ns, 3.0);
+        assert_eq!(st.min_ns, 1.0);
+        assert_eq!(st.max_ns, 5.0);
+        assert_eq!(st.iterations, 5);
+        assert!((st.mean_ns - 3.0).abs() < 1e-12);
+        assert_eq!(st.mad_ns, 1.0);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new().with_budget(Duration::from_millis(5), Duration::from_millis(20));
+        let st = b.case("sum", || (0..1000u64).sum::<u64>());
+        assert!(st.iterations > 0);
+        assert!(st.median_ns > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_inverse_of_median() {
+        let st = Stats {
+            name: "x".into(),
+            iterations: 1,
+            median_ns: 1000.0,
+            mean_ns: 1000.0,
+            min_ns: 1000.0,
+            max_ns: 1000.0,
+            mad_ns: 0.0,
+        };
+        assert!((st.throughput_per_sec() - 1e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn display_scales_units() {
+        let mut s = vec![2_500_000.0];
+        let st = Stats::from_samples("ms-case", &mut s);
+        assert!(st.to_string().contains("ms"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Command-line argument parsing (offline `clap` substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declarative option spec.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name} expects a number, got `{v}`"))),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A parser for one command with options/flags.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Command {
+        self.specs.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Command {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let val = if spec.takes_value { " <value>" } else { "" };
+            let def = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{:<18} {}{}\n", spec.name, val, spec.help, def));
+        }
+        s
+    }
+
+    /// Parse raw argv (without the command name itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let (true, Some(d)) = (spec.takes_value, spec.default) {
+                args.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| Error::Usage(format!("unknown option `--{name}`\n\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Usage(format!("--{name} requires a value")))?
+                        }
+                    };
+                    args.opts.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(Error::Usage(format!("--{name} does not take a value")));
+                    }
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("table1", "reproduce Table 1")
+            .opt("nodes", "graph size", Some("10000"))
+            .opt("cluster", "cluster size", Some("10"))
+            .flag("verbose", "print details")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize_or("nodes", 0).unwrap(), 10000);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&argv(&["--nodes", "500", "--cluster=7", "--verbose"])).unwrap();
+        assert_eq!(a.usize_or("nodes", 0).unwrap(), 500);
+        assert_eq!(a.usize_or("cluster", 0).unwrap(), 7);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = cmd().parse(&argv(&["cora", "--nodes", "5", "citeseer"])).unwrap();
+        assert_eq!(a.positional(), &["cora".to_string(), "citeseer".to_string()]);
+    }
+
+    #[test]
+    fn underscores_in_integers() {
+        let a = cmd().parse(&argv(&["--nodes", "4_847_571"])).unwrap();
+        assert_eq!(a.usize_or("nodes", 0).unwrap(), 4_847_571);
+    }
+
+    #[test]
+    fn errors_are_usage_errors() {
+        assert!(matches!(cmd().parse(&argv(&["--bogus"])), Err(Error::Usage(_))));
+        assert!(matches!(cmd().parse(&argv(&["--nodes"])), Err(Error::Usage(_))));
+        assert!(matches!(cmd().parse(&argv(&["--verbose=1"])), Err(Error::Usage(_))));
+        let a = cmd().parse(&argv(&["--nodes", "abc"])).unwrap();
+        assert!(a.usize_or("nodes", 0).is_err());
+    }
+
+    #[test]
+    fn usage_lists_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--nodes"));
+        assert!(u.contains("default: 10000"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Communication-link models (paper §3 + §4.2).
+//!
+//! * [`InterNetworkLink`] — the centralized setting's fast, mature
+//!   infrastructure link L_n (V2X, paper ref [19]): a measured 1.1 ms
+//!   latency per 300-byte packet at 300 m; larger messages packetize.
+//! * [`InterClusterLink`] — the decentralized setting's ad-hoc link L_c
+//!   (IEEE 802.11n ch. 9, 2.452 GHz, −31 dBm, 20 MHz; paper ref [20]):
+//!   per-hop store-and-forward delay plus serialization at the effective
+//!   goodput, with a connection-establishment time tₑ per peer session.
+
+use crate::config::CommConfig;
+use crate::units::{Energy, Power, Time};
+
+/// The centralized inter-network link L_n.
+#[derive(Debug, Clone)]
+pub struct InterNetworkLink {
+    cfg: CommConfig,
+}
+
+impl InterNetworkLink {
+    pub fn new(cfg: CommConfig) -> InterNetworkLink {
+        InterNetworkLink { cfg }
+    }
+
+    /// Packets needed for `bytes` of payload.
+    pub fn packets(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.cfg.v2x_packet_bytes).max(1)
+    }
+
+    /// One-way transfer latency t(L_n) for a message of `bytes`.
+    /// The taxi case: 864 B → 3 packets → ≈3.3 ms (paper §4.2).
+    pub fn transfer(&self, bytes: usize) -> Time {
+        self.cfg.v2x_packet_latency * self.packets(bytes) as f64
+    }
+
+    /// Link power p(L_n) while transferring (radio TX power).
+    pub fn power(&self) -> Power {
+        self.cfg.v2x_tx_power
+    }
+}
+
+/// The decentralized inter-cluster ad-hoc link L_c.
+#[derive(Debug, Clone)]
+pub struct InterClusterLink {
+    cfg: CommConfig,
+}
+
+impl InterClusterLink {
+    pub fn new(cfg: CommConfig) -> InterClusterLink {
+        InterClusterLink { cfg }
+    }
+
+    /// Connection-establishment time tₑ (association + route discovery).
+    pub fn setup(&self) -> Time {
+        self.cfg.adhoc_setup
+    }
+
+    /// One-hop relay latency t(L_c) for a message of `bytes`:
+    /// store-and-forward fixed delay + serialization at the goodput.
+    pub fn hop(&self, bytes: usize) -> Time {
+        self.cfg.adhoc_hop_latency + Time::s(bytes as f64 / self.cfg.adhoc_goodput_bps)
+    }
+
+    /// Multi-hop relay chain latency: source feeds proxy nodes which
+    /// forward to the next (paper §4.2's relaying configuration).
+    pub fn relay_chain(&self, bytes: usize, hops: usize) -> Time {
+        self.hop(bytes) * hops.max(1) as f64
+    }
+
+    /// Energy to push `bytes` through one hop (Eq. 7's E_perBit).
+    pub fn hop_energy(&self, bytes: usize) -> Energy {
+        self.cfg.adhoc_energy_per_bit * (bytes * 8) as f64
+    }
+
+    /// Average radiated+circuit power while a transfer is in flight.
+    pub fn power(&self, bytes: usize) -> Power {
+        self.hop_energy(bytes) / self.hop(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CommConfig;
+    use crate::testing::assert_close;
+
+    fn links() -> (InterNetworkLink, InterClusterLink) {
+        let cfg = CommConfig::paper();
+        (InterNetworkLink::new(cfg.clone()), InterClusterLink::new(cfg))
+    }
+
+    #[test]
+    fn v2x_packetization_matches_paper_taxi_case() {
+        let (n, _) = links();
+        assert_eq!(n.packets(300), 1);
+        assert_eq!(n.packets(301), 2);
+        assert_eq!(n.packets(864), 3);
+        // "for a packet size of 864 bytes ... ~3.3 ms" (§4.2)
+        assert_close(n.transfer(864).as_ms(), 3.3, 1e-9);
+        assert_close(n.transfer(300).as_ms(), 1.1, 1e-9);
+    }
+
+    #[test]
+    fn v2x_zero_bytes_still_costs_one_packet() {
+        let (n, _) = links();
+        assert_eq!(n.packets(0), 1);
+    }
+
+    #[test]
+    fn adhoc_hop_combines_fixed_and_serialization() {
+        let (_, c) = links();
+        // 864 B at 1 MB/s = 0.864 ms on top of the 10.8 ms hop delay.
+        assert_close(c.hop(864).as_ms(), 11.664, 1e-9);
+        assert!(c.hop(0) < c.hop(1000));
+    }
+
+    #[test]
+    fn relay_chain_scales_linearly_in_hops() {
+        let (_, c) = links();
+        let one = c.hop(500);
+        assert_close(c.relay_chain(500, 4).as_ms(), (one * 4.0).as_ms(), 1e-12);
+        // zero hops clamp to one
+        assert_close(c.relay_chain(500, 0).as_ms(), one.as_ms(), 1e-12);
+    }
+
+    #[test]
+    fn hop_energy_is_per_bit() {
+        let (_, c) = links();
+        let e1 = c.hop_energy(100);
+        let e2 = c.hop_energy(200);
+        assert_close(e2.as_j(), (e1 * 2.0).as_j(), 1e-12);
+        assert!(c.power(864).as_w() > 0.0);
+    }
+
+    #[test]
+    fn centralized_link_is_much_faster_for_taxi_messages() {
+        let (n, c) = links();
+        // One full decentralized exchange (tₑ + cₛ·t(L_c)) · 2 vs t(L_n):
+        let dec = (c.setup() + c.hop(864) * 10.0) * 2.0;
+        let cent = n.transfer(864);
+        assert!(dec / cent > 100.0, "expected >100×, got {}", dec / cent);
+    }
+}

@@ -1,0 +1,276 @@
+//! TOML-subset parser (offline `toml` crate substitute).
+//!
+//! Supports what our config files use: `[section]` / `[section.sub]`
+//! headers, `key = value` pairs with string / integer / float / boolean /
+//! homogeneous-array values, `#` comments and blank lines.  Keys are
+//! flattened to `section.sub.key` paths in a [`RawConfig`] map.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> Value` map with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, Value>,
+}
+
+impl RawConfig {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.values.get(path)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, path: &str) -> Result<f64> {
+        self.get(path)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| Error::Config(format!("missing or non-numeric key `{path}`")))
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn usize(&self, path: &str) -> Result<usize> {
+        self.get(path)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| Error::Config(format!("missing or non-integer key `{path}`")))
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(Value::as_usize).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn set(&mut self, path: impl Into<String>, v: Value) {
+        self.values.insert(path.into(), v);
+    }
+}
+
+fn parse_scalar(text: &str, line_no: usize) -> Result<Value> {
+    let t = text.trim();
+    let err = |m: &str| Error::Config(format!("line {line_no}: {m}: `{t}`"));
+    if t.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if t.starts_with('[') {
+        let inner = t
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| err("unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_scalar(part, line_no)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // Numbers: underscores allowed as digit separators, scientific notation ok.
+    let clean = t.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err("unrecognized value"))
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse TOML-subset text into a flat config map.
+pub fn parse(text: &str) -> Result<RawConfig> {
+    let mut cfg = RawConfig::default();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(head) = line.strip_prefix('[') {
+            let name = head
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {line_no}: unterminated section")))?
+                .trim();
+            if name.is_empty() {
+                return Err(Error::Config(format!("line {line_no}: empty section name")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| Error::Config(format!("line {line_no}: expected `key = value`")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {line_no}: empty key")));
+        }
+        let value = parse_scalar(&line[eq + 1..], line_no)?;
+        let path = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        cfg.set(path, value);
+    }
+    Ok(cfg)
+}
+
+/// Parse a config file from disk.
+pub fn parse_file(path: &std::path::Path) -> Result<RawConfig> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# paper presets
+name = "ima-gnn"        # inline comment
+[crossbar]
+rows = 512
+cols = 512
+read_pulse_ns = 10.5
+levels = [1, 2, 4]
+double_buffer = true
+[comm.v2x]
+packet_bytes = 300
+latency_ms = 1.1
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = parse(DOC).unwrap();
+        assert_eq!(c.get("name").unwrap().as_str(), Some("ima-gnn"));
+        assert_eq!(c.usize("crossbar.rows").unwrap(), 512);
+        assert!((c.f64("crossbar.read_pulse_ns").unwrap() - 10.5).abs() < 1e-12);
+        assert!(c.bool_or("crossbar.double_buffer", false));
+        assert!((c.f64("comm.v2x.latency_ms").unwrap() - 1.1).abs() < 1e-12);
+        match c.get("crossbar.levels").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = parse("").unwrap();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert!((c.f64_or("nope", 2.5) - 2.5).abs() < 1e-12);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn underscore_digit_separators() {
+        let c = parse("n = 4_847_571").unwrap();
+        assert_eq!(c.usize("n").unwrap(), 4_847_571);
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let c = parse("x = 1.5e-9").unwrap();
+        assert!((c.f64("x").unwrap() - 1.5e-9).abs() < 1e-21);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("keyonly").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"open").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("[]").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors_name_the_key() {
+        let c = parse("").unwrap();
+        let e = c.f64("agg.rows").unwrap_err();
+        assert!(e.to_string().contains("agg.rows"));
+    }
+}

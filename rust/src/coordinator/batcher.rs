@@ -1,0 +1,208 @@
+//! Dynamic batcher: coalesces node-inference requests into fixed-size
+//! batches for the PJRT artifacts (whose leading dimension is static).
+//!
+//! Size-or-deadline policy: a batch closes when it reaches `max_batch`
+//! requests or when its oldest request has waited `max_wait`.  Short
+//! batches are padded by the executor path (repeat-last), so a closed
+//! batch is always artifact-shaped.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// One queued inference request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub node: usize,
+}
+
+/// A closed batch ready for execution.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// Wait of the oldest member at close time.
+    pub queued_for: Duration,
+}
+
+impl Batch {
+    pub fn nodes(&self) -> Vec<usize> {
+        self.requests.iter().map(|r| r.node).collect()
+    }
+}
+
+/// Size-or-deadline dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    max_batch: usize,
+    max_wait: Duration,
+    pending: Vec<Request>,
+    oldest: Option<Instant>,
+    /// Closed-batch statistics.
+    batches_closed: u64,
+    requests_seen: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Result<Batcher> {
+        if max_batch == 0 {
+            return Err(Error::Coordinator("batch size must be > 0".into()));
+        }
+        Ok(Batcher {
+            max_batch,
+            max_wait,
+            pending: Vec::with_capacity(max_batch),
+            oldest: None,
+            batches_closed: 0,
+            requests_seen: 0,
+        })
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Enqueue a request; returns a closed batch when full.
+    pub fn push(&mut self, req: Request) -> Option<Batch> {
+        self.push_at(req, Instant::now())
+    }
+
+    /// `push` with an explicit clock (testable).
+    pub fn push_at(&mut self, req: Request, now: Instant) -> Option<Batch> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(req);
+        self.requests_seen += 1;
+        if self.pending.len() >= self.max_batch {
+            return Some(self.close(now));
+        }
+        None
+    }
+
+    /// Close the batch if the deadline expired (call from the poll loop).
+    pub fn poll(&mut self) -> Option<Batch> {
+        self.poll_at(Instant::now())
+    }
+
+    /// `poll` with an explicit clock.
+    pub fn poll_at(&mut self, now: Instant) -> Option<Batch> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.max_wait => {
+                Some(self.close(now))
+            }
+            _ => None,
+        }
+    }
+
+    /// Force-close whatever is pending (shutdown / drain).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.close(Instant::now()))
+        }
+    }
+
+    fn close(&mut self, now: Instant) -> Batch {
+        let queued_for =
+            self.oldest.map(|t0| now.saturating_duration_since(t0)).unwrap_or_default();
+        self.oldest = None;
+        self.batches_closed += 1;
+        Batch { requests: std::mem::take(&mut self.pending), queued_for }
+    }
+
+    /// (batches closed, requests seen) counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.batches_closed, self.requests_seen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    fn req(id: u64) -> Request {
+        Request { id, node: id as usize }
+    }
+
+    #[test]
+    fn closes_on_size() {
+        let mut b = Batcher::new(3, Duration::from_secs(10)).unwrap();
+        assert!(b.push(req(1)).is_none());
+        assert!(b.push(req(2)).is_none());
+        let batch = b.push(req(3)).expect("third request closes the batch");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.nodes(), vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let mut b = Batcher::new(100, Duration::from_millis(5)).unwrap();
+        let t0 = Instant::now();
+        assert!(b.push_at(req(1), t0).is_none());
+        assert!(b.poll_at(t0 + Duration::from_millis(1)).is_none());
+        let batch = b.poll_at(t0 + Duration::from_millis(6)).expect("deadline expired");
+        assert_eq!(batch.requests.len(), 1);
+        assert!(batch.queued_for >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_not_newest() {
+        let mut b = Batcher::new(100, Duration::from_millis(10)).unwrap();
+        let t0 = Instant::now();
+        b.push_at(req(1), t0);
+        b.push_at(req(2), t0 + Duration::from_millis(9));
+        let batch = b.poll_at(t0 + Duration::from_millis(10)).expect("oldest expired");
+        assert_eq!(batch.requests.len(), 2);
+    }
+
+    #[test]
+    fn empty_poll_and_flush_yield_nothing() {
+        let mut b = Batcher::new(4, Duration::from_millis(1)).unwrap();
+        assert!(b.poll().is_none());
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn flush_drains_partial_batches() {
+        let mut b = Batcher::new(10, Duration::from_secs(1)).unwrap();
+        b.push(req(1));
+        b.push(req(2));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.stats(), (1, 2));
+    }
+
+    #[test]
+    fn property_no_request_lost_or_duplicated() {
+        forall(16, |rng: &mut Rng| {
+            let max = rng.index(8) + 1;
+            let mut b = Batcher::new(max, Duration::from_secs(100)).unwrap();
+            let n = rng.index(100) + 1;
+            let mut seen = Vec::new();
+            for id in 0..n as u64 {
+                if let Some(batch) = b.push(req(id)) {
+                    assert!(batch.requests.len() == max);
+                    seen.extend(batch.requests.iter().map(|r| r.id));
+                }
+            }
+            if let Some(batch) = b.flush() {
+                seen.extend(batch.requests.iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..n as u64).collect();
+            assert_eq!(seen, want, "requests lost/duplicated/reordered");
+        });
+    }
+
+    #[test]
+    fn zero_batch_rejected() {
+        assert!(Batcher::new(0, Duration::ZERO).is_err());
+    }
+}

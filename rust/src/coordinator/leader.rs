@@ -1,0 +1,299 @@
+//! Centralized leader (paper Fig. 4(a)): one powerful edge device gathers
+//! every node's features over the inter-network link, runs the GNN on its
+//! banked accelerator and serves inference requests.
+//!
+//! The request path is: router → dynamic batcher → PJRT artifact, with the
+//! modeled edge latencies (Eqs. 3/5) accounted per response next to the
+//! measured wall-clock of the actual execution.
+
+use std::time::{Duration, Instant};
+
+use crate::cores::GnnWorkload;
+use crate::error::{Error, Result};
+use crate::graph::{Csr, NeighborSampler};
+use crate::netmodel::{NetModel, Setting, Topology};
+use crate::runtime::{ArtifactSpec, Tensor};
+use crate::units::Time;
+
+use super::batcher::{Batch, Batcher, Request};
+use super::service::InferenceService;
+use super::state::FeatureStore;
+
+/// Shape binding of a `gcn_layer_*` artifact (from its manifest config).
+#[derive(Debug, Clone)]
+pub struct GcnLayerBinding {
+    pub artifact: String,
+    pub batch: usize,
+    pub sample: usize,
+    pub feature: usize,
+    pub hidden: usize,
+    pub table: usize,
+}
+
+impl GcnLayerBinding {
+    pub fn from_spec(spec: &ArtifactSpec) -> Result<GcnLayerBinding> {
+        let cfg = |k: &str| -> Result<usize> {
+            spec.config
+                .get(k)
+                .map(|v| *v as usize)
+                .ok_or_else(|| Error::Coordinator(format!("{}: missing config `{k}`", spec.name)))
+        };
+        Ok(GcnLayerBinding {
+            artifact: spec.name.clone(),
+            batch: cfg("batch")?,
+            sample: cfg("sample")?,
+            feature: cfg("feature")?,
+            hidden: cfg("hidden")?,
+            table: cfg("table")?,
+        })
+    }
+}
+
+/// One served response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub node: usize,
+    /// The node's layer output (hidden embedding).
+    pub output: Vec<f32>,
+    /// Modeled edge latency for this round (Eq. 1, centralized).
+    pub modeled: Time,
+    /// Measured wall-clock of the PJRT execution serving this batch.
+    pub wall: Duration,
+}
+
+/// The centralized serving coordinator.
+pub struct CentralizedLeader {
+    binding: GcnLayerBinding,
+    batcher: Batcher,
+    graph: Csr,
+    sampler: NeighborSampler,
+    store: FeatureStore,
+    model: NetModel,
+    topo: Topology,
+    served_batches: u64,
+    /// §Perf: tensors that are constant within a round, rebuilt only at
+    /// the `end_round` barrier instead of per served batch.
+    w_tensor: Tensor,
+    table_tensor: Option<Tensor>,
+}
+
+impl CentralizedLeader {
+    pub fn new(
+        binding: GcnLayerBinding,
+        graph: Csr,
+        weights: Vec<f32>,
+        workload: &GnnWorkload,
+        max_wait: Duration,
+    ) -> Result<CentralizedLeader> {
+        if graph.num_nodes() > binding.table {
+            return Err(Error::Coordinator(format!(
+                "graph has {} nodes but artifact table holds {} (shard the graph)",
+                graph.num_nodes(),
+                binding.table
+            )));
+        }
+        if weights.len() != binding.feature * binding.hidden {
+            return Err(Error::Coordinator(format!(
+                "weights must be {}x{}",
+                binding.feature, binding.hidden
+            )));
+        }
+        let store = FeatureStore::new(binding.table, binding.feature);
+        let topo = Topology { nodes: graph.num_nodes(), cluster_size: workload.neighbors.max(1) };
+        let model = NetModel::paper(workload)?;
+        let w_tensor = Tensor::f32(&[binding.feature, binding.hidden], weights)?;
+        Ok(CentralizedLeader {
+            batcher: Batcher::new(binding.batch, max_wait)?,
+            sampler: NeighborSampler::new(binding.sample, 7),
+            binding,
+            graph,
+            store,
+            model,
+            topo,
+            served_batches: 0,
+            w_tensor,
+            table_tensor: None,
+        })
+    }
+
+    /// Ingest one node's uploaded features (staged; visible after
+    /// `end_round`, the double-buffer barrier).
+    pub fn upload(&mut self, node: usize, features: &[f32]) -> Result<()> {
+        self.store.write(node, features)
+    }
+
+    /// Round barrier: staged uploads become the serving state; the
+    /// round-constant feature-table tensor is rebuilt here (once) rather
+    /// than per batch (§Perf).
+    pub fn end_round(&mut self) {
+        self.store.swap();
+        let b = &self.binding;
+        let all: Vec<usize> = (0..b.table).collect();
+        let x_table = self.store.gather(&all).expect("table rows are in range");
+        self.table_tensor =
+            Some(Tensor::f32(&[b.table, b.feature], x_table).expect("shape is static"));
+    }
+
+    /// Enqueue a request; serve a batch if one closes.
+    pub fn submit(&mut self, svc: &InferenceService, req: Request) -> Result<Vec<Response>> {
+        if req.node >= self.graph.num_nodes() {
+            return Err(Error::Coordinator(format!("node {} not in graph", req.node)));
+        }
+        match self.batcher.push(req) {
+            Some(batch) => self.serve(svc, batch),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Deadline poll: serve a partial batch whose oldest member expired.
+    pub fn poll(&mut self, svc: &InferenceService) -> Result<Vec<Response>> {
+        match self.batcher.poll() {
+            Some(batch) => self.serve(svc, batch),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    /// Drain all pending requests (shutdown path).
+    pub fn drain(&mut self, svc: &InferenceService) -> Result<Vec<Response>> {
+        match self.batcher.flush() {
+            Some(batch) => self.serve(svc, batch),
+            None => Ok(Vec::new()),
+        }
+    }
+
+    pub fn served_batches(&self) -> u64 {
+        self.served_batches
+    }
+
+    fn serve(&mut self, svc: &InferenceService, batch: Batch) -> Result<Vec<Response>> {
+        let b = &self.binding;
+        let real = batch.requests.len();
+        // Pad short batches to the artifact's static batch dimension by
+        // repeating the last node.
+        let mut nodes = batch.nodes();
+        let pad_node = *nodes.last().ok_or_else(|| Error::Coordinator("empty batch".into()))?;
+        nodes.resize(b.batch, pad_node);
+
+        let x_self = self.store.gather(&nodes)?;
+        let nbr_idx = self.sampler.sample_batch(&self.graph, &nodes);
+        // Round-constant tensors come from the end_round cache (§Perf).
+        let table_tensor = self
+            .table_tensor
+            .clone()
+            .ok_or_else(|| Error::Coordinator("serve before end_round barrier".into()))?;
+
+        let inputs = vec![
+            Tensor::f32(&[b.batch, b.feature], x_self)?,
+            Tensor::i32(&[b.batch, b.sample], nbr_idx)?,
+            table_tensor,
+            self.w_tensor.clone(),
+        ];
+
+        let t0 = Instant::now();
+        let outputs = svc.infer(&b.artifact, inputs)?;
+        let wall = t0.elapsed();
+        self.served_batches += 1;
+
+        let out = outputs
+            .first()
+            .ok_or_else(|| Error::Coordinator("artifact returned no outputs".into()))?;
+        let flat = out.as_f32()?;
+        let modeled = self.model.latency(Setting::Centralized, self.topo).total();
+
+        Ok(batch
+            .requests
+            .iter()
+            .take(real)
+            .enumerate()
+            .map(|(i, r)| Response {
+                id: r.id,
+                node: r.node,
+                output: flat[i * b.hidden..(i + 1) * b.hidden].to_vec(),
+                modeled,
+                wall,
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::Path;
+
+    fn binding() -> GcnLayerBinding {
+        let doc = r#"{"version": 1, "artifacts": [
+            {"name": "gcn_layer_small", "file": "f",
+             "inputs": [], "outputs": [],
+             "config": {"batch": 16, "sample": 4, "feature": 64,
+                        "hidden": 32, "table": 64}}]}"#;
+        let m = Manifest::parse(Path::new("/x"), doc).unwrap();
+        GcnLayerBinding::from_spec(m.get("gcn_layer_small").unwrap()).unwrap()
+    }
+
+    fn leader() -> CentralizedLeader {
+        let g = crate::graph::generate::regular(48, 6, 3).unwrap();
+        let w = vec![0.01f32; 64 * 32];
+        CentralizedLeader::new(
+            binding(),
+            g,
+            w,
+            &GnnWorkload::gcn("test", 64, 6),
+            Duration::from_millis(10),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn binding_reads_manifest_config() {
+        let b = binding();
+        assert_eq!((b.batch, b.sample, b.feature, b.hidden, b.table), (16, 4, 64, 32, 64));
+    }
+
+    #[test]
+    fn binding_requires_all_keys() {
+        let doc = r#"{"version": 1, "artifacts": [
+            {"name": "m", "file": "f", "inputs": [], "outputs": [],
+             "config": {"batch": 16}}]}"#;
+        let m = Manifest::parse(Path::new("/x"), doc).unwrap();
+        assert!(GcnLayerBinding::from_spec(m.get("m").unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_graphs_and_bad_weights() {
+        let g = crate::graph::generate::regular(100, 4, 1).unwrap(); // > table 64
+        let r = CentralizedLeader::new(
+            binding(),
+            g,
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 4),
+            Duration::ZERO,
+        );
+        assert!(r.is_err());
+
+        let g = crate::graph::generate::regular(10, 2, 1).unwrap();
+        let r = CentralizedLeader::new(
+            binding(),
+            g,
+            vec![0.0; 7], // wrong arity
+            &GnnWorkload::gcn("t", 64, 2),
+            Duration::ZERO,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn upload_respects_double_buffering() {
+        let mut l = leader();
+        l.upload(3, &vec![1.0; 64]).unwrap();
+        assert_eq!(l.store.read(3).unwrap()[0], 0.0);
+        l.end_round();
+        assert_eq!(l.store.read(3).unwrap()[0], 1.0);
+    }
+
+    // The submit/poll/drain request paths require a live PJRT service and
+    // built artifacts; they are covered by the integration tests in
+    // `rust/tests/serving.rs` and the `e2e_inference` example.
+}

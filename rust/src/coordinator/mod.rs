@@ -1,0 +1,27 @@
+//! Layer-3 serving coordinator.
+//!
+//! The request path (router → batcher → PJRT executor) plus the three
+//! deployment shapes the paper analyzes: a centralized leader
+//! ([`CentralizedLeader`]), decentralized per-device workers
+//! ([`run_decentralized`]) and the semi-decentralized cluster-head hybrid
+//! ([`SemiCoordinator`], the conclusion's proposal).  All PJRT execution
+//! funnels through the [`InferenceService`] thread; Python is never on
+//! this path.
+
+mod batcher;
+mod leader;
+mod router;
+mod semi;
+mod service;
+mod state;
+mod trace;
+mod worker;
+
+pub use batcher::{Batch, Batcher, Request};
+pub use leader::{CentralizedLeader, GcnLayerBinding, Response};
+pub use router::Router;
+pub use semi::{SemiCoordinator, SemiResult};
+pub use service::InferenceService;
+pub use state::FeatureStore;
+pub use trace::{generate_trace, replay_trace, Arrival, LatencyStats, TraceConfig};
+pub use worker::{run_decentralized, run_decentralized_oracle, DeviceResult};

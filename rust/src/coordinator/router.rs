@@ -1,0 +1,157 @@
+//! Request router: maps inference requests for graph nodes to the edge
+//! device that owns them (decentralized / semi-decentralized) or to a
+//! leader replica (centralized).
+
+use crate::error::{Error, Result};
+use crate::graph::Clustering;
+
+/// Routing table over node ownership.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// `owner[node] = device id`.
+    owner: Vec<usize>,
+    devices: usize,
+    /// Round-robin cursor for stateless (replica) routing.
+    cursor: usize,
+    /// Outstanding requests per device (load view).
+    load: Vec<usize>,
+}
+
+impl Router {
+    /// Ownership routing from a cluster partition: cluster id = device id.
+    pub fn from_clustering(c: &Clustering) -> Router {
+        let devices = c.num_clusters().max(1);
+        Router {
+            owner: c.assignment.clone(),
+            devices,
+            cursor: 0,
+            load: vec![0; devices],
+        }
+    }
+
+    /// Centralized: every node owned by one of `replicas` leader replicas,
+    /// assigned round-robin per request.
+    pub fn centralized(num_nodes: usize, replicas: usize) -> Result<Router> {
+        if replicas == 0 {
+            return Err(Error::Coordinator("need at least one replica".into()));
+        }
+        Ok(Router {
+            owner: vec![usize::MAX; num_nodes],
+            devices: replicas,
+            cursor: 0,
+            load: vec![0; replicas],
+        })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Route a request for `node`: owner if pinned, else the least-loaded
+    /// replica (round-robin on ties).
+    pub fn route(&mut self, node: usize) -> Result<usize> {
+        if node >= self.owner.len() {
+            return Err(Error::Coordinator(format!(
+                "node {node} out of range ({} nodes)",
+                self.owner.len()
+            )));
+        }
+        let dev = match self.owner[node] {
+            usize::MAX => {
+                // least-loaded, scanning from the round-robin cursor
+                let mut best = self.cursor % self.devices;
+                for k in 0..self.devices {
+                    let cand = (self.cursor + k) % self.devices;
+                    if self.load[cand] < self.load[best] {
+                        best = cand;
+                    }
+                }
+                self.cursor = (best + 1) % self.devices;
+                best
+            }
+            owner => owner,
+        };
+        self.load[dev] += 1;
+        Ok(dev)
+    }
+
+    /// Mark a request complete (load bookkeeping).
+    pub fn complete(&mut self, device: usize) {
+        if device < self.load.len() && self.load[device] > 0 {
+            self.load[device] -= 1;
+        }
+    }
+
+    pub fn load_of(&self, device: usize) -> usize {
+        self.load.get(device).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fixed_size;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn ownership_routing_follows_clusters() {
+        let c = fixed_size(25, 10).unwrap();
+        let mut r = Router::from_clustering(&c);
+        assert_eq!(r.devices(), 3);
+        assert_eq!(r.route(0).unwrap(), 0);
+        assert_eq!(r.route(9).unwrap(), 0);
+        assert_eq!(r.route(10).unwrap(), 1);
+        assert_eq!(r.route(24).unwrap(), 2);
+        assert!(r.route(25).is_err());
+    }
+
+    #[test]
+    fn replica_routing_balances() {
+        let mut r = Router::centralized(100, 4).unwrap();
+        for node in 0..40 {
+            r.route(node).unwrap();
+        }
+        for dev in 0..4 {
+            assert_eq!(r.load_of(dev), 10, "device {dev}");
+        }
+    }
+
+    #[test]
+    fn completion_frees_load_and_steers_routing() {
+        let mut r = Router::centralized(10, 2).unwrap();
+        let a = r.route(0).unwrap();
+        let _b = r.route(1).unwrap();
+        r.complete(a);
+        // device `a` is now strictly less loaded → next request goes there
+        assert_eq!(r.route(2).unwrap(), a);
+    }
+
+    #[test]
+    fn property_ownership_is_stable_and_load_is_conserved() {
+        forall(16, |rng: &mut Rng| {
+            let n = rng.index(50) + 10;
+            let k = rng.index(9) + 1;
+            let c = fixed_size(n, k).unwrap();
+            let mut r = Router::from_clustering(&c);
+            let mut outstanding = vec![0usize; r.devices()];
+            for _ in 0..100 {
+                let node = rng.index(n);
+                let dev = r.route(node).unwrap();
+                assert_eq!(dev, c.assignment[node], "owner routing must be stable");
+                outstanding[dev] += 1;
+                if rng.bool() {
+                    r.complete(dev);
+                    outstanding[dev] -= 1;
+                }
+            }
+            for d in 0..r.devices() {
+                assert_eq!(r.load_of(d), outstanding[d]);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        assert!(Router::centralized(5, 0).is_err());
+    }
+}

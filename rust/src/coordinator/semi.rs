@@ -1,0 +1,198 @@
+//! Semi-decentralized coordinator (the paper's conclusion / ref [26], E8):
+//! cluster *heads* each serve their region in a centralized fashion
+//! (members upload features over fast V2X links, the head runs the GNN),
+//! while the graph level stays decentralized — heads exchange boundary
+//! embeddings with adjacent heads.
+
+use std::time::{Duration, Instant};
+
+use crate::cores::GnnWorkload;
+use crate::error::{Error, Result};
+use crate::graph::{Clustering, Csr, NeighborSampler};
+use crate::netmodel::{NetModel, Topology};
+use crate::runtime::Tensor;
+use crate::units::Time;
+
+use super::leader::GcnLayerBinding;
+use super::service::InferenceService;
+
+/// Per-member output of one semi-decentralized round.
+#[derive(Debug, Clone)]
+pub struct SemiResult {
+    pub node: usize,
+    pub head: usize,
+    pub output: Vec<f32>,
+    /// Modeled round latency for this node's cluster (E8 model).
+    pub modeled: Time,
+    /// Wall time of the head's PJRT execution.
+    pub wall: Duration,
+}
+
+/// The semi-decentralized deployment over one graph.
+pub struct SemiCoordinator {
+    binding: GcnLayerBinding,
+    graph: Csr,
+    clustering: Clustering,
+    weights: Vec<f32>,
+    sampler: NeighborSampler,
+    model: NetModel,
+    head_capacity: f64,
+}
+
+impl SemiCoordinator {
+    pub fn new(
+        binding: GcnLayerBinding,
+        graph: Csr,
+        clustering: Clustering,
+        weights: Vec<f32>,
+        workload: &GnnWorkload,
+    ) -> Result<SemiCoordinator> {
+        if clustering.assignment.len() != graph.num_nodes() {
+            return Err(Error::Coordinator("clustering does not cover the graph".into()));
+        }
+        if graph.num_nodes() > binding.table {
+            return Err(Error::Coordinator(format!(
+                "graph has {} nodes but artifact table holds {}",
+                graph.num_nodes(),
+                binding.table
+            )));
+        }
+        if weights.len() != binding.feature * binding.hidden {
+            return Err(Error::Coordinator("weight arity mismatch".into()));
+        }
+        let head_capacity = clustering.avg_size().max(1.0);
+        Ok(SemiCoordinator {
+            sampler: NeighborSampler::new(binding.sample, 7),
+            model: NetModel::paper(workload)?,
+            binding,
+            graph,
+            clustering,
+            weights,
+            head_capacity,
+        })
+    }
+
+    pub fn num_heads(&self) -> usize {
+        self.clustering.num_clusters()
+    }
+
+    /// Run one round: every head batches its members through the artifact.
+    /// `features[node]` is each node's current feature vector.
+    pub fn round(&self, svc: &InferenceService, features: &[Vec<f32>]) -> Result<Vec<SemiResult>> {
+        let b = &self.binding;
+        let n = self.graph.num_nodes();
+        if features.len() != n {
+            return Err(Error::Coordinator("feature rows != nodes".into()));
+        }
+        if features.iter().any(|f| f.len() != b.feature) {
+            return Err(Error::Coordinator("feature width mismatch".into()));
+        }
+        // Shared feature table (heads exchange boundary rows, so the table
+        // every head sees is consistent).
+        let mut x_table = vec![0.0f32; b.table * b.feature];
+        for (node, f) in features.iter().enumerate() {
+            x_table[node * b.feature..(node + 1) * b.feature].copy_from_slice(f);
+        }
+
+        let mut results = Vec::with_capacity(n);
+        for (head, members) in self.clustering.clusters.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let topo = Topology { nodes: n, cluster_size: members.len() };
+            let modeled = self.model.semi_latency(topo, self.head_capacity).total();
+            // Heads batch their members, padding to the artifact batch.
+            for chunk in members.chunks(b.batch) {
+                let mut nodes = chunk.to_vec();
+                let pad = *nodes.last().unwrap();
+                nodes.resize(b.batch, pad);
+
+                let mut x_self = Vec::with_capacity(b.batch * b.feature);
+                for &node in &nodes {
+                    x_self.extend_from_slice(&features[node]);
+                }
+                let nbr_idx = self.sampler.sample_batch(&self.graph, &nodes);
+                let inputs = vec![
+                    Tensor::f32(&[b.batch, b.feature], x_self)?,
+                    Tensor::i32(&[b.batch, b.sample], nbr_idx)?,
+                    Tensor::f32(&[b.table, b.feature], x_table.clone())?,
+                    Tensor::f32(&[b.feature, b.hidden], self.weights.clone())?,
+                ];
+                let t0 = Instant::now();
+                let outputs = svc.infer(&b.artifact, inputs)?;
+                let wall = t0.elapsed();
+                let flat = outputs
+                    .first()
+                    .ok_or_else(|| Error::Coordinator("no outputs".into()))?
+                    .as_f32()?
+                    .to_vec();
+                for (i, &node) in chunk.iter().enumerate() {
+                    results.push(SemiResult {
+                        node,
+                        head,
+                        output: flat[i * b.hidden..(i + 1) * b.hidden].to_vec(),
+                        modeled,
+                        wall,
+                    });
+                }
+            }
+        }
+        results.sort_by_key(|r| r.node);
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{fixed_size, generate};
+    use crate::runtime::Manifest;
+    use std::path::Path;
+
+    fn binding() -> GcnLayerBinding {
+        let doc = r#"{"version": 1, "artifacts": [
+            {"name": "gcn_layer_small", "file": "f", "inputs": [], "outputs": [],
+             "config": {"batch": 16, "sample": 4, "feature": 64,
+                        "hidden": 32, "table": 64}}]}"#;
+        let m = Manifest::parse(Path::new("/x"), doc).unwrap();
+        GcnLayerBinding::from_spec(m.get("gcn_layer_small").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn construction_validates_shapes() {
+        let g = generate::regular(48, 6, 3).unwrap();
+        let c = fixed_size(48, 8).unwrap();
+        let ok = SemiCoordinator::new(
+            binding(),
+            g.clone(),
+            c.clone(),
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 8),
+        );
+        assert!(ok.is_ok());
+        assert_eq!(ok.unwrap().num_heads(), 6);
+
+        // clustering mismatch
+        let bad = SemiCoordinator::new(
+            binding(),
+            g.clone(),
+            fixed_size(40, 8).unwrap(),
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 8),
+        );
+        assert!(bad.is_err());
+
+        // weight arity
+        let bad = SemiCoordinator::new(
+            binding(),
+            g,
+            c,
+            vec![0.0; 3],
+            &GnnWorkload::gcn("t", 64, 8),
+        );
+        assert!(bad.is_err());
+    }
+
+    // The `round` execution path needs built artifacts + a PJRT service;
+    // covered by rust/tests/serving.rs and examples/semi_decentralized.rs.
+}

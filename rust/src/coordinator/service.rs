@@ -1,0 +1,99 @@
+//! Inference service: a dedicated thread owning the PJRT client.
+//!
+//! PJRT handles are not `Send`, so the service thread *constructs* the
+//! [`ArtifactStore`] itself and everything XLA lives and dies on that
+//! thread; callers talk tensors over channels.  This mirrors the
+//! single-accelerator reality of an edge device: one compute engine,
+//! many requesters.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactStore, Tensor};
+
+enum Msg {
+    Infer { artifact: String, inputs: Vec<Tensor>, reply: Sender<Result<Vec<Tensor>>> },
+    /// Pre-compile an artifact (warm the executable cache).
+    Warm { artifact: String, reply: Sender<Result<()>> },
+    Shutdown,
+}
+
+/// Handle to the inference service thread.
+pub struct InferenceService {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for InferenceService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("InferenceService").finish()
+    }
+}
+
+impl InferenceService {
+    /// Start the service over an artifact directory.  Fails fast when the
+    /// manifest cannot be opened or the PJRT client cannot start.
+    pub fn start(artifact_dir: PathBuf) -> Result<InferenceService> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("ima-gnn-inference".into())
+            .spawn(move || {
+                let store = match ArtifactStore::open(&artifact_dir) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Infer { artifact, inputs, reply } => {
+                            let _ = reply.send(store.run(&artifact, &inputs));
+                        }
+                        Msg::Warm { artifact, reply } => {
+                            let _ = reply.send(store.load(&artifact).map(|_| ()));
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("cannot spawn service thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("service thread died during startup".into()))??;
+        Ok(InferenceService { tx, handle: Some(handle) })
+    }
+
+    /// Compile `artifact` now so later `infer` calls hit the cache.
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| Error::Coordinator("service thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("service thread gone".into()))?
+    }
+
+    /// Execute an artifact synchronously.
+    pub fn infer(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Infer { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| Error::Coordinator("service thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("service thread gone".into()))?
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Node-feature state store with double buffering (paper §2.3: IMA-GNN
+//! "is equipped with double buffering for feature data and graph data",
+//! overlapping programming with traversal).
+//!
+//! The *front* buffer serves reads (the crossbars' programmed contents);
+//! writes land in the *back* buffer; `swap()` flips them atomically at a
+//! round boundary — exactly the semantics the accelerator's buffer array
+//! provides, and what keeps a serving round consistent while the next
+//! round's features stream in.
+
+use crate::error::{Error, Result};
+
+/// Double-buffered per-node feature storage.
+#[derive(Debug, Clone)]
+pub struct FeatureStore {
+    num_nodes: usize,
+    feature_len: usize,
+    front: Vec<f32>,
+    back: Vec<f32>,
+    /// Which nodes have been written since the last swap.
+    dirty: Vec<bool>,
+    /// Round counter, bumped on swap.
+    version: u64,
+}
+
+impl FeatureStore {
+    pub fn new(num_nodes: usize, feature_len: usize) -> FeatureStore {
+        FeatureStore {
+            num_nodes,
+            feature_len,
+            front: vec![0.0; num_nodes * feature_len],
+            back: vec![0.0; num_nodes * feature_len],
+            dirty: vec![false; num_nodes],
+            version: 0,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn feature_len(&self) -> usize {
+        self.feature_len
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn check(&self, node: usize, len: usize) -> Result<()> {
+        if node >= self.num_nodes {
+            return Err(Error::Coordinator(format!(
+                "node {node} out of range ({} nodes)",
+                self.num_nodes
+            )));
+        }
+        if len != self.feature_len {
+            return Err(Error::Coordinator(format!(
+                "feature length {len} != store width {}",
+                self.feature_len
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read a node's current (front) features.
+    pub fn read(&self, node: usize) -> Result<&[f32]> {
+        self.check(node, self.feature_len)?;
+        let at = node * self.feature_len;
+        Ok(&self.front[at..at + self.feature_len])
+    }
+
+    /// Stage a node's next-round features into the back buffer.
+    pub fn write(&mut self, node: usize, features: &[f32]) -> Result<()> {
+        self.check(node, features.len())?;
+        let at = node * self.feature_len;
+        self.back[at..at + self.feature_len].copy_from_slice(features);
+        self.dirty[node] = true;
+        Ok(())
+    }
+
+    /// Nodes staged since the last swap.
+    pub fn pending(&self) -> usize {
+        self.dirty.iter().filter(|d| **d).count()
+    }
+
+    /// Flip buffers: staged writes become visible, untouched nodes keep
+    /// their previous values (carried forward).
+    pub fn swap(&mut self) {
+        for node in 0..self.num_nodes {
+            let at = node * self.feature_len;
+            if self.dirty[node] {
+                // staged value becomes current
+                let (f, b) = (&mut self.front, &self.back);
+                f[at..at + self.feature_len].copy_from_slice(&b[at..at + self.feature_len]);
+                self.dirty[node] = false;
+            }
+        }
+        self.version += 1;
+    }
+
+    /// Gather a batch of rows (front buffer) into a flat matrix.
+    pub fn gather(&self, nodes: &[usize]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(nodes.len() * self.feature_len);
+        for &n in nodes {
+            out.extend_from_slice(self.read(n)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn writes_are_invisible_until_swap() {
+        let mut s = FeatureStore::new(4, 3);
+        s.write(1, &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(s.read(1).unwrap(), &[0.0, 0.0, 0.0]);
+        assert_eq!(s.pending(), 1);
+        s.swap();
+        assert_eq!(s.read(1).unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.version(), 1);
+    }
+
+    #[test]
+    fn unwritten_nodes_carry_forward() {
+        let mut s = FeatureStore::new(2, 1);
+        s.write(0, &[5.0]).unwrap();
+        s.swap();
+        s.write(1, &[7.0]).unwrap();
+        s.swap();
+        assert_eq!(s.read(0).unwrap(), &[5.0]); // survived round 2
+        assert_eq!(s.read(1).unwrap(), &[7.0]);
+    }
+
+    #[test]
+    fn double_write_keeps_last() {
+        let mut s = FeatureStore::new(1, 1);
+        s.write(0, &[1.0]).unwrap();
+        s.write(0, &[2.0]).unwrap();
+        s.swap();
+        assert_eq!(s.read(0).unwrap(), &[2.0]);
+    }
+
+    #[test]
+    fn gather_concatenates_rows() {
+        let mut s = FeatureStore::new(3, 2);
+        s.write(0, &[1.0, 2.0]).unwrap();
+        s.write(2, &[5.0, 6.0]).unwrap();
+        s.swap();
+        assert_eq!(s.gather(&[2, 0]).unwrap(), vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn bounds_and_arity_checked() {
+        let mut s = FeatureStore::new(2, 2);
+        assert!(s.write(2, &[0.0, 0.0]).is_err());
+        assert!(s.write(0, &[0.0]).is_err());
+        assert!(s.read(5).is_err());
+        assert!(s.gather(&[0, 9]).is_err());
+    }
+
+    #[test]
+    fn property_swap_is_a_barrier() {
+        forall(16, |rng: &mut Rng| {
+            let n = rng.index(10) + 1;
+            let f = rng.index(5) + 1;
+            let mut s = FeatureStore::new(n, f);
+            let mut expected: Vec<Vec<f32>> = vec![vec![0.0; f]; n];
+            for _round in 0..3 {
+                let mut staged: Vec<Option<Vec<f32>>> = vec![None; n];
+                for _w in 0..rng.index(2 * n + 1) {
+                    let node = rng.index(n);
+                    let vals: Vec<f32> = (0..f).map(|_| rng.f64() as f32).collect();
+                    s.write(node, &vals).unwrap();
+                    staged[node] = Some(vals);
+                }
+                // reads during the round still see the old state
+                for node in 0..n {
+                    assert_eq!(s.read(node).unwrap(), &expected[node][..]);
+                }
+                s.swap();
+                for node in 0..n {
+                    if let Some(v) = staged[node].take() {
+                        expected[node] = v;
+                    }
+                    assert_eq!(s.read(node).unwrap(), &expected[node][..]);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,280 @@
+//! Request-trace generation and replay with latency percentiles.
+//!
+//! Serving quality at the edge is a tail-latency question, not a mean:
+//! this module generates Poisson (optionally diurnal) request traces,
+//! replays them through the size-or-deadline batching policy in virtual
+//! time (execution cost supplied by the caller — measured PJRT wall on the
+//! real path, a model in tests), and reports p50/p90/p99/max.
+
+use crate::error::{Error, Result};
+use crate::testing::Rng;
+use crate::units::Time;
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Mean request rate (requests/second).
+    pub rate_per_s: f64,
+    /// Trace length in seconds.
+    pub duration_s: f64,
+    /// Modulate the rate with a diurnal (sinusoidal) profile.
+    pub diurnal: bool,
+    /// Nodes requests target (uniform).
+    pub nodes: usize,
+    pub seed: u64,
+}
+
+/// One request arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub at: Time,
+    pub node: usize,
+}
+
+/// Generate a Poisson arrival trace (thinned when diurnal).
+pub fn generate_trace(cfg: &TraceConfig) -> Result<Vec<Arrival>> {
+    if !(cfg.rate_per_s > 0.0) || !(cfg.duration_s > 0.0) || cfg.nodes == 0 {
+        return Err(Error::Coordinator("trace needs positive rate/duration/nodes".into()));
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // exponential inter-arrival at the peak rate
+        let u = rng.f64().max(1e-12);
+        t += -u.ln() / cfg.rate_per_s;
+        if t >= cfg.duration_s {
+            break;
+        }
+        if cfg.diurnal {
+            // thinning: accept with the instantaneous relative intensity
+            let phase = t / cfg.duration_s * std::f64::consts::TAU;
+            let intensity = 0.5 * (1.0 + phase.sin()).clamp(0.0, 2.0) / 1.0;
+            if !rng.chance(intensity.min(1.0)) {
+                continue;
+            }
+        }
+        out.push(Arrival { at: Time::s(t), node: rng.index(cfg.nodes) });
+    }
+    Ok(out)
+}
+
+/// Latency distribution summary.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    sorted: Vec<Time>,
+}
+
+impl LatencyStats {
+    pub fn from_samples(mut samples: Vec<Time>) -> Result<LatencyStats> {
+        if samples.is_empty() {
+            return Err(Error::Coordinator("no latency samples".into()));
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(LatencyStats { sorted: samples })
+    }
+
+    pub fn count(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Quantile by nearest-rank (q in [0, 1]).
+    pub fn quantile(&self, q: f64) -> Time {
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((self.sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
+        self.sorted[idx.min(self.sorted.len() - 1)]
+    }
+
+    pub fn p50(&self) -> Time {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> Time {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> Time {
+        self.quantile(0.99)
+    }
+
+    pub fn max(&self) -> Time {
+        *self.sorted.last().unwrap()
+    }
+
+    pub fn mean(&self) -> Time {
+        self.sorted.iter().copied().sum::<Time>() * (1.0 / self.sorted.len() as f64)
+    }
+}
+
+/// Replay a trace through the size-or-deadline batching policy.
+///
+/// Virtual time: a batch closes when it reaches `max_batch` requests or
+/// when the next arrival (or trace end) passes the oldest member's
+/// deadline.  `exec` is charged per batch (its argument is the batch's
+/// node list; its result the execution duration — measured PJRT wall on
+/// the real path).  A request's latency = queueing wait + its batch's
+/// execution time.  The server is sequential: a batch cannot start before
+/// the previous one finished.
+pub fn replay_trace<F>(
+    trace: &[Arrival],
+    max_batch: usize,
+    max_wait: Time,
+    mut exec: F,
+) -> Result<LatencyStats>
+where
+    F: FnMut(&[usize]) -> Result<Time>,
+{
+    if max_batch == 0 {
+        return Err(Error::Coordinator("batch size must be > 0".into()));
+    }
+    if trace.is_empty() {
+        return Err(Error::Coordinator("empty trace".into()));
+    }
+    let mut latencies = Vec::with_capacity(trace.len());
+    let mut pending: Vec<Arrival> = Vec::with_capacity(max_batch);
+    let mut server_free = Time::ZERO;
+
+    let mut close = |pending: &mut Vec<Arrival>,
+                     close_at: Time,
+                     server_free: &mut Time,
+                     latencies: &mut Vec<Time>|
+     -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let nodes: Vec<usize> = pending.iter().map(|a| a.node).collect();
+        let start = close_at.max(*server_free);
+        let dur = exec(&nodes)?;
+        let done = start + dur;
+        *server_free = done;
+        for a in pending.drain(..) {
+            latencies.push(done - a.at);
+        }
+        Ok(())
+    };
+
+    for (i, a) in trace.iter().enumerate() {
+        // Deadline closes strictly before this arrival joins.
+        if let Some(oldest) = pending.first().map(|p| p.at) {
+            if a.at > oldest + max_wait {
+                let at = oldest + max_wait;
+                close(&mut pending, at, &mut server_free, &mut latencies)?;
+            }
+        }
+        pending.push(*a);
+        if pending.len() >= max_batch {
+            close(&mut pending, a.at, &mut server_free, &mut latencies)?;
+        }
+        let _ = i;
+    }
+    if let Some(oldest) = pending.first().map(|p| p.at) {
+        let at = oldest + max_wait;
+        close(&mut pending, at, &mut server_free, &mut latencies)?;
+    }
+    LatencyStats::from_samples(latencies)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_close;
+
+    fn cfg() -> TraceConfig {
+        TraceConfig { rate_per_s: 500.0, duration_s: 2.0, diurnal: false, nodes: 64, seed: 3 }
+    }
+
+    #[test]
+    fn trace_has_poisson_like_rate_and_sorted_arrivals() {
+        let t = generate_trace(&cfg()).unwrap();
+        let expected = 500.0 * 2.0;
+        assert!(
+            (t.len() as f64 - expected).abs() < 0.15 * expected,
+            "got {} arrivals, expected ~{expected}",
+            t.len()
+        );
+        assert!(t.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(t.iter().all(|a| a.node < 64));
+    }
+
+    #[test]
+    fn diurnal_thinning_reduces_volume_deterministically() {
+        let base = generate_trace(&cfg()).unwrap();
+        let diurnal =
+            generate_trace(&TraceConfig { diurnal: true, ..cfg() }).unwrap();
+        assert!(diurnal.len() < base.len());
+        let again = generate_trace(&TraceConfig { diurnal: true, ..cfg() }).unwrap();
+        assert_eq!(diurnal.len(), again.len());
+    }
+
+    #[test]
+    fn trace_rejects_bad_configs() {
+        assert!(generate_trace(&TraceConfig { rate_per_s: 0.0, ..cfg() }).is_err());
+        assert!(generate_trace(&TraceConfig { nodes: 0, ..cfg() }).is_err());
+    }
+
+    #[test]
+    fn stats_quantiles_nearest_rank() {
+        let s = LatencyStats::from_samples(
+            (1..=100).map(|i| Time::ms(i as f64)).collect(),
+        )
+        .unwrap();
+        assert_close(s.p50().as_ms(), 50.0, 1e-12);
+        assert_close(s.p90().as_ms(), 90.0, 1e-12);
+        assert_close(s.p99().as_ms(), 99.0, 1e-12);
+        assert_close(s.max().as_ms(), 100.0, 1e-12);
+        assert_close(s.mean().as_ms(), 50.5, 1e-12);
+        assert!(LatencyStats::from_samples(vec![]).is_err());
+    }
+
+    #[test]
+    fn replay_full_batches_have_no_deadline_wait() {
+        // 8 arrivals at t=0, batch 4, instant server -> latency = exec only.
+        let trace: Vec<Arrival> =
+            (0..8).map(|i| Arrival { at: Time::ZERO, node: i }).collect();
+        let stats = replay_trace(&trace, 4, Time::ms(100.0), |nodes| {
+            assert_eq!(nodes.len(), 4);
+            Ok(Time::ms(2.0))
+        })
+        .unwrap();
+        assert_eq!(stats.count(), 8);
+        // first batch: 2 ms; second waits for the server: 4 ms.
+        assert_close(stats.p50().as_ms(), 2.0, 1e-9);
+        assert_close(stats.max().as_ms(), 4.0, 1e-9);
+    }
+
+    #[test]
+    fn replay_deadline_closes_partial_batches() {
+        let trace = vec![
+            Arrival { at: Time::ZERO, node: 0 },
+            Arrival { at: Time::ms(500.0), node: 1 },
+        ];
+        let stats = replay_trace(&trace, 64, Time::ms(10.0), |nodes| {
+            assert_eq!(nodes.len(), 1);
+            Ok(Time::ms(1.0))
+        })
+        .unwrap();
+        // each waits its own 10 ms deadline + 1 ms exec
+        assert_close(stats.max().as_ms(), 11.0, 1e-9);
+        assert_eq!(stats.count(), 2);
+    }
+
+    #[test]
+    fn replay_overload_grows_queueing_delay() {
+        // 1000 req/s into a server needing 4 ms per 2-batch: overloaded 2x.
+        let trace: Vec<Arrival> = (0..200)
+            .map(|i| Arrival { at: Time::ms(i as f64), node: 0 })
+            .collect();
+        let light = replay_trace(&trace[..50], 2, Time::ms(1.0), |_| Ok(Time::ms(1.0)))
+            .unwrap();
+        let heavy =
+            replay_trace(&trace, 2, Time::ms(1.0), |_| Ok(Time::ms(4.0))).unwrap();
+        assert!(heavy.p99() > light.p99() * 4.0, "queueing must dominate under overload");
+    }
+
+    #[test]
+    fn replay_rejects_degenerate_inputs() {
+        let trace = vec![Arrival { at: Time::ZERO, node: 0 }];
+        assert!(replay_trace(&[], 4, Time::ZERO, |_| Ok(Time::ZERO)).is_err());
+        assert!(replay_trace(&trace, 0, Time::ZERO, |_| Ok(Time::ZERO)).is_err());
+    }
+}

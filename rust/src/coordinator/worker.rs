@@ -1,0 +1,257 @@
+//! Decentralized workers (paper Fig. 4(b)): one thread per edge device,
+//! exchanging feature messages with the adjacent nodes of its cluster over
+//! channels, then computing locally on the functional crossbar cores.
+//!
+//! The threads do *real* message passing (so the dataflow and results are
+//! genuine); the edge-network latencies are accounted with the calibrated
+//! model (Eq. 4) since wall-clock channel hops are not radio hops.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use crate::config::presets;
+use crate::cores::{AggregationCore, FeatureExtractionCore};
+use crate::error::{Error, Result};
+use crate::graph::Clustering;
+use crate::netmodel::{NetModel, Setting, Topology};
+use crate::units::Time;
+
+/// Result of one device's round.
+#[derive(Debug, Clone)]
+pub struct DeviceResult {
+    pub device: usize,
+    /// Hidden embedding computed from the cluster's features.
+    pub output: Vec<i64>,
+    /// Peers whose messages were aggregated (cluster size - 1).
+    pub peers: usize,
+    /// Modeled edge latency (Eq. 1 decentralized, per device).
+    pub modeled: Time,
+    /// Wall-clock the device thread actually spent.
+    pub wall: Duration,
+}
+
+/// Quantize float features to unsigned 8-bit DAC codes with a shared scale.
+fn quantize_codes(features: &[f32], scale: f32) -> Vec<u32> {
+    features.iter().map(|&f| ((f / scale).clamp(0.0, 255.0)) as u32).collect()
+}
+
+/// Per-device compute: mean-aggregate own + peer features on the
+/// aggregation crossbar, transform through the feature-extraction
+/// crossbar.  Returns the quantized embedding.
+fn device_compute(
+    own: &[f32],
+    peers: &[Vec<f32>],
+    weights: &[i32],
+    fe_out: usize,
+    scale: f32,
+) -> Result<Vec<i64>> {
+    let cfg = presets::decentralized();
+    let mut agg = AggregationCore::new(cfg.aggregation, cfg.device.clone())?;
+    let mut fe = FeatureExtractionCore::new(cfg.feature, cfg.device)?;
+
+    let feature_len = own.len();
+    // Quantize each contributor to 4-bit signed levels for the crossbar
+    // rows (the node-stationary feature window).
+    let level = |f: f32| ((f / scale * 7.0).clamp(-8.0, 7.0)) as i32;
+    let mut rows: Vec<Vec<i32>> = Vec::with_capacity(peers.len() + 1);
+    rows.push(own.iter().map(|&f| level(f)).collect());
+    for p in peers {
+        if p.len() != feature_len {
+            return Err(Error::Coordinator("peer feature length mismatch".into()));
+        }
+        rows.push(p.iter().map(|&f| level(f)).collect());
+    }
+    let active = vec![true; rows.len()];
+    let sums = agg.aggregate(&rows, &active)?;
+
+    // Mean → 8-bit DAC codes for the transform.
+    let n = rows.len() as f32;
+    let mean: Vec<f32> = sums.iter().map(|&s| s as f32 / n).collect();
+    let codes = quantize_codes(&mean, 7.0 / 255.0 * 8.0);
+
+    let fe_in = codes.len().min(128);
+    fe.program_weights(weights, fe_in, fe_out)?;
+    fe.transform(&codes[..fe_in], fe_out)
+}
+
+/// Run one decentralized round: every device broadcasts its features to
+/// its cluster peers, aggregates what it receives, and computes locally.
+///
+/// `features[d]` are device d's local features; clusters come from
+/// `clustering`; `weights` is the shared `fe_in × fe_out` quantized layer.
+pub fn run_decentralized(
+    features: &[Vec<f32>],
+    clustering: &Clustering,
+    weights: Vec<i32>,
+    fe_out: usize,
+    model: &NetModel,
+) -> Result<Vec<DeviceResult>> {
+    let n = features.len();
+    if clustering.assignment.len() != n {
+        return Err(Error::Coordinator("clustering does not cover all devices".into()));
+    }
+    let feature_len = features.first().map(Vec::len).unwrap_or(0);
+    if features.iter().any(|f| f.len() != feature_len) {
+        return Err(Error::Coordinator("ragged device features".into()));
+    }
+    let scale = features
+        .iter()
+        .flat_map(|f| f.iter())
+        .fold(1e-6f32, |m, &v| m.max(v.abs()));
+
+    // Channel fabric: one receiver per device, senders cloned to peers.
+    let mut senders: Vec<Sender<(usize, Vec<f32>)>> = Vec::with_capacity(n);
+    let mut receivers: Vec<Option<Receiver<(usize, Vec<f32>)>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(Some(rx));
+    }
+
+    let mut handles = Vec::with_capacity(n);
+    for device in 0..n {
+        let cluster_id = clustering.assignment[device];
+        let peers: Vec<usize> = clustering.clusters[cluster_id]
+            .iter()
+            .copied()
+            .filter(|&p| p != device)
+            .collect();
+        let peer_txs: HashMap<usize, Sender<(usize, Vec<f32>)>> =
+            peers.iter().map(|&p| (p, senders[p].clone())).collect();
+        let rx = receivers[device].take().expect("receiver taken once");
+        let own = features[device].clone();
+        let weights = weights.clone();
+        let cs = peers.len();
+        let modeled = model
+            .latency(Setting::Decentralized, Topology { nodes: n, cluster_size: cs.max(1) })
+            .total();
+
+        handles.push(std::thread::spawn(move || -> Result<DeviceResult> {
+            let t0 = Instant::now();
+            // Phase 1: broadcast to cluster peers.
+            for (&p, tx) in &peer_txs {
+                tx.send((device, own.clone()))
+                    .map_err(|_| Error::Coordinator(format!("peer {p} hung up")))?;
+            }
+            drop(peer_txs);
+            // Phase 2: collect exactly one message from every peer.
+            let mut inbox: Vec<(usize, Vec<f32>)> = Vec::with_capacity(cs);
+            for _ in 0..cs {
+                let msg = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .map_err(|e| Error::Coordinator(format!("device {device} recv: {e}")))?;
+                inbox.push(msg);
+            }
+            // Deterministic aggregation order regardless of arrival.
+            inbox.sort_by_key(|(from, _)| *from);
+            let peer_feats: Vec<Vec<f32>> = inbox.into_iter().map(|(_, f)| f).collect();
+            // Phase 3: local crossbar compute.
+            let output = device_compute(&own, &peer_feats, &weights, fe_out, scale)?;
+            Ok(DeviceResult { device, output, peers: cs, modeled, wall: t0.elapsed() })
+        }));
+    }
+    drop(senders);
+
+    let mut results = Vec::with_capacity(n);
+    for h in handles {
+        results.push(h.join().map_err(|_| Error::Coordinator("worker panicked".into()))??);
+    }
+    results.sort_by_key(|r| r.device);
+    Ok(results)
+}
+
+/// Single-threaded oracle of `run_decentralized` (same math, no threads) —
+/// used by tests to pin the concurrent implementation.
+pub fn run_decentralized_oracle(
+    features: &[Vec<f32>],
+    clustering: &Clustering,
+    weights: &[i32],
+    fe_out: usize,
+) -> Result<Vec<Vec<i64>>> {
+    let scale = features
+        .iter()
+        .flat_map(|f| f.iter())
+        .fold(1e-6f32, |m, &v| m.max(v.abs()));
+    let mut out = Vec::with_capacity(features.len());
+    for device in 0..features.len() {
+        let cid = clustering.assignment[device];
+        let peer_feats: Vec<Vec<f32>> = clustering.clusters[cid]
+            .iter()
+            .copied()
+            .filter(|&p| p != device)
+            .map(|p| features[p].clone())
+            .collect();
+        out.push(device_compute(&features[device], &peer_feats, weights, fe_out, scale)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::GnnWorkload;
+    use crate::graph::fixed_size;
+    use crate::testing::Rng;
+
+    fn setup(
+        n: usize,
+        cs: usize,
+        feat: usize,
+        fe_out: usize,
+    ) -> (Vec<Vec<f32>>, Clustering, Vec<i32>, NetModel) {
+        let mut rng = Rng::new(11);
+        let features: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..feat).map(|_| rng.f64_in(0.0, 1.0) as f32).collect()).collect();
+        let clustering = fixed_size(n, cs).unwrap();
+        let weights: Vec<i32> = (0..feat * fe_out).map(|_| rng.i64_in(-8, 7) as i32).collect();
+        let model = NetModel::paper(&GnnWorkload::gcn("t", feat, cs)).unwrap();
+        (features, clustering, weights, model)
+    }
+
+    #[test]
+    fn workers_match_single_threaded_oracle() {
+        let (features, clustering, weights, model) = setup(12, 4, 16, 8);
+        let got = run_decentralized(&features, &clustering, weights.clone(), 8, &model).unwrap();
+        let want = run_decentralized_oracle(&features, &clustering, &weights, 8).unwrap();
+        assert_eq!(got.len(), 12);
+        for r in &got {
+            assert_eq!(r.output, want[r.device], "device {}", r.device);
+            assert_eq!(r.peers, 3);
+            assert!(r.modeled > crate::units::Time::ZERO);
+        }
+    }
+
+    #[test]
+    fn results_are_deterministic_across_runs() {
+        let (features, clustering, weights, model) = setup(9, 3, 8, 4);
+        let a = run_decentralized(&features, &clustering, weights.clone(), 4, &model).unwrap();
+        let b = run_decentralized(&features, &clustering, weights, 4, &model).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.output, y.output);
+        }
+    }
+
+    #[test]
+    fn isolated_devices_compute_from_self_only() {
+        let (features, clustering, weights, model) = setup(3, 1, 8, 4);
+        let got = run_decentralized(&features, &clustering, weights, 4, &model).unwrap();
+        for r in &got {
+            assert_eq!(r.peers, 0);
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_inputs() {
+        let (mut features, clustering, weights, model) = setup(6, 2, 8, 4);
+        features[3] = vec![0.0; 5];
+        assert!(run_decentralized(&features, &clustering, weights, 4, &model).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_clustering() {
+        let (features, _, weights, model) = setup(6, 2, 8, 4);
+        let wrong = fixed_size(5, 2).unwrap();
+        assert!(run_decentralized(&features, &wrong, weights, 4, &model).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Feature-extraction core: MVM crossbars programmed with the GNN layer
+//! weights plus a shared activation unit (paper Fig. 2(a), step 4).
+//!
+//! The aggregated representation Z streams through bit-serial passes
+//! against the stationary weight matrix; the activation unit applies the
+//! non-linearity once per node.
+
+use crate::config::{CoreConfig, DeviceParams};
+use crate::crossbar::MvmCrossbar;
+use crate::device::Activation;
+use crate::error::{Error, Result};
+use crate::units::{Energy, Time};
+
+use super::workload::GnnWorkload;
+
+/// The feature-extraction core.
+#[derive(Debug)]
+pub struct FeatureExtractionCore {
+    config: CoreConfig,
+    device: DeviceParams,
+    xbar: MvmCrossbar,
+}
+
+impl FeatureExtractionCore {
+    pub fn new(config: CoreConfig, device: DeviceParams) -> Result<FeatureExtractionCore> {
+        config.validate()?;
+        Ok(FeatureExtractionCore {
+            xbar: MvmCrossbar::new(config.geometry, device.clone())?,
+            config,
+            device,
+        })
+    }
+
+    pub fn config(&self) -> &CoreConfig {
+        &self.config
+    }
+
+    /// Evaluate passes for one node: input bit-planes × column groups to
+    /// cover the bit-sliced weight matrix × row windows to cover the input
+    /// dimension × layers.
+    pub fn passes_per_node(&self, w: &GnnWorkload) -> usize {
+        let g = &self.config.geometry;
+        let col_groups = w.fe_weight_cells(g.cell_bits).div_ceil(g.cols).max(1);
+        let row_windows = w.fe_in.div_ceil(g.rows).max(1);
+        g.input_bits as usize * col_groups * row_windows * w.fe_layers
+    }
+
+    /// Per-node transformation latency (t₃ of Eq. 2): passes + one
+    /// activation-unit application.
+    pub fn per_node_latency(&self, w: &GnnWorkload) -> Time {
+        self.xbar.pass_latency() * self.passes_per_node(w) as f64
+            + Activation::new(&self.device).latency()
+    }
+
+    /// Per-node transformation dynamic energy.
+    pub fn per_node_energy(&self, w: &GnnWorkload) -> Energy {
+        self.xbar.pass_energy() * self.passes_per_node(w) as f64
+            + Activation::new(&self.device).energy()
+    }
+
+    /// Program the layer weights (row-major `fe_in × fe_out` levels).
+    pub fn program_weights(&mut self, weights: &[i32], fe_in: usize, fe_out: usize) -> Result<()> {
+        self.xbar.program_tile(weights, fe_in, fe_out)
+    }
+
+    /// Functional transform: `relu(x @ W)` in the quantized domain.
+    /// `input` are unsigned DAC codes of the aggregated features.
+    pub fn transform(&self, input: &[u32], fe_out: usize) -> Result<Vec<i64>> {
+        let g = self.config.geometry;
+        if input.len() > g.rows {
+            return Err(Error::Hardware(format!(
+                "{} inputs exceed {} crossbar rows",
+                input.len(),
+                g.rows
+            )));
+        }
+        let mut padded = vec![0u32; g.rows];
+        padded[..input.len()].copy_from_slice(input);
+        let out = self.xbar.evaluate(&padded)?;
+        // Activation unit: ReLU.
+        Ok(out[..fe_out.min(g.cols)].iter().map(|&v| v.max(0)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::testing::{forall, Rng};
+
+    fn core() -> FeatureExtractionCore {
+        let cfg = presets::decentralized();
+        FeatureExtractionCore::new(cfg.feature, cfg.device).unwrap()
+    }
+
+    #[test]
+    fn taxi_passes_match_calibration() {
+        // 8 input bits × 2 column groups × 1 row window × 1 layer = 16.
+        assert_eq!(core().passes_per_node(&GnnWorkload::taxi()), 16);
+    }
+
+    #[test]
+    fn taxi_latency_is_table1_t3() {
+        let t = core().per_node_latency(&GnnWorkload::taxi());
+        crate::testing::assert_close(t.as_us(), 0.37, 0.001);
+    }
+
+    #[test]
+    fn taxi_power_is_table1() {
+        let c = core();
+        let w = GnnWorkload::taxi();
+        let p = c.per_node_energy(&w) / c.per_node_latency(&w);
+        crate::testing::assert_close(p.as_mw(), 3.68, 0.001);
+    }
+
+    #[test]
+    fn wide_inputs_need_row_windows() {
+        let c = core();
+        let mut w = GnnWorkload::taxi();
+        let base = c.passes_per_node(&w);
+        w.fe_in = 1433; // Cora features: ceil(1433/128) = 12 windows
+        assert_eq!(c.passes_per_node(&w), base * 12);
+    }
+
+    #[test]
+    fn transform_is_relu_of_matmul() {
+        let mut c = core();
+        // W = [[1, -2], [3, 4]] (2 in, 2 out)
+        c.program_weights(&[1, -2, 3, 4], 2, 2).unwrap();
+        let out = c.transform(&[5, 1], 2).unwrap();
+        // x@W = [5+3, -10+4] = [8, -6] → relu → [8, 0]
+        assert_eq!(out, vec![8, 0]);
+    }
+
+    #[test]
+    fn property_transform_matches_oracle() {
+        forall(16, |rng: &mut Rng| {
+            let fin = rng.index(16) + 1;
+            let fout = rng.index(8) + 1;
+            let weights: Vec<i32> =
+                (0..fin * fout).map(|_| rng.i64_in(-8, 7) as i32).collect();
+            let input: Vec<u32> = (0..fin).map(|_| rng.u64_in(0, 255) as u32).collect();
+            let mut c = core();
+            c.program_weights(&weights, fin, fout).unwrap();
+            let got = c.transform(&input, fout).unwrap();
+            for o in 0..fout {
+                let raw: i64 = (0..fin)
+                    .map(|i| input[i] as i64 * weights[i * fout + o] as i64)
+                    .sum();
+                assert_eq!(got[o], raw.max(0), "col {o}");
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_oversized_input() {
+        let c = core();
+        assert!(c.transform(&vec![0u32; 129], 4).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Weight/feature mapper: places a logical matrix onto a bank of physical
+//! crossbars and derives the execution schedule.
+//!
+//! The paper's cores are *banks* (2K / 1K / 256 crossbars); turning a GNN
+//! layer into crossbar passes requires deciding which tile of the weight
+//! (or feature) matrix lives in which crossbar and which tiles execute in
+//! parallel.  This is the PUMA-style compilation step the latency model's
+//! `passes_per_node` abstracts; the mapper makes it explicit, checkable
+//! and reusable by the scaling study.
+
+use crate::config::CrossbarGeometry;
+use crate::error::{Error, Result};
+use crate::units::Time;
+
+/// One tile of the logical matrix placed on a physical crossbar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileAssignment {
+    /// Physical crossbar index within the bank.
+    pub crossbar: usize,
+    /// Execution round (tiles in the same round run in parallel).
+    pub round: usize,
+    /// Logical origin of the tile.
+    pub row0: usize,
+    pub col0: usize,
+    /// Tile extent (≤ geometry).
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// A complete placement + schedule.
+#[derive(Debug, Clone)]
+pub struct MappingPlan {
+    pub geometry: CrossbarGeometry,
+    pub tiles: Vec<TileAssignment>,
+    /// Crossbars actually used (≤ bank size).
+    pub crossbars_used: usize,
+    /// Sequential rounds needed (1 = fully parallel).
+    pub rounds: usize,
+    /// Logical matrix extent.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl MappingPlan {
+    /// Fraction of programmed cells that hold real data.
+    pub fn utilization(&self) -> f64 {
+        let used: usize = self.tiles.iter().map(|t| t.rows * t.cols).sum();
+        let programmed = self.tiles.len() * self.geometry.cells();
+        used as f64 / programmed as f64
+    }
+
+    /// Schedule latency: rounds × bit-serial pass stack on one crossbar.
+    pub fn latency(&self, pass_latency: Time, input_bits: u32) -> Time {
+        pass_latency * (self.rounds as f64) * input_bits as f64
+    }
+
+    /// Every logical cell is covered by exactly one tile.
+    pub fn validate(&self) -> Result<()> {
+        let mut covered = vec![false; self.rows * self.cols];
+        for t in &self.tiles {
+            if t.rows > self.geometry.rows || t.cols > self.geometry.cols {
+                return Err(Error::Hardware("tile exceeds crossbar geometry".into()));
+            }
+            for r in t.row0..t.row0 + t.rows {
+                for c in t.col0..t.col0 + t.cols {
+                    if r >= self.rows || c >= self.cols {
+                        return Err(Error::Hardware(format!(
+                            "tile spills outside the matrix at ({r}, {c})"
+                        )));
+                    }
+                    let idx = r * self.cols + c;
+                    if covered[idx] {
+                        return Err(Error::Hardware(format!("cell ({r}, {c}) covered twice")));
+                    }
+                    covered[idx] = true;
+                }
+            }
+        }
+        if !covered.iter().all(|&c| c) {
+            return Err(Error::Hardware("uncovered cells in mapping".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Map a logical `rows × cols` matrix onto a bank of `bank` crossbars.
+///
+/// Tiles are cut geometry-sized, assigned round-robin across the bank;
+/// tile `i` runs in round `i / bank` — the greedy schedule that both
+/// maximizes parallelism and matches the scaling study's saturation point
+/// (no gain once `bank >= tiles`).
+pub fn map_matrix(
+    rows: usize,
+    cols: usize,
+    geometry: CrossbarGeometry,
+    bank: usize,
+) -> Result<MappingPlan> {
+    geometry.validate()?;
+    if rows == 0 || cols == 0 {
+        return Err(Error::Hardware("cannot map an empty matrix".into()));
+    }
+    if bank == 0 {
+        return Err(Error::Hardware("bank needs at least one crossbar".into()));
+    }
+    let mut tiles = Vec::new();
+    let mut i = 0usize;
+    for row0 in (0..rows).step_by(geometry.rows) {
+        for col0 in (0..cols).step_by(geometry.cols) {
+            tiles.push(TileAssignment {
+                crossbar: i % bank,
+                round: i / bank,
+                row0,
+                col0,
+                rows: geometry.rows.min(rows - row0),
+                cols: geometry.cols.min(cols - col0),
+            });
+            i += 1;
+        }
+    }
+    let crossbars_used = tiles.len().min(bank);
+    let rounds = tiles.len().div_ceil(bank);
+    let plan = MappingPlan { geometry, tiles, crossbars_used, rounds, rows, cols };
+    plan.validate()?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceParams;
+    use crate::crossbar::MvmCrossbar;
+    use crate::testing::{forall, Rng};
+
+    fn geo(r: usize, c: usize) -> CrossbarGeometry {
+        CrossbarGeometry::new(r, c)
+    }
+
+    #[test]
+    fn exact_fit_uses_one_tile() {
+        let p = map_matrix(512, 512, geo(512, 512), 4).unwrap();
+        assert_eq!(p.tiles.len(), 1);
+        assert_eq!(p.rounds, 1);
+        assert_eq!(p.crossbars_used, 1);
+        assert!((p.utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn taxi_features_need_four_tiles() {
+        // 1728 feature cells over 512-column crossbars (10 neighbor rows).
+        let p = map_matrix(10, 1728, geo(512, 512), 1).unwrap();
+        assert_eq!(p.tiles.len(), 4);
+        assert_eq!(p.rounds, 4); // one crossbar → sequential
+        let p4 = map_matrix(10, 1728, geo(512, 512), 4).unwrap();
+        assert_eq!(p4.rounds, 1); // four crossbars → parallel
+        let p8 = map_matrix(10, 1728, geo(512, 512), 8).unwrap();
+        assert_eq!(p8.rounds, 1, "saturation: extra crossbars don't help");
+        assert_eq!(p8.crossbars_used, 4);
+    }
+
+    #[test]
+    fn schedule_latency_follows_rounds() {
+        let xbar = MvmCrossbar::new(geo(512, 512), DeviceParams::default_45nm()).unwrap();
+        let seq = map_matrix(10, 1728, geo(512, 512), 1).unwrap();
+        let par = map_matrix(10, 1728, geo(512, 512), 4).unwrap();
+        let t_seq = seq.latency(xbar.pass_latency(), 1);
+        let t_par = par.latency(xbar.pass_latency(), 1);
+        crate::testing::assert_close(t_seq / t_par, 4.0, 1e-12);
+    }
+
+    #[test]
+    fn ragged_edges_lower_utilization() {
+        let p = map_matrix(513, 513, geo(512, 512), 8).unwrap();
+        assert_eq!(p.tiles.len(), 4);
+        assert!(p.utilization() < 0.3, "corner tiles are nearly empty");
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn property_full_single_coverage() {
+        forall(32, |rng: &mut Rng| {
+            let rows = rng.index(300) + 1;
+            let cols = rng.index(300) + 1;
+            let g = geo(rng.index(96) + 8, rng.index(96) + 8);
+            let bank = rng.index(8) + 1;
+            let p = map_matrix(rows, cols, g, bank).unwrap();
+            p.validate().unwrap(); // exact single coverage
+            assert!(p.crossbars_used <= bank);
+            assert_eq!(
+                p.rounds,
+                p.tiles.len().div_ceil(bank),
+                "greedy round-robin schedule"
+            );
+            // every round except the last is full
+            for round in 0..p.rounds.saturating_sub(1) {
+                let in_round = p.tiles.iter().filter(|t| t.round == round).count();
+                assert_eq!(in_round, bank.min(p.tiles.len()));
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(map_matrix(0, 5, geo(8, 8), 1).is_err());
+        assert!(map_matrix(5, 5, geo(8, 8), 0).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! The IMA-GNN accelerator: traversal + aggregation + feature-extraction
+//! cores (paper Fig. 2(a)) and their per-node compute roll-up.
+//!
+//! `Accelerator::per_node(workload)` yields the t₁/t₂/t₃ latencies and
+//! per-core energies that §3's network model composes into Eqs. (2)–(3);
+//! with the paper presets and the taxi workload the values reproduce
+//! Table 1 (see tests).
+
+mod aggregation;
+mod feature;
+mod mapper;
+mod scheduler;
+mod traversal;
+mod workload;
+
+pub use aggregation::AggregationCore;
+pub use feature::FeatureExtractionCore;
+pub use mapper::{map_matrix, MappingPlan, TileAssignment};
+pub use scheduler::VectorScheduler;
+pub use traversal::TraversalCore;
+pub use workload::GnnWorkload;
+
+use crate::config::AcceleratorConfig;
+use crate::error::Result;
+use crate::units::{Energy, Power, Time};
+
+/// Per-node compute figures for one workload on one accelerator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreBreakdown {
+    /// Traversal latency t₁ / aggregation t₂ / feature extraction t₃.
+    pub t1: Time,
+    pub t2: Time,
+    pub t3: Time,
+    /// Per-core dynamic energies for one node.
+    pub e1: Energy,
+    pub e2: Energy,
+    pub e3: Energy,
+}
+
+impl CoreBreakdown {
+    /// Sequential per-node compute latency (Eq. 2, decentralized).
+    pub fn total_latency(&self) -> Time {
+        self.t1 + self.t2 + self.t3
+    }
+
+    /// Per-node compute latency with the paper's §2.3 overlap: the
+    /// aggregation and feature-extraction cores work in parallel, so the
+    /// slower of the two hides the faster (ablation knob, not Table 1).
+    pub fn overlapped_latency(&self) -> Time {
+        self.t1 + self.t2.max(self.t3)
+    }
+
+    pub fn total_energy(&self) -> Energy {
+        self.e1 + self.e2 + self.e3
+    }
+
+    /// Average per-core powers while streaming nodes back to back.
+    pub fn powers(&self) -> (Power, Power, Power) {
+        (self.e1 / self.t1, self.e2 / self.t2, self.e3 / self.t3)
+    }
+
+    /// Net computation power — the sum of the three cores' average powers,
+    /// which is how Table 1's "Computation (Net)" row composes
+    /// (0.21 + 41.6 + 3.68 = 45.49 mW).
+    pub fn net_power(&self) -> Power {
+        let (p1, p2, p3) = self.powers();
+        p1 + p2 + p3
+    }
+}
+
+/// The assembled accelerator.
+#[derive(Debug)]
+pub struct Accelerator {
+    config: AcceleratorConfig,
+    pub traversal: TraversalCore,
+    pub aggregation: AggregationCore,
+    pub feature: FeatureExtractionCore,
+}
+
+impl Accelerator {
+    pub fn new(config: AcceleratorConfig) -> Result<Accelerator> {
+        config.validate()?;
+        Ok(Accelerator {
+            traversal: TraversalCore::new(config.traversal, config.device.clone())?,
+            aggregation: AggregationCore::new(config.aggregation, config.device.clone())?,
+            feature: FeatureExtractionCore::new(config.feature, config.device.clone())?,
+            config,
+        })
+    }
+
+    pub fn config(&self) -> &AcceleratorConfig {
+        &self.config
+    }
+
+    /// Per-node compute breakdown for `workload`.
+    pub fn per_node(&self, workload: &GnnWorkload) -> CoreBreakdown {
+        CoreBreakdown {
+            t1: self.traversal.per_node_latency(),
+            t2: self.aggregation.per_node_latency(workload),
+            t3: self.feature.per_node_latency(workload),
+            e1: self.traversal.per_node_energy(),
+            e2: self.aggregation.per_node_energy(workload),
+            e3: self.feature.per_node_energy(workload),
+        }
+    }
+
+    /// A scheduler matched to the aggregation crossbar's row count.
+    pub fn scheduler(&self) -> VectorScheduler {
+        VectorScheduler::new(self.config.aggregation.geometry.rows)
+            .expect("validated geometry has rows > 0")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::testing::assert_close;
+
+    /// E1 calibration: the decentralized column of Table 1.
+    #[test]
+    fn table1_decentralized_column() {
+        let acc = Accelerator::new(presets::decentralized()).unwrap();
+        let b = acc.per_node(&GnnWorkload::taxi());
+        // Latencies: 7.68 ns / 14.27 µs / 0.37 µs, net 14.6 µs.
+        assert_close(b.t1.as_ns(), 7.68, 0.005);
+        assert_close(b.t2.as_us(), 14.27, 0.005);
+        assert_close(b.t3.as_us(), 0.37, 0.005);
+        assert_close(b.total_latency().as_us(), 14.65, 0.005);
+        // Powers: 0.21 / 41.6 / 3.68 mW, net 45.49 mW.
+        let (p1, p2, p3) = b.powers();
+        assert_close(p1.as_mw(), 0.21, 0.005);
+        assert_close(p2.as_mw(), 41.6, 0.005);
+        assert_close(p3.as_mw(), 3.68, 0.005);
+        assert_close(b.net_power().as_mw(), 45.49, 0.02);
+    }
+
+    #[test]
+    fn per_node_figures_do_not_depend_on_bank_size() {
+        // t₁/t₂/t₃ are single-crossbar figures; the centralized setting has
+        // more crossbars but each works the same — Eq. 3 divides by Mᵢ at
+        // the network level instead.
+        let cent = Accelerator::new(presets::centralized()).unwrap();
+        let dec = Accelerator::new(presets::decentralized()).unwrap();
+        let w = GnnWorkload::taxi();
+        assert_eq!(cent.per_node(&w).t2, dec.per_node(&w).t2);
+        assert_eq!(cent.per_node(&w).t1, dec.per_node(&w).t1);
+        assert_eq!(cent.per_node(&w).t3, dec.per_node(&w).t3);
+    }
+
+    #[test]
+    fn overlap_hides_the_faster_core() {
+        let acc = Accelerator::new(presets::decentralized()).unwrap();
+        let b = acc.per_node(&GnnWorkload::taxi());
+        assert!(b.overlapped_latency() < b.total_latency());
+        assert_close(
+            b.overlapped_latency().as_us(),
+            (b.t1 + b.t2).as_us(), // t2 > t3 for taxi
+            1e-9,
+        );
+    }
+
+    #[test]
+    fn aggregation_dominates_latency_and_power() {
+        // Paper §4.2: "The aggregation core ... consumes most of the power
+        // in both settings as well as the highest latency."
+        let acc = Accelerator::new(presets::decentralized()).unwrap();
+        let b = acc.per_node(&GnnWorkload::taxi());
+        assert!(b.t2 > b.t1 && b.t2 > b.t3);
+        let (p1, p2, p3) = b.powers();
+        assert!(p2 > p1 && p2 > p3);
+    }
+
+    #[test]
+    fn scheduler_window_matches_aggregation_rows() {
+        let acc = Accelerator::new(presets::decentralized()).unwrap();
+        assert_eq!(acc.scheduler().num_windows(513), 2);
+    }
+}

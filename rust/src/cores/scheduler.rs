@@ -1,0 +1,131 @@
+//! Vector generator & scheduler (paper Fig. 2(a), step 2).
+//!
+//! Sits between the traversal core and the aggregation core: receives the
+//! scan-CAM result (source nodes with edges into the destination) and
+//! renders the binary row-activation vectors for the aggregation crossbar,
+//! window by window under the node-stationary placement.
+
+use crate::error::{Error, Result};
+
+/// Maps graph nodes to aggregation-crossbar rows within windows of
+/// `rows` nodes and renders activation vectors.
+#[derive(Debug, Clone)]
+pub struct VectorScheduler {
+    /// Crossbar row count (window size).
+    rows: usize,
+}
+
+impl VectorScheduler {
+    pub fn new(rows: usize) -> Result<VectorScheduler> {
+        if rows == 0 {
+            return Err(Error::Hardware("scheduler window must be > 0".into()));
+        }
+        Ok(VectorScheduler { rows })
+    }
+
+    /// Window index holding `node` under node-stationary placement.
+    pub fn window_of(&self, node: usize) -> usize {
+        node / self.rows
+    }
+
+    /// Row within its window.
+    pub fn row_of(&self, node: usize) -> usize {
+        node % self.rows
+    }
+
+    /// Number of windows needed for `num_nodes` nodes.
+    pub fn num_windows(&self, num_nodes: usize) -> usize {
+        num_nodes.div_ceil(self.rows).max(1)
+    }
+
+    /// Render the per-window activation vectors for a set of source nodes
+    /// (the traversal core's output).  Returns `(window, activation)`
+    /// pairs for the windows that have at least one active row — the
+    /// schedule skips all-zero windows.
+    pub fn activation_vectors(&self, sources: &[usize]) -> Vec<(usize, Vec<bool>)> {
+        if sources.is_empty() {
+            return Vec::new();
+        }
+        let max_window = sources.iter().map(|&s| self.window_of(s)).max().unwrap();
+        let mut vecs: Vec<Option<Vec<bool>>> = vec![None; max_window + 1];
+        for &s in sources {
+            let w = self.window_of(s);
+            let v = vecs[w].get_or_insert_with(|| vec![false; self.rows]);
+            v[self.row_of(s)] = true;
+        }
+        vecs.into_iter()
+            .enumerate()
+            .filter_map(|(w, v)| v.map(|v| (w, v)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn placement_is_contiguous() {
+        let s = VectorScheduler::new(4).unwrap();
+        assert_eq!(s.window_of(0), 0);
+        assert_eq!(s.window_of(3), 0);
+        assert_eq!(s.window_of(4), 1);
+        assert_eq!(s.row_of(5), 1);
+        assert_eq!(s.num_windows(9), 3);
+        assert_eq!(s.num_windows(0), 1);
+    }
+
+    #[test]
+    fn activation_vectors_mark_exactly_the_sources() {
+        let s = VectorScheduler::new(4).unwrap();
+        let av = s.activation_vectors(&[1, 6, 2, 6]);
+        assert_eq!(av.len(), 2);
+        assert_eq!(av[0], (0, vec![false, true, true, false]));
+        assert_eq!(av[1], (1, vec![false, false, true, false]));
+    }
+
+    #[test]
+    fn empty_sources_render_nothing() {
+        let s = VectorScheduler::new(8).unwrap();
+        assert!(s.activation_vectors(&[]).is_empty());
+    }
+
+    #[test]
+    fn all_zero_windows_are_skipped() {
+        let s = VectorScheduler::new(2).unwrap();
+        let av = s.activation_vectors(&[0, 9]);
+        let windows: Vec<usize> = av.iter().map(|(w, _)| *w).collect();
+        assert_eq!(windows, vec![0, 4]);
+    }
+
+    #[test]
+    fn property_roundtrip_recovers_sources() {
+        forall(32, |rng: &mut Rng| {
+            let rows = rng.index(16) + 1;
+            let s = VectorScheduler::new(rows).unwrap();
+            let n = rng.index(40);
+            let mut sources: Vec<usize> = (0..n).map(|_| rng.index(200)).collect();
+            let av = s.activation_vectors(&sources);
+            // reconstruct
+            let mut got: Vec<usize> = av
+                .iter()
+                .flat_map(|(w, v)| {
+                    v.iter()
+                        .enumerate()
+                        .filter(|(_, a)| **a)
+                        .map(move |(r, _)| w * rows + r)
+                })
+                .collect();
+            got.sort_unstable();
+            sources.sort_unstable();
+            sources.dedup();
+            assert_eq!(got, sources);
+        });
+    }
+
+    #[test]
+    fn zero_rows_rejected() {
+        assert!(VectorScheduler::new(0).is_err());
+    }
+}

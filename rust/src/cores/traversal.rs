@@ -1,0 +1,179 @@
+//! Traversal core: resistive CAM crossbars walking the CSR graph
+//! (paper §2.3 + Fig. 3).
+//!
+//! The *search CAM* stores the Column-Index (CI) array; querying it with a
+//! destination node id fires the match-lines of the edge positions whose
+//! edges point at that destination.  The *scan CAM* stores the Row-Pointer
+//! (RP) array; comparing an edge position against it yields the source node
+//! owning that edge.  Together: `incoming(dst) -> [src]`.
+
+use crate::config::{CoreConfig, DeviceParams};
+use crate::crossbar::CamCrossbar;
+use crate::error::{Error, Result};
+use crate::graph::Csr;
+use crate::units::{Energy, Time};
+
+/// The traversal core: a bank of search + scan CAM pairs.
+#[derive(Debug)]
+pub struct TraversalCore {
+    config: CoreConfig,
+    search: CamCrossbar,
+    scan: CamCrossbar,
+    /// Row pointers mirrored digitally for result decoding.
+    rp: Vec<u64>,
+    loaded_edges: usize,
+}
+
+impl TraversalCore {
+    pub fn new(config: CoreConfig, device: DeviceParams) -> Result<TraversalCore> {
+        config.validate()?;
+        Ok(TraversalCore {
+            search: CamCrossbar::new(config.geometry, device.clone())?,
+            scan: CamCrossbar::new(config.geometry, device)?,
+            config,
+            rp: Vec::new(),
+            loaded_edges: 0,
+        })
+    }
+
+    pub fn config(&self) -> &CoreConfig {
+        &self.config
+    }
+
+    /// Load a CSR graph into the CAM pair (paper Fig. 3(b)->(c),(d)).
+    ///
+    /// The functional model holds one crossbar's worth of rows; graphs with
+    /// more edges than CAM rows are processed in windows by the schedule —
+    /// the timing model accounts for that via `lookups_per_node`.
+    pub fn load_graph(&mut self, csr: &Csr) -> Result<()> {
+        let rows = self.config.geometry.rows;
+        if csr.num_edges() > rows {
+            return Err(Error::Hardware(format!(
+                "functional CAM holds {rows} edges, graph has {} (window the graph)",
+                csr.num_edges()
+            )));
+        }
+        if csr.num_nodes() > rows {
+            return Err(Error::Hardware(format!(
+                "functional scan CAM holds {rows} row pointers, graph has {} nodes",
+                csr.num_nodes()
+            )));
+        }
+        let ci: Vec<u64> = csr.column_indices().iter().map(|&c| c as u64).collect();
+        self.search.load(&ci)?;
+        self.rp = csr.row_pointers().iter().map(|&r| r as u64).collect();
+        self.scan.load(&self.rp[..csr.num_nodes()])?;
+        self.loaded_edges = csr.num_edges();
+        Ok(())
+    }
+
+    /// Sources with an edge to `dst`: search CAM match + scan CAM compare.
+    pub fn incoming(&self, dst: usize) -> Result<Vec<usize>> {
+        if self.loaded_edges == 0 {
+            return Err(Error::Hardware("traversal core: no graph loaded".into()));
+        }
+        let positions = self.search.search(dst as u64);
+        let mut sources = Vec::with_capacity(positions.len());
+        for pos in positions {
+            let src = self
+                .scan
+                .scan_owner(pos as u64)
+                .ok_or_else(|| Error::Hardware(format!("edge position {pos} has no owner")))?;
+            sources.push(src);
+        }
+        Ok(sources)
+    }
+
+    /// Latency of one per-node traversal: one search + one scan op
+    /// (the compare runs on all matched positions in parallel).
+    pub fn per_node_latency(&self) -> Time {
+        self.search.op_latency() + self.scan.op_latency()
+    }
+
+    /// Dynamic energy of one per-node traversal.
+    pub fn per_node_energy(&self) -> Energy {
+        self.search.op_energy() + self.scan.op_energy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::graph::Csr;
+    use crate::testing::{forall, Rng};
+
+    fn core() -> TraversalCore {
+        let cfg = presets::decentralized();
+        TraversalCore::new(cfg.traversal, cfg.device).unwrap()
+    }
+
+    /// The paper's Fig. 3 example adjacency (5 nodes).
+    fn fig3_csr() -> Csr {
+        // edges (src -> dst): 0->1, 0->3, 1->2, 2->0, 2->4, 3->2, 4->1
+        Csr::from_edges(5, &[(0, 1), (0, 3), (1, 2), (2, 0), (2, 4), (3, 2), (4, 1)]).unwrap()
+    }
+
+    #[test]
+    fn incoming_matches_adjacency() {
+        let mut t = core();
+        let g = fig3_csr();
+        t.load_graph(&g).unwrap();
+        let mut inc = t.incoming(2).unwrap();
+        inc.sort_unstable();
+        assert_eq!(inc, vec![1, 3]); // 1->2 and 3->2
+        assert_eq!(t.incoming(0).unwrap(), vec![2]);
+        assert!(t.incoming(9).unwrap().is_empty());
+    }
+
+    #[test]
+    fn property_incoming_equals_reverse_adjacency() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(20) + 2;
+            let mut edges = Vec::new();
+            for src in 0..n {
+                for _ in 0..rng.index(4) {
+                    edges.push((src, rng.index(n)));
+                }
+            }
+            edges.sort_unstable();
+            edges.dedup();
+            if edges.is_empty() || edges.len() > 512 {
+                return;
+            }
+            let g = Csr::from_edges(n, &edges).unwrap();
+            let mut t = core();
+            t.load_graph(&g).unwrap();
+            for dst in 0..n {
+                let mut got = t.incoming(dst).unwrap();
+                got.sort_unstable();
+                let mut want: Vec<usize> =
+                    edges.iter().filter(|(_, d)| *d == dst).map(|(s, _)| *s).collect();
+                want.sort_unstable();
+                assert_eq!(got, want, "dst={dst}");
+            }
+        });
+    }
+
+    #[test]
+    fn latency_is_table1_t1() {
+        // 2 CAM ops × 3.84 ns = 7.68 ns (Table 1, decentralized traversal).
+        crate::testing::assert_close(core().per_node_latency().as_ns(), 7.68, 1e-9);
+    }
+
+    #[test]
+    fn energy_gives_table1_power() {
+        let t = core();
+        let p = t.per_node_energy() / t.per_node_latency();
+        crate::testing::assert_close(p.as_mw(), 0.21, 0.001);
+    }
+
+    #[test]
+    fn rejects_oversized_graphs_and_unloaded_lookups() {
+        let mut t = core();
+        assert!(t.incoming(0).is_err(), "lookup before load must fail");
+        let big: Vec<(usize, usize)> = (0..600).map(|i| (i % 300, (i + 1) % 300)).collect();
+        let g = Csr::from_edges(300, &big).unwrap();
+        assert!(t.load_graph(&g).is_err(), "600 edges exceed 512 CAM rows");
+    }
+}

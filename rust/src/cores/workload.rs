@@ -1,0 +1,132 @@
+//! Workload descriptions: what one GNN inference asks of each core.
+//!
+//! The paper evaluates two workloads: the hetGNN-LSTM taxi model (§4.2,
+//! Table 1 — P=12 frames, 3 edge types, 864-byte node messages) and
+//! GCN-style inference over the four §4.3 datasets.  A workload maps to
+//! crossbar *passes* per node in the aggregation / feature-extraction cores
+//! and CAM lookups in the traversal core.
+
+/// Per-node GNN workload parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GnnWorkload {
+    /// Name for reports.
+    pub name: String,
+    /// Features per node (the message payload).
+    pub feature_len: usize,
+    /// Bits per stored feature value.
+    pub feature_bits: u32,
+    /// Temporal frames aggregated per inference (P for the taxi model).
+    pub frames: usize,
+    /// Edge types aggregated per frame (3 for the taxi hetGNN).
+    pub edge_types: usize,
+    /// Neighbors contributing to one aggregation (cluster size cₛ).
+    pub neighbors: usize,
+    /// Feature-extraction input width (the aggregated representation).
+    pub fe_in: usize,
+    /// Feature-extraction output width.
+    pub fe_out: usize,
+    /// Bits per feature-extraction weight.
+    pub fe_weight_bits: u32,
+    /// Dense layers executed by the feature-extraction core.
+    pub fe_layers: usize,
+    /// GNN depth X (drives inter-layer communication, Eq. 7).
+    pub gnn_layers: usize,
+}
+
+impl GnnWorkload {
+    /// The §4.2 taxi case study: hetGNN-LSTM, 864-byte messages
+    /// (432 features × 16 bit), P = 12 frames × 3 edge types, per-frame
+    /// embedding 128 → 64 executed by the feature-extraction core.
+    pub fn taxi() -> GnnWorkload {
+        GnnWorkload {
+            name: "taxi-hetgnn".into(),
+            feature_len: 432,
+            feature_bits: 16,
+            frames: 12,
+            edge_types: 3,
+            neighbors: 10,
+            fe_in: 128,
+            fe_out: 64,
+            fe_weight_bits: 16,
+            fe_layers: 1,
+            gnn_layers: 2,
+        }
+    }
+
+    /// GCN-style single-relation workload over a dataset with the given
+    /// feature length and average cluster size (Table 2 statistics).
+    pub fn gcn(name: &str, feature_len: usize, neighbors: usize) -> GnnWorkload {
+        GnnWorkload {
+            name: format!("gcn-{name}"),
+            feature_len,
+            feature_bits: 16,
+            frames: 1,
+            edge_types: 1,
+            neighbors,
+            fe_in: 128,
+            fe_out: 64,
+            fe_weight_bits: 16,
+            fe_layers: 1,
+            gnn_layers: 2,
+        }
+    }
+
+    /// Bytes of one node's feature message (what travels on the links).
+    /// The paper's taxi payload: 864 bytes.
+    pub fn message_bytes(&self) -> usize {
+        self.feature_len * self.feature_bits as usize / 8
+    }
+
+    /// RRAM cells needed to store one node's features at `cell_bits` per
+    /// cell (bit-sliced across adjacent columns).
+    pub fn feature_cells(&self, cell_bits: u32) -> usize {
+        self.feature_len * (self.feature_bits as usize).div_ceil(cell_bits as usize)
+    }
+
+    /// Cells per feature-extraction weight column group.
+    pub fn fe_weight_cells(&self, cell_bits: u32) -> usize {
+        self.fe_out * (self.fe_weight_bits as usize).div_ceil(cell_bits as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taxi_message_is_864_bytes() {
+        assert_eq!(GnnWorkload::taxi().message_bytes(), 864);
+    }
+
+    #[test]
+    fn taxi_feature_cells_span_four_aggregation_passes() {
+        let w = GnnWorkload::taxi();
+        // 432 features × (16/4) cells = 1728 cells → 4 passes over 512 cols.
+        assert_eq!(w.feature_cells(4), 1728);
+        assert_eq!(w.feature_cells(4).div_ceil(512), 4);
+    }
+
+    #[test]
+    fn taxi_fe_weight_cells_span_two_column_groups() {
+        let w = GnnWorkload::taxi();
+        // 64 outputs × 4 cells = 256 cells → 2 passes over 128 cols.
+        assert_eq!(w.fe_weight_cells(4), 256);
+        assert_eq!(w.fe_weight_cells(4).div_ceil(128), 2);
+    }
+
+    #[test]
+    fn gcn_workload_uses_table2_stats() {
+        let w = GnnWorkload::gcn("cora", 1433, 4);
+        assert_eq!(w.feature_len, 1433);
+        assert_eq!(w.neighbors, 4);
+        assert_eq!(w.frames, 1);
+        assert_eq!(w.edge_types, 1);
+    }
+
+    #[test]
+    fn feature_cells_rounds_up_bit_slices() {
+        let w = GnnWorkload { feature_bits: 6, ..GnnWorkload::gcn("x", 10, 1) };
+        // 6 bits / 4-bit cells → 2 cells per feature.
+        assert_eq!(w.feature_cells(4), 20);
+    }
+}

@@ -1,0 +1,247 @@
+//! Resistive CAM crossbar (paper Fig. 2(c)).
+//!
+//! 2T2R ternary cells perform an XNOR match of the stored key against the
+//! search data on every row in parallel (*search*), or an order comparison
+//! against calibrated bit-line voltages (*compare*, used by the scan CAM).
+//! Functionally equivalent to `python/compile/kernels/cam.py`.
+
+use crate::config::{CrossbarGeometry, DeviceParams};
+use crate::device::{Driver, MatchLineSense};
+use crate::error::{Error, Result};
+use crate::units::{Energy, Power, Time};
+
+/// One resistive CAM crossbar holding up to `rows` keys of `cols` bits.
+#[derive(Debug, Clone)]
+pub struct CamCrossbar {
+    geometry: CrossbarGeometry,
+    device: DeviceParams,
+    /// Stored keys; `None` = row not programmed (never matches).
+    keys: Vec<Option<u64>>,
+}
+
+impl CamCrossbar {
+    pub fn new(geometry: CrossbarGeometry, device: DeviceParams) -> Result<CamCrossbar> {
+        geometry.validate()?;
+        if geometry.cols > 64 {
+            return Err(Error::Hardware(format!(
+                "CAM width {} exceeds 64-bit key model",
+                geometry.cols
+            )));
+        }
+        Ok(CamCrossbar { keys: vec![None; geometry.rows], geometry, device })
+    }
+
+    pub fn geometry(&self) -> &CrossbarGeometry {
+        &self.geometry
+    }
+
+    /// Largest key storable in `cols` bits.
+    pub fn max_key(&self) -> u64 {
+        if self.geometry.cols >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.geometry.cols) - 1
+        }
+    }
+
+    /// Program one row with a key.
+    pub fn write(&mut self, row: usize, key: u64) -> Result<()> {
+        if row >= self.geometry.rows {
+            return Err(Error::Hardware(format!(
+                "row {row} out of range ({} rows)",
+                self.geometry.rows
+            )));
+        }
+        if key > self.max_key() {
+            return Err(Error::Hardware(format!(
+                "key {key} exceeds {}-bit CAM width",
+                self.geometry.cols
+            )));
+        }
+        self.keys[row] = Some(key);
+        Ok(())
+    }
+
+    /// Program consecutive rows from a slice, starting at row 0.
+    pub fn load(&mut self, keys: &[u64]) -> Result<()> {
+        if keys.len() > self.geometry.rows {
+            return Err(Error::Hardware(format!(
+                "{} keys exceed {} CAM rows",
+                keys.len(),
+                self.geometry.rows
+            )));
+        }
+        self.keys.fill(None);
+        for (i, &k) in keys.iter().enumerate() {
+            self.write(i, k)?;
+        }
+        Ok(())
+    }
+
+    /// Number of programmed rows.
+    pub fn occupancy(&self) -> usize {
+        self.keys.iter().filter(|k| k.is_some()).count()
+    }
+
+    /// *Search* operation: all match-lines fire in parallel; returns the
+    /// rows whose stored key equals `query` (paper Fig. 3(c)).
+    pub fn search(&self, query: u64) -> Vec<usize> {
+        self.keys
+            .iter()
+            .enumerate()
+            .filter_map(|(i, k)| (*k == Some(query)).then_some(i))
+            .collect()
+    }
+
+    /// *Compare* operation of the scan CAM: rows whose key satisfies
+    /// `key <= value` (calibrated increasing bit-line voltages LSB→MSB
+    /// realize the threshold compare; paper §2.2).
+    pub fn compare_le(&self, value: u64) -> Vec<usize> {
+        self.keys
+            .iter()
+            .enumerate()
+            .filter_map(|(i, k)| match k {
+                Some(key) if *key <= value => Some(i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Scan-CAM range lookup (paper Fig. 3(d)): rows store the CSR row
+    /// pointers RP; the owner of edge position `pos` is the last row with
+    /// `RP[row] <= pos`.  Returns `None` when no row qualifies.
+    pub fn scan_owner(&self, pos: u64) -> Option<usize> {
+        self.compare_le(pos).into_iter().max()
+    }
+
+    /// Latency of one CAM operation (search or compare): driver + match
+    /// line settle + MLSA sensing.
+    pub fn op_latency(&self) -> Time {
+        Driver::new(&self.device).latency()
+            + self.device.cam_settle
+            + MatchLineSense::new(&self.device).latency()
+    }
+
+    /// Dynamic energy of one CAM operation.
+    pub fn op_energy(&self) -> Energy {
+        Driver::new(&self.device).energy() + MatchLineSense::new(&self.device).energy()
+    }
+
+    /// Average power while continuously searching.
+    pub fn active_power(&self) -> Power {
+        self.op_energy() / self.op_latency()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceParams;
+    use crate::testing::{forall, Rng};
+
+    fn cam(rows: usize, cols: usize) -> CamCrossbar {
+        CamCrossbar::new(CrossbarGeometry::new(rows, cols), DeviceParams::default_45nm()).unwrap()
+    }
+
+    #[test]
+    fn search_finds_all_matches_and_only_matches() {
+        let mut c = cam(16, 32);
+        c.load(&[5, 9, 5, 7, 5]).unwrap();
+        assert_eq!(c.search(5), vec![0, 2, 4]);
+        assert_eq!(c.search(7), vec![3]);
+        assert!(c.search(42).is_empty());
+    }
+
+    #[test]
+    fn unprogrammed_rows_never_match() {
+        let mut c = cam(8, 16);
+        c.write(3, 0).unwrap();
+        // query 0 must match only the programmed row, not the empty ones
+        assert_eq!(c.search(0), vec![3]);
+    }
+
+    #[test]
+    fn compare_le_is_a_threshold() {
+        let mut c = cam(8, 16);
+        c.load(&[0, 2, 5, 9]).unwrap();
+        assert_eq!(c.compare_le(4), vec![0, 1]);
+        assert_eq!(c.compare_le(9), vec![0, 1, 2, 3]);
+        assert!(c.compare_le(0).len() == 1);
+    }
+
+    #[test]
+    fn scan_owner_matches_csr_semantics() {
+        // RP = [0, 2, 2, 5, 9]: row pointers of a 4-node CSR (node 1 empty).
+        let mut c = cam(8, 16);
+        c.load(&[0, 2, 2, 5]).unwrap();
+        // pos 0,1 -> node 0; pos 2..4 -> node 2 (last row with RP<=pos
+        // because node 1 is empty); pos 5..8 -> node 3.
+        assert_eq!(c.scan_owner(0), Some(0));
+        assert_eq!(c.scan_owner(1), Some(0));
+        assert_eq!(c.scan_owner(2), Some(2));
+        assert_eq!(c.scan_owner(4), Some(2));
+        assert_eq!(c.scan_owner(5), Some(3));
+        assert_eq!(c.scan_owner(8), Some(3));
+    }
+
+    #[test]
+    fn property_scan_owner_agrees_with_linear_search() {
+        forall(32, |rng: &mut Rng| {
+            let n = rng.index(30) + 1;
+            let mut rp = vec![0u64];
+            for _ in 0..n {
+                let last = *rp.last().unwrap();
+                rp.push(last + rng.u64_in(0, 4));
+            }
+            let total = *rp.last().unwrap();
+            if total == 0 {
+                return;
+            }
+            let mut c = cam(64, 32);
+            c.load(&rp[..n]).unwrap();
+            let pos = rng.u64_in(0, total - 1);
+            let got = c.scan_owner(pos).expect("some row must own a valid pos");
+            // linear-search oracle: the row i with rp[i] <= pos < rp[i+1],
+            // taking the *last* such i (empty rows share pointers).
+            let want = (0..n).rev().find(|&i| rp[i] <= pos).unwrap();
+            assert_eq!(got, want, "pos={pos} rp={rp:?}");
+        });
+    }
+
+    #[test]
+    fn op_latency_matches_calibration() {
+        // driver 0.78 + settle 1.92 + MLSA 1.14 = 3.84 ns per op.
+        let c = cam(512, 32);
+        crate::testing::assert_close(c.op_latency().as_ns(), 3.84, 1e-9);
+    }
+
+    #[test]
+    fn power_matches_calibration() {
+        // 2 ops (search+scan) per node at 0.8064 pJ / 3.84 ns = 0.21 mW.
+        let c = cam(512, 32);
+        crate::testing::assert_close(c.active_power().as_mw(), 0.21, 0.001);
+    }
+
+    #[test]
+    fn rejects_invalid_writes() {
+        let mut c = cam(4, 8);
+        assert!(c.write(4, 0).is_err()); // row out of range
+        assert!(c.write(0, 256).is_err()); // key exceeds 8-bit width
+        assert!(c.load(&[0; 5]).is_err()); // too many keys
+        assert!(CamCrossbar::new(
+            CrossbarGeometry::new(4, 128),
+            DeviceParams::default_45nm()
+        )
+        .is_err()); // width > 64
+    }
+
+    #[test]
+    fn occupancy_counts_programmed_rows() {
+        let mut c = cam(8, 8);
+        assert_eq!(c.occupancy(), 0);
+        c.load(&[1, 2, 3]).unwrap();
+        assert_eq!(c.occupancy(), 3);
+        c.load(&[9]).unwrap(); // reload clears
+        assert_eq!(c.occupancy(), 1);
+    }
+}

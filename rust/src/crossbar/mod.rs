@@ -1,0 +1,11 @@
+//! Architecture-level crossbar arrays (paper Fig. 2(b)/(c)).
+//!
+//! Each array is both *functional* (bit-exact fixed-point MVM / CAM ops,
+//! matching the Layer-1 Pallas kernels and their jnp oracles) and a
+//! *timing/energy roll-up* composed from the `device` component models.
+
+mod cam;
+mod mvm;
+
+pub use cam::CamCrossbar;
+pub use mvm::MvmCrossbar;

@@ -1,0 +1,321 @@
+//! Resistive MVM crossbar (paper Fig. 2(b)).
+//!
+//! Functional model: weights are programmed as signed conductance levels
+//! (`cell_bits`), inputs stream as unsigned codes (`input_bits`), and the
+//! evaluation is bit-serial — one input bit-plane per pass, per-column
+//! analog accumulation, ADC clip to `adc_bits`, Shift & Add recombination.
+//! This matches `python/compile/kernels/mvm_crossbar.py` bit-exactly (see
+//! `tests/parity_kernel.rs` fixtures).
+//!
+//! Timing/energy model: one *pass* = DAC drive + array settle + Sample&Hold
+//! + (cols / ADCs) sequential conversions + Shift&Add, composed from the
+//! `device` components.
+
+use crate::config::{CrossbarGeometry, DeviceParams};
+use crate::device::{Adc, Dac, RramCell, SampleHold, ShiftAdd};
+use crate::error::{Error, Result};
+use crate::units::{Energy, Power, Time};
+
+/// One resistive MVM crossbar array.
+#[derive(Debug, Clone)]
+pub struct MvmCrossbar {
+    geometry: CrossbarGeometry,
+    device: DeviceParams,
+    /// Programmed conductance levels, row-major `[rows][cols]`, signed.
+    weights: Vec<i32>,
+}
+
+impl MvmCrossbar {
+    pub fn new(geometry: CrossbarGeometry, device: DeviceParams) -> Result<MvmCrossbar> {
+        geometry.validate()?;
+        device.validate()?;
+        Ok(MvmCrossbar {
+            weights: vec![0; geometry.cells()],
+            geometry,
+            device,
+        })
+    }
+
+    pub fn geometry(&self) -> &CrossbarGeometry {
+        &self.geometry
+    }
+
+    /// Signed range of one cell: `[-2^(b-1), 2^(b-1) - 1]`.
+    pub fn weight_range(&self) -> (i32, i32) {
+        let half = 1i64 << (self.geometry.cell_bits - 1);
+        (-(half as i32), (half - 1) as i32)
+    }
+
+    /// Program the full array (row-major `rows × cols`).
+    pub fn program(&mut self, weights: &[i32]) -> Result<()> {
+        if weights.len() != self.geometry.cells() {
+            return Err(Error::Hardware(format!(
+                "program: expected {} weights, got {}",
+                self.geometry.cells(),
+                weights.len()
+            )));
+        }
+        let (lo, hi) = self.weight_range();
+        if let Some(w) = weights.iter().find(|w| **w < lo || **w > hi) {
+            return Err(Error::Hardware(format!(
+                "weight {w} outside conductance range [{lo}, {hi}]"
+            )));
+        }
+        self.weights.copy_from_slice(weights);
+        Ok(())
+    }
+
+    /// Program a sub-tile starting at row 0 / col 0, zero elsewhere.
+    pub fn program_tile(&mut self, tile: &[i32], rows: usize, cols: usize) -> Result<()> {
+        if rows > self.geometry.rows || cols > self.geometry.cols {
+            return Err(Error::Hardware(format!(
+                "tile {rows}x{cols} exceeds array {}x{}",
+                self.geometry.rows, self.geometry.cols
+            )));
+        }
+        if tile.len() != rows * cols {
+            return Err(Error::Hardware("tile shape mismatch".into()));
+        }
+        self.weights.fill(0);
+        let (lo, hi) = self.weight_range();
+        for r in 0..rows {
+            for c in 0..cols {
+                let w = tile[r * cols + c];
+                if w < lo || w > hi {
+                    return Err(Error::Hardware(format!(
+                        "weight {w} outside conductance range [{lo}, {hi}]"
+                    )));
+                }
+                self.weights[r * self.geometry.cols + c] = w;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bit-serial evaluate: `out[c] = Σ_b 2^b · clip(Σ_r bit_b(x[r]) · G[r][c])`.
+    ///
+    /// `input` must contain unsigned codes < 2^input_bits, one per row.
+    /// The ADC clip applies per column per bit-plane — the analog boundary.
+    pub fn evaluate(&self, input: &[u32]) -> Result<Vec<i64>> {
+        if input.len() != self.geometry.rows {
+            return Err(Error::Hardware(format!(
+                "evaluate: expected {} inputs, got {}",
+                self.geometry.rows,
+                input.len()
+            )));
+        }
+        let max_code = if self.geometry.input_bits >= 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.geometry.input_bits) - 1
+        };
+        if let Some(x) = input.iter().find(|x| **x > max_code) {
+            return Err(Error::Hardware(format!(
+                "input code {x} exceeds {}-bit DAC range",
+                self.geometry.input_bits
+            )));
+        }
+        let cols = self.geometry.cols;
+        let lo = -(1i64 << (self.geometry.adc_bits - 1));
+        let hi = (1i64 << (self.geometry.adc_bits - 1)) - 1;
+        let mut out = vec![0i64; cols];
+        let mut plane_sum = vec![0i64; cols];
+        for b in 0..self.geometry.input_bits {
+            plane_sum.fill(0);
+            for (r, &x) in input.iter().enumerate() {
+                if (x >> b) & 1 == 1 {
+                    let row = &self.weights[r * cols..(r + 1) * cols];
+                    for (c, &w) in row.iter().enumerate() {
+                        plane_sum[c] += w as i64;
+                    }
+                }
+            }
+            for c in 0..cols {
+                // Sample & hold + ADC: clip to converter range.
+                let clipped = plane_sum[c].clamp(lo, hi);
+                // Shift & add.
+                out[c] += clipped << b;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Latency of one evaluate pass (one bit-plane).
+    pub fn pass_latency(&self) -> Time {
+        let d = &self.device;
+        Dac::new(d).latency()
+            + d.array_settle
+            + SampleHold::new(d).latency()
+            + Adc::new(d).latency() * self.geometry.adc_rounds() as f64
+            + ShiftAdd::new(d).latency()
+    }
+
+    /// Latency of a full `input_bits`-deep evaluation.
+    pub fn mvm_latency(&self) -> Time {
+        self.pass_latency() * self.geometry.input_bits as f64
+    }
+
+    /// Dynamic energy of one evaluate pass.
+    ///
+    /// Cell read energy scales with word-line length (`rows / 512`): longer
+    /// lines mean larger parasitics per access — this is what lets the
+    /// small feature-extraction array (128 rows) run cheaper per cell than
+    /// the 512-row aggregation array.
+    pub fn pass_energy(&self) -> Energy {
+        let d = &self.device;
+        let line_factor = self.geometry.rows as f64 / 512.0;
+        let cells = self.geometry.cells() as f64;
+        Dac::new(d).energy()
+            + SampleHold::new(d).energy()
+            + ShiftAdd::new(d).energy()
+            + Adc::new(d).energy() * self.geometry.adc_rounds() as f64
+            + RramCell::new(d).read_energy() * cells * line_factor
+    }
+
+    /// Static leakage of the array.
+    pub fn leakage(&self) -> Power {
+        RramCell::new(&self.device).leakage() * self.geometry.cells() as f64
+    }
+
+    /// Average dynamic power while continuously evaluating.
+    pub fn active_power(&self) -> Power {
+        self.pass_energy() / self.pass_latency()
+    }
+
+    /// Write (programming) latency for the full array, one row at a time —
+    /// used by the double-buffering overlap model.
+    pub fn program_latency(&self) -> Time {
+        // RRAM write pulse ~50 ns per row (documented substitute constant).
+        Time::ns(50.0) * self.geometry.rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceParams;
+    use crate::testing::{forall, Rng};
+
+    fn xbar(rows: usize, cols: usize) -> MvmCrossbar {
+        MvmCrossbar::new(CrossbarGeometry::new(rows, cols), DeviceParams::default_45nm()).unwrap()
+    }
+
+    /// Reference: plain integer matmul (lossless ADC ⇒ identical).
+    fn matmul_ref(input: &[u32], weights: &[i32], rows: usize, cols: usize) -> Vec<i64> {
+        let mut out = vec![0i64; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c] += input[r] as i64 * weights[r * cols + c] as i64;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lossless_adc_equals_matmul() {
+        forall(24, |rng: &mut Rng| {
+            let rows = rng.index(40) + 1;
+            let cols = rng.index(24) + 1;
+            let mut g = CrossbarGeometry::new(rows, cols);
+            g.adc_bits = 24; // lossless for these sizes
+            let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+            let weights: Vec<i32> = (0..rows * cols).map(|_| rng.i64_in(-8, 7) as i32).collect();
+            xb.program(&weights).unwrap();
+            let input: Vec<u32> = (0..rows).map(|_| rng.u64_in(0, 255) as u32).collect();
+            let got = xb.evaluate(&input).unwrap();
+            assert_eq!(got, matmul_ref(&input, &weights, rows, cols));
+        });
+    }
+
+    #[test]
+    fn adc_clipping_bounds_partial_sums() {
+        // All-ones everywhere: per-plane column sum = rows = 64, clipped to
+        // adc range [-8, 7] with adc_bits=4 ⇒ every plane contributes 7.
+        let mut g = CrossbarGeometry::new(64, 4);
+        g.adc_bits = 4;
+        g.input_bits = 8;
+        let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+        xb.program(&vec![1; 64 * 4]).unwrap();
+        let out = xb.evaluate(&vec![255u32; 64]).unwrap();
+        let want = (0..8).map(|b| 7i64 << b).sum::<i64>();
+        assert!(out.iter().all(|&o| o == want), "{out:?} != {want}");
+    }
+
+    #[test]
+    fn clipping_is_per_bitplane_not_per_total() {
+        // One active bit-plane (inputs = 1): sums clip at plane level.
+        let mut g = CrossbarGeometry::new(32, 1);
+        g.adc_bits = 4;
+        g.input_bits = 1;
+        let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+        xb.program(&vec![7; 32]).unwrap();
+        let out = xb.evaluate(&vec![1u32; 32]).unwrap();
+        assert_eq!(out[0], 7); // 32*7=224 clipped to 7
+    }
+
+    #[test]
+    fn negative_weights_accumulate() {
+        let mut xb = xbar(3, 2);
+        xb.program(&[-8, 7, -1, 2, 3, -4]).unwrap();
+        let out = xb.evaluate(&[1, 2, 3]).unwrap();
+        assert_eq!(out, matmul_ref(&[1, 2, 3], &[-8, 7, -1, 2, 3, -4], 3, 2));
+    }
+
+    #[test]
+    fn program_tile_zero_pads() {
+        let mut xb = xbar(4, 4);
+        xb.program_tile(&[1, 2, 3, 4], 2, 2).unwrap();
+        let out = xb.evaluate(&[1, 1, 1, 1]).unwrap();
+        assert_eq!(out, vec![4, 6, 0, 0]);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let mut xb = xbar(4, 4);
+        assert!(xb.program(&[0; 3]).is_err());
+        assert!(xb.program(&[100; 16]).is_err()); // out of 4-bit range
+        assert!(xb.evaluate(&[0; 3]).is_err()); // wrong length
+        assert!(xb.evaluate(&[256, 0, 0, 0]).is_err()); // exceeds 8-bit DAC
+        assert!(xb.program_tile(&[1; 25], 5, 5).is_err()); // tile too big
+    }
+
+    #[test]
+    fn weight_range_follows_cell_bits() {
+        let mut g = CrossbarGeometry::new(2, 2);
+        g.cell_bits = 2;
+        let xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+        assert_eq!(xb.weight_range(), (-2, 1));
+    }
+
+    #[test]
+    fn aggregation_pass_latency_matches_calibration() {
+        // 512×512 with 8 ADCs: 1 + 13 + 1 + 64·1.28 + 2.18 = 99.10 ns.
+        let xb = xbar(512, 512);
+        crate::testing::assert_close(xb.pass_latency().as_ns(), 99.10, 0.001);
+    }
+
+    #[test]
+    fn fe_pass_latency_matches_calibration() {
+        // 128×128 with 32 ADCs: 1 + 13 + 1 + 4·1.28 + 2.18 = 22.30 ns.
+        let mut g = CrossbarGeometry::new(128, 128);
+        g.adcs = 32;
+        let xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+        crate::testing::assert_close(xb.pass_latency().as_ns(), 22.30, 0.001);
+    }
+
+    #[test]
+    fn energy_scales_with_array_size() {
+        let big = xbar(512, 512);
+        let small = xbar(128, 128);
+        assert!(big.pass_energy() > small.pass_energy());
+        assert!(big.leakage() > small.leakage());
+        assert!(big.active_power().as_mw() > 0.0);
+    }
+
+    #[test]
+    fn mvm_latency_is_bits_times_pass() {
+        let xb = xbar(64, 64);
+        let ratio = xb.mvm_latency() / xb.pass_latency();
+        crate::testing::assert_close(ratio, 8.0, 1e-12);
+    }
+}

@@ -1,0 +1,136 @@
+//! Silicon-area roll-up (the NVSIM/MNSIM area report substitute).
+//!
+//! 45 nm-class constants: a 1T1R RRAM cell is ~12F² (access transistor
+//! dominated), a 2T2R TCAM cell twice that; peripheral blocks use
+//! published NVSIM-class footprints.  Areas feed deployment cost analysis
+//! (a decentralized node must be small; the centralized bank need not).
+
+use crate::config::{AcceleratorConfig, CoreConfig, CrossbarGeometry};
+use crate::units::Area;
+
+/// Technology feature size (45 nm PDK, paper ref [22]).
+pub const FEATURE_NM: f64 = 45.0;
+
+fn f2() -> Area {
+    // one F² in m²
+    Area::um2((FEATURE_NM * 1e-3) * (FEATURE_NM * 1e-3))
+}
+
+/// 1T1R MVM cell area (~12 F²).
+pub fn mvm_cell() -> Area {
+    f2() * 12.0
+}
+
+/// 2T2R TCAM cell area (~24 F²).
+pub fn cam_cell() -> Area {
+    f2() * 24.0
+}
+
+/// One SAR ADC (8-bit class) at 45 nm.
+pub fn adc() -> Area {
+    Area::um2(1500.0)
+}
+
+/// One bit-line DAC/driver.
+pub fn dac() -> Area {
+    Area::um2(15.0)
+}
+
+/// Sample & hold per column.
+pub fn sample_hold() -> Area {
+    Area::um2(6.0)
+}
+
+/// Shift & add block per crossbar.
+pub fn shift_add() -> Area {
+    Area::um2(180.0)
+}
+
+/// Match-line sense amp per CAM row.
+pub fn mlsa() -> Area {
+    Area::um2(8.0)
+}
+
+/// MVM crossbar: cells + per-row DACs + per-column S&H + shared ADCs +
+/// shift & add.
+pub fn mvm_crossbar(g: &CrossbarGeometry) -> Area {
+    mvm_cell() * g.cells() as f64
+        + dac() * g.rows as f64
+        + sample_hold() * g.cols as f64
+        + adc() * g.adcs as f64
+        + shift_add()
+}
+
+/// CAM crossbar: TCAM cells + search drivers + MLSAs.
+pub fn cam_crossbar(g: &CrossbarGeometry) -> Area {
+    cam_cell() * g.cells() as f64 + dac() * g.cols as f64 + mlsa() * g.rows as f64
+}
+
+/// A full core (bank of crossbars), CAM or MVM.
+pub fn core(cfg: &CoreConfig, cam: bool) -> Area {
+    let one = if cam { cam_crossbar(&cfg.geometry) } else { mvm_crossbar(&cfg.geometry) };
+    one * cfg.crossbars as f64
+}
+
+/// Accelerator totals: (traversal, aggregation, feature extraction, total).
+/// The traversal core holds a search + scan CAM pair per unit.
+pub fn accelerator(cfg: &AcceleratorConfig) -> (Area, Area, Area, Area) {
+    let t = core(&cfg.traversal, true) * 2.0;
+    let a = core(&cfg.aggregation, false);
+    let f = core(&cfg.feature, false);
+    (t, a, f, t + a + f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn cell_areas_are_feature_scaled() {
+        // 12 F² at 45 nm = 12 * 2.025e-3 µm² ≈ 0.0243 µm².
+        assert!((mvm_cell().as_um2() - 0.0243).abs() < 1e-3);
+        assert!((cam_cell().as_um2() / mvm_cell().as_um2() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decentralized_node_is_millimeter_scale() {
+        let (_, _, _, total) = accelerator(&presets::decentralized());
+        // one node: a few mm² at most — deployable at the edge
+        assert!(total.as_mm2() > 0.01, "{}", total);
+        assert!(total.as_mm2() < 20.0, "{}", total);
+    }
+
+    #[test]
+    fn centralized_bank_scales_with_m_factors() {
+        let cent = accelerator(&presets::centralized());
+        let dec = accelerator(&presets::decentralized());
+        // traversal bank = 2000 units
+        assert!((cent.0.as_mm2() / dec.0.as_mm2() - 2000.0).abs() < 1.0);
+        assert!((cent.1.as_mm2() / dec.1.as_mm2() - 1000.0).abs() < 1.0);
+        assert!((cent.2.as_mm2() / dec.2.as_mm2() - 256.0).abs() < 1.0);
+        assert!(cent.3 > dec.3);
+    }
+
+    #[test]
+    fn adc_sharing_saves_area() {
+        let mut few = crate::config::CrossbarGeometry::new(512, 512);
+        few.adcs = 8;
+        let mut many = few;
+        many.adcs = 512;
+        assert!(mvm_crossbar(&few) < mvm_crossbar(&many));
+    }
+
+    #[test]
+    fn node_area_structure() {
+        let cfg = presets::decentralized();
+        let (t, a, f, total) = accelerator(&cfg);
+        // aggregation's 512×512 cell array dwarfs the CAM pair…
+        assert!(a > t);
+        // …but the FE core's latency-oriented 32-ADC bank makes it the
+        // area hot spot of a node — an explicit area-for-latency trade
+        // (4 ADC rounds per pass, see the t₃ calibration).
+        assert!(f > a);
+        assert!((total.as_mm2() - (t + a + f).as_mm2()).abs() < 1e-12);
+    }
+}

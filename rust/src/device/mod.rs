@@ -1,0 +1,191 @@
+//! Circuit-level behavioral models (the HSPICE/NVSIM/MNSIM substitute).
+//!
+//! The paper extracts per-component delay/power from SPICE (Ag-Si memristor
+//! [21] + NCSU 45 nm PDK [22]) and feeds them upward (Fig. 5).  This module
+//! plays that role: each peripheral exposes `latency()` / `energy()`
+//! (per-operation) and the RRAM cell exposes its electrical quantities so
+//! array-level models can compose physically meaningful roll-ups.
+//!
+//! Constants live in [`crate::config::DeviceParams`]; the values are
+//! calibrated so the composed per-core figures land on Table 1 (see
+//! `cores::calibration` tests).
+
+pub mod area;
+
+use crate::config::DeviceParams;
+use crate::units::{Energy, Power, Time};
+
+/// Ag-Si RRAM cell (1T1R for MVM arrays, 2T2R pairs for TCAM).
+#[derive(Debug, Clone)]
+pub struct RramCell<'p> {
+    params: &'p DeviceParams,
+}
+
+impl<'p> RramCell<'p> {
+    pub fn new(params: &'p DeviceParams) -> Self {
+        RramCell { params }
+    }
+
+    /// Conductance of the fully-ON state (S).
+    pub fn g_on(&self) -> f64 {
+        1.0 / self.params.r_on_ohm
+    }
+
+    /// Conductance of the fully-OFF state (S).
+    pub fn g_off(&self) -> f64 {
+        1.0 / self.params.r_off_ohm
+    }
+
+    /// Conductance representing quantized level `level` of `levels` total.
+    /// Level 0 maps to G_off, the top level to G_on, linearly in between —
+    /// the analog-weight mapping of paper ref [21].
+    pub fn conductance(&self, level: u32, levels: u32) -> f64 {
+        assert!(levels >= 2, "need at least 2 levels");
+        let l = level.min(levels - 1) as f64 / (levels - 1) as f64;
+        self.g_off() + l * (self.g_on() - self.g_off())
+    }
+
+    /// Read current of one cell at `v_read` for a given level (A).
+    pub fn read_current(&self, level: u32, levels: u32) -> f64 {
+        self.params.v_read * self.conductance(level, levels)
+    }
+
+    /// Dynamic energy of one cell participating in one evaluate pass.
+    pub fn read_energy(&self) -> Energy {
+        self.params.cell_read_energy
+    }
+
+    /// Cell leakage (access transistor included).
+    pub fn leakage(&self) -> Power {
+        self.params.cell_leakage
+    }
+
+    /// ON/OFF ratio — sanity metric for level separability.
+    pub fn on_off_ratio(&self) -> f64 {
+        self.params.r_off_ohm / self.params.r_on_ohm
+    }
+}
+
+macro_rules! peripheral {
+    ($(#[$doc:meta])* $name:ident, $lat:ident, $en:ident) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone)]
+        pub struct $name<'p> {
+            params: &'p DeviceParams,
+        }
+
+        impl<'p> $name<'p> {
+            pub fn new(params: &'p DeviceParams) -> Self {
+                Self { params }
+            }
+
+            /// Latency of one operation.
+            pub fn latency(&self) -> Time {
+                self.params.$lat
+            }
+
+            /// Dynamic energy of one operation.
+            pub fn energy(&self) -> Energy {
+                self.params.$en
+            }
+        }
+    };
+}
+
+peripheral!(
+    /// Digital-to-analog converter: drives one input bit-plane onto the
+    /// bit-lines (paper Fig. 2(b), DAC).
+    Dac, dac_latency, dac_energy
+);
+peripheral!(
+    /// Analog-to-digital converter: one conversion of one source-line
+    /// sample (shared across columns, see `CrossbarGeometry::adcs`).
+    Adc, adc_latency, adc_energy
+);
+peripheral!(
+    /// Sample & hold: captures all source-line currents of one pass.
+    SampleHold, sh_latency, sh_energy
+);
+peripheral!(
+    /// Shift & add: recombines per-bit partial products.
+    ShiftAdd, shift_add_latency, shift_add_energy
+);
+peripheral!(
+    /// Match-line sense amplifier of the CAM arrays (paper Fig. 2(c)).
+    MatchLineSense, mlsa_latency, mlsa_energy
+);
+peripheral!(
+    /// Search-data / word-line driver.
+    Driver, driver_latency, driver_energy
+);
+peripheral!(
+    /// Activation unit shared by the feature-extraction crossbars.
+    Activation, activation_latency, activation_energy
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceParams;
+
+    fn p() -> DeviceParams {
+        DeviceParams::default_45nm()
+    }
+
+    #[test]
+    fn conductance_interpolates_monotonically() {
+        let params = p();
+        let cell = RramCell::new(&params);
+        let levels = 16;
+        let mut prev = -1.0;
+        for l in 0..levels {
+            let g = cell.conductance(l, levels);
+            assert!(g > prev, "conductance must increase with level");
+            prev = g;
+        }
+        assert!((cell.conductance(0, levels) - cell.g_off()).abs() < 1e-15);
+        assert!((cell.conductance(levels - 1, levels) - cell.g_on()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn read_current_scales_with_voltage() {
+        let mut params = p();
+        let i1 = RramCell::new(&params).read_current(15, 16);
+        params.v_read *= 2.0;
+        let i2 = RramCell::new(&params).read_current(15, 16);
+        assert!((i2 / i1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn on_off_ratio_is_large() {
+        let params = p();
+        assert!(RramCell::new(&params).on_off_ratio() >= 100.0);
+    }
+
+    #[test]
+    fn level_clamps_at_top() {
+        let params = p();
+        let cell = RramCell::new(&params);
+        assert_eq!(cell.conductance(99, 16), cell.conductance(15, 16));
+    }
+
+    #[test]
+    #[should_panic(expected = "levels")]
+    fn rejects_single_level() {
+        let params = p();
+        RramCell::new(&params).conductance(0, 1);
+    }
+
+    #[test]
+    fn peripherals_expose_params() {
+        let params = p();
+        assert_eq!(Adc::new(&params).latency(), params.adc_latency);
+        assert_eq!(Adc::new(&params).energy(), params.adc_energy);
+        assert_eq!(Dac::new(&params).latency(), params.dac_latency);
+        assert_eq!(MatchLineSense::new(&params).latency(), params.mlsa_latency);
+        assert_eq!(Driver::new(&params).energy(), params.driver_energy);
+        assert_eq!(SampleHold::new(&params).latency(), params.sh_latency);
+        assert_eq!(ShiftAdd::new(&params).energy(), params.shift_add_energy);
+        assert_eq!(Activation::new(&params).latency(), params.activation_latency);
+    }
+}

@@ -1,0 +1,75 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every IMA-GNN subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration file / value errors (parser, validation, presets).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed JSON (artifact manifest).
+    #[error("json error at byte {offset}: {message}")]
+    Json { offset: usize, message: String },
+
+    /// Graph construction / CSR validation errors.
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// Hardware-model errors (invalid crossbar mapping, sizing).
+    #[error("hardware model error: {0}")]
+    Hardware(String),
+
+    /// Runtime (PJRT / artifact) errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator / serving-path errors.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Simulation errors.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// CLI usage errors.
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Errors surfaced by the `xla` crate (PJRT).
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Config("missing key `rows`".into());
+        assert!(e.to_string().contains("missing key"));
+        let e = Error::Json { offset: 17, message: "unexpected `}`".into() };
+        assert!(e.to_string().contains("byte 17"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,197 @@
+//! Cluster partitioning for the decentralized setting (paper Fig. 4(b)).
+//!
+//! Each edge device exchanges messages only with the adjacent nodes in its
+//! cluster; the cluster size cₛ drives Eq. (4)'s communication latency.
+//! Two partitioners are provided: fixed-size blocking (the paper's taxi
+//! study uses a uniform cₛ = 10) and locality-greedy growth (BFS from
+//! unassigned seeds), which keeps intra-cluster edges high on structured
+//! graphs.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+
+use super::csr::Csr;
+
+/// A partition of nodes into clusters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Clustering {
+    /// `assignment[node] = cluster id`.
+    pub assignment: Vec<usize>,
+    /// Nodes per cluster.
+    pub clusters: Vec<Vec<usize>>,
+}
+
+impl Clustering {
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Average cluster size (the model's cₛ).
+    pub fn avg_size(&self) -> f64 {
+        if self.clusters.is_empty() {
+            return 0.0;
+        }
+        self.assignment.len() as f64 / self.clusters.len() as f64
+    }
+
+    /// Fraction of edges staying inside a cluster.
+    pub fn intra_edge_fraction(&self, graph: &Csr) -> f64 {
+        if graph.num_edges() == 0 {
+            return 1.0;
+        }
+        let intra = (0..graph.num_nodes())
+            .flat_map(|s| graph.neighbors(s).iter().map(move |&d| (s, d)))
+            .filter(|&(s, d)| self.assignment[s] == self.assignment[d])
+            .count();
+        intra as f64 / graph.num_edges() as f64
+    }
+
+    fn validate(&self, num_nodes: usize) -> Result<()> {
+        if self.assignment.len() != num_nodes {
+            return Err(Error::Graph("assignment length mismatch".into()));
+        }
+        let mut seen = vec![false; num_nodes];
+        for (cid, members) in self.clusters.iter().enumerate() {
+            for &m in members {
+                if m >= num_nodes || seen[m] {
+                    return Err(Error::Graph(format!("node {m} misassigned")));
+                }
+                if self.assignment[m] != cid {
+                    return Err(Error::Graph(format!("node {m} assignment mismatch")));
+                }
+                seen[m] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(Error::Graph("unassigned nodes".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Fixed-size blocking: consecutive ids, every cluster exactly
+/// `cluster_size` nodes (last one possibly smaller).
+pub fn fixed_size(num_nodes: usize, cluster_size: usize) -> Result<Clustering> {
+    if cluster_size == 0 {
+        return Err(Error::Graph("cluster size must be > 0".into()));
+    }
+    let mut assignment = vec![0usize; num_nodes];
+    let mut clusters = Vec::new();
+    for start in (0..num_nodes).step_by(cluster_size) {
+        let cid = clusters.len();
+        let end = (start + cluster_size).min(num_nodes);
+        for node in start..end {
+            assignment[node] = cid;
+        }
+        clusters.push((start..end).collect());
+    }
+    let c = Clustering { assignment, clusters };
+    c.validate(num_nodes)?;
+    Ok(c)
+}
+
+/// Locality-greedy clustering: BFS-grow clusters of up to `cluster_size`
+/// nodes from unassigned seeds; keeps neighbors together on structured
+/// graphs (road grids), falling back to id order for disconnected parts.
+pub fn locality(graph: &Csr, cluster_size: usize) -> Result<Clustering> {
+    if cluster_size == 0 {
+        return Err(Error::Graph("cluster size must be > 0".into()));
+    }
+    let n = graph.num_nodes();
+    let mut assignment = vec![usize::MAX; n];
+    let mut clusters: Vec<Vec<usize>> = Vec::new();
+    for seed in 0..n {
+        if assignment[seed] != usize::MAX {
+            continue;
+        }
+        let cid = clusters.len();
+        let mut members = Vec::with_capacity(cluster_size);
+        let mut queue = VecDeque::from([seed]);
+        assignment[seed] = cid;
+        while let Some(node) = queue.pop_front() {
+            members.push(node);
+            if members.len() + queue.len() >= cluster_size {
+                continue;
+            }
+            for &nb in graph.neighbors(node) {
+                if assignment[nb] == usize::MAX && members.len() + queue.len() < cluster_size {
+                    assignment[nb] = cid;
+                    queue.push_back(nb);
+                }
+            }
+        }
+        clusters.push(members);
+    }
+    let c = Clustering { assignment, clusters };
+    c.validate(n)?;
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn fixed_size_partitions_exactly() {
+        let c = fixed_size(25, 10).unwrap();
+        assert_eq!(c.num_clusters(), 3);
+        assert_eq!(c.clusters[0].len(), 10);
+        assert_eq!(c.clusters[2].len(), 5);
+        assert!((c.avg_size() - 25.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_taxi_clustering() {
+        // 10 000 taxis, cₛ = 10 → 1000 clusters of exactly 10.
+        let c = fixed_size(10_000, 10).unwrap();
+        assert_eq!(c.num_clusters(), 1000);
+        assert!(c.clusters.iter().all(|m| m.len() == 10));
+    }
+
+    #[test]
+    fn locality_beats_blocking_on_grids() {
+        let g = generate::grid(16, 16).unwrap();
+        let blocked = fixed_size(g.num_nodes(), 8).unwrap();
+        let local = locality(&g, 8).unwrap();
+        assert!(
+            local.intra_edge_fraction(&g) >= blocked.intra_edge_fraction(&g),
+            "locality {} < blocked {}",
+            local.intra_edge_fraction(&g),
+            blocked.intra_edge_fraction(&g)
+        );
+    }
+
+    #[test]
+    fn property_partitions_are_complete_and_disjoint() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(100) + 1;
+            let k = rng.index(12) + 1;
+            let g = generate::uniform(n.max(2), n * 2, rng.next_u64()).unwrap();
+            for c in [fixed_size(g.num_nodes(), k).unwrap(), locality(&g, k).unwrap()] {
+                // validate() ran inside; additionally sizes never exceed k.
+                assert!(c.clusters.iter().all(|m| m.len() <= k));
+                let total: usize = c.clusters.iter().map(Vec::len).sum();
+                assert_eq!(total, g.num_nodes());
+            }
+        });
+    }
+
+    #[test]
+    fn zero_cluster_size_rejected() {
+        assert!(fixed_size(10, 0).is_err());
+        let g = generate::grid(2, 2).unwrap();
+        assert!(locality(&g, 0).is_err());
+    }
+
+    #[test]
+    fn intra_fraction_bounds() {
+        let g = generate::grid(4, 4).unwrap();
+        let one = fixed_size(g.num_nodes(), g.num_nodes()).unwrap();
+        assert!((one.intra_edge_fraction(&g) - 1.0).abs() < 1e-12);
+        let singles = fixed_size(g.num_nodes(), 1).unwrap();
+        assert_eq!(singles.intra_edge_fraction(&g), 0.0);
+    }
+}

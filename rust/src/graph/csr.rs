@@ -1,0 +1,250 @@
+//! Compressed Sparse Row graph storage (paper Fig. 3(b)).
+//!
+//! The traversal core consumes exactly these three arrays: the Edge weight
+//! array (E), the Column Index array (CI) and the Row Pointer array (RP).
+
+use crate::error::{Error, Result};
+
+/// Directed graph in CSR form.  Row = source node; `column_indices` hold
+/// destination ids; optional edge weights mirror the paper's E array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    num_nodes: usize,
+    /// RP: `row_pointers[i]..row_pointers[i+1]` indexes node i's out-edges.
+    row_pointers: Vec<usize>,
+    /// CI: destination of each edge.
+    column_indices: Vec<usize>,
+    /// E: weight of each edge (1.0 when unweighted).
+    edge_weights: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from an edge list `(src, dst)`.  Edges are sorted per source;
+    /// duplicates are kept (multigraph semantics are the caller's choice).
+    pub fn from_edges(num_nodes: usize, edges: &[(usize, usize)]) -> Result<Csr> {
+        let weighted: Vec<(usize, usize, f32)> =
+            edges.iter().map(|&(s, d)| (s, d, 1.0)).collect();
+        Csr::from_weighted_edges(num_nodes, &weighted)
+    }
+
+    /// Build from a weighted edge list `(src, dst, w)`.
+    pub fn from_weighted_edges(num_nodes: usize, edges: &[(usize, usize, f32)]) -> Result<Csr> {
+        for &(s, d, _) in edges {
+            if s >= num_nodes || d >= num_nodes {
+                return Err(Error::Graph(format!(
+                    "edge ({s}, {d}) out of range for {num_nodes} nodes"
+                )));
+            }
+        }
+        // Counting sort by source: O(V + E).
+        let mut degree = vec![0usize; num_nodes];
+        for &(s, _, _) in edges {
+            degree[s] += 1;
+        }
+        let mut row_pointers = vec![0usize; num_nodes + 1];
+        for i in 0..num_nodes {
+            row_pointers[i + 1] = row_pointers[i] + degree[i];
+        }
+        let mut column_indices = vec![0usize; edges.len()];
+        let mut edge_weights = vec![0f32; edges.len()];
+        let mut cursor = row_pointers.clone();
+        for &(s, d, w) in edges {
+            let at = cursor[s];
+            column_indices[at] = d;
+            edge_weights[at] = w;
+            cursor[s] += 1;
+        }
+        // Deterministic order within a row.
+        for i in 0..num_nodes {
+            let span = row_pointers[i]..row_pointers[i + 1];
+            let mut pairs: Vec<(usize, f32)> = column_indices[span.clone()]
+                .iter()
+                .copied()
+                .zip(edge_weights[span.clone()].iter().copied())
+                .collect();
+            pairs.sort_by_key(|(d, _)| *d);
+            for (k, (d, w)) in pairs.into_iter().enumerate() {
+                column_indices[span.start + k] = d;
+                edge_weights[span.start + k] = w;
+            }
+        }
+        Ok(Csr { num_nodes, row_pointers, column_indices, edge_weights })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.column_indices.len()
+    }
+
+    /// RP array.
+    pub fn row_pointers(&self) -> &[usize] {
+        &self.row_pointers
+    }
+
+    /// CI array.
+    pub fn column_indices(&self) -> &[usize] {
+        &self.column_indices
+    }
+
+    /// E array.
+    pub fn edge_weights(&self) -> &[f32] {
+        &self.edge_weights
+    }
+
+    /// Out-neighbors of `node`.
+    pub fn neighbors(&self, node: usize) -> &[usize] {
+        let span = self.row_pointers[node]..self.row_pointers[node + 1];
+        &self.column_indices[span]
+    }
+
+    /// Out-degree of `node`.
+    pub fn degree(&self, node: usize) -> usize {
+        self.row_pointers[node + 1] - self.row_pointers[node]
+    }
+
+    /// Average degree — the paper's "Average Cₛ" statistic.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes == 0 {
+            return 0.0;
+        }
+        self.num_edges() as f64 / self.num_nodes as f64
+    }
+
+    /// Reverse graph (in-edges become out-edges) — what the traversal
+    /// core's destination-major lookup effectively computes.
+    pub fn reverse(&self) -> Csr {
+        let mut edges = Vec::with_capacity(self.num_edges());
+        for src in 0..self.num_nodes {
+            for (k, &dst) in self.neighbors(src).iter().enumerate() {
+                let w = self.edge_weights[self.row_pointers[src] + k];
+                edges.push((dst, src, w));
+            }
+        }
+        Csr::from_weighted_edges(self.num_nodes, &edges).expect("reverse edges are in range")
+    }
+
+    /// Structural validation: monotone RP, in-range CI, matching lengths.
+    pub fn validate(&self) -> Result<()> {
+        if self.row_pointers.len() != self.num_nodes + 1 {
+            return Err(Error::Graph("RP length must be num_nodes + 1".into()));
+        }
+        if self.row_pointers[0] != 0 || *self.row_pointers.last().unwrap() != self.num_edges() {
+            return Err(Error::Graph("RP must span [0, num_edges]".into()));
+        }
+        if self.row_pointers.windows(2).any(|w| w[0] > w[1]) {
+            return Err(Error::Graph("RP must be non-decreasing".into()));
+        }
+        if self.column_indices.iter().any(|&c| c >= self.num_nodes) {
+            return Err(Error::Graph("CI entry out of range".into()));
+        }
+        if self.edge_weights.len() != self.column_indices.len() {
+            return Err(Error::Graph("E/CI length mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, Rng};
+
+    /// The adjacency of paper Fig. 3(a) (4 nodes).
+    fn fig3() -> Csr {
+        Csr::from_edges(4, &[(0, 1), (0, 3), (1, 2), (2, 0), (2, 3), (3, 1)]).unwrap()
+    }
+
+    #[test]
+    fn csr_arrays_match_hand_computation() {
+        let g = fig3();
+        assert_eq!(g.row_pointers(), &[0, 2, 3, 5, 6]);
+        assert_eq!(g.column_indices(), &[1, 3, 2, 0, 3, 1]);
+        assert_eq!(g.num_edges(), 6);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn neighbors_and_degree() {
+        let g = fig3();
+        assert_eq!(g.neighbors(0), &[1, 3]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.degree(1), 1);
+        assert!((g.avg_degree() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn isolated_nodes_have_empty_rows() {
+        let g = Csr::from_edges(5, &[(0, 4)]).unwrap();
+        assert_eq!(g.degree(1), 0);
+        assert_eq!(g.neighbors(2), &[] as &[usize]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn weights_follow_their_edges() {
+        let g = Csr::from_weighted_edges(3, &[(0, 2, 0.5), (0, 1, 2.0), (2, 0, 7.0)]).unwrap();
+        // row 0 sorted by destination: (1, 2.0), (2, 0.5)
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.edge_weights()[0], 2.0);
+        assert_eq!(g.edge_weights()[1], 0.5);
+        assert_eq!(g.edge_weights()[2], 7.0);
+    }
+
+    #[test]
+    fn reverse_flips_every_edge() {
+        let g = fig3();
+        let r = g.reverse();
+        assert_eq!(r.num_edges(), g.num_edges());
+        for src in 0..4 {
+            for &dst in g.neighbors(src) {
+                assert!(r.neighbors(dst).contains(&src), "{src}->{dst} missing in reverse");
+            }
+        }
+        // double reverse = original connectivity
+        let rr = r.reverse();
+        for n in 0..4 {
+            assert_eq!(rr.neighbors(n), g.neighbors(n));
+        }
+    }
+
+    #[test]
+    fn property_csr_roundtrips_edge_list() {
+        forall(32, |rng: &mut Rng| {
+            let n = rng.index(30) + 1;
+            let m = rng.index(80);
+            let mut edges: Vec<(usize, usize)> =
+                (0..m).map(|_| (rng.index(n), rng.index(n))).collect();
+            let g = Csr::from_edges(n, &edges).unwrap();
+            g.validate().unwrap();
+            assert_eq!(g.num_edges(), m);
+            // Every input edge appears exactly as many times as given.
+            let mut got: Vec<(usize, usize)> = (0..n)
+                .flat_map(|s| g.neighbors(s).iter().map(move |&d| (s, d)))
+                .collect();
+            got.sort_unstable();
+            edges.sort_unstable();
+            assert_eq!(got, edges);
+            // Degree sums to edge count.
+            let deg_sum: usize = (0..n).map(|i| g.degree(i)).sum();
+            assert_eq!(deg_sum, m);
+        });
+    }
+
+    #[test]
+    fn rejects_out_of_range_edges() {
+        assert!(Csr::from_edges(2, &[(0, 2)]).is_err());
+        assert!(Csr::from_edges(2, &[(5, 0)]).is_err());
+    }
+
+    #[test]
+    fn empty_graph_is_valid() {
+        let g = Csr::from_edges(0, &[]).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.avg_degree(), 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Dataset registry: the Table 2 graphs.
+//!
+//! | Dataset     | Nodes     | Edges      | Feature length | Avg Cₛ |
+//! |-------------|-----------|------------|----------------|--------|
+//! | LiveJournal | 4,847,571 | 68,993,773 | 1              | 9      |
+//! | Collab      | 372,475   | 24,574,995 | 496            | 263    |
+//! | Cora        | 2,708     | 5,429      | 1433           | 4      |
+//! | Citeseer    | 3,327     | 4,732      | 3703           | 2      |
+//!
+//! The analytical model (netmodel / Fig. 8) consumes only these statistics;
+//! `materialize` additionally generates a stat-matched synthetic graph for
+//! the functional / simulator paths (DESIGN.md §2 substitution).
+
+use crate::error::{Error, Result};
+
+use super::csr::Csr;
+use super::generate;
+
+/// Published statistics of one dataset (Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub name: &'static str,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Local feature vector length.
+    pub feature_len: usize,
+    /// Average cluster size (average degree) — the paper's Cₛ.
+    pub avg_cs: usize,
+    /// Power-law degree structure (drives the generator choice).
+    pub skewed: bool,
+}
+
+/// LiveJournal social network.
+pub fn livejournal() -> DatasetStats {
+    DatasetStats {
+        name: "LiveJournal",
+        nodes: 4_847_571,
+        edges: 68_993_773,
+        feature_len: 1,
+        avg_cs: 9,
+        skewed: true,
+    }
+}
+
+/// OGB-Collab collaboration network.
+pub fn collab() -> DatasetStats {
+    DatasetStats {
+        name: "Collab",
+        nodes: 372_475,
+        edges: 24_574_995,
+        feature_len: 496,
+        avg_cs: 263,
+        skewed: false,
+    }
+}
+
+/// Cora citation network.
+pub fn cora() -> DatasetStats {
+    DatasetStats { name: "Cora", nodes: 2_708, edges: 5_429, feature_len: 1433, avg_cs: 4, skewed: false }
+}
+
+/// Citeseer citation network.
+pub fn citeseer() -> DatasetStats {
+    DatasetStats {
+        name: "Citeseer",
+        nodes: 3_327,
+        edges: 4_732,
+        feature_len: 3703,
+        avg_cs: 2,
+        skewed: false,
+    }
+}
+
+/// The four Table 2 datasets in paper order.
+pub fn all() -> Vec<DatasetStats> {
+    vec![livejournal(), collab(), cora(), citeseer()]
+}
+
+/// Look a dataset up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Result<DatasetStats> {
+    let lower = name.to_ascii_lowercase();
+    all()
+        .into_iter()
+        .find(|d| d.name.to_ascii_lowercase() == lower)
+        .ok_or_else(|| {
+            Error::Graph(format!(
+                "unknown dataset `{name}` (expected one of LiveJournal, Collab, Cora, Citeseer)"
+            ))
+        })
+}
+
+impl DatasetStats {
+    /// Generate a synthetic graph with these statistics.
+    ///
+    /// `max_nodes` caps the materialized size (LiveJournal at full scale
+    /// does not fit a functional CAM model); scaling preserves the average
+    /// degree so per-node workloads stay faithful.
+    pub fn materialize(&self, max_nodes: usize, seed: u64) -> Result<Csr> {
+        let nodes = self.nodes.min(max_nodes).max(2);
+        let edges =
+            ((self.edges as f64 * nodes as f64 / self.nodes as f64).round() as usize).max(1);
+        if self.skewed {
+            generate::rmat(nodes, edges, &generate::RmatParams::default(), seed)
+        } else {
+            generate::uniform(nodes, edges, seed)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_statistics_are_exact() {
+        let lj = livejournal();
+        assert_eq!((lj.nodes, lj.edges, lj.feature_len, lj.avg_cs), (4_847_571, 68_993_773, 1, 9));
+        let co = collab();
+        assert_eq!((co.nodes, co.edges, co.feature_len, co.avg_cs), (372_475, 24_574_995, 496, 263));
+        let c = cora();
+        assert_eq!((c.nodes, c.edges, c.feature_len, c.avg_cs), (2_708, 5_429, 1433, 4));
+        let cs = citeseer();
+        assert_eq!((cs.nodes, cs.edges, cs.feature_len, cs.avg_cs), (3_327, 4_732, 3703, 2));
+    }
+
+    #[test]
+    fn registry_order_matches_paper() {
+        let names: Vec<&str> = all().iter().map(|d| d.name).collect();
+        assert_eq!(names, vec!["LiveJournal", "Collab", "Cora", "Citeseer"]);
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert_eq!(by_name("cora").unwrap().name, "Cora");
+        assert_eq!(by_name("LIVEJOURNAL").unwrap().name, "LiveJournal");
+        assert!(by_name("imaginary").is_err());
+    }
+
+    #[test]
+    fn materialize_scales_preserving_avg_degree() {
+        let lj = livejournal();
+        let g = lj.materialize(10_000, 42).unwrap();
+        assert!(g.num_nodes() <= 10_000);
+        let want_avg = lj.edges as f64 / lj.nodes as f64;
+        let got_avg = g.avg_degree();
+        assert!(
+            (got_avg - want_avg).abs() / want_avg < 0.05,
+            "avg degree drifted: {got_avg} vs {want_avg}"
+        );
+    }
+
+    #[test]
+    fn materialize_small_graph_exactly() {
+        let c = cora();
+        let g = c.materialize(usize::MAX, 1).unwrap();
+        assert_eq!(g.num_nodes(), 2_708);
+        assert_eq!(g.num_edges(), 5_429);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn avg_cs_consistent_with_edge_counts() {
+        // Table 2's Avg Cs ~ E/N (within rounding of the paper's values).
+        for d in all() {
+            let ratio = d.edges as f64 / d.nodes as f64;
+            // Collab's published Cs=263 reflects the undirected expansion;
+            // allow a generous envelope, but the order must hold.
+            assert!(
+                ratio > 0.5 * d.avg_cs as f64 / 4.0,
+                "{}: E/N {ratio} vs Cs {}",
+                d.name,
+                d.avg_cs
+            );
+        }
+    }
+}

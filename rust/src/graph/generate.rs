@@ -1,0 +1,216 @@
+//! Synthetic graph generators.
+//!
+//! The paper's datasets (Table 2) are not redistributable here, so we
+//! generate graphs matching their published statistics (DESIGN.md §2):
+//! a *configuration-model* generator reproduces (N, E) with a chosen degree
+//! profile, and an *R-MAT* generator reproduces the power-law structure of
+//! LiveJournal-class social graphs.
+
+use crate::error::{Error, Result};
+use crate::testing::Rng;
+
+use super::csr::Csr;
+
+/// Uniform configuration model: `num_edges` directed edges with endpoints
+/// drawn uniformly (self-loops excluded, duplicates allowed — matching how
+/// edge *counts* enter the paper's model).
+pub fn uniform(num_nodes: usize, num_edges: usize, seed: u64) -> Result<Csr> {
+    if num_nodes < 2 && num_edges > 0 {
+        return Err(Error::Graph("need >= 2 nodes for edges".into()));
+    }
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        let s = rng.index(num_nodes);
+        let mut d = rng.index(num_nodes);
+        if d == s {
+            d = (d + 1) % num_nodes;
+        }
+        edges.push((s, d));
+    }
+    Csr::from_edges(num_nodes, &edges)
+}
+
+/// R-MAT generator (Chakrabarti et al.) — recursive quadrant sampling with
+/// probabilities (a, b, c, d); defaults (0.57, 0.19, 0.19, 0.05) give the
+/// skewed degree distribution of social graphs.
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19 }
+    }
+}
+
+pub fn rmat(num_nodes: usize, num_edges: usize, params: &RmatParams, seed: u64) -> Result<Csr> {
+    if num_nodes == 0 {
+        return Err(Error::Graph("rmat needs at least one node".into()));
+    }
+    let d = 1.0 - params.a - params.b - params.c;
+    if !(d >= 0.0 && params.a >= 0.0 && params.b >= 0.0 && params.c >= 0.0) {
+        return Err(Error::Graph("rmat probabilities must be a valid distribution".into()));
+    }
+    let scale = (num_nodes as f64).log2().ceil() as u32;
+    let side = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(num_edges);
+    while edges.len() < num_edges {
+        let (mut r0, mut r1) = (0usize, side);
+        let (mut c0, mut c1) = (0usize, side);
+        while r1 - r0 > 1 {
+            let u = rng.f64();
+            let (top, left) = if u < params.a {
+                (true, true)
+            } else if u < params.a + params.b {
+                (true, false)
+            } else if u < params.a + params.b + params.c {
+                (false, true)
+            } else {
+                (false, false)
+            };
+            let rm = (r0 + r1) / 2;
+            let cm = (c0 + c1) / 2;
+            if top {
+                r1 = rm;
+            } else {
+                r0 = rm;
+            }
+            if left {
+                c1 = cm;
+            } else {
+                c0 = cm;
+            }
+        }
+        let (s, t) = (r0 % num_nodes, c0 % num_nodes);
+        if s != t {
+            edges.push((s, t));
+        }
+    }
+    Csr::from_edges(num_nodes, &edges)
+}
+
+/// 2-D grid graph with 4-neighborhood (road-network-like substrate for the
+/// taxi workload).
+pub fn grid(rows: usize, cols: usize) -> Result<Csr> {
+    let n = rows * cols;
+    if n == 0 {
+        return Err(Error::Graph("grid must be non-empty".into()));
+    }
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            if c + 1 < cols {
+                edges.push((i, i + 1));
+                edges.push((i + 1, i));
+            }
+            if r + 1 < rows {
+                edges.push((i, i + cols));
+                edges.push((i + cols, i));
+            }
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// Regular random graph: every node gets exactly `degree` out-edges to
+/// distinct non-self targets — matches the paper's fixed-size uniform
+/// neighbor sampling (§4.3).
+pub fn regular(num_nodes: usize, degree: usize, seed: u64) -> Result<Csr> {
+    if degree >= num_nodes && num_nodes > 0 {
+        return Err(Error::Graph(format!(
+            "degree {degree} needs at least {} nodes",
+            degree + 1
+        )));
+    }
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(num_nodes * degree);
+    for s in 0..num_nodes {
+        // sample `degree` distinct targets != s
+        let mut picked = rng.sample_distinct(num_nodes - 1, degree);
+        for t in picked.iter_mut() {
+            if *t >= s {
+                *t += 1;
+            }
+        }
+        for t in picked {
+            edges.push((s, t));
+        }
+    }
+    Csr::from_edges(num_nodes, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_hits_exact_counts() {
+        let g = uniform(100, 450, 7).unwrap();
+        assert_eq!(g.num_nodes(), 100);
+        assert_eq!(g.num_edges(), 450);
+        g.validate().unwrap();
+        // no self loops
+        for s in 0..100 {
+            assert!(!g.neighbors(s).contains(&s));
+        }
+    }
+
+    #[test]
+    fn uniform_is_deterministic_per_seed() {
+        assert_eq!(uniform(50, 100, 3).unwrap(), uniform(50, 100, 3).unwrap());
+        assert_ne!(uniform(50, 100, 3).unwrap(), uniform(50, 100, 4).unwrap());
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(1 << 10, 8 << 10, &RmatParams::default(), 11).unwrap();
+        assert_eq!(g.num_edges(), 8 << 10);
+        let mut degrees: Vec<usize> = (0..g.num_nodes()).map(|i| g.degree(i)).collect();
+        degrees.sort_unstable_by(|a, b| b.cmp(a));
+        // top 1% of nodes own far more than 1% of edges (power law).
+        let top: usize = degrees.iter().take(degrees.len() / 100).sum();
+        assert!(
+            top as f64 > 0.10 * g.num_edges() as f64,
+            "top-1% share {top} of {} edges",
+            g.num_edges()
+        );
+    }
+
+    #[test]
+    fn rmat_rejects_bad_probs() {
+        assert!(rmat(16, 16, &RmatParams { a: 0.9, b: 0.9, c: 0.9 }, 1).is_err());
+    }
+
+    #[test]
+    fn grid_has_interior_degree_four() {
+        let g = grid(5, 5).unwrap();
+        assert_eq!(g.num_nodes(), 25);
+        assert_eq!(g.degree(12), 4); // center
+        assert_eq!(g.degree(0), 2); // corner
+        assert_eq!(g.degree(2), 3); // edge
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn regular_has_exact_degree_no_self_loops_no_dups() {
+        let g = regular(40, 7, 5).unwrap();
+        for s in 0..40 {
+            assert_eq!(g.degree(s), 7);
+            let ns = g.neighbors(s);
+            assert!(!ns.contains(&s));
+            let mut sorted = ns.to_vec();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 7, "duplicate targets for node {s}");
+        }
+    }
+
+    #[test]
+    fn regular_rejects_impossible_degree() {
+        assert!(regular(5, 5, 1).is_err());
+    }
+}

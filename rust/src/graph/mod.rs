@@ -1,0 +1,13 @@
+//! Graph substrate: CSR storage, generators, the Table 2 dataset registry,
+//! neighbor sampling and cluster partitioning.
+
+mod cluster;
+mod csr;
+pub mod datasets;
+pub mod generate;
+mod sample;
+
+pub use cluster::{fixed_size, locality, Clustering};
+pub use csr::Csr;
+pub use datasets::DatasetStats;
+pub use sample::NeighborSampler;

@@ -1,0 +1,135 @@
+//! Fixed-size uniform neighbor sampling (paper §4.3: "a given vertex is
+//! mapped deterministically to a fixed-sized, uniform sample of its
+//! neighbors").
+//!
+//! Deterministic: the sample of a node depends only on (graph, node,
+//! sample size, seed) — re-sampling yields the same neighbors, as required
+//! for reproducible inference and for matching the AOT artifact's `[B, S]`
+//! neighbor-index input.
+
+use crate::testing::Rng;
+
+use super::csr::Csr;
+
+/// Deterministic uniform neighbor sampler.
+#[derive(Debug, Clone)]
+pub struct NeighborSampler {
+    sample_size: usize,
+    seed: u64,
+}
+
+impl NeighborSampler {
+    pub fn new(sample_size: usize, seed: u64) -> NeighborSampler {
+        NeighborSampler { sample_size, seed }
+    }
+
+    pub fn sample_size(&self) -> usize {
+        self.sample_size
+    }
+
+    /// Sample up to `sample_size` distinct neighbors of `node`; nodes with
+    /// fewer neighbors yield them all.  Output is padded with `None`.
+    pub fn sample(&self, graph: &Csr, node: usize) -> Vec<Option<usize>> {
+        let neighbors = graph.neighbors(node);
+        let mut out = Vec::with_capacity(self.sample_size);
+        if neighbors.len() <= self.sample_size {
+            out.extend(neighbors.iter().map(|&n| Some(n)));
+        } else {
+            // Node-keyed RNG makes the mapping deterministic per vertex.
+            let mut rng = Rng::new(self.seed ^ (node as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let picks = rng.sample_distinct(neighbors.len(), self.sample_size);
+            out.extend(picks.into_iter().map(|i| Some(neighbors[i])));
+        }
+        out.resize(self.sample_size, None);
+        out
+    }
+
+    /// Sample as an `i32` index row (`-1` = padding) — the exact input
+    /// format of the AOT artifacts' `nbr_idx` parameter.
+    pub fn sample_row(&self, graph: &Csr, node: usize) -> Vec<i32> {
+        self.sample(graph, node)
+            .into_iter()
+            .map(|o| o.map(|n| n as i32).unwrap_or(-1))
+            .collect()
+    }
+
+    /// Sample a batch of nodes into a flattened `[batch, sample_size]`
+    /// row-major index matrix.
+    pub fn sample_batch(&self, graph: &Csr, nodes: &[usize]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(nodes.len() * self.sample_size);
+        for &n in nodes {
+            out.extend(self.sample_row(graph, n));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::testing::{forall, Rng};
+
+    fn line_graph(n: usize) -> Csr {
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Csr::from_edges(n, &edges).unwrap()
+    }
+
+    #[test]
+    fn undersized_neighborhoods_pad() {
+        let g = line_graph(4);
+        let s = NeighborSampler::new(3, 1);
+        assert_eq!(s.sample(&g, 0), vec![Some(1), None, None]);
+        assert_eq!(s.sample_row(&g, 3), vec![-1, -1, -1]); // last node: no out-edges
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let g = generate::regular(50, 10, 3).unwrap();
+        let s = NeighborSampler::new(4, 9);
+        for node in 0..50 {
+            assert_eq!(s.sample(&g, node), s.sample(&g, node));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ_somewhere() {
+        let g = generate::regular(50, 10, 3).unwrap();
+        let a = NeighborSampler::new(4, 1);
+        let b = NeighborSampler::new(4, 2);
+        assert!((0..50).any(|n| a.sample(&g, n) != b.sample(&g, n)));
+    }
+
+    #[test]
+    fn property_samples_are_distinct_valid_neighbors() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(30) + 5;
+            let deg = rng.index(n - 2) + 1;
+            let g = generate::regular(n, deg, rng.next_u64()).unwrap();
+            let k = rng.index(8) + 1;
+            let s = NeighborSampler::new(k, rng.next_u64());
+            for node in 0..n {
+                let sample = s.sample(&g, node);
+                let picked: Vec<usize> = sample.iter().flatten().copied().collect();
+                assert_eq!(picked.len(), k.min(deg));
+                let mut dedup = picked.clone();
+                dedup.sort_unstable();
+                dedup.dedup();
+                assert_eq!(dedup.len(), picked.len(), "duplicates for node {node}");
+                for p in picked {
+                    assert!(g.neighbors(node).contains(&p));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batch_layout_is_row_major() {
+        let g = line_graph(5);
+        let s = NeighborSampler::new(2, 1);
+        let batch = s.sample_batch(&g, &[0, 1]);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(&batch[..2], &s.sample_row(&g, 0)[..]);
+        assert_eq!(&batch[2..], &s.sample_row(&g, 1)[..]);
+    }
+}

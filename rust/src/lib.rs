@@ -1,0 +1,42 @@
+//! # IMA-GNN — In-Memory Acceleration of Centralized and Decentralized GNNs at the Edge
+//!
+//! Reproduction of the IMA-GNN paper (Morsali et al., 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — Pallas kernels emulating the
+//!   resistive MVM / CAM crossbars (bit-serial quantized MVM, search, scan).
+//! * **Layer 2** (`python/compile/`) — JAX GNN models (GCN, hetGNN-LSTM)
+//!   lowered once to HLO-text artifacts.
+//! * **Layer 3** (this crate) — the edge coordinator, the bottom-up
+//!   hardware model (device → crossbar → core), the centralized /
+//!   decentralized network model (paper Eqs. 1–7), a discrete-event
+//!   simulator, and the PJRT runtime that executes the AOT artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! models once; the `ima-gnn` binary and the examples are self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod cores;
+pub mod crossbar;
+pub mod device;
+pub mod error;
+pub mod experiments;
+pub mod graph;
+pub mod json;
+pub mod netmodel;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod units;
+pub mod workload;
+
+pub use error::{Error, Result};
+pub use units::{Area, Energy, Power, Time};

@@ -1,0 +1,311 @@
+//! `ima-gnn` — the IMA-GNN leader binary.
+//!
+//! Subcommands regenerate the paper's evaluation artifacts and drive the
+//! serving stack:
+//!
+//! ```text
+//! ima-gnn table1                  # E1: Table 1 (taxi case study)
+//! ima-gnn table2                  # E2: dataset statistics
+//! ima-gnn fig8                    # E3: Fig. 8 latency breakdown
+//! ima-gnn scaling                 # E4: crossbar-count scaling study
+//! ima-gnn simulate [options]      # DES over either deployment
+//! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
+//! ima-gnn info                    # artifact + platform info
+//! ```
+
+use std::time::Duration;
+
+use ima_gnn::cli::Command;
+use ima_gnn::coordinator::{CentralizedLeader, GcnLayerBinding, InferenceService, Request};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::error::{Error, Result};
+use ima_gnn::experiments::{scaling_sweep, table2, Fig8, Table1};
+use ima_gnn::graph::generate;
+use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::report::{speedup, Table};
+use ima_gnn::runtime::{default_artifact_dir, Manifest};
+use ima_gnn::sim::{simulate, SimConfig};
+use ima_gnn::testing::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let sub = argv.first().map(String::as_str).unwrap_or("help");
+    let rest = if argv.is_empty() { &[] } else { &argv[1..] };
+    match sub {
+        "table1" => cmd_table1(rest),
+        "table2" => cmd_table2(rest),
+        "fig8" => cmd_fig8(rest),
+        "scaling" => cmd_scaling(rest),
+        "simulate" => cmd_simulate(rest),
+        "serve" => cmd_serve(rest),
+        "area" => cmd_area(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown subcommand `{other}`; try `ima-gnn help`"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ima-gnn — In-Memory Acceleration of Centralized and Decentralized GNNs at the Edge\n\n\
+         subcommands:\n  \
+         table1     reproduce Table 1 (taxi case study latency/power)\n  \
+         table2     dataset statistics (Table 2) + materialized check\n  \
+         fig8       latency breakdown per dataset and setting (Fig. 8)\n  \
+         scaling    crossbar-count scaling study (§4.3)\n  \
+         simulate   discrete-event simulation of either deployment\n  \
+         serve      serve GCN-layer inference over the PJRT artifacts\n  \
+         area       silicon-area report for both accelerator presets\n  \
+         info       artifact manifest + platform info\n  \
+         help       this message"
+    );
+}
+
+fn cmd_table1(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("table1", "reproduce Table 1")
+        .opt("nodes", "edge devices N", Some("10000"))
+        .opt("cluster", "cluster size cs", Some("10"))
+        .opt("csv", "also write the table as CSV to this path", None);
+    let args = cmd.parse(argv)?;
+    let mut t1 = Table1::new()?;
+    t1.topo = Topology {
+        nodes: args.usize_or("nodes", 10_000)?,
+        cluster_size: args.usize_or("cluster", 10)?,
+    };
+    let table = t1.render();
+    table.print();
+    if let Some(path) = args.get("csv") {
+        table.write_csv(std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    if t1.topo.nodes == 10_000 && t1.topo.cluster_size == 10 {
+        println!("max relative error vs paper: {:.2}%", t1.max_relative_error() * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_table2(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("table2", "dataset statistics")
+        .opt("cap", "max materialized nodes per dataset", Some("20000"))
+        .opt("csv", "also write the table as CSV to this path", None);
+    let args = cmd.parse(argv)?;
+    let table = table2(args.usize_or("cap", 20_000)?)?;
+    table.print();
+    if let Some(path) = args.get("csv") {
+        table.write_csv(std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig8(argv: &[String]) -> Result<()> {
+    Command::new("fig8", "Fig. 8 latency breakdown").parse(argv)?;
+    let f = Fig8::new()?;
+    f.render().print();
+    println!("\n{}", f.summary());
+    Ok(())
+}
+
+fn cmd_scaling(argv: &[String]) -> Result<()> {
+    Command::new("scaling", "crossbar scaling study").parse(argv)?;
+    let rows = scaling_sweep(&GnnWorkload::taxi())?;
+    let mut t = Table::new(
+        "§4.3 scaling — decentralized per-node figures vs crossbars per core",
+        &["Crossbars/core", "Per-node latency", "Per-node power", "Speedup vs 1"],
+    );
+    let base = rows[0].1;
+    for (k, lat, mw) in &rows {
+        t.row(&[
+            k.to_string(),
+            lat.to_string(),
+            format!("{mw:.2} mW"),
+            speedup(base / *lat),
+        ]);
+    }
+    t.print();
+    println!(
+        "performance increases ~linearly with crossbar count and saturates once the\n\
+         node feature data fits onto the crossbars, at the cost of per-node power (§4.3)."
+    );
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("simulate", "discrete-event simulation")
+        .opt("setting", "centralized | decentralized", Some("decentralized"))
+        .opt("nodes", "edge devices", Some("1000"))
+        .opt("cluster", "cluster size", Some("10"))
+        .opt("jitter", "link jitter fraction", Some("0"))
+        .opt("seed", "rng seed", Some("1"))
+        .flag("shared-medium", "serialize intra-cluster radio (CSMA)")
+        .flag("overlap", "overlap aggregation and feature extraction");
+    let args = cmd.parse(argv)?;
+    let setting = match args.get_or("setting", "decentralized") {
+        "centralized" => Setting::Centralized,
+        "decentralized" => Setting::Decentralized,
+        other => return Err(Error::Usage(format!("unknown setting `{other}`"))),
+    };
+    let topo = Topology {
+        nodes: args.usize_or("nodes", 1000)?,
+        cluster_size: args.usize_or("cluster", 10)?,
+    };
+    let cfg = SimConfig {
+        link_jitter: args.f64_or("jitter", 0.0)?,
+        shared_medium: args.flag("shared-medium"),
+        overlap_cores: args.flag("overlap"),
+        seed: args.usize_or("seed", 1)? as u64,
+    };
+    let model = NetModel::paper(&GnnWorkload::taxi())?;
+    let report = simulate(&model, setting, topo, &cfg)?;
+    let analytic = model.latency(setting, topo);
+    let mut t = Table::new(
+        format!("DES — {setting:?}, N={}, cs={}", topo.nodes, topo.cluster_size),
+        &["Metric", "Simulated", "Analytical (Eqs. 1-5)"],
+    );
+    t.row(&[
+        "completion".into(),
+        report.completion.to_string(),
+        analytic.total().to_string(),
+    ]);
+    t.row(&[
+        "communication done".into(),
+        report.comm_done.to_string(),
+        analytic.communicate.to_string(),
+    ]);
+    t.row(&["events".into(), report.events.to_string(), "-".into()]);
+    t.row(&[
+        "leader utilization".into(),
+        format!("{:.1}%", report.leader_utilization * 100.0),
+        "-".into(),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "serve GCN inference over PJRT")
+        .opt("requests", "requests to serve", Some("64"))
+        .opt("nodes", "graph nodes (<= artifact table)", Some("48"))
+        .opt("degree", "graph degree", Some("6"))
+        .opt("artifacts", "artifact directory", None);
+    let args = cmd.parse(argv)?;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let n_req = args.usize_or("requests", 64)?;
+    let nodes = args.usize_or("nodes", 48)?;
+    let degree = args.usize_or("degree", 6)?;
+
+    let svc = InferenceService::start(dir.clone())?;
+    let manifest = Manifest::load(&dir)?;
+    let binding = GcnLayerBinding::from_spec(manifest.get("gcn_layer_small")?)?;
+    let feature = binding.feature;
+    let graph = generate::regular(nodes, degree.min(nodes - 1), 3)?;
+    let mut rng = Rng::new(7);
+    let weights: Vec<f32> =
+        (0..binding.feature * binding.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    let mut leader = CentralizedLeader::new(
+        binding,
+        graph,
+        weights,
+        &GnnWorkload::gcn("serve", feature, degree),
+        Duration::from_millis(5),
+    )?;
+    for node in 0..nodes {
+        let f: Vec<f32> = (0..feature).map(|_| rng.f64_in(0.0, 1.0) as f32).collect();
+        leader.upload(node, &f)?;
+    }
+    leader.end_round();
+    // Compile outside the timed window: the paper's deployment compiles
+    // once at provisioning time, not per request.
+    svc.warm("gcn_layer_small")?;
+
+    let t0 = std::time::Instant::now();
+    let mut served = 0usize;
+    let mut wall_total = Duration::ZERO;
+    for id in 0..n_req as u64 {
+        let node = rng.index(nodes);
+        for r in leader.submit(&svc, Request { id, node })? {
+            served += 1;
+            wall_total += r.wall;
+        }
+    }
+    for r in leader.drain(&svc)? {
+        served += 1;
+        wall_total += r.wall;
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "served {served} requests in {:.1} ms ({:.0} req/s, {} batches, mean PJRT wall/request {:.3} ms)",
+        elapsed.as_secs_f64() * 1e3,
+        served as f64 / elapsed.as_secs_f64(),
+        leader.served_batches(),
+        wall_total.as_secs_f64() * 1e3 / served.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn cmd_area(argv: &[String]) -> Result<()> {
+    Command::new("area", "silicon-area report").parse(argv)?;
+    use ima_gnn::config::presets;
+    use ima_gnn::device::area;
+    let mut t = Table::new(
+        "silicon area (45 nm behavioral roll-up)",
+        &["Preset", "Traversal", "Aggregation", "Feature extraction", "Total"],
+    );
+    for (name, cfg) in
+        [("centralized", presets::centralized()), ("decentralized node", presets::decentralized())]
+    {
+        let (tr, ag, fe, total) = area::accelerator(&cfg);
+        t.row(&[
+            name.into(),
+            tr.to_string(),
+            ag.to_string(),
+            fe.to_string(),
+            total.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "artifact + platform info")
+        .opt("artifacts", "artifact directory", None);
+    let args = cmd.parse(argv)?;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    println!("ima-gnn {} — artifact dir: {}", env!("CARGO_PKG_VERSION"), dir.display());
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            let mut t = Table::new("artifacts", &["Name", "Inputs", "Outputs", "File"]);
+            for a in m.artifacts() {
+                t.row(&[
+                    a.name.clone(),
+                    a.inputs.len().to_string(),
+                    a.outputs.len().to_string(),
+                    a.file.clone(),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    Ok(())
+}

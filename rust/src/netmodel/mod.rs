@@ -1,0 +1,569 @@
+//! Network modeling (paper §3): composes the per-node core figures and the
+//! link models into the centralized / decentralized latency & power
+//! equations (1)–(7), plus the semi-decentralized extension the paper's
+//! conclusion calls for (E8).
+//!
+//! Equation map:
+//! * Eq. (1)  `T_Net = T_compute + T_communicate`            → [`NetModel::latency`]
+//! * Eq. (2)  `T_compute-dec = t₁ + t₂ + t₃`                 → [`NetModel::compute_latency`]
+//! * Eq. (3)  `T_compute-cent = (t₁/M₁ + t₂/M₂ + t₃/M₃)(N−1)`
+//! * Eq. (4)  `T_comm-dec = (tₑ + cₛ·t(L_c))·2`  (the paper's (4)/(5)
+//!   labels are swapped: (4) describes the decentralized cluster exchange)
+//! * Eq. (5)  `T_comm-cent = t(L_n)` (concurrent transfers)
+//! * Eq. (6)  `P_Net = P_compute + P_communicate`            → [`NetModel::power`]
+//! * Eq. (7)  `P_comm-dec = (1/t(L_c)) Σ_{x=1}^{X−1} α(x+1)·E_perBit`
+
+use crate::comm::{InterClusterLink, InterNetworkLink};
+use crate::config::{AcceleratorConfig, CommConfig};
+use crate::cores::{Accelerator, CoreBreakdown, GnnWorkload};
+use crate::error::Result;
+use crate::units::{Power, Time};
+
+/// Deployment setting (paper Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Setting {
+    Centralized,
+    Decentralized,
+}
+
+/// Edge-graph topology parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of edge devices N.
+    pub nodes: usize,
+    /// Cluster size cₛ (adjacent nodes exchanged with, decentralized).
+    pub cluster_size: usize,
+}
+
+impl Topology {
+    /// The paper's taxi study: N = 10 000, cₛ = 10.
+    pub fn taxi() -> Topology {
+        Topology { nodes: 10_000, cluster_size: 10 }
+    }
+}
+
+/// Concurrently-active crossbar banks in the centralized cores.
+///
+/// The centralized accelerator has Mᵢ× the crossbars but the shared vector
+/// generator & scheduler and the core bus bound how many banks stream
+/// simultaneously; average power scales with this activity, not with Mᵢ.
+/// Values fitted to Table 1's centralized power column (DESIGN.md §4):
+/// 10.8/0.21, 780.1/41.6, 32.21/3.68.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActivityFactors {
+    pub traversal: f64,
+    pub aggregation: f64,
+    pub feature: f64,
+}
+
+impl Default for ActivityFactors {
+    fn default() -> Self {
+        ActivityFactors { traversal: 51.4286, aggregation: 18.7524, feature: 8.7527 }
+    }
+}
+
+/// Latency decomposition (Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetLatency {
+    pub compute: Time,
+    pub communicate: Time,
+}
+
+impl NetLatency {
+    pub fn total(&self) -> Time {
+        self.compute + self.communicate
+    }
+}
+
+/// Power decomposition (Eq. 6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetPower {
+    pub compute: Power,
+    pub communicate: Power,
+}
+
+impl NetPower {
+    pub fn total(&self) -> Power {
+        self.compute + self.communicate
+    }
+}
+
+/// Per-core latency triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreLatencies {
+    pub traversal: Time,
+    pub aggregation: Time,
+    pub feature: Time,
+}
+
+impl CoreLatencies {
+    pub fn total(&self) -> Time {
+        self.traversal + self.aggregation + self.feature
+    }
+}
+
+/// The assembled network model for one workload.
+#[derive(Debug)]
+pub struct NetModel {
+    breakdown: CoreBreakdown,
+    /// The paper's M₁/M₂/M₃ capacity ratios.
+    m: (f64, f64, f64),
+    activity: ActivityFactors,
+    inter: InterNetworkLink,
+    intra: InterClusterLink,
+    /// Per-node message payload on the links.
+    message_bytes: usize,
+    /// Neuron activations per GNN layer (α(x) of Eq. 7), outermost first.
+    alpha: Vec<usize>,
+    /// Bits per activation on the wire.
+    activation_bits: u32,
+}
+
+impl NetModel {
+    /// Build from explicit accelerator configs + comm parameters.
+    pub fn new(
+        centralized: &AcceleratorConfig,
+        decentralized: &AcceleratorConfig,
+        comm: CommConfig,
+        workload: &GnnWorkload,
+    ) -> Result<NetModel> {
+        comm.validate()?;
+        let acc = Accelerator::new(decentralized.clone())?;
+        let breakdown = acc.per_node(workload);
+        let m = centralized.capacity_ratios(decentralized);
+        Ok(NetModel {
+            breakdown,
+            m,
+            activity: ActivityFactors::default(),
+            inter: InterNetworkLink::new(comm.clone()),
+            intra: InterClusterLink::new(comm),
+            message_bytes: workload.message_bytes(),
+            alpha: vec![workload.feature_len, workload.fe_out],
+            activation_bits: workload.feature_bits,
+        })
+    }
+
+    /// The paper's evaluation setup (§4.1 presets + §4.2 comm calibration).
+    pub fn paper(workload: &GnnWorkload) -> Result<NetModel> {
+        use crate::config::presets;
+        NetModel::new(
+            &presets::centralized(),
+            &presets::decentralized(),
+            CommConfig::paper(),
+            workload,
+        )
+    }
+
+    /// Override the on-wire message size (bytes per node exchange).
+    ///
+    /// Fig. 8 evaluates the four datasets with the *standard* per-node
+    /// compute workload (the Table 1 t₁/t₂/t₃) while the communication
+    /// payload follows each dataset's feature length at 8-bit wire
+    /// encoding (the DAC input quantization); this override decouples the
+    /// two, matching how the paper's averages compose (EXPERIMENTS.md E3).
+    pub fn with_message_bytes(mut self, bytes: usize) -> NetModel {
+        self.message_bytes = bytes;
+        self
+    }
+
+    /// Fig. 8 model for one dataset: standard compute workload, dataset
+    /// feature length on the wire (1 byte per feature).
+    pub fn fig8(stats: &crate::graph::DatasetStats) -> Result<NetModel> {
+        Ok(NetModel::paper(&GnnWorkload::taxi())?.with_message_bytes(stats.feature_len))
+    }
+
+    pub fn breakdown(&self) -> &CoreBreakdown {
+        &self.breakdown
+    }
+
+    pub fn capacity_ratios(&self) -> (f64, f64, f64) {
+        self.m
+    }
+
+    pub fn message_bytes(&self) -> usize {
+        self.message_bytes
+    }
+
+    /// The centralized inter-network link L_n.
+    pub fn inter_link(&self) -> &InterNetworkLink {
+        &self.inter
+    }
+
+    /// The decentralized inter-cluster link L_c.
+    pub fn intra_link(&self) -> &InterClusterLink {
+        &self.intra
+    }
+
+    /// Per-core computation latencies in `setting` (the Table 1 rows).
+    pub fn per_core_latency(&self, setting: Setting, topo: Topology) -> CoreLatencies {
+        let b = &self.breakdown;
+        match setting {
+            Setting::Decentralized => {
+                CoreLatencies { traversal: b.t1, aggregation: b.t2, feature: b.t3 }
+            }
+            Setting::Centralized => {
+                let n1 = (topo.nodes.saturating_sub(1)) as f64;
+                CoreLatencies {
+                    traversal: b.t1 * (n1 / self.m.0),
+                    aggregation: b.t2 * (n1 / self.m.1),
+                    feature: b.t3 * (n1 / self.m.2),
+                }
+            }
+        }
+    }
+
+    /// Eq. (2) / Eq. (3).
+    pub fn compute_latency(&self, setting: Setting, topo: Topology) -> Time {
+        self.per_core_latency(setting, topo).total()
+    }
+
+    /// Eq. (4) / Eq. (5).
+    pub fn communicate_latency(&self, setting: Setting, topo: Topology) -> Time {
+        match setting {
+            // Concurrent transfers over the fast inter-network link.
+            Setting::Centralized => self.inter.transfer(self.message_bytes),
+            // Sequential exchange with all cₛ adjacent nodes, two-way.
+            Setting::Decentralized => {
+                (self.intra.setup()
+                    + self.intra.hop(self.message_bytes) * topo.cluster_size as f64)
+                    * 2.0
+            }
+        }
+    }
+
+    /// Eq. (1).
+    pub fn latency(&self, setting: Setting, topo: Topology) -> NetLatency {
+        NetLatency {
+            compute: self.compute_latency(setting, topo),
+            communicate: self.communicate_latency(setting, topo),
+        }
+    }
+
+    /// Per-core computation powers (the Table 1 power column).
+    pub fn per_core_power(&self, setting: Setting) -> (Power, Power, Power) {
+        let (p1, p2, p3) = self.breakdown.powers();
+        match setting {
+            Setting::Decentralized => (p1, p2, p3),
+            Setting::Centralized => (
+                p1 * self.activity.traversal,
+                p2 * self.activity.aggregation,
+                p3 * self.activity.feature,
+            ),
+        }
+    }
+
+    /// P_compute of Eq. (6).
+    pub fn compute_power(&self, setting: Setting) -> Power {
+        let (p1, p2, p3) = self.per_core_power(setting);
+        p1 + p2 + p3
+    }
+
+    /// P_communicate of Eq. (6): `p(L_n)·2` centralized, Eq. (7)
+    /// decentralized.
+    pub fn communicate_power(&self, setting: Setting) -> Power {
+        match setting {
+            Setting::Centralized => self.inter.power() * 2.0,
+            Setting::Decentralized => {
+                // (1 / t(L_c)) · Σ_{x=1}^{X-1} α(x+1) · E_perBit
+                let t_lc = self.intra.hop(self.message_bytes);
+                let mut energy = crate::units::Energy::ZERO;
+                for x in 1..self.alpha.len() {
+                    let bits = self.alpha[x] * self.activation_bits as usize;
+                    energy += self.intra.hop_energy(bits.div_ceil(8));
+                }
+                energy / t_lc
+            }
+        }
+    }
+
+    /// Eq. (6).
+    pub fn power(&self, setting: Setting, topo: Topology) -> NetPower {
+        let _ = topo;
+        NetPower {
+            compute: self.compute_power(setting),
+            communicate: self.communicate_power(setting),
+        }
+    }
+
+    /// X-layer GNN latency: the decentralized setting pays one cluster
+    /// exchange per layer boundary (each layer's aggregation needs the
+    /// neighbors' previous-layer embeddings — the sum structure of Eq. 7);
+    /// the centralized leader holds all state, so only the initial gather
+    /// is paid.  `X = 1` degenerates to [`NetModel::latency`].
+    pub fn latency_layers(&self, setting: Setting, topo: Topology, layers: usize) -> NetLatency {
+        let x = layers.max(1);
+        let one = self.latency(setting, topo);
+        match setting {
+            Setting::Centralized => NetLatency {
+                compute: one.compute * x as f64,
+                communicate: one.communicate,
+            },
+            Setting::Decentralized => NetLatency {
+                compute: one.compute * x as f64,
+                communicate: one.communicate * x as f64,
+            },
+        }
+    }
+
+    /// Energy of one full-graph inference (P·t over the Eq. 1/6 terms):
+    /// returns (compute, communication) energy.
+    pub fn inference_energy(
+        &self,
+        setting: Setting,
+        topo: Topology,
+    ) -> (crate::units::Energy, crate::units::Energy) {
+        let b = &self.breakdown;
+        let n = topo.nodes as f64;
+        // Per-node compute energy is setting-independent (same work); the
+        // centralized leader simply does N-1 nodes' worth of it.
+        let compute = match setting {
+            Setting::Decentralized => b.total_energy() * n,
+            Setting::Centralized => b.total_energy() * (n - 1.0).max(0.0),
+        };
+        let comm_power = self.communicate_power(setting);
+        let comm = match setting {
+            Setting::Centralized => comm_power * self.communicate_latency(setting, topo),
+            // every device pays its cluster exchange
+            Setting::Decentralized => {
+                comm_power * self.communicate_latency(setting, topo) * n
+            }
+        };
+        (compute, comm)
+    }
+
+    /// Semi-decentralized hybrid (conclusion / paper ref [26], E8):
+    /// cluster heads with `head_capacity`× a member's cores serve their
+    /// region in a centralized fashion over fast V2X links, while the graph
+    /// level stays decentralized (heads exchange boundary data with
+    /// adjacent heads over L_n).
+    pub fn semi_latency(&self, topo: Topology, head_capacity: f64) -> NetLatency {
+        let b = &self.breakdown;
+        let cs = topo.cluster_size.max(1) as f64;
+        let h = head_capacity.max(1.0);
+        let compute = (b.t1 + b.t2 + b.t3) * ((cs - 1.0).max(1.0) / h);
+        // members↔head (concurrent, V2X) + head↔head boundary exchange.
+        let communicate = self.inter.transfer(self.message_bytes) * 4.0;
+        NetLatency { compute, communicate }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::testing::assert_close;
+
+    fn model() -> NetModel {
+        NetModel::paper(&GnnWorkload::taxi()).unwrap()
+    }
+
+    /// E1: the full Table 1, both settings, all rows, within 1%.
+    #[test]
+    fn table1_reproduction() {
+        let m = model();
+        let topo = Topology::taxi();
+
+        // Decentralized latency column.
+        let dec = m.per_core_latency(Setting::Decentralized, topo);
+        assert_close(dec.traversal.as_ns(), 7.68, 0.01);
+        assert_close(dec.aggregation.as_us(), 14.27, 0.01);
+        assert_close(dec.feature.as_us(), 0.37, 0.01);
+        assert_close(dec.total().as_us(), 14.6, 0.01);
+
+        // Centralized latency column.
+        let cent = m.per_core_latency(Setting::Centralized, topo);
+        assert_close(cent.traversal.as_ns(), 38.43, 0.01);
+        assert_close(cent.aggregation.as_us(), 142.77, 0.01);
+        assert_close(cent.feature.as_us(), 14.53, 0.01);
+        assert_close(cent.total().as_us(), 157.34, 0.01);
+
+        // Power columns.
+        let (p1, p2, p3) = m.per_core_power(Setting::Decentralized);
+        assert_close(p1.as_mw(), 0.21, 0.01);
+        assert_close(p2.as_mw(), 41.6, 0.01);
+        assert_close(p3.as_mw(), 3.68, 0.01);
+        assert_close(m.compute_power(Setting::Decentralized).as_mw(), 45.49, 0.01);
+
+        let (q1, q2, q3) = m.per_core_power(Setting::Centralized);
+        assert_close(q1.as_mw(), 10.8, 0.01);
+        assert_close(q2.as_mw(), 780.1, 0.01);
+        assert_close(q3.as_mw(), 32.21, 0.01);
+        assert_close(m.compute_power(Setting::Centralized).as_mw(), 823.11, 0.01);
+
+        // Communication row: ~3.3 ms vs ~406 ms.
+        assert_close(m.communicate_latency(Setting::Centralized, topo).as_ms(), 3.3, 0.01);
+        assert_close(m.communicate_latency(Setting::Decentralized, topo).as_ms(), 406.0, 0.01);
+    }
+
+    /// §4.2's derived ratios: 5× / 10× / ~39× per core, ~10× net compute,
+    /// ~120× communication, 18× power-per-node.
+    #[test]
+    fn table1_derived_ratios() {
+        let m = model();
+        let topo = Topology::taxi();
+        let c = m.per_core_latency(Setting::Centralized, topo);
+        let d = m.per_core_latency(Setting::Decentralized, topo);
+        assert_close(c.traversal / d.traversal, 5.0, 0.01);
+        assert_close(c.aggregation / d.aggregation, 10.0, 0.01);
+        assert_close(c.feature / d.feature, 39.0, 0.02);
+        assert_close(c.total() / d.total(), 10.7, 0.02);
+        let comm_ratio = m.communicate_latency(Setting::Decentralized, topo)
+            / m.communicate_latency(Setting::Centralized, topo);
+        assert_close(comm_ratio, 123.0, 0.02);
+        let p_ratio = m.compute_power(Setting::Centralized)
+            / m.compute_power(Setting::Decentralized);
+        assert_close(p_ratio, 18.0, 0.02);
+    }
+
+    /// E3: Fig. 8's headline averages over the four datasets:
+    /// decentralized computes ~1400× faster, centralized communicates
+    /// ~790× faster.
+    #[test]
+    fn fig8_headline_averages() {
+        let mut comp_ratio_sum = 0.0;
+        let mut comm_ratio_sum = 0.0;
+        for d in datasets::all() {
+            let m = NetModel::fig8(&d).unwrap();
+            let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
+            comp_ratio_sum += m.compute_latency(Setting::Centralized, topo)
+                / m.compute_latency(Setting::Decentralized, topo);
+            comm_ratio_sum += m.communicate_latency(Setting::Decentralized, topo)
+                / m.communicate_latency(Setting::Centralized, topo);
+        }
+        assert_close(comp_ratio_sum / 4.0, 1400.0, 0.05);
+        assert_close(comm_ratio_sum / 4.0, 790.0, 0.05);
+    }
+
+    /// Fig. 8 orderings the paper calls out explicitly.
+    #[test]
+    fn fig8_dataset_orderings() {
+        let lat = |d: &crate::graph::DatasetStats| {
+            let m = NetModel::fig8(d).unwrap();
+            let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
+            (m.latency(Setting::Centralized, topo), m.latency(Setting::Decentralized, topo))
+        };
+        let (lj_c, _) = lat(&datasets::livejournal());
+        let (co_c, co_d) = lat(&datasets::collab());
+        let (cr_c, cr_d) = lat(&datasets::cora());
+        let (ci_c, ci_d) = lat(&datasets::citeseer());
+        // "LiveJournal has the largest computation latency in the
+        // centralized settings because it owns the largest number of nodes."
+        assert!(lj_c.compute > co_c.compute);
+        assert!(lj_c.compute > cr_c.compute && lj_c.compute > ci_c.compute);
+        // "Collab has the largest communication latency ... in the
+        // decentralized settings due to its large Average Cs."
+        assert!(co_d.communicate > cr_d.communicate);
+        assert!(co_d.communicate > ci_d.communicate);
+        // Decentralized compute beats centralized on every dataset.
+        for d in datasets::all() {
+            let (c, dd) = lat(&d);
+            assert!(dd.compute < c.compute, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn decentralized_compute_is_independent_of_n() {
+        let m = model();
+        let a = m.compute_latency(Setting::Decentralized, Topology { nodes: 10, cluster_size: 5 });
+        let b = m.compute_latency(
+            Setting::Decentralized,
+            Topology { nodes: 1_000_000, cluster_size: 5 },
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn centralized_compute_scales_linearly_with_n() {
+        let m = model();
+        let t1 = m.compute_latency(Setting::Centralized, Topology { nodes: 1001, cluster_size: 5 });
+        let t2 =
+            m.compute_latency(Setting::Centralized, Topology { nodes: 2001, cluster_size: 5 });
+        assert_close(t2 / t1, 2.0, 1e-9);
+    }
+
+    #[test]
+    fn decentralized_comm_scales_with_cluster_size() {
+        let m = model();
+        let t5 = m.communicate_latency(Setting::Decentralized, Topology { nodes: 10, cluster_size: 5 });
+        let t10 =
+            m.communicate_latency(Setting::Decentralized, Topology { nodes: 10, cluster_size: 10 });
+        assert!(t10 > t5);
+        // centralized comm is cluster-free
+        let c5 = m.communicate_latency(Setting::Centralized, Topology { nodes: 10, cluster_size: 5 });
+        let c10 =
+            m.communicate_latency(Setting::Centralized, Topology { nodes: 10, cluster_size: 10 });
+        assert_eq!(c5, c10);
+    }
+
+    #[test]
+    fn eq1_and_eq6_compose() {
+        let m = model();
+        let topo = Topology::taxi();
+        for s in [Setting::Centralized, Setting::Decentralized] {
+            let l = m.latency(s, topo);
+            assert_close(l.total().as_s(), (l.compute + l.communicate).as_s(), 1e-12);
+            let p = m.power(s, topo);
+            assert!(p.total().as_w() >= p.compute.as_w());
+        }
+    }
+
+    #[test]
+    fn eq7_decentralized_comm_power_is_positive_and_layer_driven() {
+        let m = model();
+        let p = m.communicate_power(Setting::Decentralized);
+        assert!(p.as_w() > 0.0);
+        // Centralized comm power is the two-way radio power.
+        let c = m.communicate_power(Setting::Centralized);
+        assert_close(c.as_w(), (m.inter.power() * 2.0).as_w(), 1e-12);
+    }
+
+    #[test]
+    fn layerwise_latency_composes() {
+        let m = model();
+        let topo = Topology::taxi();
+        let one = m.latency(Setting::Decentralized, topo);
+        let three = m.latency_layers(Setting::Decentralized, topo, 3);
+        assert_close(three.compute.as_s(), (one.compute * 3.0).as_s(), 1e-12);
+        assert_close(three.communicate.as_s(), (one.communicate * 3.0).as_s(), 1e-12);
+        // centralized pays the gather once
+        let c1 = m.latency(Setting::Centralized, topo);
+        let c3 = m.latency_layers(Setting::Centralized, topo, 3);
+        assert_eq!(c3.communicate, c1.communicate);
+        assert!(c3.compute > c1.compute);
+        // X=1 degenerates
+        assert_eq!(m.latency_layers(Setting::Centralized, topo, 1).total(), c1.total());
+        // deeper GNNs widen the decentralized communication gap
+        let ratio1 = one.communicate / c1.communicate;
+        let ratio3 = three.communicate / c3.communicate;
+        assert!(ratio3 > ratio1 * 2.9);
+    }
+
+    #[test]
+    fn inference_energy_structure() {
+        let m = model();
+        let topo = Topology::taxi();
+        let (dc, dm) = m.inference_energy(Setting::Decentralized, topo);
+        let (cc, cm) = m.inference_energy(Setting::Centralized, topo);
+        // same total compute work ⇒ nearly equal compute energy (N vs N-1)
+        assert_close(dc.as_j(), cc.as_j() * 10_000.0 / 9_999.0, 1e-6);
+        // per-graph communication energy is far higher decentralized
+        assert!(dm > cm, "dec comm {dm} must exceed cent comm {cm}");
+        assert!(dc.as_j() > 0.0 && cm.as_j() > 0.0);
+    }
+
+    /// E8: the semi-decentralized hybrid beats decentralized communication
+    /// by orders of magnitude and centralized computation at scale.
+    #[test]
+    fn semi_decentralized_balances_the_tradeoff() {
+        let m = model();
+        let big = Topology { nodes: 1_000_000, cluster_size: 10 };
+        let semi = m.semi_latency(big, 10.0);
+        let cent = m.latency(Setting::Centralized, big);
+        let dec = m.latency(Setting::Decentralized, big);
+        assert!(semi.communicate < dec.communicate / 10.0);
+        assert!(semi.compute < cent.compute / 100.0);
+        // and total wins against both at this scale
+        assert!(semi.total() < cent.total());
+        assert!(semi.total() < dec.total());
+    }
+}

@@ -1,0 +1,289 @@
+//! Table and figure-series rendering for benches and the CLI.
+//!
+//! `Table` renders aligned ASCII tables shaped like the paper's Table 1/2;
+//! `BarSeries` renders log-scale horizontal bars shaped like Fig. 8.
+
+use std::fmt::Write as _;
+
+/// Simple aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Table {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "{}", self.title);
+        }
+        let line = |w: &[usize]| {
+            let mut s = String::from("+");
+            for width in w {
+                s.push_str(&"-".repeat(width + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], w: &[usize]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let cell = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = w[i] - cell.chars().count();
+                let _ = write!(s, " {}{} |", cell, " ".repeat(pad));
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&widths));
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let _ = writeln!(out, "{}", line(&widths));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        let _ = writeln!(out, "{}", line(&widths));
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV rendering (RFC-4180 quoting) for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let quote = |cell: &str| -> String {
+            if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Write the CSV next to the logs (used by benches with `--csv`).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// One bar of a (stacked) bar chart: label + named segments.
+#[derive(Debug, Clone)]
+pub struct Bar {
+    pub label: String,
+    pub segments: Vec<(String, f64)>,
+}
+
+impl Bar {
+    pub fn total(&self) -> f64 {
+        self.segments.iter().map(|(_, v)| v).sum()
+    }
+}
+
+/// Log-scale horizontal stacked bar chart (the shape of paper Fig. 8).
+#[derive(Debug, Clone)]
+pub struct BarSeries {
+    title: String,
+    unit: String,
+    bars: Vec<Bar>,
+    width: usize,
+}
+
+impl BarSeries {
+    pub fn new(title: impl Into<String>, unit: impl Into<String>) -> BarSeries {
+        BarSeries { title: title.into(), unit: unit.into(), bars: Vec::new(), width: 50 }
+    }
+
+    pub fn bar(&mut self, label: impl Into<String>, segments: &[(&str, f64)]) -> &mut BarSeries {
+        self.bars.push(Bar {
+            label: label.into(),
+            segments: segments.iter().map(|(n, v)| (n.to_string(), *v)).collect(),
+        });
+        self
+    }
+
+    pub fn bars(&self) -> &[Bar] {
+        &self.bars
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{} (log scale, {})", self.title, self.unit);
+        let max = self.bars.iter().map(Bar::total).fold(f64::MIN_POSITIVE, f64::max);
+        let min = self
+            .bars
+            .iter()
+            .flat_map(|b| b.segments.iter().map(|s| s.1))
+            .filter(|v| *v > 0.0)
+            .fold(f64::MAX, f64::min)
+            .min(max);
+        let span = (max / min).ln().max(1e-9);
+        let label_w = self.bars.iter().map(|b| b.label.chars().count()).max().unwrap_or(0);
+        let glyphs = ['#', '=', '.', '~'];
+        for bar in &self.bars {
+            let mut line = String::new();
+            for (i, (_, v)) in bar.segments.iter().enumerate() {
+                if *v <= 0.0 {
+                    continue;
+                }
+                // Each segment's length reflects its own log magnitude.
+                let frac = ((*v / min).ln() / span).clamp(0.0, 1.0);
+                let n = (frac * self.width as f64).round().max(1.0) as usize;
+                line.push_str(&glyphs[i % glyphs.len()].to_string().repeat(n));
+            }
+            let seg_desc = bar
+                .segments
+                .iter()
+                .map(|(n, v)| format!("{n}={v:.3e}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            let _ = writeln!(
+                out,
+                "{:<label_w$} |{:<width$}| total {:.3e} {} ({seg_desc})",
+                bar.label,
+                line,
+                bar.total(),
+                self.unit,
+                label_w = label_w,
+                width = self.width + 2,
+            );
+        }
+        let mut legend = String::from("legend:");
+        if let Some(first) = self.bars.first() {
+            for (i, (name, _)) in first.segments.iter().enumerate() {
+                let _ = write!(legend, "  {} {}", glyphs[i % glyphs.len()], name);
+            }
+        }
+        let _ = writeln!(out, "{legend}");
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a speedup factor the way the paper quotes them (`~790×`).
+pub fn speedup(factor: f64) -> String {
+    if factor >= 100.0 {
+        format!("~{:.0}×", factor)
+    } else if factor >= 10.0 {
+        format!("~{:.1}×", factor)
+    } else {
+        format!("~{:.2}×", factor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Table 1", &["Setting", "Latency", "Power"]);
+        t.row_str(&["Centralized", "157.34 µs", "823.11 mW"]);
+        t.row_str(&["Decentralized", "14.6 µs", "45.49 mW"]);
+        let s = t.render();
+        assert!(s.contains("Table 1"));
+        assert!(s.contains("| Centralized "));
+        // All body lines equal width.
+        let widths: Vec<usize> =
+            s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row_str(&["only-one"]);
+    }
+
+    #[test]
+    fn bars_render_all_labels_and_legend() {
+        let mut b = BarSeries::new("Fig 8", "s");
+        b.bar("Cora cent", &[("comm", 3.3e-3), ("comp", 1.57e-4)]);
+        b.bar("Cora dec", &[("comm", 0.406), ("comp", 1.46e-5)]);
+        let s = b.render();
+        assert!(s.contains("Cora cent"));
+        assert!(s.contains("Cora dec"));
+        assert!(s.contains("legend:"));
+        assert!(s.contains("comm"));
+    }
+
+    #[test]
+    fn bars_handle_zero_segments() {
+        let mut b = BarSeries::new("x", "s");
+        b.bar("only", &[("a", 0.0), ("b", 1.0)]);
+        let s = b.render();
+        assert!(s.contains("only"));
+    }
+
+    #[test]
+    fn csv_escapes_and_round_trips_cells() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_str(&["plain", "with,comma"]);
+        t.row_str(&["quote\"inside", "multi\nline"]);
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "plain,\"with,comma\"");
+        assert!(lines[2].starts_with("\"quote\"\"inside\""));
+    }
+
+    #[test]
+    fn csv_writes_to_disk() {
+        let mut t = Table::new("x", &["col"]);
+        t.row_str(&["v"]);
+        let path = std::env::temp_dir().join("ima_gnn_csv_test.csv");
+        t.write_csv(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "col\nv\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn speedup_formats() {
+        assert_eq!(speedup(789.6), "~790×");
+        assert_eq!(speedup(18.04), "~18.0×");
+        assert_eq!(speedup(5.0), "~5.00×");
+    }
+}

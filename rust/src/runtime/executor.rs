@@ -1,0 +1,105 @@
+//! PJRT execution of one AOT artifact.
+//!
+//! Follows the reference wiring (/opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  Compilation happens once per
+//! artifact; the hot path is `execute` only.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::manifest::ArtifactSpec;
+use super::tensor::Tensor;
+
+/// A compiled, loaded artifact ready to run.
+pub struct Executor {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor").field("artifact", &self.spec.name).finish()
+    }
+}
+
+impl Executor {
+    /// Compile `spec`'s HLO text on `client`.
+    pub fn compile(client: &xla::PjRtClient, spec: &ArtifactSpec, hlo_path: &Path) -> Result<Executor> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {hlo_path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Executor { spec: spec.clone(), exe })
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Validate inputs against the manifest spec.
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                return Err(Error::Runtime(format!(
+                    "{} input {i}: expected {:?} {}, got {:?} {}",
+                    self.spec.name,
+                    s.shape,
+                    s.dtype.name(),
+                    t.shape,
+                    t.dtype().name()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns the artifact's outputs.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the raw result is a
+    /// tuple literal which we decompose into the declared outputs.
+    pub fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let literals = inputs.iter().map(Tensor::to_literal).collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime(format!("{}: empty result", self.spec.name)))?;
+        let mut root = first.to_literal_sync()?;
+        let parts = root.decompose_tuple()?;
+        let parts = if parts.is_empty() { vec![root] } else { parts };
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&self.spec.outputs) {
+            let t = Tensor::from_literal(lit)?;
+            if t.shape != spec.shape {
+                return Err(Error::Runtime(format!(
+                    "{}: output shape {:?} != declared {:?}",
+                    self.spec.name, t.shape, spec.shape
+                )));
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}

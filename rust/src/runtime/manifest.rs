@@ -1,0 +1,187 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::{self, Json};
+
+use super::tensor::DType;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .require("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("`shape` must be an array".into()))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Runtime("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            v.require("dtype")?
+                .as_str()
+                .ok_or_else(|| Error::Runtime("`dtype` must be a string".into()))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Model configuration recorded at lowering time (free-form numbers).
+    pub config: BTreeMap<String, f64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    root: PathBuf,
+    artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(dir, &text)
+    }
+
+    /// Parse manifest text (root used to resolve artifact files).
+    pub fn parse(root: &Path, text: &str) -> Result<Manifest> {
+        let doc = json::parse(text)?;
+        let version = doc.require("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            return Err(Error::Runtime(format!("unsupported manifest version {version}")));
+        }
+        let mut artifacts = Vec::new();
+        for a in doc
+            .require("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Runtime("`artifacts` must be an array".into()))?
+        {
+            let name = a
+                .require("name")?
+                .as_str()
+                .ok_or_else(|| Error::Runtime("artifact name must be a string".into()))?
+                .to_string();
+            let file = a
+                .require("file")?
+                .as_str()
+                .ok_or_else(|| Error::Runtime("artifact file must be a string".into()))?
+                .to_string();
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.require(key)?
+                    .as_arr()
+                    .ok_or_else(|| Error::Runtime(format!("`{key}` must be an array")))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let mut config = BTreeMap::new();
+            if let Some(Json::Obj(map)) = a.get("config") {
+                for (k, v) in map {
+                    if let Some(n) = v.as_f64() {
+                        config.insert(k.clone(), n);
+                    }
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name,
+                file,
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+                config,
+            });
+        }
+        Ok(Manifest { root: root.to_path_buf(), artifacts })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactSpec] {
+        &self.artifacts
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name).ok_or_else(|| {
+            let known: Vec<&str> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+            Error::Runtime(format!("unknown artifact `{name}` (have: {})", known.join(", ")))
+        })
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.root.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "gcn_layer_small", "file": "gcn_layer_small.hlo.txt",
+         "inputs": [
+            {"shape": [16, 64], "dtype": "float32"},
+            {"shape": [16, 4], "dtype": "int32"},
+            {"shape": [64, 64], "dtype": "float32"},
+            {"shape": [64, 32], "dtype": "float32"}],
+         "outputs": [{"shape": [16, 32], "dtype": "float32"}],
+         "config": {"batch": 16, "hidden": 32, "use_crossbar": 1}}
+      ]}"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), DOC).unwrap();
+        assert_eq!(m.artifacts().len(), 1);
+        let a = m.get("gcn_layer_small").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[0].shape, vec![16, 32]);
+        assert_eq!(a.config["hidden"], 32.0);
+        assert_eq!(m.path_of(a), PathBuf::from("/tmp/arts/gcn_layer_small.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_artifact_lists_known_names() {
+        let m = Manifest::parse(Path::new("/x"), DOC).unwrap();
+        let e = m.get("nope").unwrap_err().to_string();
+        assert!(e.contains("nope") && e.contains("gcn_layer_small"));
+    }
+
+    #[test]
+    fn rejects_bad_version_and_shape() {
+        let bad = DOC.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(Path::new("/x"), &bad).is_err());
+        let bad = DOC.replace("\"float32\"", "\"float64\"");
+        assert!(Manifest::parse(Path::new("/x"), &bad).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_num_elements() {
+        let m = Manifest::parse(Path::new("/x"), DOC).unwrap();
+        assert_eq!(m.get("gcn_layer_small").unwrap().inputs[0].num_elements(), 1024);
+    }
+}

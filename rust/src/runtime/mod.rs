@@ -1,0 +1,77 @@
+//! PJRT runtime: load and execute the AOT artifacts from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes the
+//! compiled HLO-text models callable as plain rust functions.  One PJRT CPU
+//! client is shared; compiled executables are cached per artifact name.
+
+mod executor;
+mod manifest;
+mod tensor;
+
+pub use executor::Executor;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use tensor::{DType, Tensor, TensorData};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::error::Result;
+
+/// Default artifact directory relative to the repo root.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("IMA_GNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Loads, compiles and caches artifacts on a shared PJRT CPU client.
+pub struct ArtifactStore {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executor>>>,
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("artifacts", &self.manifest.artifacts().len())
+            .finish()
+    }
+}
+
+impl ArtifactStore {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: &Path) -> Result<ArtifactStore> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactStore { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling and caching on first use) the executor for `name`.
+    pub fn load(&self, name: &str) -> Result<Rc<Executor>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let spec = self.manifest.get(name)?;
+        let exe = Executor::compile(&self.client, spec, &self.manifest.path_of(spec))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Convenience: load + execute in one call.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.execute(inputs)
+    }
+}

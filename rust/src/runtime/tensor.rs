@@ -1,0 +1,193 @@
+//! Host-side tensors exchanged with the PJRT runtime.
+
+use crate::error::{Error, Result};
+
+/// Element type of a tensor (the subset our artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => Err(Error::Runtime(format!("unsupported dtype `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I32 => "int32",
+        }
+    }
+}
+
+/// Tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A shaped host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let t = Tensor { shape: shape.to_vec(), data: TensorData::F32(data) };
+        t.check()?;
+        Ok(t)
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
+        let t = Tensor { shape: shape.to_vec(), data: TensorData::I32(data) };
+        t.check()?;
+        Ok(t)
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: TensorData::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    fn check(&self) -> Result<()> {
+        let want: usize = self.shape.iter().product();
+        if want != self.data.len() {
+            return Err(Error::Runtime(format!(
+                "tensor shape {:?} needs {want} elements, got {}",
+                self.shape,
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Runtime("tensor is not f32".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(Error::Runtime("tensor is not i32".into())),
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            other => {
+                return Err(Error::Runtime(format!("unsupported literal type {other:?}")))
+            }
+        };
+        let t = Tensor { shape: dims, data };
+        t.check()?;
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_arity_is_enforced() {
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(&[0], vec![]).is_ok());
+    }
+
+    #[test]
+    fn dtype_round_trip() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+        assert_eq!(DType::F32.name(), "float32");
+    }
+
+    #[test]
+    fn accessors_enforce_types() {
+        let t = Tensor::f32(&[2], vec![1.0, 2.0]).unwrap();
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.num_elements(), 2);
+    }
+
+    #[test]
+    fn zeros_builder() {
+        let t = Tensor::zeros_f32(&[3, 4]);
+        assert_eq!(t.num_elements(), 12);
+        assert!(t.as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_round_trip_i32() {
+        let t = Tensor::i32(&[3], vec![-1, 0, 7]).unwrap();
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+}

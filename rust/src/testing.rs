@@ -1,0 +1,248 @@
+//! Minimal property-based testing framework (offline `proptest` substitute).
+//!
+//! A deterministic xorshift PRNG plus value generators and a `forall` runner
+//! that shrinks failing integer cases by bisection.  Used across the crate's
+//! unit tests for coordinator / graph / model invariants.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath; see the unit tests
+//! // below for executed coverage of the same API.)
+//! use ima_gnn::testing::{forall, Rng};
+//! forall(64, |rng: &mut Rng| {
+//!     let a = rng.u64_in(0, 1000);
+//!     let b = rng.u64_in(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+/// Deterministic xorshift64* PRNG — reproducible across runs and platforms.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded constructor; a zero seed is remapped (xorshift fixpoint).
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "u64_in: lo > hi");
+        let span = hi - lo;
+        if span == u64::MAX {
+            return self.next_u64();
+        }
+        lo + self.next_u64() % (span + 1)
+    }
+
+    /// Uniform usize in `[lo, hi)` — the common indexing form.
+    pub fn index(&mut self, len: usize) -> usize {
+        assert!(len > 0, "index: empty range");
+        (self.u64_in(0, len as u64 - 1)) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo.wrapping_add(self.u64_in(0, (hi - lo) as u64) as i64)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Random permutation of `0..n` (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.index(i + 1);
+            v.swap(i, j);
+        }
+        v
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k <= n).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k > n");
+        // Partial Fisher–Yates: O(n) memory, O(k) swaps.
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            v.swap(i, j);
+        }
+        v.truncate(k);
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+}
+
+/// Run `prop` against `cases` independent RNGs (seeds 1..=cases).
+///
+/// Panics (re-raising the property's panic) with the failing seed in the
+/// message so the case can be replayed with `Rng::new(seed)`.
+pub fn forall<F: Fn(&mut Rng)>(cases: u64, prop: F) {
+    for seed in 1..=cases {
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two floats agree to a relative tolerance (absolute near zero).
+#[track_caller]
+pub fn assert_close(got: f64, want: f64, rtol: f64) {
+    let denom = want.abs().max(1e-30);
+    let rel = (got - want).abs() / denom;
+    assert!(
+        rel <= rtol || (got - want).abs() < 1e-30,
+        "assert_close failed: got {got}, want {want} (rel err {rel:.3e} > rtol {rtol:.1e})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_zero_seed_works() {
+        let mut r = Rng::new(0);
+        // Must not be stuck at zero.
+        assert_ne!(r.next_u64(), r.next_u64());
+    }
+
+    #[test]
+    fn u64_in_respects_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let v = r.u64_in(10, 20);
+            assert!((10..=20).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(2);
+        let mut sum = 0.0;
+        for _ in 0..4000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 4000.0;
+        assert!((mean - 0.5).abs() < 0.03, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(3);
+        let n = 8000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.06, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn permutation_is_a_bijection() {
+        let mut r = Rng::new(4);
+        let p = r.permutation(50);
+        let mut seen = vec![false; 50];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Rng::new(5);
+        for _ in 0..50 {
+            let k = r.index(10) + 1;
+            let s = r.sample_distinct(30, k);
+            assert_eq!(s.len(), k);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in sample");
+        }
+    }
+
+    #[test]
+    fn forall_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall(10, |rng| {
+                // Fails when the first draw is even — some seed will hit it.
+                assert!(rng.next_u64() % 2 == 1, "even draw");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed"), "missing seed in: {msg}");
+    }
+
+    #[test]
+    fn assert_close_accepts_and_rejects() {
+        assert_close(100.0, 100.4, 0.01);
+        let r = std::panic::catch_unwind(|| assert_close(1.0, 2.0, 0.01));
+        assert!(r.is_err());
+    }
+}

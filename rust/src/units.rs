@@ -1,0 +1,349 @@
+//! Unit-safe physical quantities for the hardware model.
+//!
+//! Everything the circuit / architecture / network layers exchange is one of
+//! [`Time`], [`Energy`], [`Power`] or [`Area`].  Newtypes over `f64` keep the
+//! arithmetic honest (`Energy / Time = Power`, etc.) and `Display` picks a
+//! human scale (`14.27 µs`, `780.1 mW`) so reports read like the paper's
+//! tables.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub};
+
+macro_rules! quantity {
+    ($name:ident, $base_doc:expr) => {
+        #[doc = $base_doc]
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+
+            /// Raw value in the base unit.
+            pub fn value(self) -> f64 {
+                self.0
+            }
+
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+
+            pub fn max(self, other: Self) -> Self {
+                $name(self.0.max(other.0))
+            }
+
+            pub fn min(self, other: Self) -> Self {
+                $name(self.0.min(other.0))
+            }
+
+            pub fn abs(self) -> Self {
+                $name(self.0.abs())
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            fn add(self, rhs: $name) -> $name {
+                $name(self.0 + rhs.0)
+            }
+        }
+
+        impl AddAssign for $name {
+            fn add_assign(&mut self, rhs: $name) {
+                self.0 += rhs.0;
+            }
+        }
+
+        impl Sub for $name {
+            type Output = $name;
+            fn sub(self, rhs: $name) -> $name {
+                $name(self.0 - rhs.0)
+            }
+        }
+
+        impl Neg for $name {
+            type Output = $name;
+            fn neg(self) -> $name {
+                $name(-self.0)
+            }
+        }
+
+        impl Mul<f64> for $name {
+            type Output = $name;
+            fn mul(self, rhs: f64) -> $name {
+                $name(self.0 * rhs)
+            }
+        }
+
+        impl Mul<$name> for f64 {
+            type Output = $name;
+            fn mul(self, rhs: $name) -> $name {
+                $name(self * rhs.0)
+            }
+        }
+
+        impl Div<f64> for $name {
+            type Output = $name;
+            fn div(self, rhs: f64) -> $name {
+                $name(self.0 / rhs)
+            }
+        }
+
+        impl Div<$name> for $name {
+            type Output = f64;
+            fn div(self, rhs: $name) -> f64 {
+                self.0 / rhs.0
+            }
+        }
+
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = $name>>(iter: I) -> $name {
+                $name(iter.map(|q| q.0).sum())
+            }
+        }
+    };
+}
+
+quantity!(Time, "Duration; base unit: seconds.");
+quantity!(Energy, "Energy; base unit: joules.");
+quantity!(Power, "Power; base unit: watts.");
+quantity!(Area, "Silicon area; base unit: square meters.");
+
+impl Time {
+    pub fn s(v: f64) -> Time {
+        Time(v)
+    }
+    pub fn ms(v: f64) -> Time {
+        Time(v * 1e-3)
+    }
+    pub fn us(v: f64) -> Time {
+        Time(v * 1e-6)
+    }
+    pub fn ns(v: f64) -> Time {
+        Time(v * 1e-9)
+    }
+    pub fn ps(v: f64) -> Time {
+        Time(v * 1e-12)
+    }
+    pub fn as_s(self) -> f64 {
+        self.0
+    }
+    pub fn as_ms(self) -> f64 {
+        self.0 * 1e3
+    }
+    pub fn as_us(self) -> f64 {
+        self.0 * 1e6
+    }
+    pub fn as_ns(self) -> f64 {
+        self.0 * 1e9
+    }
+}
+
+impl Energy {
+    pub fn j(v: f64) -> Energy {
+        Energy(v)
+    }
+    pub fn mj(v: f64) -> Energy {
+        Energy(v * 1e-3)
+    }
+    pub fn uj(v: f64) -> Energy {
+        Energy(v * 1e-6)
+    }
+    pub fn nj(v: f64) -> Energy {
+        Energy(v * 1e-9)
+    }
+    pub fn pj(v: f64) -> Energy {
+        Energy(v * 1e-12)
+    }
+    pub fn fj(v: f64) -> Energy {
+        Energy(v * 1e-15)
+    }
+    pub fn as_j(self) -> f64 {
+        self.0
+    }
+    pub fn as_pj(self) -> f64 {
+        self.0 * 1e12
+    }
+}
+
+impl Power {
+    pub fn w(v: f64) -> Power {
+        Power(v)
+    }
+    pub fn mw(v: f64) -> Power {
+        Power(v * 1e-3)
+    }
+    pub fn uw(v: f64) -> Power {
+        Power(v * 1e-6)
+    }
+    pub fn nw(v: f64) -> Power {
+        Power(v * 1e-9)
+    }
+    pub fn as_w(self) -> f64 {
+        self.0
+    }
+    pub fn as_mw(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+impl Area {
+    pub fn mm2(v: f64) -> Area {
+        Area(v * 1e-6)
+    }
+    pub fn um2(v: f64) -> Area {
+        Area(v * 1e-12)
+    }
+    pub fn as_mm2(self) -> f64 {
+        self.0 * 1e6
+    }
+    pub fn as_um2(self) -> f64 {
+        self.0 * 1e12
+    }
+}
+
+// Cross-quantity physics.
+impl Div<Time> for Energy {
+    type Output = Power;
+    /// `P = E / t`.
+    fn div(self, rhs: Time) -> Power {
+        Power(self.0 / rhs.0)
+    }
+}
+
+impl Mul<Time> for Power {
+    type Output = Energy;
+    /// `E = P · t`.
+    fn mul(self, rhs: Time) -> Energy {
+        Energy(self.0 * rhs.0)
+    }
+}
+
+impl Mul<Power> for Time {
+    type Output = Energy;
+    fn mul(self, rhs: Power) -> Energy {
+        Energy(self.0 * rhs.0)
+    }
+}
+
+impl Div<Power> for Energy {
+    type Output = Time;
+    /// `t = E / P`.
+    fn div(self, rhs: Power) -> Time {
+        Time(self.0 / rhs.0)
+    }
+}
+
+fn scaled(v: f64, scales: &[(f64, &'static str)]) -> (f64, &'static str) {
+    let a = v.abs();
+    for &(s, name) in scales {
+        if a >= s {
+            return (v / s, name);
+        }
+    }
+    let &(s, name) = scales.last().unwrap();
+    (v / s, name)
+}
+
+impl fmt::Display for Time {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 == 0.0 {
+            return write!(f, "0 s");
+        }
+        let (v, u) = scaled(
+            self.0,
+            &[(1.0, "s"), (1e-3, "ms"), (1e-6, "µs"), (1e-9, "ns"), (1e-12, "ps")],
+        );
+        write!(f, "{:.2} {}", v, u)
+    }
+}
+
+impl fmt::Display for Power {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 == 0.0 {
+            return write!(f, "0 W");
+        }
+        let (v, u) = scaled(self.0, &[(1.0, "W"), (1e-3, "mW"), (1e-6, "µW"), (1e-9, "nW")]);
+        write!(f, "{:.2} {}", v, u)
+    }
+}
+
+impl fmt::Display for Energy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 == 0.0 {
+            return write!(f, "0 J");
+        }
+        let (v, u) = scaled(
+            self.0,
+            &[
+                (1.0, "J"),
+                (1e-3, "mJ"),
+                (1e-6, "µJ"),
+                (1e-9, "nJ"),
+                (1e-12, "pJ"),
+                (1e-15, "fJ"),
+                (1e-18, "aJ"),
+            ],
+        );
+        write!(f, "{:.2} {}", v, u)
+    }
+}
+
+impl fmt::Display for Area {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.4} mm²", self.as_mm2())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors_roundtrip() {
+        assert!((Time::ns(7.68).as_ns() - 7.68).abs() < 1e-12);
+        assert!((Time::us(14.27).as_us() - 14.27).abs() < 1e-12);
+        assert!((Power::mw(41.6).as_mw() - 41.6).abs() < 1e-12);
+        assert!((Energy::pj(3.0).as_pj() - 3.0).abs() < 1e-12);
+        assert!((Area::um2(25.0).as_um2() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn physics_identities() {
+        let e = Energy::pj(100.0);
+        let t = Time::ns(50.0);
+        let p = e / t; // 100 pJ / 50 ns = 2 mW
+        assert!((p.as_mw() - 2.0).abs() < 1e-9);
+        let back = p * t;
+        assert!((back.as_pj() - 100.0).abs() < 1e-9);
+        let t2 = e / p;
+        assert!((t2.as_ns() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Time::ns(1.0) + Time::ns(2.0);
+        assert!((a.as_ns() - 3.0).abs() < 1e-12);
+        let r = Time::us(10.0) / Time::us(2.0);
+        assert!((r - 5.0).abs() < 1e-12);
+        let s: Time = [Time::ns(1.0), Time::ns(2.0), Time::ns(3.0)].into_iter().sum();
+        assert!((s.as_ns() - 6.0).abs() < 1e-12);
+        assert_eq!(Time::ns(5.0).max(Time::ns(3.0)), Time::ns(5.0));
+    }
+
+    #[test]
+    fn display_picks_readable_scales() {
+        assert_eq!(Time::us(14.27).to_string(), "14.27 µs");
+        assert_eq!(Time::ns(7.68).to_string(), "7.68 ns");
+        assert_eq!(Time::ms(3.3).to_string(), "3.30 ms");
+        assert_eq!(Power::mw(780.1).to_string(), "780.10 mW");
+        assert_eq!(Time::ZERO.to_string(), "0 s");
+    }
+
+    #[test]
+    fn display_sub_resolution_values() {
+        // Below the smallest scale we still format (in the smallest unit).
+        let tiny = Energy::j(1e-20);
+        assert!(tiny.to_string().contains("aJ"));
+    }
+}

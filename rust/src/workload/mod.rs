@@ -1,0 +1,5 @@
+//! Application workload generators.
+
+mod taxi;
+
+pub use taxi::{TaxiCity, TaxiCityConfig, EDGE_TYPES};

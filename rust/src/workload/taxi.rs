@@ -1,0 +1,273 @@
+//! Taxi-city workload generator (paper §4.2 / Fig. 6).
+//!
+//! Synthesizes a city of taxis with the three heterogeneous edge types of
+//! the hetGNN (road connectivity, location proximity, destination
+//! similarity) and per-taxi demand/supply history tensors for the m×n
+//! region around each node — the synthetic stand-in for the proprietary
+//! fleet trace of paper ref [26] (DESIGN.md §2).
+
+use crate::error::{Error, Result};
+use crate::graph::Csr;
+use crate::testing::Rng;
+
+/// The hetGNN's edge types.
+pub const EDGE_TYPES: usize = 3;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct TaxiCityConfig {
+    /// Number of taxis (the paper's study: 10 000).
+    pub taxis: usize,
+    /// City extent in meters (square).
+    pub city_meters: f64,
+    /// Taxis within this radius get a *location proximity* edge.
+    pub proximity_radius: f64,
+    /// Taxis whose destinations fall within this radius get a
+    /// *destination similarity* edge.
+    pub destination_radius: f64,
+    /// Road-graph degree (nearest-neighbor road connections).
+    pub road_degree: usize,
+    /// Demand-grid history length P.
+    pub hist: usize,
+    /// Demand-grid size (m = n).
+    pub grid: usize,
+    pub seed: u64,
+}
+
+impl Default for TaxiCityConfig {
+    fn default() -> Self {
+        TaxiCityConfig {
+            taxis: 10_000,
+            city_meters: 20_000.0,
+            proximity_radius: 500.0,
+            destination_radius: 800.0,
+            road_degree: 4,
+            hist: 12,
+            grid: 8,
+            seed: 2023,
+        }
+    }
+}
+
+/// A generated taxi city.
+#[derive(Debug)]
+pub struct TaxiCity {
+    pub config: TaxiCityConfig,
+    /// Taxi positions (x, y) in meters.
+    pub positions: Vec<(f64, f64)>,
+    /// Taxi destinations (x, y) in meters.
+    pub destinations: Vec<(f64, f64)>,
+    /// One graph per edge type: road / proximity / destination.
+    pub graphs: [Csr; EDGE_TYPES],
+    /// Per-taxi demand history, `[taxis][hist * grid * grid * 2]`
+    /// (demand + supply channels, flattened frame-major).
+    pub history: Vec<Vec<f32>>,
+}
+
+fn dist2(a: (f64, f64), b: (f64, f64)) -> f64 {
+    let dx = a.0 - b.0;
+    let dy = a.1 - b.1;
+    dx * dx + dy * dy
+}
+
+impl TaxiCity {
+    pub fn generate(config: TaxiCityConfig) -> Result<TaxiCity> {
+        if config.taxis < 2 {
+            return Err(Error::Graph("need at least 2 taxis".into()));
+        }
+        if config.grid == 0 || config.hist == 0 {
+            return Err(Error::Graph("grid and hist must be > 0".into()));
+        }
+        let mut rng = Rng::new(config.seed);
+        let n = config.taxis;
+        let positions: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.f64_in(0.0, config.city_meters), rng.f64_in(0.0, config.city_meters)))
+            .collect();
+        let destinations: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.f64_in(0.0, config.city_meters), rng.f64_in(0.0, config.city_meters)))
+            .collect();
+
+        // Spatial hash so edge building is ~O(n) rather than O(n²).
+        let cell = config.proximity_radius.max(config.destination_radius).max(1.0);
+        let buckets = |pts: &[(f64, f64)]| {
+            let mut map = std::collections::HashMap::<(i64, i64), Vec<usize>>::new();
+            for (i, p) in pts.iter().enumerate() {
+                map.entry(((p.0 / cell) as i64, (p.1 / cell) as i64)).or_default().push(i);
+            }
+            map
+        };
+        let near = |pts: &[(f64, f64)],
+                    map: &std::collections::HashMap<(i64, i64), Vec<usize>>,
+                    i: usize,
+                    radius: f64| {
+            let p = pts[i];
+            let (cx, cy) = ((p.0 / cell) as i64, (p.1 / cell) as i64);
+            let mut out = Vec::new();
+            for dx in -1..=1 {
+                for dy in -1..=1 {
+                    if let Some(cands) = map.get(&(cx + dx, cy + dy)) {
+                        for &j in cands {
+                            if j != i && dist2(p, pts[j]) <= radius * radius {
+                                out.push(j);
+                            }
+                        }
+                    }
+                }
+            }
+            out
+        };
+
+        let pos_map = buckets(&positions);
+        let dst_map = buckets(&destinations);
+
+        // Road connectivity: each taxi links to its nearest road peers
+        // (approximated by the closest in-radius neighbors, capped).
+        let mut road_edges = Vec::new();
+        let mut prox_edges = Vec::new();
+        let mut dest_edges = Vec::new();
+        for i in 0..n {
+            let mut cand = near(&positions, &pos_map, i, config.proximity_radius);
+            cand.sort_by(|&a, &b| {
+                dist2(positions[i], positions[a])
+                    .partial_cmp(&dist2(positions[i], positions[b]))
+                    .unwrap()
+            });
+            for &j in cand.iter().take(config.road_degree) {
+                road_edges.push((i, j));
+            }
+            for &j in &cand {
+                prox_edges.push((i, j));
+            }
+            for j in near(&destinations, &dst_map, i, config.destination_radius) {
+                dest_edges.push((i, j));
+            }
+        }
+
+        let graphs = [
+            Csr::from_edges(n, &road_edges)?,
+            Csr::from_edges(n, &prox_edges)?,
+            Csr::from_edges(n, &dest_edges)?,
+        ];
+
+        // Demand/supply history: diurnal base + hotspot bumps + noise,
+        // kept non-negative.
+        let frame = config.grid * config.grid;
+        let mut history = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut h = Vec::with_capacity(config.hist * frame * 2);
+            let hotspot = (positions[i].0 / config.city_meters, positions[i].1 / config.city_meters);
+            for t in 0..config.hist {
+                let phase = (t as f64 / config.hist as f64) * std::f64::consts::TAU;
+                for ch in 0..2 {
+                    for gy in 0..config.grid {
+                        for gx in 0..config.grid {
+                            let fx = gx as f64 / config.grid as f64;
+                            let fy = gy as f64 / config.grid as f64;
+                            let bump = (-8.0
+                                * ((fx - hotspot.0).powi(2) + (fy - hotspot.1).powi(2)))
+                            .exp();
+                            let base = 2.0 + (phase + ch as f64).sin();
+                            let noise = rng.f64_in(0.0, 0.3);
+                            h.push((base + 3.0 * bump + noise) as f32);
+                        }
+                    }
+                }
+            }
+            history.push(h);
+        }
+
+        Ok(TaxiCity { config, positions, destinations, graphs, history })
+    }
+
+    pub fn num_taxis(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// Combined multi-relation neighbor view of one taxi.
+    pub fn neighbors(&self, taxi: usize, edge_type: usize) -> &[usize] {
+        self.graphs[edge_type].neighbors(taxi)
+    }
+
+    /// Flattened history frame count per taxi.
+    pub fn history_len(&self) -> usize {
+        self.config.hist * self.config.grid * self.config.grid * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> TaxiCityConfig {
+        TaxiCityConfig { taxis: 200, city_meters: 2_000.0, seed: 7, ..Default::default() }
+    }
+
+    #[test]
+    fn generates_three_graphs_over_all_taxis() {
+        let city = TaxiCity::generate(small()).unwrap();
+        assert_eq!(city.num_taxis(), 200);
+        for g in &city.graphs {
+            assert_eq!(g.num_nodes(), 200);
+            g.validate().unwrap();
+        }
+        // proximity super-graph includes the road graph's endpoints
+        assert!(city.graphs[1].num_edges() >= city.graphs[0].num_edges());
+    }
+
+    #[test]
+    fn proximity_edges_respect_the_radius() {
+        let city = TaxiCity::generate(small()).unwrap();
+        let r2 = city.config.proximity_radius * city.config.proximity_radius;
+        for i in 0..city.num_taxis() {
+            for &j in city.neighbors(i, 1) {
+                assert!(dist2(city.positions[i], city.positions[j]) <= r2 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn destination_edges_use_destinations() {
+        let city = TaxiCity::generate(small()).unwrap();
+        let r2 = city.config.destination_radius * city.config.destination_radius;
+        for i in 0..city.num_taxis() {
+            for &j in city.neighbors(i, 2) {
+                assert!(dist2(city.destinations[i], city.destinations[j]) <= r2 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn road_degree_is_capped() {
+        let city = TaxiCity::generate(small()).unwrap();
+        for i in 0..city.num_taxis() {
+            assert!(city.graphs[0].degree(i) <= city.config.road_degree);
+        }
+    }
+
+    #[test]
+    fn history_has_model_shape_and_is_nonnegative() {
+        let cfg = small();
+        let city = TaxiCity::generate(cfg).unwrap();
+        // P=12, 8×8 grid, 2 channels → 1536 values = hetGNN fin × P.
+        assert_eq!(city.history_len(), 12 * 8 * 8 * 2);
+        for h in &city.history {
+            assert_eq!(h.len(), city.history_len());
+            assert!(h.iter().all(|v| *v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TaxiCity::generate(small()).unwrap();
+        let b = TaxiCity::generate(small()).unwrap();
+        assert_eq!(a.positions, b.positions);
+        assert_eq!(a.graphs[2], b.graphs[2]);
+        assert_eq!(a.history[13], b.history[13]);
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        assert!(TaxiCity::generate(TaxiCityConfig { taxis: 1, ..small() }).is_err());
+        assert!(TaxiCity::generate(TaxiCityConfig { grid: 0, ..small() }).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Integration: the AOT artifacts load, execute, and agree with the rust
+//! functional crossbar model (L1 Pallas ↔ L3 rust cross-validation).
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use std::path::PathBuf;
+
+use ima_gnn::config::{CrossbarGeometry, DeviceParams};
+use ima_gnn::crossbar::MvmCrossbar;
+use ima_gnn::runtime::{ArtifactStore, DType, Tensor};
+use ima_gnn::testing::Rng;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(&artifact_dir()).expect("run `make artifacts` before `cargo test`")
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let s = store();
+    let names: Vec<&str> = s.manifest().artifacts().iter().map(|a| a.name.as_str()).collect();
+    for required in
+        ["gcn_layer_small", "gcn2_cora", "gcn2_cora_exact", "gcn_layer_citeseer", "hetgnn_taxi", "mvm_512x512"]
+    {
+        assert!(names.contains(&required), "missing artifact {required}");
+    }
+    assert_eq!(s.platform().to_lowercase().contains("cpu"), true);
+}
+
+#[test]
+fn gcn_layer_small_executes_with_correct_shapes() {
+    let s = store();
+    let mut rng = Rng::new(5);
+    let spec = s.manifest().get("gcn_layer_small").unwrap().clone();
+    assert_eq!(spec.inputs.len(), 4);
+    let mk = |spec_idx: usize| -> Tensor {
+        let t = &spec.inputs[spec_idx];
+        match t.dtype {
+            DType::F32 => Tensor::f32(
+                &t.shape,
+                (0..t.num_elements()).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect(),
+            )
+            .unwrap(),
+            DType::I32 => Tensor::i32(
+                &t.shape,
+                // neighbor indices into the 64-row table, some padding
+                (0..t.num_elements())
+                    .map(|_| if rng.chance(0.2) { -1 } else { rng.index(64) as i32 })
+                    .collect(),
+            )
+            .unwrap(),
+        }
+    };
+    let inputs: Vec<Tensor> = (0..4).map(mk).collect();
+    let out = s.run("gcn_layer_small", &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![16, 32]);
+    let vals = out[0].as_f32().unwrap();
+    assert!(vals.iter().all(|v| v.is_finite()));
+    // the layer ends in ReLU
+    assert!(vals.iter().all(|&v| v >= 0.0));
+    // and is not trivially zero
+    assert!(vals.iter().any(|&v| v > 0.0));
+}
+
+#[test]
+fn executor_rejects_wrong_inputs() {
+    let s = store();
+    let exe = s.load("gcn_layer_small").unwrap();
+    // wrong arity
+    assert!(exe.execute(&[]).is_err());
+    // wrong shape
+    let bad = vec![
+        Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap(),
+        Tensor::i32(&[16, 4], vec![0; 64]).unwrap(),
+        Tensor::f32(&[64, 64], vec![0.0; 4096]).unwrap(),
+        Tensor::f32(&[64, 32], vec![0.0; 2048]).unwrap(),
+    ];
+    assert!(exe.execute(&bad).is_err());
+}
+
+/// The heart of the three-layer claim: the Pallas bit-serial crossbar MVM
+/// (AOT-compiled, executed through PJRT) must agree **bit-exactly** with
+/// the rust `MvmCrossbar` functional model.
+#[test]
+fn pallas_mvm_artifact_matches_rust_crossbar_model() {
+    let s = store();
+    let mut rng = Rng::new(99);
+    let (batch, rows, cols) = (8usize, 512usize, 512usize);
+    let xq: Vec<i32> = (0..batch * rows).map(|_| rng.u64_in(0, 255) as i32).collect();
+    let gq: Vec<i32> = (0..rows * cols).map(|_| rng.i64_in(-8, 7) as i32).collect();
+
+    let out = s
+        .run(
+            "mvm_512x512",
+            &[
+                Tensor::i32(&[batch, rows], xq.clone()).unwrap(),
+                Tensor::i32(&[rows, cols], gq.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    let pallas = out[0].as_i32().unwrap();
+
+    // rust functional model, same geometry as the kernel default.
+    let geo = CrossbarGeometry::new(rows, cols);
+    let mut xbar = MvmCrossbar::new(geo, DeviceParams::default_45nm()).unwrap();
+    xbar.program(&gq).unwrap();
+    for b in 0..batch {
+        let input: Vec<u32> = xq[b * rows..(b + 1) * rows].iter().map(|&x| x as u32).collect();
+        let want = xbar.evaluate(&input).unwrap();
+        for c in 0..cols {
+            assert_eq!(
+                pallas[b * cols + c] as i64,
+                want[c],
+                "mismatch at batch {b} col {c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hetgnn_taxi_artifact_runs() {
+    let s = store();
+    let spec = s.manifest().get("hetgnn_taxi").unwrap().clone();
+    let mut rng = Rng::new(3);
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|t| match t.dtype {
+            DType::F32 => Tensor::f32(
+                &t.shape,
+                (0..t.num_elements()).map(|_| rng.f64_in(-0.5, 0.5) as f32).collect(),
+            )
+            .unwrap(),
+            DType::I32 => Tensor::i32(
+                &t.shape,
+                (0..t.num_elements()).map(|_| rng.index(256) as i32).collect(),
+            )
+            .unwrap(),
+        })
+        .collect();
+    let out = s.run("hetgnn_taxi", &inputs).unwrap();
+    // [B=32, Q=3, Fin=128]
+    assert_eq!(out[0].shape, vec![32, 3, 128]);
+    assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn missing_artifact_and_missing_dir_fail_cleanly() {
+    let s = store();
+    let e = s.load("not_a_model").unwrap_err().to_string();
+    assert!(e.contains("not_a_model") && e.contains("gcn2_cora"), "{e}");
+    let bad = ArtifactStore::open(std::path::Path::new("/nonexistent/dir"));
+    let msg = bad.err().unwrap().to_string();
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn deterministic_across_executions() {
+    let s = store();
+    let mut rng = Rng::new(12);
+    let spec = s.manifest().get("gcn_layer_small").unwrap().clone();
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|t| match t.dtype {
+            DType::F32 => Tensor::f32(
+                &t.shape,
+                (0..t.num_elements()).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect(),
+            )
+            .unwrap(),
+            DType::I32 => Tensor::i32(
+                &t.shape,
+                (0..t.num_elements()).map(|_| rng.index(64) as i32).collect(),
+            )
+            .unwrap(),
+        })
+        .collect();
+    let a = s.run("gcn_layer_small", &inputs).unwrap();
+    let b = s.run("gcn_layer_small", &inputs).unwrap();
+    assert_eq!(a, b, "PJRT execution must be deterministic");
+}
+
+#[test]
+fn executables_are_cached() {
+    let s = store();
+    let a = s.load("gcn_layer_small").unwrap();
+    let b = s.load("gcn_layer_small").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b), "second load must hit the cache");
+}

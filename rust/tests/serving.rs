@@ -1,0 +1,160 @@
+//! Integration: the full serving path (router → batcher → PJRT) in the
+//! centralized, decentralized and semi-decentralized deployments.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ima_gnn::coordinator::{
+    CentralizedLeader, GcnLayerBinding, InferenceService, Request, Router, SemiCoordinator,
+};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::graph::{fixed_size, generate};
+use ima_gnn::testing::Rng;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn service() -> InferenceService {
+    InferenceService::start(artifact_dir()).expect("run `make artifacts` first")
+}
+
+fn binding(svc_dir: &PathBuf) -> GcnLayerBinding {
+    let manifest = ima_gnn::runtime::Manifest::load(svc_dir).unwrap();
+    GcnLayerBinding::from_spec(manifest.get("gcn_layer_small").unwrap()).unwrap()
+}
+
+fn leader() -> CentralizedLeader {
+    let dir = artifact_dir();
+    let b = binding(&dir);
+    let graph = generate::regular(48, 6, 3).unwrap();
+    let mut rng = Rng::new(1);
+    let weights: Vec<f32> =
+        (0..b.feature * b.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    CentralizedLeader::new(
+        b,
+        graph,
+        weights,
+        &GnnWorkload::gcn("itest", 64, 6),
+        Duration::from_millis(50),
+    )
+    .unwrap()
+}
+
+#[test]
+fn centralized_leader_serves_full_batches() {
+    let svc = service();
+    let mut leader = leader();
+    let mut rng = Rng::new(2);
+    // Devices upload their features; round barrier makes them visible.
+    for node in 0..48 {
+        let f: Vec<f32> = (0..64).map(|_| rng.f64_in(0.0, 1.0) as f32).collect();
+        leader.upload(node, &f).unwrap();
+    }
+    leader.end_round();
+
+    let mut responses = Vec::new();
+    for id in 0..16u64 {
+        let out = leader.submit(&svc, Request { id, node: id as usize }).unwrap();
+        responses.extend(out);
+    }
+    // batch size is 16 → exactly one batch served, all 16 answered
+    assert_eq!(responses.len(), 16);
+    assert_eq!(leader.served_batches(), 1);
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.output.len(), 32);
+        assert!(r.output.iter().all(|v| v.is_finite() && *v >= 0.0)); // ReLU
+        assert!(r.modeled.as_us() > 0.0);
+    }
+    // embeddings should not all be identical (features differ)
+    assert_ne!(responses[0].output, responses[1].output);
+}
+
+#[test]
+fn centralized_leader_drains_partial_batches() {
+    let svc = service();
+    let mut leader = leader();
+    for node in 0..48 {
+        leader.upload(node, &vec![0.5; 64]).unwrap();
+    }
+    leader.end_round();
+    for id in 0..5u64 {
+        assert!(leader.submit(&svc, Request { id, node: id as usize }).unwrap().is_empty());
+    }
+    let drained = leader.drain(&svc).unwrap();
+    assert_eq!(drained.len(), 5);
+}
+
+#[test]
+fn deadline_poll_serves_stale_requests() {
+    let svc = service();
+    let dir = artifact_dir();
+    let b = binding(&dir);
+    let graph = generate::regular(32, 4, 7).unwrap();
+    let weights = vec![0.05f32; b.feature * b.hidden];
+    let mut leader = CentralizedLeader::new(
+        b,
+        graph,
+        weights,
+        &GnnWorkload::gcn("poll", 64, 4),
+        Duration::from_millis(1),
+    )
+    .unwrap();
+    leader.end_round();
+    assert!(leader.submit(&svc, Request { id: 1, node: 3 }).unwrap().is_empty());
+    std::thread::sleep(Duration::from_millis(5));
+    let served = leader.poll(&svc).unwrap();
+    assert_eq!(served.len(), 1);
+    assert_eq!(served[0].node, 3);
+}
+
+#[test]
+fn semi_decentralized_round_covers_every_node() {
+    let svc = service();
+    let dir = artifact_dir();
+    let b = binding(&dir);
+    let graph = generate::regular(48, 6, 3).unwrap();
+    let clustering = fixed_size(48, 8).unwrap();
+    let mut rng = Rng::new(4);
+    let weights: Vec<f32> =
+        (0..b.feature * b.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    let feature = b.feature;
+    let semi = SemiCoordinator::new(
+        b,
+        graph,
+        clustering,
+        weights,
+        &GnnWorkload::gcn("semi", 64, 8),
+    )
+    .unwrap();
+    assert_eq!(semi.num_heads(), 6);
+
+    let features: Vec<Vec<f32>> = (0..48)
+        .map(|_| (0..feature).map(|_| rng.f64_in(0.0, 1.0) as f32).collect())
+        .collect();
+    let results = semi.round(&svc, &features).unwrap();
+    assert_eq!(results.len(), 48);
+    for (node, r) in results.iter().enumerate() {
+        assert_eq!(r.node, node);
+        assert_eq!(r.head, node / 8);
+        assert_eq!(r.output.len(), 32);
+        assert!(r.modeled.as_us() > 0.0);
+    }
+}
+
+#[test]
+fn router_and_service_compose() {
+    // Smoke: route a request stream to replicas, serve through the service.
+    let svc = service();
+    svc.warm("gcn_layer_small").unwrap();
+    let mut router = Router::centralized(100, 2).unwrap();
+    let mut counts = [0usize; 2];
+    for node in 0..20 {
+        let dev = router.route(node).unwrap();
+        counts[dev] += 1;
+        router.complete(dev);
+    }
+    assert_eq!(counts[0] + counts[1], 20);
+    assert!(counts[0] > 0 && counts[1] > 0);
+}
