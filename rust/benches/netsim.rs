@@ -1,0 +1,88 @@
+//! Netsim bench — packet-fabric throughput and the cost of the E9 sweep.
+//!
+//! The engine itself must stay cheap enough that sweeping topology grids
+//! from the CLI is interactive: the interesting output is events/second
+//! for the three fabrics, uncongested vs. contended.
+//!
+//! `cargo bench --bench netsim`
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::experiments::NetsimSweep;
+use ima_gnn::netmodel::{NetModel, Topology};
+use ima_gnn::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use ima_gnn::report::Table;
+
+fn main() {
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology { nodes: 1000, cluster_size: 10 };
+    let free = NetSimConfig::default();
+    let contended = NetSimConfig {
+        rx_ports: Some(16),
+        cluster_channels: Some(1),
+        ..Default::default()
+    };
+
+    // --- contention picture at the bench point ------------------------------
+    let mut t = Table::new(
+        "netsim @ N=1000, cs=10 (uncongested vs contended)",
+        &["Fabric", "Free completion", "Contended completion", "Contended packets"],
+    );
+    for (name, sc) in [
+        ("centralized star", Scenario::CentralizedStar),
+        ("decentralized mesh", Scenario::DecentralizedMesh),
+        ("semi overlay", Scenario::SemiOverlay { head_capacity: 10.0 }),
+    ] {
+        let a = simulate_fabric(&model, sc, topo, &free).unwrap();
+        let b = simulate_fabric(&model, sc, topo, &contended).unwrap();
+        t.row(&[
+            name.into(),
+            a.completion.to_string(),
+            b.completion.to_string(),
+            format!("{} ({:.1}%)", b.contended_packets, b.contention_fraction() * 100.0),
+        ]);
+    }
+    t.print();
+
+    // --- engine timing -------------------------------------------------------
+    let mut b = Bench::new();
+    b.section("packet fabric (N=1000, cs=10)");
+    b.case("centralized star, uncongested", || {
+        black_box(simulate_fabric(&model, Scenario::CentralizedStar, topo, &free).unwrap())
+    });
+    b.case("centralized star, 16 rx ports", || {
+        black_box(simulate_fabric(&model, Scenario::CentralizedStar, topo, &contended).unwrap())
+    });
+    b.case("decentralized mesh, dedicated", || {
+        black_box(simulate_fabric(&model, Scenario::DecentralizedMesh, topo, &free).unwrap())
+    });
+    b.case("decentralized mesh, CSMA", || {
+        black_box(
+            simulate_fabric(&model, Scenario::DecentralizedMesh, topo, &contended).unwrap(),
+        )
+    });
+    b.case("semi overlay, heads 10x", || {
+        black_box(
+            simulate_fabric(
+                &model,
+                Scenario::SemiOverlay { head_capacity: 10.0 },
+                topo,
+                &free,
+            )
+            .unwrap(),
+        )
+    });
+
+    b.section("E9 sweep (small grid)");
+    b.case("sweep 3 scales x 2 cluster sizes", || {
+        black_box(
+            NetsimSweep::run(
+                &GnnWorkload::taxi(),
+                &[200, 500, 1000],
+                &[5, 10],
+                &free,
+            )
+            .unwrap(),
+        )
+    });
+}

@@ -33,6 +33,12 @@ impl InterNetworkLink {
         self.cfg.v2x_packet_latency * self.packets(bytes) as f64
     }
 
+    /// Latency of one on-air packet — the schedulable unit the
+    /// packet-level `netsim` fabric queues on this link.
+    pub fn packet_latency(&self) -> Time {
+        self.cfg.v2x_packet_latency
+    }
+
     /// Link power p(L_n) while transferring (radio TX power).
     pub fn power(&self) -> Power {
         self.cfg.v2x_tx_power

@@ -71,6 +71,9 @@ pub struct CentralizedLeader {
     store: FeatureStore,
     model: NetModel,
     topo: Topology,
+    /// When set, the per-response `modeled` latency comes from a
+    /// packet-level `netsim` round instead of the closed-form Eq. (1).
+    simulated_latency: Option<Time>,
     served_batches: u64,
     /// §Perf: tensors that are constant within a round, rebuilt only at
     /// the `end_round` barrier instead of per served batch.
@@ -111,6 +114,7 @@ impl CentralizedLeader {
             store,
             model,
             topo,
+            simulated_latency: None,
             served_batches: 0,
             w_tensor,
             table_tensor: None,
@@ -166,6 +170,37 @@ impl CentralizedLeader {
         self.served_batches
     }
 
+    /// Switch the per-response `modeled` latency from the closed-form
+    /// Eq. (1) to a packet-level `netsim` round over this leader's
+    /// topology — uplink contention included, composed through the
+    /// `CommFabric` entry point (`NetModel::latency_via`).  `None`
+    /// returns to the analytic model.
+    pub fn use_simulated_latency(
+        &mut self,
+        cfg: Option<&crate::netsim::NetSimConfig>,
+    ) -> Result<()> {
+        self.simulated_latency = match cfg {
+            None => None,
+            Some(c) => {
+                let fabric = crate::netsim::NetSim::new(c.clone());
+                Some(
+                    self.model
+                        .latency_via(&fabric, Setting::Centralized, self.topo)?
+                        .total(),
+                )
+            }
+        };
+        Ok(())
+    }
+
+    /// The round latency currently attached to responses: the simulated
+    /// figure when [`CentralizedLeader::use_simulated_latency`] is active,
+    /// the Eq. (1) closed form otherwise.
+    pub fn modeled_round_latency(&self) -> Time {
+        self.simulated_latency
+            .unwrap_or_else(|| self.model.latency(Setting::Centralized, self.topo).total())
+    }
+
     fn serve(&mut self, svc: &InferenceService, batch: Batch) -> Result<Vec<Response>> {
         let b = &self.binding;
         let real = batch.requests.len();
@@ -199,7 +234,7 @@ impl CentralizedLeader {
             .first()
             .ok_or_else(|| Error::Coordinator("artifact returned no outputs".into()))?;
         let flat = out.as_f32()?;
-        let modeled = self.model.latency(Setting::Centralized, self.topo).total();
+        let modeled = self.modeled_round_latency();
 
         Ok(batch
             .requests
@@ -282,6 +317,30 @@ mod tests {
             Duration::ZERO,
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn simulated_latency_mode_tracks_the_fabric() {
+        use crate::netsim::NetSimConfig;
+        let mut l = leader();
+        let analytic = l.modeled_round_latency();
+        // Uncongested fabric coincides with Eq. (1).
+        l.use_simulated_latency(Some(&NetSimConfig::default())).unwrap();
+        let sim = l.modeled_round_latency();
+        assert!(
+            (sim.as_s() - analytic.as_s()).abs() / analytic.as_s() < 1e-6,
+            "uncongested sim {sim} vs analytic {analytic}"
+        );
+        // A single receive port serializes the gather — rounds get slower.
+        l.use_simulated_latency(Some(&NetSimConfig {
+            rx_ports: Some(1),
+            ..Default::default()
+        }))
+        .unwrap();
+        assert!(l.modeled_round_latency() > sim);
+        // And None returns to the closed form.
+        l.use_simulated_latency(None).unwrap();
+        assert_eq!(l.modeled_round_latency(), analytic);
     }
 
     #[test]

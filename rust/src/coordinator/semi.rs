@@ -37,6 +37,9 @@ pub struct SemiCoordinator {
     sampler: NeighborSampler,
     model: NetModel,
     head_capacity: f64,
+    /// When set, per-result `modeled` latency comes from a packet-level
+    /// `netsim` overlay round instead of the closed-form E8 model.
+    simulated_latency: Option<Time>,
 }
 
 impl SemiCoordinator {
@@ -69,11 +72,55 @@ impl SemiCoordinator {
             clustering,
             weights,
             head_capacity,
+            simulated_latency: None,
         })
     }
 
     pub fn num_heads(&self) -> usize {
         self.clustering.num_clusters()
+    }
+
+    /// Switch per-result `modeled` latency from the closed-form E8 model
+    /// to a packet-level `netsim` overlay round — head receive-port
+    /// contention and the boundary exchange included.  The simulated
+    /// topology uses the largest cluster (the straggler that closes the
+    /// round).  `None` returns to the analytic model.
+    pub fn use_simulated_latency(
+        &mut self,
+        cfg: Option<&crate::netsim::NetSimConfig>,
+    ) -> Result<()> {
+        self.simulated_latency = match cfg {
+            None => None,
+            Some(c) => {
+                let worst = self
+                    .clustering
+                    .clusters
+                    .iter()
+                    .map(Vec::len)
+                    .max()
+                    .unwrap_or(1)
+                    .max(1);
+                let topo = Topology { nodes: self.graph.num_nodes(), cluster_size: worst };
+                Some(
+                    crate::netsim::simulate_fabric(
+                        &self.model,
+                        crate::netsim::Scenario::SemiOverlay {
+                            head_capacity: self.head_capacity,
+                        },
+                        topo,
+                        c,
+                    )?
+                    .completion,
+                )
+            }
+        };
+        Ok(())
+    }
+
+    /// The round latency currently attached to results (`None` = the
+    /// closed-form E8 model is in effect, evaluated per cluster).
+    pub fn simulated_round_latency(&self) -> Option<Time> {
+        self.simulated_latency
     }
 
     /// Run one round: every head batches its members through the artifact.
@@ -100,7 +147,9 @@ impl SemiCoordinator {
                 continue;
             }
             let topo = Topology { nodes: n, cluster_size: members.len() };
-            let modeled = self.model.semi_latency(topo, self.head_capacity).total();
+            let modeled = self
+                .simulated_latency
+                .unwrap_or_else(|| self.model.semi_latency(topo, self.head_capacity).total());
             // Heads batch their members, padding to the artifact batch.
             for chunk in members.chunks(b.batch) {
                 let mut nodes = chunk.to_vec();
@@ -191,6 +240,46 @@ mod tests {
             &GnnWorkload::gcn("t", 64, 8),
         );
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn simulated_latency_mode_tracks_the_overlay_fabric() {
+        use crate::netsim::NetSimConfig;
+        let g = generate::regular(48, 6, 3).unwrap();
+        let c = fixed_size(48, 8).unwrap();
+        let mut semi = SemiCoordinator::new(
+            binding(),
+            g,
+            c,
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 8),
+        )
+        .unwrap();
+        assert!(semi.simulated_round_latency().is_none());
+
+        semi.use_simulated_latency(Some(&NetSimConfig::default())).unwrap();
+        let sim = semi.simulated_round_latency().unwrap();
+        // Uncongested overlay coincides with the closed-form E8 model
+        // (48 nodes in six full clusters of 8, heads 8× a member).
+        let analytic = semi
+            .model
+            .semi_latency(Topology { nodes: 48, cluster_size: 8 }, semi.head_capacity)
+            .total();
+        assert!(
+            (sim.as_s() - analytic.as_s()).abs() / analytic.as_s() < 1e-6,
+            "sim {sim} vs analytic {analytic}"
+        );
+
+        // One receive port per head makes member uploads queue.
+        semi.use_simulated_latency(Some(&NetSimConfig {
+            rx_ports: Some(1),
+            ..Default::default()
+        }))
+        .unwrap();
+        assert!(semi.simulated_round_latency().unwrap() > sim);
+
+        semi.use_simulated_latency(None).unwrap();
+        assert!(semi.simulated_round_latency().is_none());
     }
 
     // The `round` execution path needs built artifacts + a PJRT service;

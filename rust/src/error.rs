@@ -1,48 +1,78 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls keep the crate dependency-free (the
+//! offline build has no `thiserror`); the variants and messages match the
+//! original derive exactly.
 
-use thiserror::Error;
+use std::fmt;
+
+use crate::pjrt as xla;
 
 /// Unified error for every IMA-GNN subsystem.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / value errors (parser, validation, presets).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed JSON (artifact manifest).
-    #[error("json error at byte {offset}: {message}")]
     Json { offset: usize, message: String },
 
     /// Graph construction / CSR validation errors.
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// Hardware-model errors (invalid crossbar mapping, sizing).
-    #[error("hardware model error: {0}")]
     Hardware(String),
 
     /// Runtime (PJRT / artifact) errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator / serving-path errors.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Simulation errors.
-    #[error("simulation error: {0}")]
     Sim(String),
 
     /// CLI usage errors.
-    #[error("usage error: {0}")]
     Usage(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    /// Errors surfaced by the `xla` crate (PJRT).
-    #[error("xla error: {0}")]
+    /// Errors surfaced by the PJRT backend.
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Json { offset, message } => {
+                write!(f, "json error at byte {offset}: {message}")
+            }
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Hardware(m) => write!(f, "hardware model error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -71,5 +101,12 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))] // the stub Error is a plain tuple struct
+    fn pjrt_error_converts_to_xla_variant() {
+        let e: Error = xla::Error("backend missing".to_string()).into();
+        assert!(matches!(&e, Error::Xla(m) if m.contains("backend missing")));
     }
 }

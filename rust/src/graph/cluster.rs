@@ -180,6 +180,64 @@ mod tests {
     }
 
     #[test]
+    fn empty_graph_yields_no_clusters() {
+        let c = fixed_size(0, 4).unwrap();
+        assert_eq!(c.num_clusters(), 0);
+        assert_eq!(c.avg_size(), 0.0);
+        assert!(c.assignment.is_empty());
+
+        let g = Csr::from_edges(0, &[]).unwrap();
+        let lc = locality(&g, 4).unwrap();
+        assert_eq!(lc.num_clusters(), 0);
+        assert!(lc.assignment.is_empty());
+    }
+
+    #[test]
+    fn non_dividing_cluster_size_assigns_every_node_exactly_once() {
+        // 7 nodes, cₛ = 3 → 3 + 3 + 1.
+        let c = fixed_size(7, 3).unwrap();
+        assert_eq!(c.num_clusters(), 3);
+        assert_eq!(c.clusters[2], vec![6]);
+        assert_eq!(c.clusters.iter().map(Vec::len).sum::<usize>(), 7);
+        for (node, &cid) in c.assignment.iter().enumerate() {
+            assert!(c.clusters[cid].contains(&node), "node {node} not in cluster {cid}");
+        }
+        // cₛ larger than the graph: one cluster holding everything.
+        let one = fixed_size(5, 100).unwrap();
+        assert_eq!(one.num_clusters(), 1);
+        assert_eq!(one.clusters[0].len(), 5);
+    }
+
+    #[test]
+    fn disconnected_components_keep_every_node_assigned_exactly_once() {
+        // Two 4-cliques plus two isolated nodes (8, 9).
+        let mut edges = Vec::new();
+        for base in [0usize, 4] {
+            for i in 0..4 {
+                for j in 0..4 {
+                    if i != j {
+                        edges.push((base + i, base + j));
+                    }
+                }
+            }
+        }
+        let g = Csr::from_edges(10, &edges).unwrap();
+        let c = locality(&g, 3).unwrap();
+        let mut seen = vec![0usize; 10];
+        for members in &c.clusters {
+            assert!(!members.is_empty() && members.len() <= 3);
+            for &n in members {
+                seen[n] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1), "every node exactly once: {seen:?}");
+        // The isolated nodes still land in clusters of their own.
+        assert_eq!(c.assignment.len(), 10);
+        assert_ne!(c.assignment[8], c.assignment[0]);
+        assert_ne!(c.assignment[9], c.assignment[4]);
+    }
+
+    #[test]
     fn zero_cluster_size_rejected() {
         assert!(fixed_size(10, 0).is_err());
         let g = generate::grid(2, 2).unwrap();

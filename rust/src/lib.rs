@@ -10,7 +10,9 @@
 //! * **Layer 3** (this crate) — the edge coordinator, the bottom-up
 //!   hardware model (device → crossbar → core), the centralized /
 //!   decentralized network model (paper Eqs. 1–7), a discrete-event
-//!   simulator, and the PJRT runtime that executes the AOT artifacts.
+//!   simulator, the packet-level contention-aware network fabric
+//!   simulator (`netsim`), and the PJRT runtime that executes the AOT
+//!   artifacts (optional `pjrt` feature; stubbed offline).
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! models once; the `ima-gnn` binary and the examples are self-contained.
@@ -31,6 +33,8 @@ pub mod experiments;
 pub mod graph;
 pub mod json;
 pub mod netmodel;
+pub mod netsim;
+pub mod pjrt;
 pub mod report;
 pub mod runtime;
 pub mod sim;

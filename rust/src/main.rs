@@ -19,9 +19,10 @@ use ima_gnn::cli::Command;
 use ima_gnn::coordinator::{CentralizedLeader, GcnLayerBinding, InferenceService, Request};
 use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
-use ima_gnn::experiments::{scaling_sweep, table2, Fig8, Table1};
+use ima_gnn::experiments::{scaling_sweep, table2, Fig8, NetsimSweep, Table1};
 use ima_gnn::graph::generate;
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
+use ima_gnn::netsim::{simulate_fabric, NetSimConfig, Scenario};
 use ima_gnn::report::{speedup, Table};
 use ima_gnn::runtime::{default_artifact_dir, Manifest};
 use ima_gnn::sim::{simulate, SimConfig};
@@ -47,6 +48,7 @@ fn run(argv: &[String]) -> Result<()> {
         "fig8" => cmd_fig8(rest),
         "scaling" => cmd_scaling(rest),
         "simulate" => cmd_simulate(rest),
+        "netsim" => cmd_netsim(rest),
         "serve" => cmd_serve(rest),
         "area" => cmd_area(rest),
         "info" => cmd_info(rest),
@@ -67,6 +69,7 @@ fn print_help() {
          fig8       latency breakdown per dataset and setting (Fig. 8)\n  \
          scaling    crossbar-count scaling study (§4.3)\n  \
          simulate   discrete-event simulation of either deployment\n  \
+         netsim     packet-level contention-aware fabric simulation (E9)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts\n  \
          area       silicon-area report for both accelerator presets\n  \
          info       artifact manifest + platform info\n  \
@@ -191,6 +194,103 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         format!("{:.1}%", report.leader_utilization * 100.0),
         "-".into(),
     ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_netsim(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("netsim", "packet-level fabric simulation")
+        .opt("topology", "centralized | decentralized | semi", Some("centralized"))
+        .opt("nodes", "edge devices", Some("1000"))
+        .opt("cluster", "cluster size cs", Some("10"))
+        .opt("head-capacity", "cluster-head capacity multiple (semi)", Some("10"))
+        .opt("rx-ports", "receive ports at the leader/heads (0 = unlimited)", Some("0"))
+        .opt("channels", "simultaneous intra-cluster transfers (0 = dedicated)", Some("0"))
+        .opt("hops", "store-and-forward relay hops per cluster exchange", Some("1"))
+        .opt("jitter", "per-packet link jitter fraction", Some("0"))
+        .opt("seed", "rng seed", Some("1"))
+        .opt("json", "sweep artifact path", Some("BENCH_netsim.json"))
+        .flag("sweep", "run the cluster-count x graph-scale sweep (E9)")
+        .flag("overlap", "overlap aggregation and feature extraction");
+    let args = cmd.parse(argv)?;
+    let opt = |v: usize| if v == 0 { None } else { Some(v) };
+    let cfg = NetSimConfig {
+        rx_ports: opt(args.usize_or("rx-ports", 0)?),
+        cluster_channels: opt(args.usize_or("channels", 0)?),
+        hops: args.usize_or("hops", 1)?.max(1),
+        overlap_cores: args.flag("overlap"),
+        link_jitter: args.f64_or("jitter", 0.0)?,
+        seed: args.usize_or("seed", 1)? as u64,
+    };
+
+    if args.flag("sweep") {
+        let sweep = NetsimSweep::paper_grid(&cfg)?;
+        sweep.render().print();
+        println!(
+            "max simulated-vs-analytic gap: {:.3e} (0 under the paper's no-contention \
+             assumptions)",
+            sweep.max_rel_gap()
+        );
+        println!(
+            "avg comm gap (dec/cent): {}; avg compute gap (cent/dec): {}",
+            speedup(sweep.avg_comm_gap()),
+            speedup(sweep.avg_compute_gap()),
+        );
+        match sweep.crossover() {
+            Some(r) => println!(
+                "semi-decentralized crossover: N={}, cs={} (hybrid beats both extremes)",
+                r.nodes, r.cluster_size
+            ),
+            None => println!(
+                "no semi-decentralized crossover on this grid (try --rx-ports to \
+                 model a finite leader NIC)"
+            ),
+        }
+        let path = args.get_or("json", "BENCH_netsim.json").to_string();
+        std::fs::write(&path, sweep.to_json())?;
+        println!("wrote {path}");
+        return Ok(());
+    }
+
+    let topo = Topology {
+        nodes: args.usize_or("nodes", 1000)?,
+        cluster_size: args.usize_or("cluster", 10)?,
+    };
+    let model = NetModel::paper(&GnnWorkload::taxi())?;
+    let (scenario, analytic) = match args.get_or("topology", "centralized") {
+        "centralized" => (
+            Scenario::CentralizedStar,
+            model.latency(Setting::Centralized, topo).total(),
+        ),
+        "decentralized" => (
+            Scenario::DecentralizedMesh,
+            model.latency(Setting::Decentralized, topo).total(),
+        ),
+        "semi" => {
+            let head = args.f64_or("head-capacity", 10.0)?;
+            (
+                Scenario::SemiOverlay { head_capacity: head },
+                model.semi_latency(topo, head).total(),
+            )
+        }
+        other => return Err(Error::Usage(format!("unknown topology `{other}`"))),
+    };
+    let report = simulate_fabric(&model, scenario, topo, &cfg)?;
+    let mut t = Table::new(
+        format!("netsim — {scenario:?}, N={}, cs={}", topo.nodes, topo.cluster_size),
+        &["Metric", "Simulated", "Analytical"],
+    );
+    t.row(&["completion".into(), report.completion.to_string(), analytic.to_string()]);
+    t.row(&["communication done".into(), report.comm_done.to_string(), "-".into()]);
+    t.row(&["messages".into(), report.messages.to_string(), "-".into()]);
+    t.row(&["packets".into(), report.packets.to_string(), "-".into()]);
+    t.row(&["events".into(), report.events.to_string(), "-".into()]);
+    t.row(&[
+        "contended packets".into(),
+        format!("{} ({:.1}%)", report.contended_packets, report.contention_fraction() * 100.0),
+        "-".into(),
+    ]);
+    t.row(&["total queue wait".into(), report.queue_wait.to_string(), "-".into()]);
     t.print();
     Ok(())
 }

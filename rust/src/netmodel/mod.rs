@@ -26,6 +26,36 @@ pub enum Setting {
     Decentralized,
 }
 
+/// A communication fabric the network model can consult in place of the
+/// closed-form Eqs. (4)/(5): the equations themselves ([`AnalyticFabric`])
+/// or the packet-level simulator (`netsim::NetSim`), which must coincide
+/// with them in the uncongested single-message case (cross-validated in
+/// `rust/tests/netsim_cross_validation.rs`).
+pub trait CommFabric {
+    /// Latency of one full communication round of `setting` over `topo`.
+    fn round_comm_latency(
+        &self,
+        model: &NetModel,
+        setting: Setting,
+        topo: Topology,
+    ) -> Result<Time>;
+}
+
+/// The closed-form fabric: defers back to [`NetModel::communicate_latency`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticFabric;
+
+impl CommFabric for AnalyticFabric {
+    fn round_comm_latency(
+        &self,
+        model: &NetModel,
+        setting: Setting,
+        topo: Topology,
+    ) -> Result<Time> {
+        Ok(model.communicate_latency(setting, topo))
+    }
+}
+
 /// Edge-graph topology parameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Topology {
@@ -237,6 +267,20 @@ impl NetModel {
             compute: self.compute_latency(setting, topo),
             communicate: self.communicate_latency(setting, topo),
         }
+    }
+
+    /// Eq. (1) with the communication term delegated to `fabric` — the
+    /// entry point the packet-level `netsim` simulator plugs into.
+    pub fn latency_via(
+        &self,
+        fabric: &dyn CommFabric,
+        setting: Setting,
+        topo: Topology,
+    ) -> Result<NetLatency> {
+        Ok(NetLatency {
+            compute: self.compute_latency(setting, topo),
+            communicate: fabric.round_comm_latency(self, setting, topo)?,
+        })
     }
 
     /// Per-core computation powers (the Table 1 power column).
@@ -458,6 +502,18 @@ mod tests {
         for d in datasets::all() {
             let (c, dd) = lat(&d);
             assert!(dd.compute < c.compute, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn analytic_fabric_round_trips_through_latency_via() {
+        let m = model();
+        let topo = Topology::taxi();
+        for s in [Setting::Centralized, Setting::Decentralized] {
+            let direct = m.latency(s, topo);
+            let via = m.latency_via(&AnalyticFabric, s, topo).unwrap();
+            assert_eq!(via.compute, direct.compute);
+            assert_eq!(via.communicate, direct.communicate);
         }
     }
 

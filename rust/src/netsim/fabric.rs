@@ -1,0 +1,126 @@
+//! Contention primitives of the packet fabric.
+//!
+//! A [`Resource`] is anything a packet must hold for the duration of its
+//! transmission: a link, a device radio, a receive-port pool, a shared
+//! cluster medium.  Reservations are committed in event order against the
+//! earliest-free server of each claimed resource, so a run is a pure
+//! function of the scenario + seed (the determinism the event queue's
+//! FIFO tie-break guarantees at the event level extends to the resource
+//! level).
+
+use crate::units::Time;
+
+/// A transmission resource with `k` FIFO servers.
+///
+/// `None` capacity models the analytic equations' infinite concurrency
+/// (Eq. 5's "concurrent transfers" assumption); `Some(k)` gives `k`
+/// servers and makes excess packets queue.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    /// `free_at[i]` = when server `i` finishes its last reservation;
+    /// `None` = unlimited servers (reservations never wait).
+    servers: Option<Vec<Time>>,
+    /// Total reserved (busy) time across all servers.
+    pub busy: Time,
+}
+
+impl Resource {
+    pub fn with_capacity(capacity: Option<usize>) -> Resource {
+        Resource {
+            servers: capacity.map(|k| vec![Time::ZERO; k.max(1)]),
+            busy: Time::ZERO,
+        }
+    }
+
+    /// One server — a half-duplex radio, a point-to-point link.
+    pub fn single() -> Resource {
+        Resource::with_capacity(Some(1))
+    }
+
+    /// Earliest time any server is free (`ZERO` when unlimited).
+    fn earliest(&self) -> Time {
+        match &self.servers {
+            None => Time::ZERO,
+            Some(s) => s.iter().copied().reduce(Time::min).unwrap_or(Time::ZERO),
+        }
+    }
+
+    /// Book the earliest-free server for `[start, start + hold]`.
+    fn commit(&mut self, start: Time, hold: Time) {
+        self.busy += hold;
+        if let Some(s) = &mut self.servers {
+            let mut best = 0;
+            for (i, free) in s.iter().enumerate().skip(1) {
+                if *free < s[best] {
+                    best = i;
+                }
+            }
+            s[best] = start + hold;
+        }
+    }
+}
+
+/// Reserve every claimed resource *simultaneously* for `[start, start +
+/// hold]` with `start >= ready` (a packet occupies its sender's radio, the
+/// link and the receiver's port for the same on-air interval).  Returns
+/// the start time; `start > ready` means the packet queued.
+pub fn reserve(resources: &mut [Resource], claims: &[usize], ready: Time, hold: Time) -> Time {
+    let mut start = ready;
+    for &rid in claims {
+        start = start.max(resources[rid].earliest());
+    }
+    for &rid in claims {
+        resources[rid].commit(start, hold);
+    }
+    start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_resources_never_queue() {
+        let mut res = vec![Resource::with_capacity(None)];
+        for i in 0..10 {
+            let start = reserve(&mut res, &[0], Time::ns(i as f64), Time::ns(100.0));
+            assert_eq!(start, Time::ns(i as f64));
+        }
+    }
+
+    #[test]
+    fn single_server_serializes() {
+        let mut res = vec![Resource::single()];
+        let a = reserve(&mut res, &[0], Time::ZERO, Time::ns(10.0));
+        let b = reserve(&mut res, &[0], Time::ZERO, Time::ns(10.0));
+        let c = reserve(&mut res, &[0], Time::ns(25.0), Time::ns(10.0));
+        assert_eq!(a, Time::ZERO);
+        assert_eq!(b, Time::ns(10.0));
+        assert_eq!(c, Time::ns(25.0)); // idle gap: arrives after the queue drained
+        assert_eq!(res[0].busy, Time::ns(30.0));
+    }
+
+    #[test]
+    fn k_servers_admit_k_concurrent_holds() {
+        let mut res = vec![Resource::with_capacity(Some(2))];
+        let a = reserve(&mut res, &[0], Time::ZERO, Time::ns(10.0));
+        let b = reserve(&mut res, &[0], Time::ZERO, Time::ns(10.0));
+        let c = reserve(&mut res, &[0], Time::ZERO, Time::ns(10.0));
+        assert_eq!(a, Time::ZERO);
+        assert_eq!(b, Time::ZERO);
+        assert_eq!(c, Time::ns(10.0));
+    }
+
+    #[test]
+    fn multi_claim_holds_all_resources_for_one_interval() {
+        let mut res = vec![Resource::single(), Resource::single()];
+        // Occupy resource 1 until t=50.
+        reserve(&mut res, &[1], Time::ZERO, Time::ns(50.0));
+        // A packet claiming both must wait for the later one.
+        let start = reserve(&mut res, &[0, 1], Time::ZERO, Time::ns(10.0));
+        assert_eq!(start, Time::ns(50.0));
+        // ... and resource 0 is now blocked until t=60 too.
+        let after = reserve(&mut res, &[0], Time::ZERO, Time::ns(5.0));
+        assert_eq!(after, Time::ns(60.0));
+    }
+}

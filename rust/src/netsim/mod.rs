@@ -1,0 +1,388 @@
+//! Packet-level, contention-aware network fabric simulator.
+//!
+//! The closed-form model (`netmodel`, Eqs. 1–7) assumes away everything
+//! that dominates real GNN-accelerator communication: Eq. (5) takes the
+//! centralized uplinks as perfectly concurrent, Eq. (4) gives every
+//! cluster device a dedicated channel.  This subsystem models the three
+//! deployment topologies as message-passing fabrics over the
+//! deterministic event queue (`sim::EventQueue`):
+//!
+//! * **Centralized star** — every device uplinks over the V2X link L_n
+//!   into the leader's receive-port pool ([`NetSimConfig::rx_ports`]);
+//!   messages packetize exactly as [`crate::comm::InterNetworkLink`] does.
+//! * **Decentralized mesh** — per-device half-duplex radios, tₑ session
+//!   setup, cₛ store-and-forward transfers per direction over L_c, an
+//!   optional shared CSMA medium per cluster
+//!   ([`NetSimConfig::cluster_channels`]) and multi-hop relaying
+//!   ([`NetSimConfig::hops`]).
+//! * **Semi-decentralized overlay** — V2X star per cluster into each
+//!   head, head-side batching, head↔head boundary exchange, downlink.
+//!
+//! **Cross-validation invariant:** with every capacity knob unlimited
+//! (the defaults) the simulated communication latencies coincide with
+//! Eqs. (4)/(5) and the E8 hybrid model to within float round-off — the
+//! analytic equations are the uncongested fixed point of this simulator
+//! (asserted in `rust/tests/netsim_cross_validation.rs` and the tests
+//! below).  The knobs then expose what the equations cannot: queueing
+//! under finite ports, CSMA serialization, relay chains.
+//!
+//! Entry points: [`simulate_fabric`] for one round of one scenario, and
+//! [`NetSim`] as a [`CommFabric`] implementation that `netmodel`
+//! consumes via [`NetModel::latency_via`].
+
+mod fabric;
+mod scenario;
+
+use crate::error::Result;
+use crate::netmodel::{CommFabric, NetModel, Setting, Topology};
+use crate::units::Time;
+
+/// Capacity and behavior knobs of the fabric.
+///
+/// The defaults reproduce the paper's assumptions (no contention), so a
+/// default-configured run must agree with the analytic model.
+#[derive(Debug, Clone)]
+pub struct NetSimConfig {
+    /// Concurrent receive ports at the central leader / each cluster head.
+    /// `None` = unlimited (Eq. 5's "concurrent transfers" assumption).
+    pub rx_ports: Option<usize>,
+    /// Simultaneous transfers the intra-cluster radio medium admits.
+    /// `None` = dedicated channels (Eq. 4's assumption); `Some(1)` = CSMA.
+    pub cluster_channels: Option<usize>,
+    /// Store-and-forward relay hops per cluster exchange (§4.2's relaying
+    /// configuration; 1 = adjacent nodes).
+    pub hops: usize,
+    /// Overlap the aggregation and feature-extraction cores in the compute
+    /// composition (paper §2.3), like `sim::SimConfig::overlap_cores`.
+    pub overlap_cores: bool,
+    /// Multiplicative per-packet jitter, uniform in `[1, 1 + link_jitter]`.
+    /// 0 = deterministic (the cross-validation setting).
+    pub link_jitter: f64,
+    /// Seed for the jitter stream; runs are bit-identical per seed.
+    pub seed: u64,
+}
+
+impl Default for NetSimConfig {
+    fn default() -> Self {
+        NetSimConfig {
+            rx_ports: None,
+            cluster_channels: None,
+            hops: 1,
+            overlap_cores: false,
+            link_jitter: 0.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Which fabric to simulate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scenario {
+    /// Star over L_n into the central leader (paper Fig. 4(a)).
+    CentralizedStar,
+    /// Multi-hop cluster mesh over L_c (paper Fig. 4(b)).
+    DecentralizedMesh,
+    /// Cluster-head overlay (conclusion / E8) with heads `head_capacity`×
+    /// as strong as a member device.
+    SemiOverlay { head_capacity: f64 },
+}
+
+/// Outcome of one simulated round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetSimReport {
+    /// Time the round finished (last communication or compute event).
+    pub completion: Time,
+    /// Time the last message was delivered.
+    pub comm_done: Time,
+    /// Events processed.
+    pub events: usize,
+    /// Messages injected (sessions, boundary exchanges, downlinks).
+    pub messages: usize,
+    /// Packets put on the air.
+    pub packets: usize,
+    /// Devices simulated.
+    pub devices: usize,
+    /// Packets that had to wait for a busy resource.
+    pub contended_packets: usize,
+    /// Total time packets spent queued on busy resources.
+    pub queue_wait: Time,
+    /// Aggregate reserved (on-air) time across every fabric resource.
+    pub busy_total: Time,
+}
+
+impl NetSimReport {
+    /// Fraction of packets that experienced queueing.
+    pub fn contention_fraction(&self) -> f64 {
+        if self.packets == 0 {
+            0.0
+        } else {
+            self.contended_packets as f64 / self.packets as f64
+        }
+    }
+}
+
+/// Simulate one full communication (+ compute) round of `scenario`.
+pub fn simulate_fabric(
+    model: &NetModel,
+    scenario: Scenario,
+    topo: Topology,
+    cfg: &NetSimConfig,
+) -> Result<NetSimReport> {
+    match scenario {
+        Scenario::CentralizedStar => scenario::centralized(model, topo, cfg),
+        Scenario::DecentralizedMesh => scenario::decentralized(model, topo, cfg),
+        Scenario::SemiOverlay { head_capacity } => {
+            scenario::semi(model, topo, head_capacity, cfg)
+        }
+    }
+}
+
+/// [`CommFabric`] adapter: lets `netmodel` swap Eqs. (4)/(5) for the
+/// packet-level fabric (`model.latency_via(&NetSim::new(cfg), ...)`).
+#[derive(Debug, Clone, Default)]
+pub struct NetSim {
+    pub cfg: NetSimConfig,
+}
+
+impl NetSim {
+    pub fn new(cfg: NetSimConfig) -> NetSim {
+        NetSim { cfg }
+    }
+}
+
+impl CommFabric for NetSim {
+    fn round_comm_latency(
+        &self,
+        model: &NetModel,
+        setting: Setting,
+        topo: Topology,
+    ) -> Result<Time> {
+        let scenario = match setting {
+            Setting::Centralized => Scenario::CentralizedStar,
+            Setting::Decentralized => Scenario::DecentralizedMesh,
+        };
+        Ok(simulate_fabric(model, scenario, topo, &self.cfg)?.comm_done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::GnnWorkload;
+    use crate::testing::assert_close;
+
+    fn model() -> NetModel {
+        NetModel::paper(&GnnWorkload::taxi()).unwrap()
+    }
+
+    fn topo() -> Topology {
+        Topology { nodes: 200, cluster_size: 10 }
+    }
+
+    /// The acceptance invariant: uncongested single-message latencies
+    /// match Eq. (5) / Eq. (4) / the E8 hybrid within 1% (they agree to
+    /// round-off; 1% is the criterion's bound).
+    #[test]
+    fn uncongested_fabric_matches_the_analytic_equations() {
+        let m = model();
+        let t = topo();
+        let cfg = NetSimConfig::default();
+
+        let cent = simulate_fabric(&m, Scenario::CentralizedStar, t, &cfg).unwrap();
+        let c_analytic = m.latency(Setting::Centralized, t);
+        assert_close(cent.comm_done.as_s(), c_analytic.communicate.as_s(), 0.01);
+        assert_close(cent.comm_done.as_s(), c_analytic.communicate.as_s(), 1e-9);
+        assert_close(cent.completion.as_s(), c_analytic.total().as_s(), 1e-6);
+
+        let dec = simulate_fabric(&m, Scenario::DecentralizedMesh, t, &cfg).unwrap();
+        let d_analytic = m.latency(Setting::Decentralized, t);
+        assert_close(dec.comm_done.as_s(), d_analytic.communicate.as_s(), 0.01);
+        assert_close(dec.comm_done.as_s(), d_analytic.communicate.as_s(), 1e-9);
+        assert_close(dec.completion.as_s(), d_analytic.total().as_s(), 1e-6);
+
+        let semi =
+            simulate_fabric(&m, Scenario::SemiOverlay { head_capacity: 10.0 }, t, &cfg)
+                .unwrap();
+        let s_analytic = m.semi_latency(t, 10.0);
+        assert_close(semi.completion.as_s(), s_analytic.total().as_s(), 0.01);
+        assert_close(semi.completion.as_s(), s_analytic.total().as_s(), 1e-6);
+
+        // Nothing queued anywhere.
+        for r in [&cent, &dec, &semi] {
+            assert_eq!(r.contended_packets, 0, "{r:?}");
+            assert_eq!(r.queue_wait, Time::ZERO);
+        }
+    }
+
+    #[test]
+    fn finite_rx_ports_make_uplinks_contend() {
+        let m = model();
+        let t = topo();
+        let free = simulate_fabric(&m, Scenario::CentralizedStar, t, &NetSimConfig::default())
+            .unwrap();
+        let mut cfg = NetSimConfig { rx_ports: Some(4), ..Default::default() };
+        let ported = simulate_fabric(&m, Scenario::CentralizedStar, t, &cfg).unwrap();
+        assert!(ported.comm_done > free.comm_done);
+        assert!(ported.contended_packets > 0);
+        assert!(ported.queue_wait > Time::ZERO);
+        // Tighter pools queue longer.
+        cfg.rx_ports = Some(1);
+        let serial = simulate_fabric(&m, Scenario::CentralizedStar, t, &cfg).unwrap();
+        assert!(serial.comm_done > ported.comm_done);
+        // One port = fully serialized uplink: N · transfer.
+        let transfer = m.inter_link().transfer(m.message_bytes());
+        assert_close(
+            serial.comm_done.as_s(),
+            (transfer * t.nodes as f64).as_s(),
+            1e-9,
+        );
+    }
+
+    #[test]
+    fn csma_medium_serializes_cluster_exchanges() {
+        let m = model();
+        let t = Topology { nodes: 60, cluster_size: 6 };
+        let dedicated =
+            simulate_fabric(&m, Scenario::DecentralizedMesh, t, &NetSimConfig::default())
+                .unwrap();
+        let csma = simulate_fabric(
+            &m,
+            Scenario::DecentralizedMesh,
+            t,
+            &NetSimConfig { cluster_channels: Some(1), ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            csma.comm_done > dedicated.comm_done * 2.0,
+            "CSMA {} vs dedicated {}",
+            csma.comm_done,
+            dedicated.comm_done
+        );
+        assert!(csma.contended_packets > 0);
+        // A wider medium sits between the two.
+        let two = simulate_fabric(
+            &m,
+            Scenario::DecentralizedMesh,
+            t,
+            &NetSimConfig { cluster_channels: Some(2), ..Default::default() },
+        )
+        .unwrap();
+        assert!(two.comm_done < csma.comm_done);
+        assert!(two.comm_done >= dedicated.comm_done);
+    }
+
+    #[test]
+    fn relay_hops_stretch_the_mesh() {
+        let m = model();
+        let t = Topology { nodes: 40, cluster_size: 4 };
+        let one = simulate_fabric(&m, Scenario::DecentralizedMesh, t, &NetSimConfig::default())
+            .unwrap();
+        let three = simulate_fabric(
+            &m,
+            Scenario::DecentralizedMesh,
+            t,
+            &NetSimConfig { hops: 3, ..Default::default() },
+        )
+        .unwrap();
+        assert!(three.comm_done > one.comm_done);
+        // Hop time triples; setup does not: 2(tₑ + cs·3·hop) vs 2(tₑ + cs·hop).
+        let link = m.intra_link();
+        let want = (link.setup() + link.hop(m.message_bytes()) * 3.0 * 4.0) * 2.0;
+        assert_close(three.comm_done.as_s(), want.as_s(), 1e-9);
+    }
+
+    #[test]
+    fn runs_are_bit_identical_per_seed() {
+        let m = model();
+        let t = Topology { nodes: 120, cluster_size: 8 };
+        let cfg = NetSimConfig {
+            rx_ports: Some(6),
+            cluster_channels: Some(1),
+            link_jitter: 0.3,
+            seed: 42,
+            ..Default::default()
+        };
+        for sc in [
+            Scenario::CentralizedStar,
+            Scenario::DecentralizedMesh,
+            Scenario::SemiOverlay { head_capacity: 8.0 },
+        ] {
+            let a = simulate_fabric(&m, sc, t, &cfg).unwrap();
+            let b = simulate_fabric(&m, sc, t, &cfg).unwrap();
+            assert_eq!(a, b, "{sc:?} must be bit-identical per seed");
+        }
+        // A different seed perturbs the jittered schedule.
+        let other = NetSimConfig { seed: 43, ..cfg.clone() };
+        let a = simulate_fabric(&m, Scenario::DecentralizedMesh, t, &cfg).unwrap();
+        let c = simulate_fabric(&m, Scenario::DecentralizedMesh, t, &other).unwrap();
+        assert_ne!(a.completion, c.completion);
+    }
+
+    #[test]
+    fn jitter_only_delays() {
+        let m = model();
+        let t = Topology { nodes: 80, cluster_size: 8 };
+        for sc in [
+            Scenario::CentralizedStar,
+            Scenario::DecentralizedMesh,
+            Scenario::SemiOverlay { head_capacity: 4.0 },
+        ] {
+            let base = simulate_fabric(&m, sc, t, &NetSimConfig::default()).unwrap();
+            let jit = simulate_fabric(
+                &m,
+                sc,
+                t,
+                &NetSimConfig { link_jitter: 0.25, ..Default::default() },
+            )
+            .unwrap();
+            assert!(jit.completion >= base.completion, "{sc:?}");
+        }
+    }
+
+    #[test]
+    fn netmodel_consumes_the_fabric_through_the_trait() {
+        let m = model();
+        let t = topo();
+        let sim = NetSim::default();
+        for s in [Setting::Centralized, Setting::Decentralized] {
+            let via = m.latency_via(&sim, s, t).unwrap();
+            let analytic = m.latency(s, t);
+            assert_close(via.communicate.as_s(), analytic.communicate.as_s(), 1e-9);
+            assert_eq!(via.compute, analytic.compute);
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_topologies() {
+        let m = model();
+        let cfg = NetSimConfig::default();
+        let empty = Topology { nodes: 0, cluster_size: 1 };
+        assert!(simulate_fabric(&m, Scenario::CentralizedStar, empty, &cfg).is_err());
+        let no_cluster = Topology { nodes: 5, cluster_size: 0 };
+        assert!(simulate_fabric(&m, Scenario::DecentralizedMesh, no_cluster, &cfg).is_err());
+        assert!(simulate_fabric(
+            &m,
+            Scenario::SemiOverlay { head_capacity: 0.5 },
+            topo(),
+            &cfg
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn event_and_packet_counts_are_structural() {
+        let m = model();
+        let t = Topology { nodes: 30, cluster_size: 5 };
+        let p = m.inter_link().packets(m.message_bytes());
+        let cent =
+            simulate_fabric(&m, Scenario::CentralizedStar, t, &NetSimConfig::default()).unwrap();
+        assert_eq!(cent.messages, 30);
+        assert_eq!(cent.packets, 30 * p);
+        assert_eq!(cent.devices, 30);
+        let dec = simulate_fabric(&m, Scenario::DecentralizedMesh, t, &NetSimConfig::default())
+            .unwrap();
+        // two sessions per device, cₛ transfers each
+        assert_eq!(dec.messages, 60);
+        assert_eq!(dec.packets, 60 * 5);
+    }
+}

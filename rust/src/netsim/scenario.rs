@@ -1,0 +1,447 @@
+//! Scenario drivers: the three deployment fabrics as message-passing
+//! protocols over the packet engine.
+//!
+//! Each driver lays devices, radios, receive-port pools and (optionally)
+//! shared cluster media out as [`Resource`]s, injects the round's messages
+//! and then runs the deterministic event loop: `Start` → per-packet
+//! `Packet` completions (reserving the claimed resources for each on-air
+//! interval) → protocol continuations (follow-up sessions, compute
+//! events).  With every capacity knob left unlimited the schedules
+//! collapse to the closed-form Eqs. (4)/(5) — the cross-validation
+//! invariant `netsim_cross_validation.rs` asserts.
+
+use crate::error::{Error, Result};
+use crate::netmodel::{NetModel, Topology};
+use crate::sim::EventQueue;
+use crate::testing::Rng;
+use crate::units::Time;
+
+use super::fabric::{reserve, Resource};
+use super::{NetSimConfig, NetSimReport};
+
+/// One directed message: `packets` store-and-forward units, each holding
+/// every claimed resource for `per_packet` (± jitter) on air.
+struct Msg {
+    claims: Vec<usize>,
+    packets: usize,
+    sent: usize,
+    per_packet: Time,
+    /// Connection-establishment time charged before the first packet
+    /// (off-medium, like the analytic tₑ).
+    setup: Time,
+    done: Done,
+}
+
+/// Protocol continuation fired when a message's last packet lands.
+#[derive(Debug, Clone, Copy)]
+enum Done {
+    /// Centralized: one device's uplink reached the leader.
+    CentUplink,
+    /// Decentralized: a device finished its outbound exchange session.
+    DecOutbound { device: usize },
+    /// Decentralized: a device finished its inbound exchange session.
+    DecInbound,
+    /// Semi: one member's V2X upload reached its cluster head.
+    SemiUplink { cluster: usize },
+    /// Semi: a head finished the two-way boundary exchange.
+    SemiBoundary { cluster: usize },
+    /// Semi: a head's downlink broadcast landed (terminal).
+    SemiDownlink,
+}
+
+/// What follows a compute completion.
+#[derive(Debug, Clone, Copy)]
+enum After {
+    /// Terminal compute (leader slot, device inference).
+    End,
+    /// Semi head finished its member batch: start the boundary exchange.
+    Boundary { cluster: usize },
+}
+
+enum Ev {
+    /// A message becomes eligible to transmit.
+    Start(usize),
+    /// One packet of a message finished its on-air interval.
+    Packet(usize),
+    /// A compute phase finished.
+    Compute(After),
+}
+
+/// Shared engine state: resources, messages, the deterministic event
+/// queue and the statistics every scenario reports.
+struct Sim {
+    queue: EventQueue<Ev>,
+    msgs: Vec<Msg>,
+    res: Vec<Resource>,
+    rng: Rng,
+    jitter: f64,
+    events: usize,
+    packets_sent: usize,
+    contended: usize,
+    queue_wait: Time,
+    comm_done: Time,
+    completion: Time,
+}
+
+impl Sim {
+    fn new(cfg: &NetSimConfig) -> Sim {
+        Sim {
+            queue: EventQueue::new(),
+            msgs: Vec::new(),
+            res: Vec::new(),
+            rng: Rng::new(cfg.seed),
+            jitter: cfg.link_jitter.max(0.0),
+            events: 0,
+            packets_sent: 0,
+            contended: 0,
+            queue_wait: Time::ZERO,
+            comm_done: Time::ZERO,
+            completion: Time::ZERO,
+        }
+    }
+
+    fn add_resource(&mut self, r: Resource) -> usize {
+        self.res.push(r);
+        self.res.len() - 1
+    }
+
+    /// Register `msg` and schedule its `Start` at `at`.
+    fn send(&mut self, msg: Msg, at: Time) {
+        debug_assert!(msg.packets > 0, "messages carry at least one packet");
+        let id = self.msgs.len();
+        self.msgs.push(msg);
+        self.queue.push(at, Ev::Start(id));
+    }
+
+    /// `Start` handler: pay the session setup, then launch packet 0.
+    fn start(&mut self, id: usize, now: Time) {
+        let ready = now + self.msgs[id].setup;
+        self.launch_packet(id, ready);
+    }
+
+    /// Reserve the message's claims for its next packet (ready at
+    /// `ready`) and schedule the on-air completion.
+    fn launch_packet(&mut self, id: usize, ready: Time) {
+        // Claims are at most [radio, medium]; copy them to the stack so
+        // the hot loop never allocates.
+        debug_assert!(self.msgs[id].claims.len() <= 2, "at most radio + medium");
+        let mut buf = [0usize; 2];
+        let n = self.msgs[id].claims.len().min(2);
+        buf[..n].copy_from_slice(&self.msgs[id].claims[..n]);
+        let base = self.msgs[id].per_packet;
+        let hold = if self.jitter > 0.0 {
+            base * self.rng.f64_in(1.0, 1.0 + self.jitter)
+        } else {
+            base
+        };
+        let start = reserve(&mut self.res, &buf[..n], ready, hold);
+        if start > ready {
+            self.contended += 1;
+            self.queue_wait += start - ready;
+        }
+        self.packets_sent += 1;
+        self.queue.push(start + hold, Ev::Packet(id));
+    }
+
+    /// `Packet` handler: advance the message; `Some(done)` on delivery.
+    fn packet_done(&mut self, id: usize, now: Time) -> Option<Done> {
+        self.msgs[id].sent += 1;
+        if self.msgs[id].sent < self.msgs[id].packets {
+            self.launch_packet(id, now);
+            return None;
+        }
+        self.comm_done = self.comm_done.max(now);
+        Some(self.msgs[id].done)
+    }
+
+    /// Pop the next event, tracking the makespan.
+    fn next(&mut self) -> Option<(Time, Ev)> {
+        let (t, ev) = self.queue.pop()?;
+        self.events += 1;
+        self.completion = self.completion.max(t);
+        Some((t, ev))
+    }
+
+    fn report(self, devices: usize) -> NetSimReport {
+        NetSimReport {
+            completion: self.completion,
+            comm_done: self.comm_done,
+            events: self.events,
+            messages: self.msgs.len(),
+            packets: self.packets_sent,
+            devices,
+            contended_packets: self.contended,
+            queue_wait: self.queue_wait,
+            busy_total: self.res.iter().map(|r| r.busy).sum(),
+        }
+    }
+}
+
+/// Centralized star (paper Fig. 4(a)): every device uplinks its message
+/// over L_n into the leader's receive-port pool; the leader pipelines one
+/// Eq. (3) slot per arrived peer.
+pub(super) fn centralized(
+    model: &NetModel,
+    topo: Topology,
+    cfg: &NetSimConfig,
+) -> Result<NetSimReport> {
+    if topo.nodes == 0 {
+        return Err(Error::Sim("topology needs at least one node".into()));
+    }
+    let mut sim = Sim::new(cfg);
+    let rx = sim.add_resource(Resource::with_capacity(cfg.rx_ports));
+    let packets = model.inter_link().packets(model.message_bytes());
+    let lat = model.inter_link().packet_latency();
+    for _device in 0..topo.nodes {
+        sim.send(
+            Msg {
+                claims: vec![rx],
+                packets,
+                sent: 0,
+                per_packet: lat,
+                setup: Time::ZERO,
+                done: Done::CentUplink,
+            },
+            Time::ZERO,
+        );
+    }
+
+    // The leader pipelines nodes at the banked-core issue rate (Eq. 3's
+    // per-node slot); the other N−1 devices' data each takes one slot.
+    let (m1, m2, m3) = model.capacity_ratios();
+    let b = model.breakdown();
+    let slot = b.t1 * (1.0 / m1) + b.t2 * (1.0 / m2) + b.t3 * (1.0 / m3);
+    let mut remaining = topo.nodes.saturating_sub(1);
+    let mut leader_free = Time::ZERO;
+
+    while let Some((now, ev)) = sim.next() {
+        match ev {
+            Ev::Start(id) => sim.start(id, now),
+            Ev::Packet(id) => {
+                if let Some(done) = sim.packet_done(id, now) {
+                    match done {
+                        Done::CentUplink => {
+                            if remaining > 0 {
+                                remaining -= 1;
+                                let start = leader_free.max(now);
+                                leader_free = start + slot;
+                                sim.queue.push(start + slot, Ev::Compute(After::End));
+                            }
+                        }
+                        other => unreachable!("centralized sim saw {other:?}"),
+                    }
+                }
+            }
+            Ev::Compute(After::End) => {}
+            Ev::Compute(After::Boundary { .. }) => {
+                unreachable!("semi continuation in centralized sim")
+            }
+        }
+    }
+    Ok(sim.report(topo.nodes))
+}
+
+/// Decentralized multi-hop cluster mesh (paper Fig. 4(b)): each device
+/// runs an outbound then an inbound exchange session — tₑ setup plus cₛ
+/// store-and-forward transfers over L_c — then computes locally.
+pub(super) fn decentralized(
+    model: &NetModel,
+    topo: Topology,
+    cfg: &NetSimConfig,
+) -> Result<NetSimReport> {
+    if topo.nodes == 0 || topo.cluster_size == 0 {
+        return Err(Error::Sim("need nodes and a positive cluster size".into()));
+    }
+    let mut sim = Sim::new(cfg);
+    let cs = topo.cluster_size;
+    let n_clusters = topo.nodes.div_ceil(cs);
+
+    // Resources: one half-duplex radio per device, then (under the
+    // shared-medium knob) one CSMA medium per cluster.
+    for _ in 0..topo.nodes {
+        sim.add_resource(Resource::single());
+    }
+    let medium_base = topo.nodes;
+    if cfg.cluster_channels.is_some() {
+        for _ in 0..n_clusters {
+            sim.add_resource(Resource::with_capacity(cfg.cluster_channels));
+        }
+    }
+    let shared = cfg.cluster_channels.is_some();
+    let claims_of = |device: usize| -> Vec<usize> {
+        if shared {
+            vec![device, medium_base + device / cs]
+        } else {
+            vec![device]
+        }
+    };
+
+    let link = model.intra_link();
+    let hold = link.relay_chain(model.message_bytes(), cfg.hops);
+    let setup = link.setup();
+    for device in 0..topo.nodes {
+        sim.send(
+            Msg {
+                claims: claims_of(device),
+                packets: cs,
+                sent: 0,
+                per_packet: hold,
+                setup,
+                done: Done::DecOutbound { device },
+            },
+            Time::ZERO,
+        );
+    }
+
+    let b = model.breakdown();
+    let compute =
+        if cfg.overlap_cores { b.overlapped_latency() } else { b.total_latency() };
+
+    while let Some((now, ev)) = sim.next() {
+        match ev {
+            Ev::Start(id) => sim.start(id, now),
+            Ev::Packet(id) => {
+                if let Some(done) = sim.packet_done(id, now) {
+                    match done {
+                        Done::DecOutbound { device } => {
+                            // Mirror session: gather from the cₛ neighbors.
+                            sim.send(
+                                Msg {
+                                    claims: claims_of(device),
+                                    packets: cs,
+                                    sent: 0,
+                                    per_packet: hold,
+                                    setup,
+                                    done: Done::DecInbound,
+                                },
+                                now,
+                            );
+                        }
+                        Done::DecInbound => {
+                            sim.queue.push(now + compute, Ev::Compute(After::End));
+                        }
+                        other => unreachable!("decentralized sim saw {other:?}"),
+                    }
+                }
+            }
+            Ev::Compute(After::End) => {}
+            Ev::Compute(After::Boundary { .. }) => {
+                unreachable!("semi continuation in decentralized sim")
+            }
+        }
+    }
+    Ok(sim.report(topo.nodes))
+}
+
+/// Semi-decentralized cluster-head overlay (conclusion / E8): members
+/// upload over V2X into their head's port pool, the head batches its
+/// members' nodes at `head_capacity`× a member's rate, exchanges boundary
+/// data with adjacent heads (two-way) and downlinks the results.
+pub(super) fn semi(
+    model: &NetModel,
+    topo: Topology,
+    head_capacity: f64,
+    cfg: &NetSimConfig,
+) -> Result<NetSimReport> {
+    if topo.nodes == 0 || topo.cluster_size == 0 {
+        return Err(Error::Sim("need nodes and a positive cluster size".into()));
+    }
+    if head_capacity.is_nan() || head_capacity < 1.0 {
+        return Err(Error::Sim("head capacity must be >= 1".into()));
+    }
+    let mut sim = Sim::new(cfg);
+    let cs = topo.cluster_size;
+    let n_clusters = topo.nodes.div_ceil(cs);
+
+    // Per-cluster: a V2X receive-port pool at the head plus the head's own
+    // radio for the boundary exchange and the downlink.
+    let mut head_rx = Vec::with_capacity(n_clusters);
+    let mut head_radio = Vec::with_capacity(n_clusters);
+    for _ in 0..n_clusters {
+        head_rx.push(sim.add_resource(Resource::with_capacity(cfg.rx_ports)));
+    }
+    for _ in 0..n_clusters {
+        head_radio.push(sim.add_resource(Resource::single()));
+    }
+
+    let packets = model.inter_link().packets(model.message_bytes());
+    let lat = model.inter_link().packet_latency();
+    let b = model.breakdown();
+    let per_node =
+        if cfg.overlap_cores { b.overlapped_latency() } else { b.total_latency() };
+    let per_member = per_node * (1.0 / head_capacity);
+
+    let mut members = vec![0usize; n_clusters];
+    let mut pending = vec![0usize; n_clusters];
+    for cluster in 0..n_clusters {
+        let m = cs.min(topo.nodes - cluster * cs);
+        members[cluster] = m;
+        pending[cluster] = m;
+        for _ in 0..m {
+            sim.send(
+                Msg {
+                    claims: vec![head_rx[cluster]],
+                    packets,
+                    sent: 0,
+                    per_packet: lat,
+                    setup: Time::ZERO,
+                    done: Done::SemiUplink { cluster },
+                },
+                Time::ZERO,
+            );
+        }
+    }
+
+    while let Some((now, ev)) = sim.next() {
+        match ev {
+            Ev::Start(id) => sim.start(id, now),
+            Ev::Packet(id) => {
+                if let Some(done) = sim.packet_done(id, now) {
+                    match done {
+                        Done::SemiUplink { cluster } => {
+                            pending[cluster] -= 1;
+                            if pending[cluster] == 0 {
+                                let batch = per_member
+                                    * members[cluster].saturating_sub(1).max(1) as f64;
+                                sim.queue
+                                    .push(now + batch, Ev::Compute(After::Boundary { cluster }));
+                            }
+                        }
+                        Done::SemiBoundary { cluster } => {
+                            sim.send(
+                                Msg {
+                                    claims: vec![head_radio[cluster]],
+                                    packets,
+                                    sent: 0,
+                                    per_packet: lat,
+                                    setup: Time::ZERO,
+                                    done: Done::SemiDownlink,
+                                },
+                                now,
+                            );
+                        }
+                        Done::SemiDownlink => {}
+                        other => unreachable!("semi sim saw {other:?}"),
+                    }
+                }
+            }
+            Ev::Compute(After::Boundary { cluster }) => {
+                // Head↔head boundary exchange: two transfers back to back
+                // on the head's radio (the E8 model's `transfer × 2`).
+                sim.send(
+                    Msg {
+                        claims: vec![head_radio[cluster]],
+                        packets: packets * 2,
+                        sent: 0,
+                        per_packet: lat,
+                        setup: Time::ZERO,
+                        done: Done::SemiBoundary { cluster },
+                    },
+                    now,
+                );
+            }
+            Ev::Compute(After::End) => {}
+        }
+    }
+    Ok(sim.report(topo.nodes))
+}

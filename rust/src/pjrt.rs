@@ -1,0 +1,256 @@
+//! PJRT backend shim.
+//!
+//! With the `pjrt` cargo feature enabled this module re-exports the real
+//! `xla` crate (vendored separately; not part of the offline dependency
+//! set — see DESIGN.md §5).  By default it provides an API-compatible stub
+//! whose client constructor fails with a clear error, so every other layer
+//! — coordinator, netsim, experiments, CLI, benches — builds and tests
+//! offline with zero external dependencies.  Host-side [`Literal`]
+//! round-trips (the part `runtime::Tensor` exercises in unit tests) are
+//! fully functional even in the stub; only device compilation/execution
+//! requires the real backend.
+
+#[cfg(feature = "pjrt")]
+pub use xla::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+
+    const UNAVAILABLE: &str = "PJRT backend not compiled in: rebuild with \
+         `--features pjrt` and a vendored `xla` crate (DESIGN.md §5)";
+
+    /// Error produced by the stub backend.
+    #[derive(Debug, Clone)]
+    pub struct Error(pub String);
+
+    impl fmt::Display for Error {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "{}", self.0)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    /// Element types artifacts exchange, plus the common XLA ones so match
+    /// arms over foreign literals keep a reachable fallback.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum ElementType {
+        Pred,
+        S32,
+        S64,
+        U32,
+        F32,
+        F64,
+    }
+
+    /// Typed payload of a host literal.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum LiteralData {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+    }
+
+    /// Rust scalars that map onto an [`ElementType`].
+    pub trait NativeType: Copy {
+        const TY: ElementType;
+        fn to_data(data: &[Self]) -> LiteralData;
+        fn from_data(data: &LiteralData) -> Option<Vec<Self>>;
+    }
+
+    impl NativeType for f32 {
+        const TY: ElementType = ElementType::F32;
+        fn to_data(data: &[f32]) -> LiteralData {
+            LiteralData::F32(data.to_vec())
+        }
+        fn from_data(data: &LiteralData) -> Option<Vec<f32>> {
+            match data {
+                LiteralData::F32(v) => Some(v.clone()),
+                _ => None,
+            }
+        }
+    }
+
+    impl NativeType for i32 {
+        const TY: ElementType = ElementType::S32;
+        fn to_data(data: &[i32]) -> LiteralData {
+            LiteralData::I32(data.to_vec())
+        }
+        fn from_data(data: &LiteralData) -> Option<Vec<i32>> {
+            match data {
+                LiteralData::I32(v) => Some(v.clone()),
+                _ => None,
+            }
+        }
+    }
+
+    /// Host literal: typed buffer plus dimensions.
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct Literal {
+        data: LiteralData,
+        dims: Vec<i64>,
+    }
+
+    impl Literal {
+        /// Rank-1 literal from a host slice.
+        pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+            Literal { data: T::to_data(data), dims: vec![data.len() as i64] }
+        }
+
+        fn len(&self) -> usize {
+            match &self.data {
+                LiteralData::F32(v) => v.len(),
+                LiteralData::I32(v) => v.len(),
+            }
+        }
+
+        /// Reinterpret under new dimensions (element count must match).
+        pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+            let want: i64 = dims.iter().product();
+            if want < 0 || want as usize != self.len() {
+                return Err(Error(format!(
+                    "reshape: dims {dims:?} incompatible with {} elements",
+                    self.len()
+                )));
+            }
+            Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+        }
+
+        /// Shape (dims + element type) of this array literal.
+        pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+            let ty = match &self.data {
+                LiteralData::F32(_) => ElementType::F32,
+                LiteralData::I32(_) => ElementType::S32,
+            };
+            Ok(ArrayShape { dims: self.dims.clone(), ty })
+        }
+
+        /// Copy the payload out as host scalars.
+        pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+            T::from_data(&self.data)
+                .ok_or_else(|| Error("literal element type mismatch".into()))
+        }
+
+        /// The stub never materializes tuple literals; an empty result tells
+        /// the executor the root itself is the single output.
+        pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+            Ok(Vec::new())
+        }
+    }
+
+    /// Dimensions + element type of an array literal.
+    #[derive(Debug, Clone)]
+    pub struct ArrayShape {
+        dims: Vec<i64>,
+        ty: ElementType,
+    }
+
+    impl ArrayShape {
+        pub fn dims(&self) -> &[i64] {
+            &self.dims
+        }
+
+        pub fn ty(&self) -> ElementType {
+            self.ty
+        }
+    }
+
+    /// Stub PJRT client — construction always fails with a clear message.
+    #[derive(Debug)]
+    pub struct PjRtClient {
+        _priv: (),
+    }
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, Error> {
+            Err(Error(UNAVAILABLE.into()))
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub".into()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+            Err(Error(UNAVAILABLE.into()))
+        }
+    }
+
+    /// Parsed HLO module (stub: never constructible).
+    #[derive(Debug)]
+    pub struct HloModuleProto {
+        _priv: (),
+    }
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+            Err(Error(UNAVAILABLE.into()))
+        }
+    }
+
+    /// Computation wrapper over a parsed proto.
+    #[derive(Debug)]
+    pub struct XlaComputation {
+        _priv: (),
+    }
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation { _priv: () }
+        }
+    }
+
+    /// Compiled executable handle (stub: never constructible).
+    #[derive(Debug)]
+    pub struct PjRtLoadedExecutable {
+        _priv: (),
+    }
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            Err(Error(UNAVAILABLE.into()))
+        }
+    }
+
+    /// Device buffer handle (stub: never constructible).
+    #[derive(Debug)]
+    pub struct PjRtBuffer {
+        _priv: (),
+    }
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            Err(Error(UNAVAILABLE.into()))
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn client_reports_missing_backend() {
+            let e = PjRtClient::cpu().unwrap_err();
+            assert!(e.to_string().contains("pjrt"), "{e}");
+        }
+
+        #[test]
+        fn literal_reshape_checks_element_count() {
+            let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+            assert!(lit.reshape(&[2, 2]).is_ok());
+            assert!(lit.reshape(&[3, 2]).is_err());
+        }
+
+        #[test]
+        fn literal_round_trips_shape_and_type() {
+            let lit = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]).reshape(&[2, 3]).unwrap();
+            let shape = lit.array_shape().unwrap();
+            assert_eq!(shape.dims(), &[2, 3]);
+            assert_eq!(shape.ty(), ElementType::S32);
+            assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+            assert!(lit.to_vec::<f32>().is_err());
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;

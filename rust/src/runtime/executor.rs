@@ -8,6 +8,7 @@
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::pjrt as xla;
 
 use super::manifest::ArtifactSpec;
 use super::tensor::Tensor;

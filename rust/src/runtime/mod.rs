@@ -18,6 +18,7 @@ use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use crate::error::Result;
+use crate::pjrt as xla;
 
 /// Default artifact directory relative to the repo root.
 pub fn default_artifact_dir() -> PathBuf {

@@ -1,6 +1,7 @@
 //! Host-side tensors exchanged with the PJRT runtime.
 
 use crate::error::{Error, Result};
+use crate::pjrt as xla;
 
 /// Element type of a tensor (the subset our artifacts use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

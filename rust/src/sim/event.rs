@@ -107,6 +107,23 @@ mod tests {
     }
 
     #[test]
+    fn equal_timestamps_pop_in_insertion_order_among_mixed_times() {
+        // The determinism tie-break the netsim fabric relies on: ties pop
+        // FIFO even when interleaved with other timestamps and partial pops.
+        let mut q = EventQueue::new();
+        q.push(Time::ns(2.0), "b1");
+        q.push(Time::ns(1.0), "a");
+        q.push(Time::ns(2.0), "b2");
+        q.push(Time::ns(3.0), "c");
+        assert_eq!(q.pop().unwrap().1, "a");
+        // Pushing another tie after a pop keeps FIFO order within the tie.
+        q.push(Time::ns(2.0), "b3");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, ["b1", "b2", "b3", "c"]);
+        assert_eq!(q.scheduled(), 5);
+    }
+
+    #[test]
     fn property_monotone_pop_order() {
         forall(24, |rng: &mut Rng| {
             let mut q = EventQueue::new();

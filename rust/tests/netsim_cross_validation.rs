@@ -1,0 +1,164 @@
+//! Integration: the packet-level fabric (`netsim`), the closed-form
+//! network model (Eqs. 1–5 + E8) and the aggregate DES (`sim`) must tell
+//! one consistent story — and the fabric must stay deterministic.
+//!
+//! The acceptance invariant: in the uncongested single-message case the
+//! simulated latencies match the analytic Eq. (4)/(5) values (and the E8
+//! hybrid) within 1% for all three topologies.  They actually agree to
+//! float round-off; both bounds are asserted.
+
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::netmodel::{AnalyticFabric, NetModel, Setting, Topology};
+use ima_gnn::netsim::{simulate_fabric, NetSim, NetSimConfig, Scenario};
+use ima_gnn::sim::{simulate, SimConfig};
+use ima_gnn::testing::{assert_close, forall, Rng};
+
+fn model() -> NetModel {
+    NetModel::paper(&GnnWorkload::taxi()).unwrap()
+}
+
+/// The acceptance criterion, spelled out per topology.
+#[test]
+fn uncongested_single_message_latencies_match_the_equations_within_1_percent() {
+    let m = model();
+    let topo = Topology { nodes: 1_000, cluster_size: 10 };
+    let cfg = NetSimConfig::default();
+
+    // Centralized star ↔ Eq. (5): t(L_n), concurrent transfers.
+    let cent = simulate_fabric(&m, Scenario::CentralizedStar, topo, &cfg).unwrap();
+    let eq5 = m.communicate_latency(Setting::Centralized, topo);
+    assert_close(cent.comm_done.as_s(), eq5.as_s(), 0.01);
+    assert_close(cent.comm_done.as_s(), eq5.as_s(), 1e-9);
+
+    // Decentralized mesh ↔ Eq. (4): (tₑ + cₛ·t(L_c)) · 2.
+    let dec = simulate_fabric(&m, Scenario::DecentralizedMesh, topo, &cfg).unwrap();
+    let eq4 = m.communicate_latency(Setting::Decentralized, topo);
+    assert_close(dec.comm_done.as_s(), eq4.as_s(), 0.01);
+    assert_close(dec.comm_done.as_s(), eq4.as_s(), 1e-9);
+
+    // Semi-decentralized overlay ↔ the E8 hybrid model.
+    let semi =
+        simulate_fabric(&m, Scenario::SemiOverlay { head_capacity: 10.0 }, topo, &cfg).unwrap();
+    let e8 = m.semi_latency(topo, 10.0).total();
+    assert_close(semi.completion.as_s(), e8.as_s(), 0.01);
+    assert_close(semi.completion.as_s(), e8.as_s(), 1e-6);
+
+    // End-to-end totals compose the same way as Eq. (1).
+    assert_close(
+        cent.completion.as_s(),
+        m.latency(Setting::Centralized, topo).total().as_s(),
+        1e-6,
+    );
+    assert_close(
+        dec.completion.as_s(),
+        m.latency(Setting::Decentralized, topo).total().as_s(),
+        1e-6,
+    );
+}
+
+/// The agreement is not a lucky operating point: it holds over random
+/// topologies (jitter and contention off).
+#[test]
+fn property_fabric_equals_model_over_random_topologies() {
+    let m = model();
+    let cfg = NetSimConfig::default();
+    forall(10, |rng: &mut Rng| {
+        let topo = Topology { nodes: rng.index(300) + 2, cluster_size: rng.index(15) + 1 };
+        let cent = simulate_fabric(&m, Scenario::CentralizedStar, topo, &cfg).unwrap();
+        assert_close(
+            cent.completion.as_s(),
+            m.latency(Setting::Centralized, topo).total().as_s(),
+            1e-6,
+        );
+        let dec = simulate_fabric(&m, Scenario::DecentralizedMesh, topo, &cfg).unwrap();
+        assert_close(
+            dec.completion.as_s(),
+            m.latency(Setting::Decentralized, topo).total().as_s(),
+            1e-6,
+        );
+    });
+}
+
+/// netmodel consumes the fabric through the `CommFabric` trait: the
+/// analytic fabric and the uncongested packet fabric are interchangeable.
+#[test]
+fn commfabric_entry_point_cross_validates() {
+    let m = model();
+    let topo = Topology { nodes: 500, cluster_size: 10 };
+    let sim_fabric = NetSim::default();
+    for setting in [Setting::Centralized, Setting::Decentralized] {
+        let analytic = m.latency_via(&AnalyticFabric, setting, topo).unwrap();
+        let simulated = m.latency_via(&sim_fabric, setting, topo).unwrap();
+        assert_close(simulated.communicate.as_s(), analytic.communicate.as_s(), 1e-9);
+        assert_close(simulated.total().as_s(), analytic.total().as_s(), 1e-9);
+    }
+}
+
+/// The packet fabric and the aggregate DES (`sim`) agree wherever their
+/// assumptions overlap (uncongested, no jitter).
+#[test]
+fn packet_fabric_agrees_with_the_aggregate_des() {
+    let m = model();
+    let topo = Topology { nodes: 400, cluster_size: 8 };
+    for (setting, scenario) in [
+        (Setting::Centralized, Scenario::CentralizedStar),
+        (Setting::Decentralized, Scenario::DecentralizedMesh),
+    ] {
+        let des = simulate(&m, setting, topo, &SimConfig::default()).unwrap();
+        let fab = simulate_fabric(&m, scenario, topo, &NetSimConfig::default()).unwrap();
+        assert_close(fab.completion.as_s(), des.completion.as_s(), 1e-6);
+        assert_close(fab.comm_done.as_s(), des.comm_done.as_s(), 1e-6);
+    }
+}
+
+/// Contention strictly degrades, and removing it recovers the equations:
+/// the analytic model is the limit of the fabric as capacity → ∞.
+#[test]
+fn capacity_limits_degrade_monotonically_toward_the_analytic_limit() {
+    let m = model();
+    let topo = Topology { nodes: 300, cluster_size: 10 };
+    let analytic = m.communicate_latency(Setting::Centralized, topo);
+    let mut last = None;
+    for ports in [1usize, 4, 16, 64] {
+        let cfg = NetSimConfig { rx_ports: Some(ports), ..Default::default() };
+        let r = simulate_fabric(&m, Scenario::CentralizedStar, topo, &cfg).unwrap();
+        assert!(
+            r.comm_done.as_s() >= analytic.as_s() - 1e-12,
+            "ports={ports}: simulated beat the analytic lower bound"
+        );
+        if let Some(prev) = last {
+            assert!(r.comm_done <= prev, "more ports must not slow the gather");
+        }
+        last = Some(r.comm_done);
+    }
+    // Enough ports for the whole fleet = the analytic assumption.
+    let cfg = NetSimConfig { rx_ports: Some(topo.nodes), ..Default::default() };
+    let r = simulate_fabric(&m, Scenario::CentralizedStar, topo, &cfg).unwrap();
+    assert_close(r.comm_done.as_s(), analytic.as_s(), 1e-9);
+}
+
+/// Determinism (the satellite invariant): identical config + seed ⇒
+/// bit-identical reports, across all three fabrics, jitter on.
+#[test]
+fn fabric_runs_are_bit_identical_per_seed() {
+    let m = model();
+    let topo = Topology { nodes: 150, cluster_size: 6 };
+    for seed in [1u64, 7, 42] {
+        let cfg = NetSimConfig {
+            rx_ports: Some(8),
+            cluster_channels: Some(2),
+            link_jitter: 0.2,
+            seed,
+            ..Default::default()
+        };
+        for sc in [
+            Scenario::CentralizedStar,
+            Scenario::DecentralizedMesh,
+            Scenario::SemiOverlay { head_capacity: 6.0 },
+        ] {
+            let a = simulate_fabric(&m, sc, topo, &cfg).unwrap();
+            let b = simulate_fabric(&m, sc, topo, &cfg).unwrap();
+            assert_eq!(a, b, "seed {seed}, {sc:?}");
+        }
+    }
+}

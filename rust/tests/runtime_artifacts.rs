@@ -14,12 +14,21 @@ fn artifact_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Shared skip guard (`testing::pjrt_artifacts_ready`): returns false with
+/// a printed reason when the PJRT backend or the AOT artifacts are absent.
+fn pjrt_ready() -> bool {
+    ima_gnn::testing::pjrt_artifacts_ready(&artifact_dir())
+}
+
 fn store() -> ArtifactStore {
     ArtifactStore::open(&artifact_dir()).expect("run `make artifacts` before `cargo test`")
 }
 
 #[test]
 fn manifest_lists_all_expected_artifacts() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let names: Vec<&str> = s.manifest().artifacts().iter().map(|a| a.name.as_str()).collect();
     for required in
@@ -32,6 +41,9 @@ fn manifest_lists_all_expected_artifacts() {
 
 #[test]
 fn gcn_layer_small_executes_with_correct_shapes() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let mut rng = Rng::new(5);
     let spec = s.manifest().get("gcn_layer_small").unwrap().clone();
@@ -68,6 +80,9 @@ fn gcn_layer_small_executes_with_correct_shapes() {
 
 #[test]
 fn executor_rejects_wrong_inputs() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let exe = s.load("gcn_layer_small").unwrap();
     // wrong arity
@@ -87,6 +102,9 @@ fn executor_rejects_wrong_inputs() {
 /// the rust `MvmCrossbar` functional model.
 #[test]
 fn pallas_mvm_artifact_matches_rust_crossbar_model() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let mut rng = Rng::new(99);
     let (batch, rows, cols) = (8usize, 512usize, 512usize);
@@ -123,6 +141,9 @@ fn pallas_mvm_artifact_matches_rust_crossbar_model() {
 
 #[test]
 fn hetgnn_taxi_artifact_runs() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let spec = s.manifest().get("hetgnn_taxi").unwrap().clone();
     let mut rng = Rng::new(3);
@@ -150,6 +171,9 @@ fn hetgnn_taxi_artifact_runs() {
 
 #[test]
 fn missing_artifact_and_missing_dir_fail_cleanly() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let e = s.load("not_a_model").unwrap_err().to_string();
     assert!(e.contains("not_a_model") && e.contains("gcn2_cora"), "{e}");
@@ -160,6 +184,9 @@ fn missing_artifact_and_missing_dir_fail_cleanly() {
 
 #[test]
 fn deterministic_across_executions() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let mut rng = Rng::new(12);
     let spec = s.manifest().get("gcn_layer_small").unwrap().clone();
@@ -186,6 +213,9 @@ fn deterministic_across_executions() {
 
 #[test]
 fn executables_are_cached() {
+    if !pjrt_ready() {
+        return;
+    }
     let s = store();
     let a = s.load("gcn_layer_small").unwrap();
     let b = s.load("gcn_layer_small").unwrap();

@@ -15,6 +15,12 @@ fn artifact_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Shared skip guard (`testing::pjrt_artifacts_ready`): returns false with
+/// a printed reason when the PJRT backend or the AOT artifacts are absent.
+fn pjrt_ready() -> bool {
+    ima_gnn::testing::pjrt_artifacts_ready(&artifact_dir())
+}
+
 fn service() -> InferenceService {
     InferenceService::start(artifact_dir()).expect("run `make artifacts` first")
 }
@@ -43,6 +49,9 @@ fn leader() -> CentralizedLeader {
 
 #[test]
 fn centralized_leader_serves_full_batches() {
+    if !pjrt_ready() {
+        return;
+    }
     let svc = service();
     let mut leader = leader();
     let mut rng = Rng::new(2);
@@ -73,6 +82,9 @@ fn centralized_leader_serves_full_batches() {
 
 #[test]
 fn centralized_leader_drains_partial_batches() {
+    if !pjrt_ready() {
+        return;
+    }
     let svc = service();
     let mut leader = leader();
     for node in 0..48 {
@@ -88,6 +100,9 @@ fn centralized_leader_drains_partial_batches() {
 
 #[test]
 fn deadline_poll_serves_stale_requests() {
+    if !pjrt_ready() {
+        return;
+    }
     let svc = service();
     let dir = artifact_dir();
     let b = binding(&dir);
@@ -111,6 +126,9 @@ fn deadline_poll_serves_stale_requests() {
 
 #[test]
 fn semi_decentralized_round_covers_every_node() {
+    if !pjrt_ready() {
+        return;
+    }
     let svc = service();
     let dir = artifact_dir();
     let b = binding(&dir);
@@ -145,6 +163,9 @@ fn semi_decentralized_round_covers_every_node() {
 
 #[test]
 fn router_and_service_compose() {
+    if !pjrt_ready() {
+        return;
+    }
     // Smoke: route a request stream to replicas, serve through the service.
     let svc = service();
     svc.warm("gcn_layer_small").unwrap();
