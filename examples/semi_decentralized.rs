@@ -14,7 +14,7 @@
 
 use ima_gnn::coordinator::{run_decentralized, InferenceService, SemiCoordinator};
 use ima_gnn::coordinator::GcnLayerBinding;
-use ima_gnn::cores::GnnWorkload;
+use ima_gnn::cores::{FeatureMatrix, GnnWorkload};
 use ima_gnn::graph::{fixed_size, generate};
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
 use ima_gnn::report::Table;
@@ -34,8 +34,7 @@ fn main() -> ima_gnn::Result<()> {
     let graph = generate::regular(n, 6, 3)?;
     let clustering = fixed_size(n, cs)?;
     let mut rng = Rng::new(9);
-    let features: Vec<Vec<f32>> =
-        (0..n).map(|_| (0..feature).map(|_| rng.f64_in(0.0, 1.0) as f32).collect()).collect();
+    let features = FeatureMatrix::from_fn(n, feature, |_, _| rng.f64_in(0.0, 1.0) as f32);
     let weights_f: Vec<f32> =
         (0..feature * hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
 

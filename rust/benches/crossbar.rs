@@ -24,7 +24,7 @@ fn mvm(rows: usize, cols: usize, adcs: usize) -> (MvmCrossbar, Vec<u32>) {
 fn main() {
     let mut b = Bench::new();
 
-    b.section("MVM crossbar evaluate (bit-serial, 8-bit inputs)");
+    b.section("MVM crossbar evaluate (8-bit inputs; dispatched fast path)");
     let (agg, agg_in) = mvm(512, 512, 8);
     let st = b.case("aggregation geometry 512x512", || black_box(agg.evaluate(&agg_in).unwrap()));
     println!(
@@ -37,6 +37,38 @@ fn main() {
     b.case("feature geometry 128x128", || black_box(fe.evaluate(&fe_in).unwrap()));
     let (tr, tr_in) = mvm(512, 32, 8);
     b.case("traversal geometry 512x32", || black_box(tr.evaluate(&tr_in).unwrap()));
+
+    b.section("MVM fast paths vs the seed bit-serial reference (512x512)");
+    let rf = b
+        .case("bit-serial reference", || black_box(agg.evaluate_reference(&agg_in).unwrap()))
+        .median_ns;
+    let mut out = vec![0i64; 512];
+    let fu = b
+        .case("fused clip-free evaluate_into", || {
+            agg.evaluate_into(&agg_in, &mut out).unwrap();
+            black_box(out[0])
+        })
+        .median_ns;
+    // Like-for-like: the binary path is compared against the reference
+    // on the SAME binary inputs (not the 8-bit ones — that would conflate
+    // the input's plane count with the dispatch win).
+    let binary_in: Vec<u32> = agg_in.iter().map(|&x| x & 1).collect();
+    let rf_bin = b
+        .case("bit-serial reference (binary inputs)", || {
+            black_box(agg.evaluate_reference(&binary_in).unwrap())
+        })
+        .median_ns;
+    let bi = b
+        .case("binary single-plane evaluate_into", || {
+            agg.evaluate_into(&binary_in, &mut out).unwrap();
+            black_box(out[0])
+        })
+        .median_ns;
+    println!(
+        "    fused {:.1}x over the 8-bit reference, binary {:.1}x over the binary reference",
+        rf / fu.max(1e-9),
+        rf_bin / bi.max(1e-9)
+    );
 
     b.section("CAM crossbar (traversal core ops)");
     let cfg = presets::decentralized();

@@ -6,7 +6,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::cores::GnnWorkload;
+use crate::cores::{FeatureMatrix, GnnWorkload};
 use crate::error::{Error, Result};
 use crate::graph::{Clustering, Csr, NeighborSampler};
 use crate::netmodel::{NetModel, Topology};
@@ -124,22 +124,25 @@ impl SemiCoordinator {
     }
 
     /// Run one round: every head batches its members through the artifact.
-    /// `features[node]` is each node's current feature vector.
-    pub fn round(&self, svc: &InferenceService, features: &[Vec<f32>]) -> Result<Vec<SemiResult>> {
+    /// `features.row(node)` is each node's current feature vector.
+    pub fn round(
+        &self,
+        svc: &InferenceService,
+        features: &FeatureMatrix,
+    ) -> Result<Vec<SemiResult>> {
         let b = &self.binding;
         let n = self.graph.num_nodes();
-        if features.len() != n {
+        if features.rows() != n {
             return Err(Error::Coordinator("feature rows != nodes".into()));
         }
-        if features.iter().any(|f| f.len() != b.feature) {
+        if features.cols() != b.feature {
             return Err(Error::Coordinator("feature width mismatch".into()));
         }
         // Shared feature table (heads exchange boundary rows, so the table
-        // every head sees is consistent).
+        // every head sees is consistent).  The flat feature matrix is
+        // already the table's row-major prefix — one contiguous copy.
         let mut x_table = vec![0.0f32; b.table * b.feature];
-        for (node, f) in features.iter().enumerate() {
-            x_table[node * b.feature..(node + 1) * b.feature].copy_from_slice(f);
-        }
+        x_table[..n * b.feature].copy_from_slice(features.as_slice());
 
         let mut results = Vec::with_capacity(n);
         for (head, members) in self.clustering.clusters.iter().enumerate() {
@@ -158,7 +161,7 @@ impl SemiCoordinator {
 
                 let mut x_self = Vec::with_capacity(b.batch * b.feature);
                 for &node in &nodes {
-                    x_self.extend_from_slice(&features[node]);
+                    x_self.extend_from_slice(features.row(node));
                 }
                 let nbr_idx = self.sampler.sample_batch(&self.graph, &nodes);
                 let inputs = vec![

@@ -11,7 +11,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
 
 use crate::config::presets;
-use crate::cores::{AggregationCore, FeatureExtractionCore};
+use crate::cores::{AggregationCore, FeatureExtractionCore, FeatureMatrix, Tile};
 use crate::error::{Error, Result};
 use crate::graph::Clustering;
 use crate::netmodel::{NetModel, Setting, Topology};
@@ -36,37 +36,59 @@ fn quantize_codes(features: &[f32], scale: f32) -> Vec<u32> {
     features.iter().map(|&f| ((f / scale).clamp(0.0, 255.0)) as u32).collect()
 }
 
+/// One edge device's crossbar cores (paper Fig. 2(a)).  Constructed once
+/// per device — or reused across sequential devices by the oracle — so
+/// the ~1 MiB array allocations are not paid per aggregate call.
+struct DeviceCores {
+    agg: AggregationCore,
+    fe: FeatureExtractionCore,
+}
+
+impl DeviceCores {
+    fn new() -> Result<DeviceCores> {
+        let cfg = presets::decentralized();
+        Ok(DeviceCores {
+            agg: AggregationCore::new(cfg.aggregation, cfg.device.clone())?,
+            fe: FeatureExtractionCore::new(cfg.feature, cfg.device)?,
+        })
+    }
+}
+
 /// Per-device compute: mean-aggregate own + peer features on the
 /// aggregation crossbar, transform through the feature-extraction
 /// crossbar.  Returns the quantized embedding.
 fn device_compute(
+    cores: &mut DeviceCores,
     own: &[f32],
     peers: &[Vec<f32>],
     weights: &[i32],
     fe_out: usize,
     scale: f32,
 ) -> Result<Vec<i64>> {
-    let cfg = presets::decentralized();
-    let mut agg = AggregationCore::new(cfg.aggregation, cfg.device.clone())?;
-    let mut fe = FeatureExtractionCore::new(cfg.feature, cfg.device)?;
+    let DeviceCores { agg, fe } = cores;
 
     let feature_len = own.len();
     // Quantize each contributor to 4-bit signed levels for the crossbar
-    // rows (the node-stationary feature window).
+    // rows (the node-stationary feature window) — one flat tile, no
+    // per-row allocations.
     let level = |f: f32| ((f / scale * 7.0).clamp(-8.0, 7.0)) as i32;
-    let mut rows: Vec<Vec<i32>> = Vec::with_capacity(peers.len() + 1);
-    rows.push(own.iter().map(|&f| level(f)).collect());
-    for p in peers {
+    let mut window = Tile::zeros(peers.len() + 1, feature_len);
+    for (dst, &f) in window.row_mut(0).iter_mut().zip(own.iter()) {
+        *dst = level(f);
+    }
+    for (r, p) in peers.iter().enumerate() {
         if p.len() != feature_len {
             return Err(Error::Coordinator("peer feature length mismatch".into()));
         }
-        rows.push(p.iter().map(|&f| level(f)).collect());
+        for (dst, &f) in window.row_mut(r + 1).iter_mut().zip(p.iter()) {
+            *dst = level(f);
+        }
     }
-    let active = vec![true; rows.len()];
-    let sums = agg.aggregate(&rows, &active)?;
+    let active = vec![true; window.rows()];
+    let sums = agg.aggregate(&window, &active)?;
 
     // Mean → 8-bit DAC codes for the transform.
-    let n = rows.len() as f32;
+    let n = window.rows() as f32;
     let mean: Vec<f32> = sums.iter().map(|&s| s as f32 / n).collect();
     let codes = quantize_codes(&mean, 7.0 / 255.0 * 8.0);
 
@@ -78,26 +100,24 @@ fn device_compute(
 /// Run one decentralized round: every device broadcasts its features to
 /// its cluster peers, aggregates what it receives, and computes locally.
 ///
-/// `features[d]` are device d's local features; clusters come from
-/// `clustering`; `weights` is the shared `fe_in × fe_out` quantized layer.
+/// `features.row(d)` are device d's local features (shape validated by
+/// the flat [`FeatureMatrix`] — no ragged rows by construction); clusters
+/// come from `clustering`; `weights` is the shared `fe_in × fe_out`
+/// quantized layer.
 pub fn run_decentralized(
-    features: &[Vec<f32>],
+    features: &FeatureMatrix,
     clustering: &Clustering,
     weights: Vec<i32>,
     fe_out: usize,
     model: &NetModel,
 ) -> Result<Vec<DeviceResult>> {
-    let n = features.len();
+    let n = features.rows();
     if clustering.assignment.len() != n {
         return Err(Error::Coordinator("clustering does not cover all devices".into()));
     }
-    let feature_len = features.first().map(Vec::len).unwrap_or(0);
-    if features.iter().any(|f| f.len() != feature_len) {
-        return Err(Error::Coordinator("ragged device features".into()));
-    }
     let scale = features
+        .as_slice()
         .iter()
-        .flat_map(|f| f.iter())
         .fold(1e-6f32, |m, &v| m.max(v.abs()));
 
     // Channel fabric: one receiver per device, senders cloned to peers.
@@ -120,7 +140,7 @@ pub fn run_decentralized(
         let peer_txs: HashMap<usize, Sender<(usize, Vec<f32>)>> =
             peers.iter().map(|&p| (p, senders[p].clone())).collect();
         let rx = receivers[device].take().expect("receiver taken once");
-        let own = features[device].clone();
+        let own = features.row(device).to_vec();
         let weights = weights.clone();
         let cs = peers.len();
         let modeled = model
@@ -146,8 +166,9 @@ pub fn run_decentralized(
             // Deterministic aggregation order regardless of arrival.
             inbox.sort_by_key(|(from, _)| *from);
             let peer_feats: Vec<Vec<f32>> = inbox.into_iter().map(|(_, f)| f).collect();
-            // Phase 3: local crossbar compute.
-            let output = device_compute(&own, &peer_feats, &weights, fe_out, scale)?;
+            // Phase 3: local crossbar compute (this device's own cores).
+            let mut cores = DeviceCores::new()?;
+            let output = device_compute(&mut cores, &own, &peer_feats, &weights, fe_out, scale)?;
             Ok(DeviceResult { device, output, peers: cs, modeled, wall: t0.elapsed() })
         }));
     }
@@ -164,25 +185,28 @@ pub fn run_decentralized(
 /// Single-threaded oracle of `run_decentralized` (same math, no threads) —
 /// used by tests to pin the concurrent implementation.
 pub fn run_decentralized_oracle(
-    features: &[Vec<f32>],
+    features: &FeatureMatrix,
     clustering: &Clustering,
     weights: &[i32],
     fe_out: usize,
 ) -> Result<Vec<Vec<i64>>> {
     let scale = features
+        .as_slice()
         .iter()
-        .flat_map(|f| f.iter())
         .fold(1e-6f32, |m, &v| m.max(v.abs()));
-    let mut out = Vec::with_capacity(features.len());
-    for device in 0..features.len() {
+    // Sequential oracle: one pair of cores reused across every device —
+    // the array allocations are paid once, not per device.
+    let mut cores = DeviceCores::new()?;
+    let mut out = Vec::with_capacity(features.rows());
+    for device in 0..features.rows() {
         let cid = clustering.assignment[device];
         let peer_feats: Vec<Vec<f32>> = clustering.clusters[cid]
             .iter()
             .copied()
             .filter(|&p| p != device)
-            .map(|p| features[p].clone())
+            .map(|p| features.row(p).to_vec())
             .collect();
-        out.push(device_compute(&features[device], &peer_feats, weights, fe_out, scale)?);
+        out.push(device_compute(&mut cores, features.row(device), &peer_feats, weights, fe_out, scale)?);
     }
     Ok(out)
 }
@@ -199,10 +223,10 @@ mod tests {
         cs: usize,
         feat: usize,
         fe_out: usize,
-    ) -> (Vec<Vec<f32>>, Clustering, Vec<i32>, NetModel) {
+    ) -> (FeatureMatrix, Clustering, Vec<i32>, NetModel) {
         let mut rng = Rng::new(11);
-        let features: Vec<Vec<f32>> =
-            (0..n).map(|_| (0..feat).map(|_| rng.f64_in(0.0, 1.0) as f32).collect()).collect();
+        let features =
+            FeatureMatrix::from_fn(n, feat, |_, _| rng.f64_in(0.0, 1.0) as f32);
         let clustering = fixed_size(n, cs).unwrap();
         let weights: Vec<i32> = (0..feat * fe_out).map(|_| rng.i64_in(-8, 7) as i32).collect();
         let model = NetModel::paper(&GnnWorkload::gcn("t", feat, cs)).unwrap();
@@ -242,10 +266,11 @@ mod tests {
     }
 
     #[test]
-    fn rejects_ragged_inputs() {
-        let (mut features, clustering, weights, model) = setup(6, 2, 8, 4);
-        features[3] = vec![0.0; 5];
-        assert!(run_decentralized(&features, &clustering, weights, 4, &model).is_err());
+    fn ragged_features_cannot_even_be_constructed() {
+        // The flat FeatureMatrix rejects ragged inputs once, at the API
+        // boundary, instead of every consumer re-checking.
+        let rows = vec![vec![0.0f32; 8], vec![0.0f32; 5]];
+        assert!(FeatureMatrix::from_rows(&rows).is_err());
     }
 
     #[test]

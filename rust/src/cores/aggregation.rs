@@ -12,6 +12,7 @@ use crate::crossbar::MvmCrossbar;
 use crate::error::{Error, Result};
 use crate::units::{Energy, Time};
 
+use super::tile::Tile;
 use super::workload::GnnWorkload;
 
 /// The aggregation core: a bank of identical MVM crossbars.
@@ -19,12 +20,27 @@ use super::workload::GnnWorkload;
 pub struct AggregationCore {
     config: CoreConfig,
     xbar: MvmCrossbar,
+    /// Shape of the resident window (`program_window`), if any.  The
+    /// window *contents* are not duplicated — residency is tested
+    /// against the crossbar array itself (`MvmCrossbar::tile_resident`).
+    window: Option<(usize, usize)>,
+    /// Scratch: packed row-activation mask (one bit per crossbar row).
+    mask: Vec<u64>,
+    /// Cache misses: how often the RRAM array was actually written.
+    programs: u64,
 }
 
 impl AggregationCore {
     pub fn new(config: CoreConfig, device: DeviceParams) -> Result<AggregationCore> {
         config.validate()?;
-        Ok(AggregationCore { xbar: MvmCrossbar::new(config.geometry, device)?, config })
+        let mask_words = config.geometry.rows.div_ceil(64);
+        Ok(AggregationCore {
+            xbar: MvmCrossbar::new(config.geometry, device)?,
+            config,
+            window: None,
+            mask: vec![0u64; mask_words],
+            programs: 0,
+        })
     }
 
     pub fn config(&self) -> &CoreConfig {
@@ -51,48 +67,115 @@ impl AggregationCore {
         self.xbar.pass_energy() * self.passes_per_node(w) as f64
     }
 
-    /// Functional aggregation of one column group: program `features`
-    /// (quantized levels, one row per node) and accumulate the rows
-    /// selected by `active` (the scheduler's row-activation vector).
-    ///
-    /// Returns per-column sums — exactly `Σ_{active r} features[r][c]`,
-    /// which is what a 1-bit input pass of the crossbar computes.
-    pub fn aggregate(&mut self, features: &[Vec<i32>], active: &[bool]) -> Result<Vec<i64>> {
+    /// Program `features` (quantized levels, one row per node, flat
+    /// row-major [`Tile`]) as the stationary node window.  When the same
+    /// window — shape *and* contents — is already resident, the RRAM
+    /// write is skipped entirely: the program-once / evaluate-many path
+    /// that lets repeated activation sweeps over one window run at
+    /// evaluate cost only.
+    pub fn program_window(&mut self, features: &Tile) -> Result<()> {
         let g = self.config.geometry;
-        if features.len() > g.rows {
+        if features.rows() > g.rows {
             return Err(Error::Hardware(format!(
                 "{} nodes exceed {} crossbar rows",
-                features.len(),
+                features.rows(),
                 g.rows
             )));
         }
-        if active.len() != features.len() {
+        if features.cols() > g.cols {
+            return Err(Error::Hardware(format!(
+                "{} feature cells exceed {} columns",
+                features.cols(),
+                g.cols
+            )));
+        }
+        let shape = (features.rows(), features.cols());
+        // No shape gate is needed here (unlike the FE core): every read
+        // goes through `accumulate_into`, which masks rows to the window
+        // and clips columns to the window width, so cells outside the
+        // compared block — stale or not — are never observed.
+        if self.xbar.tile_resident(features.as_slice(), shape.0, shape.1) {
+            self.window = Some(shape);
+            return Ok(());
+        }
+        // On failure the array is untouched (`program_tile` validates
+        // before writing), so the previous window — if any — stays valid.
+        self.xbar.program_tile(features.as_slice(), shape.0, shape.1)?;
+        self.programs += 1;
+        self.window = Some(shape);
+        Ok(())
+    }
+
+    /// Shape of the resident window, if one is programmed.
+    pub fn window(&self) -> Option<(usize, usize)> {
+        self.window
+    }
+
+    /// How often the crossbar was actually (re)programmed — cache misses
+    /// of the program-once path.
+    pub fn programs(&self) -> u64 {
+        self.programs
+    }
+
+    /// Accumulate the resident window's rows selected by `active` into
+    /// `out` (`active.len()` = window rows, `out.len()` = window columns).
+    /// Zero-alloc: the activation vector is packed into a reusable u64
+    /// mask and the crossbar sums the selected rows in one plane.
+    pub fn accumulate_into(&mut self, active: &[bool], out: &mut [i64]) -> Result<()> {
+        let (rows, cols) = self
+            .window
+            .ok_or_else(|| Error::Hardware("no window programmed".into()))?;
+        if active.len() != rows {
             return Err(Error::Hardware("activation vector length mismatch".into()));
         }
-        let cols = features.first().map(Vec::len).unwrap_or(0);
-        if cols > g.cols {
-            return Err(Error::Hardware(format!("{cols} feature cells exceed {} columns", g.cols)));
+        if out.len() != cols {
+            return Err(Error::Hardware(format!(
+                "output arity {} != window columns {cols}",
+                out.len()
+            )));
         }
-        if features.iter().any(|f| f.len() != cols) {
-            return Err(Error::Hardware("ragged feature rows".into()));
-        }
-        // Program the window.
-        let mut tile = vec![0i32; features.len() * cols];
-        for (r, f) in features.iter().enumerate() {
-            tile[r * cols..(r + 1) * cols].copy_from_slice(f);
-        }
-        self.xbar.program_tile(&tile, features.len(), cols)?;
-        // 1-bit activation input: adjacency row as DAC codes.
-        let mut input = vec![0u32; g.rows];
+        self.mask.fill(0);
         for (r, &a) in active.iter().enumerate() {
-            input[r] = a as u32;
+            if a {
+                self.mask[r / 64] |= 1u64 << (r % 64);
+            }
         }
-        // A single bit-plane is enough for a binary input; temporarily a
-        // full evaluate would multiply by 2^b planes of zeros, so evaluate
-        // and take the plane-0 contribution = the full sum (planes 1.. see
-        // zero input bits and contribute zero).
-        let out = self.xbar.evaluate(&input)?;
-        Ok(out[..cols].to_vec())
+        self.xbar.accumulate_rows(&self.mask, out)
+    }
+
+    /// Functional aggregation of one column group into the caller's
+    /// buffer: program `features` (cache-aware) and accumulate the rows
+    /// selected by `active` (the scheduler's row-activation vector).
+    ///
+    /// Produces per-column sums — exactly `Σ_{active r} features[r][c]`,
+    /// which is what a 1-bit input pass of the crossbar computes.
+    pub fn aggregate_into(
+        &mut self,
+        features: &Tile,
+        active: &[bool],
+        out: &mut [i64],
+    ) -> Result<()> {
+        // Validate the full call before touching the array: a rejected
+        // activation vector must not replace the resident window.
+        if active.len() != features.rows() {
+            return Err(Error::Hardware("activation vector length mismatch".into()));
+        }
+        if out.len() != features.cols() {
+            return Err(Error::Hardware(format!(
+                "output arity {} != window columns {}",
+                out.len(),
+                features.cols()
+            )));
+        }
+        self.program_window(features)?;
+        self.accumulate_into(active, out)
+    }
+
+    /// Allocating convenience wrapper over [`Self::aggregate_into`].
+    pub fn aggregate(&mut self, features: &Tile, active: &[bool]) -> Result<Vec<i64>> {
+        let mut out = vec![0i64; features.cols()];
+        self.aggregate_into(features, active, &mut out)?;
+        Ok(out)
     }
 }
 
@@ -139,7 +222,8 @@ mod tests {
     #[test]
     fn functional_aggregate_sums_active_rows() {
         let mut c = core();
-        let features = vec![vec![1, 2, 3], vec![4, 5, 6], vec![7, 7, 7]];
+        let features =
+            Tile::from_rows(&[vec![1, 2, 3], vec![4, 5, 6], vec![7, 7, 7]]).unwrap();
         let out = c.aggregate(&features, &[true, false, true]).unwrap();
         assert_eq!(out, vec![8, 9, 10]);
         // nothing active → zeros
@@ -152,14 +236,13 @@ mod tests {
         forall(24, |rng: &mut Rng| {
             let n = rng.index(32) + 1;
             let f = rng.index(24) + 1;
-            let features: Vec<Vec<i32>> =
-                (0..n).map(|_| (0..f).map(|_| rng.i64_in(-8, 7) as i32).collect()).collect();
+            let features = Tile::from_fn(n, f, |_, _| rng.i64_in(-8, 7) as i32);
             let active: Vec<bool> = (0..n).map(|_| rng.bool()).collect();
             let mut c = core();
             let got = c.aggregate(&features, &active).unwrap();
             for col in 0..f {
                 let want: i64 = features
-                    .iter()
+                    .iter_rows()
                     .zip(&active)
                     .filter(|(_, a)| **a)
                     .map(|(row, _)| row[col] as i64)
@@ -170,12 +253,56 @@ mod tests {
     }
 
     #[test]
+    fn unchanged_windows_program_once() {
+        let mut c = core();
+        let features = Tile::from_rows(&[vec![1, 2], vec![3, 4]]).unwrap();
+        let mut out = vec![0i64; 2];
+        assert_eq!(c.programs(), 0);
+        assert!(c.window().is_none());
+        c.aggregate_into(&features, &[true, true], &mut out).unwrap();
+        assert_eq!(out, vec![4, 6]);
+        assert_eq!(c.programs(), 1);
+        assert_eq!(c.window(), Some((2, 2)));
+        // Same window, many activation sweeps: no reprogramming.
+        for _ in 0..5 {
+            c.aggregate_into(&features, &[true, false], &mut out).unwrap();
+            assert_eq!(out, vec![1, 2]);
+        }
+        assert_eq!(c.programs(), 1);
+        // A rejected activation vector must not disturb the residency...
+        let different = Tile::from_rows(&[vec![9, 9], vec![9, 9]]).unwrap();
+        assert!(c.aggregate_into(&different, &[true], &mut out).is_err()); // arity
+        assert_eq!(c.programs(), 1, "failed call must not reprogram");
+        c.aggregate_into(&features, &[false, true], &mut out).unwrap();
+        assert_eq!(out, vec![3, 4], "original window still resident");
+        assert_eq!(c.programs(), 1);
+        // A changed cell forces a rewrite...
+        let mut other = features.clone();
+        other.set(0, 0, -5);
+        c.aggregate_into(&other, &[true, false], &mut out).unwrap();
+        assert_eq!(out, vec![-5, 2]);
+        assert_eq!(c.programs(), 2);
+        // ... as does a changed shape with identical contents.
+        let wide = Tile::from_flat(1, 4, vec![-5, 2, 3, 4]).unwrap();
+        let mut out4 = vec![0i64; 4];
+        c.aggregate_into(&wide, &[true], &mut out4).unwrap();
+        assert_eq!(out4, vec![-5, 2, 3, 4]);
+        assert_eq!(c.programs(), 3);
+    }
+
+    #[test]
     fn rejects_invalid_windows() {
         let mut c = core();
-        let too_many = vec![vec![0i32]; 513];
+        let too_many = Tile::zeros(513, 1);
         assert!(c.aggregate(&too_many, &vec![true; 513]).is_err());
-        assert!(c.aggregate(&[vec![0; 3]], &[true, false]).is_err()); // arity
-        assert!(c.aggregate(&[vec![0; 3], vec![0; 2]], &[true, false]).is_err());
-        // ragged
+        let one = Tile::zeros(1, 3);
+        assert!(c.aggregate(&one, &[true, false]).is_err()); // arity
+        assert!(Tile::from_rows(&[vec![0; 3], vec![0; 2]]).is_err()); // ragged
+        // No window resident yet → accumulate has nothing to sweep.
+        let mut fresh = core();
+        assert!(fresh.accumulate_into(&[true], &mut [0i64; 1]).is_err());
+        // Output arity must match the window's columns.
+        c.program_window(&one).unwrap();
+        assert!(c.accumulate_into(&[true], &mut [0i64; 2]).is_err());
     }
 }

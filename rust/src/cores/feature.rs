@@ -19,15 +19,32 @@ pub struct FeatureExtractionCore {
     config: CoreConfig,
     device: DeviceParams,
     xbar: MvmCrossbar,
+    /// Scratch: zero-padded DAC codes (geometry rows).
+    padded: Vec<u32>,
+    /// Scratch: full-width crossbar output (geometry cols).
+    full_out: Vec<i64>,
+    /// Shape of the last programmed layer — the cache gate that makes
+    /// `tile_resident`'s outside-the-block-is-zero assumption hold (a
+    /// previous *wider* program would otherwise leak stale columns into
+    /// `transform` outputs beyond a narrower layer's `fe_out`).
+    resident_shape: Option<(usize, usize)>,
+    /// Cache misses: how often the RRAM array was actually written
+    /// (residency is tested against the array itself, no copy kept).
+    programs: u64,
 }
 
 impl FeatureExtractionCore {
     pub fn new(config: CoreConfig, device: DeviceParams) -> Result<FeatureExtractionCore> {
         config.validate()?;
+        let (rows, cols) = (config.geometry.rows, config.geometry.cols);
         Ok(FeatureExtractionCore {
             xbar: MvmCrossbar::new(config.geometry, device.clone())?,
             config,
             device,
+            padded: vec![0u32; rows],
+            full_out: vec![0i64; cols],
+            resident_shape: None,
+            programs: 0,
         })
     }
 
@@ -59,13 +76,46 @@ impl FeatureExtractionCore {
     }
 
     /// Program the layer weights (row-major `fe_in × fe_out` levels).
+    /// The GNN layer is round-invariant, so when the same weights (shape
+    /// *and* contents) are already resident the RRAM write is skipped —
+    /// the same program-once / evaluate-many contract as
+    /// `AggregationCore::program_window`.
     pub fn program_weights(&mut self, weights: &[i32], fe_in: usize, fe_out: usize) -> Result<()> {
-        self.xbar.program_tile(weights, fe_in, fe_out)
+        // The shape gate is load-bearing: `transform` evaluates the FULL
+        // array, so a hit is only a true no-op when the last program had
+        // this exact shape (guaranteeing every cell outside the compared
+        // block is zero).  A failed program leaves both the array and
+        // the recorded shape untouched (`program_tile` validates before
+        // writing).
+        let shape = (fe_in, fe_out);
+        if self.resident_shape == Some(shape) && self.xbar.tile_resident(weights, fe_in, fe_out)
+        {
+            return Ok(());
+        }
+        self.xbar.program_tile(weights, fe_in, fe_out)?;
+        self.programs += 1;
+        self.resident_shape = Some(shape);
+        Ok(())
     }
 
-    /// Functional transform: `relu(x @ W)` in the quantized domain.
-    /// `input` are unsigned DAC codes of the aggregated features.
-    pub fn transform(&self, input: &[u32], fe_out: usize) -> Result<Vec<i64>> {
+    /// How often the crossbar was actually (re)programmed — cache misses
+    /// of the program-once path.
+    pub fn programs(&self) -> u64 {
+        self.programs
+    }
+
+    /// Functional transform: `relu(x @ W)` in the quantized domain, into
+    /// the caller's buffer (cleared + refilled; `fe_out.min(cols)` values).
+    /// `input` are unsigned DAC codes of the aggregated features.  The
+    /// padding and crossbar-output buffers are reused scratch; with a
+    /// clip-free geometry (the presets) the crossbar's fused path makes
+    /// the whole call allocation-free.
+    pub fn transform_into(
+        &mut self,
+        input: &[u32],
+        fe_out: usize,
+        out: &mut Vec<i64>,
+    ) -> Result<()> {
         let g = self.config.geometry;
         if input.len() > g.rows {
             return Err(Error::Hardware(format!(
@@ -74,11 +124,20 @@ impl FeatureExtractionCore {
                 g.rows
             )));
         }
-        let mut padded = vec![0u32; g.rows];
-        padded[..input.len()].copy_from_slice(input);
-        let out = self.xbar.evaluate(&padded)?;
+        self.padded[..input.len()].copy_from_slice(input);
+        self.padded[input.len()..].fill(0);
+        self.xbar.evaluate_into(&self.padded, &mut self.full_out)?;
         // Activation unit: ReLU.
-        Ok(out[..fe_out.min(g.cols)].iter().map(|&v| v.max(0)).collect())
+        out.clear();
+        out.extend(self.full_out[..fe_out.min(g.cols)].iter().map(|&v| v.max(0)));
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper over [`Self::transform_into`].
+    pub fn transform(&mut self, input: &[u32], fe_out: usize) -> Result<Vec<i64>> {
+        let mut out = Vec::new();
+        self.transform_into(input, fe_out, &mut out)?;
+        Ok(out)
     }
 }
 
@@ -154,7 +213,57 @@ mod tests {
 
     #[test]
     fn rejects_oversized_input() {
-        let c = core();
+        let mut c = core();
         assert!(c.transform(&vec![0u32; 129], 4).is_err());
+    }
+
+    #[test]
+    fn unchanged_weights_program_once() {
+        let mut c = core();
+        assert_eq!(c.programs(), 0);
+        c.program_weights(&[1, -2, 3, 4], 2, 2).unwrap();
+        assert_eq!(c.programs(), 1);
+        // Same layer, many rounds: no reprogramming.
+        for _ in 0..5 {
+            c.program_weights(&[1, -2, 3, 4], 2, 2).unwrap();
+        }
+        assert_eq!(c.programs(), 1);
+        assert_eq!(c.transform(&[5, 1], 2).unwrap(), vec![8, 0]);
+        // Changed contents or shape rewrite the array.
+        c.program_weights(&[1, -2, 3, 5], 2, 2).unwrap();
+        assert_eq!(c.programs(), 2);
+        c.program_weights(&[1, -2, 3, 5], 4, 1).unwrap();
+        assert_eq!(c.programs(), 3);
+        // A rejected program leaves the array untouched (validated before
+        // writing), so the prior layer is still resident afterwards.
+        assert!(c.program_weights(&[100, 0, 0, 0], 2, 2).is_err());
+        assert_eq!(c.programs(), 3);
+        c.program_weights(&[1, -2, 3, 5], 4, 1).unwrap();
+        assert_eq!(c.programs(), 3, "array-backed residency survives a failed program");
+    }
+
+    #[test]
+    fn narrowing_the_layer_reprograms_stale_columns() {
+        let mut c = core();
+        c.program_weights(&[1, 2, 3, 4], 2, 2).unwrap();
+        // A narrower layer whose single column matches the old column 0
+        // must NOT be treated as resident: transform evaluates the full
+        // array, so the old column 1 would leak into outputs beyond the
+        // new layer's width.
+        c.program_weights(&[1, 3], 2, 1).unwrap();
+        assert_eq!(c.programs(), 2);
+        assert_eq!(c.transform(&[1, 1], 2).unwrap(), vec![4, 0]);
+    }
+
+    #[test]
+    fn transform_into_reuses_buffers_and_clears_stale_padding() {
+        let mut c = core();
+        c.program_weights(&[1, 0, 0, 1], 2, 2).unwrap();
+        let mut out = vec![99i64; 7];
+        c.transform_into(&[3, 4], 2, &mut out).unwrap();
+        assert_eq!(out, vec![3, 4]);
+        // A longer input must not survive into a shorter one's padding.
+        c.transform_into(&[5], 2, &mut out).unwrap();
+        assert_eq!(out, vec![5, 0]);
     }
 }

@@ -10,6 +10,7 @@ mod aggregation;
 mod feature;
 mod mapper;
 mod scheduler;
+mod tile;
 mod traversal;
 mod workload;
 
@@ -17,6 +18,7 @@ pub use aggregation::AggregationCore;
 pub use feature::FeatureExtractionCore;
 pub use mapper::{map_matrix, MappingPlan, TileAssignment};
 pub use scheduler::VectorScheduler;
+pub use tile::{FeatureMatrix, Mat, Tile};
 pub use traversal::TraversalCore;
 pub use workload::GnnWorkload;
 

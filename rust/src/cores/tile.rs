@@ -1,0 +1,180 @@
+//! Flat row-major matrix storage for the compute hot paths.
+//!
+//! The seed APIs passed node features as `&[Vec<i32>]`: one heap
+//! allocation per row, pointer chasing on every access, and a defensive
+//! ragged-row check inside every consumer.  [`Mat`] stores one contiguous
+//! row-major buffer; shape is validated once at construction and every
+//! consumer takes slice views.  [`Tile`] (quantized i32 conductance
+//! levels) feeds the aggregation window and the feature-extraction
+//! weights; [`FeatureMatrix`] (f32) carries raw device features through
+//! the coordinator.
+
+use crate::error::{Error, Result};
+
+/// A dense row-major `rows × cols` matrix in one contiguous allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+/// Quantized conductance-level matrix (aggregation windows, FE weights).
+pub type Tile = Mat<i32>;
+
+/// Floating-point feature matrix (one device/node per row).
+pub type FeatureMatrix = Mat<f32>;
+
+impl<T: Copy> Mat<T> {
+    /// All-`fill` matrix.
+    pub fn filled(rows: usize, cols: usize, fill: T) -> Mat<T> {
+        Mat { rows, cols, data: vec![fill; rows * cols] }
+    }
+
+    /// Build element-wise: `f(row, col)` in row-major order (so a stateful
+    /// generator — an RNG — visits cells in the same order a nested
+    /// `rows × cols` loop would).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Mat<T> {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Adopt a flat row-major buffer.
+    pub fn from_flat(rows: usize, cols: usize, data: Vec<T>) -> Result<Mat<T>> {
+        if data.len() != rows * cols {
+            return Err(Error::Hardware(format!(
+                "flat buffer holds {} values, shape {rows}x{cols} needs {}",
+                data.len(),
+                rows * cols
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Migrate a ragged-capable `Vec<Vec<T>>` shape; rejects ragged rows
+    /// once here instead of at every consumer.
+    pub fn from_rows(rows: &[Vec<T>]) -> Result<Mat<T>> {
+        let cols = rows.first().map(Vec::len).unwrap_or(0);
+        if let Some(bad) = rows.iter().find(|r| r.len() != cols) {
+            return Err(Error::Hardware(format!(
+                "ragged rows: expected {cols} columns, found {}",
+                bad.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            data.extend_from_slice(r);
+        }
+        Ok(Mat { rows: rows.len(), cols, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `r` as a slice view.
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> T {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// The whole matrix as one contiguous row-major slice.
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Iterate rows as slices.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[T]> + '_ {
+        (0..self.rows).map(move |r| self.row(r))
+    }
+}
+
+impl Tile {
+    /// All-zero tile.
+    pub fn zeros(rows: usize, cols: usize) -> Tile {
+        Tile::filled(rows, cols, 0)
+    }
+}
+
+impl FeatureMatrix {
+    /// All-zero feature matrix.
+    pub fn zeros(rows: usize, cols: usize) -> FeatureMatrix {
+        FeatureMatrix::filled(rows, cols, 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_views() {
+        let mut m = Tile::zeros(3, 2);
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+        m.set(1, 1, 7);
+        m.row_mut(2).copy_from_slice(&[4, 5]);
+        assert_eq!(m.row(0), &[0, 0]);
+        assert_eq!(m.row(1), &[0, 7]);
+        assert_eq!(m.get(2, 0), 4);
+        assert_eq!(m.as_slice(), &[0, 0, 0, 7, 4, 5]);
+        assert_eq!(m.iter_rows().count(), 3);
+    }
+
+    #[test]
+    fn from_fn_is_row_major() {
+        let m = Tile::from_fn(2, 3, |r, c| (10 * r + c) as i32);
+        assert_eq!(m.as_slice(), &[0, 1, 2, 10, 11, 12]);
+    }
+
+    #[test]
+    fn from_rows_roundtrips_and_rejects_ragged() {
+        let m = Tile::from_rows(&[vec![1, 2], vec![3, 4]]).unwrap();
+        assert_eq!(m.row(1), &[3, 4]);
+        assert!(Tile::from_rows(&[vec![1, 2], vec![3]]).is_err());
+        let empty = Tile::from_rows(&[]).unwrap();
+        assert_eq!((empty.rows(), empty.cols()), (0, 0));
+        assert!(empty.is_empty());
+        assert_eq!(empty.iter_rows().count(), 0);
+    }
+
+    #[test]
+    fn from_flat_checks_shape() {
+        assert!(FeatureMatrix::from_flat(2, 2, vec![0.0; 4]).is_ok());
+        assert!(FeatureMatrix::from_flat(2, 2, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn zero_width_rows_iterate() {
+        let m = Tile::zeros(4, 0);
+        assert_eq!(m.iter_rows().count(), 4);
+        assert!(m.iter_rows().all(|r| r.is_empty()));
+    }
+}

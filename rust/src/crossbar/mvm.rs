@@ -23,6 +23,12 @@ pub struct MvmCrossbar {
     device: DeviceParams,
     /// Programmed conductance levels, row-major `[rows][cols]`, signed.
     weights: Vec<i32>,
+    /// Largest achievable per-bit-plane column sum for the programmed
+    /// weights (max over columns of the column's positive-weight sum).
+    plane_max: i64,
+    /// Smallest achievable per-bit-plane column sum (min over columns of
+    /// the column's negative-weight sum).
+    plane_min: i64,
 }
 
 impl MvmCrossbar {
@@ -33,6 +39,8 @@ impl MvmCrossbar {
             weights: vec![0; geometry.cells()],
             geometry,
             device,
+            plane_max: 0,
+            plane_min: 0,
         })
     }
 
@@ -62,6 +70,7 @@ impl MvmCrossbar {
             )));
         }
         self.weights.copy_from_slice(weights);
+        self.recompute_plane_bounds();
         Ok(())
     }
 
@@ -76,27 +85,189 @@ impl MvmCrossbar {
         if tile.len() != rows * cols {
             return Err(Error::Hardware("tile shape mismatch".into()));
         }
-        self.weights.fill(0);
+        // Validate before touching the array: a failed program must not
+        // leave partially-written weights (or stale plane bounds — the
+        // clip-free dispatch depends on them matching the array).
         let (lo, hi) = self.weight_range();
+        if let Some(w) = tile.iter().find(|w| **w < lo || **w > hi) {
+            return Err(Error::Hardware(format!(
+                "weight {w} outside conductance range [{lo}, {hi}]"
+            )));
+        }
+        self.weights.fill(0);
         for r in 0..rows {
-            for c in 0..cols {
-                let w = tile[r * cols + c];
-                if w < lo || w > hi {
-                    return Err(Error::Hardware(format!(
-                        "weight {w} outside conductance range [{lo}, {hi}]"
-                    )));
+            self.weights[r * self.geometry.cols..r * self.geometry.cols + cols]
+                .copy_from_slice(&tile[r * cols..(r + 1) * cols]);
+        }
+        self.recompute_plane_bounds();
+        Ok(())
+    }
+
+    /// True when `tile` (row-major `rows × cols`) equals the array's
+    /// top-left block.  On an array whose state came from `program_tile`
+    /// (or is still the all-zero initial state), this is exactly "would
+    /// `program_tile(tile, rows, cols)` be a no-op" — cells outside the
+    /// block are already zero and are deliberately not re-checked.  Lets
+    /// the cores' program-once caches test residency against the array
+    /// itself (the ground truth) instead of keeping a second copy of the
+    /// tile.  Callers mixing in full-array `program` writes must not use
+    /// this as a `program_tile` equivalence check.
+    pub fn tile_resident(&self, tile: &[i32], rows: usize, cols: usize) -> bool {
+        if rows > self.geometry.rows || cols > self.geometry.cols || tile.len() != rows * cols {
+            return false;
+        }
+        let stride = self.geometry.cols;
+        (0..rows).all(|r| {
+            self.weights[r * stride..r * stride + cols] == tile[r * cols..(r + 1) * cols]
+        })
+    }
+
+    /// Refresh `plane_max`/`plane_min` after (re)programming: the extreme
+    /// per-plane column sums any activation subset can produce.  One
+    /// row-major pass (sequential loads) accumulating per-column
+    /// positive/negative sums, then a max/min reduction.
+    fn recompute_plane_bounds(&mut self) {
+        let cols = self.geometry.cols;
+        if cols == 0 {
+            self.plane_max = 0;
+            self.plane_min = 0;
+            return;
+        }
+        let mut pos = vec![0i64; cols];
+        let mut neg = vec![0i64; cols];
+        for row in self.weights.chunks_exact(cols) {
+            for ((p, n), &w) in pos.iter_mut().zip(neg.iter_mut()).zip(row.iter()) {
+                let w = w as i64;
+                if w > 0 {
+                    *p += w;
+                } else {
+                    *n += w;
                 }
-                self.weights[r * self.geometry.cols + c] = w;
             }
         }
-        Ok(())
+        self.plane_max = pos.into_iter().max().unwrap_or(0);
+        self.plane_min = neg.into_iter().min().unwrap_or(0);
+    }
+
+    /// ADC converter range `[lo, hi]` (shift capped at 62 bits — beyond
+    /// that the converter is lossless for any representable plane sum).
+    fn adc_range(&self) -> (i64, i64) {
+        let b = self.geometry.adc_bits.min(62);
+        (-(1i64 << (b - 1)), (1i64 << (b - 1)) - 1)
+    }
+
+    /// True when no achievable bit-plane column sum can leave the ADC
+    /// range for the currently programmed weights — `clip(x) == x` for
+    /// every reachable partial sum, so the bit-serial recombination
+    /// collapses to an exact integer matmul (the fused fast path).
+    pub fn clip_free(&self) -> bool {
+        let (lo, hi) = self.adc_range();
+        self.plane_max <= hi && self.plane_min >= lo
     }
 
     /// Bit-serial evaluate: `out[c] = Σ_b 2^b · clip(Σ_r bit_b(x[r]) · G[r][c])`.
     ///
     /// `input` must contain unsigned codes < 2^input_bits, one per row.
     /// The ADC clip applies per column per bit-plane — the analog boundary.
+    ///
+    /// Allocating wrapper over [`Self::evaluate_into`]; both dispatch to
+    /// the fast paths and are bit-identical to
+    /// [`Self::evaluate_reference`] (property-tested below).
     pub fn evaluate(&self, input: &[u32]) -> Result<Vec<i64>> {
+        let mut out = vec![0i64; self.geometry.cols];
+        self.evaluate_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// Evaluate into the caller's buffer (`out.len() == cols`).
+    ///
+    /// Dispatch: binary inputs take the single-plane sum+clamp path
+    /// (exact — planes ≥ 1 see zero bits and contribute `clip(0) = 0`);
+    /// otherwise, when the programmed weights provably cannot clip
+    /// ([`Self::clip_free`]), the plane loop collapses to one fused
+    /// multiply-accumulate; the general (clipping, multi-bit) case falls
+    /// back to the bit-serial reference.  The two fast paths are
+    /// allocation-free; only the clipping fallback allocates its plane
+    /// scratch.
+    pub fn evaluate_into(&self, input: &[u32], out: &mut [i64]) -> Result<()> {
+        self.check_input(input)?;
+        if out.len() != self.geometry.cols {
+            return Err(Error::Hardware(format!(
+                "evaluate: expected {} outputs, got {}",
+                self.geometry.cols,
+                out.len()
+            )));
+        }
+        if input.iter().all(|&x| x <= 1) {
+            self.evaluate_binary(input, out);
+        } else if self.clip_free() {
+            self.evaluate_fused(input, out);
+        } else {
+            self.reference_into(input, out);
+        }
+        Ok(())
+    }
+
+    /// The seed's bit-serial plane loop, kept verbatim as the semantic
+    /// reference for the fast paths (and as the perfbench baseline).
+    pub fn evaluate_reference(&self, input: &[u32]) -> Result<Vec<i64>> {
+        self.check_input(input)?;
+        let mut out = vec![0i64; self.geometry.cols];
+        self.reference_into(input, &mut out);
+        Ok(out)
+    }
+
+    /// Binary-activation evaluate over a packed row mask (`bit r` of
+    /// `mask[r / 64]` selects row `r`): sum the selected rows per column
+    /// and clamp once to the ADC range — exactly `evaluate` with 1-bit
+    /// DAC codes, without materializing the codes.  `out.len()` may be
+    /// ≤ `cols`; only the leading columns are produced (a programmed
+    /// sub-tile's column group).  Bits at rows ≥ `rows` must be zero.
+    pub fn accumulate_rows(&self, mask: &[u64], out: &mut [i64]) -> Result<()> {
+        let rows = self.geometry.rows;
+        let cols = self.geometry.cols;
+        if mask.len() != rows.div_ceil(64) {
+            return Err(Error::Hardware(format!(
+                "activation mask has {} words, {} rows need {}",
+                mask.len(),
+                rows,
+                rows.div_ceil(64)
+            )));
+        }
+        if out.len() > cols {
+            return Err(Error::Hardware(format!(
+                "{} outputs exceed {} columns",
+                out.len(),
+                cols
+            )));
+        }
+        if rows % 64 != 0 && mask[mask.len() - 1] >> (rows % 64) != 0 {
+            return Err(Error::Hardware(format!(
+                "activation mask selects rows beyond the {rows}-row array"
+            )));
+        }
+        let k = out.len();
+        out.fill(0);
+        for (w, &word) in mask.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let r = w * 64 + bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let row = &self.weights[r * cols..r * cols + k];
+                for (o, &wt) in out.iter_mut().zip(row.iter()) {
+                    *o += wt as i64;
+                }
+            }
+        }
+        let (lo, hi) = self.adc_range();
+        for o in out.iter_mut() {
+            *o = (*o).clamp(lo, hi);
+        }
+        Ok(())
+    }
+
+    /// Shared input validation (arity + DAC range).
+    fn check_input(&self, input: &[u32]) -> Result<()> {
         if input.len() != self.geometry.rows {
             return Err(Error::Hardware(format!(
                 "evaluate: expected {} inputs, got {}",
@@ -115,10 +286,54 @@ impl MvmCrossbar {
                 self.geometry.input_bits
             )));
         }
+        Ok(())
+    }
+
+    /// Single-plane path for binary inputs: only bit-plane 0 carries
+    /// activations, so one row sweep + one clamp reproduces the full
+    /// bit-serial result.
+    fn evaluate_binary(&self, input: &[u32], out: &mut [i64]) {
         let cols = self.geometry.cols;
-        let lo = -(1i64 << (self.geometry.adc_bits - 1));
-        let hi = (1i64 << (self.geometry.adc_bits - 1)) - 1;
-        let mut out = vec![0i64; cols];
+        out.fill(0);
+        for (r, &x) in input.iter().enumerate() {
+            if x == 0 {
+                continue;
+            }
+            let row = &self.weights[r * cols..(r + 1) * cols];
+            for (o, &w) in out.iter_mut().zip(row.iter()) {
+                *o += w as i64;
+            }
+        }
+        let (lo, hi) = self.adc_range();
+        for o in out.iter_mut() {
+            *o = (*o).clamp(lo, hi);
+        }
+    }
+
+    /// Clip-free fused path: with no reachable plane sum outside the ADC
+    /// range, `Σ_b 2^b·Σ_r bit_b(x_r)·G = Σ_r x_r·G` exactly.
+    fn evaluate_fused(&self, input: &[u32], out: &mut [i64]) {
+        let cols = self.geometry.cols;
+        out.fill(0);
+        for (r, &x) in input.iter().enumerate() {
+            if x == 0 {
+                continue;
+            }
+            let x = x as i64;
+            let row = &self.weights[r * cols..(r + 1) * cols];
+            for (o, &w) in out.iter_mut().zip(row.iter()) {
+                *o += x * w as i64;
+            }
+        }
+    }
+
+    /// The bit-serial plane loop (allocates its plane scratch).  Serves
+    /// as the semantic reference and as the dispatched fallback for the
+    /// clipping multi-bit regime, where no shortcut is exact.
+    fn reference_into(&self, input: &[u32], out: &mut [i64]) {
+        let cols = self.geometry.cols;
+        let (lo, hi) = self.adc_range();
+        out.fill(0);
         let mut plane_sum = vec![0i64; cols];
         for b in 0..self.geometry.input_bits {
             plane_sum.fill(0);
@@ -131,13 +346,10 @@ impl MvmCrossbar {
                 }
             }
             for c in 0..cols {
-                // Sample & hold + ADC: clip to converter range.
-                let clipped = plane_sum[c].clamp(lo, hi);
-                // Shift & add.
-                out[c] += clipped << b;
+                // Sample & hold + ADC: clip to converter range; Shift & add.
+                out[c] += plane_sum[c].clamp(lo, hi) << b;
             }
         }
-        Ok(out)
     }
 
     /// Latency of one evaluate pass (one bit-plane).
@@ -317,5 +529,97 @@ mod tests {
         let xb = xbar(64, 64);
         let ratio = xb.mvm_latency() / xb.pass_latency();
         crate::testing::assert_close(ratio, 8.0, 1e-12);
+    }
+
+    /// Tentpole invariant: the dispatched fast paths (binary single-plane,
+    /// clip-free fused, packed accumulate) are bit-identical to the seed
+    /// bit-serial reference across random geometries, weights and inputs —
+    /// in both the clipping and the clip-free regime.
+    #[test]
+    fn fast_paths_are_bit_identical_to_the_reference() {
+        forall(48, |rng: &mut Rng| {
+            let rows = rng.index(96) + 1;
+            let cols = rng.index(48) + 1;
+            let mut g = CrossbarGeometry::new(rows, cols);
+            g.cell_bits = rng.u64_in(2, 5) as u32;
+            g.adc_bits = rng.u64_in(3, 16) as u32;
+            g.input_bits = rng.u64_in(1, 8) as u32;
+            let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+            let (lo, hi) = xb.weight_range();
+            let weights: Vec<i32> =
+                (0..rows * cols).map(|_| rng.i64_in(lo as i64, hi as i64) as i32).collect();
+            xb.program(&weights).unwrap();
+            let max_code = (1u64 << g.input_bits) - 1;
+            // Binary activations half the time — the aggregation case.
+            let binary = rng.bool();
+            let input: Vec<u32> = (0..rows)
+                .map(|_| rng.u64_in(0, if binary { 1 } else { max_code }) as u32)
+                .collect();
+            let want = xb.evaluate_reference(&input).unwrap();
+            let got = xb.evaluate(&input).unwrap();
+            assert_eq!(
+                got, want,
+                "dispatch mismatch: {rows}x{cols} adc={} cell={} in={} binary={binary} clip_free={}",
+                g.adc_bits, g.cell_bits, g.input_bits, xb.clip_free()
+            );
+            let mut out = vec![0i64; cols];
+            xb.evaluate_into(&input, &mut out).unwrap();
+            assert_eq!(out, want);
+            if binary {
+                let mut mask = vec![0u64; rows.div_ceil(64)];
+                for (r, &x) in input.iter().enumerate() {
+                    if x == 1 {
+                        mask[r / 64] |= 1 << (r % 64);
+                    }
+                }
+                xb.accumulate_rows(&mask, &mut out).unwrap();
+                assert_eq!(out, want, "packed accumulate mismatch");
+            }
+        });
+    }
+
+    #[test]
+    fn clip_free_tracks_the_programmed_weights() {
+        // Default 512-row geometry (adc_bits = 13): the extreme programs
+        // sit exactly on the converter boundary — still clip-free.
+        let mut xb = xbar(512, 4);
+        xb.program(&vec![-8; 512 * 4]).unwrap(); // plane min = -4096 = lo
+        assert!(xb.clip_free());
+        xb.program(&vec![7; 512 * 4]).unwrap(); // plane max = 3584 <= 4095
+        assert!(xb.clip_free());
+        // A narrow ADC clips the same program.
+        let mut g = CrossbarGeometry::new(64, 4);
+        g.adc_bits = 4;
+        let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+        xb.program(&vec![1; 64 * 4]).unwrap(); // plane max = 64 > 7
+        assert!(!xb.clip_free());
+        // ... and reprogramming small weights restores the fast path.
+        let mut w = vec![0; 64 * 4];
+        w[0] = 1;
+        xb.program(&w).unwrap();
+        assert!(xb.clip_free());
+    }
+
+    #[test]
+    fn accumulate_rows_validates_mask_and_arity() {
+        let mut xb = xbar(70, 8);
+        xb.program(&vec![1; 70 * 8]).unwrap();
+        let mut out = vec![0i64; 8];
+        assert!(xb.accumulate_rows(&[0u64; 1], &mut out).is_err()); // 70 rows need 2 words
+        assert!(xb.accumulate_rows(&[0, 1u64 << 6], &mut out).is_err()); // row 70 out of range
+        assert!(xb.accumulate_rows(&[0, 0], &mut vec![0i64; 9]).is_err()); // too many outputs
+        xb.accumulate_rows(&[0b101, 0], &mut out).unwrap(); // rows 0 and 2
+        assert_eq!(out, vec![2i64; 8]);
+        // Column-group prefix: out narrower than the array.
+        let mut head = vec![0i64; 3];
+        xb.accumulate_rows(&[0b101, 0], &mut head).unwrap();
+        assert_eq!(head, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn evaluate_into_rejects_wrong_output_arity() {
+        let xb = xbar(4, 4);
+        assert!(xb.evaluate_into(&[0; 4], &mut vec![0i64; 3]).is_err());
+        assert!(xb.evaluate_into(&[0; 4], &mut vec![0i64; 5]).is_err());
     }
 }

@@ -8,6 +8,7 @@ use crate::error::Result;
 use crate::graph::datasets;
 use crate::netmodel::{NetModel, Setting, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use crate::par;
 use crate::report::{speedup, BarSeries, Table};
 use crate::units::Time;
 
@@ -135,19 +136,23 @@ pub struct Fig8 {
 
 impl Fig8 {
     pub fn new() -> Result<Fig8> {
-        let mut series = Vec::new();
-        for d in datasets::all() {
-            let m = NetModel::fig8(&d)?;
+        // One dataset per worker; results land in dataset order (the
+        // parallel map is slot-stable), so output is identical to the
+        // sequential loop.
+        let all = datasets::all();
+        type Fig8Row = (String, (Time, Time), (Time, Time));
+        let results = par::par_map_auto(&all, |d| -> Result<Fig8Row> {
+            let m = NetModel::fig8(d)?;
             let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
             let c = m.latency(Setting::Centralized, topo);
             let dec = m.latency(Setting::Decentralized, topo);
-            series.push((
+            Ok((
                 d.name.to_string(),
                 (c.compute, c.communicate),
                 (dec.compute, dec.communicate),
-            ));
-        }
-        Ok(Fig8 { series })
+            ))
+        });
+        Ok(Fig8 { series: results.into_iter().collect::<Result<Vec<_>>>()? })
     }
 
     /// Average decentralized-compute speedup (paper: ~1400×).
@@ -207,8 +212,10 @@ pub fn table2(materialize_cap: usize) -> Result<Table> {
 pub fn scaling_sweep(workload: &GnnWorkload) -> Result<Vec<(usize, Time, f64)>> {
     use crate::config::presets;
     use crate::cores::Accelerator;
-    let mut out = Vec::new();
-    for k in [1usize, 2, 4, 8, 16, 32] {
+    // One crossbar count per worker; slot-stable, so row order (and every
+    // value) matches the sequential loop.
+    let ks = [1usize, 2, 4, 8, 16, 32];
+    let results = par::par_map_auto(&ks, |&k| -> Result<(usize, Time, f64)> {
         let mut cfg = presets::decentralized();
         // k crossbars per core: the aggregation core splits the feature
         // columns across k parallel crossbars → fewer sequential passes.
@@ -231,9 +238,9 @@ pub fn scaling_sweep(workload: &GnnWorkload) -> Result<Vec<(usize, Time, f64)>> 
         let latency = b.t1 + b.t2 * (1.0 / speed) + b.t3 * (1.0 / fe_speed);
         let (p1, p2, p3) = b.powers();
         let power = (p1 + p2 * speed + p3 * fe_speed).as_mw();
-        out.push((k, latency, power));
-    }
-    Ok(out)
+        Ok((k, latency, power))
+    });
+    results.into_iter().collect()
 }
 
 /// One point of the E9 sweep: simulated vs analytic latency for the three
@@ -285,41 +292,66 @@ impl NetsimSweep {
         )
     }
 
+    /// Run the grid over all available cores.  Every grid point seeds its
+    /// own RNG from the config, and the parallel map writes results by
+    /// slot index, so the sweep (and its `to_json` bytes) is identical to
+    /// the sequential `run_with_threads(.., 1)` — asserted in tests.
     pub fn run(
         workload: &GnnWorkload,
         nodes_list: &[usize],
         cluster_sizes: &[usize],
         cfg: &NetSimConfig,
     ) -> Result<NetsimSweep> {
+        NetsimSweep::run_with_threads(
+            workload,
+            nodes_list,
+            cluster_sizes,
+            cfg,
+            par::available_threads(),
+        )
+    }
+
+    /// [`Self::run`] with an explicit worker count (1 = sequential).
+    pub fn run_with_threads(
+        workload: &GnnWorkload,
+        nodes_list: &[usize],
+        cluster_sizes: &[usize],
+        cfg: &NetSimConfig,
+        threads: usize,
+    ) -> Result<NetsimSweep> {
         let model = NetModel::paper(workload)?;
-        let mut rows = Vec::new();
+        let mut points = Vec::with_capacity(nodes_list.len() * cluster_sizes.len());
         for &nodes in nodes_list {
             for &cluster_size in cluster_sizes {
                 if cluster_size == 0 || cluster_size >= nodes {
                     continue;
                 }
-                let topo = Topology { nodes, cluster_size };
-                let head = cluster_size as f64;
-                let cent = simulate_fabric(&model, Scenario::CentralizedStar, topo, cfg)?;
-                let dec = simulate_fabric(&model, Scenario::DecentralizedMesh, topo, cfg)?;
-                let semi = simulate_fabric(
-                    &model,
-                    Scenario::SemiOverlay { head_capacity: head },
-                    topo,
-                    cfg,
-                )?;
-                rows.push(NetsimRow {
-                    nodes,
-                    cluster_size,
-                    clusters: nodes.div_ceil(cluster_size),
-                    cent: (cent.completion, model.latency(Setting::Centralized, topo).total()),
-                    dec: (dec.completion, model.latency(Setting::Decentralized, topo).total()),
-                    semi: (semi.completion, model.semi_latency(topo, head).total()),
-                    cent_comm: cent.comm_done,
-                    dec_comm: dec.comm_done,
-                });
+                points.push((nodes, cluster_size));
             }
         }
+        let results = par::par_map(&points, threads, |&(nodes, cluster_size)| -> Result<NetsimRow> {
+            let topo = Topology { nodes, cluster_size };
+            let head = cluster_size as f64;
+            let cent = simulate_fabric(&model, Scenario::CentralizedStar, topo, cfg)?;
+            let dec = simulate_fabric(&model, Scenario::DecentralizedMesh, topo, cfg)?;
+            let semi = simulate_fabric(
+                &model,
+                Scenario::SemiOverlay { head_capacity: head },
+                topo,
+                cfg,
+            )?;
+            Ok(NetsimRow {
+                nodes,
+                cluster_size,
+                clusters: nodes.div_ceil(cluster_size),
+                cent: (cent.completion, model.latency(Setting::Centralized, topo).total()),
+                dec: (dec.completion, model.latency(Setting::Decentralized, topo).total()),
+                semi: (semi.completion, model.semi_latency(topo, head).total()),
+                cent_comm: cent.comm_done,
+                dec_comm: dec.comm_done,
+            })
+        });
+        let rows = results.into_iter().collect::<Result<Vec<_>>>()?;
         Ok(NetsimSweep { rows, cfg: cfg.clone() })
     }
 
@@ -520,6 +552,30 @@ mod tests {
         let table = sweep.render().render();
         assert!(table.contains("semi"));
         assert!(table.contains("1000"));
+    }
+
+    /// The parallel sweep driver is observably identical to the
+    /// sequential path: same rows, same `BENCH_netsim.json` bytes, for
+    /// the same seed — the determinism the perf-trajectory artifact
+    /// relies on.
+    #[test]
+    fn parallel_sweep_is_byte_identical_to_sequential() {
+        let w = GnnWorkload::taxi();
+        let cfg = NetSimConfig {
+            rx_ports: Some(8),
+            link_jitter: 0.2,
+            seed: 9,
+            ..Default::default()
+        };
+        let seq =
+            NetsimSweep::run_with_threads(&w, &[200, 400], &[5, 10], &cfg, 1).unwrap();
+        let par4 =
+            NetsimSweep::run_with_threads(&w, &[200, 400], &[5, 10], &cfg, 4).unwrap();
+        assert_eq!(seq.rows.len(), 4);
+        assert_eq!(seq.to_json(), par4.to_json());
+        // ... and the auto-threaded entry point agrees too.
+        let auto = NetsimSweep::run(&w, &[200, 400], &[5, 10], &cfg).unwrap();
+        assert_eq!(seq.to_json(), auto.to_json());
     }
 
     #[test]

@@ -21,10 +21,39 @@ pub struct Csr {
 impl Csr {
     /// Build from an edge list `(src, dst)`.  Edges are sorted per source;
     /// duplicates are kept (multigraph semantics are the caller's choice).
+    ///
+    /// Builds the CSR arrays directly — counting sort into RP/CI plus a
+    /// per-row destination sort, O(V + E) with no intermediate copy of
+    /// the edge list (the seed materialized a weighted `Vec` just to
+    /// reuse `from_weighted_edges`).
     pub fn from_edges(num_nodes: usize, edges: &[(usize, usize)]) -> Result<Csr> {
-        let weighted: Vec<(usize, usize, f32)> =
-            edges.iter().map(|&(s, d)| (s, d, 1.0)).collect();
-        Csr::from_weighted_edges(num_nodes, &weighted)
+        for &(s, d) in edges {
+            if s >= num_nodes || d >= num_nodes {
+                return Err(Error::Graph(format!(
+                    "edge ({s}, {d}) out of range for {num_nodes} nodes"
+                )));
+            }
+        }
+        let mut row_pointers = vec![0usize; num_nodes + 1];
+        for &(s, _) in edges {
+            row_pointers[s + 1] += 1;
+        }
+        for i in 0..num_nodes {
+            row_pointers[i + 1] += row_pointers[i];
+        }
+        let mut column_indices = vec![0usize; edges.len()];
+        let mut cursor = row_pointers.clone();
+        for &(s, d) in edges {
+            column_indices[cursor[s]] = d;
+            cursor[s] += 1;
+        }
+        // Deterministic order within a row (weights are uniform, so a
+        // plain index sort suffices).
+        for i in 0..num_nodes {
+            column_indices[row_pointers[i]..row_pointers[i + 1]].sort_unstable();
+        }
+        let edge_weights = vec![1.0; edges.len()];
+        Ok(Csr { num_nodes, row_pointers, column_indices, edge_weights })
     }
 
     /// Build from a weighted edge list `(src, dst, w)`.
@@ -174,6 +203,24 @@ mod tests {
         assert_eq!(g.degree(2), 2);
         assert_eq!(g.degree(1), 1);
         assert!((g.avg_degree() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unweighted_build_matches_the_weighted_path() {
+        // The direct builder must agree with `from_weighted_edges` at
+        // weight 1.0 — arrays and all.
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(25) + 1;
+            let m = rng.index(60);
+            let edges: Vec<(usize, usize)> =
+                (0..m).map(|_| (rng.index(n), rng.index(n))).collect();
+            let direct = Csr::from_edges(n, &edges).unwrap();
+            let weighted: Vec<(usize, usize, f32)> =
+                edges.iter().map(|&(s, d)| (s, d, 1.0)).collect();
+            let via = Csr::from_weighted_edges(n, &weighted).unwrap();
+            assert_eq!(direct, via);
+            assert!(direct.edge_weights().iter().all(|&w| w == 1.0));
+        });
     }
 
     #[test]

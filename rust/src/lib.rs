@@ -34,6 +34,8 @@ pub mod graph;
 pub mod json;
 pub mod netmodel;
 pub mod netsim;
+pub mod par;
+pub mod perfbench;
 pub mod pjrt;
 pub mod report;
 pub mod runtime;

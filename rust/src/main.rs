@@ -9,6 +9,7 @@
 //! ima-gnn fig8                    # E3: Fig. 8 latency breakdown
 //! ima-gnn scaling                 # E4: crossbar-count scaling study
 //! ima-gnn simulate [options]      # DES over either deployment
+//! ima-gnn perf [options]          # E10: hot-kernel perf baseline
 //! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
 //! ima-gnn info                    # artifact + platform info
 //! ```
@@ -49,6 +50,7 @@ fn run(argv: &[String]) -> Result<()> {
         "scaling" => cmd_scaling(rest),
         "simulate" => cmd_simulate(rest),
         "netsim" => cmd_netsim(rest),
+        "perf" => cmd_perf(rest),
         "serve" => cmd_serve(rest),
         "area" => cmd_area(rest),
         "info" => cmd_info(rest),
@@ -70,6 +72,7 @@ fn print_help() {
          scaling    crossbar-count scaling study (§4.3)\n  \
          simulate   discrete-event simulation of either deployment\n  \
          netsim     packet-level contention-aware fabric simulation (E9)\n  \
+         perf       hot-kernel perf baseline, emits BENCH_perf.json (E10)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts\n  \
          area       silicon-area report for both accelerator presets\n  \
          info       artifact manifest + platform info\n  \
@@ -292,6 +295,22 @@ fn cmd_netsim(argv: &[String]) -> Result<()> {
     ]);
     t.row(&["total queue wait".into(), report.queue_wait.to_string(), "-".into()]);
     t.print();
+    Ok(())
+}
+
+fn cmd_perf(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("perf", "hot-kernel perf baseline (E10)")
+        .opt("json", "perf artifact path", Some("BENCH_perf.json"))
+        .flag("quick", "reduced measurement budget (smoke runs)");
+    let args = cmd.parse(argv)?;
+    let report = ima_gnn::perfbench::run(args.flag("quick"))?;
+    println!();
+    for s in &report.speedups {
+        println!("{:<24} {}  ({} vs {})", s.name, speedup(s.factor), s.fast, s.reference);
+    }
+    let path = args.get_or("json", "BENCH_perf.json").to_string();
+    std::fs::write(&path, report.to_json())?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -84,10 +84,13 @@ struct Sim {
 }
 
 impl Sim {
-    fn new(cfg: &NetSimConfig) -> Sim {
+    /// `msgs_hint` / `events_hint`: expected message and event counts —
+    /// the scenarios know both up front, so the queue and the message
+    /// table never regrow mid-run.
+    fn new(cfg: &NetSimConfig, msgs_hint: usize, events_hint: usize) -> Sim {
         Sim {
-            queue: EventQueue::new(),
-            msgs: Vec::new(),
+            queue: EventQueue::with_capacity(events_hint),
+            msgs: Vec::with_capacity(msgs_hint),
             res: Vec::new(),
             rng: Rng::new(cfg.seed),
             jitter: cfg.link_jitter.max(0.0),
@@ -188,9 +191,10 @@ pub(super) fn centralized(
     if topo.nodes == 0 {
         return Err(Error::Sim("topology needs at least one node".into()));
     }
-    let mut sim = Sim::new(cfg);
-    let rx = sim.add_resource(Resource::with_capacity(cfg.rx_ports));
     let packets = model.inter_link().packets(model.message_bytes());
+    // Per uplink: 1 Start + `packets` Packet events; plus ≤1 Compute each.
+    let mut sim = Sim::new(cfg, topo.nodes, topo.nodes * (packets + 2));
+    let rx = sim.add_resource(Resource::with_capacity(cfg.rx_ports));
     let lat = model.inter_link().packet_latency();
     for _device in 0..topo.nodes {
         sim.send(
@@ -252,12 +256,14 @@ pub(super) fn decentralized(
     if topo.nodes == 0 || topo.cluster_size == 0 {
         return Err(Error::Sim("need nodes and a positive cluster size".into()));
     }
-    let mut sim = Sim::new(cfg);
     let cs = topo.cluster_size;
     let n_clusters = topo.nodes.div_ceil(cs);
+    // Two sessions per device (1 Start + cs Packet events each) + 1 Compute.
+    let mut sim = Sim::new(cfg, 2 * topo.nodes, topo.nodes * (2 * (cs + 1) + 1));
 
     // Resources: one half-duplex radio per device, then (under the
     // shared-medium knob) one CSMA medium per cluster.
+    sim.res.reserve(topo.nodes + n_clusters);
     for _ in 0..topo.nodes {
         sim.add_resource(Resource::single());
     }
@@ -349,9 +355,16 @@ pub(super) fn semi(
     if head_capacity.is_nan() || head_capacity < 1.0 {
         return Err(Error::Sim("head capacity must be >= 1".into()));
     }
-    let mut sim = Sim::new(cfg);
     let cs = topo.cluster_size;
     let n_clusters = topo.nodes.div_ceil(cs);
+    let packets = model.inter_link().packets(model.message_bytes());
+    // Member uplinks + per-cluster (boundary exchange, downlink); events:
+    // every message is 1 Start + its packets, plus 1 Compute per cluster.
+    let mut sim = Sim::new(
+        cfg,
+        topo.nodes + 2 * n_clusters,
+        topo.nodes * (packets + 1) + n_clusters * (3 * packets + 3),
+    );
 
     // Per-cluster: a V2X receive-port pool at the head plus the head's own
     // radio for the boundary exchange and the downlink.
@@ -364,7 +377,6 @@ pub(super) fn semi(
         head_radio.push(sim.add_resource(Resource::single()));
     }
 
-    let packets = model.inter_link().packets(model.message_bytes());
     let lat = model.inter_link().packet_latency();
     let b = model.breakdown();
     let per_node =

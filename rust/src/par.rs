@@ -1,0 +1,132 @@
+//! Zero-dependency deterministic parallel map (`std::thread::scope`).
+//!
+//! The experiment sweeps (E9 netsim grid, Fig. 8, the §4.3 scaling study)
+//! are embarrassingly parallel: every grid point builds its own RNG from
+//! the config seed, so points are independent pure functions.  This
+//! driver fans items over a fixed worker pool through an atomic work
+//! index and writes each result into the slot of its item — the output
+//! is **order-stable and bit-identical** to the sequential
+//! `items.iter().map(f)` regardless of thread count or OS scheduling.
+//! Worker panics are re-raised on the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count the auto variants use: the machine's logical CPUs.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parallel map over `items` with `threads` workers; `threads <= 1`
+/// degenerates to the plain sequential loop (no threads spawned).
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.min(n);
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    // Dynamic load balancing: workers pull the next unclaimed index, so a
+    // slow item (a big grid point) does not stall the rest of its stripe.
+    let next = AtomicUsize::new(0);
+    let next = &next;
+    let f = &f;
+    let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(part) => parts.push(part),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    // Results land by slot index — order-stable merge.
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for (i, r) in parts.into_iter().flatten() {
+        slots[i] = Some(r);
+    }
+    slots.into_iter().map(|o| o.expect("every slot filled exactly once")).collect()
+}
+
+/// [`par_map`] over all available cores.
+pub fn par_map_auto<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map(items, available_threads(), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn matches_sequential_map_at_every_thread_count() {
+        let items: Vec<u64> = (0..97).collect();
+        let want: Vec<u64> = items.iter().map(|x| x * x + 1).collect();
+        for threads in [0, 1, 2, 3, 8, 64, 200] {
+            let got = par_map(&items, threads, |x| x * x + 1);
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert_eq!(par_map_auto(&items, |x| x * x + 1), want);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(&empty, 8, |x| *x).is_empty());
+        assert_eq!(par_map(&[7u32], 8, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+        par_map(&(0..50usize).collect::<Vec<_>>(), 4, |&i| {
+            hits[i].fetch_add(1, Ordering::Relaxed)
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn results_may_be_fallible() {
+        let items: Vec<i32> = (0..20).collect();
+        let out: Vec<Result<i32, String>> =
+            par_map(&items, 4, |&x| if x == 13 { Err("unlucky".into()) } else { Ok(x) });
+        assert_eq!(out.iter().filter(|r| r.is_err()).count(), 1);
+        assert!(out[13].is_err());
+        assert_eq!(out[12], Ok(12));
+    }
+
+    #[test]
+    fn worker_panics_propagate() {
+        let r = std::panic::catch_unwind(|| {
+            par_map(&(0..32usize).collect::<Vec<_>>(), 4, |&i| {
+                assert!(i != 17, "boom at 17");
+                i
+            })
+        });
+        assert!(r.is_err());
+    }
+}

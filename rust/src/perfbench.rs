@@ -1,0 +1,350 @@
+//! E10 — `ima-gnn perf`: the hot-kernel performance baseline.
+//!
+//! Times the simulator's compute hot spots — crossbar evaluate (seed
+//! bit-serial reference vs the dispatched fast paths), the 512×512
+//! binary-activation aggregate kernel (seed re-program-every-call path vs
+//! the flat program-once/packed path), CSR construction, the netsim
+//! star/mesh scenarios, and the E9 sweep grid sequential vs parallel —
+//! and emits `BENCH_perf.json`, the perf-trajectory artifact CI uploads
+//! next to `BENCH_netsim.json`.  Headline `speedups` compare each fast
+//! path against its seed-equivalent baseline on the same inputs.
+
+use std::time::{Duration, Instant};
+
+use crate::bench::{black_box, Bench, Stats};
+use crate::config::{presets, CrossbarGeometry, DeviceParams};
+use crate::cores::{AggregationCore, GnnWorkload, Tile};
+use crate::crossbar::MvmCrossbar;
+use crate::error::Result;
+use crate::experiments::NetsimSweep;
+use crate::graph::Csr;
+use crate::netmodel::{NetModel, Topology};
+use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use crate::par;
+use crate::testing::Rng;
+
+/// Frozen replica of the seed's `AggregationCore::aggregate` hot path —
+/// flatten the ragged rows, zero + validate + write the full array
+/// (`program_tile`), materialize 1-bit DAC codes, run the bit-serial
+/// plane loop, copy the column group out.  Replicated verbatim (rather
+/// than calling the live crossbar) so the baseline stays exactly the
+/// seed's cost and cannot drift as the live implementation evolves
+/// (e.g. `program_tile` now also maintains clip-free plane bounds,
+/// which the seed never paid for).
+#[allow(clippy::needless_range_loop)]
+fn seed_aggregate(
+    array: &mut [i32],
+    geo_rows: usize,
+    geo_cols: usize,
+    features: &[Vec<i32>],
+    active: &[bool],
+    input_bits: u32,
+    adc_bits: u32,
+) -> Vec<i64> {
+    let cols = features.first().map(Vec::len).unwrap_or(0);
+    // aggregate(): flatten the ragged rows into a tile.
+    let mut tile = vec![0i32; features.len() * cols];
+    for (r, f) in features.iter().enumerate() {
+        tile[r * cols..(r + 1) * cols].copy_from_slice(f);
+    }
+    // program_tile(): zero the array, per-cell range check, write.
+    array.fill(0);
+    for r in 0..features.len() {
+        for c in 0..cols {
+            let w = tile[r * cols + c];
+            assert!((-8..=7).contains(&w), "weight outside conductance range");
+            array[r * geo_cols + c] = w;
+        }
+    }
+    // 1-bit activation input as DAC codes.
+    let mut input = vec![0u32; geo_rows];
+    for (r, &a) in active.iter().enumerate() {
+        input[r] = a as u32;
+    }
+    // evaluate(): the bit-serial plane loop.
+    let lo = -(1i64 << (adc_bits - 1));
+    let hi = (1i64 << (adc_bits - 1)) - 1;
+    let mut out = vec![0i64; geo_cols];
+    let mut plane_sum = vec![0i64; geo_cols];
+    for b in 0..input_bits {
+        plane_sum.fill(0);
+        for (r, &x) in input.iter().enumerate() {
+            if (x >> b) & 1 == 1 {
+                for (c, &w) in array[r * geo_cols..(r + 1) * geo_cols].iter().enumerate() {
+                    plane_sum[c] += w as i64;
+                }
+            }
+        }
+        for c in 0..geo_cols {
+            out[c] += plane_sum[c].clamp(lo, hi) << b;
+        }
+    }
+    out[..cols].to_vec()
+}
+
+/// One headline comparison: `reference` / `fast` median, by case name.
+#[derive(Debug, Clone)]
+pub struct Speedup {
+    pub name: String,
+    pub reference: String,
+    pub fast: String,
+    pub factor: f64,
+}
+
+/// The full perf-baseline report.
+#[derive(Debug)]
+pub struct PerfReport {
+    pub quick: bool,
+    pub threads: usize,
+    pub cases: Vec<Stats>,
+    pub speedups: Vec<Speedup>,
+}
+
+impl PerfReport {
+    fn case(&self, name: &str) -> &Stats {
+        self.cases.iter().find(|c| c.name == name).expect("case recorded")
+    }
+
+    fn push_speedup(&mut self, name: &str, reference: &str, fast: &str) {
+        let factor = self.case(reference).median_ns / self.case(fast).median_ns.max(1e-9);
+        self.speedups.push(Speedup {
+            name: name.to_string(),
+            reference: reference.to_string(),
+            fast: fast.to_string(),
+            factor,
+        });
+    }
+
+    /// The `BENCH_perf.json` artifact.
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| format!("{v:.3}");
+        let mut cases = Vec::with_capacity(self.cases.len());
+        for c in &self.cases {
+            cases.push(format!(
+                "    {{\"name\": \"{}\", \"median_ns\": {}, \"mean_ns\": {}, \
+                 \"min_ns\": {}, \"mad_ns\": {}, \"iterations\": {}}}",
+                c.name,
+                num(c.median_ns),
+                num(c.mean_ns),
+                num(c.min_ns),
+                num(c.mad_ns),
+                c.iterations
+            ));
+        }
+        let mut speedups = Vec::with_capacity(self.speedups.len());
+        for s in &self.speedups {
+            speedups.push(format!(
+                "    {{\"name\": \"{}\", \"reference\": \"{}\", \"fast\": \"{}\", \
+                 \"factor\": {}}}",
+                s.name,
+                s.reference,
+                s.fast,
+                num(s.factor)
+            ));
+        }
+        format!(
+            "{{\n  \"experiment\": \"perfbench\",\n  \"quick\": {},\n  \"threads\": {},\n  \
+             \"cases\": [\n{}\n  ],\n  \"speedups\": [\n{}\n  ]\n}}\n",
+            self.quick,
+            self.threads,
+            cases.join(",\n"),
+            speedups.join(",\n"),
+        )
+    }
+
+    /// Headline factor by speedup name (for reporting and tests).
+    pub fn speedup(&self, name: &str) -> Option<f64> {
+        self.speedups.iter().find(|s| s.name == name).map(|s| s.factor)
+    }
+}
+
+fn budgets(quick: bool) -> (Duration, Duration) {
+    if quick {
+        (Duration::from_millis(10), Duration::from_millis(40))
+    } else {
+        (Duration::from_millis(150), Duration::from_millis(750))
+    }
+}
+
+/// Run the full baseline.  `quick` shrinks every measurement budget (CI
+/// smoke / unit tests); the artifact CI uploads uses the full budget.
+pub fn run(quick: bool) -> Result<PerfReport> {
+    let (warmup, measure) = budgets(quick);
+    let mut b = Bench::new().with_budget(warmup, measure);
+    let mut rng = Rng::new(5);
+
+    // --- 512×512 binary-activation aggregate: the paper's aggregation
+    // core inner loop, and the acceptance kernel of this baseline. ------
+    b.section("aggregate kernel (512x512 window, binary activations)");
+    let cfg = presets::decentralized();
+    let rows = cfg.aggregation.geometry.rows;
+    let cols = cfg.aggregation.geometry.cols;
+    let feats: Vec<Vec<i32>> = (0..rows)
+        .map(|_| (0..cols).map(|_| rng.i64_in(-8, 7) as i32).collect())
+        .collect();
+    let window = Tile::from_rows(&feats)?;
+    let active: Vec<bool> = (0..rows).map(|_| rng.bool()).collect();
+
+    // Seed path (frozen replica — see `seed_aggregate`): flatten the
+    // ragged rows, reprogram the full array, run the bit-serial plane
+    // loop, copy the column group out — every call.
+    let g = cfg.aggregation.geometry;
+    let mut seed_array = vec![0i32; g.rows * g.cols];
+    b.case("aggregate/seed: flatten + program + bit-serial", || {
+        black_box(seed_aggregate(
+            &mut seed_array,
+            g.rows,
+            g.cols,
+            &feats,
+            &active,
+            g.input_bits,
+            g.adc_bits,
+        ))
+    });
+
+    // Flat path: the window is programmed once and stays resident
+    // (program-once / evaluate-many); each call packs the activation
+    // vector and runs the single-plane accumulate into a reused buffer —
+    // zero allocations, no reprogramming.
+    let mut agg = AggregationCore::new(cfg.aggregation, cfg.device.clone())?;
+    agg.program_window(&window)?;
+    let mut agg_out = vec![0i64; cols];
+    agg.accumulate_into(&active, &mut agg_out)?;
+    // Both paths must agree bit-for-bit before either is timed.
+    let seed_out =
+        seed_aggregate(&mut vec![0i32; g.rows * g.cols], g.rows, g.cols, &feats, &active, g.input_bits, g.adc_bits);
+    assert_eq!(agg_out, seed_out, "fast aggregate diverged from the seed replica");
+    b.case("aggregate/fast: resident window + packed accumulate", || {
+        agg.accumulate_into(&active, &mut agg_out).unwrap();
+        black_box(agg_out[0])
+    });
+
+    // --- full 8-bit MVM evaluate: bit-serial vs fused clip-free. --------
+    b.section("mvm evaluate (512x512, 8-bit inputs)");
+    let mut mvm = MvmCrossbar::new(
+        CrossbarGeometry::new(512, 512),
+        DeviceParams::default_45nm(),
+    )?;
+    let weights: Vec<i32> =
+        (0..512 * 512).map(|_| rng.i64_in(-8, 7) as i32).collect();
+    mvm.program(&weights)?;
+    let input: Vec<u32> = (0..512).map(|_| rng.u64_in(0, 255) as u32).collect();
+    b.case("mvm/seed: bit-serial reference", || {
+        black_box(mvm.evaluate_reference(&input).unwrap())
+    });
+    let mut mvm_out = vec![0i64; 512];
+    b.case("mvm/fast: fused clip-free evaluate_into", || {
+        mvm.evaluate_into(&input, &mut mvm_out).unwrap();
+        black_box(mvm_out[0])
+    });
+
+    // --- CSR construction (the graph ingestion hot path). ---------------
+    b.section("csr build");
+    let n_nodes = if quick { 2_000 } else { 10_000 };
+    let n_edges = if quick { 20_000 } else { 100_000 };
+    let edges: Vec<(usize, usize)> = (0..n_edges)
+        .map(|_| (rng.index(n_nodes), rng.index(n_nodes)))
+        .collect();
+    b.case("csr: from_edges (direct build)", || {
+        black_box(Csr::from_edges(n_nodes, &edges).unwrap())
+    });
+
+    // --- netsim scenarios (the event-loop hot path). --------------------
+    b.section("netsim scenarios");
+    let model = NetModel::paper(&GnnWorkload::taxi())?;
+    let net_cfg = NetSimConfig { rx_ports: Some(64), ..Default::default() };
+    let star_n = if quick { 500 } else { 2_000 };
+    let star = Topology { nodes: star_n, cluster_size: 10 };
+    b.case("netsim: centralized star (contended)", || {
+        black_box(simulate_fabric(&model, Scenario::CentralizedStar, star, &net_cfg).unwrap())
+    });
+    let mesh_n = if quick { 200 } else { 500 };
+    let mesh = Topology { nodes: mesh_n, cluster_size: 10 };
+    b.case("netsim: decentralized mesh", || {
+        black_box(
+            simulate_fabric(&model, Scenario::DecentralizedMesh, mesh, &net_cfg).unwrap(),
+        )
+    });
+
+    // --- E9 sweep grid: sequential vs parallel driver. ------------------
+    b.section("E9 sweep grid (sequential vs parallel)");
+    let (grid_nodes, grid_cs): (&[usize], &[usize]) = if quick {
+        (&[200, 500], &[5, 10])
+    } else {
+        (&[500, 1_000, 2_000], &[5, 10, 25])
+    };
+    let reps = if quick { 1 } else { 3 };
+    let threads = par::available_threads();
+    let workload = GnnWorkload::taxi();
+    let grid_case = |name: &str, t: usize| -> Result<Stats> {
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            black_box(NetsimSweep::run_with_threads(
+                &workload, grid_nodes, grid_cs, &net_cfg, t,
+            )?);
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_samples(name, &mut samples);
+        println!("{stats}");
+        Ok(stats)
+    };
+    // Stable case name — the worker count is the top-level `threads`
+    // field, so trajectory comparisons can key on the name across
+    // machines with different core counts.
+    let seq_stats = grid_case("e9/seed: sequential sweep", 1)?;
+    let par_stats = grid_case("e9/fast: parallel sweep", threads)?;
+
+    let mut report = PerfReport {
+        quick,
+        threads,
+        cases: b.results().to_vec(),
+        speedups: Vec::new(),
+    };
+    report.cases.push(seq_stats);
+    report.cases.push(par_stats);
+
+    report.push_speedup(
+        "aggregate_512_binary",
+        "aggregate/seed: flatten + program + bit-serial",
+        "aggregate/fast: resident window + packed accumulate",
+    );
+    report.push_speedup(
+        "mvm_512_8bit",
+        "mvm/seed: bit-serial reference",
+        "mvm/fast: fused clip-free evaluate_into",
+    );
+    report.push_speedup("e9_sweep_parallel", "e9/seed: sequential sweep", "e9/fast: parallel sweep");
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Structural check on a quick run: every headline case present and
+    /// the JSON artifact parses with the crate's own parser.  No
+    /// wall-clock threshold is asserted here — timing bounds flake on
+    /// contended CI runners; the ≥5× headline lives in the release
+    /// `BENCH_perf.json` artifact, and correctness of the fast path is
+    /// asserted unconditionally inside `run` (seed-replica equality) and
+    /// in `crossbar::mvm`'s property tests.
+    #[test]
+    fn quick_run_produces_a_wellformed_artifact() {
+        let report = run(true).unwrap();
+        assert!(report.cases.len() >= 8);
+        for name in ["aggregate_512_binary", "mvm_512_8bit", "e9_sweep_parallel"] {
+            let f = report.speedup(name).unwrap();
+            assert!(f.is_finite() && f > 0.0, "{name}: {f}");
+        }
+        let json = report.to_json();
+        let doc = crate::json::parse(&json).unwrap();
+        assert_eq!(doc.get("experiment").unwrap().as_str(), Some("perfbench"));
+        assert_eq!(doc.get("quick").unwrap(), &crate::json::Json::Bool(true));
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), report.cases.len());
+        assert!(cases[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
+        let speedups = doc.get("speedups").unwrap().as_arr().unwrap();
+        assert_eq!(speedups.len(), 3);
+    }
+}

@@ -52,6 +52,18 @@ impl<E> EventQueue<E> {
         EventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
+    /// Pre-sized queue for drivers that know their event count up front
+    /// (the netsim scenarios schedule a predictable number of packet and
+    /// compute events per device) — avoids heap regrowth mid-simulation.
+    pub fn with_capacity(capacity: usize) -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::with_capacity(capacity), seq: 0 }
+    }
+
+    /// Current allocated capacity.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     /// Schedule `payload` at absolute time `at`.
     pub fn push(&mut self, at: Time, payload: E) {
         assert!(at.value().is_finite() && at.value() >= 0.0, "event time must be finite/positive");
@@ -121,6 +133,18 @@ mod tests {
         let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
         assert_eq!(order, ["b1", "b2", "b3", "c"]);
         assert_eq!(q.scheduled(), 5);
+    }
+
+    #[test]
+    fn with_capacity_preallocates() {
+        let mut q: EventQueue<u32> = EventQueue::with_capacity(128);
+        assert!(q.capacity() >= 128);
+        let before = q.capacity();
+        for i in 0..128 {
+            q.push(Time::ns(i as f64), i);
+        }
+        assert_eq!(q.capacity(), before, "no regrowth within the hint");
+        assert_eq!(q.len(), 128);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! and the functional dataflow must tell one consistent story.
 
 use ima_gnn::config::presets;
-use ima_gnn::cores::{Accelerator, GnnWorkload};
+use ima_gnn::cores::{Accelerator, GnnWorkload, Tile};
 use ima_gnn::graph::{datasets, generate, Csr};
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
 use ima_gnn::sim::{simulate, SimConfig};
@@ -39,9 +39,10 @@ fn traversal_scheduler_aggregation_dataflow_is_exact() {
     acc.traversal.load_graph(&g).unwrap();
     let scheduler = acc.scheduler();
 
-    // Node features: one row per node, 8 feature cells.
-    let feats: Vec<Vec<i32>> =
-        (0..n).map(|_| (0..8).map(|_| rng.i64_in(-8, 7) as i32).collect()).collect();
+    // Node features: one row per node, 8 feature cells — one flat tile
+    // shared by every destination (the node-stationary window; the
+    // aggregation core programs it once and reuses it across the sweep).
+    let feats = Tile::from_fn(n, 8, |_, _| rng.i64_in(-8, 7) as i32);
 
     for dst in 0..n {
         // Traversal core → incoming sources.
@@ -51,9 +52,8 @@ fn traversal_scheduler_aggregation_dataflow_is_exact() {
         let mut total = vec![0i64; 8];
         for (win, active) in av {
             assert_eq!(win, 0, "n=60 fits one window");
-            let window_feats: Vec<Vec<i32>> = feats.clone();
             let active = active[..n].to_vec();
-            let sums = acc.aggregation.aggregate(&window_feats, &active).unwrap();
+            let sums = acc.aggregation.aggregate(&feats, &active).unwrap();
             for c in 0..8 {
                 total[c] += sums[c];
             }
@@ -63,12 +63,14 @@ fn traversal_scheduler_aggregation_dataflow_is_exact() {
         for src in 0..n {
             if g.neighbors(src).contains(&dst) {
                 for c in 0..8 {
-                    want[c] += feats[src][c] as i64;
+                    want[c] += feats.get(src, c) as i64;
                 }
             }
         }
         assert_eq!(total, want, "dst={dst}");
     }
+    // The whole sweep shared one stationary window: exactly one program.
+    assert_eq!(acc.aggregation.programs(), 1, "program-once cache missed");
 }
 
 /// Fig. 8 consistency at materialized-graph level: the synthetic datasets'

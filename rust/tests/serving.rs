@@ -7,7 +7,7 @@ use std::time::Duration;
 use ima_gnn::coordinator::{
     CentralizedLeader, GcnLayerBinding, InferenceService, Request, Router, SemiCoordinator,
 };
-use ima_gnn::cores::GnnWorkload;
+use ima_gnn::cores::{FeatureMatrix, GnnWorkload};
 use ima_gnn::graph::{fixed_size, generate};
 use ima_gnn::testing::Rng;
 
@@ -148,9 +148,7 @@ fn semi_decentralized_round_covers_every_node() {
     .unwrap();
     assert_eq!(semi.num_heads(), 6);
 
-    let features: Vec<Vec<f32>> = (0..48)
-        .map(|_| (0..feature).map(|_| rng.f64_in(0.0, 1.0) as f32).collect())
-        .collect();
+    let features = FeatureMatrix::from_fn(48, feature, |_, _| rng.f64_in(0.0, 1.0) as f32);
     let results = semi.round(&svc, &features).unwrap();
     assert_eq!(results.len(), 48);
     for (node, r) in results.iter().enumerate() {
