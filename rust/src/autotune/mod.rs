@@ -1,0 +1,781 @@
+//! E11 — hybrid operating-point autotuner.
+//!
+//! The paper's headline is a tension: centralized wins communication
+//! (~790×), decentralized wins computation (~1400×), so the conclusion
+//! calls for a semi-decentralized hybrid.  Everything below `autotune`
+//! can *evaluate* one operating point — the analytic `netmodel`
+//! (Eqs. 1–7 + E8), the packet-level `netsim` fabric, the serving
+//! coordinators — but nothing *searches* the space.  This module is the
+//! design-space explorer: given a deployment scale, a materialized graph
+//! sample, and a [`TuneGrid`] over
+//! {setting} × {cluster size} × {head capacity} × {partitioner},
+//! it scores every point, returns the Pareto frontier over
+//! (latency, energy, per-device power) and the latency argmin
+//! [`OperatingPoint`], which the coordinators consume through their
+//! `from_operating_point` constructors.
+//!
+//! **Determinism contract (DESIGN.md §9):** enumeration order is fixed
+//! (settings in grid order; cluster size, then head capacity, then
+//! partitioner), every score is a pure function of
+//! (model, graph, deployment scale, point), the parallel driver writes
+//! results by slot index, ties on the argmin and frontier break toward
+//! the earliest point — so `explore` is bit-identical across thread
+//! counts and runs, and equals exhaustive brute-force enumeration
+//! (asserted in `rust/tests/autotune_cross_validation.rs`).
+
+mod pareto;
+
+pub use pareto::{dominates, pareto_frontier};
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::graph::{self, Csr};
+use crate::netmodel::{NetModel, Setting, Topology};
+use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use crate::par;
+use crate::units::{Energy, Power, Time};
+
+/// Deployment setting of one grid point (the semi-decentralized hybrid
+/// joins the paper's two pure settings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SettingKind {
+    Centralized,
+    Semi,
+    Decentralized,
+}
+
+impl SettingKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SettingKind::Centralized => "centralized",
+            SettingKind::Semi => "semi",
+            SettingKind::Decentralized => "decentralized",
+        }
+    }
+}
+
+/// Which cluster partitioner produces the clustering a point is scored at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Partitioner {
+    FixedSize,
+    Locality,
+}
+
+impl Partitioner {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::FixedSize => "fixed_size",
+            Partitioner::Locality => "locality",
+        }
+    }
+
+    /// Partition `graph` into clusters of at most `cluster_size`.
+    pub fn partition(&self, graph: &Csr, cluster_size: usize) -> Result<graph::Clustering> {
+        match self {
+            Partitioner::FixedSize => graph::fixed_size(graph.num_nodes(), cluster_size),
+            Partitioner::Locality => graph::locality(graph, cluster_size),
+        }
+    }
+}
+
+/// One candidate deployment configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub setting: SettingKind,
+    /// Requested cluster size cₛ (0 for the canonical centralized point,
+    /// whose score has no cluster structure).
+    pub cluster_size: usize,
+    /// Cluster-head capacity multiple (1.0 unless semi).
+    pub head_capacity: f64,
+    pub partitioner: Partitioner,
+}
+
+impl OperatingPoint {
+    /// The canonical centralized point (cluster knobs are meaningless).
+    pub fn centralized() -> OperatingPoint {
+        OperatingPoint {
+            setting: SettingKind::Centralized,
+            cluster_size: 0,
+            head_capacity: 1.0,
+            partitioner: Partitioner::FixedSize,
+        }
+    }
+
+    pub fn decentralized(cluster_size: usize, partitioner: Partitioner) -> OperatingPoint {
+        OperatingPoint {
+            setting: SettingKind::Decentralized,
+            cluster_size,
+            head_capacity: 1.0,
+            partitioner,
+        }
+    }
+
+    pub fn semi(
+        cluster_size: usize,
+        head_capacity: f64,
+        partitioner: Partitioner,
+    ) -> OperatingPoint {
+        OperatingPoint { setting: SettingKind::Semi, cluster_size, head_capacity, partitioner }
+    }
+
+    /// Human-readable label for tables and JSON.
+    pub fn label(&self) -> String {
+        match self.setting {
+            SettingKind::Centralized => "centralized".into(),
+            SettingKind::Decentralized => {
+                format!("decentralized cs={} {}", self.cluster_size, self.partitioner.name())
+            }
+            SettingKind::Semi => format!(
+                "semi cs={} h={} {}",
+                self.cluster_size,
+                self.head_capacity,
+                self.partitioner.name()
+            ),
+        }
+    }
+}
+
+/// Clustering-derived facts a score depends on (pure function of the
+/// sample graph, the partitioner and the requested cluster size).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterFacts {
+    /// Largest cluster — the straggler that closes a round.
+    pub max_size: usize,
+    /// Cluster count on the sample graph.
+    pub clusters: usize,
+    /// Fraction of edges kept inside clusters (drives the boundary terms
+    /// of the clustered Eq. 4 / E8 variants).
+    pub intra_fraction: f64,
+}
+
+impl ClusterFacts {
+    /// Facts for the centralized point: no cluster structure.
+    fn none() -> ClusterFacts {
+        ClusterFacts { max_size: 0, clusters: 0, intra_fraction: 1.0 }
+    }
+}
+
+/// The three objectives every point is scored on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Score {
+    /// Total round latency (compute + communicate), the argmin objective.
+    pub latency: Time,
+    /// Energy of one full-graph inference round at deployment scale.
+    pub energy: Energy,
+    /// Power of the hottest single device (the leader / a head / a node).
+    pub per_device_power: Power,
+}
+
+/// Packet-level cross-check attached by the netsim refinement pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimCheck {
+    /// Scale the fabric was simulated at (`min(N, netsim_nodes_cap)`).
+    pub nodes: usize,
+    /// Simulated round completion at that scale.
+    pub simulated: Time,
+    /// Analytic latency at the same scale (the congestion-free baseline;
+    /// the gap between the two is the contention signal).
+    pub analytic: Time,
+}
+
+/// One scored grid point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvaluatedPoint {
+    pub point: OperatingPoint,
+    pub facts: ClusterFacts,
+    pub score: Score,
+    pub simulated: Option<SimCheck>,
+}
+
+/// Which engine produces the latency objective.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Closed-form Eqs. 1–7 + the clustered E11 variants.
+    Analytic,
+    /// Packet-level `netsim` round completion (energy / per-device power
+    /// stay analytic; the fabric sees the clustering only through its
+    /// straggler cluster size).  Deployments larger than
+    /// [`TunerConfig::netsim_nodes_cap`] are simulated at the cap.
+    Netsim(NetSimConfig),
+}
+
+/// The enumeration grid.
+#[derive(Debug, Clone)]
+pub struct TuneGrid {
+    pub settings: Vec<SettingKind>,
+    pub cluster_sizes: Vec<usize>,
+    pub head_capacities: Vec<f64>,
+    pub partitioners: Vec<Partitioner>,
+}
+
+impl TuneGrid {
+    /// All three settings × both partitioners over the given cluster
+    /// sizes and head capacities.
+    pub fn full(cluster_sizes: &[usize], head_capacities: &[f64]) -> TuneGrid {
+        TuneGrid {
+            settings: vec![
+                SettingKind::Centralized,
+                SettingKind::Semi,
+                SettingKind::Decentralized,
+            ],
+            cluster_sizes: cluster_sizes.to_vec(),
+            head_capacities: head_capacities.to_vec(),
+            partitioners: vec![Partitioner::FixedSize, Partitioner::Locality],
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.settings.is_empty() {
+            return Err(Error::Config("autotune grid has no settings".into()));
+        }
+        let clustered = self
+            .settings
+            .iter()
+            .any(|s| matches!(s, SettingKind::Semi | SettingKind::Decentralized));
+        if clustered {
+            if self.cluster_sizes.is_empty() || self.cluster_sizes.contains(&0) {
+                return Err(Error::Config(
+                    "autotune grid needs cluster sizes > 0 for clustered settings".into(),
+                ));
+            }
+            if self.partitioners.is_empty() {
+                return Err(Error::Config("autotune grid has no partitioners".into()));
+            }
+        }
+        if self.settings.contains(&SettingKind::Semi) {
+            if self.head_capacities.is_empty() {
+                return Err(Error::Config("autotune grid has no head capacities".into()));
+            }
+            if self.head_capacities.iter().any(|h| !h.is_finite() || *h < 1.0) {
+                return Err(Error::Config("head capacities must be finite and >= 1".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical enumeration: settings in grid order; within a setting,
+    /// cluster size → head capacity → partitioner; centralized collapses
+    /// to its single canonical point.  This order is the tie-break order
+    /// of the argmin and the frontier.
+    pub fn points(&self) -> Vec<OperatingPoint> {
+        let mut pts = Vec::new();
+        for &setting in &self.settings {
+            match setting {
+                SettingKind::Centralized => pts.push(OperatingPoint::centralized()),
+                SettingKind::Semi => {
+                    for &cs in &self.cluster_sizes {
+                        for &h in &self.head_capacities {
+                            for &p in &self.partitioners {
+                                pts.push(OperatingPoint::semi(cs, h, p));
+                            }
+                        }
+                    }
+                }
+                SettingKind::Decentralized => {
+                    for &cs in &self.cluster_sizes {
+                        for &p in &self.partitioners {
+                            pts.push(OperatingPoint::decentralized(cs, p));
+                        }
+                    }
+                }
+            }
+        }
+        pts
+    }
+}
+
+/// Exploration knobs.
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    pub backend: Backend,
+    /// With the analytic backend: re-score this many of the best points
+    /// with the packet fabric as a congestion cross-check (0 = off).
+    pub netsim_refine: usize,
+    /// Fabric config of the refinement pass.
+    pub netsim: NetSimConfig,
+    /// Largest deployment the packet fabric simulates (bigger scales are
+    /// capped; the [`SimCheck`] records the scale actually simulated).
+    pub netsim_nodes_cap: usize,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            backend: Backend::Analytic,
+            netsim_refine: 0,
+            netsim: NetSimConfig::default(),
+            netsim_nodes_cap: 2_000,
+        }
+    }
+}
+
+/// Result of one exploration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneOutcome {
+    /// Every grid point, in canonical enumeration order.
+    pub evaluated: Vec<EvaluatedPoint>,
+    /// Indices of the Pareto frontier over
+    /// (latency, energy, per-device power), in enumeration order.
+    pub pareto: Vec<usize>,
+    /// Index of the latency argmin (earliest point wins ties).
+    pub best: usize,
+}
+
+impl TuneOutcome {
+    pub fn best_point(&self) -> &EvaluatedPoint {
+        &self.evaluated[self.best]
+    }
+
+    pub fn pareto_points(&self) -> impl Iterator<Item = &EvaluatedPoint> {
+        self.pareto.iter().map(|&i| &self.evaluated[i])
+    }
+}
+
+/// The design-space explorer for one deployment.
+pub struct Autotuner<'a> {
+    model: &'a NetModel,
+    /// Materialized graph sample the partitioners run on (its clustering
+    /// statistics — straggler size, intra-edge fraction — stand in for
+    /// the full graph's, DESIGN.md §2 substitution).
+    graph: &'a Csr,
+    /// Deployment scale N (may exceed the sample).
+    nodes: usize,
+    grid: TuneGrid,
+    cfg: TunerConfig,
+}
+
+impl<'a> Autotuner<'a> {
+    pub fn new(
+        model: &'a NetModel,
+        graph: &'a Csr,
+        nodes: usize,
+        grid: TuneGrid,
+        cfg: TunerConfig,
+    ) -> Result<Autotuner<'a>> {
+        grid.validate()?;
+        if nodes < 2 {
+            return Err(Error::Config("autotune needs a deployment of >= 2 nodes".into()));
+        }
+        if graph.num_nodes() == 0 {
+            return Err(Error::Config("autotune needs a non-empty sample graph".into()));
+        }
+        Ok(Autotuner { model, graph, nodes, grid, cfg })
+    }
+
+    pub fn grid(&self) -> &TuneGrid {
+        &self.grid
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Clustering facts for one (partitioner, cluster size) cell — a pure,
+    /// deterministic function of the sample graph.
+    pub fn cluster_facts(
+        &self,
+        partitioner: Partitioner,
+        cluster_size: usize,
+    ) -> Result<ClusterFacts> {
+        let c = partitioner.partition(self.graph, cluster_size)?;
+        Ok(ClusterFacts {
+            max_size: c.max_size(),
+            clusters: c.num_clusters(),
+            intra_fraction: c.intra_edge_fraction(self.graph),
+        })
+    }
+
+    /// Score one operating point with the configured backend — the single
+    /// scoring path `explore` and the brute-force cross-validation share.
+    pub fn score(&self, point: &OperatingPoint) -> Result<EvaluatedPoint> {
+        let facts = self.facts_for(point)?;
+        let score = self.score_at(point, &facts, self.nodes)?;
+        Ok(EvaluatedPoint { point: *point, facts, score, simulated: None })
+    }
+
+    /// Enumerate, score and rank the whole grid over all available cores.
+    pub fn explore(&self) -> Result<TuneOutcome> {
+        self.explore_with_threads(par::available_threads())
+    }
+
+    /// [`Self::explore`] with an explicit worker count (1 = sequential);
+    /// the outcome is identical at every thread count.
+    pub fn explore_with_threads(&self, threads: usize) -> Result<TuneOutcome> {
+        let points = self.grid.points();
+        if points.is_empty() {
+            return Err(Error::Config("autotune grid enumerates no points".into()));
+        }
+        // Clustering facts per grid cell, computed once up front so the
+        // parallel scoring pass is read-only.
+        let mut facts: BTreeMap<(Partitioner, usize), ClusterFacts> = BTreeMap::new();
+        for p in &points {
+            if p.setting != SettingKind::Centralized {
+                if let std::collections::btree_map::Entry::Vacant(e) =
+                    facts.entry((p.partitioner, p.cluster_size))
+                {
+                    e.insert(self.cluster_facts(p.partitioner, p.cluster_size)?);
+                }
+            }
+        }
+        let mut evaluated = par::par_try_map(&points, threads, |p| -> Result<EvaluatedPoint> {
+            let f = match p.setting {
+                SettingKind::Centralized => ClusterFacts::none(),
+                _ => facts[&(p.partitioner, p.cluster_size)],
+            };
+            let score = self.score_at(p, &f, self.nodes)?;
+            Ok(EvaluatedPoint { point: *p, facts: f, score, simulated: None })
+        })?;
+
+        // Optional packet-level cross-check of the best analytic points.
+        if matches!(self.cfg.backend, Backend::Analytic) && self.cfg.netsim_refine > 0 {
+            let mut order: Vec<usize> = (0..evaluated.len()).collect();
+            order.sort_by(|&a, &b| {
+                evaluated[a]
+                    .score
+                    .latency
+                    .partial_cmp(&evaluated[b].score.latency)
+                    .expect("latencies are finite")
+                    .then(a.cmp(&b))
+            });
+            for &i in order.iter().take(self.cfg.netsim_refine) {
+                let (p, f) = (evaluated[i].point, evaluated[i].facts);
+                let sim_nodes = self.nodes.min(self.cfg.netsim_nodes_cap).max(2);
+                let simulated = self.netsim_latency(&p, &f, sim_nodes, &self.cfg.netsim)?;
+                let analytic = self.score_at(&p, &f, sim_nodes)?.latency;
+                evaluated[i].simulated =
+                    Some(SimCheck { nodes: sim_nodes, simulated, analytic });
+            }
+        }
+
+        let best = evaluated
+            .iter()
+            .enumerate()
+            .min_by(|(ai, a), (bi, b)| {
+                a.score
+                    .latency
+                    .partial_cmp(&b.score.latency)
+                    .expect("latencies are finite")
+                    .then(ai.cmp(bi))
+            })
+            .map(|(i, _)| i)
+            .expect("grid is non-empty");
+        let scores: Vec<Score> = evaluated.iter().map(|e| e.score).collect();
+        let pareto = pareto_frontier(&scores);
+        Ok(TuneOutcome { evaluated, pareto, best })
+    }
+
+    fn facts_for(&self, point: &OperatingPoint) -> Result<ClusterFacts> {
+        match point.setting {
+            SettingKind::Centralized => Ok(ClusterFacts::none()),
+            _ => self.cluster_facts(point.partitioner, point.cluster_size),
+        }
+    }
+
+    /// Score `point` for a deployment of `nodes` devices (DESIGN.md §9).
+    fn score_at(
+        &self,
+        point: &OperatingPoint,
+        facts: &ClusterFacts,
+        nodes: usize,
+    ) -> Result<Score> {
+        if point.setting != SettingKind::Centralized && point.cluster_size == 0 {
+            return Err(Error::Config("clustered settings need cluster size > 0".into()));
+        }
+        if point.setting == SettingKind::Semi
+            && (!point.head_capacity.is_finite() || point.head_capacity < 1.0)
+        {
+            return Err(Error::Config("head capacity must be finite and >= 1".into()));
+        }
+        let m = self.model;
+        let n = nodes as f64;
+        let cs = facts.max_size.max(1);
+        let topo = Topology { nodes, cluster_size: cs };
+        let latency = match &self.cfg.backend {
+            Backend::Analytic => match point.setting {
+                SettingKind::Centralized => m.latency(Setting::Centralized, topo).total(),
+                SettingKind::Decentralized => {
+                    m.compute_latency(Setting::Decentralized, topo)
+                        + m.communicate_latency_clustered(topo, facts.intra_fraction)
+                }
+                SettingKind::Semi => m
+                    .semi_latency_clustered(topo, point.head_capacity, facts.intra_fraction)
+                    .total(),
+            },
+            Backend::Netsim(cfg) => {
+                let sim_nodes = nodes.min(self.cfg.netsim_nodes_cap).max(2);
+                self.netsim_latency(point, facts, sim_nodes, cfg)?
+            }
+        };
+        // Energy of one full-graph round and the hottest device's power
+        // are analytic in both backends (the fabric models latency only).
+        let (energy, per_device_power) = match point.setting {
+            SettingKind::Centralized => {
+                let (ec, em) = m.inference_energy(Setting::Centralized, topo);
+                let p = m.compute_power(Setting::Centralized)
+                    + m.communicate_power(Setting::Centralized);
+                (ec + em, p)
+            }
+            SettingKind::Decentralized => {
+                let comm = m.communicate_latency_clustered(topo, facts.intra_fraction);
+                let e = m.breakdown().total_energy() * n
+                    + m.communicate_power(Setting::Decentralized) * comm * n;
+                let p = m.compute_power(Setting::Decentralized)
+                    + m.communicate_power(Setting::Decentralized);
+                (e, p)
+            }
+            SettingKind::Semi => {
+                let transfer = m.inter_link().transfer(m.message_bytes());
+                let beta = 2.0 - facts.intra_fraction.clamp(0.0, 1.0);
+                let heads = nodes.div_ceil(cs) as f64;
+                // member up+down per device, boundary exchange per head.
+                let e = m.breakdown().total_energy() * n
+                    + m.inter_link().power() * (transfer * (2.0 * n + 2.0 * beta * heads));
+                // The head is the hottest device: h× a member's cores plus
+                // its two-way V2X radio.
+                let p = m.compute_power(Setting::Decentralized) * point.head_capacity
+                    + m.inter_link().power() * 2.0;
+                (e, p)
+            }
+        };
+        Ok(Score { latency, energy, per_device_power })
+    }
+
+    /// Packet-level round completion for `point` at `sim_nodes` devices.
+    /// The fabric sees the clustering only through its straggler size —
+    /// the same `max_size` the analytic forms use, so a [`SimCheck`]
+    /// compares identical topologies; the intra-edge fraction is an
+    /// analytic-only refinement.
+    fn netsim_latency(
+        &self,
+        point: &OperatingPoint,
+        facts: &ClusterFacts,
+        sim_nodes: usize,
+        cfg: &NetSimConfig,
+    ) -> Result<Time> {
+        let cs = facts.max_size.max(1);
+        let (scenario, topo) = match point.setting {
+            SettingKind::Centralized => {
+                (Scenario::CentralizedStar, Topology { nodes: sim_nodes, cluster_size: 1 })
+            }
+            SettingKind::Decentralized => (
+                Scenario::DecentralizedMesh,
+                Topology { nodes: sim_nodes, cluster_size: cs },
+            ),
+            SettingKind::Semi => (
+                Scenario::SemiOverlay { head_capacity: point.head_capacity },
+                Topology { nodes: sim_nodes, cluster_size: cs },
+            ),
+        };
+        Ok(simulate_fabric(self.model, scenario, topo, cfg)?.completion)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cores::GnnWorkload;
+    use crate::graph::generate;
+    use crate::testing::assert_close;
+
+    fn model() -> NetModel {
+        NetModel::paper(&GnnWorkload::taxi()).unwrap()
+    }
+
+    #[test]
+    fn grid_enumeration_is_canonical_and_counts_match() {
+        let g = TuneGrid::full(&[5, 10], &[4.0, 8.0]);
+        let pts = g.points();
+        // 1 centralized + 2·2·2 semi + 2·2 decentralized.
+        assert_eq!(pts.len(), 1 + 8 + 4);
+        assert_eq!(pts[0], OperatingPoint::centralized());
+        assert_eq!(pts[1], OperatingPoint::semi(5, 4.0, Partitioner::FixedSize));
+        assert_eq!(pts[2], OperatingPoint::semi(5, 4.0, Partitioner::Locality));
+        assert_eq!(pts[3], OperatingPoint::semi(5, 8.0, Partitioner::FixedSize));
+        assert_eq!(*pts.last().unwrap(), OperatingPoint::decentralized(10, Partitioner::Locality));
+    }
+
+    #[test]
+    fn grid_validation_rejects_degenerate_knobs() {
+        let mut g = TuneGrid::full(&[5], &[4.0]);
+        g.settings.clear();
+        assert!(g.validate().is_err());
+        let g = TuneGrid::full(&[0], &[4.0]);
+        assert!(g.validate().is_err());
+        let g = TuneGrid::full(&[5], &[0.5]);
+        assert!(g.validate().is_err());
+        let mut g = TuneGrid::full(&[5], &[]);
+        assert!(g.validate().is_err());
+        // ... but a centralized-only grid needs none of the cluster knobs.
+        g.settings = vec![SettingKind::Centralized];
+        g.cluster_sizes.clear();
+        g.partitioners.clear();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.points(), vec![OperatingPoint::centralized()]);
+    }
+
+    #[test]
+    fn cluster_facts_match_direct_partitioning() {
+        let m = model();
+        let g = generate::ring(24).unwrap();
+        let t = Autotuner::new(&m, &g, 24, TuneGrid::full(&[6], &[4.0]), TunerConfig::default())
+            .unwrap();
+        let f = t.cluster_facts(Partitioner::FixedSize, 6).unwrap();
+        let c = crate::graph::fixed_size(24, 6).unwrap();
+        assert_eq!(f.max_size, c.max_size());
+        assert_eq!(f.clusters, c.num_clusters());
+        assert_close(f.intra_fraction, c.intra_edge_fraction(&g), 1e-12);
+        // Ring arithmetic: 4 arcs of 6 keep 2·5 of their 12 edges… per arc.
+        assert_close(f.intra_fraction, (24.0 - 4.0) / 24.0, 1e-12);
+    }
+
+    #[test]
+    fn locality_scores_no_worse_than_blocking_on_structured_graphs() {
+        let m = model();
+        let g = generate::grid(8, 8).unwrap();
+        let t = Autotuner::new(&m, &g, 64, TuneGrid::full(&[8], &[8.0]), TunerConfig::default())
+            .unwrap();
+        for (a, b) in [
+            (
+                OperatingPoint::decentralized(8, Partitioner::Locality),
+                OperatingPoint::decentralized(8, Partitioner::FixedSize),
+            ),
+            (
+                OperatingPoint::semi(8, 8.0, Partitioner::Locality),
+                OperatingPoint::semi(8, 8.0, Partitioner::FixedSize),
+            ),
+        ] {
+            let la = t.score(&a).unwrap().score.latency;
+            let lb = t.score(&b).unwrap().score.latency;
+            assert!(la <= lb, "{} {la} > {} {lb}", a.label(), b.label());
+        }
+    }
+
+    #[test]
+    fn explore_is_identical_across_thread_counts() {
+        let m = model();
+        let g = generate::grid(6, 8).unwrap();
+        let t = Autotuner::new(
+            &m,
+            &g,
+            5_000,
+            TuneGrid::full(&[4, 8, 12], &[4.0, 10.0]),
+            TunerConfig { netsim_refine: 2, ..Default::default() },
+        )
+        .unwrap();
+        let seq = t.explore_with_threads(1).unwrap();
+        let par4 = t.explore_with_threads(4).unwrap();
+        let auto = t.explore().unwrap();
+        assert_eq!(seq, par4);
+        assert_eq!(seq, auto);
+        assert_eq!(seq.evaluated.len(), 1 + 12 + 6);
+        // The refinement annotated exactly two points.
+        assert_eq!(seq.evaluated.iter().filter(|e| e.simulated.is_some()).count(), 2);
+        // The argmin sits on the frontier (it is latency-minimal).
+        assert!(seq.pareto.contains(&seq.best));
+    }
+
+    #[test]
+    fn uncongested_netsim_backend_agrees_with_analytic_on_aligned_clusters() {
+        // Two 5-cliques: fixed_size(·, 5) aligns exactly with the
+        // components, so the intra fraction is 1 and the analytic
+        // clustered forms coincide with the paper equations the fabric
+        // reproduces.
+        let mut edges = Vec::new();
+        for base in [0usize, 5] {
+            for i in 0..5 {
+                for j in 0..5 {
+                    if i != j {
+                        edges.push((base + i, base + j));
+                    }
+                }
+            }
+        }
+        let g = Csr::from_edges(10, &edges).unwrap();
+        let m = model();
+        let grid = TuneGrid {
+            settings: vec![
+                SettingKind::Centralized,
+                SettingKind::Semi,
+                SettingKind::Decentralized,
+            ],
+            cluster_sizes: vec![5],
+            head_capacities: vec![5.0],
+            partitioners: vec![Partitioner::FixedSize],
+        };
+        let analytic =
+            Autotuner::new(&m, &g, 40, grid.clone(), TunerConfig::default()).unwrap();
+        let simulated = Autotuner::new(
+            &m,
+            &g,
+            40,
+            grid,
+            TunerConfig {
+                backend: Backend::Netsim(NetSimConfig::default()),
+                netsim_nodes_cap: 64,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for p in [
+            OperatingPoint::centralized(),
+            OperatingPoint::decentralized(5, Partitioner::FixedSize),
+            OperatingPoint::semi(5, 5.0, Partitioner::FixedSize),
+        ] {
+            let a = analytic.score(&p).unwrap();
+            let s = simulated.score(&p).unwrap();
+            assert_eq!(a.facts, s.facts);
+            assert!((a.facts.intra_fraction - 1.0).abs() < 1e-12);
+            assert_close(s.score.latency.as_s(), a.score.latency.as_s(), 1e-6);
+            // Non-latency objectives are shared verbatim.
+            assert_eq!(s.score.energy, a.score.energy);
+            assert_eq!(s.score.per_device_power, a.score.per_device_power);
+        }
+    }
+
+    #[test]
+    fn scores_reject_malformed_points() {
+        let m = model();
+        let g = generate::ring(12).unwrap();
+        let t = Autotuner::new(&m, &g, 12, TuneGrid::full(&[4], &[4.0]), TunerConfig::default())
+            .unwrap();
+        assert!(t.score(&OperatingPoint::decentralized(0, Partitioner::FixedSize)).is_err());
+        assert!(t.score(&OperatingPoint::semi(4, 0.25, Partitioner::FixedSize)).is_err());
+        assert!(t.score(&OperatingPoint::semi(4, f64::INFINITY, Partitioner::FixedSize)).is_err());
+        assert!(t.score(&OperatingPoint::semi(4, f64::NAN, Partitioner::FixedSize)).is_err());
+        // Constructor guards.
+        assert!(Autotuner::new(&m, &g, 1, TuneGrid::full(&[4], &[4.0]), TunerConfig::default())
+            .is_err());
+        let empty = Csr::from_edges(0, &[]).unwrap();
+        assert!(Autotuner::new(&m, &empty, 10, TuneGrid::full(&[4], &[4.0]), TunerConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn large_scale_argmin_is_the_hybrid() {
+        // At LiveJournal scale with 1-byte messages the tuned hybrid beats
+        // both pure settings (the paper-conclusion demonstration E11
+        // asserts dataset-by-dataset in experiments.rs).
+        let stats = crate::graph::datasets::livejournal();
+        let m = NetModel::fig8(&stats).unwrap();
+        let g = stats.materialize(600, 42).unwrap();
+        let t = Autotuner::new(
+            &m,
+            &g,
+            stats.nodes,
+            TuneGrid::full(&[8, 16], &[10.0, 25.0]),
+            TunerConfig::default(),
+        )
+        .unwrap();
+        let out = t.explore_with_threads(1).unwrap();
+        let best = out.best_point();
+        assert_eq!(best.point.setting, SettingKind::Semi, "best: {}", best.point.label());
+        let cent = t.score(&OperatingPoint::centralized()).unwrap().score.latency;
+        let dec = t
+            .score(&OperatingPoint::decentralized(8, Partitioner::FixedSize))
+            .unwrap()
+            .score
+            .latency;
+        assert!(best.score.latency < cent && best.score.latency < dec);
+    }
+}

@@ -1,0 +1,105 @@
+//! Deterministic Pareto-frontier filter over (latency, energy,
+//! per-device power) — minimize all three.
+//!
+//! The frontier is returned as indices into the input slice, in input
+//! order.  Exact duplicates keep only the earliest occurrence, so the
+//! result is a pure function of the input sequence (the autotuner's
+//! determinism contract, DESIGN.md §9).
+
+use super::Score;
+
+/// `a` dominates `b` when it is no worse on every objective and strictly
+/// better on at least one.
+pub fn dominates(a: &Score, b: &Score) -> bool {
+    let no_worse = a.latency <= b.latency
+        && a.energy <= b.energy
+        && a.per_device_power <= b.per_device_power;
+    let better = a.latency < b.latency
+        || a.energy < b.energy
+        || a.per_device_power < b.per_device_power;
+    no_worse && better
+}
+
+/// Indices of the non-dominated points, in input order.
+pub fn pareto_frontier(scores: &[Score]) -> Vec<usize> {
+    let mut out = Vec::new();
+    'outer: for (i, s) in scores.iter().enumerate() {
+        for (j, other) in scores.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            // Strict dominance from anywhere, or an identical score seen
+            // earlier, knocks `i` off the frontier.
+            if dominates(other, s) || (other == s && j < i) {
+                continue 'outer;
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::{Energy, Power, Time};
+
+    fn s(l: f64, e: f64, p: f64) -> Score {
+        Score {
+            latency: Time::s(l),
+            energy: Energy::j(e),
+            per_device_power: Power::w(p),
+        }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement_somewhere() {
+        assert!(dominates(&s(1.0, 1.0, 1.0), &s(2.0, 1.0, 1.0)));
+        assert!(dominates(&s(1.0, 0.5, 1.0), &s(1.0, 1.0, 1.0)));
+        assert!(!dominates(&s(1.0, 1.0, 1.0), &s(1.0, 1.0, 1.0))); // equal
+        assert!(!dominates(&s(0.5, 2.0, 1.0), &s(1.0, 1.0, 1.0))); // trade-off
+    }
+
+    #[test]
+    fn frontier_keeps_tradeoffs_and_drops_dominated() {
+        let pts = [
+            s(1.0, 9.0, 1.0), // fast but hungry       → frontier
+            s(9.0, 1.0, 1.0), // slow but frugal        → frontier
+            s(5.0, 5.0, 5.0), // middle, dominated by 3 → out
+            s(4.0, 4.0, 1.0), // dominates 2            → frontier
+        ];
+        assert_eq!(pareto_frontier(&pts), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn duplicates_keep_only_the_first() {
+        let pts = [s(1.0, 1.0, 1.0), s(2.0, 0.5, 1.0), s(1.0, 1.0, 1.0)];
+        assert_eq!(pareto_frontier(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn singleton_and_empty_inputs() {
+        assert_eq!(pareto_frontier(&[]), Vec::<usize>::new());
+        assert_eq!(pareto_frontier(&[s(3.0, 3.0, 3.0)]), vec![0]);
+    }
+
+    #[test]
+    fn every_point_is_on_or_dominated_by_the_frontier() {
+        // Pseudo-random small cloud; property: completeness of the filter.
+        let mut rng = crate::testing::Rng::new(7);
+        let pts: Vec<Score> = (0..40)
+            .map(|_| s(rng.f64_in(0.0, 4.0), rng.f64_in(0.0, 4.0), rng.f64_in(0.0, 4.0)))
+            .collect();
+        let front = pareto_frontier(&pts);
+        assert!(!front.is_empty());
+        for (i, p) in pts.iter().enumerate() {
+            if front.contains(&i) {
+                continue;
+            }
+            assert!(
+                front.iter().any(|&j| dominates(&pts[j], p) || pts[j] == *p),
+                "point {i} neither on nor covered by the frontier"
+            );
+        }
+    }
+}

@@ -121,6 +121,30 @@ impl CentralizedLeader {
         })
     }
 
+    /// Build the leader a tuned [`OperatingPoint`] describes.  The
+    /// centralized setting has no cluster structure, so this validates the
+    /// point's setting and otherwise defers to [`CentralizedLeader::new`]
+    /// — the constructor exists so the serving path is configured through
+    /// the same E11 artifact for every setting.
+    ///
+    /// [`OperatingPoint`]: crate::autotune::OperatingPoint
+    pub fn from_operating_point(
+        binding: GcnLayerBinding,
+        graph: Csr,
+        weights: Vec<f32>,
+        workload: &GnnWorkload,
+        max_wait: Duration,
+        point: &crate::autotune::OperatingPoint,
+    ) -> Result<CentralizedLeader> {
+        if point.setting != crate::autotune::SettingKind::Centralized {
+            return Err(Error::Coordinator(format!(
+                "operating point `{}` is not centralized",
+                point.label()
+            )));
+        }
+        CentralizedLeader::new(binding, graph, weights, workload, max_wait)
+    }
+
     /// Ingest one node's uploaded features (staged; visible after
     /// `end_round`, the double-buffer barrier).
     pub fn upload(&mut self, node: usize, features: &[f32]) -> Result<()> {
@@ -317,6 +341,30 @@ mod tests {
             Duration::ZERO,
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn from_operating_point_validates_the_setting() {
+        use crate::autotune::{OperatingPoint, Partitioner};
+        let g = crate::graph::generate::regular(48, 6, 3).unwrap();
+        let ok = CentralizedLeader::from_operating_point(
+            binding(),
+            g.clone(),
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 6),
+            Duration::ZERO,
+            &OperatingPoint::centralized(),
+        );
+        assert!(ok.is_ok());
+        let bad = CentralizedLeader::from_operating_point(
+            binding(),
+            g,
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 6),
+            Duration::ZERO,
+            &OperatingPoint::semi(8, 10.0, Partitioner::FixedSize),
+        );
+        assert!(bad.is_err());
     }
 
     #[test]

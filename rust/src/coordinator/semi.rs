@@ -37,6 +37,10 @@ pub struct SemiCoordinator {
     sampler: NeighborSampler,
     model: NetModel,
     head_capacity: f64,
+    /// Fraction of graph edges the clustering keeps intra-cluster; drives
+    /// the boundary term of the modeled round latency (E11's clustered E8
+    /// variant — the same score the autotuner selects points with).
+    intra_fraction: f64,
     /// When set, per-result `modeled` latency comes from a packet-level
     /// `netsim` overlay round instead of the closed-form E8 model.
     simulated_latency: Option<Time>,
@@ -64,6 +68,7 @@ impl SemiCoordinator {
             return Err(Error::Coordinator("weight arity mismatch".into()));
         }
         let head_capacity = clustering.avg_size().max(1.0);
+        let intra_fraction = clustering.intra_edge_fraction(&graph);
         Ok(SemiCoordinator {
             sampler: NeighborSampler::new(binding.sample, 7),
             model: NetModel::paper(workload)?,
@@ -72,8 +77,48 @@ impl SemiCoordinator {
             clustering,
             weights,
             head_capacity,
+            intra_fraction,
             simulated_latency: None,
         })
+    }
+
+    /// Build the coordinator a tuned [`OperatingPoint`] describes: the
+    /// point's partitioner produces the clustering and the point's head
+    /// capacity replaces the avg-size default — so the serving path runs
+    /// exactly the configuration the E11 autotuner scored.  Rejects
+    /// non-semi points (the centralized leader has its own constructor).
+    ///
+    /// [`OperatingPoint`]: crate::autotune::OperatingPoint
+    pub fn from_operating_point(
+        binding: GcnLayerBinding,
+        graph: Csr,
+        weights: Vec<f32>,
+        workload: &GnnWorkload,
+        point: &crate::autotune::OperatingPoint,
+    ) -> Result<SemiCoordinator> {
+        if point.setting != crate::autotune::SettingKind::Semi {
+            return Err(Error::Coordinator(format!(
+                "operating point `{}` is not semi-decentralized",
+                point.label()
+            )));
+        }
+        let clustering = point.partitioner.partition(&graph, point.cluster_size)?;
+        SemiCoordinator::new(binding, graph, clustering, weights, workload)?
+            .with_head_capacity(point.head_capacity)
+    }
+
+    /// Override the cluster-head capacity multiple (the default is the
+    /// clustering's average size).
+    pub fn with_head_capacity(mut self, head_capacity: f64) -> Result<SemiCoordinator> {
+        if !head_capacity.is_finite() || head_capacity < 1.0 {
+            return Err(Error::Coordinator("head capacity must be >= 1".into()));
+        }
+        self.head_capacity = head_capacity;
+        Ok(self)
+    }
+
+    pub fn head_capacity(&self) -> f64 {
+        self.head_capacity
     }
 
     pub fn num_heads(&self) -> usize {
@@ -150,9 +195,15 @@ impl SemiCoordinator {
                 continue;
             }
             let topo = Topology { nodes: n, cluster_size: members.len() };
-            let modeled = self
-                .simulated_latency
-                .unwrap_or_else(|| self.model.semi_latency(topo, self.head_capacity).total());
+            // Boundary-aware E8 (E11): the same clustered score the
+            // autotuner selects operating points with, so the served
+            // `modeled` latency matches the figure that justified the
+            // configuration.
+            let modeled = self.simulated_latency.unwrap_or_else(|| {
+                self.model
+                    .semi_latency_clustered(topo, self.head_capacity, self.intra_fraction)
+                    .total()
+            });
             // Heads batch their members, padding to the artifact batch.
             for chunk in members.chunks(b.batch) {
                 let mut nodes = chunk.to_vec();
@@ -243,6 +294,61 @@ mod tests {
             &GnnWorkload::gcn("t", 64, 8),
         );
         assert!(bad.is_err());
+    }
+
+    /// E11: a coordinator built from a tuned operating point is
+    /// configured identically to the hand-constructed equivalent (the
+    /// PJRT round itself is compared bit-for-bit in rust/tests/serving.rs).
+    #[test]
+    fn from_operating_point_matches_hand_construction() {
+        use crate::autotune::{OperatingPoint, Partitioner};
+        let g = generate::regular(48, 6, 3).unwrap();
+        let w = vec![0.25f32; 64 * 32];
+        let wl = GnnWorkload::gcn("t", 64, 8);
+        let point = OperatingPoint::semi(8, 10.0, Partitioner::FixedSize);
+        let tuned =
+            SemiCoordinator::from_operating_point(binding(), g.clone(), w.clone(), &wl, &point)
+                .unwrap();
+        let hand = SemiCoordinator::new(
+            binding(),
+            g.clone(),
+            fixed_size(48, 8).unwrap(),
+            w.clone(),
+            &wl,
+        )
+        .unwrap()
+        .with_head_capacity(10.0)
+        .unwrap();
+        assert_eq!(tuned.num_heads(), hand.num_heads());
+        assert_eq!(tuned.head_capacity(), 10.0);
+        assert_eq!(tuned.clustering, hand.clustering);
+        assert_eq!(tuned.intra_fraction, hand.intra_fraction);
+        // Same modeled round latency for every cluster.
+        let topo = Topology { nodes: 48, cluster_size: 8 };
+        assert_eq!(
+            tuned.model.semi_latency(topo, tuned.head_capacity).total(),
+            hand.model.semi_latency(topo, hand.head_capacity).total()
+        );
+
+        // Non-semi points are rejected, as are sub-unit head capacities.
+        let cent = OperatingPoint::centralized();
+        assert!(SemiCoordinator::from_operating_point(
+            binding(),
+            g.clone(),
+            w.clone(),
+            &wl,
+            &cent
+        )
+        .is_err());
+        let semi = SemiCoordinator::new(
+            binding(),
+            g,
+            fixed_size(48, 8).unwrap(),
+            w,
+            &wl,
+        )
+        .unwrap();
+        assert!(semi.with_head_capacity(0.5).is_err());
     }
 
     #[test]

@@ -35,6 +35,12 @@ impl Clustering {
         self.assignment.len() as f64 / self.clusters.len() as f64
     }
 
+    /// Largest cluster — the straggler that closes a communication round
+    /// (the cₛ the E11 autotuner scores a partition at).
+    pub fn max_size(&self) -> usize {
+        self.clusters.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
     /// Fraction of edges staying inside a cluster.
     pub fn intra_edge_fraction(&self, graph: &Csr) -> f64 {
         if graph.num_edges() == 0 {
@@ -177,6 +183,97 @@ mod tests {
                 assert_eq!(total, g.num_nodes());
             }
         });
+    }
+
+    /// E11 satellite: every node lands in exactly one cluster, under both
+    /// partitioners, on arbitrary random graphs.
+    #[test]
+    fn property_every_node_assigned_exactly_once() {
+        forall(32, |rng: &mut Rng| {
+            let n = rng.index(120) + 1;
+            let k = rng.index(15) + 1;
+            let g = generate::uniform(n.max(2), n * 3, rng.next_u64()).unwrap();
+            for c in [fixed_size(g.num_nodes(), k).unwrap(), locality(&g, k).unwrap()] {
+                let mut seen = vec![0usize; g.num_nodes()];
+                for (cid, members) in c.clusters.iter().enumerate() {
+                    for &m in members {
+                        seen[m] += 1;
+                        assert_eq!(c.assignment[m], cid, "assignment/cluster disagree");
+                    }
+                }
+                assert!(seen.iter().all(|&s| s == 1), "multiplicity: {seen:?}");
+            }
+        });
+    }
+
+    /// E11 satellite: cluster count / size bounds hold even when the
+    /// cluster size does not divide the node count.
+    #[test]
+    fn property_count_and_size_bounds_for_non_dividing_sizes() {
+        forall(32, |rng: &mut Rng| {
+            let n = rng.index(150) + 1;
+            let k = rng.index(17) + 1;
+            let g = generate::uniform(n.max(2), n * 2, rng.next_u64()).unwrap();
+            let n = g.num_nodes();
+
+            let f = fixed_size(n, k).unwrap();
+            assert_eq!(f.num_clusters(), n.div_ceil(k));
+            assert!(f.clusters.iter().all(|m| !m.is_empty() && m.len() <= k));
+            // All blocks but the last are exactly k.
+            for m in f.clusters.iter().take(f.num_clusters().saturating_sub(1)) {
+                assert_eq!(m.len(), k);
+            }
+            assert!(f.max_size() <= k);
+
+            let l = locality(&g, k).unwrap();
+            // BFS growth can fragment (disconnected parts) but never
+            // produces fewer clusters than perfect packing or more than n.
+            assert!(l.num_clusters() >= n.div_ceil(k));
+            assert!(l.num_clusters() <= n);
+            assert!(l.clusters.iter().all(|m| !m.is_empty() && m.len() <= k));
+            assert!(l.max_size() <= k && l.max_size() >= 1);
+        });
+    }
+
+    /// E11 satellite: `intra_edge_fraction` is a proper fraction for any
+    /// clustering of any graph.
+    #[test]
+    fn property_intra_edge_fraction_in_unit_interval() {
+        forall(32, |rng: &mut Rng| {
+            let n = rng.index(80) + 2;
+            let k = rng.index(12) + 1;
+            let g = generate::uniform(n, rng.index(4 * n) + 1, rng.next_u64()).unwrap();
+            for c in [fixed_size(g.num_nodes(), k).unwrap(), locality(&g, k).unwrap()] {
+                let f = c.intra_edge_fraction(&g);
+                assert!((0.0..=1.0).contains(&f), "fraction {f} out of range");
+            }
+        });
+    }
+
+    /// E11 satellite: on ring graphs the locality partitioner never keeps
+    /// fewer edges inside clusters than id-order blocking.
+    #[test]
+    fn property_locality_never_worse_than_fixed_on_rings() {
+        forall(32, |rng: &mut Rng| {
+            let n = rng.index(80) + 3;
+            let k = rng.index(12) + 1;
+            let g = generate::ring(n).unwrap();
+            let blocked = fixed_size(n, k).unwrap().intra_edge_fraction(&g);
+            let local = locality(&g, k).unwrap().intra_edge_fraction(&g);
+            assert!(
+                local >= blocked - 1e-12,
+                "n={n} k={k}: locality {local} < blocked {blocked}"
+            );
+        });
+    }
+
+    #[test]
+    fn max_size_tracks_the_largest_cluster() {
+        assert_eq!(fixed_size(25, 10).unwrap().max_size(), 10);
+        assert_eq!(fixed_size(7, 3).unwrap().max_size(), 3);
+        assert_eq!(fixed_size(0, 3).unwrap().max_size(), 0);
+        let g = generate::ring(9).unwrap();
+        assert!(locality(&g, 4).unwrap().max_size() <= 4);
     }
 
     #[test]

@@ -117,6 +117,23 @@ pub fn grid(rows: usize, cols: usize) -> Result<Csr> {
     Csr::from_edges(n, &edges)
 }
 
+/// Ring (cycle) graph: node `i` connects to `i±1 (mod n)` — the 1-D
+/// structured substrate the E11 clustering property tests use (any
+/// contiguous arc of `m` nodes keeps exactly `2(m−1)` of its edges
+/// internal, so intra-edge fractions are analytically checkable).
+pub fn ring(num_nodes: usize) -> Result<Csr> {
+    if num_nodes < 3 {
+        return Err(Error::Graph("ring needs at least 3 nodes".into()));
+    }
+    let mut edges = Vec::with_capacity(2 * num_nodes);
+    for i in 0..num_nodes {
+        let j = (i + 1) % num_nodes;
+        edges.push((i, j));
+        edges.push((j, i));
+    }
+    Csr::from_edges(num_nodes, &edges)
+}
+
 /// Regular random graph: every node gets exactly `degree` out-edges to
 /// distinct non-self targets — matches the paper's fixed-size uniform
 /// neighbor sampling (§4.3).
@@ -194,6 +211,20 @@ mod tests {
         assert_eq!(g.degree(0), 2); // corner
         assert_eq!(g.degree(2), 3); // edge
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn ring_is_two_regular_and_cyclic() {
+        let g = ring(12).unwrap();
+        assert_eq!(g.num_nodes(), 12);
+        assert_eq!(g.num_edges(), 24);
+        for i in 0..12 {
+            assert_eq!(g.degree(i), 2);
+            let ns = g.neighbors(i);
+            assert!(ns.contains(&((i + 1) % 12)) && ns.contains(&((i + 11) % 12)));
+        }
+        g.validate().unwrap();
+        assert!(ring(2).is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod autotune;
 pub mod bench;
 pub mod cli;
 pub mod comm;

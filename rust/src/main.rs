@@ -9,6 +9,7 @@
 //! ima-gnn fig8                    # E3: Fig. 8 latency breakdown
 //! ima-gnn scaling                 # E4: crossbar-count scaling study
 //! ima-gnn simulate [options]      # DES over either deployment
+//! ima-gnn tune [options]          # E11: hybrid operating-point autotuner
 //! ima-gnn perf [options]          # E10: hot-kernel perf baseline
 //! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
 //! ima-gnn info                    # artifact + platform info
@@ -16,11 +17,14 @@
 
 use std::time::Duration;
 
+use ima_gnn::autotune::{Autotuner, TunerConfig};
 use ima_gnn::cli::Command;
 use ima_gnn::coordinator::{CentralizedLeader, GcnLayerBinding, InferenceService, Request};
 use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
-use ima_gnn::experiments::{scaling_sweep, table2, Fig8, NetsimSweep, Table1};
+use ima_gnn::experiments::{
+    hybrid_target, scaling_sweep, table2, Fig8, HybridSweep, NetsimSweep, Table1,
+};
 use ima_gnn::graph::generate;
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
 use ima_gnn::netsim::{simulate_fabric, NetSimConfig, Scenario};
@@ -50,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         "scaling" => cmd_scaling(rest),
         "simulate" => cmd_simulate(rest),
         "netsim" => cmd_netsim(rest),
+        "tune" => cmd_tune(rest),
         "perf" => cmd_perf(rest),
         "serve" => cmd_serve(rest),
         "area" => cmd_area(rest),
@@ -72,6 +77,7 @@ fn print_help() {
          scaling    crossbar-count scaling study (§4.3)\n  \
          simulate   discrete-event simulation of either deployment\n  \
          netsim     packet-level contention-aware fabric simulation (E9)\n  \
+         tune       hybrid operating-point autotuner, emits BENCH_hybrid.json (E11)\n  \
          perf       hot-kernel perf baseline, emits BENCH_perf.json (E10)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts\n  \
          area       silicon-area report for both accelerator presets\n  \
@@ -295,6 +301,96 @@ fn cmd_netsim(argv: &[String]) -> Result<()> {
     ]);
     t.row(&["total queue wait".into(), report.queue_wait.to_string(), "-".into()]);
     t.print();
+    Ok(())
+}
+
+fn cmd_tune(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("tune", "hybrid operating-point autotuner (E11)")
+        .opt("dataset", "all | taxi | a Table 2 dataset (full grid detail)", Some("all"))
+        .opt("cap", "max materialized sample nodes", Some("2000"))
+        .opt("threads", "sweep workers (0 = all cores)", Some("0"))
+        .opt("refine", "netsim cross-checks of the best points", Some("3"))
+        .opt("json", "sweep artifact path (sweep mode only)", None);
+    let args = cmd.parse(argv)?;
+    let cap = args.usize_or("cap", 2_000)?;
+    let refine = args.usize_or("refine", 3)?;
+    let threads = match args.usize_or("threads", 0)? {
+        0 => ima_gnn::par::available_threads(),
+        n => n,
+    };
+
+    let dataset = args.get_or("dataset", "all").to_string();
+    if dataset != "all" {
+        if args.get("json").is_some() {
+            return Err(Error::Usage(
+                "--json writes the full-sweep artifact; drop --dataset to use it".into(),
+            ));
+        }
+        // Single-target deep dive: print every grid point, mark the
+        // frontier and the argmin.
+        let (name, nodes, model, sample) = hybrid_target(&dataset, cap)?;
+        let tuner = Autotuner::new(
+            &model,
+            &sample,
+            nodes,
+            HybridSweep::paper_grid(),
+            TunerConfig {
+                netsim_refine: refine,
+                netsim_nodes_cap: cap,
+                ..Default::default()
+            },
+        )?;
+        let out = tuner.explore_with_threads(threads)?;
+        let mut t = Table::new(
+            format!("E11 — {name} (N={nodes}), full grid"),
+            &["Operating point", "Latency", "Energy", "Device power", "Intra-edge", "Rank"],
+        );
+        for (i, e) in out.evaluated.iter().enumerate() {
+            let rank = if i == out.best {
+                "best"
+            } else if out.pareto.contains(&i) {
+                "pareto"
+            } else {
+                ""
+            };
+            t.row(&[
+                e.point.label(),
+                e.score.latency.to_string(),
+                e.score.energy.to_string(),
+                e.score.per_device_power.to_string(),
+                ima_gnn::report::pct(e.facts.intra_fraction),
+                rank.into(),
+            ]);
+        }
+        t.print();
+        let best = out.best_point();
+        println!("argmin: {} at {}", best.point.label(), best.score.latency);
+        if let Some(c) = &best.simulated {
+            println!(
+                "netsim cross-check @ N={}: simulated {} vs analytic {}",
+                c.nodes, c.simulated, c.analytic
+            );
+        }
+        return Ok(());
+    }
+
+    let sweep = HybridSweep::run_configured(cap, threads, refine)?;
+    sweep.render().print();
+    let wins = sweep.hybrid_wins();
+    match wins.as_slice() {
+        [] => println!("no dataset where the tuned hybrid beats both pure settings"),
+        some => {
+            let names: Vec<&str> = some.iter().map(|r| r.dataset.as_str()).collect();
+            println!(
+                "tuned semi-decentralized beats both pure settings on: {} \
+                 (the conclusion's hybrid case, demonstrated)",
+                names.join(", ")
+            );
+        }
+    }
+    let path = args.get_or("json", "BENCH_hybrid.json").to_string();
+    std::fs::write(&path, sweep.to_json())?;
+    println!("wrote {path}");
     Ok(())
 }
 

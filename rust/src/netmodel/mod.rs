@@ -381,12 +381,43 @@ impl NetModel {
     /// level stays decentralized (heads exchange boundary data with
     /// adjacent heads over L_n).
     pub fn semi_latency(&self, topo: Topology, head_capacity: f64) -> NetLatency {
+        self.semi_latency_clustered(topo, head_capacity, 1.0)
+    }
+
+    /// Boundary-aware Eq. (4) (E11): a real clustering keeps only a
+    /// fraction `intra_fraction` of each device's cₛ exchanges inside the
+    /// cluster; the remaining boundary neighbors are reached through a
+    /// border relay (two L_c hops instead of one), so the per-exchange hop
+    /// cost scales by `2 − f`.  `f = 1` recovers the paper's Eq. (4).
+    pub fn communicate_latency_clustered(
+        &self,
+        topo: Topology,
+        intra_fraction: f64,
+    ) -> Time {
+        let beta = 2.0 - intra_fraction.clamp(0.0, 1.0);
+        (self.intra.setup()
+            + self.intra.hop(self.message_bytes) * (topo.cluster_size as f64 * beta))
+            * 2.0
+    }
+
+    /// Boundary-aware E8 hybrid (E11): heads exchange boundary embeddings
+    /// with adjacent heads, and the volume of that exchange grows with the
+    /// cut — member↔head up/down stays 2 transfers, the head↔head phase
+    /// costs `2·(2 − f)` transfers.  `f = 1` recovers [`Self::semi_latency`]
+    /// (4 transfers total).
+    pub fn semi_latency_clustered(
+        &self,
+        topo: Topology,
+        head_capacity: f64,
+        intra_fraction: f64,
+    ) -> NetLatency {
         let b = &self.breakdown;
         let cs = topo.cluster_size.max(1) as f64;
         let h = head_capacity.max(1.0);
+        let f = intra_fraction.clamp(0.0, 1.0);
         let compute = (b.t1 + b.t2 + b.t3) * ((cs - 1.0).max(1.0) / h);
         // members↔head (concurrent, V2X) + head↔head boundary exchange.
-        let communicate = self.inter.transfer(self.message_bytes) * 4.0;
+        let communicate = self.inter.transfer(self.message_bytes) * (2.0 + 2.0 * (2.0 - f));
         NetLatency { compute, communicate }
     }
 }
@@ -605,6 +636,52 @@ mod tests {
         // per-graph communication energy is far higher decentralized
         assert!(dm > cm, "dec comm {dm} must exceed cent comm {cm}");
         assert!(dc.as_j() > 0.0 && cm.as_j() > 0.0);
+    }
+
+    /// E11: the boundary-aware variants degenerate to Eqs. (4)/E8 at
+    /// `f = 1` and degrade monotonically as the clustering's cut grows.
+    #[test]
+    fn clustered_variants_degenerate_and_are_monotone_in_f() {
+        let m = model();
+        let topo = Topology::taxi();
+        // f = 1 recovers the closed forms exactly.
+        assert_eq!(
+            m.communicate_latency_clustered(topo, 1.0),
+            m.communicate_latency(Setting::Decentralized, topo)
+        );
+        let semi = m.semi_latency(topo, 10.0);
+        let semi_f1 = m.semi_latency_clustered(topo, 10.0, 1.0);
+        assert_eq!(semi_f1.compute, semi.compute);
+        assert_eq!(semi_f1.communicate, semi.communicate);
+        // f = 0: every exchange relays (2 hops) — dec comm doubles minus
+        // the setup term; semi boundary phase doubles (4 → 6 transfers).
+        let f0 = m.communicate_latency_clustered(topo, 0.0);
+        let f1 = m.communicate_latency_clustered(topo, 1.0);
+        assert!(f0 > f1);
+        assert_close(
+            (f0 - f1).as_s(),
+            (m.intra.hop(m.message_bytes) * topo.cluster_size as f64 * 2.0).as_s(),
+            1e-12,
+        );
+        let s0 = m.semi_latency_clustered(topo, 10.0, 0.0);
+        assert_close(
+            s0.communicate.as_s(),
+            (m.inter.transfer(m.message_bytes) * 6.0).as_s(),
+            1e-12,
+        );
+        // Monotone: a better clustering never costs latency.
+        let mut prev_dec = f0;
+        let mut prev_semi = s0.communicate;
+        for f in [0.25, 0.5, 0.75, 1.0] {
+            let d = m.communicate_latency_clustered(topo, f);
+            let s = m.semi_latency_clustered(topo, 10.0, f).communicate;
+            assert!(d <= prev_dec && s <= prev_semi, "f={f}");
+            prev_dec = d;
+            prev_semi = s;
+        }
+        // Out-of-range fractions clamp instead of corrupting the model.
+        assert_eq!(m.communicate_latency_clustered(topo, 7.0), f1);
+        assert_eq!(m.communicate_latency_clustered(topo, -3.0), f0);
     }
 
     /// E8: the semi-decentralized hybrid beats decentralized communication

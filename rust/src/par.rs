@@ -77,6 +77,20 @@ where
     par_map(items, available_threads(), f)
 }
 
+/// Fallible [`par_map`]: runs every item (no short-circuit — workers are
+/// already in flight), then returns the first error in *item order* or
+/// the full result vector.  The sweep drivers (Fig. 8, E9, E11) share
+/// this instead of each re-collecting `Vec<Result<_>>`.
+pub fn par_try_map<T, R, E, F>(items: &[T], threads: usize, f: F) -> std::result::Result<Vec<R>, E>
+where
+    T: Sync,
+    R: Send,
+    E: Send,
+    F: Fn(&T) -> std::result::Result<R, E> + Sync,
+{
+    par_map(items, threads, f).into_iter().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +131,17 @@ mod tests {
         assert_eq!(out.iter().filter(|r| r.is_err()).count(), 1);
         assert!(out[13].is_err());
         assert_eq!(out[12], Ok(12));
+    }
+
+    #[test]
+    fn try_map_returns_first_error_in_item_order() {
+        let items: Vec<i32> = (0..20).collect();
+        let ok: Result<Vec<i32>, String> = par_try_map(&items, 4, |&x| Ok(x * 2));
+        assert_eq!(ok.unwrap()[19], 38);
+        let err: Result<Vec<i32>, String> =
+            par_try_map(&items, 4, |&x| if x >= 13 { Err(format!("bad {x}")) } else { Ok(x) });
+        // Items 13..19 all fail; the *earliest* failing item wins.
+        assert_eq!(err.unwrap_err(), "bad 13");
     }
 
     #[test]

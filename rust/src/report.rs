@@ -202,6 +202,11 @@ impl BarSeries {
     }
 }
 
+/// Format a 0–1 fraction as a percentage for table cells (`93.8%`).
+pub fn pct(fraction: f64) -> String {
+    format!("{:.1}%", fraction * 100.0)
+}
+
 /// Format a speedup factor the way the paper quotes them (`~790×`).
 pub fn speedup(factor: f64) -> String {
     if factor >= 100.0 {
@@ -285,5 +290,12 @@ mod tests {
         assert_eq!(speedup(789.6), "~790×");
         assert_eq!(speedup(18.04), "~18.0×");
         assert_eq!(speedup(5.0), "~5.00×");
+    }
+
+    #[test]
+    fn pct_formats_fractions() {
+        assert_eq!(pct(0.9375), "93.8%");
+        assert_eq!(pct(1.0), "100.0%");
+        assert_eq!(pct(0.0), "0.0%");
     }
 }

@@ -1,0 +1,186 @@
+//! Integration: the E11 autotuner's selection is machine-verified against
+//! exhaustive brute force.
+//!
+//! The explorer (`autotune::Autotuner::explore`) enumerates, scores in
+//! parallel, refines and ranks; these tests re-enumerate the same grids
+//! with plain nested loops, score every candidate through the public
+//! [`Autotuner::score`] entry point, take the argmin by hand (first point
+//! wins ties) and require the explorer to agree exactly — for both the
+//! analytic and the packet-level netsim backends, plus the degenerate
+//! grids (single point, centralized-only).
+
+use ima_gnn::autotune::{
+    dominates, Autotuner, Backend, EvaluatedPoint, OperatingPoint, Partitioner, SettingKind,
+    TuneGrid, TunerConfig,
+};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::graph::generate;
+use ima_gnn::netmodel::NetModel;
+use ima_gnn::netsim::NetSimConfig;
+
+fn model() -> NetModel {
+    NetModel::paper(&GnnWorkload::taxi()).unwrap()
+}
+
+/// Independent enumeration of `grid` in canonical order: plain nested
+/// loops, no call into `TuneGrid::points`.
+fn enumerate_by_hand(grid: &TuneGrid) -> Vec<OperatingPoint> {
+    let mut pts = Vec::new();
+    for &setting in &grid.settings {
+        match setting {
+            SettingKind::Centralized => pts.push(OperatingPoint::centralized()),
+            SettingKind::Semi => {
+                for &cs in &grid.cluster_sizes {
+                    for &h in &grid.head_capacities {
+                        for &p in &grid.partitioners {
+                            pts.push(OperatingPoint::semi(cs, h, p));
+                        }
+                    }
+                }
+            }
+            SettingKind::Decentralized => {
+                for &cs in &grid.cluster_sizes {
+                    for &p in &grid.partitioners {
+                        pts.push(OperatingPoint::decentralized(cs, p));
+                    }
+                }
+            }
+        }
+    }
+    pts
+}
+
+/// Brute-force argmin over `grid` through the public scoring entry point:
+/// strict `<` keeps the earliest point on ties.
+fn brute_force_argmin(tuner: &Autotuner<'_>, grid: &TuneGrid) -> EvaluatedPoint {
+    let mut best: Option<EvaluatedPoint> = None;
+    for p in enumerate_by_hand(grid) {
+        let e = tuner.score(&p).unwrap();
+        match &best {
+            None => best = Some(e),
+            Some(b) if e.score.latency < b.score.latency => best = Some(e),
+            _ => {}
+        }
+    }
+    best.expect("grid is non-empty")
+}
+
+#[test]
+fn analytic_argmin_equals_brute_force() {
+    let m = model();
+    let g = generate::grid(10, 10).unwrap();
+    let grid = TuneGrid::full(&[4, 5, 10, 20], &[2.0, 8.0, 16.0]);
+    let tuner =
+        Autotuner::new(&m, &g, 5_000, grid.clone(), TunerConfig::default()).unwrap();
+
+    let want = brute_force_argmin(&tuner, &grid);
+    for threads in [1, 4] {
+        let out = tuner.explore_with_threads(threads).unwrap();
+        let got = out.best_point();
+        assert_eq!(got.point, want.point, "threads={threads}");
+        assert_eq!(got.score, want.score, "threads={threads}");
+        assert_eq!(got.facts, want.facts, "threads={threads}");
+        // The explorer evaluated exactly the hand-enumerated grid, in
+        // the same order.
+        let hand = enumerate_by_hand(&grid);
+        assert_eq!(out.evaluated.len(), hand.len());
+        for (e, p) in out.evaluated.iter().zip(&hand) {
+            assert_eq!(e.point, *p);
+        }
+    }
+}
+
+#[test]
+fn netsim_argmin_equals_brute_force() {
+    let m = model();
+    let g = generate::ring(60).unwrap();
+    let grid = TuneGrid::full(&[4, 6], &[2.0, 4.0]);
+    let cfg = TunerConfig {
+        backend: Backend::Netsim(NetSimConfig::default()),
+        netsim_nodes_cap: 128,
+        ..Default::default()
+    };
+    let tuner = Autotuner::new(&m, &g, 120, grid.clone(), cfg).unwrap();
+
+    let want = brute_force_argmin(&tuner, &grid);
+    let out = tuner.explore_with_threads(2).unwrap();
+    assert_eq!(out.best_point().point, want.point);
+    assert_eq!(out.best_point().score, want.score);
+
+    // A congested fabric must still agree with its own brute force (the
+    // contention changes the scores, not the selection contract).
+    let congested = TunerConfig {
+        backend: Backend::Netsim(NetSimConfig { rx_ports: Some(2), ..Default::default() }),
+        netsim_nodes_cap: 128,
+        ..Default::default()
+    };
+    let tuner = Autotuner::new(&m, &g, 120, grid.clone(), congested).unwrap();
+    let want = brute_force_argmin(&tuner, &grid);
+    let out = tuner.explore_with_threads(1).unwrap();
+    assert_eq!(out.best_point().point, want.point);
+    assert_eq!(out.best_point().score, want.score);
+}
+
+#[test]
+fn degenerate_grids_return_their_single_point() {
+    let m = model();
+    let g = generate::ring(24).unwrap();
+
+    // Centralized-only: no cluster knobs needed at all.
+    let grid = TuneGrid {
+        settings: vec![SettingKind::Centralized],
+        cluster_sizes: vec![],
+        head_capacities: vec![],
+        partitioners: vec![],
+    };
+    let tuner = Autotuner::new(&m, &g, 1_000, grid, TunerConfig::default()).unwrap();
+    let out = tuner.explore().unwrap();
+    assert_eq!(out.evaluated.len(), 1);
+    assert_eq!(out.best, 0);
+    assert_eq!(out.pareto, vec![0]);
+    assert_eq!(out.best_point().point, OperatingPoint::centralized());
+
+    // A single semi point — for both backends.
+    let grid = TuneGrid {
+        settings: vec![SettingKind::Semi],
+        cluster_sizes: vec![6],
+        head_capacities: vec![4.0],
+        partitioners: vec![Partitioner::Locality],
+    };
+    for backend in [Backend::Analytic, Backend::Netsim(NetSimConfig::default())] {
+        let cfg = TunerConfig { backend, netsim_nodes_cap: 64, ..Default::default() };
+        let tuner = Autotuner::new(&m, &g, 24, grid.clone(), cfg).unwrap();
+        let out = tuner.explore().unwrap();
+        assert_eq!(out.evaluated.len(), 1);
+        assert_eq!(
+            out.best_point().point,
+            OperatingPoint::semi(6, 4.0, Partitioner::Locality)
+        );
+        assert_eq!(out.pareto, vec![0]);
+        // ... and it equals its own one-point brute force.
+        assert_eq!(out.best_point().score, brute_force_argmin(&tuner, &grid).score);
+    }
+}
+
+#[test]
+fn frontier_covers_every_evaluated_point() {
+    let m = model();
+    let g = generate::grid(8, 8).unwrap();
+    let grid = TuneGrid::full(&[4, 8, 16], &[2.0, 10.0]);
+    let tuner = Autotuner::new(&m, &g, 2_000, grid, TunerConfig::default()).unwrap();
+    let out = tuner.explore().unwrap();
+    assert!(out.pareto.contains(&out.best), "argmin must sit on the frontier");
+    for (i, e) in out.evaluated.iter().enumerate() {
+        if out.pareto.contains(&i) {
+            continue;
+        }
+        assert!(
+            out.pareto.iter().any(|&j| {
+                let f = &out.evaluated[j].score;
+                dominates(f, &e.score) || *f == e.score
+            }),
+            "point {i} ({}) escapes the frontier",
+            e.point.label()
+        );
+    }
+}

@@ -4,6 +4,7 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
+use ima_gnn::autotune::{OperatingPoint, Partitioner};
 use ima_gnn::coordinator::{
     CentralizedLeader, GcnLayerBinding, InferenceService, Request, Router, SemiCoordinator,
 };
@@ -156,6 +157,62 @@ fn semi_decentralized_round_covers_every_node() {
         assert_eq!(r.head, node / 8);
         assert_eq!(r.output.len(), 32);
         assert!(r.modeled.as_us() > 0.0);
+    }
+}
+
+/// E11: a semi-decentralized round built from a tuned operating point
+/// covers every node and is bit-identical to the round of a
+/// hand-constructed coordinator with the same parameters.
+#[test]
+fn from_operating_point_round_is_bit_identical_to_hand_construction() {
+    if !pjrt_ready() {
+        return;
+    }
+    let svc = service();
+    let dir = artifact_dir();
+    let b = binding(&dir);
+    let graph = generate::regular(48, 6, 3).unwrap();
+    let mut rng = Rng::new(11);
+    let weights: Vec<f32> =
+        (0..b.feature * b.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    let feature = b.feature;
+    let workload = GnnWorkload::gcn("semi-tuned", 64, 8);
+
+    let point = OperatingPoint::semi(8, 10.0, Partitioner::FixedSize);
+    let tuned = SemiCoordinator::from_operating_point(
+        binding(&dir),
+        graph.clone(),
+        weights.clone(),
+        &workload,
+        &point,
+    )
+    .unwrap();
+    let hand = SemiCoordinator::new(
+        b,
+        graph,
+        fixed_size(48, 8).unwrap(),
+        weights,
+        &workload,
+    )
+    .unwrap()
+    .with_head_capacity(10.0)
+    .unwrap();
+    assert_eq!(tuned.num_heads(), hand.num_heads());
+    assert_eq!(tuned.head_capacity(), 10.0);
+
+    let features = FeatureMatrix::from_fn(48, feature, |_, _| rng.f64_in(0.0, 1.0) as f32);
+    let a = tuned.round(&svc, &features).unwrap();
+    let c = hand.round(&svc, &features).unwrap();
+    assert_eq!(a.len(), 48);
+    assert_eq!(c.len(), 48);
+    for (node, (ra, rc)) in a.iter().zip(&c).enumerate() {
+        // Every node covered, once, in order — and the embeddings (plus
+        // the modeled latency) are bit-identical across constructors.
+        assert_eq!(ra.node, node);
+        assert_eq!(rc.node, node);
+        assert_eq!(ra.head, rc.head);
+        assert_eq!(ra.output, rc.output, "node {node} diverged");
+        assert_eq!(ra.modeled, rc.modeled);
     }
 }
 
