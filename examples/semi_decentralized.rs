@@ -38,7 +38,7 @@ fn main() -> ima_gnn::Result<()> {
     let weights_f: Vec<f32> =
         (0..feature * hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
 
-    let semi = SemiCoordinator::new(
+    let mut semi = SemiCoordinator::new(
         binding,
         graph,
         clustering.clone(),

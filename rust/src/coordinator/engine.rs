@@ -1,0 +1,645 @@
+//! The shared serving engine (DESIGN.md §10).
+//!
+//! One implementation of the round pipeline every deployment shape runs
+//! on: per-shard [`FeatureStore`] double-buffering, round-constant tensor
+//! caches (the weight tensor is built once at construction, each shard's
+//! feature-table tensor once per `end_round` barrier), batch padding to
+//! the artifact's static shapes, the single PJRT funnel through
+//! [`InferenceService`], and a [`LatencyProvider`] that replaces the
+//! per-deployment `simulated_latency` fields.  The leader and the semi
+//! coordinator are thin shapes over this engine; the decentralized
+//! worker pool consumes the same [`LatencyProvider`]
+//! (`run_decentralized_via`).
+//!
+//! Sharding: the engine executes a [`ShardPlan`], so graphs larger than
+//! the artifact's `table` dimension serve through multiple table-sized
+//! shards with halo-replicated boundary rows.  On a single-shard plan the
+//! pipeline is bit-identical to the unsharded seed path (asserted in
+//! `rust/tests/sharded_serving.rs`).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::cores::{FeatureMatrix, GnnWorkload};
+use crate::error::{Error, Result};
+use crate::graph::{Csr, NeighborSampler, ShardPlan};
+use crate::netmodel::{NetModel, Setting, Topology};
+use crate::runtime::{ArtifactSpec, Tensor};
+use crate::units::Time;
+
+use super::leader::CentralizedLeader;
+use super::semi::SemiCoordinator;
+use super::service::InferenceService;
+use super::state::FeatureStore;
+
+/// Shape binding of a `gcn_layer_*` artifact (from its manifest config).
+#[derive(Debug, Clone)]
+pub struct GcnLayerBinding {
+    pub artifact: String,
+    pub batch: usize,
+    pub sample: usize,
+    pub feature: usize,
+    pub hidden: usize,
+    pub table: usize,
+}
+
+impl GcnLayerBinding {
+    pub fn from_spec(spec: &ArtifactSpec) -> Result<GcnLayerBinding> {
+        let cfg = |k: &str| -> Result<usize> {
+            spec.config
+                .get(k)
+                .map(|v| *v as usize)
+                .ok_or_else(|| Error::Coordinator(format!("{}: missing config `{k}`", spec.name)))
+        };
+        Ok(GcnLayerBinding {
+            artifact: spec.name.clone(),
+            batch: cfg("batch")?,
+            sample: cfg("sample")?,
+            feature: cfg("feature")?,
+            hidden: cfg("hidden")?,
+            table: cfg("table")?,
+        })
+    }
+
+    /// The deterministic neighbor sampler every deployment shares (seed 7
+    /// — part of the serving determinism contract, DESIGN.md §10).
+    pub fn sampler(&self) -> NeighborSampler {
+        NeighborSampler::new(self.sample, 7)
+    }
+}
+
+/// Where the modeled per-round edge latency attached to responses comes
+/// from — one enum replacing the three per-deployment `simulated_latency`
+/// fields the seed coordinators carried.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LatencyProvider {
+    /// Closed-form paper equations (Eq. 1 / E8).
+    Analytic,
+    /// Boundary-aware clustered variants (E11): the hop terms scale with
+    /// the clustering's intra-edge fraction.  `intra_fraction = 1`
+    /// coincides with [`LatencyProvider::Analytic`].
+    Clustered { intra_fraction: f64 },
+    /// A packet-level `netsim` round completion, computed once when the
+    /// fabric is configured.
+    Netsim(Time),
+}
+
+impl LatencyProvider {
+    /// Centralized round latency (Eq. 1; the gather has no cluster
+    /// structure, so `Clustered` coincides with `Analytic`).
+    pub fn centralized(&self, model: &NetModel, topo: Topology) -> Time {
+        match *self {
+            LatencyProvider::Netsim(t) => t,
+            LatencyProvider::Analytic | LatencyProvider::Clustered { .. } => {
+                model.latency(Setting::Centralized, topo).total()
+            }
+        }
+    }
+
+    /// Decentralized per-device round latency (Eq. 1 with the Eq. 4
+    /// exchange; `Clustered` applies the boundary-relay term).
+    pub fn decentralized(&self, model: &NetModel, topo: Topology) -> Time {
+        match *self {
+            LatencyProvider::Netsim(t) => t,
+            LatencyProvider::Analytic => model.latency(Setting::Decentralized, topo).total(),
+            LatencyProvider::Clustered { intra_fraction } => {
+                model.compute_latency(Setting::Decentralized, topo)
+                    + model.communicate_latency_clustered(topo, intra_fraction)
+            }
+        }
+    }
+
+    /// Semi-decentralized round latency (E8 / its clustered E11 variant).
+    pub fn semi(&self, model: &NetModel, topo: Topology, head_capacity: f64) -> Time {
+        match *self {
+            LatencyProvider::Netsim(t) => t,
+            LatencyProvider::Analytic => model.semi_latency(topo, head_capacity).total(),
+            LatencyProvider::Clustered { intra_fraction } => model
+                .semi_latency_clustered(topo, head_capacity, intra_fraction)
+                .total(),
+        }
+    }
+}
+
+/// One assembled per-shard execution: the artifact's `x_self` / `nbr_idx`
+/// inputs, padded to the static batch, plus which requested nodes the
+/// batch answers.  Pure data — tests compare assembled inputs bit-for-bit
+/// without a PJRT backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardBatch {
+    pub shard: usize,
+    /// The requested nodes this batch answers (unpadded, serve order).
+    pub nodes: Vec<usize>,
+    /// Positions into the original request slice, parallel to `nodes`.
+    pub positions: Vec<usize>,
+    /// `[batch × feature]` gathered self-features (padded).
+    pub x_self: Vec<f32>,
+    /// `[batch × sample]` local-slot neighbor indices (padded, -1 = none).
+    pub nbr_idx: Vec<i32>,
+}
+
+/// Outputs of one engine execution over a request list.
+#[derive(Debug, Clone)]
+pub struct EngineOutput {
+    /// Per requested node, in request order: the layer output.
+    pub outputs: Vec<Vec<f32>>,
+    /// Total wall-clock of the PJRT executions that served the request.
+    pub wall: Duration,
+    /// PJRT batches executed (≥ 1; grows with shard spread).
+    pub batches: u64,
+}
+
+/// The shared round engine (module docs).
+pub struct RoundEngine {
+    binding: GcnLayerBinding,
+    plan: ShardPlan,
+    /// One double-buffered store per shard, `table` rows each.
+    stores: Vec<FeatureStore>,
+    /// Round-invariant weight tensor, built once.
+    w_tensor: Tensor,
+    /// Per-shard feature-table tensors, rebuilt only at the `end_round`
+    /// barrier (`None` until the first barrier).
+    table_tensors: Vec<Option<Tensor>>,
+    /// Tensor-cache misses: how often a table tensor was actually built
+    /// (the analogue of `AggregationCore::programs()` — serving batches
+    /// must not bump this).
+    table_builds: u64,
+    served_batches: u64,
+}
+
+impl RoundEngine {
+    pub fn new(
+        binding: GcnLayerBinding,
+        plan: ShardPlan,
+        weights: Vec<f32>,
+    ) -> Result<RoundEngine> {
+        if plan.table() != binding.table || plan.sample() != binding.sample {
+            return Err(Error::Coordinator(format!(
+                "shard plan ({} rows, sample {}) does not match artifact binding \
+                 ({} rows, sample {})",
+                plan.table(),
+                plan.sample(),
+                binding.table,
+                binding.sample
+            )));
+        }
+        if weights.len() != binding.feature * binding.hidden {
+            return Err(Error::Coordinator(format!(
+                "weights must be {}x{}",
+                binding.feature, binding.hidden
+            )));
+        }
+        let stores = (0..plan.num_shards())
+            .map(|_| FeatureStore::new(binding.table, binding.feature))
+            .collect();
+        let table_tensors = vec![None; plan.num_shards()];
+        let w_tensor = Tensor::f32(&[binding.feature, binding.hidden], weights)?;
+        Ok(RoundEngine {
+            binding,
+            plan,
+            stores,
+            w_tensor,
+            table_tensors,
+            table_builds: 0,
+            served_batches: 0,
+        })
+    }
+
+    pub fn binding(&self) -> &GcnLayerBinding {
+        &self.binding
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.plan.num_nodes()
+    }
+
+    /// Stage one node's next-round features: its home member slot plus
+    /// every halo replica (visible after [`RoundEngine::end_round`]).
+    pub fn upload(&mut self, node: usize, features: &[f32]) -> Result<()> {
+        if node >= self.plan.num_nodes() {
+            return Err(Error::Coordinator(format!("node {node} not in graph")));
+        }
+        let (s, slot) = self.plan.home(node);
+        self.stores[s].write(slot, features)?;
+        for &(hs, hslot) in self.plan.halo_sites(node) {
+            self.stores[hs].write(hslot, features)?;
+        }
+        Ok(())
+    }
+
+    /// A node's current (front, home-slot) features.
+    pub fn read(&self, node: usize) -> Result<&[f32]> {
+        if node >= self.plan.num_nodes() {
+            return Err(Error::Coordinator(format!("node {node} not in graph")));
+        }
+        let (s, slot) = self.plan.home(node);
+        self.stores[s].read(slot)
+    }
+
+    /// Round barrier: every shard's staged uploads become the serving
+    /// state and its round-constant table tensor is rebuilt here (once per
+    /// shard per round, never per served batch).
+    pub fn end_round(&mut self) {
+        let b = &self.binding;
+        let all: Vec<usize> = (0..b.table).collect();
+        for (s, store) in self.stores.iter_mut().enumerate() {
+            store.swap();
+            let x_table = store.gather(&all).expect("table rows are in range");
+            self.table_tensors[s] =
+                Some(Tensor::f32(&[b.table, b.feature], x_table).expect("shape is static"));
+            self.table_builds += 1;
+        }
+    }
+
+    /// Load a full feature matrix and run the round barrier — the semi
+    /// round's per-call state load.
+    pub fn set_features(&mut self, features: &FeatureMatrix) -> Result<()> {
+        if features.rows() != self.plan.num_nodes() {
+            return Err(Error::Coordinator("feature rows != nodes".into()));
+        }
+        if features.cols() != self.binding.feature {
+            return Err(Error::Coordinator("feature width mismatch".into()));
+        }
+        for node in 0..features.rows() {
+            self.upload(node, features.row(node))?;
+        }
+        self.end_round();
+        Ok(())
+    }
+
+    /// Current round number (bumped by every barrier).
+    pub fn version(&self) -> u64 {
+        self.stores.first().map(FeatureStore::version).unwrap_or(0)
+    }
+
+    /// Tensor-cache misses: table tensors built so far.  One increment
+    /// per shard per `end_round`; serving any number of batches in
+    /// between leaves it untouched (asserted in tests).
+    pub fn table_builds(&self) -> u64 {
+        self.table_builds
+    }
+
+    pub fn served_batches(&self) -> u64 {
+        self.served_batches
+    }
+
+    /// The cached table tensor of one shard (`None` before the first
+    /// round barrier).
+    pub fn table_tensor(&self, shard: usize) -> Option<&Tensor> {
+        self.table_tensors.get(shard).and_then(Option::as_ref)
+    }
+
+    /// Split a request list into padded per-shard artifact batches:
+    /// requests group by home shard (ascending shard id, request order
+    /// within a shard), chunk to the static batch size and pad by
+    /// repeating the last entry — exactly the seed pipeline, per shard.
+    pub fn assemble(&self, nodes: &[usize]) -> Result<Vec<ShardBatch>> {
+        let b = &self.binding;
+        if nodes.is_empty() {
+            return Err(Error::Coordinator("empty batch".into()));
+        }
+        for &v in nodes {
+            if v >= self.plan.num_nodes() {
+                return Err(Error::Coordinator(format!("node {v} not in graph")));
+            }
+        }
+        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, &v) in nodes.iter().enumerate() {
+            groups.entry(self.plan.home(v).0).or_default().push(i);
+        }
+        let mut out = Vec::new();
+        for (s, positions) in groups {
+            let shard = &self.plan.shards()[s];
+            let store = &self.stores[s];
+            for chunk in positions.chunks(b.batch) {
+                let mut slots: Vec<usize> =
+                    chunk.iter().map(|&i| self.plan.home(nodes[i]).1).collect();
+                let pad = *slots.last().expect("chunks are non-empty");
+                slots.resize(b.batch, pad);
+                let x_self = store.gather(&slots)?;
+                let mut nbr_idx = Vec::with_capacity(b.batch * b.sample);
+                for &slot in &slots {
+                    nbr_idx.extend_from_slice(shard.member_nbr_row(slot, b.sample));
+                }
+                out.push(ShardBatch {
+                    shard: s,
+                    nodes: chunk.iter().map(|&i| nodes[i]).collect(),
+                    positions: chunk.to_vec(),
+                    x_self,
+                    nbr_idx,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute one request list through the PJRT funnel: assemble,
+    /// run every shard batch against its cached round-constant tensors,
+    /// and scatter the layer outputs back into request order.
+    pub fn serve(&mut self, svc: &InferenceService, nodes: &[usize]) -> Result<EngineOutput> {
+        let batches = self.assemble(nodes)?;
+        let b = &self.binding;
+        let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); nodes.len()];
+        let mut wall = Duration::ZERO;
+        let mut served = 0u64;
+        for sb in batches {
+            // Round-constant tensors come from the end_round cache.
+            let table_tensor = self.table_tensors[sb.shard]
+                .clone()
+                .ok_or_else(|| Error::Coordinator("serve before end_round barrier".into()))?;
+            let inputs = vec![
+                Tensor::f32(&[b.batch, b.feature], sb.x_self)?,
+                Tensor::i32(&[b.batch, b.sample], sb.nbr_idx)?,
+                table_tensor,
+                self.w_tensor.clone(),
+            ];
+            let t0 = Instant::now();
+            let outs = svc.infer(&b.artifact, inputs)?;
+            wall += t0.elapsed();
+            served += 1;
+            let flat = outs
+                .first()
+                .ok_or_else(|| Error::Coordinator("artifact returned no outputs".into()))?
+                .as_f32()?;
+            for (k, &pos) in sb.positions.iter().enumerate() {
+                outputs[pos] = flat[k * b.hidden..(k + 1) * b.hidden].to_vec();
+            }
+        }
+        self.served_batches += served;
+        Ok(EngineOutput { outputs, wall, batches: served })
+    }
+}
+
+/// A decentralized deployment resolved from an operating point: the
+/// clustering plus the latency provider `run_decentralized_via` consumes
+/// (the workers hold no serving state, so there is no engine to build).
+#[derive(Debug, Clone)]
+pub struct DecentralizedPlan {
+    pub clustering: crate::graph::Clustering,
+    pub latency: LatencyProvider,
+}
+
+/// The three deployment shapes, built from one entry point so every
+/// setting's `from_operating_point` funnels through the same path.
+pub enum Deployment {
+    Centralized(CentralizedLeader),
+    Semi(SemiCoordinator),
+    Decentralized(DecentralizedPlan),
+}
+
+impl Deployment {
+    /// Build the deployment a tuned [`OperatingPoint`] describes.
+    /// `max_wait` configures the centralized batcher (ignored by the
+    /// other settings); the decentralized arm returns the clustering and
+    /// a boundary-aware [`LatencyProvider`] for `run_decentralized_via`.
+    ///
+    /// [`OperatingPoint`]: crate::autotune::OperatingPoint
+    pub fn build(
+        binding: GcnLayerBinding,
+        graph: Csr,
+        weights: Vec<f32>,
+        workload: &GnnWorkload,
+        max_wait: Duration,
+        point: &crate::autotune::OperatingPoint,
+    ) -> Result<Deployment> {
+        use crate::autotune::SettingKind;
+        match point.setting {
+            SettingKind::Centralized => Ok(Deployment::Centralized(CentralizedLeader::new(
+                binding, graph, weights, workload, max_wait,
+            )?)),
+            SettingKind::Semi => {
+                let clustering = point.partitioner.partition(&graph, point.cluster_size)?;
+                Ok(Deployment::Semi(
+                    SemiCoordinator::new(binding, graph, clustering, weights, workload)?
+                        .with_head_capacity(point.head_capacity)?,
+                ))
+            }
+            SettingKind::Decentralized => {
+                let clustering = point.partitioner.partition(&graph, point.cluster_size)?;
+                let intra_fraction = clustering.intra_edge_fraction(&graph);
+                Ok(Deployment::Decentralized(DecentralizedPlan {
+                    clustering,
+                    latency: LatencyProvider::Clustered { intra_fraction },
+                }))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::testing::{gcn_layer_binding, Rng};
+
+    fn engine(n: usize) -> RoundEngine {
+        let b = gcn_layer_binding();
+        let g = generate::regular(n, 6, 3).unwrap();
+        let plan = ShardPlan::build(&g, &b.sampler(), b.table).unwrap();
+        let w = vec![0.01f32; b.feature * b.hidden];
+        RoundEngine::new(b, plan, w).unwrap()
+    }
+
+    #[test]
+    fn construction_validates_weights_and_plan_agreement() {
+        let b = gcn_layer_binding();
+        let g = generate::regular(16, 4, 1).unwrap();
+        let plan = ShardPlan::build(&g, &b.sampler(), b.table).unwrap();
+        assert!(RoundEngine::new(b.clone(), plan.clone(), vec![0.0; 7]).is_err());
+        // A plan built for a different table/sample is rejected.
+        let other = ShardPlan::build(&g, &NeighborSampler::new(2, 7), b.table).unwrap();
+        assert!(RoundEngine::new(b.clone(), other, vec![0.0; b.feature * b.hidden]).is_err());
+        assert!(RoundEngine::new(b, plan, vec![0.0; 64 * 32]).is_ok());
+    }
+
+    #[test]
+    fn double_buffering_survives_the_per_shard_split() {
+        // 256 nodes over 64-row tables: multiple shards, several with
+        // halo rows.  Staged uploads must stay invisible until the
+        // barrier — in the home shard AND in every halo replica.
+        let mut e = engine(256);
+        assert!(e.plan().num_shards() > 1);
+        assert!(e.plan().max_halo() > 0, "a 6-regular 256-node graph must need halos");
+        e.upload(3, &vec![1.0; 64]).unwrap();
+        assert_eq!(e.read(3).unwrap()[0], 0.0);
+        for &(hs, hslot) in e.plan().halo_sites(3) {
+            assert_eq!(e.stores[hs].read(hslot).unwrap()[0], 0.0);
+        }
+        assert_eq!(e.version(), 0);
+        e.end_round();
+        assert_eq!(e.read(3).unwrap()[0], 1.0);
+        let sites: Vec<(usize, usize)> = e.plan().halo_sites(3).to_vec();
+        for (hs, hslot) in sites {
+            assert_eq!(e.stores[hs].read(hslot).unwrap()[0], 1.0, "halo replica stale");
+        }
+        // Every shard advanced its round together.
+        assert_eq!(e.version(), 1);
+        assert!(e.stores.iter().all(|s| s.version() == 1));
+    }
+
+    #[test]
+    fn table_tensor_cache_misses_only_at_the_barrier() {
+        let mut e = engine(256);
+        let shards = e.plan().num_shards() as u64;
+        assert_eq!(e.table_builds(), 0);
+        assert!(e.table_tensor(0).is_none());
+        e.end_round();
+        assert_eq!(e.table_builds(), shards);
+        // Assembling many serving batches is a pure cache hit.
+        let nodes: Vec<usize> = (0..256).collect();
+        for _ in 0..5 {
+            let batches = e.assemble(&nodes).unwrap();
+            assert!(!batches.is_empty());
+        }
+        assert_eq!(e.table_builds(), shards, "serving must not rebuild round tensors");
+        e.end_round();
+        assert_eq!(e.table_builds(), 2 * shards);
+    }
+
+    #[test]
+    fn single_shard_assembly_matches_the_seed_pipeline() {
+        // On a graph that fits one shard the assembled inputs must be
+        // bit-identical to the unsharded seed path: global-id gather +
+        // global-id neighbor sampling + last-node padding.
+        let b = gcn_layer_binding();
+        let g = generate::regular(48, 6, 3).unwrap();
+        let plan = ShardPlan::build(&g, &b.sampler(), b.table).unwrap();
+        assert!(plan.is_single_shard());
+        let mut e = RoundEngine::new(b.clone(), plan, vec![0.01; 64 * 32]).unwrap();
+        let mut rng = Rng::new(2);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for node in 0..48 {
+            let f: Vec<f32> = (0..64).map(|_| rng.f64_in(0.0, 1.0) as f32).collect();
+            e.upload(node, &f).unwrap();
+            rows.push(f);
+        }
+        e.end_round();
+
+        let nodes: Vec<usize> = vec![5, 1, 40, 7, 7];
+        let got = e.assemble(&nodes).unwrap();
+        assert_eq!(got.len(), 1);
+        let sb = &got[0];
+        assert_eq!(sb.nodes, nodes);
+        assert_eq!(sb.positions, vec![0, 1, 2, 3, 4]);
+
+        // Seed path: pad with the last node, gather rows, sample globally.
+        let mut padded = nodes.clone();
+        padded.resize(b.batch, *nodes.last().unwrap());
+        let want_x: Vec<f32> =
+            padded.iter().flat_map(|&v| rows[v].iter().copied()).collect();
+        assert_eq!(sb.x_self, want_x);
+        assert_eq!(sb.nbr_idx, b.sampler().sample_batch(&g, &padded));
+
+        // And the cached table tensor is the seed's full-table gather.
+        let table = e.table_tensor(0).unwrap().as_f32().unwrap().to_vec();
+        let mut want_table = vec![0.0f32; b.table * b.feature];
+        for (v, r) in rows.iter().enumerate() {
+            want_table[v * b.feature..(v + 1) * b.feature].copy_from_slice(r);
+        }
+        assert_eq!(table, want_table);
+    }
+
+    #[test]
+    fn assembly_splits_requests_across_shards_and_remembers_positions() {
+        let mut e = engine(256);
+        e.end_round();
+        // Mix nodes from the first and last shard.
+        let last = e.plan().num_shards() - 1;
+        let a = e.plan().shards()[0].members[0];
+        let b_node = e.plan().shards()[last].members[0];
+        let c = e.plan().shards()[0].members[1];
+        let got = e.assemble(&[a, b_node, c]).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].shard, 0);
+        assert_eq!(got[0].nodes, vec![a, c]);
+        assert_eq!(got[0].positions, vec![0, 2]);
+        assert_eq!(got[1].shard, last);
+        assert_eq!(got[1].positions, vec![1]);
+        // Out-of-range and empty requests fail loudly.
+        assert!(e.assemble(&[]).is_err());
+        assert!(e.assemble(&[999]).is_err());
+    }
+
+    #[test]
+    fn latency_provider_matches_the_closed_forms() {
+        let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+        let topo = Topology { nodes: 10_000, cluster_size: 10 };
+        let a = LatencyProvider::Analytic;
+        assert_eq!(
+            a.centralized(&model, topo),
+            model.latency(Setting::Centralized, topo).total()
+        );
+        assert_eq!(
+            a.decentralized(&model, topo),
+            model.latency(Setting::Decentralized, topo).total()
+        );
+        assert_eq!(a.semi(&model, topo, 10.0), model.semi_latency(topo, 10.0).total());
+        // Clustered at f = 1 coincides with the closed forms everywhere.
+        let c1 = LatencyProvider::Clustered { intra_fraction: 1.0 };
+        assert_eq!(c1.centralized(&model, topo), a.centralized(&model, topo));
+        assert_eq!(c1.decentralized(&model, topo), a.decentralized(&model, topo));
+        assert_eq!(c1.semi(&model, topo, 10.0), a.semi(&model, topo, 10.0));
+        // A worse clustering never speeds a round up.
+        let c0 = LatencyProvider::Clustered { intra_fraction: 0.25 };
+        assert!(c0.decentralized(&model, topo) > c1.decentralized(&model, topo));
+        assert!(c0.semi(&model, topo, 10.0) > c1.semi(&model, topo, 10.0));
+        // Netsim pins the figure verbatim.
+        let pin = LatencyProvider::Netsim(Time::ms(5.0));
+        assert_eq!(pin.centralized(&model, topo), Time::ms(5.0));
+        assert_eq!(pin.decentralized(&model, topo), Time::ms(5.0));
+        assert_eq!(pin.semi(&model, topo, 10.0), Time::ms(5.0));
+    }
+
+    #[test]
+    fn deployment_build_funnels_every_setting() {
+        use crate::autotune::{OperatingPoint, Partitioner};
+        let b = gcn_layer_binding();
+        let g = generate::regular(48, 6, 3).unwrap();
+        let w = vec![0.0f32; 64 * 32];
+        let wl = GnnWorkload::gcn("t", 64, 8);
+        let cent = Deployment::build(
+            b.clone(),
+            g.clone(),
+            w.clone(),
+            &wl,
+            Duration::ZERO,
+            &OperatingPoint::centralized(),
+        )
+        .unwrap();
+        assert!(matches!(cent, Deployment::Centralized(_)));
+        let semi = Deployment::build(
+            b.clone(),
+            g.clone(),
+            w.clone(),
+            &wl,
+            Duration::ZERO,
+            &OperatingPoint::semi(8, 10.0, Partitioner::FixedSize),
+        )
+        .unwrap();
+        match semi {
+            Deployment::Semi(s) => assert_eq!(s.head_capacity(), 10.0),
+            _ => panic!("semi point must build a semi deployment"),
+        }
+        let dec = Deployment::build(
+            b,
+            g.clone(),
+            w,
+            &wl,
+            Duration::ZERO,
+            &OperatingPoint::decentralized(8, Partitioner::FixedSize),
+        )
+        .unwrap();
+        match dec {
+            Deployment::Decentralized(p) => {
+                assert_eq!(p.clustering, crate::graph::fixed_size(48, 8).unwrap());
+                let f = p.clustering.intra_edge_fraction(&g);
+                assert_eq!(p.latency, LatencyProvider::Clustered { intra_fraction: f });
+            }
+            _ => panic!("decentralized point must build a worker plan"),
+        }
+    }
+}

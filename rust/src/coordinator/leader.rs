@@ -2,52 +2,24 @@
 //! every node's features over the inter-network link, runs the GNN on its
 //! banked accelerator and serves inference requests.
 //!
-//! The request path is: router → dynamic batcher → PJRT artifact, with the
-//! modeled edge latencies (Eqs. 3/5) accounted per response next to the
-//! measured wall-clock of the actual execution.
+//! The request path is: router → dynamic batcher → [`RoundEngine`], with
+//! the modeled edge latencies (Eqs. 3/5) accounted per response next to
+//! the measured wall-clock of the actual execution.  Graphs larger than
+//! the artifact's `table` dimension shard transparently through the
+//! engine's [`ShardPlan`] (id-order shards, halo-replicated boundaries) —
+//! the seed's "shard the graph" rejection is gone.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::cores::GnnWorkload;
 use crate::error::{Error, Result};
-use crate::graph::{Csr, NeighborSampler};
+use crate::graph::{Csr, ShardPlan};
 use crate::netmodel::{NetModel, Setting, Topology};
-use crate::runtime::{ArtifactSpec, Tensor};
 use crate::units::Time;
 
 use super::batcher::{Batch, Batcher, Request};
+use super::engine::{Deployment, GcnLayerBinding, LatencyProvider, RoundEngine};
 use super::service::InferenceService;
-use super::state::FeatureStore;
-
-/// Shape binding of a `gcn_layer_*` artifact (from its manifest config).
-#[derive(Debug, Clone)]
-pub struct GcnLayerBinding {
-    pub artifact: String,
-    pub batch: usize,
-    pub sample: usize,
-    pub feature: usize,
-    pub hidden: usize,
-    pub table: usize,
-}
-
-impl GcnLayerBinding {
-    pub fn from_spec(spec: &ArtifactSpec) -> Result<GcnLayerBinding> {
-        let cfg = |k: &str| -> Result<usize> {
-            spec.config
-                .get(k)
-                .map(|v| *v as usize)
-                .ok_or_else(|| Error::Coordinator(format!("{}: missing config `{k}`", spec.name)))
-        };
-        Ok(GcnLayerBinding {
-            artifact: spec.name.clone(),
-            batch: cfg("batch")?,
-            sample: cfg("sample")?,
-            feature: cfg("feature")?,
-            hidden: cfg("hidden")?,
-            table: cfg("table")?,
-        })
-    }
-}
 
 /// One served response.
 #[derive(Debug, Clone)]
@@ -58,27 +30,18 @@ pub struct Response {
     pub output: Vec<f32>,
     /// Modeled edge latency for this round (Eq. 1, centralized).
     pub modeled: Time,
-    /// Measured wall-clock of the PJRT execution serving this batch.
+    /// Measured wall-clock of the PJRT execution(s) serving this batch.
     pub wall: Duration,
 }
 
-/// The centralized serving coordinator.
+/// The centralized serving coordinator: a dynamic batcher over the shared
+/// round engine.
 pub struct CentralizedLeader {
-    binding: GcnLayerBinding,
     batcher: Batcher,
-    graph: Csr,
-    sampler: NeighborSampler,
-    store: FeatureStore,
+    engine: RoundEngine,
     model: NetModel,
     topo: Topology,
-    /// When set, the per-response `modeled` latency comes from a
-    /// packet-level `netsim` round instead of the closed-form Eq. (1).
-    simulated_latency: Option<Time>,
-    served_batches: u64,
-    /// §Perf: tensors that are constant within a round, rebuilt only at
-    /// the `end_round` barrier instead of per served batch.
-    w_tensor: Tensor,
-    table_tensor: Option<Tensor>,
+    latency: LatencyProvider,
 }
 
 impl CentralizedLeader {
@@ -89,43 +52,18 @@ impl CentralizedLeader {
         workload: &GnnWorkload,
         max_wait: Duration,
     ) -> Result<CentralizedLeader> {
-        if graph.num_nodes() > binding.table {
-            return Err(Error::Coordinator(format!(
-                "graph has {} nodes but artifact table holds {} (shard the graph)",
-                graph.num_nodes(),
-                binding.table
-            )));
-        }
-        if weights.len() != binding.feature * binding.hidden {
-            return Err(Error::Coordinator(format!(
-                "weights must be {}x{}",
-                binding.feature, binding.hidden
-            )));
-        }
-        let store = FeatureStore::new(binding.table, binding.feature);
         let topo = Topology { nodes: graph.num_nodes(), cluster_size: workload.neighbors.max(1) };
         let model = NetModel::paper(workload)?;
-        let w_tensor = Tensor::f32(&[binding.feature, binding.hidden], weights)?;
-        Ok(CentralizedLeader {
-            batcher: Batcher::new(binding.batch, max_wait)?,
-            sampler: NeighborSampler::new(binding.sample, 7),
-            binding,
-            graph,
-            store,
-            model,
-            topo,
-            simulated_latency: None,
-            served_batches: 0,
-            w_tensor,
-            table_tensor: None,
-        })
+        let plan = ShardPlan::build(&graph, &binding.sampler(), binding.table)?;
+        let batcher = Batcher::new(binding.batch, max_wait)?;
+        let engine = RoundEngine::new(binding, plan, weights)?;
+        Ok(CentralizedLeader { batcher, engine, model, topo, latency: LatencyProvider::Analytic })
     }
 
-    /// Build the leader a tuned [`OperatingPoint`] describes.  The
-    /// centralized setting has no cluster structure, so this validates the
-    /// point's setting and otherwise defers to [`CentralizedLeader::new`]
-    /// — the constructor exists so the serving path is configured through
-    /// the same E11 artifact for every setting.
+    /// Build the leader a tuned [`OperatingPoint`] describes, through the
+    /// same [`Deployment::build`] funnel every setting configures with —
+    /// so the serving path is driven by the same E11 artifact everywhere.
+    /// Rejects non-centralized points.
     ///
     /// [`OperatingPoint`]: crate::autotune::OperatingPoint
     pub fn from_operating_point(
@@ -142,30 +80,35 @@ impl CentralizedLeader {
                 point.label()
             )));
         }
-        CentralizedLeader::new(binding, graph, weights, workload, max_wait)
+        match Deployment::build(binding, graph, weights, workload, max_wait, point)? {
+            Deployment::Centralized(leader) => Ok(leader),
+            _ => unreachable!("a centralized point builds a centralized deployment"),
+        }
+    }
+
+    /// The engine this leader serves through (shard plan, tensor-cache
+    /// counters, per-shard state).
+    pub fn engine(&self) -> &RoundEngine {
+        &self.engine
     }
 
     /// Ingest one node's uploaded features (staged; visible after
-    /// `end_round`, the double-buffer barrier).
+    /// `end_round`, the double-buffer barrier — home slot and every halo
+    /// replica together).
     pub fn upload(&mut self, node: usize, features: &[f32]) -> Result<()> {
-        self.store.write(node, features)
+        self.engine.upload(node, features)
     }
 
-    /// Round barrier: staged uploads become the serving state; the
-    /// round-constant feature-table tensor is rebuilt here (once) rather
-    /// than per batch (§Perf).
+    /// Round barrier: staged uploads become the serving state; every
+    /// shard's round-constant feature-table tensor is rebuilt here (once)
+    /// rather than per batch (§Perf).
     pub fn end_round(&mut self) {
-        self.store.swap();
-        let b = &self.binding;
-        let all: Vec<usize> = (0..b.table).collect();
-        let x_table = self.store.gather(&all).expect("table rows are in range");
-        self.table_tensor =
-            Some(Tensor::f32(&[b.table, b.feature], x_table).expect("shape is static"));
+        self.engine.end_round();
     }
 
     /// Enqueue a request; serve a batch if one closes.
     pub fn submit(&mut self, svc: &InferenceService, req: Request) -> Result<Vec<Response>> {
-        if req.node >= self.graph.num_nodes() {
+        if req.node >= self.engine.num_nodes() {
             return Err(Error::Coordinator(format!("node {} not in graph", req.node)));
         }
         match self.batcher.push(req) {
@@ -190,8 +133,10 @@ impl CentralizedLeader {
         }
     }
 
+    /// PJRT batches executed so far (a request batch spanning several
+    /// shards costs one execution per shard touched).
     pub fn served_batches(&self) -> u64 {
-        self.served_batches
+        self.engine.served_batches()
     }
 
     /// Switch the per-response `modeled` latency from the closed-form
@@ -203,11 +148,11 @@ impl CentralizedLeader {
         &mut self,
         cfg: Option<&crate::netsim::NetSimConfig>,
     ) -> Result<()> {
-        self.simulated_latency = match cfg {
-            None => None,
+        self.latency = match cfg {
+            None => LatencyProvider::Analytic,
             Some(c) => {
                 let fabric = crate::netsim::NetSim::new(c.clone());
-                Some(
+                LatencyProvider::Netsim(
                     self.model
                         .latency_via(&fabric, Setting::Centralized, self.topo)?
                         .total(),
@@ -221,57 +166,18 @@ impl CentralizedLeader {
     /// figure when [`CentralizedLeader::use_simulated_latency`] is active,
     /// the Eq. (1) closed form otherwise.
     pub fn modeled_round_latency(&self) -> Time {
-        self.simulated_latency
-            .unwrap_or_else(|| self.model.latency(Setting::Centralized, self.topo).total())
+        self.latency.centralized(&self.model, self.topo)
     }
 
     fn serve(&mut self, svc: &InferenceService, batch: Batch) -> Result<Vec<Response>> {
-        let b = &self.binding;
-        let real = batch.requests.len();
-        // Pad short batches to the artifact's static batch dimension by
-        // repeating the last node.
-        let mut nodes = batch.nodes();
-        let pad_node = *nodes.last().ok_or_else(|| Error::Coordinator("empty batch".into()))?;
-        nodes.resize(b.batch, pad_node);
-
-        let x_self = self.store.gather(&nodes)?;
-        let nbr_idx = self.sampler.sample_batch(&self.graph, &nodes);
-        // Round-constant tensors come from the end_round cache (§Perf).
-        let table_tensor = self
-            .table_tensor
-            .clone()
-            .ok_or_else(|| Error::Coordinator("serve before end_round barrier".into()))?;
-
-        let inputs = vec![
-            Tensor::f32(&[b.batch, b.feature], x_self)?,
-            Tensor::i32(&[b.batch, b.sample], nbr_idx)?,
-            table_tensor,
-            self.w_tensor.clone(),
-        ];
-
-        let t0 = Instant::now();
-        let outputs = svc.infer(&b.artifact, inputs)?;
-        let wall = t0.elapsed();
-        self.served_batches += 1;
-
-        let out = outputs
-            .first()
-            .ok_or_else(|| Error::Coordinator("artifact returned no outputs".into()))?;
-        let flat = out.as_f32()?;
+        let nodes = batch.nodes();
+        let out = self.engine.serve(svc, &nodes)?;
         let modeled = self.modeled_round_latency();
-
         Ok(batch
             .requests
             .iter()
-            .take(real)
-            .enumerate()
-            .map(|(i, r)| Response {
-                id: r.id,
-                node: r.node,
-                output: flat[i * b.hidden..(i + 1) * b.hidden].to_vec(),
-                modeled,
-                wall,
-            })
+            .zip(out.outputs)
+            .map(|(r, output)| Response { id: r.id, node: r.node, output, modeled, wall: out.wall })
             .collect())
     }
 }
@@ -279,17 +185,10 @@ impl CentralizedLeader {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
-    use std::path::Path;
+    use crate::testing::gcn_layer_binding;
 
     fn binding() -> GcnLayerBinding {
-        let doc = r#"{"version": 1, "artifacts": [
-            {"name": "gcn_layer_small", "file": "f",
-             "inputs": [], "outputs": [],
-             "config": {"batch": 16, "sample": 4, "feature": 64,
-                        "hidden": 32, "table": 64}}]}"#;
-        let m = Manifest::parse(Path::new("/x"), doc).unwrap();
-        GcnLayerBinding::from_spec(m.get("gcn_layer_small").unwrap()).unwrap()
+        gcn_layer_binding()
     }
 
     fn leader() -> CentralizedLeader {
@@ -313,6 +212,8 @@ mod tests {
 
     #[test]
     fn binding_requires_all_keys() {
+        use crate::runtime::Manifest;
+        use std::path::Path;
         let doc = r#"{"version": 1, "artifacts": [
             {"name": "m", "file": "f", "inputs": [], "outputs": [],
              "config": {"batch": 16}}]}"#;
@@ -321,17 +222,22 @@ mod tests {
     }
 
     #[test]
-    fn rejects_oversized_graphs_and_bad_weights() {
+    fn oversized_graphs_shard_instead_of_erroring() {
+        // The seed rejected any graph wider than the table ("shard the
+        // graph"); the engine now does the sharding.
         let g = crate::graph::generate::regular(100, 4, 1).unwrap(); // > table 64
-        let r = CentralizedLeader::new(
+        let l = CentralizedLeader::new(
             binding(),
             g,
             vec![0.0; 64 * 32],
             &GnnWorkload::gcn("t", 64, 4),
             Duration::ZERO,
-        );
-        assert!(r.is_err());
+        )
+        .unwrap();
+        assert!(l.engine().plan().num_shards() > 1);
+        assert!(l.engine().plan().max_slots() <= 64);
 
+        // Bad weight arity still fails loudly.
         let g = crate::graph::generate::regular(10, 2, 1).unwrap();
         let r = CentralizedLeader::new(
             binding(),
@@ -395,12 +301,13 @@ mod tests {
     fn upload_respects_double_buffering() {
         let mut l = leader();
         l.upload(3, &vec![1.0; 64]).unwrap();
-        assert_eq!(l.store.read(3).unwrap()[0], 0.0);
+        assert_eq!(l.engine.read(3).unwrap()[0], 0.0);
         l.end_round();
-        assert_eq!(l.store.read(3).unwrap()[0], 1.0);
+        assert_eq!(l.engine.read(3).unwrap()[0], 1.0);
     }
 
     // The submit/poll/drain request paths require a live PJRT service and
     // built artifacts; they are covered by the integration tests in
-    // `rust/tests/serving.rs` and the `e2e_inference` example.
+    // `rust/tests/serving.rs` / `rust/tests/sharded_serving.rs` and the
+    // `e2e_inference` example.
 }

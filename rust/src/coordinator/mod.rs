@@ -1,14 +1,35 @@
-//! Layer-3 serving coordinator.
+//! Layer-3 serving coordinator: deployment shapes over one shared engine.
 //!
-//! The request path (router → batcher → PJRT executor) plus the three
-//! deployment shapes the paper analyzes: a centralized leader
-//! ([`CentralizedLeader`]), decentralized per-device workers
-//! ([`run_decentralized`]) and the semi-decentralized cluster-head hybrid
-//! ([`SemiCoordinator`], the conclusion's proposal).  All PJRT execution
-//! funnels through the [`InferenceService`] thread; Python is never on
-//! this path.
+//! The round pipeline — gather → deterministic neighbor sampling → batch
+//! padding → tensor assembly → PJRT → output slicing → modeled-latency
+//! attachment — is implemented exactly once, in [`RoundEngine`]
+//! (`engine.rs`), which executes a table-sharded [`ShardPlan`]: graphs
+//! larger than the artifact's static `table` dimension split into
+//! table-sized shards with halo-replicated boundary rows, per-shard
+//! double-buffered [`FeatureStore`]s and round-constant tensor caches.
+//! The paper's deployment settings are thin shapes over it:
+//!
+//! * [`CentralizedLeader`] — router → dynamic batcher → engine; one
+//!   leader serves every request (Fig. 4(a)).
+//! * [`SemiCoordinator`] — cluster heads batch their members through the
+//!   engine (clusters map onto shards, never split); heads exchange
+//!   boundary embeddings (the conclusion's hybrid, E8).
+//! * [`run_decentralized`] — per-device worker threads exchanging
+//!   features over channels and computing on the functional crossbar
+//!   cores (Fig. 4(b)); no serving state, so no engine — but the same
+//!   [`LatencyProvider`] prices its rounds (`run_decentralized_via`).
+//!
+//! [`Deployment::build`] resolves a tuned E11 `OperatingPoint` into any
+//! of the three shapes through one funnel, and [`LatencyProvider`]
+//! replaces the per-deployment `simulated_latency` fields: Analytic
+//! (Eqs. 1/E8), Clustered (boundary-aware E11 variants) or Netsim (a
+//! packet-level round completion).  All PJRT execution funnels through
+//! the [`InferenceService`] thread; Python is never on this path.
+//!
+//! [`ShardPlan`]: crate::graph::ShardPlan
 
 mod batcher;
+mod engine;
 mod leader;
 mod router;
 mod semi;
@@ -18,10 +39,16 @@ mod trace;
 mod worker;
 
 pub use batcher::{Batch, Batcher, Request};
-pub use leader::{CentralizedLeader, GcnLayerBinding, Response};
+pub use engine::{
+    DecentralizedPlan, Deployment, EngineOutput, GcnLayerBinding, LatencyProvider, RoundEngine,
+    ShardBatch,
+};
+pub use leader::{CentralizedLeader, Response};
 pub use router::Router;
 pub use semi::{SemiCoordinator, SemiResult};
 pub use service::InferenceService;
 pub use state::FeatureStore;
 pub use trace::{generate_trace, replay_trace, Arrival, LatencyStats, TraceConfig};
-pub use worker::{run_decentralized, run_decentralized_oracle, DeviceResult};
+pub use worker::{
+    run_decentralized, run_decentralized_oracle, run_decentralized_via, DeviceResult,
+};

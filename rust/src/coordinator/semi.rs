@@ -3,17 +3,23 @@
 //! (members upload features over fast V2X links, the head runs the GNN),
 //! while the graph level stays decentralized — heads exchange boundary
 //! embeddings with adjacent heads.
+//!
+//! The round itself runs on the shared [`RoundEngine`]: clusters map onto
+//! table-sized shards (a head's members never span shards), the feature
+//! table and the weight tensor are round-constant cached per shard, and
+//! the modeled per-cluster latency comes from the engine's
+//! [`LatencyProvider`] — the boundary-aware clustered E8 by default, a
+//! packet-level `netsim` figure on demand.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::cores::{FeatureMatrix, GnnWorkload};
 use crate::error::{Error, Result};
-use crate::graph::{Clustering, Csr, NeighborSampler};
+use crate::graph::{Clustering, Csr, ShardPlan};
 use crate::netmodel::{NetModel, Topology};
-use crate::runtime::Tensor;
 use crate::units::Time;
 
-use super::leader::GcnLayerBinding;
+use super::engine::{Deployment, GcnLayerBinding, LatencyProvider, RoundEngine};
 use super::service::InferenceService;
 
 /// Per-member output of one semi-decentralized round.
@@ -24,26 +30,26 @@ pub struct SemiResult {
     pub output: Vec<f32>,
     /// Modeled round latency for this node's cluster (E8 model).
     pub modeled: Time,
-    /// Wall time of the head's PJRT execution.
+    /// Wall time of the head's PJRT execution(s) for its cluster.
     pub wall: Duration,
 }
 
-/// The semi-decentralized deployment over one graph.
+/// The semi-decentralized deployment over one graph: cluster bookkeeping
+/// over the shared round engine.
 pub struct SemiCoordinator {
-    binding: GcnLayerBinding,
-    graph: Csr,
     clustering: Clustering,
-    weights: Vec<f32>,
-    sampler: NeighborSampler,
+    engine: RoundEngine,
     model: NetModel,
     head_capacity: f64,
     /// Fraction of graph edges the clustering keeps intra-cluster; drives
     /// the boundary term of the modeled round latency (E11's clustered E8
     /// variant — the same score the autotuner selects points with).
     intra_fraction: f64,
-    /// When set, per-result `modeled` latency comes from a packet-level
-    /// `netsim` overlay round instead of the closed-form E8 model.
-    simulated_latency: Option<Time>,
+    /// Packet-level round completion when the `netsim` mode is active;
+    /// `None` = the clustered E8 closed form.  The [`LatencyProvider`] is
+    /// derived on demand ([`SemiCoordinator::latency_provider`]) so the
+    /// intra-edge fraction has a single source of truth.
+    simulated: Option<Time>,
 }
 
 impl SemiCoordinator {
@@ -57,36 +63,32 @@ impl SemiCoordinator {
         if clustering.assignment.len() != graph.num_nodes() {
             return Err(Error::Coordinator("clustering does not cover the graph".into()));
         }
-        if graph.num_nodes() > binding.table {
-            return Err(Error::Coordinator(format!(
-                "graph has {} nodes but artifact table holds {}",
-                graph.num_nodes(),
-                binding.table
-            )));
-        }
         if weights.len() != binding.feature * binding.hidden {
             return Err(Error::Coordinator("weight arity mismatch".into()));
         }
         let head_capacity = clustering.avg_size().max(1.0);
         let intra_fraction = clustering.intra_edge_fraction(&graph);
+        let plan =
+            ShardPlan::from_clustering(&graph, &binding.sampler(), binding.table, &clustering)?;
+        let model = NetModel::paper(workload)?;
+        let engine = RoundEngine::new(binding, plan, weights)?;
         Ok(SemiCoordinator {
-            sampler: NeighborSampler::new(binding.sample, 7),
-            model: NetModel::paper(workload)?,
-            binding,
-            graph,
             clustering,
-            weights,
+            engine,
+            model,
             head_capacity,
             intra_fraction,
-            simulated_latency: None,
+            simulated: None,
         })
     }
 
-    /// Build the coordinator a tuned [`OperatingPoint`] describes: the
-    /// point's partitioner produces the clustering and the point's head
-    /// capacity replaces the avg-size default — so the serving path runs
-    /// exactly the configuration the E11 autotuner scored.  Rejects
-    /// non-semi points (the centralized leader has its own constructor).
+    /// Build the coordinator a tuned [`OperatingPoint`] describes, through
+    /// the same [`Deployment::build`] funnel every setting configures
+    /// with: the point's partitioner produces the clustering and the
+    /// point's head capacity replaces the avg-size default — so the
+    /// serving path runs exactly the configuration the E11 autotuner
+    /// scored.  Rejects non-semi points (the centralized leader has its
+    /// own constructor).
     ///
     /// [`OperatingPoint`]: crate::autotune::OperatingPoint
     pub fn from_operating_point(
@@ -102,9 +104,10 @@ impl SemiCoordinator {
                 point.label()
             )));
         }
-        let clustering = point.partitioner.partition(&graph, point.cluster_size)?;
-        SemiCoordinator::new(binding, graph, clustering, weights, workload)?
-            .with_head_capacity(point.head_capacity)
+        match Deployment::build(binding, graph, weights, workload, Duration::ZERO, point)? {
+            Deployment::Semi(semi) => Ok(semi),
+            _ => unreachable!("a semi point builds a semi deployment"),
+        }
     }
 
     /// Override the cluster-head capacity multiple (the default is the
@@ -125,27 +128,27 @@ impl SemiCoordinator {
         self.clustering.num_clusters()
     }
 
-    /// Switch per-result `modeled` latency from the closed-form E8 model
-    /// to a packet-level `netsim` overlay round — head receive-port
-    /// contention and the boundary exchange included.  The simulated
-    /// topology uses the largest cluster (the straggler that closes the
-    /// round).  `None` returns to the analytic model.
+    /// The engine this coordinator serves through (shard plan,
+    /// tensor-cache counters, per-shard state).
+    pub fn engine(&self) -> &RoundEngine {
+        &self.engine
+    }
+
+    /// Switch per-result `modeled` latency from the closed-form clustered
+    /// E8 model to a packet-level `netsim` overlay round — head
+    /// receive-port contention and the boundary exchange included.  The
+    /// simulated topology uses the largest cluster (the straggler that
+    /// closes the round).  `None` returns to the analytic model.
     pub fn use_simulated_latency(
         &mut self,
         cfg: Option<&crate::netsim::NetSimConfig>,
     ) -> Result<()> {
-        self.simulated_latency = match cfg {
+        self.simulated = match cfg {
             None => None,
             Some(c) => {
-                let worst = self
-                    .clustering
-                    .clusters
-                    .iter()
-                    .map(Vec::len)
-                    .max()
-                    .unwrap_or(1)
-                    .max(1);
-                let topo = Topology { nodes: self.graph.num_nodes(), cluster_size: worst };
+                let worst = self.clustering.max_size().max(1);
+                let topo =
+                    Topology { nodes: self.engine.num_nodes(), cluster_size: worst };
                 Some(
                     crate::netsim::simulate_fabric(
                         &self.model,
@@ -165,30 +168,35 @@ impl SemiCoordinator {
     /// The round latency currently attached to results (`None` = the
     /// closed-form E8 model is in effect, evaluated per cluster).
     pub fn simulated_round_latency(&self) -> Option<Time> {
-        self.simulated_latency
+        self.simulated
+    }
+
+    /// The provider the round prices modeled latencies with — derived on
+    /// demand so the intra-edge fraction has one source of truth.
+    pub fn latency_provider(&self) -> LatencyProvider {
+        match self.simulated {
+            Some(t) => LatencyProvider::Netsim(t),
+            None => LatencyProvider::Clustered { intra_fraction: self.intra_fraction },
+        }
     }
 
     /// Run one round: every head batches its members through the artifact.
-    /// `features.row(node)` is each node's current feature vector.
+    /// `features.row(node)` is each node's current feature vector; the
+    /// engine stages the full matrix behind its double-buffer barrier,
+    /// then serves each cluster against the round-constant per-shard
+    /// tensor caches — the table gather, shape validation and tensor
+    /// construction the seed paid per member chunk now happen once per
+    /// round per shard (§Perf; the per-batch cost that remains is the
+    /// owned-tensor handoff to the PJRT service thread, as on the seed
+    /// leader path).
     pub fn round(
-        &self,
+        &mut self,
         svc: &InferenceService,
         features: &FeatureMatrix,
     ) -> Result<Vec<SemiResult>> {
-        let b = &self.binding;
-        let n = self.graph.num_nodes();
-        if features.rows() != n {
-            return Err(Error::Coordinator("feature rows != nodes".into()));
-        }
-        if features.cols() != b.feature {
-            return Err(Error::Coordinator("feature width mismatch".into()));
-        }
-        // Shared feature table (heads exchange boundary rows, so the table
-        // every head sees is consistent).  The flat feature matrix is
-        // already the table's row-major prefix — one contiguous copy.
-        let mut x_table = vec![0.0f32; b.table * b.feature];
-        x_table[..n * b.feature].copy_from_slice(features.as_slice());
-
+        self.engine.set_features(features)?;
+        let n = self.engine.num_nodes();
+        let provider = self.latency_provider();
         let mut results = Vec::with_capacity(n);
         for (head, members) in self.clustering.clusters.iter().enumerate() {
             if members.is_empty() {
@@ -199,45 +207,11 @@ impl SemiCoordinator {
             // autotuner selects operating points with, so the served
             // `modeled` latency matches the figure that justified the
             // configuration.
-            let modeled = self.simulated_latency.unwrap_or_else(|| {
-                self.model
-                    .semi_latency_clustered(topo, self.head_capacity, self.intra_fraction)
-                    .total()
-            });
-            // Heads batch their members, padding to the artifact batch.
-            for chunk in members.chunks(b.batch) {
-                let mut nodes = chunk.to_vec();
-                let pad = *nodes.last().unwrap();
-                nodes.resize(b.batch, pad);
-
-                let mut x_self = Vec::with_capacity(b.batch * b.feature);
-                for &node in &nodes {
-                    x_self.extend_from_slice(features.row(node));
-                }
-                let nbr_idx = self.sampler.sample_batch(&self.graph, &nodes);
-                let inputs = vec![
-                    Tensor::f32(&[b.batch, b.feature], x_self)?,
-                    Tensor::i32(&[b.batch, b.sample], nbr_idx)?,
-                    Tensor::f32(&[b.table, b.feature], x_table.clone())?,
-                    Tensor::f32(&[b.feature, b.hidden], self.weights.clone())?,
-                ];
-                let t0 = Instant::now();
-                let outputs = svc.infer(&b.artifact, inputs)?;
-                let wall = t0.elapsed();
-                let flat = outputs
-                    .first()
-                    .ok_or_else(|| Error::Coordinator("no outputs".into()))?
-                    .as_f32()?
-                    .to_vec();
-                for (i, &node) in chunk.iter().enumerate() {
-                    results.push(SemiResult {
-                        node,
-                        head,
-                        output: flat[i * b.hidden..(i + 1) * b.hidden].to_vec(),
-                        modeled,
-                        wall,
-                    });
-                }
+            let modeled = provider.semi(&self.model, topo, self.head_capacity);
+            let out = self.engine.serve(svc, members)?;
+            let wall = out.wall;
+            for (&node, output) in members.iter().zip(out.outputs) {
+                results.push(SemiResult { node, head, output, modeled, wall });
             }
         }
         results.sort_by_key(|r| r.node);
@@ -249,16 +223,10 @@ impl SemiCoordinator {
 mod tests {
     use super::*;
     use crate::graph::{fixed_size, generate};
-    use crate::runtime::Manifest;
-    use std::path::Path;
+    use crate::testing::gcn_layer_binding;
 
     fn binding() -> GcnLayerBinding {
-        let doc = r#"{"version": 1, "artifacts": [
-            {"name": "gcn_layer_small", "file": "f", "inputs": [], "outputs": [],
-             "config": {"batch": 16, "sample": 4, "feature": 64,
-                        "hidden": 32, "table": 64}}]}"#;
-        let m = Manifest::parse(Path::new("/x"), doc).unwrap();
-        GcnLayerBinding::from_spec(m.get("gcn_layer_small").unwrap()).unwrap()
+        gcn_layer_binding()
     }
 
     #[test]
@@ -296,6 +264,29 @@ mod tests {
         assert!(bad.is_err());
     }
 
+    #[test]
+    fn oversized_graphs_shard_with_whole_clusters() {
+        // 256 nodes against the 64-row table: the seed rejected this; the
+        // engine shards it, never splitting a head's members.
+        let g = generate::regular(256, 6, 3).unwrap();
+        let c = fixed_size(256, 8).unwrap();
+        let semi = SemiCoordinator::new(
+            binding(),
+            g,
+            c.clone(),
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 8),
+        )
+        .unwrap();
+        assert_eq!(semi.num_heads(), 32);
+        let plan = semi.engine().plan();
+        assert!(plan.num_shards() > 1);
+        for members in &c.clusters {
+            let s0 = plan.home(members[0]).0;
+            assert!(members.iter().all(|&v| plan.home(v).0 == s0));
+        }
+    }
+
     /// E11: a coordinator built from a tuned operating point is
     /// configured identically to the hand-constructed equivalent (the
     /// PJRT round itself is compared bit-for-bit in rust/tests/serving.rs).
@@ -323,11 +314,17 @@ mod tests {
         assert_eq!(tuned.head_capacity(), 10.0);
         assert_eq!(tuned.clustering, hand.clustering);
         assert_eq!(tuned.intra_fraction, hand.intra_fraction);
+        // Same shard plan, hence the same serving path.
+        assert_eq!(tuned.engine().plan(), hand.engine().plan());
         // Same modeled round latency for every cluster.
         let topo = Topology { nodes: 48, cluster_size: 8 };
         assert_eq!(
             tuned.model.semi_latency(topo, tuned.head_capacity).total(),
             hand.model.semi_latency(topo, hand.head_capacity).total()
+        );
+        assert_eq!(
+            tuned.latency_provider().semi(&tuned.model, topo, tuned.head_capacity),
+            hand.latency_provider().semi(&hand.model, topo, hand.head_capacity)
         );
 
         // Non-semi points are rejected, as are sub-unit head capacities.
@@ -389,8 +386,46 @@ mod tests {
 
         semi.use_simulated_latency(None).unwrap();
         assert!(semi.simulated_round_latency().is_none());
+        // ... and the default provider is the boundary-aware clustered E8,
+        // derived from the single stored intra-edge fraction.
+        assert_eq!(
+            semi.latency_provider(),
+            LatencyProvider::Clustered { intra_fraction: semi.intra_fraction }
+        );
+    }
+
+    /// §Perf satellite: the round-constant tensors are cached — many
+    /// cluster serves per round reuse one table tensor per shard (the
+    /// seed rebuilt table + weight tensors for every member chunk).
+    #[test]
+    fn round_constant_tensors_are_cached_per_shard() {
+        let g = generate::regular(48, 6, 3).unwrap();
+        let c = fixed_size(48, 8).unwrap();
+        let mut semi = SemiCoordinator::new(
+            binding(),
+            g,
+            c,
+            vec![0.0; 64 * 32],
+            &GnnWorkload::gcn("t", 64, 8),
+        )
+        .unwrap();
+        let shards = semi.engine().plan().num_shards() as u64;
+        let features = FeatureMatrix::zeros(48, 64);
+        semi.engine.set_features(&features).unwrap();
+        assert_eq!(semi.engine().table_builds(), shards);
+        // Assembling every cluster's batches hits the cache only.
+        for members in semi.clustering.clusters.clone() {
+            for _ in 0..3 {
+                semi.engine.assemble(&members).unwrap();
+            }
+        }
+        assert_eq!(semi.engine().table_builds(), shards, "serving must not rebuild");
+        // The next round rebuilds exactly once per shard.
+        semi.engine.set_features(&features).unwrap();
+        assert_eq!(semi.engine().table_builds(), 2 * shards);
     }
 
     // The `round` execution path needs built artifacts + a PJRT service;
-    // covered by rust/tests/serving.rs and examples/semi_decentralized.rs.
+    // covered by rust/tests/serving.rs, rust/tests/sharded_serving.rs and
+    // examples/semi_decentralized.rs.
 }

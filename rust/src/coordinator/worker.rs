@@ -14,8 +14,10 @@ use crate::config::presets;
 use crate::cores::{AggregationCore, FeatureExtractionCore, FeatureMatrix, Tile};
 use crate::error::{Error, Result};
 use crate::graph::Clustering;
-use crate::netmodel::{NetModel, Setting, Topology};
+use crate::netmodel::{NetModel, Topology};
 use crate::units::Time;
+
+use super::engine::LatencyProvider;
 
 /// Result of one device's round.
 #[derive(Debug, Clone)]
@@ -92,7 +94,11 @@ fn device_compute(
     let mean: Vec<f32> = sums.iter().map(|&s| s as f32 / n).collect();
     let codes = quantize_codes(&mean, 7.0 / 255.0 * 8.0);
 
-    let fe_in = codes.len().min(128);
+    // The transform consumes at most one row window of the
+    // feature-extraction crossbar — the bound is the programmed geometry
+    // (`presets::decentralized().feature.geometry.rows`), not a magic
+    // constant.
+    let fe_in = codes.len().min(fe.config().geometry.rows);
     fe.program_weights(weights, fe_in, fe_out)?;
     fe.transform(&codes[..fe_in], fe_out)
 }
@@ -110,6 +116,22 @@ pub fn run_decentralized(
     weights: Vec<i32>,
     fe_out: usize,
     model: &NetModel,
+) -> Result<Vec<DeviceResult>> {
+    run_decentralized_via(features, clustering, weights, fe_out, model, LatencyProvider::Analytic)
+}
+
+/// [`run_decentralized`] with an explicit [`LatencyProvider`] — the same
+/// enum the leader and the semi coordinator attach modeled latencies
+/// with, so a tuned decentralized deployment (boundary-aware clustered
+/// Eq. 4) or a packet-level `netsim` figure prices every device's round
+/// identically across the three settings.
+pub fn run_decentralized_via(
+    features: &FeatureMatrix,
+    clustering: &Clustering,
+    weights: Vec<i32>,
+    fe_out: usize,
+    model: &NetModel,
+    latency: LatencyProvider,
 ) -> Result<Vec<DeviceResult>> {
     let n = features.rows();
     if clustering.assignment.len() != n {
@@ -143,9 +165,8 @@ pub fn run_decentralized(
         let own = features.row(device).to_vec();
         let weights = weights.clone();
         let cs = peers.len();
-        let modeled = model
-            .latency(Setting::Decentralized, Topology { nodes: n, cluster_size: cs.max(1) })
-            .total();
+        let modeled =
+            latency.decentralized(model, Topology { nodes: n, cluster_size: cs.max(1) });
 
         handles.push(std::thread::spawn(move || -> Result<DeviceResult> {
             let t0 = Instant::now();
@@ -278,5 +299,80 @@ mod tests {
         let (features, _, weights, model) = setup(6, 2, 8, 4);
         let wrong = fixed_size(5, 2).unwrap();
         assert!(run_decentralized(&features, &wrong, weights, 4, &model).is_err());
+    }
+
+    /// The feature-extraction input bound is derived from the programmed
+    /// crossbar geometry, not a magic constant: one row window of the
+    /// decentralized preset's 128×128 feature crossbar.
+    #[test]
+    fn fe_input_bound_derives_from_the_crossbar_geometry() {
+        let preset = presets::decentralized();
+        let cores = DeviceCores::new().unwrap();
+        assert_eq!(cores.fe.config().geometry.rows, preset.feature.geometry.rows);
+        assert_eq!(preset.feature.geometry.rows, 128, "paper §4.1 feature core sizing");
+        // Features wider than one row window truncate at the geometry
+        // bound instead of overflowing the crossbar.
+        let wide = preset.feature.geometry.rows + 22;
+        let (features, clustering, _, model) = setup(4, 2, wide, 4);
+        let weights: Vec<i32> =
+            (0..preset.feature.geometry.rows * 4).map(|i| (i % 15) as i32 - 8).collect();
+        let got = run_decentralized(&features, &clustering, weights.clone(), 4, &model).unwrap();
+        let want = run_decentralized_oracle(&features, &clustering, &weights, 4).unwrap();
+        for r in &got {
+            assert_eq!(r.output, want[r.device]);
+            assert_eq!(r.output.len(), 4);
+        }
+    }
+
+    /// The worker pool consumes the same [`LatencyProvider`] as the other
+    /// deployments: Analytic equals the Eq. 1 default, Clustered prices
+    /// the boundary relay, Netsim pins the simulated figure — with the
+    /// computed embeddings untouched in every mode.
+    #[test]
+    fn latency_provider_drives_the_modeled_figure_only() {
+        let (features, clustering, weights, model) = setup(12, 4, 16, 8);
+        let topo = Topology { nodes: 12, cluster_size: 3 };
+        let base = run_decentralized(&features, &clustering, weights.clone(), 8, &model).unwrap();
+        let analytic = run_decentralized_via(
+            &features,
+            &clustering,
+            weights.clone(),
+            8,
+            &model,
+            LatencyProvider::Analytic,
+        )
+        .unwrap();
+        let clustered = run_decentralized_via(
+            &features,
+            &clustering,
+            weights.clone(),
+            8,
+            &model,
+            LatencyProvider::Clustered { intra_fraction: 0.5 },
+        )
+        .unwrap();
+        let pinned = run_decentralized_via(
+            &features,
+            &clustering,
+            weights,
+            8,
+            &model,
+            LatencyProvider::Netsim(crate::units::Time::ms(3.0)),
+        )
+        .unwrap();
+        for (((b, a), c), p) in base.iter().zip(&analytic).zip(&clustered).zip(&pinned) {
+            assert_eq!(b.output, a.output);
+            assert_eq!(b.output, c.output);
+            assert_eq!(b.output, p.output);
+            assert_eq!(b.modeled, a.modeled, "Analytic is the default");
+            assert_eq!(
+                c.modeled,
+                LatencyProvider::Clustered { intra_fraction: 0.5 }
+                    .decentralized(&model, topo),
+                "clustered boundary pricing"
+            );
+            assert!(c.modeled > a.modeled, "a cut clustering never serves faster");
+            assert_eq!(p.modeled, crate::units::Time::ms(3.0));
+        }
     }
 }

@@ -7,13 +7,15 @@ use crate::autotune::{
     Autotuner, EvaluatedPoint, OperatingPoint, Partitioner, Score, SettingKind, TuneGrid,
     TunerConfig,
 };
+use crate::coordinator::{LatencyProvider, RoundEngine};
 use crate::cores::GnnWorkload;
 use crate::error::Result;
-use crate::graph::{datasets, generate, Csr, DatasetStats};
+use crate::graph::{datasets, fixed_size, generate, Csr, DatasetStats, ShardPlan};
 use crate::netmodel::{NetModel, Setting, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
 use crate::par;
 use crate::report::{pct, speedup, BarSeries, Table};
+use crate::testing::{gcn_layer_binding, Rng};
 use crate::units::Time;
 
 /// Paper values of Table 1 (for side-by-side reporting).
@@ -751,6 +753,219 @@ impl HybridSweep {
     }
 }
 
+/// One dataset row of the E12 sharded-serving sweep.  Every field except
+/// `wall_s` is a deterministic pure function of (dataset, cap, rounds),
+/// which is what the parallel byte-identical assertion relies on; the
+/// wall measurement is attached only in timed runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingRow {
+    pub dataset: String,
+    /// Materialized sample size actually sharded and round-driven.
+    pub sample_nodes: usize,
+    /// Published deployment scale the round latencies are modeled at.
+    pub deploy_nodes: usize,
+    /// Serving cluster size: the dataset's Avg Cₛ capped to the shard
+    /// feasibility bound `table / (1 + sample)`.
+    pub cluster_size: usize,
+    pub table: usize,
+    pub shards: usize,
+    pub max_halo: usize,
+    pub max_slots: usize,
+    /// PJRT batches one full round (every node served once) costs.
+    pub batches_per_round: u64,
+    /// Round barriers driven per dataset.
+    pub rounds: usize,
+    /// Table-tensor cache misses over the run (= shards × rounds — the
+    /// engine's round-constant guarantee, asserted in tests).
+    pub table_builds: u64,
+    /// Modeled round latency at deployment scale, centralized Eq. 1.
+    pub cent_modeled: Time,
+    /// Modeled round latency, boundary-aware clustered E8 (heads cₛ×).
+    pub semi_modeled: Time,
+    /// Wall-clock of the `rounds` upload → barrier → assemble rounds
+    /// (`None` in untimed determinism runs).
+    pub wall_s: Option<f64>,
+}
+
+/// E12 — sharded serving sweep: the four Table 2 dataset shapes + the
+/// taxi study driven through the [`RoundEngine`] at artifact-table
+/// granularity (the 64-row test binding), emitting `BENCH_serving.json`.
+///
+/// Each dataset materializes a capped sample, shards it with whole
+/// serving clusters per shard, and runs `rounds` full upload → barrier →
+/// assemble rounds; the row records the shard geometry, the per-round
+/// batch count, the tensor-cache miss count and the modeled round
+/// latencies at deployment scale.  Rows are computed via
+/// `par::par_try_map`; untimed output is byte-identical to the
+/// sequential run (asserted in tests).
+pub struct ServingSweep {
+    pub rows: Vec<ServingRow>,
+    pub materialize_cap: usize,
+    pub rounds: usize,
+}
+
+impl ServingSweep {
+    /// Timed sweep over all available cores (the CLI / CI entry point).
+    pub fn run(materialize_cap: usize, rounds: usize) -> Result<ServingSweep> {
+        ServingSweep::run_with_threads(materialize_cap, rounds, par::available_threads(), true)
+    }
+
+    /// Fully parameterized sweep; `timed = false` drops the wall field so
+    /// the output is reproducible bit-for-bit across thread counts.
+    pub fn run_with_threads(
+        materialize_cap: usize,
+        rounds: usize,
+        threads: usize,
+        timed: bool,
+    ) -> Result<ServingSweep> {
+        let targets: Vec<HybridTarget> = datasets::all()
+            .into_iter()
+            .map(HybridTarget::Dataset)
+            .chain(std::iter::once(HybridTarget::Taxi))
+            .collect();
+        let rows = par::par_try_map(&targets, threads, |t| {
+            ServingSweep::row(t, materialize_cap, rounds, timed)
+        })?;
+        Ok(ServingSweep { rows, materialize_cap, rounds })
+    }
+
+    fn row(
+        target: &HybridTarget,
+        cap: usize,
+        rounds: usize,
+        timed: bool,
+    ) -> Result<ServingRow> {
+        let (name, deploy_nodes, model, sample) = target.instantiate(cap)?;
+        let binding = gcn_layer_binding();
+        // A whole serving cluster must fit a shard next to its halo; one
+        // member can sample at most `sample` halo rows, so this bound is
+        // always packable.
+        let cs = target.avg_cs().clamp(1, binding.table / (1 + binding.sample));
+        let n = sample.num_nodes();
+        let clustering = fixed_size(n, cs)?;
+        let plan =
+            ShardPlan::from_clustering(&sample, &binding.sampler(), binding.table, &clustering)?;
+        let (feature, hidden, table) = (binding.feature, binding.hidden, binding.table);
+        let mut engine = RoundEngine::new(binding, plan, vec![0.01; feature * hidden])?;
+        let all: Vec<usize> = (0..n).collect();
+        // Synthetic per-round features are drawn OUTSIDE the timed window
+        // so `wall_s` measures the engine (upload → barrier → assemble),
+        // not the test RNG.
+        let round_features: Vec<Vec<f32>> = (0..rounds)
+            .map(|round| {
+                let mut rng = Rng::new(0xE12 + round as u64);
+                (0..n * feature).map(|_| rng.f64() as f32).collect()
+            })
+            .collect();
+        let mut batches_per_round = 0u64;
+        let t0 = std::time::Instant::now();
+        for feats in &round_features {
+            for node in 0..n {
+                engine.upload(node, &feats[node * feature..(node + 1) * feature])?;
+            }
+            engine.end_round();
+            batches_per_round = engine.assemble(&all)?.len() as u64;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let intra = clustering.intra_edge_fraction(&sample);
+        let topo = Topology { nodes: deploy_nodes, cluster_size: cs };
+        Ok(ServingRow {
+            dataset: name,
+            sample_nodes: n,
+            deploy_nodes,
+            cluster_size: cs,
+            table,
+            shards: engine.plan().num_shards(),
+            max_halo: engine.plan().max_halo(),
+            max_slots: engine.plan().max_slots(),
+            batches_per_round,
+            rounds,
+            table_builds: engine.table_builds(),
+            cent_modeled: LatencyProvider::Analytic.centralized(&model, topo),
+            semi_modeled: LatencyProvider::Clustered { intra_fraction: intra }
+                .semi(&model, topo, cs as f64),
+            wall_s: timed.then_some(wall),
+        })
+    }
+
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            "E12 — sharded serving: Table 2 shapes through one round engine",
+            &[
+                "Dataset",
+                "Sample N",
+                "cs",
+                "Shards",
+                "Max halo",
+                "Batches/round",
+                "Cent modeled",
+                "Semi modeled",
+                "Wall",
+            ],
+        );
+        for r in &self.rows {
+            t.row(&[
+                r.dataset.clone(),
+                r.sample_nodes.to_string(),
+                r.cluster_size.to_string(),
+                r.shards.to_string(),
+                r.max_halo.to_string(),
+                r.batches_per_round.to_string(),
+                r.cent_modeled.to_string(),
+                r.semi_modeled.to_string(),
+                r.wall_s
+                    .map(|w| format!("{:.1} ms", w * 1e3))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// The `BENCH_serving.json` artifact.
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| format!("{v:.6e}");
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for r in &self.rows {
+            let wall = match r.wall_s {
+                Some(w) => num(w),
+                None => "null".into(),
+            };
+            rows.push(format!(
+                "    {{\"dataset\": \"{}\", \"sample_nodes\": {}, \"deploy_nodes\": {}, \
+                 \"cluster_size\": {}, \"table\": {}, \"shards\": {}, \"max_halo\": {}, \
+                 \"max_slots\": {}, \"batches_per_round\": {}, \"rounds\": {}, \
+                 \"table_builds\": {}, \"modeled\": {{\"centralized_s\": {}, \
+                 \"semi_s\": {}}}, \"wall_s\": {}}}",
+                r.dataset,
+                r.sample_nodes,
+                r.deploy_nodes,
+                r.cluster_size,
+                r.table,
+                r.shards,
+                r.max_halo,
+                r.max_slots,
+                r.batches_per_round,
+                r.rounds,
+                r.table_builds,
+                num(r.cent_modeled.as_s()),
+                num(r.semi_modeled.as_s()),
+                wall,
+            ));
+        }
+        let sharded = self.rows.iter().filter(|r| r.shards > 1).count();
+        format!(
+            "{{\n  \"experiment\": \"sharded_serving\",\n  \"materialize_cap\": {},\n  \
+             \"rounds\": {},\n  \"summary\": {{\"datasets\": {}, \"sharded_datasets\": {}}},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            self.materialize_cap,
+            self.rounds,
+            self.rows.len(),
+            sharded,
+            rows.join(",\n"),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -902,6 +1117,52 @@ mod tests {
         assert_eq!(seq.to_json(), par4.to_json());
         let auto = HybridSweep::run(300).unwrap();
         assert_eq!(seq.to_json(), auto.to_json());
+    }
+
+    /// E12: every Table 2 shape (plus taxi) serves through the engine at
+    /// artifact-table granularity — samples wider than the 64-row table
+    /// shard, single-table samples do not, the engine's tensor cache
+    /// misses exactly shards × rounds, and one round batches every node.
+    #[test]
+    fn serving_sweep_shards_the_table2_shapes() {
+        let sweep = ServingSweep::run_with_threads(256, 2, 1, false).unwrap();
+        assert_eq!(sweep.rows.len(), 5);
+        for r in &sweep.rows {
+            assert!(r.sample_nodes <= 256);
+            assert!(r.max_slots <= r.table, "{}: shard overflows table", r.dataset);
+            assert_eq!(r.table_builds, (r.shards * r.rounds) as u64, "{}", r.dataset);
+            // One full round covers every node: at least ⌈members/batch⌉
+            // batches summed over shards, and at least one per shard.
+            assert!(r.batches_per_round >= r.shards as u64, "{}", r.dataset);
+            assert!(r.batches_per_round >= (r.sample_nodes as u64).div_ceil(16));
+            assert!(r.cent_modeled.as_s() > 0.0 && r.semi_modeled.as_s() > 0.0);
+            assert!(r.wall_s.is_none(), "untimed run must not carry walls");
+            // 256-node samples do not fit the 64-row artifact table.
+            if r.sample_nodes > r.table {
+                assert!(r.shards > 1, "{}: expected sharding", r.dataset);
+            }
+        }
+        let json = sweep.to_json();
+        assert!(json.contains("\"experiment\": \"sharded_serving\""));
+        assert!(json.contains("\"wall_s\": null"));
+        assert!(json.contains("LiveJournal"));
+        assert!(sweep.render().render().contains("Taxi"));
+    }
+
+    /// E12 determinism: the parallel sweep emits byte-identical untimed
+    /// `BENCH_serving.json` to the sequential run.
+    #[test]
+    fn serving_sweep_parallel_is_byte_identical_to_sequential() {
+        let seq = ServingSweep::run_with_threads(200, 1, 1, false).unwrap();
+        let par4 = ServingSweep::run_with_threads(200, 1, 4, false).unwrap();
+        assert_eq!(seq.rows, par4.rows);
+        assert_eq!(seq.to_json(), par4.to_json());
+        // The timed entry point measures real walls on the same rows.
+        let timed = ServingSweep::run_with_threads(200, 1, 2, true).unwrap();
+        assert!(timed.rows.iter().all(|r| r.wall_s.is_some()));
+        let strip = |s: &ServingRow| ServingRow { wall_s: None, ..s.clone() };
+        let stripped: Vec<ServingRow> = timed.rows.iter().map(strip).collect();
+        assert_eq!(stripped, seq.rows);
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Graph substrate: CSR storage, generators, the Table 2 dataset registry,
-//! neighbor sampling and cluster partitioning.
+//! neighbor sampling, cluster partitioning and table-sharded execution
+//! plans.
 
 mod cluster;
 mod csr;
 pub mod datasets;
 pub mod generate;
 mod sample;
+mod shard;
 
 pub use cluster::{fixed_size, locality, Clustering};
 pub use csr::Csr;
 pub use datasets::DatasetStats;
 pub use sample::NeighborSampler;
+pub use shard::{Shard, ShardPlan};

@@ -1,0 +1,539 @@
+//! Table-sharded execution plan (DESIGN.md §10).
+//!
+//! The AOT serving artifacts bind a *static* feature-table dimension
+//! (`GcnLayerBinding::table`), and the seed coordinators simply rejected
+//! any graph larger than it ("shard the graph").  [`ShardPlan`] does the
+//! sharding instead: it packs nodes — or whole clusters, so a semi
+//! head's members never span shards — into table-sized shards, assigns
+//! every node a home `(shard, slot)`, and appends *halo* slots that
+//! replicate exactly the out-of-shard sampled neighbors.  Every neighbor
+//! index a shard's members can reference therefore resolves locally, and
+//! the plan pre-remaps each member's deterministic neighbor sample to
+//! local slots, so a serving round never touches global ids after the
+//! plan is built.
+//!
+//! Invariants (checked by [`ShardPlan::validate`], re-checked by the
+//! property tests below):
+//! * every node is a member of exactly one shard;
+//! * `members + halo <= table` for every shard;
+//! * every sampled neighbor index lands in-shard (member or halo slot);
+//! * halos contain exactly the out-of-shard sampled neighbors — nothing
+//!   more, nothing less.
+
+use crate::error::{Error, Result};
+
+use super::cluster::Clustering;
+use super::csr::Csr;
+use super::sample::NeighborSampler;
+
+/// One table-sized shard: `members` own their rows (slots `0..members`),
+/// `halo` rows (slots `members..members+halo`) replicate the out-of-shard
+/// sampled neighbors so boundary lookups resolve locally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shard {
+    /// Global node ids owning slots `0..members.len()`, in slot order.
+    pub members: Vec<usize>,
+    /// Global node ids of the halo rows (sorted ascending), occupying
+    /// slots `members.len()..slots()`.
+    pub halo: Vec<usize>,
+    /// Flattened `[members.len() × sample]` neighbor-index rows in *local
+    /// slot* coordinates (`-1` = padding) — the artifact's `nbr_idx`
+    /// input, pre-remapped at plan time.
+    pub nbr_rows: Vec<i32>,
+}
+
+impl Shard {
+    /// Occupied rows of the shard's table (members + halo).
+    pub fn slots(&self) -> usize {
+        self.members.len() + self.halo.len()
+    }
+
+    /// Global node id behind a local slot.
+    pub fn local_node(&self, slot: usize) -> usize {
+        if slot < self.members.len() {
+            self.members[slot]
+        } else {
+            self.halo[slot - self.members.len()]
+        }
+    }
+
+    /// The pre-remapped neighbor row of the member in `slot`.
+    pub fn member_nbr_row(&self, slot: usize, sample: usize) -> &[i32] {
+        &self.nbr_rows[slot * sample..(slot + 1) * sample]
+    }
+}
+
+/// A partition of a graph into artifact-table-sized shards with halo
+/// replication (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPlan {
+    table: usize,
+    sample: usize,
+    num_nodes: usize,
+    shards: Vec<Shard>,
+    /// `home[node] = (shard, slot)` — the member slot owning the node.
+    home: Vec<(usize, usize)>,
+    /// `halo_sites[node]` — every `(shard, slot)` where the node is
+    /// replicated as a halo row (kept in sync by the engine's uploads).
+    halo_sites: Vec<Vec<(usize, usize)>>,
+}
+
+enum PackOutcome {
+    Fits(ShardPlan),
+    /// Worst `members + halo` over all shards — the overflow signal the
+    /// capacity loop shrinks the member budget by.
+    Overflow(usize),
+}
+
+impl ShardPlan {
+    /// Shard a graph in id order (the centralized leader's default): each
+    /// node is its own packing unit, so shards are consecutive id ranges.
+    /// A graph that fits one shard yields the identity mapping
+    /// (`slot == node`), which is what keeps single-shard serving
+    /// bit-identical to the unsharded seed path.
+    pub fn build(graph: &Csr, sampler: &NeighborSampler, table: usize) -> Result<ShardPlan> {
+        let singles: Vec<Vec<usize>> = (0..graph.num_nodes()).map(|v| vec![v]).collect();
+        ShardPlan::pack(graph, sampler, table, &singles, 1)
+    }
+
+    /// Shard a graph so whole clusters land in one shard (the semi
+    /// deployment: a head batches its members against a single table).
+    pub fn from_clustering(
+        graph: &Csr,
+        sampler: &NeighborSampler,
+        table: usize,
+        clustering: &Clustering,
+    ) -> Result<ShardPlan> {
+        if clustering.assignment.len() != graph.num_nodes() {
+            return Err(Error::Graph("clustering does not cover the graph".into()));
+        }
+        let min_cap = clustering.clusters.iter().map(Vec::len).max().unwrap_or(0).max(1);
+        ShardPlan::pack(graph, sampler, table, &clustering.clusters, min_cap)
+    }
+
+    /// Capacity search: pack groups with a member budget of `cap`, shrink
+    /// on halo overflow.  `cap` strictly decreases, so the loop
+    /// terminates; `min_cap` is the smallest budget that keeps the
+    /// packing units whole (1 for id-order, the largest cluster for
+    /// cluster-preserving plans).  The deterministic neighbor samples do
+    /// not depend on the member budget, so they are drawn once here and
+    /// only re-packed per iteration.
+    fn pack(
+        graph: &Csr,
+        sampler: &NeighborSampler,
+        table: usize,
+        groups: &[Vec<usize>],
+        min_cap: usize,
+    ) -> Result<ShardPlan> {
+        if table == 0 {
+            return Err(Error::Graph("shard table must hold at least one row".into()));
+        }
+        if min_cap > table {
+            return Err(Error::Graph(format!(
+                "a packing unit of {min_cap} nodes cannot fit a {table}-row table"
+            )));
+        }
+        let samples: Vec<Vec<Option<usize>>> =
+            (0..graph.num_nodes()).map(|v| sampler.sample(graph, v)).collect();
+        let sample = sampler.sample_size();
+        let mut cap = table;
+        loop {
+            match ShardPlan::try_pack(&samples, sample, table, groups, cap)? {
+                PackOutcome::Fits(plan) => return Ok(plan),
+                PackOutcome::Overflow(worst) => {
+                    if cap == min_cap {
+                        return Err(Error::Graph(format!(
+                            "cannot shard: {worst} slots (members + halo) exceed the \
+                             {table}-row table even at the minimum member budget {min_cap}"
+                        )));
+                    }
+                    // Proportional shrink: the halo grows with the member
+                    // count, so scale the member budget by the observed
+                    // occupancy ratio — strictly decreasing (worst >
+                    // table), clamped to the feasible floor.  Subtracting
+                    // the raw overflow instead would overshoot straight
+                    // to one-member shards on dense graphs.
+                    cap = (cap * table / worst).max(min_cap).min(cap - 1);
+                }
+            }
+        }
+    }
+
+    /// One packing attempt at member budget `cap`.  `samples[v]` is node
+    /// v's pre-drawn neighbor sample (budget-independent).
+    fn try_pack(
+        samples: &[Vec<Option<usize>>],
+        sample: usize,
+        table: usize,
+        groups: &[Vec<usize>],
+        cap: usize,
+    ) -> Result<PackOutcome> {
+        let n = samples.len();
+
+        // Greedy bin packing of whole groups, in group order.
+        let mut member_sets: Vec<Vec<usize>> = Vec::new();
+        let mut current: Vec<usize> = Vec::new();
+        for g in groups {
+            if g.is_empty() {
+                continue;
+            }
+            if !current.is_empty() && current.len() + g.len() > cap {
+                member_sets.push(std::mem::take(&mut current));
+            }
+            current.extend_from_slice(g);
+        }
+        if !current.is_empty() {
+            member_sets.push(current);
+        }
+
+        let mut home = vec![(usize::MAX, usize::MAX); n];
+        for (s, ms) in member_sets.iter().enumerate() {
+            for (slot, &v) in ms.iter().enumerate() {
+                if v >= n || home[v].0 != usize::MAX {
+                    return Err(Error::Graph(format!("node {v} misassigned in shard plan")));
+                }
+                home[v] = (s, slot);
+            }
+        }
+        if home.iter().any(|&(s, _)| s == usize::MAX) {
+            return Err(Error::Graph("shard plan leaves nodes unassigned".into()));
+        }
+
+        // Halos: the out-of-shard sampled neighbors of each shard's
+        // members (the sampler is deterministic, so this set is exact).
+        let mut halos = Vec::with_capacity(member_sets.len());
+        let mut worst = 0usize;
+        for (s, ms) in member_sets.iter().enumerate() {
+            let mut halo: Vec<usize> = ms
+                .iter()
+                .flat_map(|&v| samples[v].iter())
+                .flatten()
+                .copied()
+                .filter(|&g| home[g].0 != s)
+                .collect();
+            halo.sort_unstable();
+            halo.dedup();
+            worst = worst.max(ms.len() + halo.len());
+            halos.push(halo);
+        }
+        if worst > table {
+            return Ok(PackOutcome::Overflow(worst));
+        }
+
+        // Remap every member's sample row to local slots.
+        let mut halo_sites: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+        let shards: Vec<Shard> = member_sets
+            .into_iter()
+            .zip(halos)
+            .enumerate()
+            .map(|(s, (members, halo))| {
+                for (j, &g) in halo.iter().enumerate() {
+                    halo_sites[g].push((s, members.len() + j));
+                }
+                let mut nbr_rows = Vec::with_capacity(members.len() * sample);
+                for &v in &members {
+                    for &o in &samples[v] {
+                        nbr_rows.push(match o {
+                            None => -1,
+                            Some(g) if home[g].0 == s => home[g].1 as i32,
+                            Some(g) => {
+                                let j = halo.binary_search(&g).expect("halo holds the neighbor");
+                                (members.len() + j) as i32
+                            }
+                        });
+                    }
+                }
+                Shard { members, halo, nbr_rows }
+            })
+            .collect();
+
+        let plan = ShardPlan { table, sample, num_nodes: n, shards, home, halo_sites };
+        plan.validate()?;
+        Ok(PackOutcome::Fits(plan))
+    }
+
+    /// Structural validation of the plan's invariants (module docs).
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = vec![false; self.num_nodes];
+        for (s, shard) in self.shards.iter().enumerate() {
+            if shard.slots() > self.table {
+                return Err(Error::Graph(format!(
+                    "shard {s}: {} slots exceed the {}-row table",
+                    shard.slots(),
+                    self.table
+                )));
+            }
+            if shard.nbr_rows.len() != shard.members.len() * self.sample {
+                return Err(Error::Graph(format!("shard {s}: neighbor-row arity mismatch")));
+            }
+            for (slot, &v) in shard.members.iter().enumerate() {
+                if v >= self.num_nodes || seen[v] || self.home[v] != (s, slot) {
+                    return Err(Error::Graph(format!("node {v} misassigned in shard plan")));
+                }
+                seen[v] = true;
+            }
+            for w in shard.halo.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(Error::Graph(format!("shard {s}: halo not sorted/distinct")));
+                }
+            }
+            for &g in &shard.halo {
+                if g >= self.num_nodes || self.home[g].0 == s {
+                    return Err(Error::Graph(format!("shard {s}: bad halo node {g}")));
+                }
+            }
+            // Every sampled index lands in-shard.
+            for &ix in &shard.nbr_rows {
+                if ix != -1 && !(0..shard.slots() as i32).contains(&ix) {
+                    return Err(Error::Graph(format!(
+                        "shard {s}: neighbor slot {ix} outside {} occupied rows",
+                        shard.slots()
+                    )));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(Error::Graph("shard plan leaves nodes unassigned".into()));
+        }
+        Ok(())
+    }
+
+    pub fn table(&self) -> usize {
+        self.table
+    }
+
+    pub fn sample(&self) -> usize {
+        self.sample
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn is_single_shard(&self) -> bool {
+        self.shards.len() <= 1
+    }
+
+    /// Largest halo over all shards (0 when the plan needs none).
+    pub fn max_halo(&self) -> usize {
+        self.shards.iter().map(|s| s.halo.len()).max().unwrap_or(0)
+    }
+
+    /// Worst occupied-slot count over all shards.
+    pub fn max_slots(&self) -> usize {
+        self.shards.iter().map(Shard::slots).max().unwrap_or(0)
+    }
+
+    /// The member `(shard, slot)` owning `node`.  Panics on an
+    /// out-of-range node — callers bounds-check against
+    /// [`ShardPlan::num_nodes`] first.
+    pub fn home(&self, node: usize) -> (usize, usize) {
+        self.home[node]
+    }
+
+    /// Every `(shard, slot)` replicating `node` as a halo row.
+    pub fn halo_sites(&self, node: usize) -> &[(usize, usize)] {
+        &self.halo_sites[node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{fixed_size, generate, locality};
+    use crate::testing::{forall, Rng};
+
+    fn sampler() -> NeighborSampler {
+        NeighborSampler::new(4, 7)
+    }
+
+    #[test]
+    fn single_shard_is_the_identity_mapping() {
+        let g = generate::regular(48, 6, 3).unwrap();
+        let s = sampler();
+        let p = ShardPlan::build(&g, &s, 64).unwrap();
+        assert!(p.is_single_shard());
+        assert_eq!(p.num_shards(), 1);
+        let shard = &p.shards()[0];
+        assert_eq!(shard.members, (0..48).collect::<Vec<_>>());
+        assert!(shard.halo.is_empty());
+        for v in 0..48 {
+            assert_eq!(p.home(v), (0, v));
+            assert!(p.halo_sites(v).is_empty());
+        }
+        // Pre-remapped rows equal the global sampler rows (slot == id).
+        assert_eq!(shard.nbr_rows, s.sample_batch(&g, &(0..48).collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn oversized_graph_shards_and_covers_every_node_once() {
+        let g = generate::regular(256, 6, 3).unwrap();
+        let p = ShardPlan::build(&g, &sampler(), 64).unwrap();
+        assert!(p.num_shards() >= 4, "256 nodes in 64-row tables: {}", p.num_shards());
+        assert!(p.max_slots() <= 64);
+        let mut seen = vec![0usize; 256];
+        for shard in p.shards() {
+            for &v in &shard.members {
+                seen[v] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn halos_are_exactly_the_out_of_shard_sampled_neighbors() {
+        let g = generate::regular(200, 8, 11).unwrap();
+        let s = sampler();
+        let p = ShardPlan::build(&g, &s, 64).unwrap();
+        for (si, shard) in p.shards().iter().enumerate() {
+            let mut expect: Vec<usize> = shard
+                .members
+                .iter()
+                .flat_map(|&v| s.sample(&g, v))
+                .flatten()
+                .filter(|&nb| p.home(nb).0 != si)
+                .collect();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(shard.halo, expect, "shard {si}");
+        }
+    }
+
+    #[test]
+    fn neighbor_rows_remap_back_to_the_global_sample() {
+        let g = generate::regular(200, 8, 11).unwrap();
+        let s = sampler();
+        let p = ShardPlan::build(&g, &s, 64).unwrap();
+        for shard in p.shards() {
+            for (slot, &v) in shard.members.iter().enumerate() {
+                let row = shard.member_nbr_row(slot, p.sample());
+                let global = s.sample(&g, v);
+                assert_eq!(row.len(), global.len());
+                for (&local, g_nb) in row.iter().zip(global) {
+                    match g_nb {
+                        None => assert_eq!(local, -1),
+                        Some(nb) => assert_eq!(shard.local_node(local as usize), nb),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_clustering_keeps_clusters_whole() {
+        let g = generate::regular(256, 6, 3).unwrap();
+        let c = fixed_size(256, 8).unwrap();
+        let p = ShardPlan::from_clustering(&g, &sampler(), 64, &c).unwrap();
+        assert!(p.num_shards() > 1);
+        for members in &c.clusters {
+            let shard_of: Vec<usize> = members.iter().map(|&v| p.home(v).0).collect();
+            assert!(shard_of.windows(2).all(|w| w[0] == w[1]), "cluster spans shards");
+        }
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn halo_sites_mirror_the_halo_rows() {
+        let g = generate::regular(256, 6, 3).unwrap();
+        let p = ShardPlan::build(&g, &sampler(), 64).unwrap();
+        for (si, shard) in p.shards().iter().enumerate() {
+            for (j, &gid) in shard.halo.iter().enumerate() {
+                let slot = shard.members.len() + j;
+                assert!(p.halo_sites(gid).contains(&(si, slot)));
+                assert_eq!(shard.local_node(slot), gid);
+            }
+        }
+        let total_halo: usize = p.shards().iter().map(|s| s.halo.len()).sum();
+        let total_sites: usize = (0..256).map(|v| p.halo_sites(v).len()).sum();
+        assert_eq!(total_halo, total_sites);
+    }
+
+    #[test]
+    fn degenerate_tables_are_rejected() {
+        let g = generate::regular(16, 4, 1).unwrap();
+        assert!(ShardPlan::build(&g, &sampler(), 0).is_err());
+        // A cluster bigger than the table can never be kept whole.
+        let c = fixed_size(16, 10).unwrap();
+        assert!(ShardPlan::from_clustering(&g, &sampler(), 8, &c).is_err());
+        // Clustering must cover the graph.
+        let wrong = fixed_size(10, 5).unwrap();
+        assert!(ShardPlan::from_clustering(&g, &sampler(), 64, &wrong).is_err());
+    }
+
+    #[test]
+    fn empty_graph_builds_an_empty_plan() {
+        let g = Csr::from_edges(0, &[]).unwrap();
+        let p = ShardPlan::build(&g, &sampler(), 64).unwrap();
+        assert_eq!(p.num_shards(), 0);
+        assert_eq!(p.max_halo(), 0);
+        p.validate().unwrap();
+    }
+
+    /// Any graph shards successfully once the table holds one member plus
+    /// a full sample halo — and the resulting plan always satisfies the
+    /// structural invariants.
+    #[test]
+    fn property_plans_are_complete_and_in_table() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(120) + 1;
+            let sample = rng.index(6) + 1;
+            let table = sample + 1 + rng.index(40);
+            let g = generate::uniform(n.max(2), n * 3, rng.next_u64()).unwrap();
+            let s = NeighborSampler::new(sample, rng.next_u64());
+            let p = ShardPlan::build(&g, &s, table).unwrap();
+            p.validate().unwrap();
+            assert!(p.max_slots() <= table);
+            let members: usize = p.shards().iter().map(|sh| sh.members.len()).sum();
+            assert_eq!(members, g.num_nodes());
+            // Halos are exact: recompute independently.
+            for (si, shard) in p.shards().iter().enumerate() {
+                let mut expect: Vec<usize> = shard
+                    .members
+                    .iter()
+                    .flat_map(|&v| s.sample(&g, v))
+                    .flatten()
+                    .filter(|&nb| p.home(nb).0 != si)
+                    .collect();
+                expect.sort_unstable();
+                expect.dedup();
+                assert_eq!(shard.halo, expect);
+            }
+        });
+    }
+
+    /// Cluster-preserving plans keep every cluster in one shard, under
+    /// both partitioners, whenever packing is feasible.
+    #[test]
+    fn property_cluster_plans_never_split_clusters() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(100) + 2;
+            let k = rng.index(8) + 1;
+            let sample = rng.index(4) + 1;
+            let table = (k + sample * k + 1 + rng.index(32)).max(sample + 2);
+            let g = generate::uniform(n, n * 2, rng.next_u64()).unwrap();
+            let s = NeighborSampler::new(sample, rng.next_u64());
+            for c in [fixed_size(g.num_nodes(), k).unwrap(), locality(&g, k).unwrap()] {
+                match ShardPlan::from_clustering(&g, &s, table, &c) {
+                    Ok(p) => {
+                        p.validate().unwrap();
+                        for members in &c.clusters {
+                            let first = p.home(members[0]).0;
+                            assert!(members.iter().all(|&v| p.home(v).0 == first));
+                        }
+                    }
+                    // Tight tables may genuinely not fit a cluster + halo.
+                    Err(_) => assert!(table < k + sample * k),
+                }
+            }
+        });
+    }
+}

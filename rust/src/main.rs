@@ -23,7 +23,7 @@ use ima_gnn::coordinator::{CentralizedLeader, GcnLayerBinding, InferenceService,
 use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
 use ima_gnn::experiments::{
-    hybrid_target, scaling_sweep, table2, Fig8, HybridSweep, NetsimSweep, Table1,
+    hybrid_target, scaling_sweep, table2, Fig8, HybridSweep, NetsimSweep, ServingSweep, Table1,
 };
 use ima_gnn::graph::generate;
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
@@ -79,7 +79,8 @@ fn print_help() {
          netsim     packet-level contention-aware fabric simulation (E9)\n  \
          tune       hybrid operating-point autotuner, emits BENCH_hybrid.json (E11)\n  \
          perf       hot-kernel perf baseline, emits BENCH_perf.json (E10)\n  \
-         serve      serve GCN-layer inference over the PJRT artifacts\n  \
+         serve      serve GCN-layer inference over the PJRT artifacts; --sweep runs\n             \
+         the E12 sharded-serving sweep, emits BENCH_serving.json\n  \
          area       silicon-area report for both accelerator presets\n  \
          info       artifact manifest + platform info\n  \
          help       this message"
@@ -413,10 +414,29 @@ fn cmd_perf(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "serve GCN inference over PJRT")
         .opt("requests", "requests to serve", Some("64"))
-        .opt("nodes", "graph nodes (<= artifact table)", Some("48"))
+        .opt("nodes", "graph nodes (shards when > artifact table)", Some("48"))
         .opt("degree", "graph degree", Some("6"))
-        .opt("artifacts", "artifact directory", None);
+        .opt("artifacts", "artifact directory", None)
+        .opt("cap", "max materialized nodes per dataset (sweep)", Some("512"))
+        .opt("rounds", "serving rounds per dataset (sweep)", Some("3"))
+        .opt("json", "sweep artifact path", Some("BENCH_serving.json"))
+        .flag("sweep", "run the E12 sharded-serving sweep (no PJRT needed)");
     let args = cmd.parse(argv)?;
+
+    if args.flag("sweep") {
+        let sweep =
+            ServingSweep::run(args.usize_or("cap", 512)?, args.usize_or("rounds", 3)?.max(1))?;
+        sweep.render().print();
+        let sharded = sweep.rows.iter().filter(|r| r.shards > 1).count();
+        println!(
+            "{sharded}/{} dataset samples exceed the artifact table and serve through shards",
+            sweep.rows.len()
+        );
+        let path = args.get_or("json", "BENCH_serving.json").to_string();
+        std::fs::write(&path, sweep.to_json())?;
+        println!("wrote {path}");
+        return Ok(());
+    }
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)

@@ -152,6 +152,24 @@ pub fn pjrt_artifacts_ready(artifact_dir: &std::path::Path) -> bool {
     true
 }
 
+/// The `gcn_layer_small` test binding the serving tests share (batch 16,
+/// sample 4, feature 64, hidden 32, table 64) — the same shape the AOT
+/// test artifact is built with.  Replaces the copy-pasted inline manifest
+/// fixture the leader / semi / sharded-serving tests used to carry.
+pub fn gcn_layer_binding() -> crate::coordinator::GcnLayerBinding {
+    let doc = r#"{"version": 1, "artifacts": [
+        {"name": "gcn_layer_small", "file": "f",
+         "inputs": [], "outputs": [],
+         "config": {"batch": 16, "sample": 4, "feature": 64,
+                    "hidden": 32, "table": 64}}]}"#;
+    let m = crate::runtime::Manifest::parse(std::path::Path::new("/fixture"), doc)
+        .expect("fixture manifest parses");
+    crate::coordinator::GcnLayerBinding::from_spec(
+        m.get("gcn_layer_small").expect("fixture artifact exists"),
+    )
+    .expect("fixture binding is complete")
+}
+
 /// Assert two floats agree to a relative tolerance (absolute near zero).
 #[track_caller]
 pub fn assert_close(got: f64, want: f64, rtol: f64) {

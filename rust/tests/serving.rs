@@ -139,7 +139,7 @@ fn semi_decentralized_round_covers_every_node() {
     let weights: Vec<f32> =
         (0..b.feature * b.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
     let feature = b.feature;
-    let semi = SemiCoordinator::new(
+    let mut semi = SemiCoordinator::new(
         b,
         graph,
         clustering,
@@ -179,7 +179,7 @@ fn from_operating_point_round_is_bit_identical_to_hand_construction() {
     let workload = GnnWorkload::gcn("semi-tuned", 64, 8);
 
     let point = OperatingPoint::semi(8, 10.0, Partitioner::FixedSize);
-    let tuned = SemiCoordinator::from_operating_point(
+    let mut tuned = SemiCoordinator::from_operating_point(
         binding(&dir),
         graph.clone(),
         weights.clone(),
@@ -187,7 +187,7 @@ fn from_operating_point_round_is_bit_identical_to_hand_construction() {
         &point,
     )
     .unwrap();
-    let hand = SemiCoordinator::new(
+    let mut hand = SemiCoordinator::new(
         b,
         graph,
         fixed_size(48, 8).unwrap(),

@@ -1,0 +1,548 @@
+//! Integration: table-sharded serving through the shared round engine.
+//!
+//! The assembly-level tests run everywhere (no PJRT needed): they compare
+//! the engine's assembled artifact inputs bit-for-bit against the
+//! unsharded seed pipeline (single shard) and against a hand-split
+//! per-shard reference (multi shard).  The `pjrt_*` tests additionally
+//! execute the batches and compare served outputs; they skip with a
+//! printed reason when the backend or the AOT artifacts are absent.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ima_gnn::coordinator::{
+    CentralizedLeader, GcnLayerBinding, InferenceService, Request, SemiCoordinator,
+};
+use ima_gnn::cores::{FeatureMatrix, GnnWorkload};
+use ima_gnn::graph::{fixed_size, generate, NeighborSampler, ShardPlan};
+use ima_gnn::runtime::Tensor;
+use ima_gnn::testing::{forall, gcn_layer_binding, Rng};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn pjrt_ready() -> bool {
+    ima_gnn::testing::pjrt_artifacts_ready(&artifact_dir())
+}
+
+/// Deterministic per-node features for an `n × feature` graph.
+fn feature_rows(n: usize, feature: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..feature).map(|_| rng.f64_in(0.0, 1.0) as f32).collect())
+        .collect()
+}
+
+/// Hand-computed local slot of `node` inside `shard` — a linear search
+/// over members + halo, independent of the plan's precomputed rows.
+fn local_slot(plan: &ShardPlan, shard: usize, node: usize) -> i32 {
+    let sh = &plan.shards()[shard];
+    if let Some(p) = sh.members.iter().position(|&m| m == node) {
+        return p as i32;
+    }
+    let h = sh
+        .halo
+        .iter()
+        .position(|&m| m == node)
+        .expect("every sampled neighbor must be resident in-shard");
+    (sh.members.len() + h) as i32
+}
+
+/// Hand-built per-shard feature table: occupied slots carry their node's
+/// features, the tail rows stay zero.
+fn reference_table(
+    plan: &ShardPlan,
+    shard: usize,
+    rows: &[Vec<f32>],
+    table: usize,
+    feature: usize,
+) -> Vec<f32> {
+    let sh = &plan.shards()[shard];
+    let mut t = vec![0.0f32; table * feature];
+    for slot in 0..sh.slots() {
+        let node = sh.local_node(slot);
+        t[slot * feature..(slot + 1) * feature].copy_from_slice(&rows[node]);
+    }
+    t
+}
+
+/// Acceptance: a graph wider than the artifact table constructs through
+/// both deployments — the seed's "shard the graph" rejection is gone —
+/// and the resulting plans satisfy the coverage/halo invariants.
+#[test]
+fn oversized_graphs_construct_in_both_deployments() {
+    let b = gcn_layer_binding();
+    let graph = generate::regular(256, 6, 3).unwrap();
+    let weights = vec![0.02f32; b.feature * b.hidden];
+
+    let leader = CentralizedLeader::new(
+        b.clone(),
+        graph.clone(),
+        weights.clone(),
+        &GnnWorkload::gcn("shard", 64, 6),
+        Duration::ZERO,
+    )
+    .unwrap();
+    let plan = leader.engine().plan();
+    assert!(plan.num_shards() > 1, "256 nodes must shard over a 64-row table");
+    assert!(plan.max_slots() <= b.table);
+
+    let semi = SemiCoordinator::new(
+        b.clone(),
+        graph.clone(),
+        fixed_size(256, 8).unwrap(),
+        weights,
+        &GnnWorkload::gcn("shard", 64, 8),
+    )
+    .unwrap();
+    assert!(semi.engine().plan().num_shards() > 1);
+
+    // Coverage: every node is a member of exactly one shard, and halos
+    // are exactly the out-of-shard sampled neighbors (recomputed with an
+    // independent sampler instance).
+    let sampler = NeighborSampler::new(b.sample, 7);
+    for plan in [leader.engine().plan(), semi.engine().plan()] {
+        let mut seen = vec![0usize; 256];
+        for shard in plan.shards() {
+            for &m in &shard.members {
+                seen[m] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "membership multiplicity: {seen:?}");
+        for (si, shard) in plan.shards().iter().enumerate() {
+            let mut expect: Vec<usize> = shard
+                .members
+                .iter()
+                .flat_map(|&v| sampler.sample(&graph, v))
+                .flatten()
+                .filter(|&nb| plan.home(nb).0 != si)
+                .collect();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(shard.halo, expect, "shard {si} halo mismatch");
+        }
+    }
+}
+
+/// On a single-shard graph the engine's assembled inputs are bit-identical
+/// to the unsharded seed pipeline: global-id gather, global-id neighbor
+/// sampling, last-node batch padding, full-table tensor.
+#[test]
+fn single_shard_assembly_is_bit_identical_to_the_seed_path() {
+    let b = gcn_layer_binding();
+    let graph = generate::regular(48, 6, 3).unwrap();
+    let rows = feature_rows(48, b.feature, 2);
+    let mut leader = CentralizedLeader::new(
+        b.clone(),
+        graph.clone(),
+        vec![0.01; b.feature * b.hidden],
+        &GnnWorkload::gcn("seed", 64, 6),
+        Duration::ZERO,
+    )
+    .unwrap();
+    assert!(leader.engine().plan().is_single_shard());
+    for (node, f) in rows.iter().enumerate() {
+        leader.upload(node, f).unwrap();
+    }
+    leader.end_round();
+
+    let nodes: Vec<usize> = vec![9, 0, 31, 17, 17, 4];
+    let got = leader.engine().assemble(&nodes).unwrap();
+    assert_eq!(got.len(), 1);
+    let sb = &got[0];
+
+    // The seed path, reconstructed from first principles.
+    let mut padded = nodes.clone();
+    padded.resize(b.batch, *nodes.last().unwrap());
+    let want_x: Vec<f32> = padded.iter().flat_map(|&v| rows[v].iter().copied()).collect();
+    let sampler = NeighborSampler::new(b.sample, 7);
+    assert_eq!(sb.x_self, want_x, "x_self diverged from the seed gather");
+    assert_eq!(sb.nbr_idx, sampler.sample_batch(&graph, &padded), "nbr_idx diverged");
+
+    let mut want_table = vec![0.0f32; b.table * b.feature];
+    for (v, r) in rows.iter().enumerate() {
+        want_table[v * b.feature..(v + 1) * b.feature].copy_from_slice(r);
+    }
+    let table = leader.engine().table_tensor(0).unwrap().as_f32().unwrap();
+    assert_eq!(table, &want_table[..], "table tensor diverged from the seed gather");
+}
+
+/// Multi-shard assembly equals a hand-split per-shard reference: requests
+/// group by home shard, x_self gathers home rows, neighbor indices remap
+/// to hand-searched local slots, and each shard's table tensor replicates
+/// members + halo rows exactly.
+#[test]
+fn sharded_assembly_matches_a_hand_split_reference() {
+    let b = gcn_layer_binding();
+    let graph = generate::regular(256, 6, 3).unwrap();
+    let rows = feature_rows(256, b.feature, 5);
+    let mut leader = CentralizedLeader::new(
+        b.clone(),
+        graph.clone(),
+        vec![0.01; b.feature * b.hidden],
+        &GnnWorkload::gcn("split", 64, 6),
+        Duration::ZERO,
+    )
+    .unwrap();
+    for (node, f) in rows.iter().enumerate() {
+        leader.upload(node, f).unwrap();
+    }
+    leader.end_round();
+    let plan = leader.engine().plan().clone();
+    let sampler = NeighborSampler::new(b.sample, 7);
+
+    // Requests spread over every shard, deliberately interleaved.
+    let nodes: Vec<usize> = (0..plan.num_shards())
+        .flat_map(|s| plan.shards()[s].members.iter().copied().take(3))
+        .rev()
+        .collect();
+    let batches = leader.engine().assemble(&nodes).unwrap();
+    assert_eq!(batches.len(), plan.num_shards(), "three requests per shard, one batch each");
+
+    let mut answered = vec![false; nodes.len()];
+    for sb in &batches {
+        // Every node in the batch lives in the batch's shard.
+        for (&v, &pos) in sb.nodes.iter().zip(&sb.positions) {
+            assert_eq!(nodes[pos], v);
+            assert_eq!(plan.home(v).0, sb.shard);
+            answered[pos] = true;
+        }
+        // Hand-split reference for this shard.
+        let mut padded = sb.nodes.clone();
+        padded.resize(b.batch, *sb.nodes.last().unwrap());
+        let want_x: Vec<f32> =
+            padded.iter().flat_map(|&v| rows[v].iter().copied()).collect();
+        assert_eq!(sb.x_self, want_x, "shard {} x_self", sb.shard);
+        let mut want_nbr = Vec::with_capacity(b.batch * b.sample);
+        for &v in &padded {
+            for o in sampler.sample(&graph, v) {
+                want_nbr.push(match o {
+                    None => -1,
+                    Some(g) => local_slot(&plan, sb.shard, g),
+                });
+            }
+        }
+        assert_eq!(sb.nbr_idx, want_nbr, "shard {} nbr_idx", sb.shard);
+        let want_table = reference_table(&plan, sb.shard, &rows, b.table, b.feature);
+        let table = leader.engine().table_tensor(sb.shard).unwrap().as_f32().unwrap();
+        assert_eq!(table, &want_table[..], "shard {} table", sb.shard);
+    }
+    assert!(answered.iter().all(|&a| a), "every request answered exactly once");
+}
+
+/// Double-buffer semantics survive the per-shard split end to end: staged
+/// uploads are invisible until the barrier, then home slots and every
+/// halo replica flip together, and the round version advances once.
+#[test]
+fn upload_visibility_and_versioning_survive_sharding() {
+    let b = gcn_layer_binding();
+    let graph = generate::regular(256, 6, 3).unwrap();
+    let mut leader = CentralizedLeader::new(
+        b.clone(),
+        graph,
+        vec![0.01; b.feature * b.hidden],
+        &GnnWorkload::gcn("vers", 64, 6),
+        Duration::ZERO,
+    )
+    .unwrap();
+    leader.end_round(); // round 1: all zeros
+    assert_eq!(leader.engine().version(), 1);
+
+    // Pick a node that is halo-replicated somewhere.
+    let plan = leader.engine().plan().clone();
+    let node = (0..256)
+        .find(|&v| !plan.halo_sites(v).is_empty())
+        .expect("a 6-regular graph sharded 4+ ways must have halos");
+    leader.upload(node, &vec![7.5; b.feature]).unwrap();
+    // Staged: neither the home row nor any replica is visible yet.
+    assert_eq!(leader.engine().read(node).unwrap()[0], 0.0);
+    for &(hs, slot) in plan.halo_sites(node) {
+        let t = leader.engine().table_tensor(hs).unwrap().as_f32().unwrap();
+        assert_eq!(t[slot * b.feature], 0.0);
+    }
+    leader.end_round();
+    assert_eq!(leader.engine().version(), 2);
+    assert_eq!(leader.engine().read(node).unwrap()[0], 7.5);
+    for &(hs, slot) in plan.halo_sites(node) {
+        let t = leader.engine().table_tensor(hs).unwrap().as_f32().unwrap();
+        assert_eq!(t[slot * b.feature], 7.5, "halo replica out of sync after barrier");
+    }
+}
+
+/// Property: for arbitrary graphs, assembling a full round through the
+/// engine answers every node exactly once, within table-sized shards.
+#[test]
+fn property_full_round_assembly_covers_every_node_once() {
+    let b = gcn_layer_binding();
+    forall(12, |rng: &mut Rng| {
+        let n = rng.index(300) + 1;
+        let g = generate::uniform(n.max(2), n * 3, rng.next_u64()).unwrap();
+        let n = g.num_nodes();
+        let mut leader = CentralizedLeader::new(
+            b.clone(),
+            g,
+            vec![0.01; b.feature * b.hidden],
+            &GnnWorkload::gcn("prop", 64, 4),
+            Duration::ZERO,
+        )
+        .unwrap();
+        leader.end_round();
+        let all: Vec<usize> = (0..n).collect();
+        let batches = leader.engine().assemble(&all).unwrap();
+        let mut seen = vec![0usize; n];
+        for sb in &batches {
+            assert!(sb.nodes.len() <= b.batch);
+            assert_eq!(sb.x_self.len(), b.batch * b.feature);
+            assert_eq!(sb.nbr_idx.len(), b.batch * b.sample);
+            let slots = leader.engine().plan().shards()[sb.shard].slots();
+            for &ix in &sb.nbr_idx {
+                assert!(ix == -1 || (ix as usize) < slots, "sampled index escapes shard");
+            }
+            for &v in &sb.nodes {
+                seen[v] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "coverage: {seen:?}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// PJRT execution tests (skip with a reason when the backend is absent).
+// ---------------------------------------------------------------------
+
+fn service() -> InferenceService {
+    InferenceService::start(artifact_dir()).expect("run `make artifacts` first")
+}
+
+fn real_binding() -> GcnLayerBinding {
+    let manifest = ima_gnn::runtime::Manifest::load(&artifact_dir()).unwrap();
+    GcnLayerBinding::from_spec(manifest.get("gcn_layer_small").unwrap()).unwrap()
+}
+
+/// Execute one hand-built batch directly against the artifact.
+fn infer_reference(
+    svc: &InferenceService,
+    b: &GcnLayerBinding,
+    x_self: Vec<f32>,
+    nbr_idx: Vec<i32>,
+    table: Vec<f32>,
+    weights: &[f32],
+) -> Vec<f32> {
+    let inputs = vec![
+        Tensor::f32(&[b.batch, b.feature], x_self).unwrap(),
+        Tensor::i32(&[b.batch, b.sample], nbr_idx).unwrap(),
+        Tensor::f32(&[b.table, b.feature], table).unwrap(),
+        Tensor::f32(&[b.feature, b.hidden], weights.to_vec()).unwrap(),
+    ];
+    svc.infer(&b.artifact, inputs).unwrap()[0].as_f32().unwrap().to_vec()
+}
+
+/// A single-shard graph served through the refactored leader produces
+/// outputs bit-identical to the seed pipeline executed by hand (gather →
+/// global sampling → full table → PJRT → slice).
+#[test]
+fn pjrt_single_shard_serving_matches_the_hand_built_seed_pipeline() {
+    if !pjrt_ready() {
+        return;
+    }
+    let svc = service();
+    let b = real_binding();
+    let n = b.table.min(48);
+    let graph = generate::regular(n, 6.min(n - 1), 3).unwrap();
+    let rows = feature_rows(n, b.feature, 21);
+    let mut rng = Rng::new(22);
+    let weights: Vec<f32> =
+        (0..b.feature * b.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    let mut leader = CentralizedLeader::new(
+        b.clone(),
+        graph.clone(),
+        weights.clone(),
+        &GnnWorkload::gcn("pjrt-seed", b.feature, 6),
+        Duration::from_millis(50),
+    )
+    .unwrap();
+    assert!(leader.engine().plan().is_single_shard());
+    for (node, f) in rows.iter().enumerate() {
+        leader.upload(node, f).unwrap();
+    }
+    leader.end_round();
+
+    let request_nodes: Vec<usize> = (0..b.batch).map(|i| (i * 3) % n).collect();
+    let mut responses = Vec::new();
+    for (id, &node) in request_nodes.iter().enumerate() {
+        responses.extend(leader.submit(&svc, Request { id: id as u64, node }).unwrap());
+    }
+    assert_eq!(responses.len(), b.batch);
+
+    // Seed pipeline by hand.
+    let sampler = NeighborSampler::new(b.sample, 7);
+    let x_self: Vec<f32> =
+        request_nodes.iter().flat_map(|&v| rows[v].iter().copied()).collect();
+    let mut table = vec![0.0f32; b.table * b.feature];
+    for (v, r) in rows.iter().enumerate() {
+        table[v * b.feature..(v + 1) * b.feature].copy_from_slice(r);
+    }
+    let flat = infer_reference(
+        &svc,
+        &b,
+        x_self,
+        sampler.sample_batch(&graph, &request_nodes),
+        table,
+        &weights,
+    );
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(
+            r.output,
+            flat[i * b.hidden..(i + 1) * b.hidden].to_vec(),
+            "response {i} diverged from the seed pipeline"
+        );
+    }
+}
+
+/// Acceptance: a graph with `num_nodes > binding.table` serves through
+/// the sharded leader with outputs bit-identical to hand-split per-shard
+/// PJRT executions.
+#[test]
+fn pjrt_sharded_leader_matches_hand_split_per_shard_inference() {
+    if !pjrt_ready() {
+        return;
+    }
+    let svc = service();
+    let b = real_binding();
+    let n = b.table * 4; // e.g. 256 nodes against the 64-row artifact
+    let graph = generate::regular(n, 6, 3).unwrap();
+    let rows = feature_rows(n, b.feature, 31);
+    let mut rng = Rng::new(32);
+    let weights: Vec<f32> =
+        (0..b.feature * b.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    let mut leader = CentralizedLeader::new(
+        b.clone(),
+        graph.clone(),
+        weights.clone(),
+        &GnnWorkload::gcn("pjrt-shard", b.feature, 6),
+        Duration::from_millis(50),
+    )
+    .unwrap();
+    let plan = leader.engine().plan().clone();
+    assert!(plan.num_shards() > 1);
+    for (node, f) in rows.iter().enumerate() {
+        leader.upload(node, f).unwrap();
+    }
+    leader.end_round();
+
+    // Half a batch from shard 0, half from the last shard, then drain.
+    let last = plan.num_shards() - 1;
+    let request_nodes: Vec<usize> = plan.shards()[0]
+        .members
+        .iter()
+        .take(b.batch / 2)
+        .chain(plan.shards()[last].members.iter().take(b.batch / 2))
+        .copied()
+        .collect();
+    let mut responses = Vec::new();
+    for (id, &node) in request_nodes.iter().enumerate() {
+        responses.extend(leader.submit(&svc, Request { id: id as u64, node }).unwrap());
+    }
+    responses.extend(leader.drain(&svc).unwrap());
+    assert_eq!(responses.len(), request_nodes.len());
+
+    // Hand-split reference, one PJRT call per shard group.
+    let sampler = NeighborSampler::new(b.sample, 7);
+    let mut reference: Vec<Vec<f32>> = vec![Vec::new(); request_nodes.len()];
+    for shard in [0, last] {
+        let group: Vec<(usize, usize)> = request_nodes
+            .iter()
+            .enumerate()
+            .filter(|&(_, &v)| plan.home(v).0 == shard)
+            .map(|(i, &v)| (i, v))
+            .collect();
+        let mut padded: Vec<usize> = group.iter().map(|&(_, v)| v).collect();
+        padded.resize(b.batch, group.last().unwrap().1);
+        let x_self: Vec<f32> = padded.iter().flat_map(|&v| rows[v].iter().copied()).collect();
+        let mut nbr = Vec::with_capacity(b.batch * b.sample);
+        for &v in &padded {
+            for o in sampler.sample(&graph, v) {
+                nbr.push(match o {
+                    None => -1,
+                    Some(g) => local_slot(&plan, shard, g),
+                });
+            }
+        }
+        let table = reference_table(&plan, shard, &rows, b.table, b.feature);
+        let flat = infer_reference(&svc, &b, x_self, nbr, table, &weights);
+        for (k, &(pos, _)) in group.iter().enumerate() {
+            reference[pos] = flat[k * b.hidden..(k + 1) * b.hidden].to_vec();
+        }
+    }
+    for r in &responses {
+        let pos = request_nodes.iter().position(|&v| v == r.node).unwrap();
+        assert_eq!(r.output, reference[pos], "node {} diverged from hand split", r.node);
+    }
+}
+
+/// Acceptance: the semi round on an oversized graph covers every node
+/// exactly once and matches hand-split per-cluster PJRT executions.
+#[test]
+fn pjrt_sharded_semi_round_matches_hand_split_clusters() {
+    if !pjrt_ready() {
+        return;
+    }
+    let svc = service();
+    let b = real_binding();
+    let n = b.table * 4;
+    let cs = 8;
+    let graph = generate::regular(n, 6, 3).unwrap();
+    let clustering = fixed_size(n, cs).unwrap();
+    let rows = feature_rows(n, b.feature, 41);
+    let mut rng = Rng::new(42);
+    let weights: Vec<f32> =
+        (0..b.feature * b.hidden).map(|_| rng.f64_in(-0.2, 0.2) as f32).collect();
+    let mut semi = SemiCoordinator::new(
+        b.clone(),
+        graph.clone(),
+        clustering.clone(),
+        weights.clone(),
+        &GnnWorkload::gcn("pjrt-semi", b.feature, cs),
+    )
+    .unwrap();
+    let plan = semi.engine().plan().clone();
+    assert!(plan.num_shards() > 1);
+
+    let features = FeatureMatrix::from_fn(n, b.feature, |r, c| rows[r][c]);
+    let results = semi.round(&svc, &features).unwrap();
+    assert_eq!(results.len(), n);
+    let sampler = NeighborSampler::new(b.sample, 7);
+    for (node, r) in results.iter().enumerate() {
+        assert_eq!(r.node, node, "round must cover nodes in order");
+        assert_eq!(r.head, clustering.assignment[node]);
+        assert_eq!(r.output.len(), b.hidden);
+    }
+    // Hand-split reference for a few clusters (first, middle, last).
+    let picks = [0, clustering.num_clusters() / 2, clustering.num_clusters() - 1];
+    for &head in &picks {
+        let members = &clustering.clusters[head];
+        let shard = plan.home(members[0]).0;
+        let mut padded = members.clone();
+        padded.resize(b.batch, *members.last().unwrap());
+        let x_self: Vec<f32> = padded.iter().flat_map(|&v| rows[v].iter().copied()).collect();
+        let mut nbr = Vec::with_capacity(b.batch * b.sample);
+        for &v in &padded {
+            for o in sampler.sample(&graph, v) {
+                nbr.push(match o {
+                    None => -1,
+                    Some(g) => local_slot(&plan, shard, g),
+                });
+            }
+        }
+        let table = reference_table(&plan, shard, &rows, b.table, b.feature);
+        let flat = infer_reference(&svc, &b, x_self, nbr, table, &weights);
+        for (k, &v) in members.iter().enumerate() {
+            assert_eq!(
+                results[v].output,
+                flat[k * b.hidden..(k + 1) * b.hidden].to_vec(),
+                "cluster {head} node {v} diverged"
+            );
+        }
+    }
+}
