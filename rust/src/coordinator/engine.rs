@@ -119,6 +119,49 @@ impl LatencyProvider {
                 .total(),
         }
     }
+
+    // Communication-only counterparts — the per-batch barrier cost the
+    // E13 traffic engine prices (`traffic::ServiceModel`).  The variant
+    // dispatch lives here, next to the total-latency forms, so adding a
+    // provider variant stays a one-file change; `Netsim` carries one
+    // pinned figure and prices the whole barrier with it.
+
+    /// Centralized uplink-gather cost of one batch (Eq. 5; `Clustered`
+    /// coincides with `Analytic` — the gather has no cluster structure).
+    pub fn centralized_comm(&self, model: &NetModel, topo: Topology) -> Time {
+        match *self {
+            LatencyProvider::Netsim(t) => t,
+            LatencyProvider::Analytic | LatencyProvider::Clustered { .. } => {
+                model.communicate_latency(Setting::Centralized, topo)
+            }
+        }
+    }
+
+    /// Decentralized cluster-exchange cost of one batch (Eq. 4 / its
+    /// boundary-aware E11 variant).
+    pub fn decentralized_comm(&self, model: &NetModel, topo: Topology) -> Time {
+        match *self {
+            LatencyProvider::Netsim(t) => t,
+            LatencyProvider::Analytic => {
+                model.communicate_latency(Setting::Decentralized, topo)
+            }
+            LatencyProvider::Clustered { intra_fraction } => {
+                model.communicate_latency_clustered(topo, intra_fraction)
+            }
+        }
+    }
+
+    /// Semi overlay-exchange cost of one batch (E8 / its clustered E11
+    /// variant).
+    pub fn semi_comm(&self, model: &NetModel, topo: Topology, head_capacity: f64) -> Time {
+        match *self {
+            LatencyProvider::Netsim(t) => t,
+            LatencyProvider::Analytic => model.semi_latency(topo, head_capacity).communicate,
+            LatencyProvider::Clustered { intra_fraction } => {
+                model.semi_latency_clustered(topo, head_capacity, intra_fraction).communicate
+            }
+        }
+    }
 }
 
 /// One assembled per-shard execution: the artifact's `x_self` / `nbr_idx`

@@ -7,7 +7,6 @@
 //! real path, a model in tests), and reports p50/p90/p99/max.
 
 use crate::error::{Error, Result};
-use crate::testing::Rng;
 use crate::units::Time;
 
 /// Trace generation parameters.
@@ -32,31 +31,31 @@ pub struct Arrival {
 }
 
 /// Generate a Poisson arrival trace (thinned when diurnal).
+///
+/// A thin wrapper over the E13 arrival generators
+/// ([`crate::traffic::ArrivalProcess`]) so one code path owns arrival
+/// sampling: the legacy diurnal profile `0.5·(1 + sin(t/T·2π))·rate`
+/// is exactly the [`DiurnalCurve`] with mean `rate/2`, full swing and
+/// one period per trace, thinned at its peak rate — same draw sequence,
+/// same streams per seed.
+///
+/// [`DiurnalCurve`]: crate::workload::DiurnalCurve
 pub fn generate_trace(cfg: &TraceConfig) -> Result<Vec<Arrival>> {
+    use crate::traffic::ArrivalProcess;
+    use crate::workload::DiurnalCurve;
     if !(cfg.rate_per_s > 0.0) || !(cfg.duration_s > 0.0) || cfg.nodes == 0 {
         return Err(Error::Coordinator("trace needs positive rate/duration/nodes".into()));
     }
-    let mut rng = Rng::new(cfg.seed);
-    let mut out = Vec::new();
-    let mut t = 0.0f64;
-    loop {
-        // exponential inter-arrival at the peak rate
-        let u = rng.f64().max(1e-12);
-        t += -u.ln() / cfg.rate_per_s;
-        if t >= cfg.duration_s {
-            break;
-        }
-        if cfg.diurnal {
-            // thinning: accept with the instantaneous relative intensity
-            let phase = t / cfg.duration_s * std::f64::consts::TAU;
-            let intensity = 0.5 * (1.0 + phase.sin()).clamp(0.0, 2.0) / 1.0;
-            if !rng.chance(intensity.min(1.0)) {
-                continue;
-            }
-        }
-        out.push(Arrival { at: Time::s(t), node: rng.index(cfg.nodes) });
-    }
-    Ok(out)
+    let process = if cfg.diurnal {
+        ArrivalProcess::Diurnal(DiurnalCurve::new(
+            cfg.rate_per_s / 2.0,
+            1.0,
+            Time::s(cfg.duration_s),
+        )?)
+    } else {
+        ArrivalProcess::Poisson { rate: cfg.rate_per_s }
+    };
+    process.generate(Time::s(cfg.duration_s), cfg.nodes, cfg.seed)
 }
 
 /// Latency distribution summary.
@@ -93,12 +92,22 @@ impl LatencyStats {
         self.quantile(0.90)
     }
 
+    pub fn p95(&self) -> Time {
+        self.quantile(0.95)
+    }
+
     pub fn p99(&self) -> Time {
         self.quantile(0.99)
     }
 
     pub fn max(&self) -> Time {
         *self.sorted.last().unwrap()
+    }
+
+    /// Fraction of samples at or under `limit` (SLO attainment).
+    pub fn fraction_within(&self, limit: Time) -> f64 {
+        let within = self.sorted.partition_point(|&t| t <= limit);
+        within as f64 / self.sorted.len() as f64
     }
 
     pub fn mean(&self) -> Time {
@@ -220,10 +229,17 @@ mod tests {
         .unwrap();
         assert_close(s.p50().as_ms(), 50.0, 1e-12);
         assert_close(s.p90().as_ms(), 90.0, 1e-12);
+        assert_close(s.p95().as_ms(), 95.0, 1e-12);
         assert_close(s.p99().as_ms(), 99.0, 1e-12);
         assert_close(s.max().as_ms(), 100.0, 1e-12);
         assert_close(s.mean().as_ms(), 50.5, 1e-12);
         assert!(LatencyStats::from_samples(vec![]).is_err());
+        // fraction_within counts the sorted prefix directly (no
+        // quantile-rank reconstruction): 1..=100 ms samples.
+        assert_close(s.fraction_within(Time::ms(7.0)), 0.07, 1e-12);
+        assert_close(s.fraction_within(Time::ms(6.5)), 0.06, 1e-12);
+        assert_close(s.fraction_within(Time::ZERO), 0.0, 1e-12);
+        assert_close(s.fraction_within(Time::s(1.0)), 1.0, 1e-12);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
 use crate::par;
 use crate::report::{pct, speedup, BarSeries, Table};
 use crate::testing::{gcn_layer_binding, Rng};
+use crate::traffic::{deployment_shape, open_loop, ArrivalProcess, BatchPolicy};
 use crate::units::Time;
 
 /// Paper values of Table 1 (for side-by-side reporting).
@@ -966,6 +967,359 @@ impl ServingSweep {
     }
 }
 
+/// E13 batching policy: the artifact batch with a short coalescing
+/// deadline (the serving batcher's defaults, in virtual time).
+pub const TRAFFIC_MAX_BATCH: usize = 64;
+/// E13 batch-coalescing deadline (ms).
+pub const TRAFFIC_WAIT_MS: f64 = 2.0;
+/// E13 response-latency SLO (ms) the attainment column reports against.
+pub const TRAFFIC_SLO_MS: f64 = 25.0;
+/// E13 offered-rate grid, as fractions of the centralized leader's
+/// saturation rate (`ServiceModel::saturation_rate` at the full batch).
+pub const TRAFFIC_REL_RATES: [f64; 6] = [0.1, 0.3, 0.6, 0.9, 1.2, 2.0];
+
+/// One (dataset, rate, setting) point of the E13 traffic sweep.  All
+/// fields are pure functions of the point's seed and config — the
+/// parallel byte-identical contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficPoint {
+    /// `centralized` | `semi` | `decentralized`.
+    pub setting: &'static str,
+    /// Offered system rate as a fraction of centralized saturation.
+    pub rel_rate: f64,
+    /// Offered system-wide rate (requests/second over the whole fleet).
+    pub rate_per_s: f64,
+    /// Rate the simulated representative queue sees (exact uniform
+    /// Poisson split over the shape's queues).
+    pub queue_rate_per_s: f64,
+    /// Queues in the full shape (leader: 1; semi: cluster heads;
+    /// decentralized: devices).
+    pub servers_total: usize,
+    pub offered: usize,
+    pub utilization: f64,
+    pub mean_wait_s: f64,
+    pub mean_batch: f64,
+    pub max_queue_depth: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    /// Fraction of responses within the E13 SLO.
+    pub slo_attainment: f64,
+    /// Little's-law residual (round-off on a correct engine; asserted
+    /// on every point in `rust/tests/traffic_cross_validation.rs`).
+    pub littles_gap: f64,
+}
+
+/// One dataset row of the E13 sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficRow {
+    pub dataset: String,
+    pub nodes: usize,
+    pub cluster_size: usize,
+    /// Cluster-head queues in the semi shape.
+    pub clusters: usize,
+    /// Intra-edge fraction of the capped sample's fixed-size clustering
+    /// (feeds the Clustered latency provider for semi/decentralized).
+    pub intra_fraction: f64,
+    /// Centralized saturation rate the grid normalizes against.
+    pub sat_rate_per_s: f64,
+    /// `TRAFFIC_REL_RATES × {centralized, semi, decentralized}` points,
+    /// rate-major.
+    pub points: Vec<TrafficPoint>,
+    /// First swept rate where the semi overlay's p95 beats the leader's
+    /// — the "at what request rate does semi overtake centralized?"
+    /// answer (requests/second; `None` if the leader never loses).
+    pub crossover_per_s: Option<f64>,
+}
+
+impl TrafficRow {
+    /// The point for (`rel_rate` index, setting name).
+    pub fn point(&self, rel_idx: usize, setting: &str) -> &TrafficPoint {
+        self.points
+            .iter()
+            .find(|p| p.setting == setting && p.rel_rate == TRAFFIC_REL_RATES[rel_idx])
+            .expect("sweep emits every (rate, setting) point")
+    }
+}
+
+/// E13 — arrival-driven traffic sweep: the four Table 2 datasets driven
+/// by open-loop Poisson streams (load that does not back off under
+/// congestion) across `TRAFFIC_REL_RATES`, each deployment
+/// shape queueing per its topology (leader / cluster heads / devices),
+/// batching under the size-or-deadline policy and serving at the
+/// boundary-aware modeled round latencies.  Emits `BENCH_traffic.json`.
+///
+/// Each shape simulates one representative queue at the exact uniform
+/// Poisson split of the system rate (`DeploymentQueues::per_queue_rate`)
+/// — servers are independent, so the per-queue latency distribution is
+/// the system's.  Rows are computed via `par::par_try_map`; output is
+/// byte-identical to the sequential run (asserted in tests).
+pub struct TrafficSweep {
+    pub rows: Vec<TrafficRow>,
+    pub materialize_cap: usize,
+    /// Target requests simulated per point (the Poisson stream's
+    /// expected count).
+    pub requests: usize,
+}
+
+impl TrafficSweep {
+    pub fn run(materialize_cap: usize, requests: usize) -> Result<TrafficSweep> {
+        TrafficSweep::run_with_threads(materialize_cap, requests, par::available_threads())
+    }
+
+    /// [`Self::run`] with an explicit worker count (1 = sequential).
+    pub fn run_with_threads(
+        materialize_cap: usize,
+        requests: usize,
+        threads: usize,
+    ) -> Result<TrafficSweep> {
+        if requests == 0 {
+            return Err(crate::error::Error::Sim("traffic sweep needs requests > 0".into()));
+        }
+        let all = datasets::all();
+        let targets: Vec<(usize, DatasetStats)> = all.into_iter().enumerate().collect();
+        let rows = par::par_try_map(&targets, threads, |(di, d)| {
+            TrafficSweep::row(*di, d, materialize_cap, requests)
+        })?;
+        Ok(TrafficSweep { rows, materialize_cap, requests })
+    }
+
+    fn row(
+        di: usize,
+        d: &DatasetStats,
+        cap: usize,
+        requests: usize,
+    ) -> Result<TrafficRow> {
+        let model = NetModel::fig8(d)?;
+        let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
+        // Boundary realism: the capped sample's fixed-size clustering
+        // supplies the intra-edge fraction the Clustered provider scales
+        // the semi / decentralized exchanges by (the E11 model).
+        let sample = d.materialize(cap, 42)?;
+        let cs_sample = d.avg_cs.clamp(1, sample.num_nodes());
+        let clustering = fixed_size(sample.num_nodes(), cs_sample)?;
+        let intra = clustering.intra_edge_fraction(&sample);
+        let clustered = LatencyProvider::Clustered { intra_fraction: intra };
+
+        // One shape constructor for sweep/CLI/examples; the centralized
+        // gather ignores the cluster structure, so passing the clustered
+        // provider uniformly prices exactly Analytic for the leader.
+        let mut shapes = Vec::with_capacity(3);
+        for kind in
+            [SettingKind::Centralized, SettingKind::Semi, SettingKind::Decentralized]
+        {
+            let (queues, service) = deployment_shape(kind, clustered, &model, topo)?;
+            shapes.push((kind.name(), queues, service));
+        }
+        let clusters = shapes[1].1.servers();
+        let sat = shapes[0].2.saturation_rate(TRAFFIC_MAX_BATCH);
+        let policy = BatchPolicy::Deadline {
+            max: TRAFFIC_MAX_BATCH,
+            max_wait: Time::ms(TRAFFIC_WAIT_MS),
+        };
+
+        let mut points = Vec::with_capacity(TRAFFIC_REL_RATES.len() * shapes.len());
+        for (ri, &rel) in TRAFFIC_REL_RATES.iter().enumerate() {
+            let rate = rel * sat;
+            for (si, &(name, queues, service)) in shapes.iter().enumerate() {
+                let queue_rate = queues.per_queue_rate(rate);
+                let horizon = Time::s(requests as f64 / queue_rate);
+                let seed = 0xE13_000 + (di as u64) * 64 + (ri as u64) * 8 + si as u64;
+                let arrivals = ArrivalProcess::Poisson { rate: queue_rate }
+                    .generate(horizon, d.nodes, seed)?;
+                let r = open_loop(1, &service, policy, &arrivals)?;
+                points.push(TrafficPoint {
+                    setting: name,
+                    rel_rate: rel,
+                    rate_per_s: rate,
+                    queue_rate_per_s: queue_rate,
+                    servers_total: queues.servers(),
+                    offered: r.offered,
+                    utilization: r.utilization,
+                    mean_wait_s: r.mean_wait.as_s(),
+                    mean_batch: r.mean_batch,
+                    max_queue_depth: r.max_queue_depth,
+                    mean_s: r.latency.mean().as_s(),
+                    p50_s: r.latency.p50().as_s(),
+                    p95_s: r.latency.p95().as_s(),
+                    p99_s: r.latency.p99().as_s(),
+                    slo_attainment: r.slo_attainment(Time::ms(TRAFFIC_SLO_MS)),
+                    littles_gap: r.littles_law_gap(),
+                });
+            }
+        }
+        let crossover_per_s = TRAFFIC_REL_RATES.iter().find_map(|&rel| {
+            let p95_at = |s: &str| {
+                points
+                    .iter()
+                    .find(|p| p.setting == s && p.rel_rate == rel)
+                    .expect("sweep emits every (rate, setting) point")
+                    .p95_s
+            };
+            (p95_at("semi") < p95_at("centralized")).then_some(rel * sat)
+        });
+        Ok(TrafficRow {
+            dataset: d.name.to_string(),
+            nodes: d.nodes,
+            cluster_size: d.avg_cs,
+            clusters,
+            intra_fraction: intra,
+            sat_rate_per_s: sat,
+            points,
+            crossover_per_s,
+        })
+    }
+
+    /// Worst Little's-law residual across every point (round-off).
+    pub fn max_littles_gap(&self) -> f64 {
+        self.rows
+            .iter()
+            .flat_map(|r| r.points.iter().map(|p| p.littles_gap))
+            .fold(0.0, f64::max)
+    }
+
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "E13 — traffic sweep: p95 response vs offered rate (batch {}, \
+                 deadline {} ms, SLO {} ms)",
+                TRAFFIC_MAX_BATCH, TRAFFIC_WAIT_MS, TRAFFIC_SLO_MS
+            ),
+            &[
+                "Dataset",
+                "Rate (req/s)",
+                "x sat",
+                "Cent p95",
+                "Semi p95",
+                "Dec p95",
+                "Cent util",
+                "Winner",
+            ],
+        );
+        for r in &self.rows {
+            for (ri, &rel) in TRAFFIC_REL_RATES.iter().enumerate() {
+                let c = r.point(ri, "centralized");
+                let s = r.point(ri, "semi");
+                let dd = r.point(ri, "decentralized");
+                let winner = if s.p95_s < c.p95_s && s.p95_s < dd.p95_s {
+                    "semi"
+                } else if c.p95_s < dd.p95_s {
+                    "centralized"
+                } else {
+                    "decentralized"
+                };
+                t.row(&[
+                    r.dataset.clone(),
+                    format!("{:.0}", c.rate_per_s),
+                    format!("{rel:.2}"),
+                    Time::s(c.p95_s).to_string(),
+                    Time::s(s.p95_s).to_string(),
+                    Time::s(dd.p95_s).to_string(),
+                    pct(c.utilization),
+                    winner.into(),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// One line per dataset: the crossover finding.
+    pub fn summary(&self) -> String {
+        self.rows
+            .iter()
+            .map(|r| match r.crossover_per_s {
+                Some(x) => format!(
+                    "{}: semi p95 overtakes centralized at ~{:.0} req/s \
+                     ({:.2}x leader saturation)",
+                    r.dataset,
+                    x,
+                    x / r.sat_rate_per_s
+                ),
+                None => format!("{}: centralized p95 wins at every swept rate", r.dataset),
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// The `BENCH_traffic.json` artifact (byte-identical across thread
+    /// counts and per seed — asserted in tests).
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| format!("{v:.6e}");
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for r in &self.rows {
+            let mut pts = Vec::with_capacity(r.points.len());
+            for p in &r.points {
+                pts.push(format!(
+                    "        {{\"setting\": \"{}\", \"rel_rate\": {}, \"rate_per_s\": {}, \
+                     \"queue_rate_per_s\": {}, \"servers_total\": {}, \"offered\": {}, \
+                     \"utilization\": {}, \"mean_wait_s\": {}, \"mean_batch\": {}, \
+                     \"max_queue_depth\": {}, \"mean_s\": {}, \"p50_s\": {}, \
+                     \"p95_s\": {}, \"p99_s\": {}, \"slo_attainment\": {}, \
+                     \"littles_gap\": {}}}",
+                    p.setting,
+                    num(p.rel_rate),
+                    num(p.rate_per_s),
+                    num(p.queue_rate_per_s),
+                    p.servers_total,
+                    p.offered,
+                    num(p.utilization),
+                    num(p.mean_wait_s),
+                    num(p.mean_batch),
+                    p.max_queue_depth,
+                    num(p.mean_s),
+                    num(p.p50_s),
+                    num(p.p95_s),
+                    num(p.p99_s),
+                    num(p.slo_attainment),
+                    num(p.littles_gap),
+                ));
+            }
+            let crossover = match r.crossover_per_s {
+                Some(x) => num(x),
+                None => "null".into(),
+            };
+            rows.push(format!(
+                "    {{\"dataset\": \"{}\", \"nodes\": {}, \"cluster_size\": {}, \
+                 \"clusters\": {}, \"intra_fraction\": {}, \"sat_rate_per_s\": {}, \
+                 \"crossover_per_s\": {}, \"points\": [\n{}\n    ]}}",
+                r.dataset,
+                r.nodes,
+                r.cluster_size,
+                r.clusters,
+                num(r.intra_fraction),
+                num(r.sat_rate_per_s),
+                crossover,
+                pts.join(",\n"),
+            ));
+        }
+        let crossovers: Vec<String> = self
+            .rows
+            .iter()
+            .filter_map(|r| {
+                r.crossover_per_s
+                    .map(|x| format!("{{\"dataset\": \"{}\", \"rate_per_s\": {}}}", r.dataset, num(x)))
+            })
+            .collect();
+        format!(
+            "{{\n  \"experiment\": \"traffic_sweep\",\n  \"config\": {{\
+             \"materialize_cap\": {}, \"requests\": {}, \"max_batch\": {}, \
+             \"deadline_ms\": {}, \"slo_ms\": {}, \"rel_rates\": [{}]}},\n  \
+             \"summary\": {{\"max_littles_gap\": {}, \"crossovers\": [{}]}},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            self.materialize_cap,
+            self.requests,
+            TRAFFIC_MAX_BATCH,
+            num(TRAFFIC_WAIT_MS),
+            num(TRAFFIC_SLO_MS),
+            TRAFFIC_REL_RATES.map(num).join(", "),
+            num(self.max_littles_gap()),
+            crossovers.join(", "),
+            rows.join(",\n"),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1163,6 +1517,72 @@ mod tests {
         let strip = |s: &ServingRow| ServingRow { wall_s: None, ..s.clone() };
         let stripped: Vec<ServingRow> = timed.rows.iter().map(strip).collect();
         assert_eq!(stripped, seq.rows);
+    }
+
+    /// E13 acceptance: under sustained load the winner flips — the
+    /// leader's single queue wins the unloaded regime, saturates as the
+    /// offered rate approaches its gather ceiling, and the cluster-head
+    /// overlay overtakes it at a *finite, reported* request rate.
+    #[test]
+    fn traffic_sweep_finds_a_finite_semi_crossover_under_load() {
+        let sweep = TrafficSweep::run_with_threads(200, 2_000, 1).unwrap();
+        assert_eq!(sweep.rows.len(), 4);
+        let hot = TRAFFIC_REL_RATES.len() - 1;
+        for r in &sweep.rows {
+            assert_eq!(r.points.len(), TRAFFIC_REL_RATES.len() * 3);
+            // Low load: the fast V2X gather wins (the one-shot Fig. 8
+            // regime the paper measures).
+            let c0 = r.point(0, "centralized");
+            let s0 = r.point(0, "semi");
+            assert!(
+                c0.p95_s < s0.p95_s,
+                "{}: leader must win at low load ({} vs {})",
+                r.dataset,
+                c0.p95_s,
+                s0.p95_s
+            );
+            // The decentralized ad-hoc exchange never wins a latency SLO.
+            let d0 = r.point(0, "decentralized");
+            assert!(d0.p95_s > s0.p95_s, "{}", r.dataset);
+            // Deep overload: the leader saturates...
+            let c_hot = r.point(hot, "centralized");
+            assert!(c_hot.utilization > 0.9, "{}: util {}", r.dataset, c_hot.utilization);
+            assert!(c_hot.p95_s > c0.p95_s * 2.0, "{}: no congestion growth", r.dataset);
+            // ...and every point's accounting is consistent.
+            for p in &r.points {
+                assert!(p.littles_gap < 1e-9, "{} {}: {}", r.dataset, p.setting, p.littles_gap);
+                assert!(p.utilization > 0.0 && p.utilization <= 1.0 + 1e-12);
+                assert!(p.offered > 0 && p.p95_s >= p.p50_s && p.p99_s >= p.p95_s);
+            }
+        }
+        // The headline: a finite centralized→semi crossover rate exists
+        // (LiveJournal's fleet and Citeseer's fat messages both flip).
+        let lj = sweep.rows.iter().find(|r| r.dataset == "LiveJournal").unwrap();
+        let x = lj.crossover_per_s.expect("LiveJournal must have a crossover");
+        assert!(x.is_finite() && x > 0.0 && x <= 2.0 * lj.sat_rate_per_s);
+        let cs = sweep.rows.iter().find(|r| r.dataset == "Citeseer").unwrap();
+        assert!(cs.crossover_per_s.is_some(), "Citeseer must have a crossover");
+        assert!(sweep.max_littles_gap() < 1e-9);
+        assert!(sweep.summary().contains("req/s"));
+
+        let json = sweep.to_json();
+        assert!(json.contains("\"experiment\": \"traffic_sweep\""));
+        assert!(json.contains("\"crossovers\": [{\"dataset\": "));
+        assert!(json.contains("LiveJournal"));
+        let table = sweep.render().render();
+        assert!(table.contains("semi") && table.contains("Citeseer"));
+    }
+
+    /// E13 determinism: the parallel sweep emits byte-identical
+    /// `BENCH_traffic.json` to the sequential run, per seed.
+    #[test]
+    fn traffic_sweep_parallel_is_byte_identical_to_sequential() {
+        let seq = TrafficSweep::run_with_threads(150, 400, 1).unwrap();
+        let par4 = TrafficSweep::run_with_threads(150, 400, 4).unwrap();
+        assert_eq!(seq.rows, par4.rows);
+        assert_eq!(seq.to_json(), par4.to_json());
+        let again = TrafficSweep::run_with_threads(150, 400, 1).unwrap();
+        assert_eq!(seq.to_json(), again.to_json());
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod testing;
+pub mod traffic;
 pub mod units;
 pub mod workload;
 

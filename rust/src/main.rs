@@ -9,6 +9,7 @@
 //! ima-gnn fig8                    # E3: Fig. 8 latency breakdown
 //! ima-gnn scaling                 # E4: crossbar-count scaling study
 //! ima-gnn simulate [options]      # DES over either deployment
+//! ima-gnn traffic [options]       # E13: arrival-driven traffic engine
 //! ima-gnn tune [options]          # E11: hybrid operating-point autotuner
 //! ima-gnn perf [options]          # E10: hot-kernel perf baseline
 //! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
@@ -17,13 +18,16 @@
 
 use std::time::Duration;
 
-use ima_gnn::autotune::{Autotuner, TunerConfig};
+use ima_gnn::autotune::{Autotuner, SettingKind, TunerConfig};
 use ima_gnn::cli::Command;
-use ima_gnn::coordinator::{CentralizedLeader, GcnLayerBinding, InferenceService, Request};
+use ima_gnn::coordinator::{
+    CentralizedLeader, GcnLayerBinding, InferenceService, LatencyProvider, Request,
+};
 use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
 use ima_gnn::experiments::{
     hybrid_target, scaling_sweep, table2, Fig8, HybridSweep, NetsimSweep, ServingSweep, Table1,
+    TrafficSweep,
 };
 use ima_gnn::graph::generate;
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
@@ -32,6 +36,12 @@ use ima_gnn::report::{speedup, Table};
 use ima_gnn::runtime::{default_artifact_dir, Manifest};
 use ima_gnn::sim::{simulate, SimConfig};
 use ima_gnn::testing::Rng;
+use ima_gnn::traffic::{
+    closed_loop, deployment_shape, md1_mean_wait, open_loop, ArrivalProcess, BatchPolicy,
+    ClosedLoopConfig, ThinkTime, TrafficReport,
+};
+use ima_gnn::units::Time;
+use ima_gnn::workload::DiurnalCurve;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -54,6 +64,7 @@ fn run(argv: &[String]) -> Result<()> {
         "scaling" => cmd_scaling(rest),
         "simulate" => cmd_simulate(rest),
         "netsim" => cmd_netsim(rest),
+        "traffic" => cmd_traffic(rest),
         "tune" => cmd_tune(rest),
         "perf" => cmd_perf(rest),
         "serve" => cmd_serve(rest),
@@ -77,8 +88,10 @@ fn print_help() {
          scaling    crossbar-count scaling study (§4.3)\n  \
          simulate   discrete-event simulation of either deployment\n  \
          netsim     packet-level contention-aware fabric simulation (E9)\n  \
+         traffic    arrival-driven traffic engine: queueing + dynamic batching + SLO\n             \
+         accounting per deployment shape; --sweep emits BENCH_traffic.json (E13)\n  \
          tune       hybrid operating-point autotuner, emits BENCH_hybrid.json (E11)\n  \
-         perf       hot-kernel perf baseline, emits BENCH_perf.json (E10)\n  \
+         perf       hot-kernel perf baseline, emits BENCH_perf.fresh.json; --check\n             gates against the committed BENCH_perf.json floors (E10)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts; --sweep runs\n             \
          the E12 sharded-serving sweep, emits BENCH_serving.json\n  \
          area       silicon-area report for both accelerator presets\n  \
@@ -305,6 +318,164 @@ fn cmd_netsim(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_traffic(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("traffic", "arrival-driven traffic engine (E13)")
+        .opt("dataset", "taxi | a Table 2 dataset (single-run mode)", Some("taxi"))
+        .opt("setting", "centralized | semi | decentralized", Some("centralized"))
+        .opt("rate", "offered system rate, requests/second", Some("5000"))
+        .opt("requests", "target requests per run / sweep point", Some("2000"))
+        .opt(
+            "arrival",
+            "poisson | diurnal | flash | closed (open-loop unless closed)",
+            Some("poisson"),
+        )
+        .opt("policy", "immediate | size | deadline", Some("deadline"))
+        .opt("batch", "max batch for size/deadline policies", Some("64"))
+        .opt("wait-ms", "deadline policy coalescing wait (ms)", Some("2"))
+        .opt("clients", "closed-loop fleet size", Some("64"))
+        .opt("think-ms", "closed-loop mean think time (ms)", Some("50"))
+        .opt("cap", "max materialized sample nodes (sweep)", Some("512"))
+        .opt("seed", "rng seed", Some("1"))
+        .opt("json", "sweep artifact path", Some("BENCH_traffic.json"))
+        .flag("sweep", "run the E13 rate x setting x dataset sweep");
+    let args = cmd.parse(argv)?;
+    let requests = args.usize_or("requests", 2_000)?.max(1);
+
+    if args.flag("sweep") {
+        let sweep = TrafficSweep::run(args.usize_or("cap", 512)?, requests)?;
+        sweep.render().print();
+        println!("{}", sweep.summary());
+        println!("max Little's-law gap: {:.3e} (round-off)", sweep.max_littles_gap());
+        let path = args.get_or("json", "BENCH_traffic.json").to_string();
+        std::fs::write(&path, sweep.to_json())?;
+        println!("wrote {path}");
+        return Ok(());
+    }
+
+    // Single-run mode: one deployment shape under one arrival process.
+    let dataset = args.get_or("dataset", "taxi").to_string();
+    let (name, model, topo) = if dataset.eq_ignore_ascii_case("taxi") {
+        (
+            "Taxi".to_string(),
+            NetModel::paper(&GnnWorkload::taxi())?,
+            Topology::taxi(),
+        )
+    } else {
+        let d = ima_gnn::graph::datasets::by_name(&dataset)?;
+        (
+            d.name.to_string(),
+            NetModel::fig8(&d)?,
+            Topology { nodes: d.nodes, cluster_size: d.avg_cs },
+        )
+    };
+    let kind = match args.get_or("setting", "centralized") {
+        "centralized" => SettingKind::Centralized,
+        "semi" => SettingKind::Semi,
+        "decentralized" => SettingKind::Decentralized,
+        other => return Err(Error::Usage(format!("unknown setting `{other}`"))),
+    };
+    let setting = kind.name();
+    let (queues, service) =
+        deployment_shape(kind, LatencyProvider::Analytic, &model, topo)?;
+    let policy = match args.get_or("policy", "deadline") {
+        "immediate" => BatchPolicy::Immediate,
+        "size" => BatchPolicy::Size { max: args.usize_or("batch", 64)?.max(1) },
+        "deadline" => BatchPolicy::Deadline {
+            max: args.usize_or("batch", 64)?.max(1),
+            max_wait: Time::ms(args.f64_or("wait-ms", 2.0)?),
+        },
+        other => return Err(Error::Usage(format!("unknown policy `{other}`"))),
+    };
+    let seed = args.usize_or("seed", 1)? as u64;
+    let rate = args.f64_or("rate", 5_000.0)?;
+    let queue_rate = queues.per_queue_rate(rate);
+    let arrival = args.get_or("arrival", "poisson").to_string();
+    let report: TrafficReport = if arrival == "closed" {
+        // A closed loop paces itself by fleet + think time; --rate
+        // prices nothing here, so the horizon is sized for ~`requests`
+        // client cycles instead of being derived from it.
+        let fleet = args.usize_or("clients", 64)?.max(1);
+        let think = Time::ms(args.f64_or("think-ms", 50.0)?);
+        let cycle = think + service.service(1);
+        let horizon = Time::s(requests as f64 * cycle.as_s() / fleet as f64);
+        closed_loop(
+            1,
+            &service,
+            policy,
+            &ClosedLoopConfig {
+                fleet,
+                think: ThinkTime::Exponential { mean: think },
+                horizon,
+                nodes: topo.nodes,
+                seed,
+            },
+        )?
+    } else {
+        if !(queue_rate > 0.0) {
+            return Err(Error::Usage("--rate must be > 0 for open-loop arrivals".into()));
+        }
+        let horizon = Time::s(requests as f64 / queue_rate);
+        let arrivals = match arrival.as_str() {
+            "poisson" => ArrivalProcess::Poisson { rate: queue_rate }
+                .generate(horizon, topo.nodes, seed)?,
+            // One demand cycle over the run, ±80% swing.
+            "diurnal" => ArrivalProcess::Diurnal(DiurnalCurve::new(queue_rate, 0.8, horizon)?)
+                .generate(horizon, topo.nodes, seed)?,
+            // 5x flash crowd over the middle fifth of the run.
+            "flash" => ArrivalProcess::FlashCrowd {
+                base: queue_rate,
+                boost: 5.0,
+                at: horizon * 0.4,
+                width: horizon * 0.2,
+            }
+            .generate(horizon, topo.nodes, seed)?,
+            other => {
+                return Err(Error::Usage(format!("unknown arrival process `{other}`")))
+            }
+        };
+        open_loop(1, &service, policy, &arrivals)?
+    };
+
+    let mut t = Table::new(
+        format!(
+            "traffic — {name} / {setting}: {} requests over 1 of {} queue(s) \
+             (service {} + {}/req)",
+            report.offered,
+            queues.servers(),
+            service.per_batch,
+            service.per_request,
+        ),
+        &["Metric", "Value"],
+    );
+    t.row(&["offered rate (queue)".into(), format!("{queue_rate:.1} req/s")]);
+    t.row(&["throughput".into(), format!("{:.1} req/s", report.throughput_per_s)]);
+    t.row(&["utilization".into(), format!("{:.1}%", report.utilization * 100.0)]);
+    t.row(&["mean wait".into(), report.mean_wait.to_string()]);
+    t.row(&["mean response".into(), report.latency.mean().to_string()]);
+    t.row(&["p50 / p95 / p99".into(), format!(
+        "{} / {} / {}",
+        report.latency.p50(),
+        report.latency.p95(),
+        report.latency.p99()
+    )]);
+    t.row(&["batches (mean size)".into(), format!(
+        "{} ({:.1})",
+        report.batches, report.mean_batch
+    )]);
+    t.row(&["max queue depth".into(), report.max_queue_depth.to_string()]);
+    t.row(&["Little's-law gap".into(), format!("{:.3e}", report.littles_law_gap())]);
+    t.print();
+    if matches!(policy, BatchPolicy::Immediate) {
+        if let Ok(w) = md1_mean_wait(queue_rate, service.service(1)) {
+            println!(
+                "M/D/1 Pollaczek-Khinchine mean wait at this point: {w} (simulated {})",
+                report.mean_wait
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_tune(argv: &[String]) -> Result<()> {
     let cmd = Command::new("tune", "hybrid operating-point autotuner (E11)")
         .opt("dataset", "all | taxi | a Table 2 dataset (full grid detail)", Some("all"))
@@ -397,7 +568,15 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
 
 fn cmd_perf(argv: &[String]) -> Result<()> {
     let cmd = Command::new("perf", "hot-kernel perf baseline (E10)")
-        .opt("json", "perf artifact path", Some("BENCH_perf.json"))
+        // The default output deliberately differs from the committed
+        // BENCH_perf.json regression-gate baseline so a bare `ima-gnn
+        // perf` can never overwrite the floors in the working tree.
+        .opt("json", "perf artifact path", Some("BENCH_perf.fresh.json"))
+        .opt(
+            "check",
+            "committed baseline to gate against (fails on >25% speedup regression)",
+            None,
+        )
         .flag("quick", "reduced measurement budget (smoke runs)");
     let args = cmd.parse(argv)?;
     let report = ima_gnn::perfbench::run(args.flag("quick"))?;
@@ -405,9 +584,37 @@ fn cmd_perf(argv: &[String]) -> Result<()> {
     for s in &report.speedups {
         println!("{:<24} {}  ({} vs {})", s.name, speedup(s.factor), s.fast, s.reference);
     }
-    let path = args.get_or("json", "BENCH_perf.json").to_string();
+    let path = args.get_or("json", "BENCH_perf.fresh.json").to_string();
     std::fs::write(&path, report.to_json())?;
     println!("wrote {path}");
+
+    if let Some(baseline_path) = args.get("check") {
+        let baseline = std::fs::read_to_string(baseline_path)?;
+        let rows = ima_gnn::perfbench::check_against(&report, &baseline)?;
+        let mut t = Table::new(
+            format!("perf regression gate vs {baseline_path} (floor: baseline x 0.75)"),
+            &["Headline", "Baseline", "Fresh", "Ratio", "Gate"],
+        );
+        for r in &rows {
+            t.row(&[
+                r.name.clone(),
+                format!("{:.3}x", r.baseline),
+                format!("{:.3}x", r.fresh),
+                format!("{:.2}", r.ratio),
+                if r.pass { "pass".into() } else { "FAIL".into() },
+            ]);
+        }
+        t.print();
+        let failed: Vec<&str> =
+            rows.iter().filter(|r| !r.pass).map(|r| r.name.as_str()).collect();
+        if !failed.is_empty() {
+            return Err(Error::Runtime(format!(
+                "perf regression gate failed (>25% below baseline): {}",
+                failed.join(", ")
+            )));
+        }
+        println!("perf regression gate passed ({} headlines)", rows.len());
+    }
     Ok(())
 }
 

@@ -158,6 +158,71 @@ impl PerfReport {
     }
 }
 
+/// Fraction of a baseline speedup factor a fresh run may lose before
+/// the CI gate fails: a >25% regression on any headline fails the job.
+pub const CHECK_MAX_REGRESSION: f64 = 0.25;
+
+/// One headline comparison of the `--check` regression gate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckRow {
+    pub name: String,
+    /// Committed baseline factor (a conservative floor — see
+    /// EXPERIMENTS.md E10).
+    pub baseline: f64,
+    /// Freshly measured factor.
+    pub fresh: f64,
+    /// `fresh / baseline`; passes at `>= 1 − CHECK_MAX_REGRESSION`.
+    pub ratio: f64,
+    pub pass: bool,
+}
+
+/// Compare a fresh report's `speedups[]` against the committed
+/// `BENCH_perf.json` baseline (the `ima-gnn perf --check` gate).
+///
+/// Every headline named in the baseline must exist in the fresh run and
+/// keep at least `1 − CHECK_MAX_REGRESSION` of its committed factor;
+/// a missing headline is itself a failure (a silently dropped benchmark
+/// must not pass the gate).  Returns one row per baseline headline;
+/// callers fail on any `!pass`.
+pub fn check_against(report: &PerfReport, baseline_json: &str) -> Result<Vec<CheckRow>> {
+    use crate::error::Error;
+    let doc = crate::json::parse(baseline_json)?;
+    let speedups = doc
+        .require("speedups")?
+        .as_arr()
+        .ok_or_else(|| Error::Runtime("baseline `speedups` must be an array".into()))?;
+    if speedups.is_empty() {
+        return Err(Error::Runtime("baseline has no speedup headlines to gate on".into()));
+    }
+    let mut rows = Vec::with_capacity(speedups.len());
+    for s in speedups {
+        let name = s
+            .require("name")?
+            .as_str()
+            .ok_or_else(|| Error::Runtime("baseline speedup `name` must be a string".into()))?
+            .to_string();
+        let baseline = s
+            .require("factor")?
+            .as_f64()
+            .ok_or_else(|| Error::Runtime(format!("baseline `{name}` factor must be a number")))?;
+        if !(baseline > 0.0) {
+            return Err(Error::Runtime(format!("baseline `{name}` factor must be > 0")));
+        }
+        let fresh = report.speedup(&name).ok_or_else(|| {
+            Error::Runtime(format!("baseline headline `{name}` missing from the fresh run"))
+        })?;
+        let ratio = fresh / baseline;
+        rows.push(CheckRow {
+            name,
+            baseline,
+            fresh,
+            ratio,
+            pass: ratio >= 1.0 - CHECK_MAX_REGRESSION,
+        });
+    }
+    Ok(rows)
+}
+
 fn budgets(quick: bool) -> (Duration, Duration) {
     if quick {
         (Duration::from_millis(10), Duration::from_millis(40))
@@ -346,5 +411,41 @@ mod tests {
         assert!(cases[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
         let speedups = doc.get("speedups").unwrap().as_arr().unwrap();
         assert_eq!(speedups.len(), 3);
+
+        // The regression gate round-trips through the artifact: a fresh
+        // run checked against its own JSON passes every headline with
+        // ratio ~1 (the artifact rounds factors to 3 decimals).
+        let rows = check_against(&report, &json).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.pass, "{}: self-check must pass", r.name);
+            assert!((r.ratio - 1.0).abs() < 1e-2, "{}: ratio {}", r.name, r.ratio);
+        }
+    }
+
+    #[test]
+    fn check_gate_fails_on_regressions_and_malformed_baselines() {
+        let report = run(true).unwrap();
+        // An absurdly high committed factor → >25% regression → fail.
+        let demanding = r#"{"speedups": [
+            {"name": "aggregate_512_binary", "factor": 1.0e9}]}"#;
+        let rows = check_against(&report, demanding).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(!rows[0].pass);
+        assert!(rows[0].ratio < 0.75);
+        // A factor floor of ~0 always passes.
+        let floor = r#"{"speedups": [
+            {"name": "aggregate_512_binary", "factor": 1.0e-6},
+            {"name": "mvm_512_8bit", "factor": 1.0e-6}]}"#;
+        assert!(check_against(&report, floor).unwrap().iter().all(|r| r.pass));
+        // A headline the fresh run no longer produces must fail loudly,
+        // as must malformed or empty baselines.
+        let missing = r#"{"speedups": [{"name": "gone_headline", "factor": 2.0}]}"#;
+        assert!(check_against(&report, missing).is_err());
+        assert!(check_against(&report, "{not json").is_err());
+        assert!(check_against(&report, r#"{"speedups": []}"#).is_err());
+        assert!(check_against(&report, r#"{"speedups": 7}"#).is_err());
+        let bad_factor = r#"{"speedups": [{"name": "aggregate_512_binary", "factor": 0}]}"#;
+        assert!(check_against(&report, bad_factor).is_err());
     }
 }

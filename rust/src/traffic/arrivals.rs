@@ -1,0 +1,231 @@
+//! Arrival processes for the traffic engine (E13).
+//!
+//! Open-loop streams are pre-generated as sorted [`Arrival`] lists —
+//! homogeneous Poisson, the diurnal taxi-demand curve
+//! ([`crate::workload::DiurnalCurve`], thinned against its peak rate) and
+//! a bursty flash-crowd profile.  Every stream is a pure function of
+//! (process, horizon, nodes, seed), so traffic runs are deterministic per
+//! seed and byte-identical across thread counts (the `BENCH_traffic.json`
+//! contract).  The closed-loop process (fixed fleet + think time) cannot
+//! be pre-generated — each client's next arrival depends on its previous
+//! completion — so it lives inside the engine's event loop
+//! ([`super::closed_loop`]); [`ThinkTime`] here only samples the think
+//! delays.
+
+use crate::coordinator::Arrival;
+use crate::error::{Error, Result};
+use crate::testing::Rng;
+use crate::units::Time;
+use crate::workload::DiurnalCurve;
+
+/// An open-loop arrival process: requests arrive whether or not earlier
+/// ones completed (the load does not back off under congestion).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Non-homogeneous Poisson following the taxi demand curve (thinning
+    /// against the curve's peak rate).
+    Diurnal(DiurnalCurve),
+    /// Flash crowd: Poisson at `base` except during the spike window
+    /// `[at, at + width)`, where the rate multiplies by `boost`.
+    FlashCrowd { base: f64, boost: f64, at: Time, width: Time },
+}
+
+impl ArrivalProcess {
+    /// Peak instantaneous rate — the thinning envelope.
+    pub fn peak_rate(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Diurnal(curve) => curve.peak_rate(),
+            ArrivalProcess::FlashCrowd { base, boost, .. } => base * boost.max(1.0),
+        }
+    }
+
+    /// Instantaneous rate at `t`.
+    pub fn rate_at(&self, t: Time) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rate } => rate,
+            ArrivalProcess::Diurnal(curve) => curve.rate(t),
+            ArrivalProcess::FlashCrowd { base, boost, at, width } => {
+                if t >= at && t < at + width {
+                    base * boost.max(1.0)
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Generate the sorted arrival stream over `[0, horizon)`, each
+    /// request targeting a uniform node in `0..nodes`.
+    ///
+    /// Draw order per candidate (part of the determinism contract the
+    /// cross-validation replica mirrors): inter-arrival exponential at
+    /// the peak rate, then the thinning acceptance draw (skipped for the
+    /// homogeneous case), then the node draw for accepted arrivals.
+    pub fn generate(&self, horizon: Time, nodes: usize, seed: u64) -> Result<Vec<Arrival>> {
+        if !(self.peak_rate() > 0.0) || !self.peak_rate().is_finite() {
+            return Err(Error::Sim("arrival process needs a positive finite rate".into()));
+        }
+        if !(horizon.as_s() > 0.0) || nodes == 0 {
+            return Err(Error::Sim("arrivals need a positive horizon and nodes".into()));
+        }
+        let peak = self.peak_rate();
+        let homogeneous = matches!(self, ArrivalProcess::Poisson { .. });
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            let u = rng.f64().max(1e-12);
+            t += -u.ln() / peak;
+            if t >= horizon.as_s() {
+                break;
+            }
+            if !homogeneous {
+                // Thinning: accept with the relative instantaneous rate.
+                let accept = self.rate_at(Time::s(t)) / peak;
+                if !rng.chance(accept) {
+                    continue;
+                }
+            }
+            out.push(Arrival { at: Time::s(t), node: rng.index(nodes) });
+        }
+        Ok(out)
+    }
+}
+
+/// Think-time distribution for the closed-loop fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ThinkTime {
+    /// Exponential with the given mean (the classic interactive model —
+    /// the fleet's aggregate offered load stays Poisson-like).
+    Exponential { mean: Time },
+    /// Fixed think time (periodic probing clients).
+    Fixed(Time),
+}
+
+impl ThinkTime {
+    pub fn mean(&self) -> Time {
+        match *self {
+            ThinkTime::Exponential { mean } => mean,
+            ThinkTime::Fixed(t) => t,
+        }
+    }
+
+    /// Draw one think delay.
+    pub fn sample(&self, rng: &mut Rng) -> Time {
+        match *self {
+            ThinkTime::Exponential { mean } => {
+                let u = rng.f64().max(1e-12);
+                mean * (-u.ln())
+            }
+            ThinkTime::Fixed(t) => t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_and_ordering() {
+        let p = ArrivalProcess::Poisson { rate: 1_000.0 };
+        let a = p.generate(Time::s(4.0), 32, 7).unwrap();
+        let expected = 4_000.0;
+        assert!(
+            (a.len() as f64 - expected).abs() < 0.1 * expected,
+            "got {} arrivals, expected ~{expected}",
+            a.len()
+        );
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "arrivals must be sorted");
+        assert!(a.iter().all(|x| x.node < 32 && x.at < Time::s(4.0)));
+    }
+
+    #[test]
+    fn streams_are_deterministic_per_seed() {
+        for p in [
+            ArrivalProcess::Poisson { rate: 500.0 },
+            ArrivalProcess::Diurnal(DiurnalCurve::new(500.0, 0.8, Time::s(1.0)).unwrap()),
+            ArrivalProcess::FlashCrowd {
+                base: 200.0,
+                boost: 5.0,
+                at: Time::s(1.0),
+                width: Time::s(0.5),
+            },
+        ] {
+            let a = p.generate(Time::s(2.0), 16, 3).unwrap();
+            let b = p.generate(Time::s(2.0), 16, 3).unwrap();
+            assert_eq!(a, b, "{p:?} must be deterministic per seed");
+            let c = p.generate(Time::s(2.0), 16, 4).unwrap();
+            assert_ne!(a, c, "{p:?} must vary with the seed");
+        }
+    }
+
+    #[test]
+    fn diurnal_thinning_tracks_the_curve() {
+        let curve = DiurnalCurve::new(2_000.0, 1.0, Time::s(2.0)).unwrap();
+        let a = ArrivalProcess::Diurnal(curve).generate(Time::s(2.0), 8, 11).unwrap();
+        // Volume over one full period ≈ base·period.
+        let expected = 2_000.0 * 2.0;
+        assert!((a.len() as f64 - expected).abs() < 0.1 * expected, "{}", a.len());
+        // First half-period (rising sine) must carry far more arrivals
+        // than the second (the trough clamps near zero).
+        let first = a.iter().filter(|x| x.at < Time::s(1.0)).count();
+        let second = a.len() - first;
+        assert!(first > 2 * second, "diurnal skew missing: {first} vs {second}");
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_in_the_spike_window() {
+        let p = ArrivalProcess::FlashCrowd {
+            base: 500.0,
+            boost: 10.0,
+            at: Time::s(1.0),
+            width: Time::s(0.2),
+        };
+        let a = p.generate(Time::s(2.0), 8, 5).unwrap();
+        let in_spike =
+            a.iter().filter(|x| x.at >= Time::s(1.0) && x.at < Time::s(1.2)).count();
+        // Spike: 0.2 s at 5000/s = 1000; background: 1.8 s at 500/s = 900.
+        let outside = a.len() - in_spike;
+        assert!(in_spike > outside, "spike must dominate: {in_spike} vs {outside}");
+        assert!((in_spike as f64 - 1_000.0).abs() < 150.0, "{in_spike}");
+        // boost < 1 clamps to the base rate (a flash crowd never thins).
+        let calm = ArrivalProcess::FlashCrowd {
+            base: 500.0,
+            boost: 0.1,
+            at: Time::s(1.0),
+            width: Time::s(0.2),
+        };
+        assert_eq!(calm.peak_rate(), 500.0);
+        assert_eq!(calm.rate_at(Time::s(1.1)), 500.0);
+    }
+
+    #[test]
+    fn think_time_sampling() {
+        let mut rng = Rng::new(9);
+        let exp = ThinkTime::Exponential { mean: Time::ms(10.0) };
+        let n = 4_000;
+        let mean: Time =
+            (0..n).map(|_| exp.sample(&mut rng)).sum::<Time>() * (1.0 / n as f64);
+        assert!(
+            (mean.as_ms() - 10.0).abs() < 0.8,
+            "exponential mean drifted: {} ms",
+            mean.as_ms()
+        );
+        let fixed = ThinkTime::Fixed(Time::ms(3.0));
+        assert_eq!(fixed.sample(&mut rng), Time::ms(3.0));
+        assert_eq!(fixed.mean(), Time::ms(3.0));
+        assert_eq!(exp.mean(), Time::ms(10.0));
+    }
+
+    #[test]
+    fn generation_rejects_degenerate_parameters() {
+        let p = ArrivalProcess::Poisson { rate: 100.0 };
+        assert!(p.generate(Time::ZERO, 8, 1).is_err());
+        assert!(p.generate(Time::s(1.0), 0, 1).is_err());
+        assert!(ArrivalProcess::Poisson { rate: 0.0 }.generate(Time::s(1.0), 8, 1).is_err());
+    }
+}

@@ -1,0 +1,1069 @@
+//! Closed-loop traffic engine (E13, DESIGN.md §11): arrival-driven
+//! request scheduling, dynamic batching and SLO accounting over the
+//! deployment shapes.
+//!
+//! Every experiment before this module measured one unloaded round; the
+//! taxi case study is a *traffic* workload — requests arrive
+//! continuously, queue at the leader's NIC or at cluster heads, and the
+//! winning deployment flips with load.  This engine drives that regime
+//! deterministically:
+//!
+//! * **Arrivals** ([`ArrivalProcess`], `arrivals.rs`) — open-loop
+//!   Poisson, the diurnal taxi-demand curve, a bursty flash crowd; or a
+//!   closed loop of `fleet` clients with think time ([`ThinkTime`]).
+//! * **Queues** ([`DeploymentQueues`]) — a single leader queue
+//!   (centralized), one queue per cluster head (semi-decentralized), one
+//!   per device (decentralized).  Requests route by `node % servers`;
+//!   servers are independent, so splitting a Poisson stream uniformly
+//!   over the queues is *exact* — a representative-queue simulation at
+//!   the split rate reproduces the full system's latency distribution.
+//! * **Batching** ([`BatchPolicy`]) — immediate, size-triggered or
+//!   deadline-triggered dynamic batching.  Batches form at *dispatch
+//!   time* (the Triton-style work-conserving rule): a freed server takes
+//!   up to a full batch from its pending queue at once, so batch sizes
+//!   adapt to backlog and capacity converges to the full-batch rate
+//!   under load; the deadline only bounds how long an idle server waits
+//!   for companions.  Dispatched node lists are exactly what
+//!   [`RoundEngine::assemble`] consumes (asserted in tests).
+//! * **Service** ([`ServiceModel`]) — a batch of `k` requests costs
+//!   `per_batch + k·per_request`, derived from the paper's closed forms
+//!   through the PR-4 [`LatencyProvider`] (Analytic, Clustered, Netsim),
+//!   so netsim congestion composes with queueing.
+//!
+//! Everything is scheduled on [`sim::EventQueue`]; runs are pure
+//! functions of (arrivals, policy, service, seed), so reports are
+//! bit-identical across thread counts and per seed.  Batch composition
+//! is additionally independent of event-queue tie order: open-loop
+//! streams are canonicalized by `(time, node)` before scheduling, and
+//! tied arrivals always join the pending queue before a same-instant
+//! deadline fires (property-tested with the FIFO-tie pattern from
+//! `sim::event`).
+//!
+//! Cross-validation: with Poisson arrivals, a single queue and the
+//! immediate policy, the engine is an M/D/1 station — the simulated mean
+//! wait matches the Pollaczek–Khinchine closed form
+//! ([`md1_mean_wait`]), and Little's law (`∫N(t)dt = Σ response`) holds
+//! to round-off on *every* run ([`TrafficReport::littles_law_gap`]);
+//! both are asserted in `rust/tests/traffic_cross_validation.rs`.
+//!
+//! [`RoundEngine::assemble`]: crate::coordinator::RoundEngine::assemble
+//! [`LatencyProvider`]: crate::coordinator::LatencyProvider
+//! [`sim::EventQueue`]: crate::sim::EventQueue
+
+mod arrivals;
+
+pub use arrivals::{ArrivalProcess, ThinkTime};
+
+use std::collections::VecDeque;
+
+use crate::coordinator::{Arrival, LatencyProvider, LatencyStats};
+use crate::error::{Error, Result};
+use crate::netmodel::{NetModel, Topology};
+use crate::sim::EventQueue;
+use crate::testing::Rng;
+use crate::units::Time;
+
+/// Dynamic-batching policy at each queue (batches form at dispatch
+/// time — module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchPolicy {
+    /// Every request dispatches alone (no batching) — the M/D/1 case.
+    Immediate,
+    /// Only full batches of `max` dispatch; partial tails wait (and
+    /// flush when the run drains).
+    Size { max: usize },
+    /// Dispatch `max` requests as soon as they are pending; otherwise an
+    /// idle server waits at most `max_wait` past the oldest pending
+    /// arrival before dispatching whatever is there.
+    Deadline { max: usize, max_wait: Time },
+}
+
+impl BatchPolicy {
+    fn validate(&self) -> Result<()> {
+        match *self {
+            BatchPolicy::Immediate => Ok(()),
+            BatchPolicy::Size { max } | BatchPolicy::Deadline { max, .. } if max == 0 => {
+                Err(Error::Sim("batch size must be > 0".into()))
+            }
+            BatchPolicy::Deadline { max_wait, .. }
+                if !(max_wait.as_s() >= 0.0) || !max_wait.is_finite() =>
+            {
+                Err(Error::Sim("deadline wait must be finite and >= 0".into()))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Largest batch the policy dispatches (for saturation math).
+    pub fn max_batch(&self) -> usize {
+        match *self {
+            BatchPolicy::Immediate => 1,
+            BatchPolicy::Size { max } | BatchPolicy::Deadline { max, .. } => max,
+        }
+    }
+}
+
+/// Queue topology of a deployment shape (module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeploymentQueues {
+    /// One queue at the centralized leader's NIC.
+    Leader,
+    /// One queue per cluster head (the semi overlay).
+    ClusterHeads { clusters: usize },
+    /// One queue per device (decentralized: every node serves itself).
+    Devices { nodes: usize },
+}
+
+impl DeploymentQueues {
+    pub fn servers(&self) -> usize {
+        match *self {
+            DeploymentQueues::Leader => 1,
+            DeploymentQueues::ClusterHeads { clusters } => clusters.max(1),
+            DeploymentQueues::Devices { nodes } => nodes.max(1),
+        }
+    }
+
+    /// The share of a system-wide open-loop rate one queue sees.
+    /// Uniform splitting of a Poisson process is exact, so simulating a
+    /// single representative queue at this rate reproduces the per-queue
+    /// latency distribution of the full fleet.
+    pub fn per_queue_rate(&self, system_rate_per_s: f64) -> f64 {
+        system_rate_per_s / self.servers() as f64
+    }
+}
+
+/// Batch service-time model: `service(k) = per_batch + k·per_request`.
+/// `per_batch` is the communication round the batch barrier pays (one
+/// gather / exchange per dispatched batch); `per_request` the marginal
+/// per-node compute slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServiceModel {
+    pub per_batch: Time,
+    pub per_request: Time,
+}
+
+impl ServiceModel {
+    pub fn new(per_batch: Time, per_request: Time) -> Result<ServiceModel> {
+        let ok = |t: Time| t.is_finite() && t.as_s() >= 0.0;
+        if !ok(per_batch) || !ok(per_request) || (per_batch + per_request).as_s() <= 0.0 {
+            return Err(Error::Sim("service model needs non-negative, positive-sum terms".into()));
+        }
+        Ok(ServiceModel { per_batch, per_request })
+    }
+
+    /// Service time of a batch of `k` requests.
+    pub fn service(&self, k: usize) -> Time {
+        self.per_batch + self.per_request * k as f64
+    }
+
+    /// Requests/second one queue sustains at full `max_batch` batches —
+    /// the saturation rate the E13 sweep normalizes against (the
+    /// work-conserving dispatcher converges to full batches under load).
+    pub fn saturation_rate(&self, max_batch: usize) -> f64 {
+        let b = max_batch.max(1);
+        b as f64 / self.service(b).as_s()
+    }
+
+    /// Centralized leader: one uplink gather per batch (Eq. 5 — or the
+    /// netsim round completion under contention), one Eq. 3 pipeline
+    /// slot per request.  The provider-variant dispatch lives on
+    /// [`LatencyProvider`] so the pricing cannot drift from the engine's.
+    pub fn centralized(
+        provider: LatencyProvider,
+        model: &NetModel,
+        topo: Topology,
+    ) -> Result<ServiceModel> {
+        let b = model.breakdown();
+        let (m1, m2, m3) = model.capacity_ratios();
+        let slot = b.t1 * (1.0 / m1) + b.t2 * (1.0 / m2) + b.t3 * (1.0 / m3);
+        ServiceModel::new(provider.centralized_comm(model, topo), slot)
+    }
+
+    /// Semi-decentralized cluster head: one E8 overlay exchange per
+    /// batch (boundary-aware under `Clustered`), one member-compute slot
+    /// at `head_capacity`× rate per request.
+    pub fn semi(
+        provider: LatencyProvider,
+        model: &NetModel,
+        topo: Topology,
+        head_capacity: f64,
+    ) -> Result<ServiceModel> {
+        let h = head_capacity.max(1.0);
+        let slot = model.breakdown().total_latency() * (1.0 / h);
+        ServiceModel::new(provider.semi_comm(model, topo, h), slot)
+    }
+
+    /// Decentralized device: one Eq. 4 cluster exchange per batch
+    /// (boundary-aware under `Clustered`), one full per-node compute per
+    /// request.
+    pub fn decentralized(
+        provider: LatencyProvider,
+        model: &NetModel,
+        topo: Topology,
+    ) -> Result<ServiceModel> {
+        let slot = model.breakdown().total_latency();
+        ServiceModel::new(provider.decentralized_comm(model, topo), slot)
+    }
+}
+
+/// The canonical queue topology + service model of one deployment
+/// setting at one operating point: the centralized leader, the semi
+/// overlay (heads at `cₛ×` capacity, one queue per cluster — the
+/// E9/E12 convention), or the per-device decentralized mesh.
+/// `provider` prices the semi / decentralized exchanges (the
+/// centralized gather has no cluster structure, so `Clustered`
+/// coincides with `Analytic` there).  Shared by the E13 sweep, the
+/// `ima-gnn traffic` CLI and the examples so the shape definitions
+/// cannot drift apart.
+pub fn deployment_shape(
+    setting: crate::autotune::SettingKind,
+    provider: LatencyProvider,
+    model: &NetModel,
+    topo: Topology,
+) -> Result<(DeploymentQueues, ServiceModel)> {
+    use crate::autotune::SettingKind;
+    Ok(match setting {
+        SettingKind::Centralized => (
+            DeploymentQueues::Leader,
+            ServiceModel::centralized(provider, model, topo)?,
+        ),
+        SettingKind::Semi => (
+            DeploymentQueues::ClusterHeads {
+                clusters: topo.nodes.div_ceil(topo.cluster_size.max(1)),
+            },
+            ServiceModel::semi(provider, model, topo, topo.cluster_size as f64)?,
+        ),
+        SettingKind::Decentralized => (
+            DeploymentQueues::Devices { nodes: topo.nodes },
+            ServiceModel::decentralized(provider, model, topo)?,
+        ),
+    })
+}
+
+/// Pollaczek–Khinchine mean queue wait of an M/D/1 station: Poisson
+/// arrivals at `rate_per_s`, deterministic `service` per request,
+/// `W_q = ρ·s / (2·(1 − ρ))`.  The closed form the cross-validation
+/// test holds the engine against.
+pub fn md1_mean_wait(rate_per_s: f64, service: Time) -> Result<Time> {
+    let rho = rate_per_s * service.as_s();
+    if !(rho >= 0.0) || rho >= 1.0 {
+        return Err(Error::Sim(format!("M/D/1 needs 0 <= rho < 1, got {rho}")));
+    }
+    Ok(Time::s(rho * service.as_s() / (2.0 * (1.0 - rho))))
+}
+
+/// One dispatched batch, as executed: the node list is exactly what
+/// `RoundEngine::assemble` takes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchRecord {
+    pub server: usize,
+    pub nodes: Vec<usize>,
+    /// Dispatch instant (batch formation and service start coincide —
+    /// the work-conserving rule).
+    pub dispatched_at: Time,
+    pub done_at: Time,
+}
+
+/// Aggregate outcome of one traffic run (per simulated queue set).
+#[derive(Debug, Clone)]
+pub struct TrafficReport {
+    pub servers: usize,
+    /// Requests that entered the system (all complete — runs drain).
+    pub offered: usize,
+    pub completed: usize,
+    /// Last completion time.
+    pub makespan: Time,
+    /// Completions per second of virtual time.
+    pub throughput_per_s: f64,
+    /// Mean busy fraction across the simulated servers.
+    pub utilization: f64,
+    /// Mean wait from arrival to dispatch (queueing + batch fill).
+    pub mean_wait: Time,
+    /// Response-latency distribution (arrival → batch completion).
+    pub latency: LatencyStats,
+    pub batches: usize,
+    pub mean_batch: f64,
+    /// Max requests pending (not yet dispatched) at any single server.
+    pub max_queue_depth: usize,
+    /// Time-average number of requests in the system (∫N(t)dt / T).
+    pub time_avg_in_system: f64,
+    /// Σ response times — Little's law cross-check numerator.
+    pub sum_response: Time,
+    /// The dispatched batches in execution order.
+    pub batch_log: Vec<BatchRecord>,
+}
+
+impl TrafficReport {
+    /// Relative Little's-law residual: `∫N(t)dt` must equal
+    /// `Σ response` exactly (both count request-seconds in the system),
+    /// so this is float round-off on a correct engine.
+    pub fn littles_law_gap(&self) -> f64 {
+        let area = self.time_avg_in_system * self.makespan.as_s();
+        let sum = self.sum_response.as_s();
+        (area - sum).abs() / sum.abs().max(1e-30)
+    }
+
+    /// Fraction of responses within `slo` (SLO attainment).
+    pub fn slo_attainment(&self, slo: Time) -> f64 {
+        self.latency.fraction_within(slo)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// Open-loop arrival: index into the canonicalized arrival list.
+    Arrive { req: usize },
+    /// Closed-loop client finished thinking; issues its next request.
+    ClientArrive { client: usize },
+    /// Idle-wait deadline of the request at the front of server
+    /// `server`'s pending queue; stale when `oldest` is no longer the
+    /// front (it dispatched earlier).
+    Deadline { server: usize, oldest: usize },
+    /// Server finished its in-service batch.
+    Done { server: usize },
+}
+
+struct ServerState {
+    /// Pending requests, FIFO in arrival order.
+    pending: VecDeque<usize>,
+    /// (batch, dispatched_at) currently in service.
+    in_service: Option<(Vec<usize>, Time)>,
+    busy_total: Time,
+}
+
+struct Engine<'a> {
+    policy: BatchPolicy,
+    service: &'a ServiceModel,
+    servers: Vec<ServerState>,
+    queue: EventQueue<Ev>,
+    // Per-request records (index = request id).
+    arrival: Vec<Time>,
+    node: Vec<usize>,
+    start: Vec<Time>,
+    done: Vec<Time>,
+    client_of: Vec<usize>,
+    // Closed-loop generation state (unused in open-loop runs).
+    closed: Option<ClosedLoop>,
+    // Accounting.
+    now: Time,
+    last_done: Time,
+    in_system: usize,
+    area_last_t: Time,
+    area_s: f64,
+    max_depth: usize,
+    batch_log: Vec<BatchRecord>,
+}
+
+struct ClosedLoop {
+    think: ThinkTime,
+    horizon: Time,
+    nodes: usize,
+    rng: Rng,
+}
+
+impl<'a> Engine<'a> {
+    fn new(servers: usize, service: &'a ServiceModel, policy: BatchPolicy) -> Result<Engine<'a>> {
+        policy.validate()?;
+        if servers == 0 {
+            return Err(Error::Sim("traffic needs at least one server".into()));
+        }
+        Ok(Engine {
+            policy,
+            service,
+            servers: (0..servers)
+                .map(|_| ServerState {
+                    pending: VecDeque::new(),
+                    in_service: None,
+                    busy_total: Time::ZERO,
+                })
+                .collect(),
+            queue: EventQueue::new(),
+            arrival: Vec::new(),
+            node: Vec::new(),
+            start: Vec::new(),
+            done: Vec::new(),
+            client_of: Vec::new(),
+            closed: None,
+            now: Time::ZERO,
+            last_done: Time::ZERO,
+            in_system: 0,
+            area_last_t: Time::ZERO,
+            area_s: 0.0,
+            max_depth: 0,
+            batch_log: Vec::new(),
+        })
+    }
+
+    /// Advance the ∫N(t)dt integral to `now` (call before N changes).
+    fn tick_area(&mut self, now: Time) {
+        self.area_s += self.in_system as f64 * (now - self.area_last_t).as_s();
+        self.area_last_t = now;
+    }
+
+    fn route(&self, node: usize) -> usize {
+        node % self.servers.len()
+    }
+
+    /// A request (already recorded) joins its server's pending queue.
+    fn on_request(&mut self, req: usize, now: Time) {
+        self.tick_area(now);
+        self.in_system += 1;
+        let s = self.route(self.node[req]);
+        self.servers[s].pending.push_back(req);
+        self.max_depth = self.max_depth.max(self.servers[s].pending.len());
+        // Re-evaluate dispatch only on the transitions that can change
+        // the decision: the queue just became non-empty, or it just
+        // reached a full batch (avoids duplicate deadline arming).
+        let len = self.servers[s].pending.len();
+        if len == 1 || len >= self.policy.max_batch() {
+            self.maybe_dispatch(s, now);
+        }
+    }
+
+    /// Work-conserving dispatcher: an idle server takes up to a full
+    /// batch at once; the deadline policy arms an idle-wait timer when
+    /// the pending tail is short and fresh.
+    fn maybe_dispatch(&mut self, s: usize, now: Time) {
+        if self.servers[s].in_service.is_some() || self.servers[s].pending.is_empty() {
+            return;
+        }
+        let pend = self.servers[s].pending.len();
+        let take = match self.policy {
+            BatchPolicy::Immediate => 1,
+            BatchPolicy::Size { max } => {
+                if pend >= max {
+                    max
+                } else {
+                    return; // tail waits for more (flushes at drain)
+                }
+            }
+            BatchPolicy::Deadline { max, max_wait } => {
+                if pend >= max {
+                    max
+                } else {
+                    let oldest = *self.servers[s].pending.front().expect("pend > 0");
+                    if now - self.arrival[oldest] >= max_wait {
+                        pend
+                    } else {
+                        self.queue.push(
+                            self.arrival[oldest] + max_wait,
+                            Ev::Deadline { server: s, oldest },
+                        );
+                        return;
+                    }
+                }
+            }
+        };
+        self.dispatch(s, now, take);
+    }
+
+    fn dispatch(&mut self, s: usize, now: Time, take: usize) {
+        let srv = &mut self.servers[s];
+        let reqs: Vec<usize> = srv.pending.drain(..take).collect();
+        let dur = self.service.service(reqs.len());
+        srv.busy_total += dur;
+        for &r in &reqs {
+            self.start[r] = now;
+        }
+        srv.in_service = Some((reqs, now));
+        self.queue.push(now + dur, Ev::Done { server: s });
+    }
+
+    fn on_done(&mut self, s: usize, now: Time) {
+        let (reqs, dispatched_at) =
+            self.servers[s].in_service.take().expect("Done without an in-service batch");
+        self.tick_area(now);
+        self.last_done = self.last_done.max(now);
+        self.in_system -= reqs.len();
+        for &r in &reqs {
+            self.done[r] = now;
+        }
+        // Closed loop: each completed request's client thinks, then
+        // issues its next request (draw order: batch order).
+        if let Some(cl) = &mut self.closed {
+            for &r in &reqs {
+                let next = now + cl.think.sample(&mut cl.rng);
+                if next < cl.horizon {
+                    self.queue.push(next, Ev::ClientArrive { client: self.client_of[r] });
+                }
+            }
+        }
+        self.batch_log.push(BatchRecord {
+            server: s,
+            nodes: reqs.iter().map(|&r| self.node[r]).collect(),
+            dispatched_at,
+            done_at: now,
+        });
+        self.maybe_dispatch(s, now);
+    }
+
+    fn handle(&mut self, ev: Ev, now: Time) {
+        self.now = now;
+        match ev {
+            Ev::Arrive { req } => self.on_request(req, now),
+            Ev::ClientArrive { client } => {
+                let cl = self.closed.as_mut().expect("client event in an open-loop run");
+                let node = cl.rng.index(cl.nodes);
+                let req = self.arrival.len();
+                self.arrival.push(now);
+                self.node.push(node);
+                self.start.push(Time::ZERO);
+                self.done.push(Time::ZERO);
+                self.client_of.push(client);
+                self.on_request(req, now);
+            }
+            Ev::Deadline { server, oldest } => {
+                // Stale unless the armed request still fronts the queue
+                // and the server is still idle (a busy server re-checks
+                // the deadline itself at its next Done).
+                if self.servers[server].in_service.is_none()
+                    && self.servers[server].pending.front() == Some(&oldest)
+                {
+                    let take =
+                        self.servers[server].pending.len().min(self.policy.max_batch());
+                    self.dispatch(server, now, take);
+                }
+            }
+            Ev::Done { server } => self.on_done(server, now),
+        }
+    }
+
+    /// Drain the event queue; flush any pending tails at the last event
+    /// time (the size-triggered policy's partial batches) and keep
+    /// draining until everything completed.
+    fn run_to_completion(&mut self) {
+        loop {
+            while let Some((t, ev)) = self.queue.pop() {
+                self.handle(ev, t);
+            }
+            let t = self.now;
+            let mut flushed = false;
+            for s in 0..self.servers.len() {
+                if self.servers[s].in_service.is_none() && !self.servers[s].pending.is_empty() {
+                    let take = self.servers[s].pending.len().min(self.policy.max_batch());
+                    self.dispatch(s, t, take);
+                    flushed = true;
+                }
+            }
+            if !flushed {
+                break;
+            }
+        }
+    }
+
+    fn report(self) -> Result<TrafficReport> {
+        let n = self.arrival.len();
+        if n == 0 {
+            return Err(Error::Sim("traffic run produced no requests".into()));
+        }
+        debug_assert_eq!(self.in_system, 0, "run must drain");
+        // Last completion — stale deadline events popping later must not
+        // stretch the horizon.
+        let makespan = self.last_done;
+        let responses: Vec<Time> =
+            (0..n).map(|i| self.done[i] - self.arrival[i]).collect();
+        let sum_response: Time = responses.iter().copied().sum();
+        let mean_wait: Time = (0..n)
+            .map(|i| self.start[i] - self.arrival[i])
+            .sum::<Time>()
+            * (1.0 / n as f64);
+        let busy: Time = self.servers.iter().map(|s| s.busy_total).sum();
+        let batches = self.batch_log.len();
+        Ok(TrafficReport {
+            servers: self.servers.len(),
+            offered: n,
+            completed: n,
+            makespan,
+            throughput_per_s: n as f64 / makespan.as_s().max(1e-30),
+            utilization: busy.as_s()
+                / (self.servers.len() as f64 * makespan.as_s()).max(1e-30),
+            mean_wait,
+            latency: LatencyStats::from_samples(responses)?,
+            batches,
+            mean_batch: n as f64 / batches.max(1) as f64,
+            max_queue_depth: self.max_depth,
+            time_avg_in_system: self.area_s / makespan.as_s().max(1e-30),
+            sum_response,
+            batch_log: self.batch_log,
+        })
+    }
+}
+
+/// Run an open-loop arrival list against `servers` queues.
+///
+/// The list is canonicalized by `(time, node)` before scheduling, so
+/// batch composition is independent of the caller's push order even
+/// under exact timestamp ties (the determinism audit's contract).
+pub fn open_loop(
+    servers: usize,
+    service: &ServiceModel,
+    policy: BatchPolicy,
+    arrivals: &[Arrival],
+) -> Result<TrafficReport> {
+    if arrivals.is_empty() {
+        return Err(Error::Sim("open-loop run needs at least one arrival".into()));
+    }
+    let mut eng = Engine::new(servers, service, policy)?;
+    for a in arrivals {
+        if !(a.at.as_s() >= 0.0) || !a.at.is_finite() {
+            return Err(Error::Sim("arrival times must be finite and >= 0".into()));
+        }
+    }
+    let mut sorted: Vec<Arrival> = arrivals.to_vec();
+    sorted.sort_by(|a, b| {
+        a.at.partial_cmp(&b.at).expect("arrival times are finite").then(a.node.cmp(&b.node))
+    });
+    for (i, a) in sorted.iter().enumerate() {
+        eng.arrival.push(a.at);
+        eng.node.push(a.node);
+        eng.start.push(Time::ZERO);
+        eng.done.push(Time::ZERO);
+        eng.client_of.push(usize::MAX);
+        eng.queue.push(a.at, Ev::Arrive { req: i });
+    }
+    eng.run_to_completion();
+    eng.report()
+}
+
+/// Closed-loop workload: a fixed fleet of clients, each cycling
+/// think → request → response until `horizon` (no new requests issue
+/// past it; in-flight ones drain).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClosedLoopConfig {
+    pub fleet: usize,
+    pub think: ThinkTime,
+    pub horizon: Time,
+    /// Nodes requests target (uniform per request).
+    pub nodes: usize,
+    pub seed: u64,
+}
+
+/// Run a closed loop of `cfg.fleet` clients against `servers` queues.
+pub fn closed_loop(
+    servers: usize,
+    service: &ServiceModel,
+    policy: BatchPolicy,
+    cfg: &ClosedLoopConfig,
+) -> Result<TrafficReport> {
+    if cfg.fleet == 0 || cfg.nodes == 0 || !(cfg.horizon.as_s() > 0.0) {
+        return Err(Error::Sim("closed loop needs fleet, nodes and a positive horizon".into()));
+    }
+    let mut eng = Engine::new(servers, service, policy)?;
+    let mut rng = Rng::new(cfg.seed);
+    for client in 0..cfg.fleet {
+        let at = cfg.think.sample(&mut rng);
+        if at < cfg.horizon {
+            eng.queue.push(at, Ev::ClientArrive { client });
+        }
+    }
+    eng.closed =
+        Some(ClosedLoop { think: cfg.think, horizon: cfg.horizon, nodes: cfg.nodes, rng });
+    eng.run_to_completion();
+    eng.report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, forall, gcn_layer_binding, Rng};
+
+    fn svc(batch_ms: f64, req_ms: f64) -> ServiceModel {
+        ServiceModel::new(Time::ms(batch_ms), Time::ms(req_ms)).unwrap()
+    }
+
+    fn at(ms: f64, node: usize) -> Arrival {
+        Arrival { at: Time::ms(ms), node }
+    }
+
+    #[test]
+    fn immediate_policy_is_a_fifo_station() {
+        // Three arrivals at t=0 into one queue, service 2 ms each:
+        // responses 2/4/6 ms — the M/D/1 backlog by hand.
+        let r = open_loop(
+            1,
+            &svc(2.0, 0.0),
+            BatchPolicy::Immediate,
+            &[at(0.0, 0), at(0.0, 1), at(0.0, 2)],
+        )
+        .unwrap();
+        assert_eq!(r.offered, 3);
+        assert_eq!(r.batches, 3);
+        assert_close(r.latency.max().as_ms(), 6.0, 1e-12);
+        assert_close(r.latency.p50().as_ms(), 4.0, 1e-12);
+        assert_close(r.mean_wait.as_ms(), 2.0, 1e-12);
+        assert_close(r.makespan.as_ms(), 6.0, 1e-12);
+        assert_close(r.utilization, 1.0, 1e-12);
+        assert!(r.littles_law_gap() < 1e-12, "gap {}", r.littles_law_gap());
+    }
+
+    #[test]
+    fn size_policy_dispatches_full_batches_and_flushes_the_tail() {
+        // 5 arrivals, size-4 batches: one full batch at t=0, the tail
+        // flushes at drain time.
+        let arrivals: Vec<Arrival> = (0..5).map(|i| at(0.0, i)).collect();
+        let r = open_loop(1, &svc(1.0, 0.5), BatchPolicy::Size { max: 4 }, &arrivals).unwrap();
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.batch_log[0].nodes, vec![0, 1, 2, 3]);
+        assert_eq!(r.batch_log[1].nodes, vec![4]);
+        // Full batch: 1 + 4·0.5 = 3 ms; the tail flushes at 3 ms and
+        // serves 1 + 0.5 = 1.5 ms → makespan 4.5 ms.
+        assert_close(r.batch_log[0].done_at.as_ms(), 3.0, 1e-12);
+        assert_close(r.batch_log[1].dispatched_at.as_ms(), 3.0, 1e-12);
+        assert_close(r.makespan.as_ms(), 4.5, 1e-12);
+        assert_close(r.mean_batch, 2.5, 1e-12);
+        assert!(r.littles_law_gap() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_policy_bounds_the_idle_wait() {
+        let r = open_loop(
+            1,
+            &svc(1.0, 0.0),
+            BatchPolicy::Deadline { max: 64, max_wait: Time::ms(5.0) },
+            &[at(0.0, 0), at(4.0, 1), at(100.0, 2)],
+        )
+        .unwrap();
+        // First two share the batch dispatched at the first arrival's
+        // 5 ms deadline; the third waits its own deadline at 105 ms.
+        assert_eq!(r.batches, 2);
+        assert_eq!(r.batch_log[0].nodes, vec![0, 1]);
+        assert_close(r.batch_log[0].dispatched_at.as_ms(), 5.0, 1e-12);
+        assert_close(r.batch_log[0].done_at.as_ms(), 6.0, 1e-12);
+        assert_close(r.batch_log[1].dispatched_at.as_ms(), 105.0, 1e-12);
+        assert!(r.littles_law_gap() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_dispatch_is_work_conserving_under_backlog() {
+        // Backlog present when the server frees → a full batch
+        // dispatches immediately, no idle deadline wait: capacity stays
+        // at the full-batch rate (the batching-collapse guard).
+        let arrivals: Vec<Arrival> = (0..12).map(|i| at(0.0, i)).collect();
+        let r = open_loop(
+            1,
+            &svc(1.0, 0.0),
+            BatchPolicy::Deadline { max: 4, max_wait: Time::ms(50.0) },
+            &arrivals,
+        )
+        .unwrap();
+        // Three full batches back to back: 1 ms each, no deadline waits.
+        assert_eq!(r.batches, 3);
+        assert!(r.batch_log.iter().all(|b| b.nodes.len() == 4));
+        assert_close(r.makespan.as_ms(), 3.0, 1e-12);
+        assert_close(r.utilization, 1.0, 1e-12);
+        assert!(r.littles_law_gap() < 1e-12);
+    }
+
+    #[test]
+    fn requests_route_to_per_shape_queues() {
+        // 4 servers: node % 4 picks the queue; two tied arrivals on the
+        // same queue serialize, others run in parallel.
+        let r = open_loop(
+            4,
+            &svc(2.0, 0.0),
+            BatchPolicy::Immediate,
+            &[at(0.0, 0), at(0.0, 4), at(0.0, 1), at(0.0, 2)],
+        )
+        .unwrap();
+        assert_eq!(r.servers, 4);
+        assert_close(r.makespan.as_ms(), 4.0, 1e-12);
+        // Queue 0 busy 4 ms of 4; queues 1/2 busy 2 ms; queue 3 idle.
+        assert_close(r.utilization, (4.0 + 2.0 + 2.0 + 0.0) / (4.0 * 4.0), 1e-12);
+        // Immediate dispatch drains the queue as it fills: at most one
+        // request ever waits behind the in-service one here.
+        assert_eq!(r.max_queue_depth, 1);
+        assert!(r.littles_law_gap() < 1e-12);
+    }
+
+    /// The determinism audit (the FIFO-tie pattern from `sim::event`):
+    /// batch composition must not depend on the order tied arrivals were
+    /// pushed in — only on the (time, node) content of the stream.
+    #[test]
+    fn property_batch_composition_is_independent_of_tie_order() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(60) + 2;
+            // Coarse time grid guarantees heavy timestamp ties.
+            let arrivals: Vec<Arrival> = (0..n)
+                .map(|_| Arrival {
+                    at: Time::ms(rng.index(6) as f64),
+                    node: rng.index(12),
+                })
+                .collect();
+            let mut shuffled = arrivals.clone();
+            let perm = rng.permutation(n);
+            for (i, &j) in perm.iter().enumerate() {
+                shuffled[i] = arrivals[j];
+            }
+            let policy = match rng.index(3) {
+                0 => BatchPolicy::Immediate,
+                1 => BatchPolicy::Size { max: rng.index(4) + 1 },
+                _ => BatchPolicy::Deadline {
+                    max: rng.index(4) + 1,
+                    // Deadline on the same grid as the arrivals, so
+                    // deadline-vs-arrival ties genuinely occur.
+                    max_wait: Time::ms(rng.index(3) as f64),
+                },
+            };
+            let servers = rng.index(3) + 1;
+            let service = svc(1.0, 0.25);
+            let a = open_loop(servers, &service, policy, &arrivals).unwrap();
+            let b = open_loop(servers, &service, policy, &shuffled).unwrap();
+            assert_eq!(a.batch_log, b.batch_log, "policy {policy:?}");
+            assert_eq!(a.latency.count(), b.latency.count());
+            assert_eq!(a.makespan, b.makespan);
+            assert_eq!(a.mean_wait, b.mean_wait);
+        });
+    }
+
+    #[test]
+    fn tied_arrivals_join_before_a_same_instant_deadline_fires() {
+        // Deadline at t=2 ms ties with an arrival at t=2 ms: the arrival
+        // joins the pending queue first (open-loop arrivals are
+        // pre-scheduled, so they pop before later-pushed deadline events
+        // — the EventQueue FIFO tie-break), then the deadline dispatches
+        // both together.
+        let r = open_loop(
+            1,
+            &svc(1.0, 0.0),
+            BatchPolicy::Deadline { max: 8, max_wait: Time::ms(2.0) },
+            &[at(0.0, 0), at(2.0, 1)],
+        )
+        .unwrap();
+        assert_eq!(r.batches, 1);
+        assert_eq!(r.batch_log[0].nodes, vec![0, 1]);
+        assert_close(r.batch_log[0].dispatched_at.as_ms(), 2.0, 1e-12);
+    }
+
+    #[test]
+    fn closed_loop_fixed_think_is_a_clockwork_cycle() {
+        // One client, fixed 10 ms think, 3 ms service, horizon 50 ms:
+        // requests at 10/23/36/49 ms — the 49 ms one still issues
+        // (< horizon) and drains past it.
+        let r = closed_loop(
+            1,
+            &svc(3.0, 0.0),
+            BatchPolicy::Immediate,
+            &ClosedLoopConfig {
+                fleet: 1,
+                think: ThinkTime::Fixed(Time::ms(10.0)),
+                horizon: Time::ms(50.0),
+                nodes: 4,
+                seed: 9,
+            },
+        )
+        .unwrap();
+        assert_eq!(r.offered, 4);
+        assert_close(r.makespan.as_ms(), 52.0, 1e-9);
+        assert_close(r.latency.max().as_ms(), 3.0, 1e-12);
+        assert_close(r.mean_wait.as_ms(), 0.0, 1e-12);
+        assert!(r.littles_law_gap() < 1e-12);
+    }
+
+    #[test]
+    fn closed_loop_is_deterministic_per_seed() {
+        let run = |seed| {
+            closed_loop(
+                2,
+                &svc(1.0, 0.2),
+                BatchPolicy::Deadline { max: 4, max_wait: Time::ms(2.0) },
+                &ClosedLoopConfig {
+                    fleet: 6,
+                    think: ThinkTime::Exponential { mean: Time::ms(8.0) },
+                    horizon: Time::s(1.0),
+                    nodes: 16,
+                    seed,
+                },
+            )
+            .unwrap()
+        };
+        let a = run(5);
+        let b = run(5);
+        assert_eq!(a.batch_log, b.batch_log);
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.makespan, b.makespan);
+        let c = run(6);
+        assert_ne!(a.batch_log, c.batch_log, "seed must matter");
+        assert!(a.littles_law_gap() < 1e-9, "gap {}", a.littles_law_gap());
+    }
+
+    #[test]
+    fn utilization_equals_throughput_times_service_for_unit_batches() {
+        // With the immediate policy every batch is one request, so
+        // busy = completed·s exactly: util == tput·s to round-off — the
+        // ρ→0 operational identity the open/closed equivalence test
+        // builds on.
+        let arrivals = ArrivalProcess::Poisson { rate: 50.0 }
+            .generate(Time::s(4.0), 8, 3)
+            .unwrap();
+        let service = svc(2.0, 0.0);
+        let r = open_loop(1, &service, BatchPolicy::Immediate, &arrivals).unwrap();
+        assert_close(
+            r.utilization,
+            r.throughput_per_s * service.service(1).as_s(),
+            1e-9,
+        );
+        assert!(r.littles_law_gap() < 1e-9);
+    }
+
+    #[test]
+    fn slo_attainment_counts_the_distribution_tail() {
+        let r = open_loop(
+            1,
+            &svc(2.0, 0.0),
+            BatchPolicy::Immediate,
+            &[at(0.0, 0), at(0.0, 1), at(0.0, 2), at(0.0, 3)],
+        )
+        .unwrap();
+        // Responses 2/4/6/8 ms.
+        assert_close(r.slo_attainment(Time::ms(5.0)), 0.5, 1e-12);
+        assert_close(r.slo_attainment(Time::ms(1.0)), 0.0, 1e-12);
+        assert_close(r.slo_attainment(Time::ms(100.0)), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn batches_feed_round_engine_assemble() {
+        // The engine's dispatched batches are RoundEngine input: every
+        // batch node list assembles into padded shard batches without
+        // PJRT.
+        use crate::coordinator::RoundEngine;
+        use crate::graph::{generate, ShardPlan};
+        let b = gcn_layer_binding();
+        let g = generate::regular(48, 6, 3).unwrap();
+        let plan = ShardPlan::build(&g, &b.sampler(), b.table).unwrap();
+        let batch = b.batch;
+        let mut engine =
+            RoundEngine::new(b.clone(), plan, vec![0.01; b.feature * b.hidden]).unwrap();
+        for node in 0..48 {
+            engine.upload(node, &vec![0.5; 64]).unwrap();
+        }
+        engine.end_round();
+
+        let arrivals = ArrivalProcess::Poisson { rate: 2_000.0 }
+            .generate(Time::s(0.1), 48, 11)
+            .unwrap();
+        let r = open_loop(
+            1,
+            &svc(1.0, 0.01),
+            BatchPolicy::Deadline { max: batch, max_wait: Time::ms(3.0) },
+            &arrivals,
+        )
+        .unwrap();
+        assert!(r.batches > 1);
+        for record in &r.batch_log {
+            assert!(record.nodes.len() <= batch, "policy respects the artifact batch");
+            let shard_batches = engine.assemble(&record.nodes).unwrap();
+            let served: usize = shard_batches.iter().map(|sb| sb.nodes.len()).sum();
+            assert_eq!(served, record.nodes.len(), "assemble answers every batched node");
+        }
+    }
+
+    #[test]
+    fn service_model_constructors_match_the_closed_forms() {
+        use crate::cores::GnnWorkload;
+        use crate::netmodel::Setting;
+        let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+        let topo = Topology::taxi();
+        let b = model.breakdown();
+        let (m1, m2, m3) = model.capacity_ratios();
+
+        let cent =
+            ServiceModel::centralized(LatencyProvider::Analytic, &model, topo).unwrap();
+        assert_eq!(cent.per_batch, model.communicate_latency(Setting::Centralized, topo));
+        let want_slot = b.t1 * (1.0 / m1) + b.t2 * (1.0 / m2) + b.t3 * (1.0 / m3);
+        assert_close(cent.per_request.as_s(), want_slot.as_s(), 1e-12);
+        // N-1 slots reconstruct the Eq. 3 pipeline exactly.
+        assert_close(
+            (cent.per_request * 9_999.0).as_s(),
+            model.compute_latency(Setting::Centralized, topo).as_s(),
+            1e-9,
+        );
+
+        let semi = ServiceModel::semi(LatencyProvider::Analytic, &model, topo, 10.0).unwrap();
+        assert_eq!(semi.per_batch, model.semi_latency(topo, 10.0).communicate);
+        assert_close(semi.per_request.as_s(), (b.total_latency() * 0.1).as_s(), 1e-12);
+
+        let dec =
+            ServiceModel::decentralized(LatencyProvider::Analytic, &model, topo).unwrap();
+        assert_eq!(dec.per_batch, model.communicate_latency(Setting::Decentralized, topo));
+        assert_eq!(dec.per_request, b.total_latency());
+
+        // Clustered at f = 1 coincides with Analytic; f < 1 only raises
+        // the batch term (the boundary relay), never the compute slot.
+        let f1 = LatencyProvider::Clustered { intra_fraction: 1.0 };
+        assert_eq!(ServiceModel::semi(f1, &model, topo, 10.0).unwrap(), semi);
+        assert_eq!(ServiceModel::decentralized(f1, &model, topo).unwrap(), dec);
+        let f0 = LatencyProvider::Clustered { intra_fraction: 0.25 };
+        let semi_f0 = ServiceModel::semi(f0, &model, topo, 10.0).unwrap();
+        assert!(semi_f0.per_batch > semi.per_batch);
+        assert_eq!(semi_f0.per_request, semi.per_request);
+
+        // Netsim pins the batch barrier verbatim — congestion composes.
+        let pin = LatencyProvider::Netsim(Time::ms(7.0));
+        assert_eq!(
+            ServiceModel::centralized(pin, &model, topo).unwrap().per_batch,
+            Time::ms(7.0)
+        );
+
+        // Saturation rate: more batching always helps when per_batch
+        // dominates.
+        assert!(cent.saturation_rate(64) > cent.saturation_rate(1));
+        assert_close(
+            cent.saturation_rate(64),
+            64.0 / cent.service(64).as_s(),
+            1e-12,
+        );
+    }
+
+    #[test]
+    fn md1_closed_form_and_degenerate_inputs() {
+        // ρ = 0.5, s = 2 ms → W_q = 0.5·2/(2·0.5) = 1 ms.
+        let w = md1_mean_wait(250.0, Time::ms(2.0)).unwrap();
+        assert_close(w.as_ms(), 1.0, 1e-12);
+        assert_eq!(md1_mean_wait(0.0, Time::ms(2.0)).unwrap(), Time::ZERO);
+        assert!(md1_mean_wait(500.0, Time::ms(2.0)).is_err(), "rho = 1 diverges");
+        assert!(md1_mean_wait(-1.0, Time::ms(2.0)).is_err());
+    }
+
+    #[test]
+    fn deployment_queues_split_rates_exactly() {
+        assert_eq!(DeploymentQueues::Leader.servers(), 1);
+        assert_eq!(DeploymentQueues::ClusterHeads { clusters: 40 }.servers(), 40);
+        assert_eq!(DeploymentQueues::Devices { nodes: 10_000 }.servers(), 10_000);
+        assert_close(
+            DeploymentQueues::ClusterHeads { clusters: 40 }.per_queue_rate(4_000.0),
+            100.0,
+            1e-12,
+        );
+    }
+
+    #[test]
+    fn rejects_degenerate_runs() {
+        let s = svc(1.0, 0.0);
+        assert!(open_loop(0, &s, BatchPolicy::Immediate, &[at(0.0, 0)]).is_err());
+        assert!(open_loop(1, &s, BatchPolicy::Immediate, &[]).is_err());
+        assert!(open_loop(1, &s, BatchPolicy::Size { max: 0 }, &[at(0.0, 0)]).is_err());
+        assert!(open_loop(
+            1,
+            &s,
+            BatchPolicy::Deadline { max: 4, max_wait: Time::s(f64::NAN) },
+            &[at(0.0, 0)]
+        )
+        .is_err());
+        assert!(ServiceModel::new(Time::ZERO, Time::ZERO).is_err());
+        assert!(ServiceModel::new(Time::ms(-1.0), Time::ms(2.0)).is_err());
+        assert!(closed_loop(
+            1,
+            &s,
+            BatchPolicy::Immediate,
+            &ClosedLoopConfig {
+                fleet: 0,
+                think: ThinkTime::Fixed(Time::ms(1.0)),
+                horizon: Time::s(1.0),
+                nodes: 4,
+                seed: 1,
+            },
+        )
+        .is_err());
+    }
+}
+

@@ -2,4 +2,4 @@
 
 mod taxi;
 
-pub use taxi::{TaxiCity, TaxiCityConfig, EDGE_TYPES};
+pub use taxi::{DiurnalCurve, TaxiCity, TaxiCityConfig, EDGE_TYPES};

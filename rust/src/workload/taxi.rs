@@ -9,9 +9,49 @@
 use crate::error::{Error, Result};
 use crate::graph::Csr;
 use crate::testing::Rng;
+use crate::units::Time;
 
 /// The hetGNN's edge types.
 pub const EDGE_TYPES: usize = 3;
+
+/// Diurnal taxi-demand intensity curve (the arrival-rate counterpart of
+/// the `2 + sin(phase)` demand base the history tensors carry): a request
+/// rate that swings sinusoidally around `base_rate` with the given
+/// `period`.  Rates are clamped at zero, so any amplitude is safe — the
+/// curve never goes negative (asserted in tests).  This is the E13
+/// traffic engine's open-loop diurnal arrival process (§4.2's sustained
+/// taxi stream, which the one-shot round experiments never modeled).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiurnalCurve {
+    /// Mean request rate (requests/second) over one period.
+    pub base_rate: f64,
+    /// Relative swing: rate peaks at `base·(1+amplitude)` and troughs at
+    /// `base·(1−amplitude)` (clamped at 0 when `amplitude > 1`).
+    pub amplitude: f64,
+    /// One demand cycle (a scaled "day").
+    pub period: Time,
+}
+
+impl DiurnalCurve {
+    pub fn new(base_rate: f64, amplitude: f64, period: Time) -> Result<DiurnalCurve> {
+        if !(base_rate > 0.0) || !(period.as_s() > 0.0) || !amplitude.is_finite() {
+            return Err(Error::Graph("diurnal curve needs positive rate/period".into()));
+        }
+        Ok(DiurnalCurve { base_rate, amplitude: amplitude.abs(), period })
+    }
+
+    /// Instantaneous rate at absolute time `t` (periodic, never negative).
+    pub fn rate(&self, t: Time) -> f64 {
+        let phase = t.as_s() / self.period.as_s() * std::f64::consts::TAU;
+        (self.base_rate * (1.0 + self.amplitude * phase.sin())).max(0.0)
+    }
+
+    /// The curve's maximum rate — the thinning envelope the Poisson
+    /// arrival generator rejects against.
+    pub fn peak_rate(&self) -> f64 {
+        self.base_rate * (1.0 + self.amplitude)
+    }
+}
 
 /// Generator parameters.
 #[derive(Debug, Clone)]
@@ -269,5 +309,41 @@ mod tests {
     fn rejects_degenerate_configs() {
         assert!(TaxiCity::generate(TaxiCityConfig { taxis: 1, ..small() }).is_err());
         assert!(TaxiCity::generate(TaxiCityConfig { grid: 0, ..small() }).is_err());
+    }
+
+    #[test]
+    fn diurnal_curve_is_periodic_and_nonnegative() {
+        let c = DiurnalCurve::new(100.0, 0.8, Time::s(2.0)).unwrap();
+        // Mean over samples ≈ base, extremes at ±amplitude.
+        for k in 0..200 {
+            let t = Time::s(k as f64 * 0.017);
+            let r = c.rate(t);
+            assert!(r >= 0.0 && r <= c.peak_rate() + 1e-9);
+            // Periodicity: one full period later, the same rate.
+            let r2 = c.rate(t + c.period);
+            assert!((r - r2).abs() < 1e-6 * c.base_rate, "t={t}: {r} vs {r2}");
+        }
+        assert!((c.rate(Time::s(0.5)) - 180.0).abs() < 1e-9, "peak at quarter period");
+        assert!((c.rate(Time::s(1.5)) - 20.0).abs() < 1e-9, "trough at three quarters");
+        assert!((c.peak_rate() - 180.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diurnal_curve_clamps_overdeep_troughs_at_zero() {
+        // amplitude > 1 would go negative on a pure sinusoid; the curve
+        // clamps instead, so thinning acceptance stays a probability.
+        let c = DiurnalCurve::new(50.0, 1.5, Time::s(1.0)).unwrap();
+        assert_eq!(c.rate(Time::s(0.75)), 0.0);
+        assert!((c.rate(Time::s(0.25)) - 125.0).abs() < 1e-9);
+        // Negative amplitudes normalize to their magnitude.
+        let n = DiurnalCurve::new(50.0, -0.5, Time::s(1.0)).unwrap();
+        assert_eq!(n.amplitude, 0.5);
+    }
+
+    #[test]
+    fn diurnal_curve_rejects_degenerate_params() {
+        assert!(DiurnalCurve::new(0.0, 0.5, Time::s(1.0)).is_err());
+        assert!(DiurnalCurve::new(10.0, 0.5, Time::ZERO).is_err());
+        assert!(DiurnalCurve::new(10.0, f64::NAN, Time::s(1.0)).is_err());
     }
 }

@@ -1,0 +1,231 @@
+//! E13 cross-validation: the traffic engine against queueing theory.
+//!
+//! * **M/D/1 / Pollaczek–Khinchine** — Poisson arrivals into a single
+//!   queue with deterministic service (the immediate policy) must match
+//!   the P–K mean-wait closed form across load levels.
+//! * **Little's law** — `∫N(t)dt = Σ response` holds to round-off on
+//!   every E13 sweep point and on every arrival process (the two sides
+//!   count the same request-seconds through independent accumulators).
+//! * **Open vs closed loop** — at ρ→0 both loops degenerate to
+//!   `utilization = arrival rate × service time`.
+//! * **Crossover** — the E13 sweep reports a finite centralized→semi
+//!   crossover request rate (the repo's "at what load does the hybrid
+//!   win?" answer).
+//! * **Congestion composes** — a netsim-congested round latency fed
+//!   through `LatencyProvider::Netsim` slows every traffic percentile.
+
+use ima_gnn::coordinator::LatencyProvider;
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::experiments::TrafficSweep;
+use ima_gnn::netmodel::{NetModel, Topology};
+use ima_gnn::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use ima_gnn::testing::assert_close;
+use ima_gnn::traffic::{
+    closed_loop, md1_mean_wait, open_loop, ArrivalProcess, BatchPolicy, ClosedLoopConfig,
+    ServiceModel, ThinkTime,
+};
+use ima_gnn::units::Time;
+use ima_gnn::workload::DiurnalCurve;
+
+fn station(service_ms: f64) -> ServiceModel {
+    ServiceModel::new(Time::ms(service_ms), Time::ZERO).unwrap()
+}
+
+/// M/D/1: simulated mean queue wait vs Pollaczek–Khinchine, across low,
+/// medium and heavy load.  The runs are deterministic per seed; the
+/// tolerance covers the finite-sample error of ~40k-request streams.
+#[test]
+fn md1_mean_wait_matches_pollaczek_khinchine() {
+    let s = Time::ms(2.0);
+    let service = station(2.0);
+    for (rho, seed) in [(0.3, 11), (0.5, 12), (0.7, 13)] {
+        let rate = rho / s.as_s();
+        let horizon = Time::s(40_000.0 / rate);
+        let arrivals = ArrivalProcess::Poisson { rate }
+            .generate(horizon, 64, seed)
+            .unwrap();
+        let r = open_loop(1, &service, BatchPolicy::Immediate, &arrivals).unwrap();
+        let pk = md1_mean_wait(rate, s).unwrap();
+        assert_close(r.mean_wait.as_s(), pk.as_s(), 0.08);
+        // Utilization tracks ρ and Little's law holds to round-off.
+        assert_close(r.utilization, rho, 0.05);
+        assert!(r.littles_law_gap() < 1e-9, "rho {rho}: gap {}", r.littles_law_gap());
+        // Response = wait + service, so the mean response cross-checks
+        // the same closed form shifted by s.
+        assert_close(r.latency.mean().as_s(), (pk + s).as_s(), 0.08);
+    }
+}
+
+/// Little's law holds to round-off on every arrival process the engine
+/// supports — not just the Poisson case the P–K test covers.
+#[test]
+fn littles_law_holds_on_every_arrival_process() {
+    let service = ServiceModel::new(Time::ms(4.0), Time::ms(0.1)).unwrap();
+    let policy = BatchPolicy::Deadline { max: 8, max_wait: Time::ms(3.0) };
+    let horizon = Time::s(10.0);
+    let processes = [
+        ArrivalProcess::Poisson { rate: 400.0 },
+        ArrivalProcess::Diurnal(DiurnalCurve::new(400.0, 0.9, Time::s(5.0)).unwrap()),
+        ArrivalProcess::FlashCrowd {
+            base: 200.0,
+            boost: 6.0,
+            at: Time::s(4.0),
+            width: Time::s(1.0),
+        },
+    ];
+    for p in processes {
+        let arrivals = p.generate(horizon, 32, 21).unwrap();
+        for servers in [1usize, 3] {
+            let r = open_loop(servers, &service, policy, &arrivals).unwrap();
+            assert!(
+                r.littles_law_gap() < 1e-9,
+                "{p:?} x{servers}: gap {}",
+                r.littles_law_gap()
+            );
+        }
+    }
+    let r = closed_loop(
+        2,
+        &service,
+        policy,
+        &ClosedLoopConfig {
+            fleet: 16,
+            think: ThinkTime::Exponential { mean: Time::ms(40.0) },
+            horizon,
+            nodes: 32,
+            seed: 7,
+        },
+    )
+    .unwrap();
+    assert!(r.littles_law_gap() < 1e-9, "closed loop: gap {}", r.littles_law_gap());
+}
+
+/// A flash crowd degrades the tail far more than the median — the SLO
+/// story the one-shot round experiments cannot tell.
+#[test]
+fn flash_crowd_punishes_the_tail_not_the_median() {
+    let service = station(4.0);
+    // max 2 caps this queue's throughput at 500 req/s — the 600 req/s
+    // spike genuinely oversubscribes it for half a second.
+    let policy = BatchPolicy::Deadline { max: 2, max_wait: Time::ms(2.0) };
+    let horizon = Time::s(10.0);
+    let calm = ArrivalProcess::Poisson { rate: 100.0 }.generate(horizon, 32, 5).unwrap();
+    let spiky = ArrivalProcess::FlashCrowd {
+        base: 100.0,
+        boost: 6.0,
+        at: Time::s(4.0),
+        width: Time::s(0.5),
+    }
+    .generate(horizon, 32, 5)
+    .unwrap();
+    let base = open_loop(1, &service, policy, &calm).unwrap();
+    let flash = open_loop(1, &service, policy, &spiky).unwrap();
+    assert!(
+        flash.latency.p99() > base.latency.p99() * 2.0,
+        "p99 must blow up under the spike: {} vs {}",
+        flash.latency.p99(),
+        base.latency.p99()
+    );
+    let p50_ratio = flash.latency.p50() / base.latency.p50();
+    let p99_ratio = flash.latency.p99() / base.latency.p99();
+    assert!(
+        p99_ratio > p50_ratio,
+        "the tail must degrade more than the median ({p99_ratio} vs {p50_ratio})"
+    );
+}
+
+/// Open- vs closed-loop equivalence at low load: as ρ→0 both loops
+/// satisfy `utilization → arrival rate × service time`, and the closed
+/// loop's effective rate approaches `fleet / (think + service)`.
+#[test]
+fn open_and_closed_loops_agree_at_low_load() {
+    let s = Time::ms(5.0);
+    let service = station(5.0);
+    let fleet = 8usize;
+    let think = Time::s(2.0);
+    // Closed loop: 8 clients cycling think(2 s) + service(5 ms).
+    let closed = closed_loop(
+        1,
+        &service,
+        BatchPolicy::Immediate,
+        &ClosedLoopConfig {
+            fleet,
+            think: ThinkTime::Exponential { mean: think },
+            horizon: Time::s(1_000.0),
+            nodes: 16,
+            seed: 17,
+        },
+    )
+    .unwrap();
+    // The operational identity is exact for unit batches...
+    assert_close(
+        closed.utilization,
+        closed.throughput_per_s * s.as_s(),
+        1e-9,
+    );
+    // ...and the measured rate approaches fleet/(think + response).
+    let expected_rate = fleet as f64 / (think + s).as_s();
+    assert_close(closed.throughput_per_s, expected_rate, 0.2);
+
+    // Open loop at the closed loop's effective rate: same utilization.
+    let arrivals = ArrivalProcess::Poisson { rate: expected_rate }
+        .generate(Time::s(1_000.0), 16, 18)
+        .unwrap();
+    let open = open_loop(1, &service, BatchPolicy::Immediate, &arrivals).unwrap();
+    assert_close(open.utilization, expected_rate * s.as_s(), 0.25);
+    assert_close(open.utilization, closed.utilization, 0.3);
+    // Both sit far below saturation, with near-zero queueing.
+    assert!(open.utilization < 0.05 && closed.utilization < 0.05);
+    assert!(open.mean_wait.as_s() < 0.2 * s.as_s());
+}
+
+/// E13 acceptance: the sweep reports a finite centralized→semi
+/// crossover request rate for at least one Table 2 dataset, and
+/// Little's law holds on every sweep point.
+#[test]
+fn traffic_sweep_crossover_and_littles_law() {
+    let sweep = TrafficSweep::run_with_threads(200, 1_500, 2).unwrap();
+    assert_eq!(sweep.rows.len(), 4);
+    assert!(sweep.max_littles_gap() < 1e-9, "gap {}", sweep.max_littles_gap());
+    let lj = sweep.rows.iter().find(|r| r.dataset == "LiveJournal").unwrap();
+    let x = lj.crossover_per_s.expect("LiveJournal must report a crossover rate");
+    assert!(x.is_finite() && x > 0.0, "crossover {x}");
+    assert!(
+        sweep.rows.iter().any(|r| r.crossover_per_s.is_some()),
+        "at least one Table 2 dataset must flip to the hybrid under load"
+    );
+}
+
+/// Netsim congestion composes with queueing: a contended star fabric's
+/// round completion, fed through `LatencyProvider::Netsim`, slows every
+/// percentile of the same arrival stream.
+#[test]
+fn netsim_congestion_composes_with_queueing() {
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology { nodes: 1_000, cluster_size: 10 };
+    // A 64-port leader NIC congests the 1000-device gather.
+    let cfg = NetSimConfig { rx_ports: Some(64), ..Default::default() };
+    let congested = simulate_fabric(&model, Scenario::CentralizedStar, topo, &cfg).unwrap();
+    let analytic = ServiceModel::centralized(LatencyProvider::Analytic, &model, topo).unwrap();
+    let simulated = ServiceModel::centralized(
+        LatencyProvider::Netsim(congested.completion),
+        &model,
+        topo,
+    )
+    .unwrap();
+    assert!(
+        simulated.per_batch > analytic.per_batch,
+        "contention must price the batch barrier up"
+    );
+    let policy = BatchPolicy::Deadline { max: 64, max_wait: Time::ms(2.0) };
+    let rate = 0.5 * analytic.saturation_rate(64);
+    let arrivals = ArrivalProcess::Poisson { rate }
+        .generate(Time::s(2_000.0 / rate), topo.nodes, 23)
+        .unwrap();
+    let fast = open_loop(1, &analytic, policy, &arrivals).unwrap();
+    let slow = open_loop(1, &simulated, policy, &arrivals).unwrap();
+    assert!(slow.latency.p50() > fast.latency.p50());
+    assert!(slow.latency.p95() > fast.latency.p95());
+    assert!(slow.latency.mean() > fast.latency.mean());
+    assert!(slow.littles_law_gap() < 1e-9 && fast.littles_law_gap() < 1e-9);
+}
