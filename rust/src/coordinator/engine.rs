@@ -24,7 +24,9 @@ use crate::cores::{FeatureMatrix, GnnWorkload};
 use crate::error::{Error, Result};
 use crate::graph::{Csr, NeighborSampler, ShardPlan};
 use crate::netmodel::{NetModel, Setting, Topology};
+use crate::obs::{MetricsRegistry, Tracer};
 use crate::runtime::{ArtifactSpec, Tensor};
+use crate::span;
 use crate::units::Time;
 
 use super::leader::CentralizedLeader;
@@ -203,11 +205,14 @@ pub struct RoundEngine {
     /// Per-shard feature-table tensors, rebuilt only at the `end_round`
     /// barrier (`None` until the first barrier).
     table_tensors: Vec<Option<Tensor>>,
-    /// Tensor-cache misses: how often a table tensor was actually built
-    /// (the analogue of `AggregationCore::programs()` — serving batches
-    /// must not bump this).
-    table_builds: u64,
-    served_batches: u64,
+    /// Always-on counters: `engine.table_builds` (tensor-cache misses,
+    /// the analogue of `AggregationCore::programs()` — serving batches
+    /// must not bump it) and `engine.served_batches`.
+    metrics: MetricsRegistry,
+    /// Span recorder for the serve / assemble / round-barrier hot path;
+    /// disabled by default ([`RoundEngine::enable_tracing`] opts in),
+    /// so untraced runs stay bit-identical.
+    tracer: Tracer,
 }
 
 impl RoundEngine {
@@ -243,9 +248,26 @@ impl RoundEngine {
             stores,
             w_tensor,
             table_tensors,
-            table_builds: 0,
-            served_batches: 0,
+            metrics: MetricsRegistry::new(),
+            tracer: Tracer::disabled(),
         })
+    }
+
+    /// Opt in to span recording on the serve / assemble / round-barrier
+    /// path, keeping at most `span_capacity` spans.
+    pub fn enable_tracing(&mut self, span_capacity: usize) {
+        self.tracer = Tracer::new(span_capacity);
+    }
+
+    /// The engine's span recorder (disabled unless
+    /// [`RoundEngine::enable_tracing`] was called).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// The engine's always-on metrics registry.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 
     pub fn binding(&self) -> &GcnLayerBinding {
@@ -290,11 +312,17 @@ impl RoundEngine {
         let b = &self.binding;
         let all: Vec<usize> = (0..b.table).collect();
         for (s, store) in self.stores.iter_mut().enumerate() {
-            store.swap();
+            let _barrier = span!(self.tracer, "engine.round_barrier", shard = s).track(s as u64);
+            {
+                // The double-buffer flip: staged uploads become the
+                // serving state.
+                let _flip = span!(self.tracer, "store.swap", shard = s).track(s as u64);
+                store.swap();
+            }
             let x_table = store.gather(&all).expect("table rows are in range");
             self.table_tensors[s] =
                 Some(Tensor::f32(&[b.table, b.feature], x_table).expect("shape is static"));
-            self.table_builds += 1;
+            self.metrics.inc("engine.table_builds", 1);
         }
     }
 
@@ -321,13 +349,15 @@ impl RoundEngine {
 
     /// Tensor-cache misses: table tensors built so far.  One increment
     /// per shard per `end_round`; serving any number of batches in
-    /// between leaves it untouched (asserted in tests).
+    /// between leaves it untouched (asserted in tests).  Thin read of
+    /// the `engine.table_builds` counter in [`Self::metrics`].
     pub fn table_builds(&self) -> u64 {
-        self.table_builds
+        self.metrics.counter_value("engine.table_builds")
     }
 
+    /// Thin read of the `engine.served_batches` counter.
     pub fn served_batches(&self) -> u64 {
-        self.served_batches
+        self.metrics.counter_value("engine.served_batches")
     }
 
     /// The cached table tensor of one shard (`None` before the first
@@ -341,6 +371,7 @@ impl RoundEngine {
     /// within a shard), chunk to the static batch size and pad by
     /// repeating the last entry — exactly the seed pipeline, per shard.
     pub fn assemble(&self, nodes: &[usize]) -> Result<Vec<ShardBatch>> {
+        let _span = span!(self.tracer, "engine.assemble", nodes = nodes.len());
         let b = &self.binding;
         if nodes.is_empty() {
             return Err(Error::Coordinator("empty batch".into()));
@@ -384,6 +415,7 @@ impl RoundEngine {
     /// run every shard batch against its cached round-constant tensors,
     /// and scatter the layer outputs back into request order.
     pub fn serve(&mut self, svc: &InferenceService, nodes: &[usize]) -> Result<EngineOutput> {
+        let _span = span!(self.tracer, "engine.serve", nodes = nodes.len());
         let batches = self.assemble(nodes)?;
         let b = &self.binding;
         let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); nodes.len()];
@@ -412,7 +444,7 @@ impl RoundEngine {
                 outputs[pos] = flat[k * b.hidden..(k + 1) * b.hidden].to_vec();
             }
         }
-        self.served_batches += served;
+        self.metrics.inc("engine.served_batches", served);
         Ok(EngineOutput { outputs, wall, batches: served })
     }
 }

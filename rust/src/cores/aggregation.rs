@@ -10,6 +10,7 @@
 use crate::config::{CoreConfig, DeviceParams};
 use crate::crossbar::MvmCrossbar;
 use crate::error::{Error, Result};
+use crate::obs::MetricsRegistry;
 use crate::units::{Energy, Time};
 
 use super::tile::Tile;
@@ -26,8 +27,9 @@ pub struct AggregationCore {
     window: Option<(usize, usize)>,
     /// Scratch: packed row-activation mask (one bit per crossbar row).
     mask: Vec<u64>,
-    /// Cache misses: how often the RRAM array was actually written.
-    programs: u64,
+    /// Always-on counters (`aggregation.programs` counts the RRAM cache
+    /// misses the `programs()` accessor reports).
+    metrics: MetricsRegistry,
 }
 
 impl AggregationCore {
@@ -39,7 +41,7 @@ impl AggregationCore {
             config,
             window: None,
             mask: vec![0u64; mask_words],
-            programs: 0,
+            metrics: MetricsRegistry::new(),
         })
     }
 
@@ -101,7 +103,7 @@ impl AggregationCore {
         // On failure the array is untouched (`program_tile` validates
         // before writing), so the previous window — if any — stays valid.
         self.xbar.program_tile(features.as_slice(), shape.0, shape.1)?;
-        self.programs += 1;
+        self.metrics.inc("aggregation.programs", 1);
         self.window = Some(shape);
         Ok(())
     }
@@ -112,9 +114,15 @@ impl AggregationCore {
     }
 
     /// How often the crossbar was actually (re)programmed — cache misses
-    /// of the program-once path.
+    /// of the program-once path.  Thin read of the
+    /// `aggregation.programs` counter in [`Self::metrics`].
     pub fn programs(&self) -> u64 {
-        self.programs
+        self.metrics.counter_value("aggregation.programs")
+    }
+
+    /// The core's always-on metrics registry.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 
     /// Accumulate the resident window's rows selected by `active` into

@@ -13,6 +13,7 @@ use crate::error::Result;
 use crate::graph::{datasets, fixed_size, generate, Csr, DatasetStats, ShardPlan};
 use crate::netmodel::{NetModel, Setting, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use crate::obs::MetricsRegistry;
 use crate::par;
 use crate::report::{pct, speedup, BarSeries, Table};
 use crate::testing::{gcn_layer_binding, Rng};
@@ -400,6 +401,26 @@ impl NetsimSweep {
         self.rows.iter().map(NetsimRow::rel_gap).fold(0.0, f64::max)
     }
 
+    /// Post-hoc metrics view of the sweep — the `.metrics.json` sidecar
+    /// the CLI writes next to `BENCH_netsim.json`.  A pure function of
+    /// the rows, so it inherits the sweep's byte-determinism.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        m.inc("netsim.rows", self.rows.len() as u64);
+        m.set_gauge("netsim.max_rel_gap", self.max_rel_gap());
+        m.set_gauge("netsim.avg_comm_gap", self.avg_comm_gap());
+        m.set_gauge("netsim.avg_compute_gap", self.avg_compute_gap());
+        if self.crossover().is_some() {
+            m.inc("netsim.crossovers", 1);
+        }
+        for r in &self.rows {
+            m.observe("netsim.centralized_total_s", r.cent.0.as_s());
+            m.observe("netsim.decentralized_total_s", r.dec.0.as_s());
+            m.observe("netsim.semi_total_s", r.semi.0.as_s());
+        }
+        m
+    }
+
     pub fn render(&self) -> Table {
         let mut t = Table::new(
             "E9 — netsim sweep: simulated (analytic) round latency per fabric",
@@ -653,6 +674,20 @@ impl HybridSweep {
         self.rows.iter().filter(|r| r.hybrid_wins()).collect()
     }
 
+    /// Post-hoc metrics view of the sweep — the `.metrics.json` sidecar
+    /// the CLI writes next to `BENCH_hybrid.json`.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        m.inc("hybrid.datasets", self.rows.len() as u64);
+        m.inc("hybrid.wins", self.hybrid_wins().len() as u64);
+        for r in &self.rows {
+            m.inc("hybrid.grid_points", r.grid_points as u64);
+            m.observe("hybrid.best_latency_s", r.best.score.latency.as_s());
+            m.observe("hybrid.speedup_vs_best_pure", r.speedup_vs_best_pure());
+        }
+        m
+    }
+
     pub fn render(&self) -> Table {
         let mut t = Table::new(
             "E11 — tuned operating point vs pure settings (total round latency)",
@@ -887,6 +922,22 @@ impl ServingSweep {
                 .semi(&model, topo, cs as f64),
             wall_s: timed.then_some(wall),
         })
+    }
+
+    /// Post-hoc metrics view of the sweep — the `.metrics.json` sidecar
+    /// the CLI writes next to `BENCH_serving.json`.  Wall-clock fields are
+    /// deliberately excluded so the snapshot stays byte-deterministic.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        m.inc("serving.datasets", self.rows.len() as u64);
+        for r in &self.rows {
+            m.inc("serving.table_builds", r.table_builds);
+            m.inc("serving.batches_per_round", r.batches_per_round);
+            m.raise_gauge("serving.max_slots", r.max_slots as f64);
+            m.observe("serving.cent_modeled_s", r.cent_modeled.as_s());
+            m.observe("serving.semi_modeled_s", r.semi_modeled.as_s());
+        }
+        m
     }
 
     pub fn render(&self) -> Table {
@@ -1177,6 +1228,27 @@ impl TrafficSweep {
             .iter()
             .flat_map(|r| r.points.iter().map(|p| p.littles_gap))
             .fold(0.0, f64::max)
+    }
+
+    /// Post-hoc metrics view of the sweep — the `.metrics.json` sidecar
+    /// the CLI writes next to `BENCH_traffic.json`.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        m.inc("traffic.datasets", self.rows.len() as u64);
+        m.set_gauge("traffic.max_littles_gap", self.max_littles_gap());
+        for r in &self.rows {
+            for p in &r.points {
+                m.inc("traffic.points", 1);
+                m.inc("traffic.offered", p.offered as u64);
+                m.raise_gauge("traffic.max_queue_depth", p.max_queue_depth as f64);
+                m.observe("traffic.p95_s", p.p95_s);
+                m.observe("traffic.utilization", p.utilization);
+            }
+            if r.crossover_per_s.is_some() {
+                m.inc("traffic.crossovers", 1);
+            }
+        }
+        m
     }
 
     pub fn render(&self) -> Table {

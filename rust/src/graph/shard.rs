@@ -21,6 +21,8 @@
 //!   more, nothing less.
 
 use crate::error::{Error, Result};
+use crate::obs::Obs;
+use crate::span;
 
 use super::cluster::Clustering;
 use super::csr::Csr;
@@ -92,8 +94,21 @@ impl ShardPlan {
     /// (`slot == node`), which is what keeps single-shard serving
     /// bit-identical to the unsharded seed path.
     pub fn build(graph: &Csr, sampler: &NeighborSampler, table: usize) -> Result<ShardPlan> {
+        ShardPlan::build_observed(graph, sampler, table, &Obs::disabled())
+    }
+
+    /// [`ShardPlan::build`] with an observability handle: the whole
+    /// capacity search runs under a `shard.plan` span and each packing
+    /// attempt bumps the `shard.pack_attempts` counter.  The plan itself
+    /// is byte-identical to the unobserved build.
+    pub fn build_observed(
+        graph: &Csr,
+        sampler: &NeighborSampler,
+        table: usize,
+        obs: &Obs,
+    ) -> Result<ShardPlan> {
         let singles: Vec<Vec<usize>> = (0..graph.num_nodes()).map(|v| vec![v]).collect();
-        ShardPlan::pack(graph, sampler, table, &singles, 1)
+        ShardPlan::pack(graph, sampler, table, &singles, 1, obs)
     }
 
     /// Shard a graph so whole clusters land in one shard (the semi
@@ -108,7 +123,7 @@ impl ShardPlan {
             return Err(Error::Graph("clustering does not cover the graph".into()));
         }
         let min_cap = clustering.clusters.iter().map(Vec::len).max().unwrap_or(0).max(1);
-        ShardPlan::pack(graph, sampler, table, &clustering.clusters, min_cap)
+        ShardPlan::pack(graph, sampler, table, &clustering.clusters, min_cap, &Obs::disabled())
     }
 
     /// Capacity search: pack groups with a member budget of `cap`, shrink
@@ -124,7 +139,9 @@ impl ShardPlan {
         table: usize,
         groups: &[Vec<usize>],
         min_cap: usize,
+        obs: &Obs,
     ) -> Result<ShardPlan> {
+        let _span = span!(obs.tracer, "shard.plan", nodes = graph.num_nodes(), table = table);
         if table == 0 {
             return Err(Error::Graph("shard table must hold at least one row".into()));
         }
@@ -138,6 +155,9 @@ impl ShardPlan {
         let sample = sampler.sample_size();
         let mut cap = table;
         loop {
+            if obs.is_enabled() {
+                obs.metrics.inc("shard.pack_attempts", 1);
+            }
             match ShardPlan::try_pack(&samples, sample, table, groups, cap)? {
                 PackOutcome::Fits(plan) => return Ok(plan),
                 PackOutcome::Overflow(worst) => {

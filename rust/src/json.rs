@@ -1,11 +1,18 @@
-//! Minimal JSON parser for the artifact manifest.
+//! Minimal JSON parser + serializer for artifacts.
 //!
 //! The offline crate set has no `serde_json`; this module implements the
 //! subset of JSON the manifest uses (objects, arrays, strings, numbers,
 //! booleans, null) with precise error offsets.  It is strict: trailing
 //! commas, comments and unquoted keys are rejected.
+//!
+//! [`Json::dump`] is the single serialization path for every metric and
+//! trace artifact the crate emits.  Objects are [`BTreeMap`]s, so keys
+//! serialize in sorted order for free, and number formatting is a pure
+//! function of the value — the output is byte-deterministic regardless
+//! of thread count, matching the E9/E11/E13 byte-identity contract.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
 
@@ -66,6 +73,85 @@ impl Json {
         self.get(key)
             .ok_or_else(|| Error::Json { offset: 0, message: format!("missing key `{key}`") })
     }
+
+    /// Serialize to a compact JSON string.
+    ///
+    /// Object keys come out sorted (the map is a `BTreeMap`) and numbers
+    /// format deterministically: integral values within `i64`'s exact
+    /// range print without a fraction, everything else uses Rust's
+    /// shortest round-trip float form, and non-finite values become
+    /// `null` (JSON has no NaN/Inf).  `parse(dump(x)) == x` for every
+    /// finite document.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_number(*n, out),
+            Json::Str(s) => write_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_string(k, out);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_number(v: f64, out: &mut String) {
+    if !v.is_finite() {
+        out.push_str("null");
+        return;
+    }
+    // 2^53: below this every integral f64 is exact, so the integer form
+    // round-trips; above it the float form is the honest one.
+    if v == v.trunc() && v.abs() < 9_007_199_254_740_992.0 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -350,5 +436,45 @@ mod tests {
         assert!(v.require("a").is_ok());
         let e = v.require("missing").unwrap_err();
         assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn dump_sorts_keys_and_roundtrips() {
+        let doc = r#"{"z": 1, "a": [true, null, "x\ny"], "m": {"q": -0.25}}"#;
+        let v = parse(doc).unwrap();
+        let s = v.dump();
+        // BTreeMap ordering: keys come out sorted regardless of input order.
+        assert_eq!(s, r#"{"a":[true,null,"x\ny"],"m":{"q":-0.25},"z":1}"#);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_number_forms() {
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(-3.0).dump(), "-3");
+        assert_eq!(Json::Num(0.5).dump(), "0.5");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        // Past 2^53 the integral check is off — float form round-trips.
+        let big = Json::Num(1e300);
+        assert_eq!(parse(&big.dump()).unwrap(), big);
+    }
+
+    #[test]
+    fn dump_escapes_control_characters() {
+        let v = Json::Str("tab\t quote\" back\\ bell\u{0007}".into());
+        let s = v.dump();
+        assert!(s.contains("\\t") && s.contains("\\\"") && s.contains("\\\\"));
+        assert!(s.contains("\\u0007"));
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_roundtrips_random_floats() {
+        let mut rng = crate::testing::Rng::new(9);
+        for _ in 0..200 {
+            let v = Json::Num((rng.f64() - 0.5) * 1e9);
+            assert_eq!(parse(&v.dump()).unwrap(), v);
+        }
     }
 }

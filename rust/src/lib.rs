@@ -35,6 +35,7 @@ pub mod graph;
 pub mod json;
 pub mod netmodel;
 pub mod netsim;
+pub mod obs;
 pub mod par;
 pub mod perfbench;
 pub mod pjrt;

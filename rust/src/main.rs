@@ -13,6 +13,7 @@
 //! ima-gnn tune [options]          # E11: hybrid operating-point autotuner
 //! ima-gnn perf [options]          # E10: hot-kernel perf baseline
 //! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
+//! ima-gnn trace [options]         # traced E13 round -> Perfetto timeline
 //! ima-gnn info                    # artifact + platform info
 //! ```
 
@@ -21,24 +22,25 @@ use std::time::Duration;
 use ima_gnn::autotune::{Autotuner, SettingKind, TunerConfig};
 use ima_gnn::cli::Command;
 use ima_gnn::coordinator::{
-    CentralizedLeader, GcnLayerBinding, InferenceService, LatencyProvider, Request,
+    CentralizedLeader, GcnLayerBinding, InferenceService, LatencyProvider, Request, RoundEngine,
 };
 use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
 use ima_gnn::experiments::{
     hybrid_target, scaling_sweep, table2, Fig8, HybridSweep, NetsimSweep, ServingSweep, Table1,
-    TrafficSweep,
+    TrafficSweep, TRAFFIC_MAX_BATCH, TRAFFIC_WAIT_MS,
 };
-use ima_gnn::graph::generate;
+use ima_gnn::graph::{generate, ShardPlan};
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
-use ima_gnn::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use ima_gnn::netsim::{simulate_fabric, simulate_fabric_observed, NetSimConfig, Scenario};
+use ima_gnn::obs::{chrome_trace_json, MetricsRegistry, Obs, Tracer};
 use ima_gnn::report::{speedup, Table};
 use ima_gnn::runtime::{default_artifact_dir, Manifest};
 use ima_gnn::sim::{simulate, SimConfig};
-use ima_gnn::testing::Rng;
+use ima_gnn::testing::{gcn_layer_binding, Rng};
 use ima_gnn::traffic::{
-    closed_loop, deployment_shape, md1_mean_wait, open_loop, ArrivalProcess, BatchPolicy,
-    ClosedLoopConfig, ThinkTime, TrafficReport,
+    closed_loop, deployment_shape, md1_mean_wait, open_loop, open_loop_observed, ArrivalProcess,
+    BatchPolicy, ClosedLoopConfig, ThinkTime, TrafficReport,
 };
 use ima_gnn::units::Time;
 use ima_gnn::workload::DiurnalCurve;
@@ -68,6 +70,7 @@ fn run(argv: &[String]) -> Result<()> {
         "tune" => cmd_tune(rest),
         "perf" => cmd_perf(rest),
         "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
         "area" => cmd_area(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -76,6 +79,21 @@ fn run(argv: &[String]) -> Result<()> {
         }
         other => Err(Error::Usage(format!("unknown subcommand `{other}`; try `ima-gnn help`"))),
     }
+}
+
+/// `<path minus .json>.metrics.json` — the metrics-snapshot sidecar
+/// written next to every `BENCH_*.json` artifact.
+fn metrics_sidecar_path(path: &str) -> String {
+    match path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.metrics.json"),
+        None => format!("{path}.metrics.json"),
+    }
+}
+
+fn write_metrics_sidecar(path: &str, metrics: &MetricsRegistry) -> Result<String> {
+    let sidecar = metrics_sidecar_path(path);
+    std::fs::write(&sidecar, metrics.to_json())?;
+    Ok(sidecar)
 }
 
 fn print_help() {
@@ -94,6 +112,8 @@ fn print_help() {
          perf       hot-kernel perf baseline, emits BENCH_perf.fresh.json; --check\n             gates against the committed BENCH_perf.json floors (E10)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts; --sweep runs\n             \
          the E12 sharded-serving sweep, emits BENCH_serving.json\n  \
+         trace      traced E13 round across the three deployment settings; exports a\n             \
+         Perfetto-loadable Chrome trace-event timeline + a metrics snapshot\n  \
          area       silicon-area report for both accelerator presets\n  \
          info       artifact manifest + platform info\n  \
          help       this message"
@@ -271,7 +291,8 @@ fn cmd_netsim(argv: &[String]) -> Result<()> {
         }
         let path = args.get_or("json", "BENCH_netsim.json").to_string();
         std::fs::write(&path, sweep.to_json())?;
-        println!("wrote {path}");
+        let sidecar = write_metrics_sidecar(&path, &sweep.metrics_snapshot())?;
+        println!("wrote {path} and {sidecar}");
         return Ok(());
     }
 
@@ -348,7 +369,8 @@ fn cmd_traffic(argv: &[String]) -> Result<()> {
         println!("max Little's-law gap: {:.3e} (round-off)", sweep.max_littles_gap());
         let path = args.get_or("json", "BENCH_traffic.json").to_string();
         std::fs::write(&path, sweep.to_json())?;
-        println!("wrote {path}");
+        let sidecar = write_metrics_sidecar(&path, &sweep.metrics_snapshot())?;
+        println!("wrote {path} and {sidecar}");
         return Ok(());
     }
 
@@ -562,7 +584,8 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     }
     let path = args.get_or("json", "BENCH_hybrid.json").to_string();
     std::fs::write(&path, sweep.to_json())?;
-    println!("wrote {path}");
+    let sidecar = write_metrics_sidecar(&path, &sweep.metrics_snapshot())?;
+    println!("wrote {path} and {sidecar}");
     Ok(())
 }
 
@@ -586,7 +609,8 @@ fn cmd_perf(argv: &[String]) -> Result<()> {
     }
     let path = args.get_or("json", "BENCH_perf.fresh.json").to_string();
     std::fs::write(&path, report.to_json())?;
-    println!("wrote {path}");
+    let sidecar = write_metrics_sidecar(&path, &report.metrics_snapshot())?;
+    println!("wrote {path} and {sidecar}");
 
     if let Some(baseline_path) = args.get("check") {
         let baseline = std::fs::read_to_string(baseline_path)?;
@@ -641,7 +665,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         );
         let path = args.get_or("json", "BENCH_serving.json").to_string();
         std::fs::write(&path, sweep.to_json())?;
-        println!("wrote {path}");
+        let sidecar = write_metrics_sidecar(&path, &sweep.metrics_snapshot())?;
+        println!("wrote {path} and {sidecar}");
         return Ok(());
     }
     let dir = args
@@ -698,6 +723,148 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         leader.served_batches(),
         wall_total.as_secs_f64() * 1e3 / served.max(1) as f64,
     );
+    Ok(())
+}
+
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("trace", "traced E13 round -> Perfetto timeline")
+        .opt("dataset", "taxi | a Table 2 dataset", Some("taxi"))
+        .opt("requests", "target requests per deployment setting", Some("300"))
+        .opt("rate", "offered system rate, requests/second", Some("5000"))
+        .opt("spans", "span ring-buffer capacity per process", Some("65536"))
+        .opt("seed", "rng seed", Some("1"))
+        .opt("out", "Chrome trace-event output path", Some("round.trace.json"));
+    let args = cmd.parse(argv)?;
+    let requests = args.usize_or("requests", 300)?.max(1);
+    let spans = args.usize_or("spans", 65_536)?.max(1);
+    let seed = args.usize_or("seed", 1)? as u64;
+    let rate = args.f64_or("rate", 5_000.0)?;
+    if !(rate > 0.0) {
+        return Err(Error::Usage("--rate must be > 0".into()));
+    }
+
+    let dataset = args.get_or("dataset", "taxi").to_string();
+    let (name, model, topo) = if dataset.eq_ignore_ascii_case("taxi") {
+        ("Taxi".to_string(), NetModel::paper(&GnnWorkload::taxi())?, Topology::taxi())
+    } else {
+        let d = ima_gnn::graph::datasets::by_name(&dataset)?;
+        (
+            d.name.to_string(),
+            NetModel::fig8(&d)?,
+            Topology { nodes: d.nodes, cluster_size: d.avg_cs },
+        )
+    };
+    let policy = BatchPolicy::Deadline {
+        max: TRAFFIC_MAX_BATCH,
+        max_wait: Time::ms(TRAFFIC_WAIT_MS),
+    };
+
+    // One observed open-loop E13 run per deployment setting: each setting
+    // becomes a Perfetto process, each server queue a timeline track.
+    let mut traffic = Vec::with_capacity(3);
+    for kind in [SettingKind::Centralized, SettingKind::Semi, SettingKind::Decentralized] {
+        let (queues, service) = deployment_shape(kind, LatencyProvider::Analytic, &model, topo)?;
+        let queue_rate = queues.per_queue_rate(rate);
+        if !(queue_rate > 0.0) {
+            return Err(Error::Usage("--rate splits to a non-positive queue rate".into()));
+        }
+        let horizon = Time::s(requests as f64 / queue_rate);
+        let arrivals =
+            ArrivalProcess::Poisson { rate: queue_rate }.generate(horizon, topo.nodes, seed)?;
+        let obs = Obs::new(spans);
+        let report = open_loop_observed(1, &service, policy, &arrivals, &obs)?;
+        traffic.push((kind.name(), obs, report));
+    }
+
+    // A short sharded serving run for the engine/shard tracks: plan the
+    // shards under a `shard.plan` span, then drive two full upload ->
+    // barrier -> assemble rounds through a tracing round engine.
+    let obs_shard = Obs::new(spans);
+    let binding = gcn_layer_binding();
+    let (feature, hidden, table) = (binding.feature, binding.hidden, binding.table);
+    let graph = generate::regular(96, 6, 3)?;
+    let plan = ShardPlan::build_observed(&graph, &binding.sampler(), table, &obs_shard)?;
+    let mut engine = RoundEngine::new(binding, plan, vec![0.01; feature * hidden])?;
+    engine.enable_tracing(spans);
+    let n = graph.num_nodes();
+    let all: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(11);
+    for _round in 0..2 {
+        for node in 0..n {
+            let f: Vec<f32> = (0..feature).map(|_| rng.f64() as f32).collect();
+            engine.upload(node, &f)?;
+        }
+        engine.end_round();
+        engine.assemble(&all)?;
+    }
+
+    // One observed netsim round: `net.packet` spans per fabric resource.
+    let obs_net = Obs::new(spans);
+    let net_cfg = NetSimConfig { rx_ports: Some(8), ..Default::default() };
+    let net_topo = Topology { nodes: 64, cluster_size: 8 };
+    let net =
+        simulate_fabric_observed(&model, Scenario::CentralizedStar, net_topo, &net_cfg, &obs_net)?;
+
+    // Reconcile the traffic timelines against the engine's own
+    // accounting: per setting, sum(wait spans) + sum(serve spans) must
+    // equal the report's total response time.
+    let mut worst_gap = 0.0f64;
+    for (setting, obs, report) in &traffic {
+        let recorded = obs.tracer.spans();
+        let covered: f64 = recorded
+            .iter()
+            .filter(|s| s.name == "traffic.wait" || s.name == "traffic.serve")
+            .map(|s| (s.end - s.start).as_s())
+            .sum();
+        let gap = (covered - report.sum_response.as_s()).abs()
+            / report.sum_response.as_s().max(1e-30);
+        worst_gap = worst_gap.max(gap);
+        println!(
+            "{setting}: {} spans over {} requests; span-covered {:.6} s vs \
+             sum_response {:.6} s (rel gap {:.3e})",
+            recorded.len(),
+            report.offered,
+            covered,
+            report.sum_response.as_s(),
+            gap
+        );
+        if obs.tracer.dropped() > 0 {
+            println!(
+                "  warning: ring buffer dropped {} spans; raise --spans to reconcile",
+                obs.tracer.dropped()
+            );
+        }
+    }
+    println!(
+        "netsim: {} packets ({} contended) over {} events",
+        net.packets, net.contended_packets, net.events
+    );
+
+    let labels: Vec<String> =
+        traffic.iter().map(|(setting, _, _)| format!("traffic:{setting}")).collect();
+    let mut procs: Vec<(&str, &Tracer)> = Vec::with_capacity(labels.len() + 3);
+    for (i, (_, obs, _)) in traffic.iter().enumerate() {
+        procs.push((labels[i].as_str(), &obs.tracer));
+    }
+    procs.push(("engine", engine.tracer()));
+    procs.push(("shard", &obs_shard.tracer));
+    procs.push(("netsim", &obs_net.tracer));
+    let out = args.get_or("out", "round.trace.json").to_string();
+    std::fs::write(&out, chrome_trace_json(&procs))?;
+
+    let merged = MetricsRegistry::new();
+    for (setting, obs, _) in &traffic {
+        merged.merge_from(&obs.metrics, &format!("{setting}."));
+    }
+    merged.merge_from(&obs_shard.metrics, "");
+    merged.merge_from(engine.metrics(), "");
+    merged.merge_from(&obs_net.metrics, "");
+    let sidecar = write_metrics_sidecar(&out, &merged)?;
+    println!(
+        "traced {name} round across {} settings; worst reconciliation gap {worst_gap:.3e}",
+        traffic.len()
+    );
+    println!("wrote {out} and {sidecar} (load {out} at ui.perfetto.dev)");
     Ok(())
 }
 

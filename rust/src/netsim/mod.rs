@@ -35,6 +35,7 @@ mod scenario;
 
 use crate::error::Result;
 use crate::netmodel::{CommFabric, NetModel, Setting, Topology};
+use crate::obs::Obs;
 use crate::units::Time;
 
 /// Capacity and behavior knobs of the fabric.
@@ -128,11 +129,29 @@ pub fn simulate_fabric(
     topo: Topology,
     cfg: &NetSimConfig,
 ) -> Result<NetSimReport> {
+    simulate_fabric_observed(model, scenario, topo, cfg, &Obs::disabled())
+}
+
+/// [`simulate_fabric`] with an observability handle: every on-air packet
+/// becomes a `net.packet` span on the *simulated* time axis (track = the
+/// first claimed resource id, `wait_us` = time queued on busy resources)
+/// and the fabric counters (`net.packets`, `net.contended`,
+/// `net.messages`, the `net.queue_wait_us` histogram and the
+/// `sim.event_queue.*` depth gauges) land in `obs.metrics`.  The
+/// simulated schedule — and therefore the report — is bit-identical to
+/// [`simulate_fabric`].
+pub fn simulate_fabric_observed(
+    model: &NetModel,
+    scenario: Scenario,
+    topo: Topology,
+    cfg: &NetSimConfig,
+    obs: &Obs,
+) -> Result<NetSimReport> {
     match scenario {
-        Scenario::CentralizedStar => scenario::centralized(model, topo, cfg),
-        Scenario::DecentralizedMesh => scenario::decentralized(model, topo, cfg),
+        Scenario::CentralizedStar => scenario::centralized(model, topo, cfg, obs),
+        Scenario::DecentralizedMesh => scenario::decentralized(model, topo, cfg, obs),
         Scenario::SemiOverlay { head_capacity } => {
-            scenario::semi(model, topo, head_capacity, cfg)
+            scenario::semi(model, topo, head_capacity, cfg, obs)
         }
     }
 }

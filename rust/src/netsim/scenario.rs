@@ -12,6 +12,7 @@
 
 use crate::error::{Error, Result};
 use crate::netmodel::{NetModel, Topology};
+use crate::obs::Obs;
 use crate::sim::EventQueue;
 use crate::testing::Rng;
 use crate::units::Time;
@@ -69,7 +70,7 @@ enum Ev {
 
 /// Shared engine state: resources, messages, the deterministic event
 /// queue and the statistics every scenario reports.
-struct Sim {
+struct Sim<'a> {
     queue: EventQueue<Ev>,
     msgs: Vec<Msg>,
     res: Vec<Resource>,
@@ -81,13 +82,18 @@ struct Sim {
     queue_wait: Time,
     comm_done: Time,
     completion: Time,
+    /// Observability handle: `net.packet` spans on the sim-time axis plus
+    /// the fabric counters.  Disabled by default through
+    /// [`super::simulate_fabric`]; the simulated schedule is identical
+    /// either way.
+    obs: &'a Obs,
 }
 
-impl Sim {
+impl<'a> Sim<'a> {
     /// `msgs_hint` / `events_hint`: expected message and event counts —
     /// the scenarios know both up front, so the queue and the message
     /// table never regrow mid-run.
-    fn new(cfg: &NetSimConfig, msgs_hint: usize, events_hint: usize) -> Sim {
+    fn new(cfg: &NetSimConfig, msgs_hint: usize, events_hint: usize, obs: &'a Obs) -> Sim<'a> {
         Sim {
             queue: EventQueue::with_capacity(events_hint),
             msgs: Vec::with_capacity(msgs_hint),
@@ -100,6 +106,7 @@ impl Sim {
             queue_wait: Time::ZERO,
             comm_done: Time::ZERO,
             completion: Time::ZERO,
+            obs,
         }
     }
 
@@ -143,6 +150,22 @@ impl Sim {
             self.queue_wait += start - ready;
         }
         self.packets_sent += 1;
+        if self.obs.is_enabled() {
+            let track = buf[..n].first().copied().unwrap_or(0) as u64;
+            let wait = start - ready;
+            self.obs.tracer.record_at(
+                "net.packet",
+                track,
+                start,
+                start + hold,
+                vec![("wait_us", wait.as_us().into())],
+            );
+            self.obs.metrics.inc("net.packets", 1);
+            if start > ready {
+                self.obs.metrics.inc("net.contended", 1);
+            }
+            self.obs.metrics.observe("net.queue_wait_us", wait.as_us());
+        }
         self.queue.push(start + hold, Ev::Packet(id));
     }
 
@@ -166,6 +189,13 @@ impl Sim {
     }
 
     fn report(self, devices: usize) -> NetSimReport {
+        if self.obs.is_enabled() {
+            self.obs.metrics.inc("net.messages", self.msgs.len() as u64);
+            self.obs.metrics.set_gauge("sim.event_queue.depth", self.queue.len() as f64);
+            self.obs
+                .metrics
+                .raise_gauge("sim.event_queue.max_depth", self.queue.max_depth() as f64);
+        }
         NetSimReport {
             completion: self.completion,
             comm_done: self.comm_done,
@@ -187,13 +217,14 @@ pub(super) fn centralized(
     model: &NetModel,
     topo: Topology,
     cfg: &NetSimConfig,
+    obs: &Obs,
 ) -> Result<NetSimReport> {
     if topo.nodes == 0 {
         return Err(Error::Sim("topology needs at least one node".into()));
     }
     let packets = model.inter_link().packets(model.message_bytes());
     // Per uplink: 1 Start + `packets` Packet events; plus ≤1 Compute each.
-    let mut sim = Sim::new(cfg, topo.nodes, topo.nodes * (packets + 2));
+    let mut sim = Sim::new(cfg, topo.nodes, topo.nodes * (packets + 2), obs);
     let rx = sim.add_resource(Resource::with_capacity(cfg.rx_ports));
     let lat = model.inter_link().packet_latency();
     for _device in 0..topo.nodes {
@@ -252,6 +283,7 @@ pub(super) fn decentralized(
     model: &NetModel,
     topo: Topology,
     cfg: &NetSimConfig,
+    obs: &Obs,
 ) -> Result<NetSimReport> {
     if topo.nodes == 0 || topo.cluster_size == 0 {
         return Err(Error::Sim("need nodes and a positive cluster size".into()));
@@ -259,7 +291,7 @@ pub(super) fn decentralized(
     let cs = topo.cluster_size;
     let n_clusters = topo.nodes.div_ceil(cs);
     // Two sessions per device (1 Start + cs Packet events each) + 1 Compute.
-    let mut sim = Sim::new(cfg, 2 * topo.nodes, topo.nodes * (2 * (cs + 1) + 1));
+    let mut sim = Sim::new(cfg, 2 * topo.nodes, topo.nodes * (2 * (cs + 1) + 1), obs);
 
     // Resources: one half-duplex radio per device, then (under the
     // shared-medium knob) one CSMA medium per cluster.
@@ -348,6 +380,7 @@ pub(super) fn semi(
     topo: Topology,
     head_capacity: f64,
     cfg: &NetSimConfig,
+    obs: &Obs,
 ) -> Result<NetSimReport> {
     if topo.nodes == 0 || topo.cluster_size == 0 {
         return Err(Error::Sim("need nodes and a positive cluster size".into()));
@@ -364,6 +397,7 @@ pub(super) fn semi(
         cfg,
         topo.nodes + 2 * n_clusters,
         topo.nodes * (packets + 1) + n_clusters * (3 * packets + 3),
+        obs,
     );
 
     // Per-cluster: a V2X receive-port pool at the head plus the head's own

@@ -1,0 +1,128 @@
+//! Chrome trace-event (Perfetto-loadable) export.
+//!
+//! Renders tracer spans as complete events (`ph: "X"`) in the [Trace
+//! Event Format] consumed by `chrome://tracing` and
+//! [ui.perfetto.dev](https://ui.perfetto.dev): each labeled tracer
+//! becomes one process track (`pid`), each span's [`Span::track`]
+//! becomes a thread lane (`tid`), and span attributes become `args`.
+//! Timestamps are microseconds — [`crate::units::Time::as_us`] of the
+//! span's (sim or logical) clock, never wall clock — so the exported
+//! document is byte-deterministic per seed via [`crate::json::Json::dump`].
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::collections::BTreeMap;
+
+use crate::json::Json;
+
+use super::tracer::{Attr, Span, Tracer};
+
+fn attr_json(attr: &Attr) -> Json {
+    match attr {
+        Attr::Int(v) => Json::Num(*v as f64),
+        Attr::Float(v) => Json::Num(*v),
+        Attr::Str(s) => Json::Str(s.clone()),
+    }
+}
+
+fn span_event(span: &Span, pid: u64) -> Json {
+    let mut ev = BTreeMap::new();
+    ev.insert("name".to_string(), Json::Str(span.name.to_string()));
+    ev.insert("cat".to_string(), Json::Str("obs".to_string()));
+    ev.insert("ph".to_string(), Json::Str("X".to_string()));
+    ev.insert("ts".to_string(), Json::Num(span.start.as_us()));
+    ev.insert("dur".to_string(), Json::Num((span.end - span.start).as_us().max(0.0)));
+    ev.insert("pid".to_string(), Json::Num(pid as f64));
+    ev.insert("tid".to_string(), Json::Num(span.track as f64));
+    if !span.attrs.is_empty() {
+        let mut args = BTreeMap::new();
+        for (k, v) in &span.attrs {
+            args.insert(k.to_string(), attr_json(v));
+        }
+        ev.insert("args".to_string(), Json::Obj(args));
+    }
+    Json::Obj(ev)
+}
+
+fn process_name_event(pid: u64, name: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(name.to_string()));
+    let mut ev = BTreeMap::new();
+    ev.insert("name".to_string(), Json::Str("process_name".to_string()));
+    ev.insert("ph".to_string(), Json::Str("M".to_string()));
+    ev.insert("pid".to_string(), Json::Num(pid as f64));
+    ev.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(ev)
+}
+
+/// Assemble a Chrome trace document from labeled tracers.
+///
+/// Each `(label, tracer)` pair becomes one process track (pids are
+/// assigned 1, 2, … in input order, announced via `"M"` metadata
+/// events); every retained span becomes an `"X"` complete event on
+/// thread lane [`Span::track`].
+pub fn chrome_trace(processes: &[(&str, &Tracer)]) -> Json {
+    let mut events = Vec::new();
+    for (i, (label, tracer)) in processes.iter().enumerate() {
+        let pid = i as u64 + 1;
+        events.push(process_name_event(pid, label));
+        for span in tracer.spans() {
+            events.push(span_event(&span, pid));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    Json::Obj(doc)
+}
+
+/// [`chrome_trace`] rendered through the sorted-key serializer.
+pub fn chrome_trace_json(processes: &[(&str, &Tracer)]) -> String {
+    chrome_trace(processes).dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use crate::units::Time;
+
+    #[test]
+    fn export_is_wellformed_and_deterministic() {
+        let t = Tracer::new(8);
+        t.record_at("round", 3, Time::us(10.0), Time::us(25.0), vec![("shard", Attr::Int(3))]);
+        t.record_at("flip", 0, Time::us(25.0), Time::us(25.0), Vec::new());
+        let text = chrome_trace_json(&[("engine", &t)]);
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3); // metadata + 2 spans
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let round = &events[1];
+        assert_eq!(round.get("name").unwrap().as_str(), Some("round"));
+        assert_eq!(round.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(round.get("ts").unwrap().as_f64(), Some(10.0));
+        assert_eq!(round.get("dur").unwrap().as_f64(), Some(15.0));
+        assert_eq!(round.get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(round.get("tid").unwrap().as_usize(), Some(3));
+        assert_eq!(round.get("args").unwrap().get("shard").unwrap().as_usize(), Some(3));
+        // Zero-duration spans are legal and stay non-negative.
+        assert_eq!(events[2].get("dur").unwrap().as_f64(), Some(0.0));
+        // Byte determinism: same spans → same bytes.
+        assert_eq!(text, chrome_trace_json(&[("engine", &t)]));
+    }
+
+    #[test]
+    fn multiple_processes_get_distinct_pids() {
+        let a = Tracer::new(4);
+        a.record_at("x", 0, Time::ZERO, Time::us(1.0), Vec::new());
+        let b = Tracer::new(4);
+        b.record_at("y", 1, Time::ZERO, Time::us(2.0), Vec::new());
+        let doc = chrome_trace(&[("alpha", &a), ("beta", &b)]);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[1].get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(events[3].get("pid").unwrap().as_usize(), Some(2));
+        assert_eq!(events[2].get("args").unwrap().get("name").unwrap().as_str(), Some("beta"));
+    }
+}

@@ -1,0 +1,644 @@
+//! Named counters, gauges, and log-bucketed mergeable histograms.
+//!
+//! The registry is interior-mutable (`&self` recording) so it can be
+//! threaded through call stacks that only hold shared borrows — span
+//! guards and metric increments never fight the borrow checker on the
+//! hot path.  `RefCell`/`Cell` keep the types `Send` (engines move into
+//! worker threads whole); they are deliberately not `Sync` — parallel
+//! sections each own a registry and [`MetricsRegistry::merge_from`]
+//! combines them deterministically afterwards.
+//!
+//! Histograms bucket on a base-2 log scale with 8 sub-buckets per
+//! octave (bucket growth `2^(1/8)`), so any quantile estimate `e` of an
+//! exact nearest-rank percentile `x` satisfies `x ≤ e ≤ x·2^(1/8)` —
+//! at most [`MAX_REL_ERROR`] ≈ 9.05 % relative error — while merges are
+//! exact bucket-count additions (associative and commutative).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::json::Json;
+use crate::units::Time;
+
+/// Sub-buckets per octave: bucket `i` covers `[2^(i/8), 2^((i+1)/8))`.
+const SUB_BUCKETS: f64 = 8.0;
+
+/// Worst-case relative error of a histogram quantile vs the exact
+/// nearest-rank percentile: `2^(1/8) − 1`.
+pub const MAX_REL_ERROR: f64 = 0.090_507_733_f64;
+
+fn bucket_lower(idx: i64) -> f64 {
+    (idx as f64 / SUB_BUCKETS).exp2()
+}
+
+fn bucket_upper(idx: i64) -> f64 {
+    ((idx + 1) as f64 / SUB_BUCKETS).exp2()
+}
+
+/// `floor(log2(v) · 8)` with an exact boundary correction, so the
+/// invariant `lower(idx) ≤ v < upper(idx)` holds even when the float
+/// log rounds across a bucket edge.
+fn bucket_index(v: f64) -> i64 {
+    debug_assert!(v > 0.0 && v.is_finite());
+    let mut idx = (v.log2() * SUB_BUCKETS).floor() as i64;
+    if v < bucket_lower(idx) {
+        idx -= 1;
+    }
+    if v >= bucket_upper(idx) {
+        idx += 1;
+    }
+    idx
+}
+
+/// Log-bucketed histogram of non-negative samples.
+///
+/// `count`/`sum`/`min`/`max` are exact; quantiles are exact to within
+/// one bucket (≤ [`MAX_REL_ERROR`] relative).  Samples `≤ 0` land in a
+/// dedicated zero bucket.  Non-finite samples are ignored.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Histogram {
+    buckets: BTreeMap<i64, u64>,
+    zeros: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        if v <= 0.0 {
+            self.zeros += 1;
+        } else {
+            *self.buckets.entry(bucket_index(v)).or_insert(0) += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest recorded sample (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank quantile estimate, `q ∈ [0, 1]`.
+    ///
+    /// Returns the upper edge of the bucket holding the rank-`⌈qN⌉`
+    /// sample, clamped to `[min, max]` — so `quantile(1.0) == max`
+    /// exactly, and every estimate over-approximates the exact
+    /// percentile by at most [`MAX_REL_ERROR`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0, 1]");
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((self.count as f64 * q).ceil() as u64).max(1);
+        let mut cum = self.zeros;
+        let mut est = 0.0;
+        if cum < rank {
+            for (&idx, &n) in &self.buckets {
+                cum += n;
+                if cum >= rank {
+                    est = bucket_upper(idx);
+                    break;
+                }
+            }
+        }
+        est.clamp(self.min, self.max)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold `other` in.  Bucket counts, `count`, `min` and `max` merge
+    /// exactly (associative); `sum` is a float addition, associative to
+    /// round-off only.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        for (&idx, &n) in &other.buckets {
+            *self.buckets.entry(idx).or_insert(0) += n;
+        }
+        self.zeros += other.zeros;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".into(), Json::Num(self.count as f64));
+        m.insert("sum".into(), Json::Num(self.sum));
+        m.insert("mean".into(), Json::Num(self.mean()));
+        m.insert("min".into(), Json::Num(self.min()));
+        m.insert("max".into(), Json::Num(self.max()));
+        m.insert("p50".into(), Json::Num(self.p50()));
+        m.insert("p95".into(), Json::Num(self.p95()));
+        m.insert("p99".into(), Json::Num(self.p99()));
+        Json::Obj(m)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Metric {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Histogram),
+}
+
+/// A registry of named metrics with `&self` recording.
+///
+/// Names are `dotted.paths`; a name is bound to one metric kind on
+/// first use and recording it as a different kind panics (catching
+/// taxonomy typos early).  Snapshots serialize through the one
+/// sorted-key path in [`crate::json`], so emitted artifacts are
+/// byte-deterministic.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsRegistry {
+    inner: RefCell<BTreeMap<String, Metric>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to the named counter (created at 0).
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut inner = self.inner.borrow_mut();
+        match inner.entry(name.to_string()).or_insert(Metric::Counter(0)) {
+            Metric::Counter(c) => *c += by,
+            _ => panic!("metric `{name}` is not a counter"),
+        }
+    }
+
+    /// Current counter value; 0 when the counter was never touched.
+    pub fn counter_value(&self, name: &str) -> u64 {
+        match self.inner.borrow().get(name) {
+            None => 0,
+            Some(Metric::Counter(c)) => *c,
+            Some(_) => panic!("metric `{name}` is not a counter"),
+        }
+    }
+
+    /// Set the named gauge to `v` (last write wins).
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut inner = self.inner.borrow_mut();
+        match inner.entry(name.to_string()).or_insert(Metric::Gauge(v)) {
+            Metric::Gauge(g) => *g = v,
+            _ => panic!("metric `{name}` is not a gauge"),
+        }
+    }
+
+    /// High-water gauge: keep the max of the current value and `v`.
+    pub fn raise_gauge(&self, name: &str, v: f64) {
+        let mut inner = self.inner.borrow_mut();
+        match inner.entry(name.to_string()).or_insert(Metric::Gauge(v)) {
+            Metric::Gauge(g) => *g = g.max(v),
+            _ => panic!("metric `{name}` is not a gauge"),
+        }
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        match self.inner.borrow().get(name) {
+            None => None,
+            Some(Metric::Gauge(g)) => Some(*g),
+            Some(_) => panic!("metric `{name}` is not a gauge"),
+        }
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut inner = self.inner.borrow_mut();
+        match inner.entry(name.to_string()).or_insert_with(|| Metric::Hist(Histogram::new())) {
+            Metric::Hist(h) => h.record(v),
+            _ => panic!("metric `{name}` is not a histogram"),
+        }
+    }
+
+    /// Snapshot of the named histogram, if any samples were recorded.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        match self.inner.borrow().get(name) {
+            None => None,
+            Some(Metric::Hist(h)) => Some(h.clone()),
+            Some(_) => panic!("metric `{name}` is not a histogram"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.borrow().len() == 0
+    }
+
+    /// Fold `other` in under a name prefix: counters add, gauges keep
+    /// the max, histograms merge.  With distinct prefixes per source
+    /// the merge is lossless; with a shared prefix it aggregates.
+    pub fn merge_from(&self, other: &MetricsRegistry, prefix: &str) {
+        for (name, metric) in other.inner.borrow().iter() {
+            let full = format!("{prefix}{name}");
+            match metric {
+                Metric::Counter(c) => self.inc(&full, *c),
+                Metric::Gauge(g) => self.raise_gauge(&full, *g),
+                Metric::Hist(h) => {
+                    let mut inner = self.inner.borrow_mut();
+                    match inner.entry(full.clone()).or_insert_with(|| Metric::Hist(Histogram::new()))
+                    {
+                        Metric::Hist(mine) => mine.merge(h),
+                        _ => panic!("metric `{full}` is not a histogram"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Snapshot as a JSON document: `{"counters": {..}, "gauges": {..},
+    /// "histograms": {..}}`, keys sorted, byte-deterministic.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        for (name, metric) in self.inner.borrow().iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    counters.insert(name.clone(), Json::Num(*c as f64));
+                }
+                Metric::Gauge(g) => {
+                    gauges.insert(name.clone(), Json::Num(*g));
+                }
+                Metric::Hist(h) => {
+                    hists.insert(name.clone(), h.to_json());
+                }
+            }
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("counters".into(), Json::Obj(counters));
+        doc.insert("gauges".into(), Json::Obj(gauges));
+        doc.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(doc)
+    }
+
+    /// [`MetricsRegistry::snapshot`] rendered to a string.
+    pub fn to_json(&self) -> String {
+        self.snapshot().dump()
+    }
+}
+
+/// Rolling statistics over a sim-time window — **never wall clock** —
+/// so a windowed p95 at sim time `t` is a pure function of the sample
+/// stream and bit-reproducible per seed.  This is the live view the
+/// runtime controller (ROADMAP item 1) keys decisions on.
+///
+/// Samples must arrive in non-decreasing sim-time order; each push
+/// evicts samples older than `at − window`.  Quantiles are exact
+/// (sorted nearest-rank) — windows are small by construction.
+#[derive(Debug, Clone)]
+pub struct WindowedStats {
+    window: Time,
+    samples: VecDeque<(Time, f64)>,
+}
+
+impl WindowedStats {
+    /// `window` must be finite and positive.
+    pub fn new(window: Time) -> WindowedStats {
+        assert!(window.is_finite() && window > Time::ZERO, "window must be finite and positive");
+        WindowedStats { window, samples: VecDeque::new() }
+    }
+
+    pub fn window(&self) -> Time {
+        self.window
+    }
+
+    /// Record `v` at sim time `at`, evicting samples older than the
+    /// window.  Non-finite samples are ignored.
+    pub fn push(&mut self, at: Time, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        debug_assert!(
+            match self.samples.back() {
+                Some(&(t, _)) => t <= at,
+                None => true,
+            },
+            "windowed samples must arrive in sim-time order"
+        );
+        while let Some(&(t, _)) = self.samples.front() {
+            if t + self.window < at {
+                self.samples.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.samples.push_back((at, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&(_, v)| v).sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact nearest-rank quantile over the current window (0.0 when
+    /// empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0, 1]");
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut vals: Vec<f64> = self.samples.iter().map(|&(_, v)| v).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((vals.len() as f64 * q).ceil() as usize).max(1);
+        vals[rank - 1]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+    use crate::testing::{assert_close, forall};
+
+    #[test]
+    fn bucket_invariant_holds_at_boundaries() {
+        for k in -64i64..64 {
+            let v = (k as f64 / SUB_BUCKETS).exp2();
+            let idx = bucket_index(v);
+            assert!(bucket_lower(idx) <= v && v < bucket_upper(idx), "v {v} idx {idx}");
+        }
+    }
+
+    #[test]
+    fn histogram_exact_fields_and_zero_bucket() {
+        let mut h = Histogram::new();
+        for v in [0.0, 3.0, 1.5, 0.0, 12.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_close(h.sum(), 16.5, 1e-12);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 12.0);
+        // q low enough to land in the zero bucket → exactly 0.
+        assert_eq!(h.quantile(0.2), 0.0);
+        assert_eq!(h.quantile(1.0), 12.0);
+        h.record(f64::NAN); // ignored
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_error_bound_vs_exact() {
+        forall(30, |rng| {
+            let n = rng.u64_in(1, 400) as usize;
+            let mut h = Histogram::new();
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Span several orders of magnitude.
+                let v = rng.f64_in(1e-4, 1.0) * 10f64.powi(rng.i64_in(0, 6) as i32);
+                h.record(v);
+                vals.push(v);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                let rank = ((n as f64 * q).ceil() as usize).max(1);
+                let exact = vals[rank - 1];
+                let est = h.quantile(q);
+                assert!(
+                    exact <= est && est <= exact * (1.0 + MAX_REL_ERROR) * (1.0 + 1e-12),
+                    "q {q}: exact {exact} est {est}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_matches_pooled() {
+        forall(20, |rng| {
+            let mut parts = Vec::new();
+            let mut pooled = Histogram::new();
+            for _ in 0..3 {
+                let mut h = Histogram::new();
+                for _ in 0..rng.u64_in(0, 100) {
+                    let v = rng.f64_in(0.0, 1e3);
+                    h.record(v);
+                    pooled.record(v);
+                }
+                parts.push(h);
+            }
+            // (a ⊕ b) ⊕ c
+            let mut left = parts[0].clone();
+            left.merge(&parts[1]);
+            left.merge(&parts[2]);
+            // a ⊕ (b ⊕ c)
+            let mut bc = parts[1].clone();
+            bc.merge(&parts[2]);
+            let mut right = parts[0].clone();
+            right.merge(&bc);
+            // Bucket state is exactly associative → identical quantiles.
+            assert_eq!(left.count(), right.count());
+            assert_eq!(left.min(), right.min());
+            assert_eq!(left.max(), right.max());
+            for q in [0.25, 0.5, 0.95, 1.0] {
+                assert_eq!(left.quantile(q), right.quantile(q), "q {q}");
+                assert_eq!(left.quantile(q), pooled.quantile(q), "pooled q {q}");
+            }
+            // Sums are float additions: associative to round-off.
+            if left.count() > 0 {
+                assert_close(left.sum(), right.sum(), 1e-12);
+                assert_close(left.sum(), pooled.sum(), 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn registry_kinds_and_values() {
+        let reg = MetricsRegistry::new();
+        reg.inc("a.count", 2);
+        reg.inc("a.count", 3);
+        assert_eq!(reg.counter_value("a.count"), 5);
+        assert_eq!(reg.counter_value("never.touched"), 0);
+        reg.set_gauge("g", 1.5);
+        reg.set_gauge("g", 0.5);
+        assert_eq!(reg.gauge_value("g"), Some(0.5));
+        reg.raise_gauge("hw", 2.0);
+        reg.raise_gauge("hw", 1.0);
+        assert_eq!(reg.gauge_value("hw"), Some(2.0));
+        reg.observe("h", 10.0);
+        reg.observe("h", 20.0);
+        assert_eq!(reg.histogram("h").unwrap().count(), 2);
+        assert_eq!(reg.len(), 4);
+        assert!(!reg.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "is not a counter")]
+    fn registry_rejects_kind_confusion() {
+        let reg = MetricsRegistry::new();
+        reg.set_gauge("x", 1.0);
+        reg.inc("x", 1);
+    }
+
+    #[test]
+    fn registry_merge_prefixed() {
+        let a = MetricsRegistry::new();
+        a.inc("req", 10);
+        a.observe("lat", 5.0);
+        a.raise_gauge("depth", 3.0);
+        let b = MetricsRegistry::new();
+        b.inc("req", 7);
+        b.observe("lat", 15.0);
+        b.raise_gauge("depth", 9.0);
+        let merged = MetricsRegistry::new();
+        merged.merge_from(&a, "");
+        merged.merge_from(&b, "");
+        assert_eq!(merged.counter_value("req"), 17);
+        assert_eq!(merged.histogram("lat").unwrap().count(), 2);
+        assert_eq!(merged.gauge_value("depth"), Some(9.0));
+        let split = MetricsRegistry::new();
+        split.merge_from(&a, "a.");
+        split.merge_from(&b, "b.");
+        assert_eq!(split.counter_value("a.req"), 10);
+        assert_eq!(split.counter_value("b.req"), 7);
+    }
+
+    #[test]
+    fn registry_snapshot_parses_and_sorts() {
+        let reg = MetricsRegistry::new();
+        reg.inc("z.count", 1);
+        reg.inc("a.count", 2);
+        reg.set_gauge("g", 0.25);
+        reg.observe("h", 2.0);
+        let text = reg.to_json();
+        let doc = json::parse(&text).unwrap();
+        assert_eq!(doc.get("counters").unwrap().get("a.count").unwrap().as_usize(), Some(2));
+        assert_eq!(doc.get("gauges").unwrap().get("g").unwrap().as_f64(), Some(0.25));
+        let h = doc.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(1));
+        // Sorted keys: "a.count" serializes before "z.count".
+        let a_pos = text.find("a.count").unwrap();
+        let z_pos = text.find("z.count").unwrap();
+        assert!(a_pos < z_pos);
+        // Identical content → identical bytes, regardless of insert order.
+        let reg2 = MetricsRegistry::new();
+        reg2.observe("h", 2.0);
+        reg2.set_gauge("g", 0.25);
+        reg2.inc("a.count", 2);
+        reg2.inc("z.count", 1);
+        assert_eq!(reg2.to_json(), text);
+    }
+
+    #[test]
+    fn windowed_stats_evicts_by_sim_time() {
+        let mut w = WindowedStats::new(Time::s(1.0));
+        w.push(Time::s(0.0), 10.0);
+        w.push(Time::s(0.5), 20.0);
+        w.push(Time::s(0.9), 30.0);
+        assert_eq!(w.len(), 3);
+        assert_close(w.mean(), 20.0, 1e-12);
+        // 2.1 s: everything before 1.1 s ages out.
+        w.push(Time::s(2.1), 40.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.p50(), 40.0);
+        assert_eq!(w.max(), 40.0);
+    }
+
+    #[test]
+    fn windowed_quantiles_are_exact() {
+        let mut w = WindowedStats::new(Time::s(10.0));
+        for (i, v) in [5.0, 1.0, 4.0, 2.0, 3.0].into_iter().enumerate() {
+            w.push(Time::ms(i as f64), v);
+        }
+        assert_eq!(w.quantile(0.0), 1.0);
+        assert_eq!(w.p50(), 3.0);
+        assert_eq!(w.quantile(1.0), 5.0);
+        assert!(WindowedStats::new(Time::s(1.0)).is_empty());
+        assert_eq!(WindowedStats::new(Time::s(1.0)).p95(), 0.0);
+    }
+}

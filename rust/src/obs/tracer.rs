@@ -1,0 +1,335 @@
+//! Span-based tracing with a bounded ring buffer and two clock domains.
+//!
+//! Spans record `(name, track, start, end, attrs)` where `start`/`end`
+//! are [`Time`] values in one of two deterministic clock domains:
+//!
+//! * **Sim time** — event-driven code (traffic, netsim) records spans
+//!   at explicit simulated timestamps via [`Tracer::record_at`].  These
+//!   spans line up with `TrafficReport`/`NetSimReport` totals exactly.
+//! * **Logical ticks** — code with no simulated clock (engine assembly,
+//!   shard planning) uses [`Tracer::scope`] guards stamped from a
+//!   monotone tick counter (rendered as 1 µs per tick).  Tick spans
+//!   order and nest correctly and are a pure function of the call
+//!   sequence — never of wall clock.
+//!
+//! A disabled tracer ([`Tracer::disabled`]) costs one branch per call
+//! and performs no allocation or clock movement, so instrumented and
+//! uninstrumented runs are bit-identical in every output.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::mem;
+
+use crate::units::Time;
+
+/// A span attribute value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl From<i64> for Attr {
+    fn from(v: i64) -> Attr {
+        Attr::Int(v)
+    }
+}
+
+impl From<usize> for Attr {
+    fn from(v: usize) -> Attr {
+        Attr::Int(v as i64)
+    }
+}
+
+impl From<u64> for Attr {
+    fn from(v: u64) -> Attr {
+        Attr::Int(v as i64)
+    }
+}
+
+impl From<f64> for Attr {
+    fn from(v: f64) -> Attr {
+        Attr::Float(v)
+    }
+}
+
+impl From<&str> for Attr {
+    fn from(v: &str) -> Attr {
+        Attr::Str(v.to_string())
+    }
+}
+
+impl From<String> for Attr {
+    fn from(v: String) -> Attr {
+        Attr::Str(v)
+    }
+}
+
+/// One completed span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: &'static str,
+    /// Timeline track (Chrome trace `tid`): server index, shard index,
+    /// device id — whatever "lane" the span belongs to.
+    pub track: u64,
+    pub start: Time,
+    pub end: Time,
+    pub attrs: Vec<(&'static str, Attr)>,
+}
+
+/// Interior-mutable span recorder with a bounded ring buffer.
+///
+/// All recording goes through `&self`, so guards nest freely and the
+/// tracer can be threaded through call stacks holding only shared
+/// borrows.  When the ring is full the oldest span is dropped and
+/// [`Tracer::dropped`] counts it — memory stays bounded on arbitrarily
+/// long runs.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    enabled: bool,
+    capacity: usize,
+    spans: RefCell<VecDeque<Span>>,
+    dropped: Cell<u64>,
+    clock: Cell<u64>,
+}
+
+impl Default for Tracer {
+    fn default() -> Tracer {
+        Tracer::disabled()
+    }
+}
+
+impl Tracer {
+    /// An enabled tracer retaining at most `capacity` spans (≥ 1).
+    pub fn new(capacity: usize) -> Tracer {
+        Tracer {
+            enabled: true,
+            capacity: capacity.max(1),
+            spans: RefCell::new(VecDeque::new()),
+            dropped: Cell::new(0),
+            clock: Cell::new(0),
+        }
+    }
+
+    /// A no-op tracer: every call is one branch, no allocation.
+    pub fn disabled() -> Tracer {
+        Tracer {
+            enabled: false,
+            capacity: 0,
+            spans: RefCell::new(VecDeque::new()),
+            dropped: Cell::new(0),
+            clock: Cell::new(0),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Advance the logical clock and return the new tick as a time
+    /// (1 µs per tick).  Disabled tracers return zero without moving.
+    pub fn tick(&self) -> Time {
+        if !self.enabled {
+            return Time::ZERO;
+        }
+        let t = self.clock.get() + 1;
+        self.clock.set(t);
+        Time::us(t as f64)
+    }
+
+    /// Record a completed span (no-op when disabled).
+    pub fn record(&self, span: Span) {
+        if !self.enabled {
+            return;
+        }
+        let mut spans = self.spans.borrow_mut();
+        if spans.len() == self.capacity {
+            spans.pop_front();
+            self.dropped.set(self.dropped.get() + 1);
+        }
+        spans.push_back(span);
+    }
+
+    /// Record a span at explicit sim times.
+    pub fn record_at(
+        &self,
+        name: &'static str,
+        track: u64,
+        start: Time,
+        end: Time,
+        attrs: Vec<(&'static str, Attr)>,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(Span { name, track, start, end, attrs });
+    }
+
+    /// Open a logical-clock span; it records on drop.  Prefer the
+    /// [`crate::span!`] macro, which attaches attributes inline.
+    pub fn scope(&self, name: &'static str) -> SpanGuard<'_> {
+        SpanGuard {
+            tracer: if self.enabled { Some(self) } else { None },
+            name,
+            track: 0,
+            start: self.tick(),
+            attrs: Vec::new(),
+        }
+    }
+
+    /// Snapshot of the retained spans, oldest first.
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.borrow().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.borrow().is_empty()
+    }
+
+    /// Spans evicted from the ring because it was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    /// Forget retained spans and reset the drop count and clock.
+    pub fn clear(&self) {
+        self.spans.borrow_mut().clear();
+        self.dropped.set(0);
+        self.clock.set(0);
+    }
+}
+
+/// RAII guard for a logical-clock span; records on drop.
+pub struct SpanGuard<'a> {
+    tracer: Option<&'a Tracer>,
+    name: &'static str,
+    track: u64,
+    start: Time,
+    attrs: Vec<(&'static str, Attr)>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach an attribute (no-op and no allocation when disabled).
+    pub fn attr(mut self, key: &'static str, v: impl Into<Attr>) -> Self {
+        if self.tracer.is_some() {
+            self.attrs.push((key, v.into()));
+        }
+        self
+    }
+
+    /// Assign the span to a timeline track.
+    pub fn track(mut self, track: u64) -> Self {
+        self.track = track;
+        self
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(t) = self.tracer {
+            t.record(Span {
+                name: self.name,
+                track: self.track,
+                start: self.start,
+                end: t.tick(),
+                attrs: mem::take(&mut self.attrs),
+            });
+        }
+    }
+}
+
+/// Open a span guard on `$tracer` with inline attributes:
+///
+/// ```
+/// use ima_gnn::obs::Tracer;
+/// let tracer = Tracer::new(64);
+/// {
+///     let _s = ima_gnn::span!(tracer, "round", shard = 3usize);
+/// }
+/// assert_eq!(tracer.spans()[0].name, "round");
+/// ```
+///
+/// Attribute values are anything `Into<Attr>` (integers, floats,
+/// strings).  The span closes when the guard drops.
+#[macro_export]
+macro_rules! span {
+    ($tracer:expr, $name:expr $(, $key:ident = $val:expr)* $(,)?) => {{
+        #[allow(unused_mut)]
+        let mut guard = $tracer.scope($name);
+        $(
+            guard = guard.attr(stringify!($key), $val);
+        )*
+        guard
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guards_nest_and_stamp_logical_ticks() {
+        let t = Tracer::new(16);
+        {
+            let _outer = span!(t, "outer", kind = "test");
+            let _inner = span!(t, "inner", n = 7usize).track(2);
+        }
+        let spans = t.spans();
+        // Inner drops first.
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "inner");
+        assert_eq!(spans[0].track, 2);
+        assert_eq!(spans[0].attrs, vec![("n", Attr::Int(7))]);
+        assert_eq!(spans[1].name, "outer");
+        // Ticks: outer opens at 1, inner spans [2, 3], outer closes at 4.
+        assert_eq!(spans[0].start, Time::us(2.0));
+        assert_eq!(spans[0].end, Time::us(3.0));
+        assert_eq!(spans[1].start, Time::us(1.0));
+        assert_eq!(spans[1].end, Time::us(4.0));
+        // Nesting: inner strictly inside outer.
+        assert!(spans[1].start < spans[0].start && spans[0].end < spans[1].end);
+    }
+
+    #[test]
+    fn ring_buffer_bounds_memory_and_counts_drops() {
+        let t = Tracer::new(3);
+        for i in 0..5u64 {
+            t.record_at("s", i, Time::us(i as f64), Time::us(i as f64 + 1.0), Vec::new());
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        // Oldest two were evicted.
+        assert_eq!(t.spans()[0].track, 2);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        {
+            let _s = span!(t, "never", x = 1i64);
+        }
+        t.record_at("also_never", 0, Time::ZERO, Time::us(1.0), Vec::new());
+        assert!(t.is_empty());
+        assert_eq!(t.tick(), Time::ZERO);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn record_at_keeps_sim_times_verbatim() {
+        let t = Tracer::new(8);
+        t.record_at("pkt", 4, Time::ms(1.5), Time::ms(2.25), vec![("bytes", Attr::Int(512))]);
+        let s = &t.spans()[0];
+        assert_eq!(s.start, Time::ms(1.5));
+        assert_eq!(s.end, Time::ms(2.25));
+        assert_eq!(s.track, 4);
+    }
+}

@@ -20,6 +20,7 @@ use crate::experiments::NetsimSweep;
 use crate::graph::Csr;
 use crate::netmodel::{NetModel, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use crate::obs::MetricsRegistry;
 use crate::par;
 use crate::testing::Rng;
 
@@ -155,6 +156,23 @@ impl PerfReport {
     /// Headline factor by speedup name (for reporting and tests).
     pub fn speedup(&self, name: &str) -> Option<f64> {
         self.speedups.iter().find(|s| s.name == name).map(|s| s.factor)
+    }
+
+    /// Post-hoc metrics view of the report — the `.metrics.json` sidecar
+    /// the CLI writes next to `BENCH_perf.json`.  Timing-derived values
+    /// land in gauges/histograms keyed by stable case names.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        m.inc("perf.cases", self.cases.len() as u64);
+        m.set_gauge("perf.quick", if self.quick { 1.0 } else { 0.0 });
+        m.set_gauge("perf.threads", self.threads as f64);
+        for c in &self.cases {
+            m.observe("perf.median_ns", c.median_ns);
+        }
+        for s in &self.speedups {
+            m.set_gauge(&format!("perf.speedup.{}", s.name), s.factor);
+        }
+        m
     }
 }
 

@@ -39,6 +39,7 @@ impl<E> PartialOrd for Entry<E> {
 pub struct EventQueue<E> {
     heap: BinaryHeap<Entry<E>>,
     seq: u64,
+    max_len: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -49,14 +50,14 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> EventQueue<E> {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        EventQueue { heap: BinaryHeap::new(), seq: 0, max_len: 0 }
     }
 
     /// Pre-sized queue for drivers that know their event count up front
     /// (the netsim scenarios schedule a predictable number of packet and
     /// compute events per device) — avoids heap regrowth mid-simulation.
     pub fn with_capacity(capacity: usize) -> EventQueue<E> {
-        EventQueue { heap: BinaryHeap::with_capacity(capacity), seq: 0 }
+        EventQueue { heap: BinaryHeap::with_capacity(capacity), seq: 0, max_len: 0 }
     }
 
     /// Current allocated capacity.
@@ -69,6 +70,7 @@ impl<E> EventQueue<E> {
         assert!(at.value().is_finite() && at.value() >= 0.0, "event time must be finite/positive");
         self.heap.push(Entry { time: at, seq: self.seq, payload });
         self.seq += 1;
+        self.max_len = self.max_len.max(self.heap.len());
     }
 
     /// Pop the earliest event.
@@ -87,6 +89,12 @@ impl<E> EventQueue<E> {
     /// Total events ever scheduled.
     pub fn scheduled(&self) -> u64 {
         self.seq
+    }
+
+    /// High-water mark: the largest [`EventQueue::len`] ever reached.
+    /// `len()` is the live depth gauge; this is its max over the run.
+    pub fn max_depth(&self) -> usize {
+        self.max_len
     }
 }
 
@@ -172,5 +180,27 @@ mod tests {
     fn rejects_nan_times() {
         let mut q = EventQueue::new();
         q.push(Time::s(f64::NAN), ());
+    }
+
+    #[test]
+    fn max_depth_tracks_high_water_not_current_len() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.max_depth(), 0);
+        for i in 0..4 {
+            q.push(Time::ns(i as f64), i);
+        }
+        assert_eq!(q.max_depth(), 4);
+        q.pop();
+        q.pop();
+        // Depth fell to 2, the high-water stays at 4...
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.max_depth(), 4);
+        // ...and only a deeper backlog moves it.
+        q.push(Time::ns(10.0), 10);
+        assert_eq!(q.max_depth(), 4);
+        for i in 0..5 {
+            q.push(Time::ns(20.0 + i as f64), i);
+        }
+        assert_eq!(q.max_depth(), 8);
     }
 }

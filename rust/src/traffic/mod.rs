@@ -59,6 +59,7 @@ use std::collections::VecDeque;
 use crate::coordinator::{Arrival, LatencyProvider, LatencyStats};
 use crate::error::{Error, Result};
 use crate::netmodel::{NetModel, Topology};
+use crate::obs::Obs;
 use crate::sim::EventQueue;
 use crate::testing::Rng;
 use crate::units::Time;
@@ -285,6 +286,11 @@ pub struct TrafficReport {
     pub mean_batch: f64,
     /// Max requests pending (not yet dispatched) at any single server.
     pub max_queue_depth: usize,
+    /// High-water mark of the discrete-event queue driving the run
+    /// ([`EventQueue::max_depth`]).  Counts scheduled events (arrivals,
+    /// deadlines, completions), so it always dominates
+    /// `max_queue_depth`; not part of the serialized sweep artifacts.
+    pub max_event_depth: usize,
     /// Time-average number of requests in the system (∫N(t)dt / T).
     pub time_avg_in_system: f64,
     /// Σ response times — Little's law cross-check numerator.
@@ -334,6 +340,7 @@ struct ServerState {
 struct Engine<'a> {
     policy: BatchPolicy,
     service: &'a ServiceModel,
+    obs: &'a Obs,
     servers: Vec<ServerState>,
     queue: EventQueue<Ev>,
     // Per-request records (index = request id).
@@ -362,7 +369,12 @@ struct ClosedLoop {
 }
 
 impl<'a> Engine<'a> {
-    fn new(servers: usize, service: &'a ServiceModel, policy: BatchPolicy) -> Result<Engine<'a>> {
+    fn new(
+        servers: usize,
+        service: &'a ServiceModel,
+        policy: BatchPolicy,
+        obs: &'a Obs,
+    ) -> Result<Engine<'a>> {
         policy.validate()?;
         if servers == 0 {
             return Err(Error::Sim("traffic needs at least one server".into()));
@@ -370,6 +382,7 @@ impl<'a> Engine<'a> {
         Ok(Engine {
             policy,
             service,
+            obs,
             servers: (0..servers)
                 .map(|_| ServerState {
                     pending: VecDeque::new(),
@@ -465,6 +478,18 @@ impl<'a> Engine<'a> {
         for &r in &reqs {
             self.start[r] = now;
         }
+        if self.obs.is_enabled() {
+            // Queue phase closes at dispatch: arrival → service start.
+            for &r in &reqs {
+                self.obs.tracer.record_at(
+                    "traffic.wait",
+                    s as u64,
+                    self.arrival[r],
+                    now,
+                    vec![("node", self.node[r].into())],
+                );
+            }
+        }
         srv.in_service = Some((reqs, now));
         self.queue.push(now + dur, Ev::Done { server: s });
     }
@@ -487,6 +512,22 @@ impl<'a> Engine<'a> {
                     self.queue.push(next, Ev::ClientArrive { client: self.client_of[r] });
                 }
             }
+        }
+        if self.obs.is_enabled() {
+            // Service phase per request, plus one batch-close span —
+            // both in sim time, so span sums reconcile with the
+            // report's latency totals exactly.
+            for &r in &reqs {
+                let started = self.start[r];
+                self.obs.tracer.record_at("traffic.serve", s as u64, started, now, Vec::new());
+            }
+            self.obs.tracer.record_at(
+                "traffic.batch",
+                s as u64,
+                dispatched_at,
+                now,
+                vec![("size", reqs.len().into()), ("server", s.into())],
+            );
         }
         self.batch_log.push(BatchRecord {
             server: s,
@@ -569,19 +610,33 @@ impl<'a> Engine<'a> {
             * (1.0 / n as f64);
         let busy: Time = self.servers.iter().map(|s| s.busy_total).sum();
         let batches = self.batch_log.len();
+        let capacity_s = (self.servers.len() as f64 * makespan.as_s()).max(1e-30);
+        if self.obs.is_enabled() {
+            let m = &self.obs.metrics;
+            m.inc("traffic.requests", n as u64);
+            m.inc("traffic.batches", batches as u64);
+            m.set_gauge("traffic.utilization", busy.as_s() / capacity_s);
+            m.raise_gauge("traffic.max_queue_depth", self.max_depth as f64);
+            m.set_gauge("sim.event_queue.depth", self.queue.len() as f64);
+            m.raise_gauge("sim.event_queue.max_depth", self.queue.max_depth() as f64);
+            for i in 0..n {
+                m.observe("traffic.wait_ms", (self.start[i] - self.arrival[i]).as_ms());
+                m.observe("traffic.response_ms", responses[i].as_ms());
+            }
+        }
         Ok(TrafficReport {
             servers: self.servers.len(),
             offered: n,
             completed: n,
             makespan,
             throughput_per_s: n as f64 / makespan.as_s().max(1e-30),
-            utilization: busy.as_s()
-                / (self.servers.len() as f64 * makespan.as_s()).max(1e-30),
+            utilization: busy.as_s() / capacity_s,
             mean_wait,
             latency: LatencyStats::from_samples(responses)?,
             batches,
             mean_batch: n as f64 / batches.max(1) as f64,
             max_queue_depth: self.max_depth,
+            max_event_depth: self.queue.max_depth(),
             time_avg_in_system: self.area_s / makespan.as_s().max(1e-30),
             sum_response,
             batch_log: self.batch_log,
@@ -600,10 +655,27 @@ pub fn open_loop(
     policy: BatchPolicy,
     arrivals: &[Arrival],
 ) -> Result<TrafficReport> {
+    let obs = Obs::disabled();
+    open_loop_observed(servers, service, policy, arrivals, &obs)
+}
+
+/// [`open_loop`] with observability: when `obs` is enabled, every
+/// request records `traffic.wait` / `traffic.serve` spans and every
+/// dispatched batch a `traffic.batch` span — all at sim times, on track
+/// = server index — plus wait/response histograms and queue-depth
+/// gauges in `obs.metrics`.  With a disabled handle the run is
+/// bit-identical to [`open_loop`].
+pub fn open_loop_observed(
+    servers: usize,
+    service: &ServiceModel,
+    policy: BatchPolicy,
+    arrivals: &[Arrival],
+    obs: &Obs,
+) -> Result<TrafficReport> {
     if arrivals.is_empty() {
         return Err(Error::Sim("open-loop run needs at least one arrival".into()));
     }
-    let mut eng = Engine::new(servers, service, policy)?;
+    let mut eng = Engine::new(servers, service, policy, obs)?;
     for a in arrivals {
         if !(a.at.as_s() >= 0.0) || !a.at.is_finite() {
             return Err(Error::Sim("arrival times must be finite and >= 0".into()));
@@ -645,10 +717,22 @@ pub fn closed_loop(
     policy: BatchPolicy,
     cfg: &ClosedLoopConfig,
 ) -> Result<TrafficReport> {
+    let obs = Obs::disabled();
+    closed_loop_observed(servers, service, policy, cfg, &obs)
+}
+
+/// [`closed_loop`] with observability (see [`open_loop_observed`]).
+pub fn closed_loop_observed(
+    servers: usize,
+    service: &ServiceModel,
+    policy: BatchPolicy,
+    cfg: &ClosedLoopConfig,
+    obs: &Obs,
+) -> Result<TrafficReport> {
     if cfg.fleet == 0 || cfg.nodes == 0 || !(cfg.horizon.as_s() > 0.0) {
         return Err(Error::Sim("closed loop needs fleet, nodes and a positive horizon".into()));
     }
-    let mut eng = Engine::new(servers, service, policy)?;
+    let mut eng = Engine::new(servers, service, policy, obs)?;
     let mut rng = Rng::new(cfg.seed);
     for client in 0..cfg.fleet {
         let at = cfg.think.sample(&mut rng);

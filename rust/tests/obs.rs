@@ -1,0 +1,243 @@
+//! Observability integration: the E13 serving stack under the tracer.
+//!
+//! * **Reconciliation** — a traced E13 operating point's per-phase span
+//!   sums (`traffic.wait` + `traffic.serve`) equal the report's
+//!   `sum_response`, and `traffic.batch` spans retell the batch log.
+//! * **Perfetto schema** — the exported Chrome trace parses, carries
+//!   only `"X"`/`"M"` events with the fields ui.perfetto.dev requires,
+//!   and is byte-deterministic.
+//! * **Bit-identity** — enabling observation changes no output:
+//!   traffic reports, shard plans, engine assembly and netsim reports
+//!   all match their untraced twins exactly.
+//! * **Edge cases** — `LatencyStats` on empty / single-sample inputs
+//!   and at `fraction_within` boundaries, plus the histogram quantile
+//!   error bound against the exact percentiles of a live run.
+
+use ima_gnn::autotune::SettingKind;
+use ima_gnn::coordinator::{LatencyProvider, LatencyStats, RoundEngine};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::experiments::{TRAFFIC_MAX_BATCH, TRAFFIC_WAIT_MS};
+use ima_gnn::graph::{generate, ShardPlan};
+use ima_gnn::json;
+use ima_gnn::netmodel::{NetModel, Topology};
+use ima_gnn::netsim::{simulate_fabric, simulate_fabric_observed, NetSimConfig, Scenario};
+use ima_gnn::obs::{chrome_trace_json, Obs, Span, MAX_REL_ERROR};
+use ima_gnn::testing::{assert_close, gcn_layer_binding, Rng};
+use ima_gnn::traffic::{
+    deployment_shape, open_loop, open_loop_observed, ArrivalProcess, BatchPolicy, TrafficReport,
+};
+use ima_gnn::units::Time;
+
+/// One traced E13 operating point: the semi overlay's representative
+/// queue at 60% saturation under the sweep's deadline policy.
+fn traced_e13_point() -> (Obs, TrafficReport) {
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology::taxi();
+    let (queues, service) =
+        deployment_shape(SettingKind::Semi, LatencyProvider::Analytic, &model, topo).unwrap();
+    let policy =
+        BatchPolicy::Deadline { max: TRAFFIC_MAX_BATCH, max_wait: Time::ms(TRAFFIC_WAIT_MS) };
+    let rate = queues.per_queue_rate(
+        0.6 * queues.servers() as f64 * service.saturation_rate(TRAFFIC_MAX_BATCH),
+    );
+    let arrivals = ArrivalProcess::Poisson { rate }
+        .generate(Time::s(2_000.0 / rate), topo.nodes, 5)
+        .unwrap();
+    let obs = Obs::new(1 << 16);
+    let report = open_loop_observed(1, &service, policy, &arrivals, &obs).unwrap();
+    assert_eq!(obs.tracer.dropped(), 0, "ring must hold the whole run");
+    (obs, report)
+}
+
+fn phase_sum_s(spans: &[Span], name: &str) -> f64 {
+    spans.iter().filter(|s| s.name == name).map(|s| (s.end - s.start).as_s()).sum()
+}
+
+/// Acceptance: per-phase span sums reconcile with the report's latency
+/// totals, and the always-on metrics retell the same run.
+#[test]
+fn traced_e13_point_reconciles_spans_with_the_report() {
+    let (obs, r) = traced_e13_point();
+    let spans = obs.tracer.spans();
+    // One wait and one serve span per request, one batch span per batch.
+    assert_eq!(spans.iter().filter(|s| s.name == "traffic.wait").count(), r.offered);
+    assert_eq!(spans.iter().filter(|s| s.name == "traffic.serve").count(), r.completed);
+    assert_eq!(spans.iter().filter(|s| s.name == "traffic.batch").count(), r.batches);
+    // Σ wait + Σ serve = Σ (done − arrival) = the report's sum_response.
+    let phases = phase_sum_s(&spans, "traffic.wait") + phase_sum_s(&spans, "traffic.serve");
+    assert_close(phases, r.sum_response.as_s(), 1e-9);
+    // The batch spans are the batch log, span-shaped.
+    let log_busy: f64 = r.batch_log.iter().map(|b| (b.done_at - b.dispatched_at).as_s()).sum();
+    assert_close(phase_sum_s(&spans, "traffic.batch"), log_busy, 1e-9);
+    // Metrics cross-check the report fields.
+    assert_eq!(obs.metrics.counter_value("traffic.requests"), r.offered as u64);
+    assert_eq!(obs.metrics.counter_value("traffic.batches"), r.batches as u64);
+    assert_eq!(
+        obs.metrics.gauge_value("sim.event_queue.max_depth"),
+        Some(r.max_event_depth as f64)
+    );
+    let hist = obs.metrics.histogram("traffic.response_ms").unwrap();
+    assert_eq!(hist.count(), r.offered as u64);
+    assert_close(hist.mean(), r.latency.mean().as_ms(), 1e-9);
+    // Log-bucket quantiles sit within the advertised relative error of
+    // the exact percentiles (plus headroom for rank-rounding).
+    assert_close(hist.p95(), r.latency.p95().as_ms(), 2.0 * MAX_REL_ERROR);
+    assert_close(hist.p50(), r.latency.p50().as_ms(), 2.0 * MAX_REL_ERROR);
+}
+
+/// The Chrome trace export parses, satisfies the Trace Event Format
+/// fields Perfetto needs, covers every retained span, and is
+/// byte-deterministic.
+#[test]
+fn chrome_export_is_perfetto_schema_valid() {
+    let (obs, _) = traced_e13_point();
+    let procs = [("traffic:semi", &obs.tracer)];
+    let text = chrome_trace_json(&procs);
+    let doc = json::parse(&text).unwrap();
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut complete = 0usize;
+    let mut metadata = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(ev.get("pid").unwrap().as_usize().unwrap() >= 1);
+        match ph {
+            "X" => {
+                complete += 1;
+                assert!(!ev.get("name").unwrap().as_str().unwrap().is_empty());
+                assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+                assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+                assert!(ev.get("tid").unwrap().as_f64().is_some());
+            }
+            "M" => {
+                metadata += 1;
+                assert_eq!(ev.get("name").unwrap().as_str(), Some("process_name"));
+                let label = ev.get("args").unwrap().get("name").unwrap().as_str();
+                assert_eq!(label, Some("traffic:semi"));
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    assert_eq!(complete, obs.tracer.len());
+    assert_eq!(metadata, procs.len());
+    // Byte determinism: the same spans render to the same bytes.
+    assert_eq!(text, chrome_trace_json(&procs));
+}
+
+/// Observation is opt-in and output-neutral: the observed traffic run
+/// matches the plain one field for field.
+#[test]
+fn observed_traffic_run_is_bit_identical_to_plain() {
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology::taxi();
+    let (_, service) =
+        deployment_shape(SettingKind::Centralized, LatencyProvider::Analytic, &model, topo)
+            .unwrap();
+    let policy = BatchPolicy::Deadline { max: 16, max_wait: Time::ms(TRAFFIC_WAIT_MS) };
+    let rate = 0.4 * service.saturation_rate(16);
+    let arrivals = ArrivalProcess::Poisson { rate }
+        .generate(Time::s(1_000.0 / rate), topo.nodes, 13)
+        .unwrap();
+    let plain = open_loop(1, &service, policy, &arrivals).unwrap();
+    let obs = Obs::new(1 << 16);
+    let traced = open_loop_observed(1, &service, policy, &arrivals, &obs).unwrap();
+    assert_eq!(traced.batch_log, plain.batch_log);
+    assert_eq!(traced.makespan, plain.makespan);
+    assert_eq!(traced.mean_wait, plain.mean_wait);
+    assert_eq!(traced.sum_response, plain.sum_response);
+    assert_eq!(traced.max_queue_depth, plain.max_queue_depth);
+    assert_eq!(traced.max_event_depth, plain.max_event_depth);
+    assert_eq!(traced.latency.p99(), plain.latency.p99());
+    assert!(!obs.tracer.is_empty(), "the traced twin must actually record");
+}
+
+/// Shard planning and the round engine record spans without perturbing
+/// the plan, the assembly, or the cache counters.
+#[test]
+fn engine_and_shard_spans_record_without_perturbing_outputs() {
+    let b = gcn_layer_binding();
+    let graph = generate::regular(96, 6, 3).unwrap();
+    let sampler = b.sampler();
+    let plain_plan = ShardPlan::build(&graph, &sampler, b.table).unwrap();
+    let obs = Obs::new(4096);
+    let plan = ShardPlan::build_observed(&graph, &sampler, b.table, &obs).unwrap();
+    assert_eq!(plan, plain_plan);
+    assert!(obs.tracer.spans().iter().any(|s| s.name == "shard.plan"));
+    assert!(obs.metrics.counter_value("shard.pack_attempts") >= 1);
+
+    let shards = plan.num_shards();
+    let weights = vec![0.01f32; b.feature * b.hidden];
+    let mut traced = RoundEngine::new(b.clone(), plan, weights.clone()).unwrap();
+    traced.enable_tracing(4096);
+    let mut plain = RoundEngine::new(b.clone(), plain_plan, weights).unwrap();
+    let mut rng = Rng::new(11);
+    for node in 0..graph.num_nodes() {
+        let feats: Vec<f32> = (0..b.feature).map(|_| rng.f64() as f32).collect();
+        traced.upload(node, &feats).unwrap();
+        plain.upload(node, &feats).unwrap();
+    }
+    traced.end_round();
+    plain.end_round();
+    let all: Vec<usize> = (0..graph.num_nodes()).collect();
+    assert_eq!(traced.assemble(&all).unwrap(), plain.assemble(&all).unwrap());
+    // S1: the counter accessors are thin reads of the engine registry.
+    assert_eq!(traced.table_builds(), shards as u64);
+    assert_eq!(traced.metrics().counter_value("engine.table_builds"), traced.table_builds());
+    let names: Vec<&str> = traced.tracer().spans().iter().map(|s| s.name).collect();
+    for want in ["engine.round_barrier", "store.swap", "engine.assemble"] {
+        assert!(names.contains(&want), "missing span {want} in {names:?}");
+    }
+    assert!(plain.tracer().is_empty(), "tracing must stay opt-in");
+}
+
+/// Netsim under observation returns the identical report, and its
+/// packet spans / fabric counters retell the report's totals.
+#[test]
+fn netsim_observed_is_bit_identical_and_counts_packets() {
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let topo = Topology { nodes: 64, cluster_size: 8 };
+    let cfg = NetSimConfig { rx_ports: Some(8), ..Default::default() };
+    let plain = simulate_fabric(&model, Scenario::CentralizedStar, topo, &cfg).unwrap();
+    let obs = Obs::new(1 << 16);
+    let traced =
+        simulate_fabric_observed(&model, Scenario::CentralizedStar, topo, &cfg, &obs).unwrap();
+    assert_eq!(traced, plain);
+    assert_eq!(obs.tracer.dropped(), 0);
+    let spans = obs.tracer.spans();
+    assert_eq!(spans.iter().filter(|s| s.name == "net.packet").count(), plain.packets);
+    assert_eq!(obs.metrics.counter_value("net.packets"), plain.packets as u64);
+    assert_eq!(obs.metrics.counter_value("net.contended"), plain.contended_packets as u64);
+    assert_eq!(obs.metrics.counter_value("net.messages"), plain.messages as u64);
+    let waits = obs.metrics.histogram("net.queue_wait_us").unwrap();
+    assert_eq!(waits.count(), plain.packets as u64);
+    assert_close(waits.sum(), plain.queue_wait.as_us(), 1e-9);
+}
+
+/// `LatencyStats` edge cases: empty input errors, a single sample is
+/// every quantile, and `fraction_within` is boundary-inclusive.
+#[test]
+fn latency_stats_edge_cases() {
+    assert!(LatencyStats::from_samples(Vec::new()).is_err());
+
+    let one = LatencyStats::from_samples(vec![Time::ms(7.0)]).unwrap();
+    assert_eq!(one.count(), 1);
+    assert_eq!(one.quantile(0.0), Time::ms(7.0));
+    assert_eq!(one.p50(), Time::ms(7.0));
+    assert_eq!(one.quantile(1.0), Time::ms(7.0));
+    assert_eq!(one.max(), Time::ms(7.0));
+    assert_close(one.mean().as_ms(), 7.0, 1e-12);
+    assert_eq!(one.fraction_within(Time::ms(7.0)), 1.0);
+    assert_eq!(one.fraction_within(Time::ms(6.999)), 0.0);
+
+    let three =
+        LatencyStats::from_samples(vec![Time::ms(3.0), Time::ms(1.0), Time::ms(2.0)]).unwrap();
+    // Boundary-inclusive: a sample exactly at the SLO counts as within.
+    assert_eq!(three.fraction_within(Time::ms(2.0)), 2.0 / 3.0);
+    assert_eq!(three.fraction_within(Time::ms(0.5)), 0.0);
+    assert_eq!(three.fraction_within(Time::ms(3.0)), 1.0);
+    // Nearest-rank: q ≤ 1/3 hits the first sample, the median the second.
+    assert_eq!(three.quantile(0.2), Time::ms(1.0));
+    assert_eq!(three.p50(), Time::ms(2.0));
+    assert_eq!(three.quantile(1.0), Time::ms(3.0));
+}

@@ -19,10 +19,11 @@ use ima_gnn::cores::GnnWorkload;
 use ima_gnn::experiments::TrafficSweep;
 use ima_gnn::netmodel::{NetModel, Topology};
 use ima_gnn::netsim::{simulate_fabric, NetSimConfig, Scenario};
+use ima_gnn::obs::Obs;
 use ima_gnn::testing::assert_close;
 use ima_gnn::traffic::{
-    closed_loop, md1_mean_wait, open_loop, ArrivalProcess, BatchPolicy, ClosedLoopConfig,
-    ServiceModel, ThinkTime,
+    closed_loop, md1_mean_wait, open_loop, open_loop_observed, ArrivalProcess, BatchPolicy,
+    ClosedLoopConfig, ServiceModel, ThinkTime,
 };
 use ima_gnn::units::Time;
 use ima_gnn::workload::DiurnalCurve;
@@ -228,4 +229,37 @@ fn netsim_congestion_composes_with_queueing() {
     assert!(slow.latency.p95() > fast.latency.p95());
     assert!(slow.latency.mean() > fast.latency.mean());
     assert!(slow.littles_law_gap() < 1e-9 && fast.littles_law_gap() < 1e-9);
+}
+
+/// The event-queue high-water mark cross-validates the report: open
+/// loops preload every arrival, so the event depth must dominate both
+/// the offered count and the per-server pending high-water, the
+/// observed run must be bit-identical to the plain one, and the
+/// `sim.event_queue.max_depth` gauge must equal the report field.
+#[test]
+fn event_queue_high_water_cross_validates_the_report() {
+    let service = station(3.0);
+    let policy = BatchPolicy::Deadline { max: 8, max_wait: Time::ms(2.0) };
+    let arrivals = ArrivalProcess::Poisson { rate: 500.0 }.generate(Time::s(4.0), 32, 9).unwrap();
+    let r = open_loop(1, &service, policy, &arrivals).unwrap();
+    assert!(r.offered > 0);
+    assert!(
+        r.max_event_depth >= r.offered,
+        "open loop preloads all {} arrivals but high-water was {}",
+        r.offered,
+        r.max_event_depth
+    );
+    assert!(r.max_event_depth >= r.max_queue_depth);
+    let obs = Obs::new(4096);
+    let o = open_loop_observed(1, &service, policy, &arrivals, &obs).unwrap();
+    assert_eq!(o.max_event_depth, r.max_event_depth);
+    assert_eq!(o.batch_log, r.batch_log);
+    assert_eq!(
+        obs.metrics.gauge_value("sim.event_queue.max_depth"),
+        Some(r.max_event_depth as f64)
+    );
+    assert_eq!(
+        obs.metrics.gauge_value("traffic.max_queue_depth"),
+        Some(r.max_queue_depth as f64)
+    );
 }
