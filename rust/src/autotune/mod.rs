@@ -167,6 +167,22 @@ pub struct Score {
     pub per_device_power: Power,
 }
 
+impl Score {
+    /// Fault-adjusted latency objective (the E14 hook): a Poisson
+    /// arrival lands inside a crash window with probability
+    /// `1 − availability` and then waits the window's mean residual —
+    /// `mttr / 2` for the fixed-duration outages the fault sweep
+    /// charges.  `availability = 1` returns the raw latency unchanged,
+    /// so fault-free tuning is bit-identical to the seed scoring.
+    pub fn effective_latency(&self, availability: f64, mttr: Time) -> Time {
+        let a = availability.clamp(0.0, 1.0);
+        if a == 1.0 {
+            return self.latency;
+        }
+        self.latency + mttr * (0.5 * (1.0 - a))
+    }
+}
+
 /// Packet-level cross-check attached by the netsim refinement pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimCheck {
@@ -593,6 +609,32 @@ mod tests {
         assert_eq!(pts[2], OperatingPoint::semi(5, 4.0, Partitioner::Locality));
         assert_eq!(pts[3], OperatingPoint::semi(5, 8.0, Partitioner::FixedSize));
         assert_eq!(*pts.last().unwrap(), OperatingPoint::decentralized(10, Partitioner::Locality));
+    }
+
+    /// E14 scoring hook: full availability is bit-identical to the raw
+    /// latency; partial availability charges the mean residual of the
+    /// outage window, monotonically in both knobs.
+    #[test]
+    fn effective_latency_charges_expected_outage_residual() {
+        let s = Score {
+            latency: Time::ms(4.0),
+            energy: Energy::mj(1.0),
+            per_device_power: Power::w(1.0),
+        };
+        assert_eq!(
+            s.effective_latency(1.0, Time::s(10.0)).as_s().to_bits(),
+            s.latency.as_s().to_bits()
+        );
+        // 2% unavailable, 100 ms windows: + 0.02 · 50 ms = 1 ms.
+        assert_close(s.effective_latency(0.98, Time::ms(100.0)).as_ms(), 5.0, 1e-12);
+        let worse = s.effective_latency(0.9, Time::ms(100.0));
+        let better = s.effective_latency(0.98, Time::ms(100.0));
+        assert!(worse > better && better > s.latency);
+        // Out-of-range availabilities clamp instead of extrapolating.
+        assert_eq!(
+            s.effective_latency(2.0, Time::s(1.0)).as_s().to_bits(),
+            s.latency.as_s().to_bits()
+        );
     }
 
     #[test]

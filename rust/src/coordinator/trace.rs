@@ -77,11 +77,39 @@ impl LatencyStats {
         self.sorted.len()
     }
 
-    /// Quantile by nearest-rank (q in [0, 1]).
+    /// The sorted samples (ascending).
+    pub fn samples(&self) -> &[Time] {
+        &self.sorted
+    }
+
+    /// Quantile by **nearest rank**: the sample at index
+    /// `ceil(n·q) − 1` of the ascending sort, clamped into range.
+    ///
+    /// Nearest rank never interpolates or extrapolates — on small
+    /// samples high quantiles simply *saturate at the max*: with
+    /// n < 100, `p99` equals `max` (the 99th-percentile rank rounds to
+    /// the last sample), and with n < 2 every quantile is the single
+    /// sample.  Degraded fault windows routinely produce such tiny
+    /// samples; callers that need a resolved tail must check
+    /// [`LatencyStats::resolves`] rather than trust a saturated `p99`.
+    /// The E14 sweep therefore reports SLO attainment
+    /// ([`LatencyStats::fraction_within`] — exact at any n) alongside
+    /// quantiles.
     pub fn quantile(&self, q: f64) -> Time {
         let q = q.clamp(0.0, 1.0);
         let idx = ((self.sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
         self.sorted[idx.min(self.sorted.len() - 1)]
+    }
+
+    /// Whether `quantile(q)` ranks a genuine tail order statistic
+    /// rather than saturating at the max: at least one sample ranks
+    /// *above* the returned one.  Shares `quantile`'s exact
+    /// `ceil(n·q)` arithmetic (float boundaries included), so the two
+    /// can never disagree; `resolves(0.99)` needs n ≥ 100.
+    pub fn resolves(&self, q: f64) -> bool {
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((self.sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
+        idx + 1 < self.sorted.len()
     }
 
     pub fn p50(&self) -> Time {
@@ -240,6 +268,36 @@ mod tests {
         assert_close(s.fraction_within(Time::ms(6.5)), 0.06, 1e-12);
         assert_close(s.fraction_within(Time::ZERO), 0.0, 1e-12);
         assert_close(s.fraction_within(Time::s(1.0)), 1.0, 1e-12);
+        // n = 100 is exactly enough to resolve p99 (one sample above).
+        assert!(s.resolves(0.99));
+        assert!(s.resolves(0.5));
+        assert_eq!(s.samples().len(), 100);
+    }
+
+    /// Tiny degraded-window samples (n < 100): nearest rank saturates
+    /// at the max instead of extrapolating — documented behavior, and
+    /// `resolves` tells callers when that happens.
+    #[test]
+    fn stats_tiny_samples_saturate_not_extrapolate() {
+        let samples: Vec<Time> = (1..=10).map(|i| Time::ms(i as f64)).collect();
+        let s = LatencyStats::from_samples(samples).unwrap();
+        // ceil(10·0.5) − 1 = 4 → the 5th sample.
+        assert_close(s.p50().as_ms(), 5.0, 1e-12);
+        // ceil(10·0.9) − 1 = 8 → the 9th sample still ranks.
+        assert_close(s.p90().as_ms(), 9.0, 1e-12);
+        // p95/p99 saturate at the max: no sample ranks above them.
+        assert_eq!(s.p95(), s.max());
+        assert_eq!(s.p99(), s.max());
+        assert!(s.resolves(0.5) && s.resolves(0.9));
+        assert!(!s.resolves(0.95) && !s.resolves(0.99));
+        // fraction_within stays exact at any n — the SLO metric the
+        // fault sweep leans on for tiny windows.
+        assert_close(s.fraction_within(Time::ms(5.0)), 0.5, 1e-12);
+        // n = 1: every quantile is the single sample.
+        let one = LatencyStats::from_samples(vec![Time::ms(3.0)]).unwrap();
+        assert_eq!(one.p50(), one.p99());
+        assert_eq!(one.p99(), Time::ms(3.0));
+        assert!(!one.resolves(0.5));
     }
 
     #[test]

@@ -13,11 +13,15 @@ use crate::error::Result;
 use crate::graph::{datasets, fixed_size, generate, Csr, DatasetStats, ShardPlan};
 use crate::netmodel::{NetModel, Setting, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
-use crate::obs::MetricsRegistry;
+use crate::obs::{MetricsRegistry, Obs};
 use crate::par;
 use crate::report::{pct, speedup, BarSeries, Table};
+use crate::sim::{CrashImpact, FailoverCostModel, FaultConfig, Outage};
 use crate::testing::{gcn_layer_binding, Rng};
-use crate::traffic::{deployment_shape, open_loop, ArrivalProcess, BatchPolicy};
+use crate::traffic::{
+    deployment_shape, open_loop, open_loop_mix, ArrivalProcess, BatchPolicy, DeviceClass,
+    FleetMix,
+};
 use crate::units::Time;
 
 /// Paper values of Table 1 (for side-by-side reporting).
@@ -1392,6 +1396,551 @@ impl TrafficSweep {
     }
 }
 
+/// E14 crash windows expected per representative-queue run (the swept
+/// failure rate is this count divided by the run's horizon, so every
+/// point sees the same expected outage load regardless of its rate).
+pub const FAULT_EXPECTED_OUTAGES: f64 = 3.0;
+/// E14 heterogeneous fleet: fraction of the fleet in the slow class.
+pub const FAULT_SLOW_SHARE: f64 = 0.25;
+/// Speed multiplier of the slow class (service times scale by
+/// `1 / speed`).
+pub const FAULT_SLOW_SPEED: f64 = 0.5;
+/// Degraded-mode service factor while halo replicas (`r >= 2`) keep a
+/// crashed device's rows servable.
+pub const FAULT_DEGRADED_FACTOR: f64 = 2.0;
+/// One f32 feature row (`64 × 4` bytes) — the unit the failover bill
+/// re-uploads through the double-buffer barrier.
+pub const FAULT_ROW_BYTES: usize = 256;
+/// E14 scenario grid: `(name, crashes injected, heterogeneous fleet)`.
+/// `faulted_r2` replays `faulted_r1`'s exact crash windows but serves
+/// through halo replicas at [`FAULT_DEGRADED_FACTOR`] instead of going
+/// dark (the centralized leader has no replica site, so it still takes
+/// full outages there).
+pub const FAULT_SCENARIOS: [(&str, bool, bool); 4] = [
+    ("baseline", false, false),
+    ("hetero", false, true),
+    ("faulted_r1", true, false),
+    ("faulted_r2", true, false),
+];
+
+/// One (rate, setting) point of an E14 scenario.  Pure function of the
+/// point's seed and config — the parallel byte-identical contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPoint {
+    pub setting: &'static str,
+    pub rel_rate: f64,
+    pub rate_per_s: f64,
+    pub offered: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub slo_attainment: f64,
+    /// `1 − downtime / capacity` of the simulated queues.
+    pub availability: f64,
+    pub downtime_s: f64,
+    /// Crash windows that executed during the run.
+    pub fault_windows: usize,
+    /// Mean time to recover: `downtime / windows` (0 when no window).
+    pub mttr_s: f64,
+    pub littles_gap: f64,
+}
+
+/// One scenario of one dataset: the full rate × setting grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultScenarioRow {
+    pub scenario: &'static str,
+    /// Expected crash windows per run (0 in fault-free scenarios).
+    pub expected_outages: f64,
+    /// Slow-class share of the fleet (0 in homogeneous scenarios).
+    pub slow_share: f64,
+    pub points: Vec<FaultPoint>,
+    /// First swept rate where semi p95 beats centralized p95.
+    pub crossover_per_s: Option<f64>,
+}
+
+impl FaultScenarioRow {
+    /// The point for (`rel_rate` index, setting name).
+    pub fn point(&self, rel_idx: usize, setting: &str) -> &FaultPoint {
+        self.points
+            .iter()
+            .find(|p| p.setting == setting && p.rel_rate == TRAFFIC_REL_RATES[rel_idx])
+            .expect("sweep emits every (rate, setting) point")
+    }
+}
+
+/// One dataset row of the E14 sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRow {
+    pub dataset: String,
+    pub nodes: usize,
+    pub cluster_size: usize,
+    pub sat_rate_per_s: f64,
+    /// Failover bill per setting (seconds): centralized, semi,
+    /// decentralized — the fixed outage each crash window charges.
+    pub failover_s: [f64; 3],
+    pub scenarios: Vec<FaultScenarioRow>,
+}
+
+impl FaultRow {
+    pub fn scenario(&self, name: &str) -> &FaultScenarioRow {
+        self.scenarios
+            .iter()
+            .find(|s| s.scenario == name)
+            .expect("sweep emits every scenario")
+    }
+}
+
+/// The E14 headline numbers (asserted in tests, reported in the JSON
+/// summary).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultHeadline {
+    /// Σ over datasets × rates of centralized p95 inflation under
+    /// failures (`faulted_r1 − baseline`, seconds).
+    pub cent_inflation_s: f64,
+    /// Same sum for the semi overlay — failures hurt the single leader
+    /// more than the head fleet, which is what shifts the crossover.
+    pub semi_inflation_s: f64,
+    /// Σ of semi p95 inflation from fleet heterogeneity alone.
+    pub hetero_semi_inflation_s: f64,
+    /// Datasets whose semi-beats-centralized crossover moved to a
+    /// strictly lower swept rate (or newly appeared) under failures.
+    pub crossovers_shifted: usize,
+    /// Mean SLO attainment over semi + decentralized faulted points.
+    pub slo_r1: f64,
+    pub slo_r2: f64,
+    /// Mean availability over the same points (r2 replicas never go
+    /// dark, so this is exactly 1.0 for r2).
+    pub availability_r1: f64,
+    pub availability_r2: f64,
+    /// Σ of semi + decentralized p95 at the top swept rate (overload),
+    /// where lost capacity hurts the most.
+    pub overload_r1_s: f64,
+    pub overload_r2_s: f64,
+}
+
+/// E14 — fault injection and fleet heterogeneity over the E13 traffic
+/// grid: every (dataset, rate, setting) point re-runs under the
+/// [`FAULT_SCENARIOS`] — fault-free baseline, heterogeneous fleet,
+/// crash-with-outage (`r = 1`: a crashed device's rows are dark for
+/// the whole failover bill) and crash-with-replicas (`r = 2`: halo
+/// replicas serve at [`FAULT_DEGRADED_FACTOR`] while the device
+/// recovers).  The failover bill is priced by the deployment's own
+/// links ([`FailoverCostModel::from_net`]) and charged as downtime.
+/// Emits `BENCH_faults.json`.
+///
+/// Seeds deliberately omit the scenario and setting indices (common
+/// random numbers): every scenario replays the same arrival and
+/// fault-window draws, so scenario deltas are attributable to the
+/// injected faults, not the seeds.  Rows are computed via
+/// `par::par_try_map`; output is byte-identical to the sequential run
+/// (asserted in tests).
+pub struct FaultSweep {
+    pub rows: Vec<FaultRow>,
+    pub materialize_cap: usize,
+    pub requests: usize,
+}
+
+impl FaultSweep {
+    pub fn run(materialize_cap: usize, requests: usize) -> Result<FaultSweep> {
+        FaultSweep::run_with_threads(materialize_cap, requests, par::available_threads())
+    }
+
+    /// [`Self::run`] with an explicit worker count (1 = sequential).
+    pub fn run_with_threads(
+        materialize_cap: usize,
+        requests: usize,
+        threads: usize,
+    ) -> Result<FaultSweep> {
+        if requests == 0 {
+            return Err(crate::error::Error::Sim("fault sweep needs requests > 0".into()));
+        }
+        let all = datasets::all();
+        let targets: Vec<(usize, DatasetStats)> = all.into_iter().enumerate().collect();
+        let rows = par::par_try_map(&targets, threads, |(di, d)| {
+            FaultSweep::row(*di, d, materialize_cap, requests)
+        })?;
+        Ok(FaultSweep { rows, materialize_cap, requests })
+    }
+
+    fn row(di: usize, d: &DatasetStats, cap: usize, requests: usize) -> Result<FaultRow> {
+        let model = NetModel::fig8(d)?;
+        let topo = Topology { nodes: d.nodes, cluster_size: d.avg_cs };
+        let sample = d.materialize(cap, 42)?;
+        let cs_sample = d.avg_cs.clamp(1, sample.num_nodes());
+        let clustering = fixed_size(sample.num_nodes(), cs_sample)?;
+        let intra = clustering.intra_edge_fraction(&sample);
+        let clustered = LatencyProvider::Clustered { intra_fraction: intra };
+
+        let mut shapes = Vec::with_capacity(3);
+        for kind in
+            [SettingKind::Centralized, SettingKind::Semi, SettingKind::Decentralized]
+        {
+            let (queues, service) = deployment_shape(kind, clustered, &model, topo)?;
+            shapes.push((kind.name(), queues, service));
+        }
+        let sat = shapes[0].2.saturation_rate(TRAFFIC_MAX_BATCH);
+        let policy = BatchPolicy::Deadline {
+            max: TRAFFIC_MAX_BATCH,
+            max_wait: Time::ms(TRAFFIC_WAIT_MS),
+        };
+
+        // The failover bill per setting, priced by the model's own
+        // links: the sweep cannot invent recoveries cheaper than the
+        // network it already charges for serving.
+        let costs = FailoverCostModel::from_net(&model, FAULT_ROW_BYTES);
+        let recovery = [
+            costs.centralized(sample.num_nodes()).total(),
+            costs.semi(cs_sample).total(),
+            costs.decentralized().total(),
+        ];
+
+        let homog = FleetMix::homogeneous();
+        let mixed = FleetMix::new(vec![
+            DeviceClass { name: "fast", speed: 1.0, share: 1.0 - FAULT_SLOW_SHARE },
+            DeviceClass { name: "slow", speed: FAULT_SLOW_SPEED, share: FAULT_SLOW_SHARE },
+        ])?;
+
+        let mut scenarios = Vec::with_capacity(FAULT_SCENARIOS.len());
+        for &(name, crashes, hetero) in FAULT_SCENARIOS.iter() {
+            let mut points = Vec::with_capacity(TRAFFIC_REL_RATES.len() * shapes.len());
+            for (ri, &rel) in TRAFFIC_REL_RATES.iter().enumerate() {
+                let rate = rel * sat;
+                for (si, &(setting, queues, service)) in shapes.iter().enumerate() {
+                    let queue_rate = queues.per_queue_rate(rate);
+                    let horizon_s = requests as f64 / queue_rate;
+                    // Common random numbers: no scenario / setting term.
+                    let seed = 0xE14_000 + (di as u64) * 64 + (ri as u64) * 8;
+                    let cfg = if crashes {
+                        // The single leader has no replica site, so the
+                        // r = 2 scenario still goes dark centrally.
+                        let impact = if name == "faulted_r2" && si > 0 {
+                            CrashImpact::Degraded { factor: FAULT_DEGRADED_FACTOR }
+                        } else {
+                            CrashImpact::Outage
+                        };
+                        FaultConfig::crashes(
+                            FAULT_EXPECTED_OUTAGES / horizon_s,
+                            Outage::Fixed(recovery[si]),
+                            impact,
+                        )
+                    } else {
+                        FaultConfig::none()
+                    };
+                    // A 1-queue shape cannot host a 2-class fleet.
+                    let hetero_ok = hetero && queues.servers() >= 2;
+                    let mix = if hetero_ok { &mixed } else { &homog };
+                    let r = open_loop_mix(
+                        mix,
+                        queues,
+                        &service,
+                        policy,
+                        rate,
+                        requests,
+                        d.nodes,
+                        seed,
+                        &cfg,
+                        &Obs::disabled(),
+                    )?;
+                    points.push(FaultPoint {
+                        setting,
+                        rel_rate: rel,
+                        rate_per_s: rate,
+                        offered: r.offered(),
+                        p50_s: r.p50().as_s(),
+                        p95_s: r.p95().as_s(),
+                        p99_s: r.p99().as_s(),
+                        slo_attainment: r.slo_attainment(Time::ms(TRAFFIC_SLO_MS)),
+                        availability: r.availability(),
+                        downtime_s: r.downtime().as_s(),
+                        fault_windows: r.fault_windows(),
+                        mttr_s: r.mttr().as_s(),
+                        littles_gap: r.max_littles_gap(),
+                    });
+                }
+            }
+            let crossover_per_s = TRAFFIC_REL_RATES.iter().find_map(|&rel| {
+                let p95_at = |s: &str| {
+                    points
+                        .iter()
+                        .find(|p| p.setting == s && p.rel_rate == rel)
+                        .expect("sweep emits every (rate, setting) point")
+                        .p95_s
+                };
+                (p95_at("semi") < p95_at("centralized")).then_some(rel * sat)
+            });
+            scenarios.push(FaultScenarioRow {
+                scenario: name,
+                expected_outages: if crashes { FAULT_EXPECTED_OUTAGES } else { 0.0 },
+                slow_share: if hetero { FAULT_SLOW_SHARE } else { 0.0 },
+                points,
+                crossover_per_s,
+            });
+        }
+        Ok(FaultRow {
+            dataset: d.name.to_string(),
+            nodes: d.nodes,
+            cluster_size: d.avg_cs,
+            sat_rate_per_s: sat,
+            failover_s: [recovery[0].as_s(), recovery[1].as_s(), recovery[2].as_s()],
+            scenarios,
+        })
+    }
+
+    /// The E14 headline aggregates (docs on [`FaultHeadline`]).
+    pub fn headline(&self) -> FaultHeadline {
+        let mut h = FaultHeadline {
+            cent_inflation_s: 0.0,
+            semi_inflation_s: 0.0,
+            hetero_semi_inflation_s: 0.0,
+            crossovers_shifted: 0,
+            slo_r1: 0.0,
+            slo_r2: 0.0,
+            availability_r1: 0.0,
+            availability_r2: 0.0,
+            overload_r1_s: 0.0,
+            overload_r2_s: 0.0,
+        };
+        let mut n_slo = 0usize;
+        let top = TRAFFIC_REL_RATES.len() - 1;
+        for r in &self.rows {
+            let base = r.scenario("baseline");
+            let het = r.scenario("hetero");
+            let r1 = r.scenario("faulted_r1");
+            let r2 = r.scenario("faulted_r2");
+            for ri in 0..TRAFFIC_REL_RATES.len() {
+                h.cent_inflation_s +=
+                    r1.point(ri, "centralized").p95_s - base.point(ri, "centralized").p95_s;
+                h.semi_inflation_s += r1.point(ri, "semi").p95_s - base.point(ri, "semi").p95_s;
+                h.hetero_semi_inflation_s +=
+                    het.point(ri, "semi").p95_s - base.point(ri, "semi").p95_s;
+                for s in ["semi", "decentralized"] {
+                    h.slo_r1 += r1.point(ri, s).slo_attainment;
+                    h.slo_r2 += r2.point(ri, s).slo_attainment;
+                    h.availability_r1 += r1.point(ri, s).availability;
+                    h.availability_r2 += r2.point(ri, s).availability;
+                    n_slo += 1;
+                }
+            }
+            for s in ["semi", "decentralized"] {
+                h.overload_r1_s += r1.point(top, s).p95_s;
+                h.overload_r2_s += r2.point(top, s).p95_s;
+            }
+            let x1 = r1.crossover_per_s.unwrap_or(f64::INFINITY);
+            let x0 = base.crossover_per_s.unwrap_or(f64::INFINITY);
+            if x1 < x0 {
+                h.crossovers_shifted += 1;
+            }
+        }
+        let n = n_slo.max(1) as f64;
+        h.slo_r1 /= n;
+        h.slo_r2 /= n;
+        h.availability_r1 /= n;
+        h.availability_r2 /= n;
+        h
+    }
+
+    /// Worst Little's-law residual across every point of every scenario.
+    pub fn max_littles_gap(&self) -> f64 {
+        self.rows
+            .iter()
+            .flat_map(|r| r.scenarios.iter())
+            .flat_map(|s| s.points.iter().map(|p| p.littles_gap))
+            .fold(0.0, f64::max)
+    }
+
+    /// Post-hoc metrics view — the `.metrics.json` sidecar the CLI
+    /// writes next to `BENCH_faults.json`.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        let h = self.headline();
+        m.inc("faults.datasets", self.rows.len() as u64);
+        m.set_gauge("faults.max_littles_gap", self.max_littles_gap());
+        m.set_gauge("faults.cent_inflation_s", h.cent_inflation_s);
+        m.set_gauge("faults.semi_inflation_s", h.semi_inflation_s);
+        m.set_gauge("faults.slo_r1", h.slo_r1);
+        m.set_gauge("faults.slo_r2", h.slo_r2);
+        m.set_gauge("faults.availability_r1", h.availability_r1);
+        m.set_gauge("faults.availability_r2", h.availability_r2);
+        m.inc("faults.crossovers_shifted", h.crossovers_shifted as u64);
+        for r in &self.rows {
+            for s in &r.scenarios {
+                for p in &s.points {
+                    m.inc("faults.points", 1);
+                    m.inc("faults.windows", p.fault_windows as u64);
+                    m.observe("faults.downtime_s", p.downtime_s);
+                    m.observe("faults.p95_s", p.p95_s);
+                }
+            }
+        }
+        m
+    }
+
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "E14 — fault sweep: p95 / availability vs offered rate \
+                 ({} expected outages, slow share {}, SLO {} ms)",
+                FAULT_EXPECTED_OUTAGES, FAULT_SLOW_SHARE, TRAFFIC_SLO_MS
+            ),
+            &[
+                "Dataset",
+                "Scenario",
+                "x sat",
+                "Cent p95",
+                "Semi p95",
+                "Dec p95",
+                "Semi SLO",
+                "Semi avail",
+            ],
+        );
+        for r in &self.rows {
+            for s in &r.scenarios {
+                for (ri, &rel) in TRAFFIC_REL_RATES.iter().enumerate() {
+                    let c = s.point(ri, "centralized");
+                    let sm = s.point(ri, "semi");
+                    let dd = s.point(ri, "decentralized");
+                    t.row(&[
+                        r.dataset.clone(),
+                        s.scenario.into(),
+                        format!("{rel:.2}"),
+                        Time::s(c.p95_s).to_string(),
+                        Time::s(sm.p95_s).to_string(),
+                        Time::s(dd.p95_s).to_string(),
+                        pct(sm.slo_attainment),
+                        pct(sm.availability),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    /// One line per dataset plus the headline aggregates.
+    pub fn summary(&self) -> String {
+        let mut lines: Vec<String> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let fmt = |x: Option<f64>| match x {
+                    Some(v) => format!("{v:.0} req/s"),
+                    None => "never".into(),
+                };
+                format!(
+                    "{}: semi overtakes centralized at {} fault-free vs {} under \
+                     failures (failover bill: cent {}, semi {})",
+                    r.dataset,
+                    fmt(r.scenario("baseline").crossover_per_s),
+                    fmt(r.scenario("faulted_r1").crossover_per_s),
+                    Time::s(r.failover_s[0]),
+                    Time::s(r.failover_s[1]),
+                )
+            })
+            .collect();
+        let h = self.headline();
+        lines.push(format!(
+            "replication: r=2 SLO attainment {} vs r=1 {} at the same failure \
+             times (availability {} vs {})",
+            pct(h.slo_r2),
+            pct(h.slo_r1),
+            pct(h.availability_r2),
+            pct(h.availability_r1),
+        ));
+        lines.join("\n")
+    }
+
+    /// The `BENCH_faults.json` artifact (byte-identical across thread
+    /// counts and per seed — asserted in tests).
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| format!("{v:.6e}");
+        let h = self.headline();
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for r in &self.rows {
+            let mut scs = Vec::with_capacity(r.scenarios.len());
+            for s in &r.scenarios {
+                let mut pts = Vec::with_capacity(s.points.len());
+                for p in &s.points {
+                    pts.push(format!(
+                        "          {{\"setting\": \"{}\", \"rel_rate\": {}, \
+                         \"rate_per_s\": {}, \"offered\": {}, \"p50_s\": {}, \
+                         \"p95_s\": {}, \"p99_s\": {}, \"slo_attainment\": {}, \
+                         \"availability\": {}, \"downtime_s\": {}, \
+                         \"fault_windows\": {}, \"mttr_s\": {}, \"littles_gap\": {}}}",
+                        p.setting,
+                        num(p.rel_rate),
+                        num(p.rate_per_s),
+                        p.offered,
+                        num(p.p50_s),
+                        num(p.p95_s),
+                        num(p.p99_s),
+                        num(p.slo_attainment),
+                        num(p.availability),
+                        num(p.downtime_s),
+                        p.fault_windows,
+                        num(p.mttr_s),
+                        num(p.littles_gap),
+                    ));
+                }
+                let crossover = match s.crossover_per_s {
+                    Some(x) => num(x),
+                    None => "null".into(),
+                };
+                scs.push(format!(
+                    "      {{\"scenario\": \"{}\", \"expected_outages\": {}, \
+                     \"slow_share\": {}, \"crossover_per_s\": {}, \"points\": [\n{}\n      ]}}",
+                    s.scenario,
+                    num(s.expected_outages),
+                    num(s.slow_share),
+                    crossover,
+                    pts.join(",\n"),
+                ));
+            }
+            rows.push(format!(
+                "    {{\"dataset\": \"{}\", \"nodes\": {}, \"cluster_size\": {}, \
+                 \"sat_rate_per_s\": {}, \"failover_s\": [{}, {}, {}], \
+                 \"scenarios\": [\n{}\n    ]}}",
+                r.dataset,
+                r.nodes,
+                r.cluster_size,
+                num(r.sat_rate_per_s),
+                num(r.failover_s[0]),
+                num(r.failover_s[1]),
+                num(r.failover_s[2]),
+                scs.join(",\n"),
+            ));
+        }
+        format!(
+            "{{\n  \"experiment\": \"fault_sweep\",\n  \"config\": {{\
+             \"materialize_cap\": {}, \"requests\": {}, \"expected_outages\": {}, \
+             \"slow_share\": {}, \"slow_speed\": {}, \"degraded_factor\": {}, \
+             \"row_bytes\": {}, \"slo_ms\": {}, \"rel_rates\": [{}]}},\n  \
+             \"summary\": {{\"cent_inflation_s\": {}, \"semi_inflation_s\": {}, \
+             \"hetero_semi_inflation_s\": {}, \"crossovers_shifted\": {}, \
+             \"slo_r1\": {}, \"slo_r2\": {}, \"availability_r1\": {}, \
+             \"availability_r2\": {}, \"max_littles_gap\": {}}},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            self.materialize_cap,
+            self.requests,
+            num(FAULT_EXPECTED_OUTAGES),
+            num(FAULT_SLOW_SHARE),
+            num(FAULT_SLOW_SPEED),
+            num(FAULT_DEGRADED_FACTOR),
+            FAULT_ROW_BYTES,
+            num(TRAFFIC_SLO_MS),
+            TRAFFIC_REL_RATES.map(num).join(", "),
+            num(h.cent_inflation_s),
+            num(h.semi_inflation_s),
+            num(h.hetero_semi_inflation_s),
+            h.crossovers_shifted,
+            num(h.slo_r1),
+            num(h.slo_r2),
+            num(h.availability_r1),
+            num(h.availability_r2),
+            num(self.max_littles_gap()),
+            rows.join(",\n"),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1655,6 +2204,112 @@ mod tests {
         assert_eq!(seq.to_json(), par4.to_json());
         let again = TrafficSweep::run_with_threads(150, 400, 1).unwrap();
         assert_eq!(seq.to_json(), again.to_json());
+    }
+
+    /// E14 structure and the deterministic scenario couplings: the
+    /// fault-free scenarios report zero downtime; common random numbers
+    /// make the baseline and hetero centralized points bit-identical
+    /// (both homogeneous, both fault-free, same seed) and the r1 / r2
+    /// centralized points bit-identical (the leader has no replicas, so
+    /// both take the same fixed outages); r2's replica-served semi and
+    /// decentralized points never go dark; and every executed r1 window
+    /// bills exactly its setting's failover total (MTTR == the bill).
+    #[test]
+    fn fault_sweep_accounts_downtime_and_replicas_deterministically() {
+        let sweep = FaultSweep::run_with_threads(150, 250, 1).unwrap();
+        assert_eq!(sweep.rows.len(), 4);
+        let mut executed_windows = 0usize;
+        for r in &sweep.rows {
+            assert_eq!(r.scenarios.len(), FAULT_SCENARIOS.len());
+            for s in &r.scenarios {
+                assert_eq!(s.points.len(), TRAFFIC_REL_RATES.len() * 3);
+            }
+            assert!(r.failover_s.iter().all(|&f| f.is_finite() && f > 0.0));
+            // The leader's bill (all rows over the uplink) dwarfs a
+            // head's (one cluster over local hops).
+            assert!(r.failover_s[0] > r.failover_s[1]);
+            let base = r.scenario("baseline");
+            let het = r.scenario("hetero");
+            let r1 = r.scenario("faulted_r1");
+            let r2 = r.scenario("faulted_r2");
+            for s in [base, het] {
+                for p in &s.points {
+                    assert_eq!(p.fault_windows, 0);
+                    assert_eq!(p.downtime_s, 0.0);
+                    assert_eq!(p.availability, 1.0);
+                }
+            }
+            for ri in 0..TRAFFIC_REL_RATES.len() {
+                let (b, hc) = (base.point(ri, "centralized"), het.point(ri, "centralized"));
+                assert_eq!(b.p95_s.to_bits(), hc.p95_s.to_bits());
+                let (c1, c2) = (r1.point(ri, "centralized"), r2.point(ri, "centralized"));
+                assert_eq!(c1.p95_s.to_bits(), c2.p95_s.to_bits());
+                assert_eq!(c1.downtime_s.to_bits(), c2.downtime_s.to_bits());
+                for (si, s) in ["semi", "decentralized"].into_iter().enumerate() {
+                    let p2 = r2.point(ri, s);
+                    assert_eq!(p2.downtime_s, 0.0, "replicas must not go dark");
+                    assert_eq!(p2.availability, 1.0);
+                    let p1 = r1.point(ri, s);
+                    executed_windows += p1.fault_windows;
+                    if p1.fault_windows > 0 {
+                        let bill = r.failover_s[si + 1];
+                        assert!(
+                            (p1.mttr_s - bill).abs() <= 1e-9 * bill.max(1.0),
+                            "{} {s}: mttr {} != bill {}",
+                            r.dataset,
+                            p1.mttr_s,
+                            bill
+                        );
+                        assert!(p1.availability < 1.0);
+                    }
+                }
+            }
+        }
+        // ~3 expected windows per faulted point over 48 points.
+        assert!(executed_windows > 0, "no crash window executed anywhere");
+        assert!(sweep.max_littles_gap() < 1e-9);
+    }
+
+    /// The E14 headline: failures inflate the centralized leader's p95
+    /// more than the semi overlay's (its failover re-uploads the whole
+    /// store over the uplink, and its single queue absorbs the full
+    /// system rate), which can only pull the semi-beats-centralized
+    /// crossover earlier; heterogeneity alone inflates semi; and r = 2
+    /// replication dominates r = 1 at the same crash times — strictly
+    /// higher SLO attainment, or (when no swept arrival straddles a
+    /// window closely enough to flip an SLO verdict) the tie broken by
+    /// strictly higher availability.  Plus the parallel byte-identity
+    /// contract for `BENCH_faults.json`.
+    #[test]
+    fn fault_sweep_headline_and_parallel_identity() {
+        let seq = FaultSweep::run_with_threads(150, 250, 1).unwrap();
+        let h = seq.headline();
+        assert!(h.cent_inflation_s > 0.0, "failures must cost the leader: {h:?}");
+        assert!(h.cent_inflation_s > h.semi_inflation_s, "{h:?}");
+        assert!(h.hetero_semi_inflation_s > 0.0, "{h:?}");
+        for r in &seq.rows {
+            let x0 = r.scenario("baseline").crossover_per_s.unwrap_or(f64::INFINITY);
+            let x1 = r.scenario("faulted_r1").crossover_per_s.unwrap_or(f64::INFINITY);
+            assert!(x1 <= x0, "{}: faults must not delay the crossover", r.dataset);
+        }
+        assert!(
+            h.slo_r2 > h.slo_r1 || (h.slo_r2 >= h.slo_r1 && h.availability_r2 > h.availability_r1),
+            "replication must dominate: {h:?}"
+        );
+        assert!(h.availability_r2 == 1.0 && h.availability_r1 < 1.0, "{h:?}");
+        assert!(h.overload_r2_s < h.overload_r1_s, "degraded service beats outages: {h:?}");
+
+        let json = seq.to_json();
+        assert!(json.contains("\"experiment\": \"fault_sweep\""));
+        assert!(json.contains("\"scenario\": \"faulted_r2\""));
+        assert!(seq.summary().contains("r=2 SLO attainment"));
+        assert!(seq.render().render().contains("faulted_r1"));
+
+        let par4 = FaultSweep::run_with_threads(150, 250, 4).unwrap();
+        assert_eq!(seq.rows, par4.rows);
+        assert_eq!(json, par4.to_json());
+        let again = FaultSweep::run_with_threads(150, 250, 1).unwrap();
+        assert_eq!(json, again.to_json());
     }
 
     #[test]

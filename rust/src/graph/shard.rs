@@ -12,13 +12,26 @@
 //! local slots, so a serving round never touches global ids after the
 //! plan is built.
 //!
+//! Halo **replication** (`replicate ≥ 2`, DESIGN.md §13): the fault
+//! model needs a lost device's rows to stay servable, so
+//! [`ShardPlan::build_replicated`] tops the halos up until every node
+//! has at least `r` distinct shard sites (its home plus `r − 1` halo
+//! replicas, placed round-robin on the shards after its home).  The
+//! engine's uploads already write every halo site through the
+//! double-buffer barrier, so replicas stay coherent for free, and
+//! [`ShardPlan::degraded_sites`] answers where each lost row is served
+//! from.  `replicate = 1` adds nothing — those plans are bit-identical
+//! to the unreplicated builds.
+//!
 //! Invariants (checked by [`ShardPlan::validate`], re-checked by the
 //! property tests below):
 //! * every node is a member of exactly one shard;
 //! * `members + halo <= table` for every shard;
 //! * every sampled neighbor index lands in-shard (member or halo slot);
-//! * halos contain exactly the out-of-shard sampled neighbors — nothing
-//!   more, nothing less.
+//! * halos contain *all* out-of-shard sampled neighbors; with
+//!   `replicate = 1` (the default) nothing else, with `replicate = r`
+//!   also the round-robin replica rows that give every node
+//!   `min(r, num_shards)` distinct shard sites.
 
 use crate::error::{Error, Result};
 use crate::obs::Obs;
@@ -78,6 +91,8 @@ pub struct ShardPlan {
     /// `halo_sites[node]` — every `(shard, slot)` where the node is
     /// replicated as a halo row (kept in sync by the engine's uploads).
     halo_sites: Vec<Vec<(usize, usize)>>,
+    /// Requested replication factor (≥ 1; 1 = exact halos only).
+    replicate: usize,
 }
 
 enum PackOutcome {
@@ -108,7 +123,22 @@ impl ShardPlan {
         obs: &Obs,
     ) -> Result<ShardPlan> {
         let singles: Vec<Vec<usize>> = (0..graph.num_nodes()).map(|v| vec![v]).collect();
-        ShardPlan::pack(graph, sampler, table, &singles, 1, obs)
+        ShardPlan::pack(graph, sampler, table, &singles, 1, 1, obs)
+    }
+
+    /// [`ShardPlan::build`] with halo replication: every node gets at
+    /// least `min(replicate, num_shards)` distinct shard sites, so a
+    /// lost shard's rows stay servable in degraded mode
+    /// ([`ShardPlan::degraded_sites`]).  `replicate = 1` is bit-identical
+    /// to [`ShardPlan::build`].
+    pub fn build_replicated(
+        graph: &Csr,
+        sampler: &NeighborSampler,
+        table: usize,
+        replicate: usize,
+    ) -> Result<ShardPlan> {
+        let singles: Vec<Vec<usize>> = (0..graph.num_nodes()).map(|v| vec![v]).collect();
+        ShardPlan::pack(graph, sampler, table, &singles, 1, replicate, &Obs::disabled())
     }
 
     /// Shard a graph so whole clusters land in one shard (the semi
@@ -119,11 +149,31 @@ impl ShardPlan {
         table: usize,
         clustering: &Clustering,
     ) -> Result<ShardPlan> {
+        ShardPlan::from_clustering_replicated(graph, sampler, table, clustering, 1)
+    }
+
+    /// [`ShardPlan::from_clustering`] with halo replication (see
+    /// [`ShardPlan::build_replicated`]).
+    pub fn from_clustering_replicated(
+        graph: &Csr,
+        sampler: &NeighborSampler,
+        table: usize,
+        clustering: &Clustering,
+        replicate: usize,
+    ) -> Result<ShardPlan> {
         if clustering.assignment.len() != graph.num_nodes() {
             return Err(Error::Graph("clustering does not cover the graph".into()));
         }
         let min_cap = clustering.clusters.iter().map(Vec::len).max().unwrap_or(0).max(1);
-        ShardPlan::pack(graph, sampler, table, &clustering.clusters, min_cap, &Obs::disabled())
+        ShardPlan::pack(
+            graph,
+            sampler,
+            table,
+            &clustering.clusters,
+            min_cap,
+            replicate,
+            &Obs::disabled(),
+        )
     }
 
     /// Capacity search: pack groups with a member budget of `cap`, shrink
@@ -139,11 +189,15 @@ impl ShardPlan {
         table: usize,
         groups: &[Vec<usize>],
         min_cap: usize,
+        replicate: usize,
         obs: &Obs,
     ) -> Result<ShardPlan> {
         let _span = span!(obs.tracer, "shard.plan", nodes = graph.num_nodes(), table = table);
         if table == 0 {
             return Err(Error::Graph("shard table must hold at least one row".into()));
+        }
+        if replicate == 0 {
+            return Err(Error::Graph("replication factor must be >= 1".into()));
         }
         if min_cap > table {
             return Err(Error::Graph(format!(
@@ -158,7 +212,7 @@ impl ShardPlan {
             if obs.is_enabled() {
                 obs.metrics.inc("shard.pack_attempts", 1);
             }
-            match ShardPlan::try_pack(&samples, sample, table, groups, cap)? {
+            match ShardPlan::try_pack(&samples, sample, table, groups, cap, replicate)? {
                 PackOutcome::Fits(plan) => return Ok(plan),
                 PackOutcome::Overflow(worst) => {
                     if cap == min_cap {
@@ -187,6 +241,7 @@ impl ShardPlan {
         table: usize,
         groups: &[Vec<usize>],
         cap: usize,
+        replicate: usize,
     ) -> Result<PackOutcome> {
         let n = samples.len();
 
@@ -222,7 +277,6 @@ impl ShardPlan {
         // Halos: the out-of-shard sampled neighbors of each shard's
         // members (the sampler is deterministic, so this set is exact).
         let mut halos = Vec::with_capacity(member_sets.len());
-        let mut worst = 0usize;
         for (s, ms) in member_sets.iter().enumerate() {
             let mut halo: Vec<usize> = ms
                 .iter()
@@ -233,8 +287,51 @@ impl ShardPlan {
                 .collect();
             halo.sort_unstable();
             halo.dedup();
-            worst = worst.max(ms.len() + halo.len());
             halos.push(halo);
+        }
+
+        // Replication top-up: give every node at least
+        // min(replicate, shards) distinct sites by appending replica
+        // rows round-robin on the shards after its home.  Skipped
+        // entirely at replicate = 1, so unreplicated plans keep the
+        // exact-halo bits.
+        if replicate > 1 && !member_sets.is_empty() {
+            let r_eff = replicate.min(member_sets.len());
+            let num = member_sets.len();
+            let mut extra: Vec<Vec<usize>> = vec![Vec::new(); num];
+            let mut sites = vec![1usize; n];
+            for halo in &halos {
+                for &g in halo {
+                    sites[g] += 1;
+                }
+            }
+            for v in 0..n {
+                let hs = home[v].0;
+                let mut k = 1;
+                while sites[v] < r_eff {
+                    debug_assert!(k <= num, "replication scan must terminate");
+                    let s = (hs + k) % num;
+                    k += 1;
+                    if s == hs || halos[s].binary_search(&v).is_ok() || extra[s].contains(&v)
+                    {
+                        continue;
+                    }
+                    extra[s].push(v);
+                    sites[v] += 1;
+                }
+            }
+            for (halo, mut add) in halos.iter_mut().zip(extra) {
+                if !add.is_empty() {
+                    halo.append(&mut add);
+                    halo.sort_unstable();
+                    halo.dedup();
+                }
+            }
+        }
+
+        let mut worst = 0usize;
+        for (ms, halo) in member_sets.iter().zip(&halos) {
+            worst = worst.max(ms.len() + halo.len());
         }
         if worst > table {
             return Ok(PackOutcome::Overflow(worst));
@@ -267,7 +364,7 @@ impl ShardPlan {
             })
             .collect();
 
-        let plan = ShardPlan { table, sample, num_nodes: n, shards, home, halo_sites };
+        let plan = ShardPlan { table, sample, num_nodes: n, shards, home, halo_sites, replicate };
         plan.validate()?;
         Ok(PackOutcome::Fits(plan))
     }
@@ -314,6 +411,18 @@ impl ShardPlan {
         }
         if !seen.iter().all(|&s| s) {
             return Err(Error::Graph("shard plan leaves nodes unassigned".into()));
+        }
+        // Replication: a node's distinct shard sites are its home plus
+        // one halo row per (other) shard — halos are deduped and never
+        // contain the home, so the count is exact.
+        let need = self.replicate.min(self.shards.len()).max(1);
+        for v in 0..self.num_nodes {
+            let sites = 1 + self.halo_sites[v].len();
+            if sites < need {
+                return Err(Error::Graph(format!(
+                    "node {v}: {sites} shard sites under replication factor {need}"
+                )));
+            }
         }
         Ok(())
     }
@@ -362,6 +471,40 @@ impl ShardPlan {
     /// Every `(shard, slot)` replicating `node` as a halo row.
     pub fn halo_sites(&self, node: usize) -> &[(usize, usize)] {
         &self.halo_sites[node]
+    }
+
+    /// The requested replication factor (1 = exact halos only).
+    pub fn replicate(&self) -> usize {
+        self.replicate
+    }
+
+    /// Degraded-mode serving assignment after losing `lost_shard`:
+    /// each of its member rows served from its first halo replica on a
+    /// surviving shard, as `(node, (shard, slot))`.  Errors when a row
+    /// has no replica (`replicate = 1` plans) — that row is simply
+    /// unservable until recovery, which is exactly the r = 1 vs r ≥ 2
+    /// SLO gap the E14 sweep measures.
+    pub fn degraded_sites(&self, lost_shard: usize) -> Result<Vec<(usize, (usize, usize))>> {
+        let shard = self
+            .shards
+            .get(lost_shard)
+            .ok_or_else(|| Error::Graph(format!("no shard {lost_shard} to lose")))?;
+        let mut out = Vec::with_capacity(shard.members.len());
+        for &v in &shard.members {
+            let site = self.halo_sites[v]
+                .iter()
+                .find(|&&(s, _)| s != lost_shard)
+                .copied()
+                .ok_or_else(|| {
+                    Error::Graph(format!(
+                        "node {v} has no replica outside shard {lost_shard} \
+                         (replicate = {})",
+                        self.replicate
+                    ))
+                })?;
+            out.push((v, site));
+        }
+        Ok(out)
     }
 }
 
@@ -528,6 +671,124 @@ mod tests {
                 assert_eq!(shard.halo, expect);
             }
         });
+    }
+
+    /// S3: `replicate = 1` goes through the same code bits as the seed
+    /// path — the plans are wholesale equal.
+    #[test]
+    fn replicate_one_is_bit_identical_to_the_seed_path() {
+        let g = generate::regular(200, 8, 11).unwrap();
+        let s = sampler();
+        let base = ShardPlan::build(&g, &s, 64).unwrap();
+        let r1 = ShardPlan::build_replicated(&g, &s, 64, 1).unwrap();
+        assert_eq!(base, r1);
+        assert_eq!(r1.replicate(), 1);
+        let c = fixed_size(200, 8).unwrap();
+        assert_eq!(
+            ShardPlan::from_clustering(&g, &s, 64, &c).unwrap(),
+            ShardPlan::from_clustering_replicated(&g, &s, 64, &c, 1).unwrap()
+        );
+        assert!(ShardPlan::build_replicated(&g, &s, 64, 0).is_err());
+    }
+
+    /// S3: a single-shard graph stays the identity mapping even when
+    /// replication is requested — there is no second site to create.
+    #[test]
+    fn single_shard_replicated_is_still_the_identity() {
+        let g = generate::regular(48, 6, 3).unwrap();
+        let s = sampler();
+        let p = ShardPlan::build_replicated(&g, &s, 64, 2).unwrap();
+        assert_eq!(p, {
+            let mut q = ShardPlan::build(&g, &s, 64).unwrap();
+            // Only the requested factor differs on a single shard.
+            q.replicate = 2;
+            q
+        });
+        assert!(p.is_single_shard());
+        for v in 0..48 {
+            assert_eq!(p.home(v), (0, v));
+            assert!(p.halo_sites(v).is_empty());
+        }
+    }
+
+    /// S3: every node gets ≥ min(r, shards) distinct shard sites, the
+    /// replicated halos stay a superset of the exact neighbor halos,
+    /// and the plan is a pure function of its inputs (patched degraded
+    /// serving reads the same plan a from-scratch rebuild produces).
+    #[test]
+    fn property_replicated_plans_give_every_node_r_sites() {
+        forall(16, |rng: &mut Rng| {
+            let n = rng.index(100) + 20;
+            let sample = rng.index(4) + 1;
+            let r = rng.index(3) + 2; // 2..=4
+            let table = (sample + 2 + rng.index(40)).max(12);
+            let g = generate::uniform(n, n * 2, rng.next_u64()).unwrap();
+            let s = NeighborSampler::new(sample, rng.next_u64());
+            let Ok(p) = ShardPlan::build_replicated(&g, &s, table, r) else {
+                // Tight tables may genuinely not fit the replicas.
+                return;
+            };
+            p.validate().unwrap();
+            assert_eq!(p.replicate(), r);
+            let need = r.min(p.num_shards());
+            for v in 0..n {
+                let mut shards_of_v: Vec<usize> = vec![p.home(v).0];
+                shards_of_v.extend(p.halo_sites(v).iter().map(|&(sh, _)| sh));
+                shards_of_v.sort_unstable();
+                shards_of_v.dedup();
+                assert!(
+                    shards_of_v.len() >= need,
+                    "node {v}: {} sites < r {need}",
+                    shards_of_v.len()
+                );
+            }
+            // Halos ⊇ the exact out-of-shard sampled neighbors.
+            for (si, shard) in p.shards().iter().enumerate() {
+                for nb in shard.members.iter().flat_map(|&v| s.sample(&g, v)).flatten() {
+                    if p.home(nb).0 != si {
+                        assert!(shard.halo.binary_search(&nb).is_ok());
+                    }
+                }
+            }
+            // Determinism: the rebuilt plan is the patched plan.
+            let again = ShardPlan::build_replicated(&g, &s, table, r).unwrap();
+            assert_eq!(p, again);
+            // Degraded serving: with ≥ 2 shards every lost shard's rows
+            // resolve to surviving replicas.
+            if p.num_shards() >= 2 && r >= 2 {
+                for lost in 0..p.num_shards() {
+                    let sites = p.degraded_sites(lost).unwrap();
+                    assert_eq!(sites.len(), p.shards()[lost].members.len());
+                    for &(v, (sh, slot)) in &sites {
+                        assert_ne!(sh, lost);
+                        assert_eq!(p.shards()[sh].local_node(slot), v);
+                    }
+                }
+            }
+        });
+    }
+
+    /// S3: r = 1 plans admit no degraded serving for rows whose halo
+    /// replicas don't exist — `degraded_sites` reports the unservable
+    /// row instead of inventing one.
+    #[test]
+    fn degraded_sites_require_replicas() {
+        // 40 edges touch at most 80 of the 100 nodes, so isolated nodes
+        // exist: they are sampled by nobody and get no exact-halo site.
+        let g = generate::uniform(100, 40, 9).unwrap();
+        let s = sampler();
+        let r2 = ShardPlan::build_replicated(&g, &s, 32, 2).unwrap();
+        assert!(r2.num_shards() >= 2);
+        for lost in 0..r2.num_shards() {
+            let sites = r2.degraded_sites(lost).unwrap();
+            assert_eq!(sites.len(), r2.shards()[lost].members.len());
+        }
+        assert!(r2.degraded_sites(r2.num_shards()).is_err(), "no such shard");
+        // Without replication the isolated nodes' home shards cannot be
+        // served after a loss — the plan reports it instead of guessing.
+        let r1 = ShardPlan::build(&g, &s, 32).unwrap();
+        let unservable = (0..r1.num_shards()).filter(|&l| r1.degraded_sites(l).is_err()).count();
+        assert!(unservable > 0, "r = 1 should leave some shard unservable");
     }
 
     /// Cluster-preserving plans keep every cluster in one shard, under

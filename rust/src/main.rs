@@ -10,6 +10,7 @@
 //! ima-gnn scaling                 # E4: crossbar-count scaling study
 //! ima-gnn simulate [options]      # DES over either deployment
 //! ima-gnn traffic [options]       # E13: arrival-driven traffic engine
+//! ima-gnn faults [options]        # E14: fault injection + recovery accounting
 //! ima-gnn tune [options]          # E11: hybrid operating-point autotuner
 //! ima-gnn perf [options]          # E10: hot-kernel perf baseline
 //! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
@@ -27,8 +28,9 @@ use ima_gnn::coordinator::{
 use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
 use ima_gnn::experiments::{
-    hybrid_target, scaling_sweep, table2, Fig8, HybridSweep, NetsimSweep, ServingSweep, Table1,
-    TrafficSweep, TRAFFIC_MAX_BATCH, TRAFFIC_WAIT_MS,
+    hybrid_target, scaling_sweep, table2, FaultSweep, Fig8, HybridSweep, NetsimSweep,
+    ServingSweep, Table1, TrafficSweep, FAULT_DEGRADED_FACTOR, TRAFFIC_MAX_BATCH,
+    TRAFFIC_WAIT_MS,
 };
 use ima_gnn::graph::{generate, ShardPlan};
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
@@ -36,11 +38,11 @@ use ima_gnn::netsim::{simulate_fabric, simulate_fabric_observed, NetSimConfig, S
 use ima_gnn::obs::{chrome_trace_json, MetricsRegistry, Obs, Tracer};
 use ima_gnn::report::{speedup, Table};
 use ima_gnn::runtime::{default_artifact_dir, Manifest};
-use ima_gnn::sim::{simulate, SimConfig};
+use ima_gnn::sim::{simulate, CrashImpact, FaultConfig, FaultPlan, Outage, SimConfig};
 use ima_gnn::testing::{gcn_layer_binding, Rng};
 use ima_gnn::traffic::{
-    closed_loop, deployment_shape, md1_mean_wait, open_loop, open_loop_observed, ArrivalProcess,
-    BatchPolicy, ClosedLoopConfig, ThinkTime, TrafficReport,
+    closed_loop, deployment_shape, md1_mean_wait, open_loop, open_loop_faulted,
+    open_loop_observed, ArrivalProcess, BatchPolicy, ClosedLoopConfig, ThinkTime, TrafficReport,
 };
 use ima_gnn::units::Time;
 use ima_gnn::workload::DiurnalCurve;
@@ -67,6 +69,7 @@ fn run(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(rest),
         "netsim" => cmd_netsim(rest),
         "traffic" => cmd_traffic(rest),
+        "faults" => cmd_faults(rest),
         "tune" => cmd_tune(rest),
         "perf" => cmd_perf(rest),
         "serve" => cmd_serve(rest),
@@ -108,6 +111,8 @@ fn print_help() {
          netsim     packet-level contention-aware fabric simulation (E9)\n  \
          traffic    arrival-driven traffic engine: queueing + dynamic batching + SLO\n             \
          accounting per deployment shape; --sweep emits BENCH_traffic.json (E13)\n  \
+         faults     fault injection: crash windows, downtime + MTTR accounting and\n             \
+         span reconciliation; --sweep emits BENCH_faults.json (E14)\n  \
          tune       hybrid operating-point autotuner, emits BENCH_hybrid.json (E11)\n  \
          perf       hot-kernel perf baseline, emits BENCH_perf.fresh.json; --check\n             gates against the committed BENCH_perf.json floors (E10)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts; --sweep runs\n             \
@@ -494,6 +499,121 @@ fn cmd_traffic(argv: &[String]) -> Result<()> {
                 report.mean_wait
             );
         }
+    }
+    Ok(())
+}
+
+fn cmd_faults(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("faults", "fault injection and recovery accounting (E14)")
+        .opt("dataset", "taxi | a Table 2 dataset (single-run mode)", Some("taxi"))
+        .opt("setting", "centralized | semi | decentralized", Some("semi"))
+        .opt("rate", "offered system rate, requests/second", Some("5000"))
+        .opt("requests", "target requests per run / sweep point", Some("2000"))
+        .opt("crash-rate", "crash windows per second of queue time", Some("1"))
+        .opt("outage-ms", "fixed outage per crash window (ms)", Some("10"))
+        .opt("cap", "max materialized sample nodes (sweep)", Some("512"))
+        .opt("seed", "rng seed", Some("1"))
+        .opt("json", "sweep artifact path", Some("BENCH_faults.json"))
+        .flag("degraded", "serve crash windows from halo replicas at degraded speed")
+        .flag("sweep", "run the E14 scenario x rate x setting x dataset sweep");
+    let args = cmd.parse(argv)?;
+    let requests = args.usize_or("requests", 2_000)?.max(1);
+
+    if args.flag("sweep") {
+        let sweep = FaultSweep::run(args.usize_or("cap", 512)?, requests)?;
+        sweep.render().print();
+        println!("{}", sweep.summary());
+        let path = args.get_or("json", "BENCH_faults.json").to_string();
+        std::fs::write(&path, sweep.to_json())?;
+        let sidecar = write_metrics_sidecar(&path, &sweep.metrics_snapshot())?;
+        println!("wrote {path} and {sidecar}");
+        return Ok(());
+    }
+
+    // Single-run mode: one representative queue under an injected crash
+    // schedule, observability on, and the obs contract checked out loud
+    // (`fault.crash` span durations must sum to the reported downtime).
+    let dataset = args.get_or("dataset", "taxi").to_string();
+    let (name, model, topo) = if dataset.eq_ignore_ascii_case("taxi") {
+        ("Taxi".to_string(), NetModel::paper(&GnnWorkload::taxi())?, Topology::taxi())
+    } else {
+        let d = ima_gnn::graph::datasets::by_name(&dataset)?;
+        (
+            d.name.to_string(),
+            NetModel::fig8(&d)?,
+            Topology { nodes: d.nodes, cluster_size: d.avg_cs },
+        )
+    };
+    let kind = match args.get_or("setting", "semi") {
+        "centralized" => SettingKind::Centralized,
+        "semi" => SettingKind::Semi,
+        "decentralized" => SettingKind::Decentralized,
+        other => return Err(Error::Usage(format!("unknown setting `{other}`"))),
+    };
+    let (queues, service) = deployment_shape(kind, LatencyProvider::Analytic, &model, topo)?;
+    let policy = BatchPolicy::Deadline {
+        max: TRAFFIC_MAX_BATCH,
+        max_wait: Time::ms(TRAFFIC_WAIT_MS),
+    };
+    let seed = args.usize_or("seed", 1)? as u64;
+    let queue_rate = queues.per_queue_rate(args.f64_or("rate", 5_000.0)?);
+    if !(queue_rate > 0.0) {
+        return Err(Error::Usage("--rate must be > 0".into()));
+    }
+    let horizon = Time::s(requests as f64 / queue_rate);
+    let arrivals =
+        ArrivalProcess::Poisson { rate: queue_rate }.generate(horizon, topo.nodes, seed)?;
+    let impact = if args.flag("degraded") {
+        CrashImpact::Degraded { factor: FAULT_DEGRADED_FACTOR }
+    } else {
+        CrashImpact::Outage
+    };
+    let cfg = FaultConfig::crashes(
+        args.f64_or("crash-rate", 1.0)?,
+        Outage::Fixed(Time::ms(args.f64_or("outage-ms", 10.0)?)),
+        impact,
+    );
+    let plan = FaultPlan::generate(&cfg, 1, horizon, seed)?;
+    let obs = Obs::new(16_384);
+    let report = open_loop_faulted(1, &service, policy, &arrivals, &plan, &obs)?;
+
+    let span_downtime: Time = obs
+        .tracer
+        .spans()
+        .iter()
+        .filter(|s| s.name == "fault.crash")
+        .map(|s| s.end - s.start)
+        .sum();
+    let gap = (span_downtime - report.downtime).as_s().abs();
+
+    let mut t = Table::new(
+        format!(
+            "faults — {name} / {}: {} requests, {} scheduled fault window(s)",
+            kind.name(),
+            report.offered,
+            plan.events().len(),
+        ),
+        &["Metric", "Value"],
+    );
+    t.row(&["p50 / p95 / p99".into(), format!(
+        "{} / {} / {}",
+        report.latency.p50(),
+        report.latency.p95(),
+        report.latency.p99()
+    )]);
+    t.row(&["crash windows executed".into(), report.fault_windows.to_string()]);
+    t.row(&["downtime".into(), report.downtime.to_string()]);
+    t.row(&["availability".into(), format!("{:.4}%", report.availability * 100.0)]);
+    t.row(&["MTTR".into(), report.mttr.to_string()]);
+    t.row(&["planned outage total".into(), plan.total_outage().to_string()]);
+    t.row(&["fault.crash span sum".into(), span_downtime.to_string()]);
+    t.row(&["span/report gap".into(), format!("{gap:.3e} s")]);
+    t.row(&["spans dropped (ring)".into(), report.dropped_spans.to_string()]);
+    t.print();
+    if gap > 1e-9 {
+        return Err(Error::Sim(format!(
+            "fault.crash spans do not reconcile with downtime (gap {gap:.3e} s)"
+        )));
     }
     Ok(())
 }

@@ -1,0 +1,718 @@
+//! Deterministic fault-and-heterogeneity layer (DESIGN.md §13).
+//!
+//! The paper's crossover analysis (Fig. 8, Eqs. 4/5) assumes a uniform,
+//! always-up fleet; real edge fleets are neither.  This module supplies
+//! the *fault side* of the E14 robustness study:
+//!
+//! * [`FaultConfig`] / [`FaultPlan`] — a seeded schedule of device
+//!   crash/recover windows, straggler (service-multiplier) windows and
+//!   link-degradation windows.  Plans are pure functions of
+//!   `(config, servers, horizon, seed)`; the traffic engine executes
+//!   them on its [`EventQueue`] (`traffic::open_loop_faulted`), and an
+//!   empty plan schedules nothing — the zero-fault run is bit-identical
+//!   to the no-fault code path.
+//! * [`FailoverCostModel`] — honest recovery pricing derived from the
+//!   deployment's own links: detection (missed heartbeats at the link's
+//!   packet latency), re-clustering, shard-table rebuild and
+//!   feature-row re-upload, per setting.  These durations are exactly
+//!   the outage windows the E14 sweep charges as downtime.
+//! * [`head_failover`] — the *executed* semi-setting recovery: promote
+//!   the fallback head, re-upload the cluster's rows through the
+//!   [`RoundEngine`] double-buffer barrier, and record `fault.failover`
+//!   / `fault.rebuild` spans whose durations are the cost model's — so
+//!   trace sums reconcile with the sweep's downtime accounting.
+//!
+//! Determinism contract: plan generation draws from split [`Rng`]
+//! streams keyed by `(seed, stream, server)`, crash windows are a
+//! renewal process (up-time ~ Exp, outage fixed or Exp) and therefore
+//! never overlap per server, and every window is validated finite with
+//! `until > at`.  Same seed ⇒ byte-identical plan ⇒ byte-identical run.
+//!
+//! [`EventQueue`]: crate::sim::EventQueue
+//! [`RoundEngine`]: crate::coordinator::RoundEngine
+
+use crate::coordinator::RoundEngine;
+use crate::error::{Error, Result};
+use crate::graph::Clustering;
+use crate::netmodel::NetModel;
+use crate::obs::Obs;
+use crate::testing::Rng;
+use crate::units::Time;
+
+/// Duration model of one crash outage window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Outage {
+    /// Every outage lasts exactly this long — the E14 convention, where
+    /// the duration *is* the [`FailoverCostModel`] recovery total.
+    Fixed(Time),
+    /// Exponential outage durations (repair crews, not protocols).
+    Exponential { mean: Time },
+}
+
+/// What a crash does to the crashed device's queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CrashImpact {
+    /// The device is gone: its in-service batch aborts and redispatches
+    /// after recovery (r = 1 — no replicas to serve from).
+    Outage,
+    /// Halo replicas (`ShardPlan` built with `replicate ≥ 2`) keep the
+    /// device's rows servable: the window degrades service by `factor`
+    /// (the boundary-relay detour) instead of stalling it.
+    Degraded { factor: f64 },
+}
+
+/// Seeded fault-injection knobs.  All rates are per server per second
+/// of virtual time; [`FaultConfig::none`] disables everything.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Crash arrival rate (renewal process: up-time ~ Exp(1/rate)).
+    pub crash_rate_per_s: f64,
+    /// Outage-duration model for crash windows.
+    pub outage: Outage,
+    /// How a crash window hits the queue (full outage vs degraded mode).
+    pub impact: CrashImpact,
+    /// Straggler-window arrival rate (thermal throttling, background
+    /// load): service during a window is scaled by `straggle_factor`.
+    pub straggle_rate_per_s: f64,
+    /// Mean straggler-window duration (exponential).
+    pub mean_straggle: Time,
+    /// Service multiplier (≥ 1) inside a straggler window.
+    pub straggle_factor: f64,
+    /// Link-degradation window arrival rate (shared-medium congestion,
+    /// fleet-wide — one stream, not per server).
+    pub link_rate_per_s: f64,
+    /// Mean link-degradation window duration (exponential).
+    pub mean_link: Time,
+    /// Service multiplier (≥ 1) inside a link window.
+    pub link_factor: f64,
+}
+
+impl FaultConfig {
+    /// No faults of any kind: `generate` returns an empty plan.
+    pub fn none() -> FaultConfig {
+        FaultConfig {
+            crash_rate_per_s: 0.0,
+            outage: Outage::Fixed(Time::ZERO),
+            impact: CrashImpact::Outage,
+            straggle_rate_per_s: 0.0,
+            mean_straggle: Time::ZERO,
+            straggle_factor: 1.0,
+            link_rate_per_s: 0.0,
+            mean_link: Time::ZERO,
+            link_factor: 1.0,
+        }
+    }
+
+    /// Crash-only config (the E14 head-failure scenarios).
+    pub fn crashes(rate_per_s: f64, outage: Outage, impact: CrashImpact) -> FaultConfig {
+        FaultConfig { crash_rate_per_s: rate_per_s, outage, impact, ..FaultConfig::none() }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.crash_rate_per_s == 0.0
+            && self.straggle_rate_per_s == 0.0
+            && self.link_rate_per_s == 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let rate_ok = |r: f64| r.is_finite() && r >= 0.0;
+        let factor_ok = |f: f64| f.is_finite() && f >= 1.0;
+        let dur_ok = |t: Time| t.is_finite() && t.as_s() >= 0.0;
+        let outage_ok = match self.outage {
+            Outage::Fixed(d) => dur_ok(d),
+            Outage::Exponential { mean } => dur_ok(mean),
+        };
+        let impact_ok = match self.impact {
+            CrashImpact::Outage => true,
+            CrashImpact::Degraded { factor } => factor_ok(factor),
+        };
+        if !rate_ok(self.crash_rate_per_s)
+            || !rate_ok(self.straggle_rate_per_s)
+            || !rate_ok(self.link_rate_per_s)
+            || !outage_ok
+            || !impact_ok
+            || !dur_ok(self.mean_straggle)
+            || !dur_ok(self.mean_link)
+            || !factor_ok(self.straggle_factor)
+            || !factor_ok(self.link_factor)
+        {
+            return Err(Error::Sim("fault config needs finite rates >= 0, factors >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// What happens inside one fault window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// `server` is down for the whole window: in-service work aborts,
+    /// pending requests wait, dispatch resumes at `until`.
+    Crash { server: usize },
+    /// `server` serves at `factor ×` its normal service time.
+    Straggle { server: usize, factor: f64 },
+    /// Every server's batch barrier pays `factor ×` (shared medium).
+    LinkDegrade { factor: f64 },
+}
+
+/// One scheduled fault window `[at, until)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at: Time,
+    pub until: Time,
+    pub kind: FaultKind,
+}
+
+/// A validated, time-sorted schedule of fault windows for a fixed
+/// server count.  See the module docs for the determinism contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    servers: usize,
+}
+
+/// Deterministic per-stream RNG split: `(seed, stream, server)` pick
+/// independent xorshift streams (odd multipliers, as in `testing::Rng`'s
+/// own zero-seed remap constant family).
+fn stream_rng(seed: u64, stream: u64, server: usize) -> Rng {
+    Rng::new(
+        seed.wrapping_add(stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((server as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)),
+    )
+}
+
+fn exp_draw(rng: &mut Rng, mean: Time) -> Time {
+    let u = rng.f64().max(1e-12);
+    mean * (-u.ln())
+}
+
+impl FaultPlan {
+    /// The empty plan: injecting it is bit-identical to not injecting.
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new(), servers: 0 }
+    }
+
+    /// Generate the seeded schedule over `[0, horizon)` for `servers`
+    /// queues.  Windows may *start* before the horizon and end past it;
+    /// crash windows per server never overlap (renewal process).
+    pub fn generate(
+        cfg: &FaultConfig,
+        servers: usize,
+        horizon: Time,
+        seed: u64,
+    ) -> Result<FaultPlan> {
+        cfg.validate()?;
+        if !horizon.is_finite() || horizon.as_s() < 0.0 {
+            return Err(Error::Sim("fault horizon must be finite and >= 0".into()));
+        }
+        if cfg.is_none() || servers == 0 {
+            return Ok(FaultPlan::none());
+        }
+        let mut events = Vec::new();
+        for s in 0..servers {
+            if cfg.crash_rate_per_s > 0.0 {
+                let mut rng = stream_rng(seed, 1, s);
+                let up_mean = Time::s(1.0 / cfg.crash_rate_per_s);
+                let mut t = Time::ZERO;
+                loop {
+                    t += exp_draw(&mut rng, up_mean);
+                    if t >= horizon {
+                        break;
+                    }
+                    let dur = match cfg.outage {
+                        Outage::Fixed(d) => d,
+                        Outage::Exponential { mean } => exp_draw(&mut rng, mean),
+                    };
+                    // A zero-length window would be a no-op event pair
+                    // that still perturbs queue tie-breaking; floor it.
+                    let dur = if dur.as_s() > 0.0 { dur } else { Time::us(1.0) };
+                    let kind = match cfg.impact {
+                        CrashImpact::Outage => FaultKind::Crash { server: s },
+                        CrashImpact::Degraded { factor } => {
+                            FaultKind::Straggle { server: s, factor }
+                        }
+                    };
+                    events.push(FaultEvent { at: t, until: t + dur, kind });
+                    t += dur;
+                }
+            }
+            if cfg.straggle_rate_per_s > 0.0 && cfg.mean_straggle.as_s() > 0.0 {
+                let mut rng = stream_rng(seed, 2, s);
+                let gap_mean = Time::s(1.0 / cfg.straggle_rate_per_s);
+                let mut t = Time::ZERO;
+                loop {
+                    t += exp_draw(&mut rng, gap_mean);
+                    if t >= horizon {
+                        break;
+                    }
+                    let dur = exp_draw(&mut rng, cfg.mean_straggle);
+                    events.push(FaultEvent {
+                        at: t,
+                        until: t + dur,
+                        kind: FaultKind::Straggle { server: s, factor: cfg.straggle_factor },
+                    });
+                    t += dur;
+                }
+            }
+        }
+        if cfg.link_rate_per_s > 0.0 && cfg.mean_link.as_s() > 0.0 {
+            let mut rng = stream_rng(seed, 3, 0);
+            let gap_mean = Time::s(1.0 / cfg.link_rate_per_s);
+            let mut t = Time::ZERO;
+            loop {
+                t += exp_draw(&mut rng, gap_mean);
+                if t >= horizon {
+                    break;
+                }
+                let dur = exp_draw(&mut rng, cfg.mean_link);
+                events.push(FaultEvent {
+                    at: t,
+                    until: t + dur,
+                    kind: FaultKind::LinkDegrade { factor: cfg.link_factor },
+                });
+                t += dur;
+            }
+        }
+        FaultPlan::from_events(events, servers)
+    }
+
+    /// Build a plan from explicit windows (tests, hand-crafted
+    /// scenarios).  Validates every window and sorts by
+    /// `(at, kind, server)`; rejects overlapping crash windows on the
+    /// same server — the engine's up/down state machine needs them
+    /// disjoint.
+    pub fn from_events(mut events: Vec<FaultEvent>, servers: usize) -> Result<FaultPlan> {
+        let rank = |k: &FaultKind| match *k {
+            FaultKind::Crash { server } => (0u8, server),
+            FaultKind::Straggle { server, .. } => (1, server),
+            FaultKind::LinkDegrade { .. } => (2, 0),
+        };
+        for e in &events {
+            if !e.at.is_finite() || !e.until.is_finite() || e.at.as_s() < 0.0 || e.until <= e.at
+            {
+                return Err(Error::Sim("fault windows need 0 <= at < until, finite".into()));
+            }
+            let factor = match e.kind {
+                FaultKind::Crash { .. } => 1.0,
+                FaultKind::Straggle { factor, .. } | FaultKind::LinkDegrade { factor } => factor,
+            };
+            if !factor.is_finite() || factor < 1.0 {
+                return Err(Error::Sim("fault factors must be finite and >= 1".into()));
+            }
+            let server = match e.kind {
+                FaultKind::Crash { server } | FaultKind::Straggle { server, .. } => server,
+                FaultKind::LinkDegrade { .. } => 0,
+            };
+            if server >= servers {
+                return Err(Error::Sim(format!(
+                    "fault window targets server {server} of {servers}"
+                )));
+            }
+        }
+        events.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at)
+                .expect("validated finite")
+                .then_with(|| rank(&a.kind).cmp(&rank(&b.kind)))
+                .then_with(|| a.until.partial_cmp(&b.until).expect("validated finite"))
+        });
+        for s in 0..servers {
+            let mut last_end = Time::ZERO;
+            for e in &events {
+                if let FaultKind::Crash { server } = e.kind {
+                    if server == s {
+                        if e.at < last_end {
+                            return Err(Error::Sim(format!(
+                                "overlapping crash windows on server {s}"
+                            )));
+                        }
+                        last_end = e.until;
+                    }
+                }
+            }
+        }
+        Ok(FaultPlan { events, servers })
+    }
+
+    /// Convert every crash window into a degraded-mode window at
+    /// `factor` — the r ≥ 2 halo-replication counterfactual with the
+    /// *same* failure times (so r = 1 vs r = 2 compare like for like).
+    pub fn degraded(&self, factor: f64) -> Result<FaultPlan> {
+        let events = self
+            .events
+            .iter()
+            .map(|e| match e.kind {
+                FaultKind::Crash { server } => FaultEvent {
+                    kind: FaultKind::Straggle { server, factor },
+                    ..*e
+                },
+                _ => *e,
+            })
+            .collect();
+        FaultPlan::from_events(events, self.servers)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Server count the plan was generated for (0 for the empty plan).
+    pub fn servers(&self) -> usize {
+        self.servers
+    }
+
+    /// The crash windows of one server, in time order.
+    pub fn crash_windows(&self, server: usize) -> Vec<(Time, Time)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::Crash { server: s } if s == server => Some((e.at, e.until)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total scheduled outage across all crash windows — the downtime
+    /// the traffic engine must reproduce when every window executes.
+    pub fn total_outage(&self) -> Time {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                FaultKind::Crash { .. } => Some(e.until - e.at),
+                _ => None,
+            })
+            .sum()
+    }
+}
+
+/// One recovery's cost breakdown; every term is charged as downtime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryCost {
+    /// Failure detection: missed heartbeats at the link's packet
+    /// latency.
+    pub detect: Time,
+    /// Re-clustering around the fallback head (semi only).
+    pub recluster: Time,
+    /// Shard-table rebuild for the rows the failed device owned.
+    pub rebuild: Time,
+    /// Feature-row re-upload through the double-buffer barrier.
+    pub reupload: Time,
+}
+
+impl RecoveryCost {
+    pub fn total(&self) -> Time {
+        self.detect + self.recluster + self.rebuild + self.reupload
+    }
+}
+
+/// Per-unit recovery prices derived from the deployment's own network
+/// model — the sweep cannot invent cheaper recoveries than the links
+/// it already charges for serving.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailoverCostModel {
+    /// Detection timeout: 3 missed heartbeats on the inter-network
+    /// link.
+    pub detect: Time,
+    /// One feature row over the centralized uplink (L_n).
+    pub upload_row_inter: Time,
+    /// One feature row over a cluster-local hop (L_c).
+    pub upload_row_intra: Time,
+    /// Table rebuild per row (the feature-extraction core re-populates
+    /// its crossbar row).
+    pub rebuild_row: Time,
+    /// Re-clustering bookkeeping per member (traversal-core scale).
+    pub recluster_member: Time,
+}
+
+impl FailoverCostModel {
+    /// Price recovery with the model's own links; `row_bytes` is one
+    /// feature row (`feature_dim × 4` for f32 stores).
+    pub fn from_net(model: &NetModel, row_bytes: usize) -> FailoverCostModel {
+        let b = model.breakdown();
+        FailoverCostModel {
+            detect: model.inter_link().packet_latency() * 3.0,
+            upload_row_inter: model.inter_link().transfer(row_bytes),
+            upload_row_intra: model.intra_link().hop(row_bytes),
+            rebuild_row: b.t3,
+            recluster_member: b.t1,
+        }
+    }
+
+    /// Leader crash: the whole hosted table rebuilds and re-uploads
+    /// over the uplink.  `rows` is the serving store's row count.
+    pub fn centralized(&self, rows: usize) -> RecoveryCost {
+        RecoveryCost {
+            detect: self.detect,
+            recluster: Time::ZERO,
+            rebuild: self.rebuild_row * rows as f64,
+            reupload: self.upload_row_inter * rows as f64,
+        }
+    }
+
+    /// Cluster-head crash: promote the fallback head, re-cluster the
+    /// members, rebuild one shard and re-upload `members` rows locally.
+    pub fn semi(&self, members: usize) -> RecoveryCost {
+        RecoveryCost {
+            detect: self.detect,
+            recluster: self.recluster_member * members as f64,
+            rebuild: self.rebuild_row * members as f64,
+            reupload: self.upload_row_intra * members as f64,
+        }
+    }
+
+    /// Device crash: reboot and re-upload its own row from a neighbor.
+    pub fn decentralized(&self) -> RecoveryCost {
+        RecoveryCost {
+            detect: self.detect,
+            recluster: Time::ZERO,
+            rebuild: self.rebuild_row,
+            reupload: self.upload_row_intra,
+        }
+    }
+}
+
+/// Result of one executed head failover.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FailoverOutcome {
+    pub cluster: usize,
+    pub old_head: usize,
+    /// The promoted fallback head (the cluster's next member).
+    pub new_head: usize,
+    /// Member rows re-uploaded through the barrier.
+    pub rows_reuploaded: usize,
+    pub cost: RecoveryCost,
+    /// `at + cost.total()` — when the cluster serves again.
+    pub recovered_at: Time,
+}
+
+/// Execute a semi-setting head failover against a live [`RoundEngine`]:
+/// promote the fallback head, re-upload every member row (reads the
+/// serving buffer, writes the staging buffer) and commit through the
+/// double-buffer barrier (`end_round`).  Records `fault.failover` and
+/// `fault.rebuild` spans at sim times `[at, at + cost.total())` so
+/// span sums reconcile with downtime accounting, and bumps
+/// `fault.failovers` / observes `fault.failover_ms` in `obs.metrics`.
+pub fn head_failover(
+    engine: &mut RoundEngine,
+    clustering: &Clustering,
+    cluster: usize,
+    costs: &FailoverCostModel,
+    at: Time,
+    obs: &Obs,
+) -> Result<FailoverOutcome> {
+    if clustering.assignment.len() != engine.num_nodes() {
+        return Err(Error::Sim("clustering does not cover the engine's graph".into()));
+    }
+    let members = clustering
+        .clusters
+        .get(cluster)
+        .ok_or_else(|| Error::Sim(format!("no cluster {cluster} to fail over")))?;
+    if members.len() < 2 {
+        return Err(Error::Sim(format!(
+            "cluster {cluster} has no fallback head ({} member)",
+            members.len()
+        )));
+    }
+    let old_head = members[0];
+    let new_head = members[1];
+    let cost = costs.semi(members.len());
+    // Re-seed the promoted head's store: read each member's serving row
+    // and stage it again, then commit atomically at the barrier.
+    for &v in members.iter() {
+        let row = engine.read(v)?.to_vec();
+        engine.upload(v, &row)?;
+    }
+    engine.end_round();
+    let recovered_at = at + cost.total();
+    if obs.is_enabled() {
+        let rebuild_start = at + cost.detect + cost.recluster;
+        obs.tracer.record_at(
+            "fault.rebuild",
+            cluster as u64,
+            rebuild_start,
+            rebuild_start + cost.rebuild + cost.reupload,
+            vec![("rows", (members.len() as i64).into())],
+        );
+        obs.tracer.record_at(
+            "fault.failover",
+            cluster as u64,
+            at,
+            recovered_at,
+            vec![
+                ("old_head", (old_head as i64).into()),
+                ("new_head", (new_head as i64).into()),
+            ],
+        );
+        obs.metrics.inc("fault.failovers", 1);
+        obs.metrics.observe("fault.failover_ms", cost.total().as_ms());
+    }
+    Ok(FailoverOutcome {
+        cluster,
+        old_head,
+        new_head,
+        rows_reuploaded: members.len(),
+        cost,
+        recovered_at,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, forall, Rng};
+
+    fn crash_cfg(rate: f64, outage_s: f64) -> FaultConfig {
+        FaultConfig::crashes(rate, Outage::Fixed(Time::s(outage_s)), CrashImpact::Outage)
+    }
+
+    #[test]
+    fn empty_config_generates_the_empty_plan() {
+        let p = FaultPlan::generate(&FaultConfig::none(), 4, Time::s(100.0), 7).unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.total_outage(), Time::ZERO);
+        assert_eq!(FaultPlan::none(), p);
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_seed_sensitive() {
+        let cfg = crash_cfg(0.5, 2.0);
+        let a = FaultPlan::generate(&cfg, 3, Time::s(50.0), 11).unwrap();
+        let b = FaultPlan::generate(&cfg, 3, Time::s(50.0), 11).unwrap();
+        assert_eq!(a, b);
+        let c = FaultPlan::generate(&cfg, 3, Time::s(50.0), 12).unwrap();
+        assert_ne!(a, c, "seed must matter");
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn crash_windows_are_disjoint_with_fixed_outages() {
+        let p = FaultPlan::generate(&crash_cfg(2.0, 1.0), 2, Time::s(40.0), 5).unwrap();
+        for s in 0..2 {
+            let w = p.crash_windows(s);
+            assert!(!w.is_empty());
+            for pair in w.windows(2) {
+                assert!(pair[0].1 <= pair[1].0, "windows overlap: {pair:?}");
+            }
+            for &(a, b) in &w {
+                assert_close((b - a).as_s(), 1.0, 1e-9);
+            }
+        }
+    }
+
+    /// Renewal generation never overlaps and always validates, across
+    /// random rates, outage models and horizons.
+    #[test]
+    fn property_generated_plans_validate() {
+        forall(24, |rng: &mut Rng| {
+            let cfg = FaultConfig {
+                crash_rate_per_s: rng.f64() * 3.0,
+                outage: if rng.bool() {
+                    Outage::Fixed(Time::s(rng.f64() * 2.0 + 0.01))
+                } else {
+                    Outage::Exponential { mean: Time::s(rng.f64() + 0.01) }
+                },
+                impact: CrashImpact::Outage,
+                straggle_rate_per_s: rng.f64(),
+                mean_straggle: Time::s(rng.f64() + 0.01),
+                straggle_factor: 1.0 + rng.f64() * 4.0,
+                link_rate_per_s: rng.f64() * 0.5,
+                mean_link: Time::s(rng.f64() + 0.01),
+                link_factor: 1.0 + rng.f64(),
+            };
+            let servers = rng.index(4) + 1;
+            let p =
+                FaultPlan::generate(&cfg, servers, Time::s(rng.f64() * 30.0), rng.next_u64())
+                    .unwrap();
+            // Round-trips through the validating constructor.
+            let again = FaultPlan::from_events(p.events().to_vec(), servers).unwrap();
+            assert_eq!(p, again);
+            assert!(p.events().windows(2).all(|w| w[0].at <= w[1].at));
+        });
+    }
+
+    #[test]
+    fn degraded_preserves_window_times() {
+        let p = FaultPlan::generate(&crash_cfg(1.0, 0.5), 1, Time::s(20.0), 3).unwrap();
+        let d = p.degraded(2.5).unwrap();
+        assert_eq!(p.events().len(), d.events().len());
+        assert!(d.crash_windows(0).is_empty(), "crashes became degraded windows");
+        for (a, b) in p.events().iter().zip(d.events()) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.until, b.until);
+            match b.kind {
+                FaultKind::Straggle { server: 0, factor } => assert_eq!(factor, 2.5),
+                ref k => panic!("unexpected kind {k:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn from_events_rejects_bad_windows() {
+        let w = |at: f64, until: f64, kind| FaultEvent {
+            at: Time::s(at),
+            until: Time::s(until),
+            kind,
+        };
+        // until <= at
+        assert!(FaultPlan::from_events(
+            vec![w(1.0, 1.0, FaultKind::Crash { server: 0 })],
+            1
+        )
+        .is_err());
+        // factor < 1
+        assert!(FaultPlan::from_events(
+            vec![w(0.0, 1.0, FaultKind::Straggle { server: 0, factor: 0.5 })],
+            1
+        )
+        .is_err());
+        // server out of range
+        assert!(FaultPlan::from_events(
+            vec![w(0.0, 1.0, FaultKind::Crash { server: 2 })],
+            2
+        )
+        .is_err());
+        // overlapping crash windows on one server
+        assert!(FaultPlan::from_events(
+            vec![
+                w(0.0, 2.0, FaultKind::Crash { server: 0 }),
+                w(1.0, 3.0, FaultKind::Crash { server: 0 }),
+            ],
+            1
+        )
+        .is_err());
+        // same windows on different servers are fine
+        assert!(FaultPlan::from_events(
+            vec![
+                w(0.0, 2.0, FaultKind::Crash { server: 0 }),
+                w(1.0, 3.0, FaultKind::Crash { server: 1 }),
+            ],
+            2
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn cost_model_orders_settings_honestly() {
+        use crate::cores::GnnWorkload;
+        let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+        let m = FailoverCostModel::from_net(&model, 256);
+        let cent = m.centralized(200);
+        let semi = m.semi(10);
+        let dec = m.decentralized();
+        // Full-store leader recovery dwarfs a 10-member cluster rebuild,
+        // which dwarfs a single-row device reboot (net of the shared
+        // detection timeout).
+        assert!(cent.total() > semi.total());
+        assert!(semi.total() > dec.total());
+        assert!(cent.rebuild + cent.reupload > (semi.rebuild + semi.reupload) * 2.0);
+        assert!(dec.recluster == Time::ZERO && cent.recluster == Time::ZERO);
+        assert!(semi.recluster > Time::ZERO);
+        assert_close(
+            cent.reupload.as_s(),
+            (m.upload_row_inter * 200.0).as_s(),
+            1e-12,
+        );
+    }
+}

@@ -9,8 +9,13 @@
 //! the closed-form model cannot express — they feed the ablation benches.
 
 mod event;
+pub mod faults;
 
 pub use event::EventQueue;
+pub use faults::{
+    head_failover, CrashImpact, FailoverCostModel, FailoverOutcome, FaultConfig, FaultEvent,
+    FaultKind, FaultPlan, Outage, RecoveryCost,
+};
 
 use crate::cores::CoreBreakdown;
 use crate::error::{Error, Result};

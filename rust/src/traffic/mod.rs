@@ -46,6 +46,20 @@
 //! to round-off on *every* run ([`TrafficReport::littles_law_gap`]);
 //! both are asserted in `rust/tests/traffic_cross_validation.rs`.
 //!
+//! **Faults and heterogeneity** (E14, DESIGN.md §13): a seeded
+//! [`FaultPlan`] executes on the same event queue — crash windows abort
+//! the in-service batch (its requests rejoin the queue head and
+//! redispatch after recovery, so their waits keep growing), straggler
+//! and link-degradation windows scale service times at dispatch.
+//! Downtime, availability and MTTR land in the [`TrafficReport`];
+//! Little's law still holds exactly because crashes never remove a
+//! request from the system.  An empty plan pushes no events and takes
+//! no degraded branches, so the zero-fault run is bit-identical to the
+//! no-fault path.  Heterogeneous fleets run as one representative queue
+//! per capability class ([`FleetMix`], [`open_loop_mix`]): uniform
+//! routing splits the Poisson stream exactly per class, and the 1-class
+//! mix degenerates bitwise to the homogeneous PR 5 path.
+//!
 //! [`RoundEngine::assemble`]: crate::coordinator::RoundEngine::assemble
 //! [`LatencyProvider`]: crate::coordinator::LatencyProvider
 //! [`sim::EventQueue`]: crate::sim::EventQueue
@@ -60,6 +74,7 @@ use crate::coordinator::{Arrival, LatencyProvider, LatencyStats};
 use crate::error::{Error, Result};
 use crate::netmodel::{NetModel, Topology};
 use crate::obs::Obs;
+use crate::sim::faults::{FaultConfig, FaultKind, FaultPlan};
 use crate::sim::EventQueue;
 use crate::testing::Rng;
 use crate::units::Time;
@@ -295,6 +310,23 @@ pub struct TrafficReport {
     pub time_avg_in_system: f64,
     /// Σ response times — Little's law cross-check numerator.
     pub sum_response: Time,
+    /// Total server downtime across executed crash windows
+    /// (`Time::ZERO` on fault-free runs).
+    pub downtime: Time,
+    /// `1 − downtime / (servers × makespan)`, clamped to `[0, 1]` —
+    /// 1.0 on fault-free runs.
+    pub availability: f64,
+    /// Crash windows that executed (crash *and* recover inside the
+    /// run).
+    pub fault_windows: usize,
+    /// Mean time to recovery: `downtime / fault_windows`
+    /// (`Time::ZERO` when no window executed).
+    pub mttr: Time,
+    /// Spans the obs ring buffer evicted during the run — long fault
+    /// runs must not silently truncate traces, so reconciliation
+    /// reports check this is 0 before summing span durations.  Always
+    /// 0 with a disabled obs handle.
+    pub dropped_spans: u64,
     /// The dispatched batches in execution order.
     pub batch_log: Vec<BatchRecord>,
 }
@@ -325,16 +357,30 @@ enum Ev {
     /// `server`'s pending queue; stale when `oldest` is no longer the
     /// front (it dispatched earlier).
     Deadline { server: usize, oldest: usize },
-    /// Server finished its in-service batch.
-    Done { server: usize },
+    /// Server finished its in-service batch.  `epoch` is the server's
+    /// crash epoch at dispatch — stale (the batch was aborted by a
+    /// crash) when it no longer matches.
+    Done { server: usize, epoch: u64 },
+    /// Fault-plan crash window opens: the server goes down.
+    Crash { server: usize },
+    /// Fault-plan crash window closes: the server comes back up.
+    Recover { server: usize },
 }
 
 struct ServerState {
     /// Pending requests, FIFO in arrival order.
     pending: VecDeque<usize>,
-    /// (batch, dispatched_at) currently in service.
-    in_service: Option<(Vec<usize>, Time)>,
+    /// (batch, dispatched_at, service duration) currently in service —
+    /// the duration lets a crash refund the unfinished remainder.
+    in_service: Option<(Vec<usize>, Time, Time)>,
     busy_total: Time,
+    /// False inside an executing crash window.
+    up: bool,
+    /// Bumped on every crash; stamps `Done` events so completions of
+    /// aborted batches are recognized as stale.
+    epoch: u64,
+    down_since: Time,
+    down_total: Time,
 }
 
 struct Engine<'a> {
@@ -359,6 +405,15 @@ struct Engine<'a> {
     area_s: f64,
     max_depth: usize,
     batch_log: Vec<BatchRecord>,
+    // Fault state (all empty / false on fault-free runs, so the hot
+    // path takes no degraded branches).
+    faulted: bool,
+    /// Per-server straggler windows `(from, until, factor)`, sorted by
+    /// start time.
+    slow: Vec<Vec<(Time, Time, f64)>>,
+    /// Global link-degradation windows `(from, until, factor)`.
+    link: Vec<(Time, Time, f64)>,
+    fault_windows: usize,
 }
 
 struct ClosedLoop {
@@ -388,6 +443,10 @@ impl<'a> Engine<'a> {
                     pending: VecDeque::new(),
                     in_service: None,
                     busy_total: Time::ZERO,
+                    up: true,
+                    epoch: 0,
+                    down_since: Time::ZERO,
+                    down_total: Time::ZERO,
                 })
                 .collect(),
             queue: EventQueue::new(),
@@ -404,7 +463,70 @@ impl<'a> Engine<'a> {
             area_s: 0.0,
             max_depth: 0,
             batch_log: Vec::new(),
+            faulted: false,
+            slow: Vec::new(),
+            link: Vec::new(),
+            fault_windows: 0,
         })
+    }
+
+    /// Schedule a fault plan's events.  Must run *after* the arrival
+    /// stream is scheduled, so a crash tied with an arrival processes
+    /// the arrival first (the pre-scheduled-stream convention the
+    /// tie-order property test pins down).  An empty plan is a strict
+    /// no-op — no events, no flags — which is what makes the zero-fault
+    /// run bit-identical to the no-fault path.
+    fn install_faults(&mut self, plan: &FaultPlan) -> Result<()> {
+        if plan.is_empty() {
+            return Ok(());
+        }
+        self.faulted = true;
+        self.slow = vec![Vec::new(); self.servers.len()];
+        let check = |server: usize| -> Result<()> {
+            if server >= self.servers.len() {
+                return Err(Error::Sim(format!(
+                    "fault plan targets server {server} of a {}-server run",
+                    self.servers.len()
+                )));
+            }
+            Ok(())
+        };
+        for e in plan.events() {
+            match e.kind {
+                FaultKind::Crash { server } => {
+                    check(server)?;
+                    self.queue.push(e.at, Ev::Crash { server });
+                    self.queue.push(e.until, Ev::Recover { server });
+                }
+                FaultKind::Straggle { server, factor } => {
+                    check(server)?;
+                    self.slow[server].push((e.at, e.until, factor));
+                }
+                FaultKind::LinkDegrade { factor } => {
+                    self.link.push((e.at, e.until, factor));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Service-time multiplier at dispatch: the worst active straggler
+    /// window on this server × the worst active link window.  Windows
+    /// are sorted by start, so the scan stops at the first future one.
+    fn service_factor(&self, s: usize, now: Time) -> f64 {
+        let active_max = |windows: &[(Time, Time, f64)]| {
+            let mut f = 1.0f64;
+            for &(from, until, x) in windows {
+                if from > now {
+                    break;
+                }
+                if now < until {
+                    f = f.max(x);
+                }
+            }
+            f
+        };
+        active_max(&self.slow[s]) * active_max(&self.link)
     }
 
     /// Advance the ∫N(t)dt integral to `now` (call before N changes).
@@ -437,7 +559,10 @@ impl<'a> Engine<'a> {
     /// batch at once; the deadline policy arms an idle-wait timer when
     /// the pending tail is short and fresh.
     fn maybe_dispatch(&mut self, s: usize, now: Time) {
-        if self.servers[s].in_service.is_some() || self.servers[s].pending.is_empty() {
+        if !self.servers[s].up
+            || self.servers[s].in_service.is_some()
+            || self.servers[s].pending.is_empty()
+        {
             return;
         }
         let pend = self.servers[s].pending.len();
@@ -471,9 +596,13 @@ impl<'a> Engine<'a> {
     }
 
     fn dispatch(&mut self, s: usize, now: Time, take: usize) {
+        let factor = if self.faulted { self.service_factor(s, now) } else { 1.0 };
         let srv = &mut self.servers[s];
         let reqs: Vec<usize> = srv.pending.drain(..take).collect();
-        let dur = self.service.service(reqs.len());
+        let base = self.service.service(reqs.len());
+        // Guarded so fault-free runs (and degraded runs outside any
+        // window) keep the exact base-duration bits.
+        let dur = if factor == 1.0 { base } else { base * factor };
         srv.busy_total += dur;
         for &r in &reqs {
             self.start[r] = now;
@@ -490,12 +619,13 @@ impl<'a> Engine<'a> {
                 );
             }
         }
-        srv.in_service = Some((reqs, now));
-        self.queue.push(now + dur, Ev::Done { server: s });
+        let epoch = srv.epoch;
+        srv.in_service = Some((reqs, now, dur));
+        self.queue.push(now + dur, Ev::Done { server: s, epoch });
     }
 
     fn on_done(&mut self, s: usize, now: Time) {
-        let (reqs, dispatched_at) =
+        let (reqs, dispatched_at, _dur) =
             self.servers[s].in_service.take().expect("Done without an in-service batch");
         self.tick_area(now);
         self.last_done = self.last_done.max(now);
@@ -538,6 +668,52 @@ impl<'a> Engine<'a> {
         self.maybe_dispatch(s, now);
     }
 
+    /// A crash window opens: the server goes down and its in-service
+    /// batch aborts.  Only the time actually spent counts as busy (the
+    /// unfinished remainder is refunded), the aborted requests rejoin
+    /// the queue *head* in order and redispatch after recovery — their
+    /// waits keep growing, which is the honest cost of a crash.  `N`
+    /// does not change, so Little's law survives exactly; no area tick.
+    fn on_crash(&mut self, s: usize, now: Time) {
+        let srv = &mut self.servers[s];
+        debug_assert!(srv.up, "crash windows are disjoint per server");
+        srv.up = false;
+        srv.down_since = now;
+        srv.epoch += 1;
+        if let Some((reqs, dispatched_at, dur)) = srv.in_service.take() {
+            srv.busy_total = srv.busy_total - dur + (now - dispatched_at);
+            for &r in reqs.iter().rev() {
+                srv.pending.push_front(r);
+            }
+            let depth = srv.pending.len();
+            self.max_depth = self.max_depth.max(depth);
+        }
+    }
+
+    /// A crash window closes: account the outage, record the
+    /// `fault.crash` span (its duration is exactly this window's
+    /// downtime, so span sums reconcile with the report), and
+    /// redispatch whatever queued up while down.
+    fn on_recover(&mut self, s: usize, now: Time) {
+        debug_assert!(!self.servers[s].up, "recover without a crash");
+        let down_since = self.servers[s].down_since;
+        self.servers[s].up = true;
+        self.servers[s].down_total += now - down_since;
+        self.fault_windows += 1;
+        if self.obs.is_enabled() {
+            self.obs.tracer.record_at(
+                "fault.crash",
+                s as u64,
+                down_since,
+                now,
+                vec![("server", s.into())],
+            );
+            self.obs.metrics.inc("fault.crashes", 1);
+            self.obs.metrics.observe("fault.outage_ms", (now - down_since).as_ms());
+        }
+        self.maybe_dispatch(s, now);
+    }
+
     fn handle(&mut self, ev: Ev, now: Time) {
         self.now = now;
         match ev {
@@ -555,9 +731,11 @@ impl<'a> Engine<'a> {
             }
             Ev::Deadline { server, oldest } => {
                 // Stale unless the armed request still fronts the queue
-                // and the server is still idle (a busy server re-checks
-                // the deadline itself at its next Done).
-                if self.servers[server].in_service.is_none()
+                // and the server is still idle and up (a busy server
+                // re-checks the deadline itself at its next Done; a
+                // down server redispatches at recovery).
+                if self.servers[server].up
+                    && self.servers[server].in_service.is_none()
                     && self.servers[server].pending.front() == Some(&oldest)
                 {
                     let take =
@@ -565,7 +743,14 @@ impl<'a> Engine<'a> {
                     self.dispatch(server, now, take);
                 }
             }
-            Ev::Done { server } => self.on_done(server, now),
+            Ev::Done { server, epoch } => {
+                // Stale when the batch it announced was crash-aborted.
+                if self.servers[server].epoch == epoch {
+                    self.on_done(server, now);
+                }
+            }
+            Ev::Crash { server } => self.on_crash(server, now),
+            Ev::Recover { server } => self.on_recover(server, now),
         }
     }
 
@@ -580,7 +765,13 @@ impl<'a> Engine<'a> {
             let t = self.now;
             let mut flushed = false;
             for s in 0..self.servers.len() {
-                if self.servers[s].in_service.is_none() && !self.servers[s].pending.is_empty() {
+                // Every crash window schedules its Recover, so by drain
+                // time all servers are back up and the flush reaches
+                // every pending tail.
+                if self.servers[s].up
+                    && self.servers[s].in_service.is_none()
+                    && !self.servers[s].pending.is_empty()
+                {
                     let take = self.servers[s].pending.len().min(self.policy.max_batch());
                     self.dispatch(s, t, take);
                     flushed = true;
@@ -611,6 +802,13 @@ impl<'a> Engine<'a> {
         let busy: Time = self.servers.iter().map(|s| s.busy_total).sum();
         let batches = self.batch_log.len();
         let capacity_s = (self.servers.len() as f64 * makespan.as_s()).max(1e-30);
+        let downtime: Time = self.servers.iter().map(|s| s.down_total).sum();
+        let availability = (1.0 - downtime.as_s() / capacity_s).clamp(0.0, 1.0);
+        let mttr = if self.fault_windows > 0 {
+            downtime * (1.0 / self.fault_windows as f64)
+        } else {
+            Time::ZERO
+        };
         if self.obs.is_enabled() {
             let m = &self.obs.metrics;
             m.inc("traffic.requests", n as u64);
@@ -619,6 +817,8 @@ impl<'a> Engine<'a> {
             m.raise_gauge("traffic.max_queue_depth", self.max_depth as f64);
             m.set_gauge("sim.event_queue.depth", self.queue.len() as f64);
             m.raise_gauge("sim.event_queue.max_depth", self.queue.max_depth() as f64);
+            m.set_gauge("traffic.availability", availability);
+            m.set_gauge("obs.tracer.dropped", self.obs.tracer.dropped() as f64);
             for i in 0..n {
                 m.observe("traffic.wait_ms", (self.start[i] - self.arrival[i]).as_ms());
                 m.observe("traffic.response_ms", responses[i].as_ms());
@@ -639,6 +839,11 @@ impl<'a> Engine<'a> {
             max_event_depth: self.queue.max_depth(),
             time_avg_in_system: self.area_s / makespan.as_s().max(1e-30),
             sum_response,
+            downtime,
+            availability,
+            fault_windows: self.fault_windows,
+            mttr,
+            dropped_spans: self.obs.tracer.dropped(),
             batch_log: self.batch_log,
         })
     }
@@ -672,6 +877,23 @@ pub fn open_loop_observed(
     arrivals: &[Arrival],
     obs: &Obs,
 ) -> Result<TrafficReport> {
+    open_loop_faulted(servers, service, policy, arrivals, &FaultPlan::none(), obs)
+}
+
+/// [`open_loop_observed`] with a [`FaultPlan`] executing on the same
+/// event queue (module docs): crash windows abort and requeue the
+/// in-service batch, straggler/link windows scale service at dispatch.
+/// Arrivals are scheduled before fault events, so a crash tied with an
+/// arrival processes the arrival first.  With [`FaultPlan::none`] the
+/// run is bit-identical to [`open_loop`].
+pub fn open_loop_faulted(
+    servers: usize,
+    service: &ServiceModel,
+    policy: BatchPolicy,
+    arrivals: &[Arrival],
+    faults: &FaultPlan,
+    obs: &Obs,
+) -> Result<TrafficReport> {
     if arrivals.is_empty() {
         return Err(Error::Sim("open-loop run needs at least one arrival".into()));
     }
@@ -693,6 +915,7 @@ pub fn open_loop_observed(
         eng.client_of.push(usize::MAX);
         eng.queue.push(a.at, Ev::Arrive { req: i });
     }
+    eng.install_faults(faults)?;
     eng.run_to_completion();
     eng.report()
 }
@@ -744,6 +967,306 @@ pub fn closed_loop_observed(
         Some(ClosedLoop { think: cfg.think, horizon: cfg.horizon, nodes: cfg.nodes, rng });
     eng.run_to_completion();
     eng.report()
+}
+
+/// One device capability class: a fraction `share` of the fleet whose
+/// crossbar geometry / clock runs service at `speed ×` the baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceClass {
+    pub name: &'static str,
+    /// Service-rate multiplier (1.0 = baseline, 0.5 = half speed — the
+    /// class's service *times* scale by `1 / speed`).
+    pub speed: f64,
+    /// Fraction of the fleet — and, by uniform routing, of the arrival
+    /// stream — in this class.  Shares sum to 1.
+    pub share: f64,
+}
+
+/// A fleet's capability mix.  The E13 representative-queue trick
+/// generalizes exactly: uniform routing thins a Poisson stream into
+/// independent per-class Poisson streams (`share × rate`), and each
+/// class's queues split that uniformly again — so one representative
+/// queue per class at `share × rate / servers_c` reproduces the
+/// heterogeneous fleet's per-queue latency mixture.  A 1-class mix at
+/// speed 1 is bit-identical to the homogeneous PR 5 path
+/// (property-tested as the degenerate case).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetMix {
+    classes: Vec<DeviceClass>,
+}
+
+impl FleetMix {
+    pub fn new(classes: Vec<DeviceClass>) -> Result<FleetMix> {
+        if classes.is_empty() {
+            return Err(Error::Sim("fleet mix needs at least one class".into()));
+        }
+        let mut total = 0.0;
+        for c in &classes {
+            if !c.speed.is_finite() || c.speed <= 0.0 {
+                return Err(Error::Sim(format!(
+                    "class '{}' needs a positive, finite speed",
+                    c.name
+                )));
+            }
+            if !c.share.is_finite() || c.share <= 0.0 {
+                return Err(Error::Sim(format!(
+                    "class '{}' needs a positive, finite share",
+                    c.name
+                )));
+            }
+            total += c.share;
+        }
+        if (total - 1.0).abs() > 1e-9 {
+            return Err(Error::Sim(format!("class shares must sum to 1, got {total}")));
+        }
+        Ok(FleetMix { classes })
+    }
+
+    /// The homogeneous fleet: one baseline class at share 1 — the PR 5
+    /// degenerate case every mix result is validated against.
+    pub fn homogeneous() -> FleetMix {
+        FleetMix { classes: vec![DeviceClass { name: "uniform", speed: 1.0, share: 1.0 }] }
+    }
+
+    pub fn classes(&self) -> &[DeviceClass] {
+        &self.classes
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        self.classes.len() == 1 && self.classes[0].speed == 1.0
+    }
+
+    /// Split `total` queues across classes by share (largest-remainder
+    /// apportionment, remainder ties by class order), giving every
+    /// class at least one queue.  Deterministic, exact: the counts sum
+    /// to `total`.
+    pub fn split_servers(&self, total: usize) -> Result<Vec<usize>> {
+        let k = self.classes.len();
+        if total < k {
+            return Err(Error::Sim(format!("{total} queue(s) cannot host {k} classes")));
+        }
+        let mut counts: Vec<usize> = Vec::with_capacity(k);
+        let mut rems: Vec<(f64, usize)> = Vec::with_capacity(k);
+        let mut assigned = 0usize;
+        for (i, c) in self.classes.iter().enumerate() {
+            let exact = c.share * total as f64;
+            let floor = exact.floor() as usize;
+            counts.push(floor);
+            assigned += floor;
+            rems.push((exact - floor as f64, i));
+        }
+        rems.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).expect("shares are finite").then(a.1.cmp(&b.1))
+        });
+        // Σ remainders = total − Σ floors < k, so one pass suffices.
+        let mut left = total - assigned;
+        for &(_, i) in &rems {
+            if left == 0 {
+                break;
+            }
+            counts[i] += 1;
+            left -= 1;
+        }
+        // A zero-queue class steals from the (first) largest; total ≥ k
+        // guarantees a donor with ≥ 2 by pigeonhole.
+        for i in 0..k {
+            if counts[i] == 0 {
+                let donor = (0..k)
+                    .max_by(|&a, &b| counts[a].cmp(&counts[b]).then(b.cmp(&a)))
+                    .expect("k > 0");
+                counts[donor] -= 1;
+                counts[i] += 1;
+            }
+        }
+        Ok(counts)
+    }
+}
+
+/// One class's representative-queue outcome inside a [`MixReport`].
+#[derive(Debug, Clone)]
+pub struct ClassOutcome {
+    pub class: DeviceClass,
+    /// Queues of the full shape assigned to this class.
+    pub servers: usize,
+    /// The exact Poisson split each of this class's queues sees.
+    pub queue_rate_per_s: f64,
+    pub report: TrafficReport,
+}
+
+/// Per-class representative-queue reports plus share-weighted merges
+/// over the heterogeneous fleet.
+#[derive(Debug, Clone)]
+pub struct MixReport {
+    pub classes: Vec<ClassOutcome>,
+}
+
+impl MixReport {
+    /// Share-weighted nearest-rank quantile of the merged response
+    /// distribution.  One class delegates to its own
+    /// [`LatencyStats::quantile`] — bit-identical to the homogeneous
+    /// path, including its exact `ceil(n·q)` float boundary.  For k > 1
+    /// each class sample weighs `share / n_c` and the first sorted
+    /// sample whose cumulative weight reaches `q` answers: the mixture
+    /// distribution's nearest rank.
+    pub fn latency_quantile(&self, q: f64) -> Time {
+        if self.classes.len() == 1 {
+            return self.classes[0].report.latency.quantile(q);
+        }
+        let q = q.clamp(0.0, 1.0);
+        let mut pts: Vec<(Time, f64)> = Vec::new();
+        let mut total = 0.0;
+        for c in &self.classes {
+            let w = c.class.share / c.report.latency.count() as f64;
+            for &v in c.report.latency.samples() {
+                pts.push((v, w));
+            }
+            total += c.class.share;
+        }
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("latencies are finite"));
+        let target = q * total;
+        let mut cum = 0.0;
+        for &(v, w) in &pts {
+            cum += w;
+            if cum >= target {
+                return v;
+            }
+        }
+        pts.last().expect("class reports are non-empty").0
+    }
+
+    pub fn p50(&self) -> Time {
+        self.latency_quantile(0.50)
+    }
+
+    pub fn p95(&self) -> Time {
+        self.latency_quantile(0.95)
+    }
+
+    pub fn p99(&self) -> Time {
+        self.latency_quantile(0.99)
+    }
+
+    /// Share-weighted SLO attainment across classes.
+    pub fn slo_attainment(&self, slo: Time) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for c in &self.classes {
+            num += c.class.share * c.report.slo_attainment(slo);
+            den += c.class.share;
+        }
+        num / den.max(1e-30)
+    }
+
+    /// Share-weighted availability of the representative queues.
+    pub fn availability(&self) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for c in &self.classes {
+            num += c.class.share * c.report.availability;
+            den += c.class.share;
+        }
+        num / den.max(1e-30)
+    }
+
+    /// Total downtime across the simulated representative queues.
+    pub fn downtime(&self) -> Time {
+        self.classes.iter().map(|c| c.report.downtime).sum()
+    }
+
+    /// Crash windows executed across the simulated queues.
+    pub fn fault_windows(&self) -> usize {
+        self.classes.iter().map(|c| c.report.fault_windows).sum()
+    }
+
+    /// Downtime / windows over all simulated queues (`ZERO` when no
+    /// window executed).
+    pub fn mttr(&self) -> Time {
+        let w = self.fault_windows();
+        if w == 0 {
+            Time::ZERO
+        } else {
+            self.downtime() * (1.0 / w as f64)
+        }
+    }
+
+    /// Requests simulated across all classes.
+    pub fn offered(&self) -> usize {
+        self.classes.iter().map(|c| c.report.offered).sum()
+    }
+
+    /// Worst Little's-law residual across the class runs.
+    pub fn max_littles_gap(&self) -> f64 {
+        self.classes.iter().map(|c| c.report.littles_law_gap()).fold(0.0, f64::max)
+    }
+
+    /// Spans the shared ring buffer evicted by the end of the run.  The
+    /// class runs share one tracer and `dropped` is cumulative, so the
+    /// max (= the last class's reading) is the run's total.
+    pub fn dropped_spans(&self) -> u64 {
+        self.classes.iter().map(|c| c.report.dropped_spans).max().unwrap_or(0)
+    }
+}
+
+/// Drive one representative queue per capability class (docs on
+/// [`FleetMix`]).  Class `c` gets `split_servers` queues, each seeing
+/// the exact Poisson split `share_c × rate / servers_c`; serves at
+/// `1 / speed_c ×` the base service times; simulates `share_c ×
+/// requests` arrivals over its own horizon; and executes a per-class
+/// seeded [`FaultPlan`] generated from `faults` for its single
+/// representative queue.  With [`FleetMix::homogeneous`] and
+/// [`FaultConfig::none`] the single class's report is bit-identical to
+/// the PR 5 representative-queue path at `seed`.
+#[allow(clippy::too_many_arguments)]
+pub fn open_loop_mix(
+    mix: &FleetMix,
+    queues: DeploymentQueues,
+    service: &ServiceModel,
+    policy: BatchPolicy,
+    system_rate_per_s: f64,
+    requests: usize,
+    nodes: usize,
+    seed: u64,
+    faults: &FaultConfig,
+    obs: &Obs,
+) -> Result<MixReport> {
+    if !system_rate_per_s.is_finite() || system_rate_per_s <= 0.0 {
+        return Err(Error::Sim("mix run needs a positive, finite system rate".into()));
+    }
+    if requests == 0 || nodes == 0 {
+        return Err(Error::Sim("mix run needs requests and nodes".into()));
+    }
+    let splits = mix.split_servers(queues.servers())?;
+    let mut out = Vec::with_capacity(mix.classes().len());
+    for (c, class) in mix.classes().iter().enumerate() {
+        let servers_c = splits[c];
+        // share × rate is exact at share = 1.0 (IEEE ×1.0 identity), so
+        // the homogeneous split reproduces per_queue_rate bitwise.
+        let queue_rate = class.share * system_rate_per_s / servers_c as f64;
+        let n_c = ((requests as f64) * class.share).round().max(1.0) as usize;
+        let horizon = Time::s(n_c as f64 / queue_rate);
+        let class_seed = seed.wrapping_add(c as u64);
+        let arrivals =
+            ArrivalProcess::Poisson { rate: queue_rate }.generate(horizon, nodes, class_seed)?;
+        let service_c = if class.speed == 1.0 {
+            *service
+        } else {
+            ServiceModel {
+                per_batch: service.per_batch * (1.0 / class.speed),
+                per_request: service.per_request * (1.0 / class.speed),
+            }
+        };
+        // Distinct fault stream per class (offset keeps it disjoint
+        // from the arrival stream's seed).
+        let plan = FaultPlan::generate(faults, 1, horizon, class_seed ^ 0xFA17_5EED_0000_0001)?;
+        let report = open_loop_faulted(1, &service_c, policy, &arrivals, &plan, obs)?;
+        out.push(ClassOutcome {
+            class: *class,
+            servers: servers_c,
+            queue_rate_per_s: queue_rate,
+            report,
+        });
+    }
+    Ok(MixReport { classes: out })
 }
 
 #[cfg(test)]
@@ -1148,6 +1671,328 @@ mod tests {
             },
         )
         .is_err());
+    }
+
+    use crate::sim::faults::{CrashImpact, FaultEvent, Outage};
+
+    fn crash_window(ms_from: f64, ms_until: f64, server: usize) -> FaultEvent {
+        FaultEvent {
+            at: Time::ms(ms_from),
+            until: Time::ms(ms_until),
+            kind: FaultKind::Crash { server },
+        }
+    }
+
+    #[test]
+    fn crash_aborts_the_batch_requeues_and_counts_downtime() {
+        // One server, 2 ms service, requests at t=0 for nodes 0/1; a
+        // crash window [1, 5) ms aborts the in-service request after
+        // 1 ms of work.  By hand: r0 redispatches at recovery (done
+        // 7 ms), r1 follows (done 9 ms); busy = 1 + 2 + 2 = 5 ms,
+        // downtime 4 ms.
+        let plan = FaultPlan::from_events(vec![crash_window(1.0, 5.0, 0)], 1).unwrap();
+        let r = open_loop_faulted(
+            1,
+            &svc(2.0, 0.0),
+            BatchPolicy::Immediate,
+            &[at(0.0, 0), at(0.0, 1)],
+            &plan,
+            &Obs::disabled(),
+        )
+        .unwrap();
+        assert_eq!(r.completed, 2, "aborted requests still complete");
+        assert_eq!(r.batches, 2, "the aborted dispatch never logs a batch");
+        assert_close(r.batch_log[0].dispatched_at.as_ms(), 5.0, 1e-12);
+        assert_close(r.batch_log[0].done_at.as_ms(), 7.0, 1e-12);
+        assert_close(r.batch_log[1].done_at.as_ms(), 9.0, 1e-12);
+        assert_close(r.makespan.as_ms(), 9.0, 1e-12);
+        assert_close(r.downtime.as_ms(), 4.0, 1e-12);
+        assert_eq!(r.fault_windows, 1);
+        assert_close(r.mttr.as_ms(), 4.0, 1e-12);
+        assert_close(r.availability, 1.0 - 4.0 / 9.0, 1e-12);
+        assert_close(r.utilization, 5.0 / 9.0, 1e-12);
+        // Crashes keep every request in the system until its real
+        // completion, so Little's law holds exactly.
+        assert!(r.littles_law_gap() < 1e-12, "gap {}", r.littles_law_gap());
+        assert_eq!(r.downtime, plan.total_outage(), "every window executed");
+    }
+
+    #[test]
+    fn zero_fault_plan_is_bit_identical_to_the_no_fault_path() {
+        let arrivals = ArrivalProcess::Poisson { rate: 300.0 }
+            .generate(Time::s(0.5), 8, 7)
+            .unwrap();
+        let service = svc(1.0, 0.2);
+        let policy = BatchPolicy::Deadline { max: 8, max_wait: Time::ms(2.0) };
+        let a = open_loop(2, &service, policy, &arrivals).unwrap();
+        let b = open_loop_faulted(
+            2,
+            &service,
+            policy,
+            &arrivals,
+            &FaultPlan::none(),
+            &Obs::disabled(),
+        )
+        .unwrap();
+        assert_eq!(a.batch_log, b.batch_log);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.mean_wait, b.mean_wait);
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.latency.p95(), b.latency.p95());
+        assert_eq!(b.downtime, Time::ZERO);
+        assert_eq!(b.availability, 1.0);
+        assert_eq!(b.fault_windows, 0);
+        assert_eq!(b.mttr, Time::ZERO);
+        assert_eq!(b.dropped_spans, 0);
+    }
+
+    #[test]
+    fn straggler_and_link_windows_scale_service_at_dispatch() {
+        let arrivals = [at(0.0, 0), at(10.0, 1)];
+        let service = svc(1.0, 0.0);
+        // Straggler window [9, 20) at 3×: the t=10 dispatch serves 3 ms.
+        let slow = FaultPlan::from_events(
+            vec![FaultEvent {
+                at: Time::ms(9.0),
+                until: Time::ms(20.0),
+                kind: FaultKind::Straggle { server: 0, factor: 3.0 },
+            }],
+            1,
+        )
+        .unwrap();
+        let r = open_loop_faulted(
+            1,
+            &service,
+            BatchPolicy::Immediate,
+            &arrivals,
+            &slow,
+            &Obs::disabled(),
+        )
+        .unwrap();
+        assert_close(r.batch_log[0].done_at.as_ms(), 1.0, 1e-12);
+        assert_close(r.batch_log[1].done_at.as_ms(), 13.0, 1e-12);
+        assert_eq!(r.downtime, Time::ZERO, "degraded windows are not outages");
+        assert_eq!(r.fault_windows, 0);
+        // Link window [0, 2) at 2×: only the t=0 dispatch pays it.
+        let link = FaultPlan::from_events(
+            vec![FaultEvent {
+                at: Time::ZERO,
+                until: Time::ms(2.0),
+                kind: FaultKind::LinkDegrade { factor: 2.0 },
+            }],
+            1,
+        )
+        .unwrap();
+        let r = open_loop_faulted(
+            1,
+            &service,
+            BatchPolicy::Immediate,
+            &arrivals,
+            &link,
+            &Obs::disabled(),
+        )
+        .unwrap();
+        assert_close(r.batch_log[0].done_at.as_ms(), 2.0, 1e-12);
+        assert_close(r.batch_log[1].done_at.as_ms(), 11.0, 1e-12);
+        assert!(r.littles_law_gap() < 1e-12);
+    }
+
+    #[test]
+    fn fault_crash_spans_reconcile_with_reported_downtime() {
+        let plan = FaultPlan::from_events(
+            vec![crash_window(5.0, 9.0, 0), crash_window(20.0, 26.0, 0)],
+            1,
+        )
+        .unwrap();
+        let arrivals: Vec<Arrival> = (0..30).map(|i| at(i as f64 * 2.0, i)).collect();
+        let obs = Obs::new(4096);
+        let r = open_loop_faulted(
+            1,
+            &svc(1.0, 0.0),
+            BatchPolicy::Immediate,
+            &arrivals,
+            &plan,
+            &obs,
+        )
+        .unwrap();
+        assert_eq!(r.fault_windows, 2);
+        assert_eq!(r.dropped_spans, 0, "ring kept every span");
+        // Σ fault.crash span durations == reported downtime, exactly:
+        // both sum the same (recover − crash) values in event order.
+        let span_sum: Time = obs
+            .tracer
+            .spans()
+            .iter()
+            .filter(|s| s.name == "fault.crash")
+            .map(|s| s.end - s.start)
+            .sum();
+        assert_eq!(span_sum, r.downtime);
+        assert_eq!(r.downtime, plan.total_outage());
+        assert_eq!(obs.metrics.counter_value("fault.crashes"), 2);
+    }
+
+    #[test]
+    fn degraded_windows_beat_outages_at_the_same_failure_times() {
+        // r ≥ 2 halo replication turns a crash into degraded service at
+        // the boundary-relay factor.  Same windows, same arrivals: the
+        // degraded run must dominate on tail latency and availability.
+        let plan = FaultPlan::from_events(
+            vec![crash_window(200.0, 450.0, 0), crash_window(600.0, 800.0, 0)],
+            1,
+        )
+        .unwrap();
+        let degraded = plan.degraded(2.0).unwrap();
+        let arrivals = ArrivalProcess::Poisson { rate: 100.0 }
+            .generate(Time::s(1.0), 16, 21)
+            .unwrap();
+        let service = svc(2.0, 0.0);
+        let run = |p: &FaultPlan| {
+            open_loop_faulted(
+                1,
+                &service,
+                BatchPolicy::Immediate,
+                &arrivals,
+                p,
+                &Obs::disabled(),
+            )
+            .unwrap()
+        };
+        let out = run(&plan);
+        let deg = run(&degraded);
+        assert!(out.downtime > Time::ZERO);
+        assert_eq!(deg.downtime, Time::ZERO);
+        assert_eq!(deg.availability, 1.0);
+        assert!(
+            deg.latency.p95() < out.latency.p95(),
+            "degraded p95 {} vs outage p95 {}",
+            deg.latency.p95().as_ms(),
+            out.latency.p95().as_ms()
+        );
+        assert!(out.littles_law_gap() < 1e-9 && deg.littles_law_gap() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_mix_validates_and_splits_servers_exactly() {
+        let mk = |specs: &[(f64, f64)]| {
+            FleetMix::new(
+                specs
+                    .iter()
+                    .map(|&(speed, share)| DeviceClass { name: "c", speed, share })
+                    .collect(),
+            )
+        };
+        assert!(FleetMix::new(Vec::new()).is_err());
+        assert!(mk(&[(1.0, 0.5)]).is_err(), "shares must sum to 1");
+        assert!(mk(&[(0.0, 1.0)]).is_err(), "speed must be positive");
+        assert!(mk(&[(1.0, 0.5), (0.5, 0.5000001)]).is_err());
+        assert!(FleetMix::homogeneous().is_homogeneous());
+
+        let mix = mk(&[(1.0, 0.75), (0.5, 0.25)]).unwrap();
+        assert_eq!(mix.split_servers(8).unwrap(), vec![6, 2]);
+        // 5 queues: exact 3.75 / 1.25 → floors 3/1, the larger
+        // remainder (0.75) takes the leftover.
+        assert_eq!(mix.split_servers(5).unwrap(), vec![4, 1]);
+        assert!(mix.split_servers(1).is_err(), "fewer queues than classes");
+        // A tiny class still gets a queue (stolen from the largest).
+        let skew = mk(&[(1.0, 0.95), (0.5, 0.05)]).unwrap();
+        assert_eq!(skew.split_servers(2).unwrap(), vec![1, 1]);
+        let total: usize = mix.split_servers(41).unwrap().iter().sum();
+        assert_eq!(total, 41, "apportionment is exact");
+    }
+
+    /// S4: the 1-class mix is the PR 5 representative-queue path,
+    /// bitwise — same split rate, same arrivals, same report.
+    #[test]
+    fn single_class_mix_reproduces_the_representative_queue_bitwise() {
+        let queues = DeploymentQueues::ClusterHeads { clusters: 5 };
+        let service = svc(1.0, 0.1);
+        let policy = BatchPolicy::Deadline { max: 16, max_wait: Time::ms(2.0) };
+        let (rate, requests, nodes, seed) = (400.0, 200, 16, 42u64);
+
+        let queue_rate = queues.per_queue_rate(rate);
+        let horizon = Time::s(requests as f64 / queue_rate);
+        let arrivals = ArrivalProcess::Poisson { rate: queue_rate }
+            .generate(horizon, nodes, seed)
+            .unwrap();
+        let base = open_loop(1, &service, policy, &arrivals).unwrap();
+
+        let mix = open_loop_mix(
+            &FleetMix::homogeneous(),
+            queues,
+            &service,
+            policy,
+            rate,
+            requests,
+            nodes,
+            seed,
+            &FaultConfig::none(),
+            &Obs::disabled(),
+        )
+        .unwrap();
+        assert_eq!(mix.classes.len(), 1);
+        let c = &mix.classes[0];
+        assert_eq!(c.servers, 5);
+        assert_eq!(c.queue_rate_per_s.to_bits(), queue_rate.to_bits());
+        assert_eq!(c.report.batch_log, base.batch_log);
+        assert_eq!(c.report.makespan, base.makespan);
+        assert_eq!(c.report.mean_wait, base.mean_wait);
+        assert_eq!(c.report.utilization.to_bits(), base.utilization.to_bits());
+        assert_eq!(c.report.latency.p95(), base.latency.p95());
+        // The merged quantile delegates at k = 1 — including the exact
+        // ceil(n·q) float boundary of LatencyStats.
+        assert_eq!(mix.p95(), base.latency.p95());
+        assert_eq!(mix.p99(), base.latency.p99());
+        assert_eq!(mix.offered(), base.offered);
+        assert_eq!(mix.max_littles_gap(), base.littles_law_gap());
+    }
+
+    /// S4: Little's law holds per class to round-off even with crash
+    /// churn and a heterogeneous mix.
+    #[test]
+    fn mix_littles_law_gap_stays_tiny_under_churn() {
+        let mix = FleetMix::new(vec![
+            DeviceClass { name: "fast", speed: 1.0, share: 0.75 },
+            DeviceClass { name: "slow", speed: 0.5, share: 0.25 },
+        ])
+        .unwrap();
+        let faults = FaultConfig {
+            straggle_rate_per_s: 2.0,
+            mean_straggle: Time::ms(50.0),
+            straggle_factor: 2.0,
+            ..FaultConfig::crashes(
+                5.0,
+                Outage::Fixed(Time::ms(40.0)),
+                CrashImpact::Outage,
+            )
+        };
+        let m = open_loop_mix(
+            &mix,
+            DeploymentQueues::Devices { nodes: 8 },
+            &svc(1.0, 0.2),
+            BatchPolicy::Deadline { max: 8, max_wait: Time::ms(2.0) },
+            200.0,
+            160,
+            8,
+            11,
+            &faults,
+            &Obs::disabled(),
+        )
+        .unwrap();
+        assert_eq!(m.classes.len(), 2);
+        assert!(m.fault_windows() > 0, "churn must actually happen");
+        assert!(m.downtime() > Time::ZERO);
+        assert!(m.availability() < 1.0);
+        assert!(m.mttr() > Time::ZERO);
+        assert!(
+            m.max_littles_gap() < 1e-9,
+            "worst gap {} under churn",
+            m.max_littles_gap()
+        );
+        // The slow class's representative queue is strictly slower.
+        assert!(m.classes[1].report.latency.p50() > m.classes[0].report.latency.p50());
+        // Merged quantiles are monotone and bracketed by the classes.
+        assert!(m.p50() <= m.p95() && m.p95() <= m.p99());
+        assert!(m.slo_attainment(Time::s(1e6)) > 0.999);
     }
 }
 

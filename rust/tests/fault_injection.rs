@@ -1,0 +1,277 @@
+//! Fault-injection integration: the E14 layer end-to-end through the
+//! public API.
+//!
+//! * **Zero-fault identity** — installing the empty `FaultPlan` leaves
+//!   every traffic output bit-identical to the unfaulted path.
+//! * **Crash semantics** — hand-built windows abort the in-service
+//!   batch, requeue it, bill exactly the scheduled outage as downtime
+//!   and keep Little's law exact.
+//! * **Obs reconciliation** — `fault.crash` span durations sum to the
+//!   reported downtime, and ring-buffer evictions surface in the
+//!   report (`dropped_spans`).
+//! * **Head failover** — a semi-setting failover against a live
+//!   `RoundEngine` promotes the fallback head, re-uploads the member
+//!   rows through the barrier, and bills the cost model's total.
+//! * **Per-class queues** — the 1-class fleet reproduces the PR 5
+//!   representative queue bitwise; heterogeneous fleets under churn
+//!   keep Little's law to round-off.
+//! * **E14 sweep** — replicas never go dark and `BENCH_faults.json` is
+//!   byte-identical across thread counts.
+
+use ima_gnn::coordinator::{Arrival, RoundEngine};
+use ima_gnn::cores::GnnWorkload;
+use ima_gnn::experiments::FaultSweep;
+use ima_gnn::graph::{fixed_size, generate, ShardPlan};
+use ima_gnn::netmodel::NetModel;
+use ima_gnn::obs::Obs;
+use ima_gnn::sim::{
+    head_failover, CrashImpact, FailoverCostModel, FaultConfig, FaultEvent, FaultKind,
+    FaultPlan, Outage,
+};
+use ima_gnn::testing::{assert_close, gcn_layer_binding};
+use ima_gnn::traffic::{
+    open_loop, open_loop_faulted, open_loop_mix, ArrivalProcess, BatchPolicy,
+    DeploymentQueues, DeviceClass, FleetMix, ServiceModel,
+};
+use ima_gnn::units::Time;
+
+fn service() -> ServiceModel {
+    ServiceModel::new(Time::ms(2.0), Time::us(100.0)).unwrap()
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy::Deadline { max: 16, max_wait: Time::ms(2.0) }
+}
+
+fn crash(at_ms: f64, until_ms: f64) -> FaultEvent {
+    FaultEvent {
+        at: Time::ms(at_ms),
+        until: Time::ms(until_ms),
+        kind: FaultKind::Crash { server: 0 },
+    }
+}
+
+fn poisson(rate: f64, horizon_s: f64, seed: u64) -> Vec<Arrival> {
+    ArrivalProcess::Poisson { rate }.generate(Time::s(horizon_s), 64, seed).unwrap()
+}
+
+fn two_windows() -> FaultPlan {
+    FaultPlan::from_events(vec![crash(100.0, 160.0), crash(500.0, 540.0)], 1).unwrap()
+}
+
+#[test]
+fn zero_fault_plan_is_bit_identical_to_the_unfaulted_path() {
+    let svc = service();
+    let arrivals = poisson(400.0, 0.5, 3);
+    let base = open_loop(1, &svc, policy(), &arrivals).unwrap();
+    let faulted =
+        open_loop_faulted(1, &svc, policy(), &arrivals, &FaultPlan::none(), &Obs::disabled())
+            .unwrap();
+    assert_eq!(faulted.batch_log, base.batch_log);
+    assert_eq!(faulted.makespan, base.makespan);
+    assert_eq!(faulted.sum_response, base.sum_response);
+    assert_eq!(faulted.mean_wait, base.mean_wait);
+    assert_eq!(faulted.max_queue_depth, base.max_queue_depth);
+    assert_eq!(faulted.utilization.to_bits(), base.utilization.to_bits());
+    assert_eq!(faulted.downtime, Time::ZERO);
+    assert_eq!(faulted.availability, 1.0);
+    assert_eq!(faulted.fault_windows, 0);
+    assert_eq!(faulted.dropped_spans, 0);
+}
+
+#[test]
+fn crash_windows_bill_exactly_their_scheduled_outage() {
+    let svc = service();
+    let arrivals = poisson(300.0, 1.0, 9);
+    let plan = two_windows();
+    let r = open_loop_faulted(1, &svc, policy(), &arrivals, &plan, &Obs::disabled()).unwrap();
+    // Both windows execute; downtime is exactly the planned outage.
+    assert_eq!(r.fault_windows, 2);
+    assert_eq!(r.downtime, plan.total_outage());
+    assert!((r.mttr.as_s() - 0.05).abs() < 1e-12, "mttr {}", r.mttr);
+    assert!(r.availability > 0.0 && r.availability < 1.0);
+    assert!(r.littles_law_gap() < 1e-9, "gap {}", r.littles_law_gap());
+    // 100 ms of stall against a 2 ms service must show up in the mean.
+    let base = open_loop(1, &svc, policy(), &arrivals).unwrap();
+    assert!(r.latency.mean() > base.latency.mean());
+    assert_eq!(r.offered, base.offered, "crashes must not lose requests");
+
+    // Degraded windows (replica-served, r >= 2) slow service but never
+    // go dark: zero downtime, yet strictly slower than fault-free.
+    let slow = FaultPlan::from_events(
+        vec![FaultEvent {
+            at: Time::ZERO,
+            until: Time::s(2.0),
+            kind: FaultKind::Straggle { server: 0, factor: 3.0 },
+        }],
+        1,
+    )
+    .unwrap();
+    let d = open_loop_faulted(1, &svc, policy(), &arrivals, &slow, &Obs::disabled()).unwrap();
+    assert_eq!(d.downtime, Time::ZERO);
+    assert_eq!(d.availability, 1.0);
+    assert!(d.latency.mean() > base.latency.mean());
+}
+
+#[test]
+fn fault_spans_reconcile_with_downtime_and_drops_surface() {
+    let svc = service();
+    let arrivals = poisson(300.0, 1.0, 9);
+    let plan = two_windows();
+    let obs = Obs::new(1 << 16);
+    let r = open_loop_faulted(1, &svc, policy(), &arrivals, &plan, &obs).unwrap();
+    let span_sum: Time = obs
+        .tracer
+        .spans()
+        .iter()
+        .filter(|s| s.name == "fault.crash")
+        .map(|s| s.end - s.start)
+        .sum();
+    // Same subtractions in the same (chronological) order: bit-exact.
+    assert_eq!(span_sum, r.downtime);
+    assert_eq!(obs.metrics.counter_value("fault.crashes"), 2);
+    assert_eq!(obs.tracer.dropped(), 0);
+    assert_eq!(r.dropped_spans, 0);
+
+    // A tiny ring under the same run must evict — and say so in the
+    // report instead of silently losing spans.
+    let obs2 = Obs::new(2);
+    let r2 = open_loop_faulted(1, &svc, policy(), &arrivals, &plan, &obs2).unwrap();
+    assert!(r2.dropped_spans > 0, "a 2-span ring cannot hold a full run");
+    assert_eq!(r2.dropped_spans, obs2.tracer.dropped());
+}
+
+#[test]
+fn head_failover_promotes_rebuilds_and_bills_the_cost_model() {
+    let b = gcn_layer_binding();
+    let graph = generate::regular(96, 6, 3).unwrap();
+    let clustering = fixed_size(96, 8).unwrap();
+    let plan = ShardPlan::from_clustering(&graph, &b.sampler(), b.table, &clustering).unwrap();
+    let weights = vec![0.01f32; b.feature * b.hidden];
+    let mut engine = RoundEngine::new(b.clone(), plan, weights).unwrap();
+    for node in 0..96 {
+        let feats: Vec<f32> = (0..b.feature).map(|j| (node * 31 + j) as f32).collect();
+        engine.upload(node, &feats).unwrap();
+    }
+    engine.end_round();
+    let version = engine.version();
+    let members = clustering.clusters[0].clone();
+    let mut before = Vec::new();
+    for &v in &members {
+        before.push(engine.read(v).unwrap().to_vec());
+    }
+
+    let model = NetModel::paper(&GnnWorkload::taxi()).unwrap();
+    let costs = FailoverCostModel::from_net(&model, b.feature * 4);
+    let obs = Obs::new(4096);
+    let out = head_failover(&mut engine, &clustering, 0, &costs, Time::s(1.0), &obs).unwrap();
+
+    assert_eq!(out.old_head, members[0]);
+    assert_eq!(out.new_head, members[1]);
+    assert_eq!(out.rows_reuploaded, members.len());
+    assert_eq!(out.recovered_at, Time::s(1.0) + out.cost.total());
+    assert!(out.cost.total().as_s() > 0.0);
+    // The barrier committed: a new serving version, same row contents.
+    assert_eq!(engine.version(), version + 1);
+    for (&v, old) in members.iter().zip(&before) {
+        assert_eq!(engine.read(v).unwrap(), &old[..]);
+    }
+    // Spans retell the bill: the failover window is exactly
+    // [at, recovered_at], and the rebuild phase closes the window
+    // (compare to round-off — the span end associates the cost sum
+    // differently than `RecoveryCost::total`).
+    let spans = obs.tracer.spans();
+    let fo = spans.iter().find(|s| s.name == "fault.failover").unwrap();
+    assert_eq!(fo.start, Time::s(1.0));
+    assert_eq!(fo.end, out.recovered_at);
+    let rb = spans.iter().find(|s| s.name == "fault.rebuild").unwrap();
+    assert!(rb.start >= fo.start);
+    assert_close(rb.end.as_s(), fo.end.as_s(), 1e-12);
+    assert_eq!(obs.metrics.counter_value("fault.failovers"), 1);
+
+    // A singleton cluster has no fallback head to promote.
+    let singletons = fixed_size(96, 1).unwrap();
+    assert!(head_failover(&mut engine, &singletons, 0, &costs, Time::ZERO, &obs).is_err());
+    assert!(head_failover(&mut engine, &clustering, 999, &costs, Time::ZERO, &obs).is_err());
+}
+
+#[test]
+fn one_class_fleet_reproduces_the_representative_queue_bitwise() {
+    let svc = service();
+    let queues = DeploymentQueues::ClusterHeads { clusters: 5 };
+    let m = open_loop_mix(
+        &FleetMix::homogeneous(),
+        queues,
+        &svc,
+        policy(),
+        400.0,
+        200,
+        64,
+        7,
+        &FaultConfig::none(),
+        &Obs::disabled(),
+    )
+    .unwrap();
+    let queue_rate = queues.per_queue_rate(400.0);
+    let arrivals = poisson(queue_rate, 200.0 / queue_rate, 7);
+    let base = open_loop(1, &svc, policy(), &arrivals).unwrap();
+    assert_eq!(m.classes.len(), 1);
+    assert_eq!(m.classes[0].servers, 5);
+    assert_eq!(m.classes[0].report.batch_log, base.batch_log);
+    assert_eq!(m.classes[0].report.makespan, base.makespan);
+    assert_eq!(m.classes[0].report.utilization.to_bits(), base.utilization.to_bits());
+    assert_eq!(m.p95(), base.latency.p95());
+    assert_eq!(m.p99(), base.latency.p99());
+    assert_eq!(m.max_littles_gap().to_bits(), base.littles_law_gap().to_bits());
+}
+
+#[test]
+fn heterogeneous_fleet_under_churn_keeps_littles_law() {
+    let mix = FleetMix::new(vec![
+        DeviceClass { name: "fast", speed: 1.0, share: 0.75 },
+        DeviceClass { name: "slow", speed: 0.5, share: 0.25 },
+    ])
+    .unwrap();
+    let cfg = FaultConfig::crashes(5.0, Outage::Fixed(Time::ms(40.0)), CrashImpact::Outage);
+    let m = open_loop_mix(
+        &mix,
+        DeploymentQueues::Devices { nodes: 8 },
+        &service(),
+        policy(),
+        200.0,
+        160,
+        64,
+        11,
+        &cfg,
+        &Obs::disabled(),
+    )
+    .unwrap();
+    assert!(m.fault_windows() > 0, "expected crash windows to execute");
+    assert!(m.downtime() > Time::ZERO);
+    assert!(m.availability() < 1.0);
+    assert!(m.max_littles_gap() < 1e-9, "gap {}", m.max_littles_gap());
+    assert!(m.mttr() > Time::ZERO);
+}
+
+#[test]
+fn fault_sweep_replicas_never_go_dark_and_json_is_thread_stable() {
+    let seq = FaultSweep::run_with_threads(150, 150, 1).unwrap();
+    assert_eq!(seq.rows.len(), 4);
+    for r in &seq.rows {
+        assert_eq!(r.scenarios.len(), 4);
+        for p in &r.scenario("baseline").points {
+            assert_eq!(p.fault_windows, 0);
+            assert_eq!(p.availability, 1.0);
+        }
+        for p in &r.scenario("faulted_r2").points {
+            if p.setting != "centralized" {
+                assert_eq!(p.downtime_s, 0.0, "replicas must not go dark");
+            }
+        }
+    }
+    assert!(seq.max_littles_gap() < 1e-9);
+    let json = seq.to_json();
+    assert!(json.contains("\"experiment\": \"fault_sweep\""));
+    let par2 = FaultSweep::run_with_threads(150, 150, 2).unwrap();
+    assert_eq!(json, par2.to_json());
+}
