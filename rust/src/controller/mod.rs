@@ -1,0 +1,471 @@
+//! # Closed-loop adaptive runtime controller (E15)
+//!
+//! Watches the live serving window — windowed p95 response, mean queue
+//! depth, utilization and arrival rate, all on the traffic engine's
+//! sim-time axis — and switches the deployment between a validated
+//! *capacity ladder* of operating points ([`CtrlConfig`]) mid-run.
+//!
+//! The controller is a pure decision function: [`Controller::decide`]
+//! maps an observation snapshot ([`CtrlView`]) to `Some(target)` or
+//! `None`.  The traffic engine owns the windows and executes switches
+//! (`traffic::open_loop_controlled`); this module owns the policy, so
+//! the hysteresis contract is testable without running a simulation.
+//!
+//! ## Hysteresis contract
+//!
+//! * **Warm-up** — no decision before one full window of samples.
+//! * **Min-dwell** — after a switch completes (measured from the *end*
+//!   of the paused rebuild, not its start), no further decision for
+//!   `dwell`; after a *de-escalation*, escalation is blocked for
+//!   `2·dwell`.  Together these make up/down flapping impossible.
+//! * **Dual thresholds** — escalation needs the windowed p95 *and* the
+//!   mean queue depth over threshold simultaneously (plus a busy
+//!   fleet); de-escalation needs the arrival rate comfortably under
+//!   the cheaper rung's aggregate saturation *and* a backlog that the
+//!   spare capacity can absorb within one dwell.  The up and down
+//!   conditions cannot both hold, so there is no chatter band.
+//!
+//! Every switch is honestly priced: the engine bills the target rung's
+//! ShardPlan-rebuild + FeatureStore re-upload cost (a
+//! [`crate::sim::faults::RecoveryCost`] total) as a dispatch pause
+//! through the double-buffer barrier, and emits a `ctrl.switch` span
+//! whose duration reconciles bit-exactly with the report's accrued
+//! switch downtime.
+
+use crate::autotune::OperatingPoint;
+use crate::error::{Error, Result};
+use crate::traffic::{BatchPolicy, DeploymentQueues, ServiceModel};
+use crate::units::Time;
+
+/// One rung of the controller's capacity ladder: a deployment shape,
+/// its calibrated service model, the batching policy it serves with,
+/// and the priced cost of switching *into* it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CtrlConfig {
+    /// The autotuner operating point this rung realizes (labels only;
+    /// the queueing behavior is fully captured by the fields below).
+    pub point: OperatingPoint,
+    pub queues: DeploymentQueues,
+    pub service: ServiceModel,
+    pub policy: BatchPolicy,
+    /// Priced switch-into cost: ShardPlan rebuild + FeatureStore
+    /// re-upload through the double-buffer barrier
+    /// ([`crate::sim::faults::RecoveryCost::total`]).
+    pub switch_cost: Time,
+}
+
+impl CtrlConfig {
+    /// Human-readable rung label for tables and JSON.
+    pub fn label(&self) -> String {
+        self.point.label()
+    }
+
+    /// Aggregate saturation throughput (req/s) of this rung: servers ×
+    /// per-queue saturation rate at the policy's maximum batch.
+    pub fn saturation_aggregate(&self) -> f64 {
+        self.queues.servers() as f64 * self.service.saturation_rate(self.policy.max_batch())
+    }
+}
+
+/// Dual-threshold hysteresis parameters.  See the module docs for the
+/// no-flap argument.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hysteresis {
+    /// Observation window width; also the warm-up horizon before the
+    /// first decision.
+    pub window: Time,
+    /// Minimum dwell after a switch completes before the next decision.
+    pub dwell: Time,
+    /// Escalate only while the windowed p95 response exceeds this.
+    pub p95_hi: Time,
+    /// Escalate only while the windowed mean total queue depth is at
+    /// least this many requests.
+    pub depth_hi: f64,
+    /// Escalate only with at least this many response samples in the
+    /// window (a thin window is noise, not load).
+    pub min_samples: usize,
+    /// De-escalate to rung `j` only while the windowed arrival rate is
+    /// below `down_fraction × saturation_aggregate(j)`.
+    pub down_fraction: f64,
+    /// Escalate only while windowed utilization is at least this (an
+    /// idle fleet with a stale p95 tail is not overload).
+    pub util_hi: f64,
+}
+
+impl Hysteresis {
+    pub fn validate(&self) -> Result<()> {
+        if !(self.window.as_s() > 0.0) || !self.window.as_s().is_finite() {
+            return Err(Error::Sim("hysteresis window must be finite and > 0".into()));
+        }
+        if !(self.dwell.as_s() > 0.0) || !self.dwell.as_s().is_finite() {
+            return Err(Error::Sim("hysteresis dwell must be finite and > 0".into()));
+        }
+        if !(self.p95_hi.as_s() > 0.0) {
+            return Err(Error::Sim("hysteresis p95 threshold must be > 0".into()));
+        }
+        if !(self.depth_hi > 0.0) {
+            return Err(Error::Sim("hysteresis depth threshold must be > 0".into()));
+        }
+        if self.min_samples == 0 {
+            return Err(Error::Sim("hysteresis needs min_samples >= 1".into()));
+        }
+        if !(0.0..=1.0).contains(&self.down_fraction) {
+            return Err(Error::Sim("hysteresis down_fraction must be in [0, 1]".into()));
+        }
+        if !(0.0..=1.0).contains(&self.util_hi) {
+            return Err(Error::Sim("hysteresis util_hi must be in [0, 1]".into()));
+        }
+        Ok(())
+    }
+
+    /// A hysteresis that can never fire: infinite escalation
+    /// thresholds and a zero de-escalation fraction.  A controller
+    /// built with this must be bit-identical to the static run of its
+    /// initial rung (property-tested in `tests/controller.rs`).
+    pub fn never(window: Time, dwell: Time) -> Hysteresis {
+        Hysteresis {
+            window,
+            dwell,
+            p95_hi: Time::s(f64::INFINITY),
+            depth_hi: f64::INFINITY,
+            min_samples: 8,
+            down_fraction: 0.0,
+            util_hi: 0.5,
+        }
+    }
+}
+
+/// Observation snapshot handed to [`Controller::decide`] by the
+/// traffic engine after each completed batch.  All times are sim time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CtrlView {
+    pub now: Time,
+    /// Index of the currently active rung.
+    pub current: usize,
+    /// Windowed p95 of response times (arrival → batch completion).
+    pub windowed_p95: Time,
+    /// Response samples currently in the window.
+    pub resp_samples: usize,
+    /// Windowed mean of total pending depth sampled at completions.
+    pub mean_depth: f64,
+    /// Windowed mean busy fraction of the active fleet.
+    pub utilization: f64,
+    /// Windowed arrival rate (arrivals in window / window width).
+    pub arrival_rate_per_s: f64,
+    /// Total requests pending across all active queues right now.
+    pub total_pending: usize,
+    /// End of the most recent switch pause, if any switch happened.
+    pub last_switch_resume: Option<Time>,
+    /// End of the most recent *de-escalation* pause, if any.
+    pub last_down_resume: Option<Time>,
+}
+
+/// A deterministic closed-loop controller over a capacity ladder.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    configs: Vec<CtrlConfig>,
+    initial: usize,
+    hysteresis: Hysteresis,
+}
+
+impl Controller {
+    /// Build a controller over `configs` ordered cheapest-first (the
+    /// capacity ladder).  Escalation moves one rung up; de-escalation
+    /// may drop several rungs at once to the cheapest rung that can
+    /// absorb the observed rate plus backlog.
+    pub fn new(
+        configs: Vec<CtrlConfig>,
+        initial: usize,
+        hysteresis: Hysteresis,
+    ) -> Result<Controller> {
+        if configs.is_empty() {
+            return Err(Error::Sim("controller needs at least one config".into()));
+        }
+        if initial >= configs.len() {
+            return Err(Error::Sim(format!(
+                "controller initial rung {initial} out of range (ladder has {})",
+                configs.len()
+            )));
+        }
+        hysteresis.validate()?;
+        for (i, c) in configs.iter().enumerate() {
+            if c.queues.servers() == 0 {
+                return Err(Error::Sim(format!("controller rung {i} has no servers")));
+            }
+            if !(c.switch_cost.as_s() >= 0.0) || !c.switch_cost.as_s().is_finite() {
+                return Err(Error::Sim(format!(
+                    "controller rung {i} switch cost must be finite and >= 0"
+                )));
+            }
+            if !(c.saturation_aggregate() > 0.0) {
+                return Err(Error::Sim(format!(
+                    "controller rung {i} has non-positive saturation throughput"
+                )));
+            }
+        }
+        for w in configs.windows(2) {
+            if w[1].saturation_aggregate() <= w[0].saturation_aggregate() {
+                return Err(Error::Sim(
+                    "controller ladder must be ordered by strictly increasing \
+                     aggregate saturation throughput"
+                        .into(),
+                ));
+            }
+        }
+        Ok(Controller { configs, initial, hysteresis })
+    }
+
+    pub fn configs(&self) -> &[CtrlConfig] {
+        &self.configs
+    }
+
+    pub fn initial(&self) -> usize {
+        self.initial
+    }
+
+    pub fn hysteresis(&self) -> &Hysteresis {
+        &self.hysteresis
+    }
+
+    /// The pure decision function: `Some(target)` to switch, `None` to
+    /// stay.  Deterministic in the view; holds the hysteresis contract
+    /// documented on the module.
+    pub fn decide(&self, v: &CtrlView) -> Option<usize> {
+        let h = &self.hysteresis;
+        // Warm-up: never act on a partial first window.
+        if v.now < h.window {
+            return None;
+        }
+        // Min-dwell, measured from the end of the switch pause.
+        if let Some(resume) = v.last_switch_resume {
+            if v.now < resume + h.dwell {
+                return None;
+            }
+        }
+        // Escalate one rung when the window shows sustained overload.
+        let up_blocked = match v.last_down_resume {
+            Some(resume) => v.now < resume + h.dwell * 2.0,
+            None => false,
+        };
+        if v.current + 1 < self.configs.len()
+            && !up_blocked
+            && v.resp_samples >= h.min_samples
+            && v.windowed_p95 > h.p95_hi
+            && v.mean_depth >= h.depth_hi
+            && v.utilization >= h.util_hi
+        {
+            return Some(v.current + 1);
+        }
+        // De-escalate to the cheapest rung whose spare capacity covers
+        // the observed rate and can absorb the backlog within a dwell.
+        for j in 0..v.current {
+            let sat_j = self.configs[j].saturation_aggregate();
+            let headroom = sat_j - v.arrival_rate_per_s;
+            if v.arrival_rate_per_s < h.down_fraction * sat_j
+                && v.total_pending as f64 <= headroom * h.dwell.as_s()
+            {
+                return Some(j);
+            }
+        }
+        None
+    }
+}
+
+/// One executed switch, as recorded by the traffic engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchRecord {
+    /// Sim time the switch started (dispatch pause begins).
+    pub at: Time,
+    pub from: usize,
+    pub to: usize,
+    /// Priced pause: the target rung's `switch_cost`.
+    pub cost: Time,
+    /// Pending requests migrated across the double-buffer barrier.
+    pub moved: usize,
+}
+
+/// A [`crate::traffic::TrafficReport`] plus the controller's ledger.
+#[derive(Debug, Clone)]
+pub struct ControlledReport {
+    pub report: crate::traffic::TrafficReport,
+    pub switches: Vec<SwitchRecord>,
+    /// Total paused time across all switches.  Accumulated as
+    /// `resume − start` — the identical f64 expression as the
+    /// `ctrl.switch` span durations, so the two reconcile bit-exactly.
+    pub switch_downtime: Time,
+    /// Requests touched by switches: migrated pending requests plus
+    /// arrivals landing during a pause.
+    pub switch_affected: usize,
+    /// Rung active when the run drained.
+    pub final_config: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::Partitioner;
+
+    fn rung(servers: usize, per_batch: f64, per_req: f64, cost: f64) -> CtrlConfig {
+        let queues = if servers == 1 {
+            DeploymentQueues::Leader
+        } else {
+            DeploymentQueues::ClusterHeads { clusters: servers }
+        };
+        CtrlConfig {
+            point: if servers == 1 {
+                OperatingPoint::centralized()
+            } else {
+                OperatingPoint::semi(10, 2.0, Partitioner::FixedSize)
+            },
+            queues,
+            service: ServiceModel::new(Time::s(per_batch), Time::s(per_req)).unwrap(),
+            policy: BatchPolicy::Deadline {
+                max: 16,
+                max_wait: Time::s(0.25 * (per_batch + per_req)),
+            },
+            switch_cost: Time::s(cost),
+        }
+    }
+
+    fn ladder() -> Vec<CtrlConfig> {
+        vec![rung(1, 1.0, 1e-4, 0.5), rung(15, 4.0, 1e-4, 2.0)]
+    }
+
+    fn hyst() -> Hysteresis {
+        Hysteresis {
+            window: Time::s(10.0),
+            dwell: Time::s(30.0),
+            p95_hi: Time::s(3.0),
+            depth_hi: 32.0,
+            min_samples: 8,
+            down_fraction: 0.7,
+            util_hi: 0.5,
+        }
+    }
+
+    fn overloaded(now: f64) -> CtrlView {
+        CtrlView {
+            now: Time::s(now),
+            current: 0,
+            windowed_p95: Time::s(9.0),
+            resp_samples: 40,
+            mean_depth: 80.0,
+            utilization: 1.0,
+            arrival_rate_per_s: 14.0,
+            total_pending: 90,
+            last_switch_resume: None,
+            last_down_resume: None,
+        }
+    }
+
+    #[test]
+    fn escalates_only_when_all_thresholds_hold() {
+        let c = Controller::new(ladder(), 0, hyst()).unwrap();
+        assert_eq!(c.decide(&overloaded(50.0)), Some(1));
+        // Each threshold individually gates the decision.
+        let mut v = overloaded(50.0);
+        v.windowed_p95 = Time::s(2.0);
+        assert_eq!(c.decide(&v), None);
+        let mut v = overloaded(50.0);
+        v.mean_depth = 10.0;
+        assert_eq!(c.decide(&v), None);
+        let mut v = overloaded(50.0);
+        v.resp_samples = 7;
+        assert_eq!(c.decide(&v), None);
+        let mut v = overloaded(50.0);
+        v.utilization = 0.2;
+        assert_eq!(c.decide(&v), None);
+        // Top of the ladder never escalates.
+        let mut v = overloaded(50.0);
+        v.current = 1;
+        assert_eq!(c.decide(&v), None);
+    }
+
+    #[test]
+    fn warmup_and_dwell_block_decisions() {
+        let c = Controller::new(ladder(), 0, hyst()).unwrap();
+        // Inside the first window: no decision regardless of load.
+        assert_eq!(c.decide(&overloaded(5.0)), None);
+        // Dwell counts from the pause *end*.
+        let mut v = overloaded(100.0);
+        v.last_switch_resume = Some(Time::s(80.0));
+        assert_eq!(c.decide(&v), None, "80 + 30 dwell > 100");
+        v.now = Time::s(111.0);
+        assert_eq!(c.decide(&v), Some(1));
+        // A recent de-escalation blocks re-escalation for 2*dwell.
+        let mut v = overloaded(150.0);
+        v.last_down_resume = Some(Time::s(100.0));
+        assert_eq!(c.decide(&v), None, "100 + 60 > 150");
+        v.now = Time::s(161.0);
+        assert_eq!(c.decide(&v), Some(1));
+    }
+
+    #[test]
+    fn deescalates_to_cheapest_feasible_rung() {
+        let three = vec![
+            rung(1, 1.0, 1e-4, 0.5),
+            rung(15, 4.0, 1e-4, 2.0),
+            rung(150, 8.0, 1.0, 1.0),
+        ];
+        let c = Controller::new(three, 0, hyst()).unwrap();
+        let sat0 = c.configs()[0].saturation_aggregate();
+        let quiet = CtrlView {
+            now: Time::s(200.0),
+            current: 2,
+            windowed_p95: Time::s(0.5),
+            resp_samples: 20,
+            mean_depth: 1.0,
+            utilization: 0.1,
+            arrival_rate_per_s: 0.1 * sat0,
+            total_pending: 3,
+            last_switch_resume: None,
+            last_down_resume: None,
+        };
+        // Rate fits rung 0 with room to drain the backlog: multi-hop
+        // drop straight to the cheapest rung.
+        assert_eq!(c.decide(&quiet), Some(0));
+        // A backlog too deep for rung 0's headroom falls through to
+        // rung 1.
+        let mut v = quiet;
+        let headroom0 = sat0 - v.arrival_rate_per_s;
+        v.total_pending = (headroom0 * 30.0) as usize + 10;
+        assert_eq!(c.decide(&v), Some(1));
+        // Rate above the down fraction of every cheaper rung: stay.
+        let mut v = quiet;
+        v.arrival_rate_per_s = 0.95 * c.configs()[1].saturation_aggregate();
+        assert_eq!(c.decide(&v), None);
+    }
+
+    #[test]
+    fn never_hysteresis_never_fires() {
+        let c = Controller::new(ladder(), 0, Hysteresis::never(Time::s(10.0), Time::s(30.0)))
+            .unwrap();
+        assert_eq!(c.decide(&overloaded(1e6)), None);
+        let mut v = overloaded(1e6);
+        v.current = 1;
+        v.arrival_rate_per_s = 0.0;
+        v.total_pending = 0;
+        assert_eq!(c.decide(&v), None, "down_fraction 0 blocks de-escalation");
+    }
+
+    #[test]
+    fn constructor_rejects_malformed_ladders() {
+        assert!(Controller::new(vec![], 0, hyst()).is_err());
+        assert!(Controller::new(ladder(), 2, hyst()).is_err());
+        // Not strictly increasing in aggregate saturation.
+        let mut cfgs = ladder();
+        cfgs.reverse();
+        assert!(Controller::new(cfgs, 0, hyst()).is_err());
+        // Bad hysteresis.
+        let mut h = hyst();
+        h.dwell = Time::ZERO;
+        assert!(Controller::new(ladder(), 0, h).is_err());
+        let mut h = hyst();
+        h.down_fraction = 1.5;
+        assert!(Controller::new(ladder(), 0, h).is_err());
+        // Negative switch cost.
+        let mut cfgs = ladder();
+        cfgs[1].switch_cost = Time::s(-1.0);
+        assert!(Controller::new(cfgs, 0, hyst()).is_err());
+    }
+}

@@ -59,6 +59,16 @@ pub fn generate_trace(cfg: &TraceConfig) -> Result<Vec<Arrival>> {
 }
 
 /// Latency distribution summary.
+///
+/// Empty-sample convention (ISSUE 8 bugfix): [`LatencyStats::from_samples`]
+/// rejects an empty batch with a typed error — that is the one
+/// fallible step.  Every accessor is nevertheless total and panic-free
+/// on an empty sample set, returning the *vacuous* sentinel: quantiles,
+/// `max` and `mean` are [`Time::ZERO`] and `fraction_within` is `1.0`
+/// ("all zero of the samples met the SLO"), never NaN.  Previously
+/// `quantile` underflowed `len()-1`, `max` unwrapped, and
+/// `fraction_within` returned `0/0 = NaN` — which must never reach a
+/// report field a controller thresholds on.
 #[derive(Debug, Clone)]
 pub struct LatencyStats {
     sorted: Vec<Time>,
@@ -96,9 +106,16 @@ impl LatencyStats {
     /// ([`LatencyStats::fraction_within`] — exact at any n) alongside
     /// quantiles.
     pub fn quantile(&self, q: f64) -> Time {
+        let Some(&last) = self.sorted.last() else {
+            return Time::ZERO;
+        };
         let q = q.clamp(0.0, 1.0);
         let idx = ((self.sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
-        self.sorted[idx.min(self.sorted.len() - 1)]
+        if idx + 1 >= self.sorted.len() {
+            last
+        } else {
+            self.sorted[idx]
+        }
     }
 
     /// Whether `quantile(q)` ranks a genuine tail order statistic
@@ -128,17 +145,26 @@ impl LatencyStats {
         self.quantile(0.99)
     }
 
+    /// Largest sample ([`Time::ZERO`] when empty — vacuous sentinel).
     pub fn max(&self) -> Time {
-        *self.sorted.last().unwrap()
+        self.sorted.last().copied().unwrap_or(Time::ZERO)
     }
 
     /// Fraction of samples at or under `limit` (SLO attainment).
+    /// Vacuously `1.0` when empty — never `0/0 = NaN`.
     pub fn fraction_within(&self, limit: Time) -> f64 {
+        if self.sorted.is_empty() {
+            return 1.0;
+        }
         let within = self.sorted.partition_point(|&t| t <= limit);
         within as f64 / self.sorted.len() as f64
     }
 
+    /// Mean sample ([`Time::ZERO`] when empty — vacuous sentinel).
     pub fn mean(&self) -> Time {
+        if self.sorted.is_empty() {
+            return Time::ZERO;
+        }
         self.sorted.iter().copied().sum::<Time>() * (1.0 / self.sorted.len() as f64)
     }
 }
@@ -272,6 +298,29 @@ mod tests {
         assert!(s.resolves(0.99));
         assert!(s.resolves(0.5));
         assert_eq!(s.samples().len(), 100);
+    }
+
+    /// Regression (ISSUE 8): the empty-sample paths used to panic
+    /// (`quantile` indexed past a `len()-1` underflow, `max` unwrapped
+    /// a `None`) or poison downstream math (`fraction_within` returned
+    /// `0/0 = NaN`).  One convention now: the constructor is the typed
+    /// error; accessors are total with vacuous sentinels.
+    #[test]
+    fn stats_empty_sample_paths_are_total_and_nan_free() {
+        // The public constructor still refuses empty input…
+        assert!(LatencyStats::from_samples(vec![]).is_err());
+        // …but the accessors themselves must be panic- and NaN-free
+        // (same-module construction bypasses the constructor guard).
+        let empty = LatencyStats { sorted: vec![] };
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.quantile(0.5), Time::ZERO);
+        assert_eq!(empty.p99(), Time::ZERO);
+        assert_eq!(empty.max(), Time::ZERO);
+        assert_eq!(empty.mean(), Time::ZERO);
+        let f = empty.fraction_within(Time::ms(1.0));
+        assert!(f.is_finite(), "attainment must never be NaN");
+        assert_eq!(f, 1.0);
+        assert!(!empty.resolves(0.5));
     }
 
     /// Tiny degraded-window samples (n < 100): nearest rank saturates

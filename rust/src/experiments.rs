@@ -7,7 +7,8 @@ use crate::autotune::{
     Autotuner, EvaluatedPoint, OperatingPoint, Partitioner, Score, SettingKind, TuneGrid,
     TunerConfig,
 };
-use crate::coordinator::{LatencyProvider, RoundEngine};
+use crate::controller::{Controller, CtrlConfig, Hysteresis, SwitchRecord};
+use crate::coordinator::{Arrival, LatencyProvider, RoundEngine};
 use crate::cores::GnnWorkload;
 use crate::error::Result;
 use crate::graph::{datasets, fixed_size, generate, Csr, DatasetStats, ShardPlan};
@@ -16,13 +17,16 @@ use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
 use crate::obs::{MetricsRegistry, Obs};
 use crate::par;
 use crate::report::{pct, speedup, BarSeries, Table};
-use crate::sim::{CrashImpact, FailoverCostModel, FaultConfig, Outage};
+use crate::sim::{
+    CrashImpact, FailoverCostModel, FaultConfig, FaultEvent, FaultKind, FaultPlan, Outage,
+};
 use crate::testing::{gcn_layer_binding, Rng};
 use crate::traffic::{
-    deployment_shape, open_loop, open_loop_mix, ArrivalProcess, BatchPolicy, DeviceClass,
-    FleetMix,
+    deployment_shape, open_loop, open_loop_controlled, open_loop_faulted, open_loop_mix,
+    ArrivalProcess, BatchPolicy, DeviceClass, FleetMix, TrafficReport,
 };
 use crate::units::Time;
+use crate::workload::DiurnalCurve;
 
 /// Paper values of Table 1 (for side-by-side reporting).
 pub mod paper {
@@ -1941,6 +1945,695 @@ impl FaultSweep {
     }
 }
 
+/// E15 controller batch cap — smaller than E13's 64 so the windowed
+/// stats see fresh completions instead of deep batch pipelines.
+pub const CTRL_MAX_BATCH: usize = 16;
+/// Diurnal day: mean offered rate relative to leader saturation.
+pub const CTRL_DIURNAL_REL: f64 = 0.8;
+/// Diurnal relative swing (peak = mean · (1 + swing)).
+pub const CTRL_DIURNAL_SWING: f64 = 0.8;
+/// Flash-crowd background rate relative to leader saturation.
+pub const CTRL_FLASH_REL: f64 = 0.6;
+/// Flash-crowd rate multiplier during the spike window.
+pub const CTRL_FLASH_BOOST: f64 = 5.0;
+/// Flash spike start / width as fractions of the horizon.
+pub const CTRL_FLASH_AT: f64 = 0.4;
+pub const CTRL_FLASH_WIDTH: f64 = 0.2;
+/// Link-degradation factor / window of the faulted E15 scenario (the
+/// only fault kind that composes with a deployment switch).
+pub const CTRL_LINK_FACTOR: f64 = 2.0;
+pub const CTRL_LINK_FROM: f64 = 0.55;
+pub const CTRL_LINK_UNTIL: f64 = 0.70;
+/// A rung joins the capacity ladder only with at least this much
+/// aggregate saturation throughput over the rung below, so every
+/// escalation buys real capacity.
+pub const CTRL_LADDER_GAIN: f64 = 1.5;
+/// E15 scenario grid (each runs the adaptive controller against every
+/// static rung on the *same* arrival draw — common random numbers).
+pub const CTRL_SCENARIOS: [&str; 3] = ["diurnal", "flash", "linkfault"];
+
+/// Response statistics of one E15 run (adaptive or static), all against
+/// the row's serving SLO.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CtrlRunStat {
+    pub p95_s: f64,
+    pub mean_s: f64,
+    pub slo_attainment: f64,
+    pub utilization: f64,
+    pub littles_gap: f64,
+}
+
+fn ctrl_stat(r: &TrafficReport, slo: Time) -> CtrlRunStat {
+    CtrlRunStat {
+        p95_s: r.latency.p95().as_s(),
+        mean_s: r.latency.mean().as_s(),
+        slo_attainment: r.slo_attainment(slo),
+        utilization: r.utilization,
+        littles_gap: r.littles_law_gap(),
+    }
+}
+
+/// The E15 capacity ladder and derived control constants of one
+/// dataset — shared by the sweep, the `ima-gnn control` single-run
+/// mode and the integration tests, so they all switch over the exact
+/// same rungs and thresholds.
+#[derive(Debug, Clone)]
+pub struct ControlSetup {
+    /// Cheapest-first, [`CTRL_LADDER_GAIN`]-gated deployment rungs.
+    pub ladder: Vec<CtrlConfig>,
+    /// The serving SLO (docs on [`ControllerRow::slo_s`]).
+    pub slo: Time,
+    /// Escalation queue-depth threshold.
+    pub depth_hi: f64,
+    /// Leader-rung aggregate saturation — the rate anchor.
+    pub sat_rate_per_s: f64,
+    pub sample_nodes: usize,
+    pub cluster_size: usize,
+}
+
+/// Build the [`ControlSetup`] for `d` at sample cap `cap`: shape the
+/// three deployment settings at sample scale, gate them into a
+/// capacity ladder, and price each rung's switch-in bill with
+/// [`FailoverCostModel::from_net`] (ShardPlan rebuild + FeatureStore
+/// re-upload through the double-buffer barrier).
+pub fn control_setup(d: &DatasetStats, cap: usize) -> Result<ControlSetup> {
+    let model = NetModel::fig8(d)?;
+    let sample = d.materialize(cap, 42)?;
+    let n = sample.num_nodes();
+    let cs = d.avg_cs.clamp(1, n);
+    let clustering = fixed_size(n, cs)?;
+    let intra = clustering.intra_edge_fraction(&sample);
+    let clustered = LatencyProvider::Clustered { intra_fraction: intra };
+    // Sample-scale topology: every rung serves the *same* request
+    // stream, so the devices rung must be one queue per sampled
+    // device, not per full-fleet device.
+    let topo = Topology { nodes: n, cluster_size: cs };
+
+    let costs = FailoverCostModel::from_net(&model, FAULT_ROW_BYTES);
+    let mut ladder: Vec<CtrlConfig> = Vec::new();
+    for kind in [SettingKind::Centralized, SettingKind::Semi, SettingKind::Decentralized] {
+        let (queues, service) = deployment_shape(kind, clustered, &model, topo)?;
+        let policy = BatchPolicy::Deadline {
+            max: CTRL_MAX_BATCH,
+            max_wait: service.service(1) * 0.25,
+        };
+        let (point, switch_cost) = match kind {
+            SettingKind::Centralized => {
+                (OperatingPoint::centralized(), costs.centralized(n).total())
+            }
+            SettingKind::Semi => (
+                OperatingPoint::semi(cs, 1.0, Partitioner::FixedSize),
+                costs.semi(cs).total(),
+            ),
+            SettingKind::Decentralized => (
+                OperatingPoint::decentralized(cs, Partitioner::FixedSize),
+                costs.decentralized().total(),
+            ),
+        };
+        let cfg = CtrlConfig { point, queues, service, policy, switch_cost };
+        let admit = match ladder.last() {
+            None => true,
+            Some(prev) => {
+                cfg.saturation_aggregate() >= CTRL_LADDER_GAIN * prev.saturation_aggregate()
+            }
+        };
+        if admit {
+            ladder.push(cfg);
+        }
+    }
+    let sat_c = ladder[0].saturation_aggregate();
+    let s_c1 = ladder[0].service.service(1).as_s();
+    let s_next1 = match ladder.get(1) {
+        Some(c) => c.service.service(1).as_s(),
+        None => s_c1 * 4.0,
+    };
+    // Geometric blend between the leader's and the next rung's
+    // single-request service: the unloaded leader meets it, every
+    // capacity rung misses it on latency alone — which is what makes
+    // staying cheap worth it when the day is quiet.
+    let slo = Time::s(s_c1 * (s_next1 / s_c1).powf(0.75));
+    let depth_hi = ((slo.as_s() / s_c1 - 1.0) * CTRL_MAX_BATCH as f64).ceil().max(32.0);
+    Ok(ControlSetup {
+        ladder,
+        slo,
+        depth_hi,
+        sat_rate_per_s: sat_c,
+        sample_nodes: n,
+        cluster_size: cs,
+    })
+}
+
+/// One E15 cell (dataset × scenario), prepared for execution: the CRN
+/// arrival stream every run of the cell replays, the controller, and
+/// the fault plan (only [`FaultKind::LinkDegrade`] — the one fault
+/// kind whose semantics survive a deployment switch).
+pub struct ControlCell {
+    pub arrivals: Vec<Arrival>,
+    pub controller: Controller,
+    pub plan: FaultPlan,
+    pub horizon: Time,
+    pub window: Time,
+    pub dwell: Time,
+}
+
+/// Build one E15 cell.  `scenario` is one of [`CTRL_SCENARIOS`];
+/// `nodes` is the *full-scale* fleet the arrival node ids draw from.
+pub fn control_cell(
+    setup: &ControlSetup,
+    scenario: &str,
+    nodes: usize,
+    requests: usize,
+    seed: u64,
+) -> Result<ControlCell> {
+    let sat_c = setup.sat_rate_per_s;
+    let base = match scenario {
+        "flash" => CTRL_FLASH_REL * sat_c,
+        "diurnal" | "linkfault" => CTRL_DIURNAL_REL * sat_c,
+        other => {
+            return Err(crate::error::Error::Sim(format!("unknown E15 scenario `{other}`")))
+        }
+    };
+    let horizon = Time::s(requests as f64 / base);
+    let process = match scenario {
+        "flash" => ArrivalProcess::FlashCrowd {
+            base,
+            boost: CTRL_FLASH_BOOST,
+            at: horizon * CTRL_FLASH_AT,
+            width: horizon * CTRL_FLASH_WIDTH,
+        },
+        _ => ArrivalProcess::Diurnal(DiurnalCurve::new(base, CTRL_DIURNAL_SWING, horizon)?),
+    };
+    let arrivals = process.generate(horizon, nodes, seed)?;
+    let window = Time::s(horizon.as_s() / 48.0);
+    let dwell = Time::s(horizon.as_s() / 16.0);
+    let hyst = Hysteresis {
+        window,
+        dwell,
+        p95_hi: setup.slo,
+        depth_hi: setup.depth_hi,
+        min_samples: 8,
+        down_fraction: 0.7,
+        util_hi: 0.5,
+    };
+    let controller = Controller::new(setup.ladder.clone(), 0, hyst)?;
+    let plan = if scenario == "linkfault" {
+        let max_servers = setup.ladder.iter().map(|c| c.queues.servers()).max().unwrap_or(1);
+        FaultPlan::from_events(
+            vec![FaultEvent {
+                at: horizon * CTRL_LINK_FROM,
+                until: horizon * CTRL_LINK_UNTIL,
+                kind: FaultKind::LinkDegrade { factor: CTRL_LINK_FACTOR },
+            }],
+            max_servers,
+        )?
+    } else {
+        FaultPlan::none()
+    };
+    Ok(ControlCell { arrivals, controller, plan, horizon, window, dwell })
+}
+
+/// One rung of a row's capacity ladder, as serialized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtrlRungInfo {
+    pub label: String,
+    pub servers: usize,
+    /// Aggregate saturation throughput (req/s).
+    pub sat_per_s: f64,
+    /// Priced cost of switching *into* this rung (ShardPlan rebuild +
+    /// FeatureStore re-upload through the double-buffer barrier).
+    pub switch_cost_s: f64,
+}
+
+/// One scenario of one dataset: the adaptive run vs every static rung
+/// on the same arrivals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtrlScenarioRow {
+    pub scenario: &'static str,
+    pub horizon_s: f64,
+    pub window_s: f64,
+    pub dwell_s: f64,
+    /// Requests offered (identical for adaptive and statics — CRN).
+    pub offered: usize,
+    pub adaptive: CtrlRunStat,
+    /// Parallel to the row's ladder.
+    pub statics: Vec<CtrlRunStat>,
+    pub switches: Vec<SwitchRecord>,
+    pub switch_downtime_s: f64,
+    pub switch_affected: usize,
+    pub final_config: usize,
+    /// Consecutive switches respected `resume + dwell` (no flapping).
+    pub dwell_ok: bool,
+}
+
+/// One dataset row of the E15 sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerRow {
+    pub dataset: String,
+    /// Full-scale fleet (arrival node ids draw from this range).
+    pub nodes: usize,
+    /// Capped sample the ladder's queues are shaped at.
+    pub sample_nodes: usize,
+    pub cluster_size: usize,
+    /// Leader-rung aggregate saturation — the rate anchor.
+    pub sat_rate_per_s: f64,
+    /// The serving SLO: geometric blend of the leader's and the next
+    /// rung's single-request service, so the unloaded leader meets it
+    /// while every capacity rung misses it on latency alone.
+    pub slo_s: f64,
+    pub ladder: Vec<CtrlRungInfo>,
+    pub scenarios: Vec<CtrlScenarioRow>,
+}
+
+impl ControllerRow {
+    pub fn scenario(&self, name: &str) -> &CtrlScenarioRow {
+        self.scenarios
+            .iter()
+            .find(|s| s.scenario == name)
+            .expect("sweep emits every scenario")
+    }
+}
+
+/// The E15 headline (asserted in tests, reported in the JSON summary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerHeadline {
+    /// Datasets where the adaptive controller's full-day attainment
+    /// (summed over scenarios) is at least every static rung's.
+    pub adaptive_win_datasets: usize,
+    /// Every cell: adaptive attainment ≥ best static − the priced
+    /// switch overhead (`switch_affected / offered`).
+    pub bound_ok: bool,
+    /// Every adaptive run respected the min-dwell between switches.
+    pub dwell_ok: bool,
+    pub total_switches: usize,
+    /// Worst per-cell attainment deficit vs the best static.
+    pub worst_regret: f64,
+    /// Largest per-cell switch overhead (the bound's allowance).
+    pub max_switch_overhead: f64,
+    pub mean_adaptive_slo: f64,
+    pub mean_best_static_slo: f64,
+}
+
+/// E15 — closed-loop adaptive runtime control over the E13 traffic
+/// engine: per dataset, a capacity ladder of deployment shapes
+/// (leader → cluster heads → devices, [`CTRL_LADDER_GAIN`]-gated) is
+/// driven through a diurnal day, a flash crowd and a link-degraded day
+/// ([`CTRL_SCENARIOS`]).  The [`Controller`] watches windowed p95 /
+/// depth / utilization on the sim-time axis and switches rungs through
+/// a priced graceful-drain pause ([`FailoverCostModel`] bill); every
+/// static rung replays the identical arrivals (common random numbers),
+/// so the adaptive-vs-static deltas are attributable to control alone.
+/// Emits `BENCH_controller.json`; rows run via `par::par_try_map` and
+/// the artifact is byte-identical across thread counts.
+pub struct ControllerSweep {
+    pub rows: Vec<ControllerRow>,
+    pub materialize_cap: usize,
+    pub requests: usize,
+}
+
+impl ControllerSweep {
+    pub fn run(materialize_cap: usize, requests: usize) -> Result<ControllerSweep> {
+        ControllerSweep::run_with_threads(materialize_cap, requests, par::available_threads())
+    }
+
+    /// [`Self::run`] with an explicit worker count (1 = sequential).
+    pub fn run_with_threads(
+        materialize_cap: usize,
+        requests: usize,
+        threads: usize,
+    ) -> Result<ControllerSweep> {
+        if requests == 0 {
+            return Err(crate::error::Error::Sim("controller sweep needs requests > 0".into()));
+        }
+        let all = datasets::all();
+        let targets: Vec<(usize, DatasetStats)> = all.into_iter().enumerate().collect();
+        let rows = par::par_try_map(&targets, threads, |(di, d)| {
+            ControllerSweep::row(*di, d, materialize_cap, requests)
+        })?;
+        Ok(ControllerSweep { rows, materialize_cap, requests })
+    }
+
+    fn row(di: usize, d: &DatasetStats, cap: usize, requests: usize) -> Result<ControllerRow> {
+        let setup = control_setup(d, cap)?;
+        let slo = setup.slo;
+        let mut scenarios = Vec::with_capacity(CTRL_SCENARIOS.len());
+        for (sc, &name) in CTRL_SCENARIOS.iter().enumerate() {
+            let seed = 0xE15_000 + (di as u64) * 64 + (sc as u64) * 8;
+            let cell = control_cell(&setup, name, d.nodes, requests, seed)?;
+            let obs = Obs::disabled();
+            let cr = open_loop_controlled(&cell.controller, &cell.arrivals, &cell.plan, &obs)?;
+            let adaptive = ctrl_stat(&cr.report, slo);
+            // Every static rung replays the same arrivals and the same
+            // fault plan (common random numbers) — the only thing that
+            // differs from the adaptive run is the fixed shape.
+            let mut statics = Vec::with_capacity(setup.ladder.len());
+            for cfg in &setup.ladder {
+                let r = open_loop_faulted(
+                    cfg.queues.servers(),
+                    &cfg.service,
+                    cfg.policy,
+                    &cell.arrivals,
+                    &cell.plan,
+                    &obs,
+                )?;
+                statics.push(ctrl_stat(&r, slo));
+            }
+            let mut dwell_ok = true;
+            for w in cr.switches.windows(2) {
+                let resume = w[0].at + w[0].cost;
+                if w[1].at.as_s() + 1e-12 < (resume + cell.dwell).as_s() {
+                    dwell_ok = false;
+                }
+            }
+            scenarios.push(CtrlScenarioRow {
+                scenario: name,
+                horizon_s: cell.horizon.as_s(),
+                window_s: cell.window.as_s(),
+                dwell_s: cell.dwell.as_s(),
+                offered: cr.report.offered,
+                adaptive,
+                statics,
+                switches: cr.switches,
+                switch_downtime_s: cr.switch_downtime.as_s(),
+                switch_affected: cr.switch_affected,
+                final_config: cr.final_config,
+                dwell_ok,
+            });
+        }
+        let ladder_info = setup
+            .ladder
+            .iter()
+            .map(|c| CtrlRungInfo {
+                label: c.label(),
+                servers: c.queues.servers(),
+                sat_per_s: c.saturation_aggregate(),
+                switch_cost_s: c.switch_cost.as_s(),
+            })
+            .collect();
+        Ok(ControllerRow {
+            dataset: d.name.to_string(),
+            nodes: d.nodes,
+            sample_nodes: setup.sample_nodes,
+            cluster_size: setup.cluster_size,
+            sat_rate_per_s: setup.sat_rate_per_s,
+            slo_s: slo.as_s(),
+            ladder: ladder_info,
+            scenarios,
+        })
+    }
+
+    /// The E15 headline aggregates (docs on [`ControllerHeadline`]).
+    pub fn headline(&self) -> ControllerHeadline {
+        let mut h = ControllerHeadline {
+            adaptive_win_datasets: 0,
+            bound_ok: true,
+            dwell_ok: true,
+            total_switches: 0,
+            worst_regret: 0.0,
+            max_switch_overhead: 0.0,
+            mean_adaptive_slo: 0.0,
+            mean_best_static_slo: 0.0,
+        };
+        let mut cells = 0usize;
+        for r in &self.rows {
+            let mut adaptive_day = 0.0f64;
+            let mut static_day = vec![0.0f64; r.ladder.len()];
+            for s in &r.scenarios {
+                adaptive_day += s.adaptive.slo_attainment;
+                let mut best = 0.0f64;
+                for (j, st) in s.statics.iter().enumerate() {
+                    static_day[j] += st.slo_attainment;
+                    best = best.max(st.slo_attainment);
+                }
+                let overhead = s.switch_affected as f64 / s.offered.max(1) as f64;
+                let regret = best - s.adaptive.slo_attainment;
+                h.worst_regret = h.worst_regret.max(regret);
+                h.max_switch_overhead = h.max_switch_overhead.max(overhead);
+                if regret > overhead + 1e-9 {
+                    h.bound_ok = false;
+                }
+                h.dwell_ok &= s.dwell_ok;
+                h.total_switches += s.switches.len();
+                h.mean_adaptive_slo += s.adaptive.slo_attainment;
+                h.mean_best_static_slo += best;
+                cells += 1;
+            }
+            let best_day = static_day.iter().fold(0.0f64, |a, &b| a.max(b));
+            if adaptive_day >= best_day - 1e-9 {
+                h.adaptive_win_datasets += 1;
+            }
+        }
+        let c = cells.max(1) as f64;
+        h.mean_adaptive_slo /= c;
+        h.mean_best_static_slo /= c;
+        h
+    }
+
+    /// Worst Little's-law residual across every run of every cell.
+    pub fn max_littles_gap(&self) -> f64 {
+        self.rows
+            .iter()
+            .flat_map(|r| r.scenarios.iter())
+            .flat_map(|s| {
+                std::iter::once(s.adaptive.littles_gap)
+                    .chain(s.statics.iter().map(|p| p.littles_gap))
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Post-hoc metrics view — the `.metrics.json` sidecar the CLI
+    /// writes next to `BENCH_controller.json`.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        let h = self.headline();
+        m.inc("controller.datasets", self.rows.len() as u64);
+        m.inc("controller.switches", h.total_switches as u64);
+        m.inc("controller.win_datasets", h.adaptive_win_datasets as u64);
+        m.set_gauge("controller.bound_ok", if h.bound_ok { 1.0 } else { 0.0 });
+        m.set_gauge("controller.dwell_ok", if h.dwell_ok { 1.0 } else { 0.0 });
+        m.set_gauge("controller.mean_adaptive_slo", h.mean_adaptive_slo);
+        m.set_gauge("controller.mean_best_static_slo", h.mean_best_static_slo);
+        m.set_gauge("controller.worst_regret", h.worst_regret);
+        m.set_gauge("controller.max_switch_overhead", h.max_switch_overhead);
+        m.set_gauge("controller.max_littles_gap", self.max_littles_gap());
+        for r in &self.rows {
+            for s in &r.scenarios {
+                m.inc("controller.cells", 1);
+                m.inc("controller.switch_affected", s.switch_affected as u64);
+                m.observe("controller.switch_downtime_s", s.switch_downtime_s);
+                m.observe("controller.adaptive_p95_s", s.adaptive.p95_s);
+                m.observe("controller.adaptive_slo", s.adaptive.slo_attainment);
+            }
+        }
+        m
+    }
+
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "E15 — closed-loop control: adaptive vs static rungs (batch {}, \
+                 ladder gain {}x)",
+                CTRL_MAX_BATCH, CTRL_LADDER_GAIN
+            ),
+            &[
+                "Dataset",
+                "Scenario",
+                "Adaptive SLO",
+                "Best static",
+                "Static SLO",
+                "Switches",
+                "Downtime",
+                "Final rung",
+            ],
+        );
+        for r in &self.rows {
+            for s in &r.scenarios {
+                let (bj, best) = s
+                    .statics
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| {
+                        a.1.slo_attainment
+                            .partial_cmp(&b.1.slo_attainment)
+                            .expect("attainment is never NaN")
+                    })
+                    .expect("ladder is non-empty");
+                t.row(&[
+                    r.dataset.clone(),
+                    s.scenario.into(),
+                    pct(s.adaptive.slo_attainment),
+                    r.ladder[bj].label.clone(),
+                    pct(best.slo_attainment),
+                    s.switches.len().to_string(),
+                    Time::s(s.switch_downtime_s).to_string(),
+                    r.ladder[s.final_config].label.clone(),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// One line per dataset plus the headline verdict.
+    pub fn summary(&self) -> String {
+        let mut lines: Vec<String> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let day: f64 =
+                    r.scenarios.iter().map(|s| s.adaptive.slo_attainment).sum();
+                let best_day = (0..r.ladder.len())
+                    .map(|j| {
+                        r.scenarios.iter().map(|s| s.statics[j].slo_attainment).sum::<f64>()
+                    })
+                    .fold(0.0f64, f64::max)
+                    / CTRL_SCENARIOS.len() as f64;
+                let switches: usize =
+                    r.scenarios.iter().map(|s| s.switches.len()).sum();
+                format!(
+                    "{}: adaptive {} vs best static {} over the {}-scenario day \
+                     ({} switches, {} rungs)",
+                    r.dataset,
+                    pct(day / CTRL_SCENARIOS.len() as f64),
+                    pct(best_day),
+                    CTRL_SCENARIOS.len(),
+                    switches,
+                    r.ladder.len(),
+                )
+            })
+            .collect();
+        let h = self.headline();
+        lines.push(format!(
+            "headline: adaptive wins {} of {} datasets; worst regret {} vs priced \
+             switch allowance {}",
+            h.adaptive_win_datasets,
+            self.rows.len(),
+            pct(h.worst_regret),
+            pct(h.max_switch_overhead),
+        ));
+        lines.join("\n")
+    }
+
+    /// The `BENCH_controller.json` artifact (byte-identical across
+    /// thread counts and per seed — asserted in tests).
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| format!("{v:.6e}");
+        let h = self.headline();
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for r in &self.rows {
+            let ladder: Vec<String> = r
+                .ladder
+                .iter()
+                .map(|g| {
+                    format!(
+                        "      {{\"label\": \"{}\", \"servers\": {}, \"sat_per_s\": {}, \
+                         \"switch_cost_s\": {}}}",
+                        g.label,
+                        g.servers,
+                        num(g.sat_per_s),
+                        num(g.switch_cost_s),
+                    )
+                })
+                .collect();
+            let mut scs = Vec::with_capacity(r.scenarios.len());
+            for s in &r.scenarios {
+                let stat = |p: &CtrlRunStat| {
+                    format!(
+                        "{{\"p95_s\": {}, \"mean_s\": {}, \"slo_attainment\": {}, \
+                         \"utilization\": {}, \"littles_gap\": {}}}",
+                        num(p.p95_s),
+                        num(p.mean_s),
+                        num(p.slo_attainment),
+                        num(p.utilization),
+                        num(p.littles_gap),
+                    )
+                };
+                let statics: Vec<String> = s.statics.iter().map(&stat).collect();
+                let switches: Vec<String> = s
+                    .switches
+                    .iter()
+                    .map(|w| {
+                        format!(
+                            "{{\"at_s\": {}, \"from\": {}, \"to\": {}, \"cost_s\": {}, \
+                             \"moved\": {}}}",
+                            num(w.at.as_s()),
+                            w.from,
+                            w.to,
+                            num(w.cost.as_s()),
+                            w.moved,
+                        )
+                    })
+                    .collect();
+                scs.push(format!(
+                    "      {{\"scenario\": \"{}\", \"horizon_s\": {}, \"window_s\": {}, \
+                     \"dwell_s\": {}, \"offered\": {}, \"switch_downtime_s\": {}, \
+                     \"switch_affected\": {}, \"final_config\": {}, \"dwell_ok\": {}, \
+                     \"adaptive\": {}, \"statics\": [{}], \"switches\": [{}]}}",
+                    s.scenario,
+                    num(s.horizon_s),
+                    num(s.window_s),
+                    num(s.dwell_s),
+                    s.offered,
+                    num(s.switch_downtime_s),
+                    s.switch_affected,
+                    s.final_config,
+                    s.dwell_ok,
+                    stat(&s.adaptive),
+                    statics.join(", "),
+                    switches.join(", "),
+                ));
+            }
+            rows.push(format!(
+                "    {{\"dataset\": \"{}\", \"nodes\": {}, \"sample_nodes\": {}, \
+                 \"cluster_size\": {}, \"sat_rate_per_s\": {}, \"slo_s\": {}, \
+                 \"ladder\": [\n{}\n    ], \"scenarios\": [\n{}\n    ]}}",
+                r.dataset,
+                r.nodes,
+                r.sample_nodes,
+                r.cluster_size,
+                num(r.sat_rate_per_s),
+                num(r.slo_s),
+                ladder.join(",\n"),
+                scs.join(",\n"),
+            ));
+        }
+        format!(
+            "{{\n  \"experiment\": \"controller_sweep\",\n  \"config\": {{\
+             \"materialize_cap\": {}, \"requests\": {}, \"max_batch\": {}, \
+             \"ladder_gain\": {}, \"diurnal_rel\": {}, \"diurnal_swing\": {}, \
+             \"flash_rel\": {}, \"flash_boost\": {}, \"link_factor\": {}, \
+             \"scenarios\": [{}]}},\n  \
+             \"summary\": {{\"adaptive_win_datasets\": {}, \"bound_ok\": {}, \
+             \"dwell_ok\": {}, \"total_switches\": {}, \"worst_regret\": {}, \
+             \"max_switch_overhead\": {}, \"mean_adaptive_slo\": {}, \
+             \"mean_best_static_slo\": {}, \"max_littles_gap\": {}}},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            self.materialize_cap,
+            self.requests,
+            CTRL_MAX_BATCH,
+            num(CTRL_LADDER_GAIN),
+            num(CTRL_DIURNAL_REL),
+            num(CTRL_DIURNAL_SWING),
+            num(CTRL_FLASH_REL),
+            num(CTRL_FLASH_BOOST),
+            num(CTRL_LINK_FACTOR),
+            CTRL_SCENARIOS
+                .iter()
+                .map(|s| format!("\"{s}\""))
+                .collect::<Vec<_>>()
+                .join(", "),
+            h.adaptive_win_datasets,
+            h.bound_ok,
+            h.dwell_ok,
+            h.total_switches,
+            num(h.worst_regret),
+            num(h.max_switch_overhead),
+            num(h.mean_adaptive_slo),
+            num(h.mean_best_static_slo),
+            num(self.max_littles_gap()),
+            rows.join(",\n"),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2310,6 +3003,78 @@ mod tests {
         assert_eq!(json, par4.to_json());
         let again = FaultSweep::run_with_threads(150, 250, 1).unwrap();
         assert_eq!(json, again.to_json());
+    }
+
+    /// The E15 headline: over the full scenario day the adaptive
+    /// controller's SLO attainment is at least every static rung's for
+    /// at least one dataset, and in *every* cell it trails the best
+    /// static by no more than the priced switch overhead (the requests
+    /// its own switches touched).  Switches respect the min-dwell
+    /// everywhere — the controller never flaps.
+    #[test]
+    fn controller_sweep_adaptive_wins_within_priced_switch_overhead() {
+        let sweep = ControllerSweep::run_with_threads(150, 600, 1).unwrap();
+        assert_eq!(sweep.rows.len(), 4);
+        for r in &sweep.rows {
+            assert_eq!(r.scenarios.len(), CTRL_SCENARIOS.len());
+            assert!(r.slo_s > 0.0 && r.sat_rate_per_s > 0.0);
+            // The gain gate admits only real capacity jumps, and every
+            // rung's switch-in bill is a positive priced pause.
+            for w in r.ladder.windows(2) {
+                assert!(
+                    w[1].sat_per_s >= CTRL_LADDER_GAIN * w[0].sat_per_s,
+                    "{}: ladder gain violated",
+                    r.dataset
+                );
+            }
+            assert!(r.ladder.iter().all(|g| g.switch_cost_s > 0.0));
+            for s in &r.scenarios {
+                assert_eq!(s.statics.len(), r.ladder.len());
+                assert!(s.offered > 0);
+                assert!(s.dwell_ok, "{} {}: dwell violated", r.dataset, s.scenario);
+                // Every executed switch is priced and billed: the
+                // downtime ledger is exactly the sum of the recorded
+                // pause costs (bit-exact accumulation).
+                let billed: f64 = s.switches.iter().map(|w| w.cost.as_s()).sum();
+                assert!(
+                    (s.switch_downtime_s - billed).abs() <= 1e-12 * billed.max(1.0),
+                    "{} {}: downtime {} != billed {}",
+                    r.dataset,
+                    s.scenario,
+                    s.switch_downtime_s,
+                    billed
+                );
+                assert!(s.switch_affected >= s.switches.iter().map(|w| w.moved).sum());
+            }
+        }
+        // At least one dataset carries a real multi-rung ladder and the
+        // controller genuinely acts somewhere.
+        assert!(sweep.rows.iter().any(|r| r.ladder.len() >= 2));
+        let h = sweep.headline();
+        assert!(h.total_switches > 0, "controller never switched: {h:?}");
+        assert!(h.adaptive_win_datasets >= 1, "adaptive never wins a day: {h:?}");
+        assert!(h.bound_ok, "regret exceeds priced switch overhead: {h:?}");
+        assert!(h.dwell_ok, "{h:?}");
+        assert!(sweep.max_littles_gap() < 1e-9, "{}", sweep.max_littles_gap());
+
+        let json = sweep.to_json();
+        assert!(json.contains("\"experiment\": \"controller_sweep\""));
+        assert!(json.contains("\"scenario\": \"linkfault\""));
+        assert!(json.contains("\"adaptive_win_datasets\": "));
+        assert!(sweep.summary().contains("adaptive"));
+        assert!(sweep.render().render().contains("diurnal"));
+    }
+
+    /// E15 determinism: the parallel sweep emits byte-identical
+    /// `BENCH_controller.json` to the sequential run, per seed.
+    #[test]
+    fn controller_sweep_parallel_is_byte_identical_to_sequential() {
+        let seq = ControllerSweep::run_with_threads(150, 400, 1).unwrap();
+        let par4 = ControllerSweep::run_with_threads(150, 400, 4).unwrap();
+        assert_eq!(seq.rows, par4.rows);
+        assert_eq!(seq.to_json(), par4.to_json());
+        let again = ControllerSweep::run_with_threads(150, 400, 1).unwrap();
+        assert_eq!(seq.to_json(), again.to_json());
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod bench;
 pub mod cli;
 pub mod comm;
 pub mod config;
+pub mod controller;
 pub mod coordinator;
 pub mod cores;
 pub mod crossbar;

@@ -11,6 +11,7 @@
 //! ima-gnn simulate [options]      # DES over either deployment
 //! ima-gnn traffic [options]       # E13: arrival-driven traffic engine
 //! ima-gnn faults [options]        # E14: fault injection + recovery accounting
+//! ima-gnn control [options]       # E15: closed-loop adaptive runtime control
 //! ima-gnn tune [options]          # E11: hybrid operating-point autotuner
 //! ima-gnn perf [options]          # E10: hot-kernel perf baseline
 //! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
@@ -28,9 +29,9 @@ use ima_gnn::coordinator::{
 use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
 use ima_gnn::experiments::{
-    hybrid_target, scaling_sweep, table2, FaultSweep, Fig8, HybridSweep, NetsimSweep,
-    ServingSweep, Table1, TrafficSweep, FAULT_DEGRADED_FACTOR, TRAFFIC_MAX_BATCH,
-    TRAFFIC_WAIT_MS,
+    control_cell, control_setup, hybrid_target, scaling_sweep, table2, ControllerSweep,
+    FaultSweep, Fig8, HybridSweep, NetsimSweep, ServingSweep, Table1, TrafficSweep,
+    CTRL_SCENARIOS, FAULT_DEGRADED_FACTOR, TRAFFIC_MAX_BATCH, TRAFFIC_WAIT_MS,
 };
 use ima_gnn::graph::{generate, ShardPlan};
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
@@ -41,8 +42,9 @@ use ima_gnn::runtime::{default_artifact_dir, Manifest};
 use ima_gnn::sim::{simulate, CrashImpact, FaultConfig, FaultPlan, Outage, SimConfig};
 use ima_gnn::testing::{gcn_layer_binding, Rng};
 use ima_gnn::traffic::{
-    closed_loop, deployment_shape, md1_mean_wait, open_loop, open_loop_faulted,
-    open_loop_observed, ArrivalProcess, BatchPolicy, ClosedLoopConfig, ThinkTime, TrafficReport,
+    closed_loop, deployment_shape, md1_mean_wait, open_loop, open_loop_controlled,
+    open_loop_faulted, open_loop_observed, ArrivalProcess, BatchPolicy, ClosedLoopConfig,
+    ThinkTime, TrafficReport,
 };
 use ima_gnn::units::Time;
 use ima_gnn::workload::DiurnalCurve;
@@ -70,6 +72,7 @@ fn run(argv: &[String]) -> Result<()> {
         "netsim" => cmd_netsim(rest),
         "traffic" => cmd_traffic(rest),
         "faults" => cmd_faults(rest),
+        "control" => cmd_control(rest),
         "tune" => cmd_tune(rest),
         "perf" => cmd_perf(rest),
         "serve" => cmd_serve(rest),
@@ -113,6 +116,8 @@ fn print_help() {
          accounting per deployment shape; --sweep emits BENCH_traffic.json (E13)\n  \
          faults     fault injection: crash windows, downtime + MTTR accounting and\n             \
          span reconciliation; --sweep emits BENCH_faults.json (E14)\n  \
+         control    closed-loop adaptive runtime control over the capacity ladder\n             \
+         with priced switches; --sweep emits BENCH_controller.json (E15)\n  \
          tune       hybrid operating-point autotuner, emits BENCH_hybrid.json (E11)\n  \
          perf       hot-kernel perf baseline, emits BENCH_perf.fresh.json; --check\n             gates against the committed BENCH_perf.json floors (E10)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts; --sweep runs\n             \
@@ -613,6 +618,105 @@ fn cmd_faults(argv: &[String]) -> Result<()> {
     if gap > 1e-9 {
         return Err(Error::Sim(format!(
             "fault.crash spans do not reconcile with downtime (gap {gap:.3e} s)"
+        )));
+    }
+    Ok(())
+}
+
+fn cmd_control(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("control", "closed-loop adaptive runtime control (E15)")
+        .opt("dataset", "a Table 2 dataset (single-run mode)", Some("Cora"))
+        .opt("scenario", "diurnal | flash | linkfault (single-run mode)", Some("diurnal"))
+        .opt("requests", "target requests per run / sweep cell", Some("2000"))
+        .opt("cap", "max materialized sample nodes", Some("512"))
+        .opt("seed", "rng seed", Some("1"))
+        .opt("json", "sweep artifact path", Some("BENCH_controller.json"))
+        .flag("sweep", "run the E15 scenario x dataset sweep");
+    let args = cmd.parse(argv)?;
+    let requests = args.usize_or("requests", 2_000)?.max(1);
+    let cap = args.usize_or("cap", 512)?;
+
+    if args.flag("sweep") {
+        let sweep = ControllerSweep::run(cap, requests)?;
+        sweep.render().print();
+        println!("{}", sweep.summary());
+        let path = args.get_or("json", "BENCH_controller.json").to_string();
+        std::fs::write(&path, sweep.to_json())?;
+        let sidecar = write_metrics_sidecar(&path, &sweep.metrics_snapshot())?;
+        println!("wrote {path} and {sidecar}");
+        return Ok(());
+    }
+
+    // Single-run mode: one dataset's capacity ladder through one
+    // scenario, observability on, the statics replayed on the same
+    // arrivals for comparison, and the obs contract checked out loud
+    // (`ctrl.switch` span durations must sum *bit-exactly* to the
+    // controller's accrued switch downtime).
+    let scenario = args.get_or("scenario", "diurnal").to_string();
+    if !CTRL_SCENARIOS.contains(&scenario.as_str()) {
+        return Err(Error::Usage(format!(
+            "unknown scenario `{scenario}`; expected one of {CTRL_SCENARIOS:?}"
+        )));
+    }
+    let d = ima_gnn::graph::datasets::by_name(args.get_or("dataset", "Cora"))?;
+    let seed = args.usize_or("seed", 1)? as u64;
+    let setup = control_setup(&d, cap)?;
+    let cell = control_cell(&setup, &scenario, d.nodes, requests, seed)?;
+    let obs = Obs::new(16_384);
+    let cr = open_loop_controlled(&cell.controller, &cell.arrivals, &cell.plan, &obs)?;
+
+    let span_downtime: Time = obs
+        .tracer
+        .spans()
+        .iter()
+        .filter(|s| s.name == "ctrl.switch")
+        .map(|s| s.end - s.start)
+        .sum();
+    let gap = (span_downtime - cr.switch_downtime).as_s().abs();
+
+    let slo = setup.slo;
+    let mut t = Table::new(
+        format!(
+            "control — {} / {scenario}: {} requests over a {}-rung ladder (SLO {slo})",
+            d.name,
+            cr.report.offered,
+            setup.ladder.len(),
+        ),
+        &["Config", "p95", "SLO attainment", "Switches", "Switch downtime"],
+    );
+    t.row(&[
+        format!("adaptive (final: {})", setup.ladder[cr.final_config].label()),
+        cr.report.latency.p95().to_string(),
+        format!("{:.2}%", cr.report.slo_attainment(slo) * 100.0),
+        cr.switches.len().to_string(),
+        cr.switch_downtime.to_string(),
+    ]);
+    for cfg in &setup.ladder {
+        let r = open_loop_faulted(
+            cfg.queues.servers(),
+            &cfg.service,
+            cfg.policy,
+            &cell.arrivals,
+            &cell.plan,
+            &Obs::disabled(),
+        )?;
+        t.row(&[
+            format!("static {}", cfg.label()),
+            r.latency.p95().to_string(),
+            format!("{:.2}%", r.slo_attainment(slo) * 100.0),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    t.print();
+    println!(
+        "switch blast radius: {} request(s) re-routed or arrived mid-pause; \
+         ctrl.switch span sum {span_downtime} (gap {gap:.3e} s, {} span(s) dropped)",
+        cr.switch_affected, cr.report.dropped_spans
+    );
+    if cr.report.dropped_spans == 0 && gap != 0.0 {
+        return Err(Error::Sim(format!(
+            "ctrl.switch spans do not reconcile with switch downtime (gap {gap:.3e} s)"
         )));
     }
     Ok(())

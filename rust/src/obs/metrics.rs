@@ -356,17 +356,25 @@ impl MetricsRegistry {
 /// Samples must arrive in non-decreasing sim-time order; each push
 /// evicts samples older than `at − window`.  Quantiles are exact
 /// (sorted nearest-rank) — windows are small by construction.
+///
+/// Out-of-order pushes are **rejected in all builds** (not just
+/// `debug_assert!`ed): an out-of-order sample would corrupt the
+/// front-eviction loop and strand stale samples in the decision
+/// window of whoever thresholds on it.  Rejections are counted in
+/// [`WindowedStats::dropped_out_of_order`] so a misbehaving feed is
+/// visible rather than silent.
 #[derive(Debug, Clone)]
 pub struct WindowedStats {
     window: Time,
     samples: VecDeque<(Time, f64)>,
+    dropped_out_of_order: u64,
 }
 
 impl WindowedStats {
     /// `window` must be finite and positive.
     pub fn new(window: Time) -> WindowedStats {
         assert!(window.is_finite() && window > Time::ZERO, "window must be finite and positive");
-        WindowedStats { window, samples: VecDeque::new() }
+        WindowedStats { window, samples: VecDeque::new(), dropped_out_of_order: 0 }
     }
 
     pub fn window(&self) -> Time {
@@ -374,18 +382,20 @@ impl WindowedStats {
     }
 
     /// Record `v` at sim time `at`, evicting samples older than the
-    /// window.  Non-finite samples are ignored.
+    /// window.  Non-finite samples are ignored.  A sample older than
+    /// the newest one already recorded is dropped (counted in
+    /// [`WindowedStats::dropped_out_of_order`]) — identically in debug
+    /// and release builds.
     pub fn push(&mut self, at: Time, v: f64) {
         if !v.is_finite() {
             return;
         }
-        debug_assert!(
-            match self.samples.back() {
-                Some(&(t, _)) => t <= at,
-                None => true,
-            },
-            "windowed samples must arrive in sim-time order"
-        );
+        if let Some(&(t, _)) = self.samples.back() {
+            if at < t {
+                self.dropped_out_of_order += 1;
+                return;
+            }
+        }
         while let Some(&(t, _)) = self.samples.front() {
             if t + self.window < at {
                 self.samples.pop_front();
@@ -394,6 +404,21 @@ impl WindowedStats {
             }
         }
         self.samples.push_back((at, v));
+    }
+
+    /// How many out-of-order samples have been rejected since
+    /// construction.  Survives [`WindowedStats::clear`] — it diagnoses
+    /// the *feed*, not the current window.
+    pub fn dropped_out_of_order(&self) -> u64 {
+        self.dropped_out_of_order
+    }
+
+    /// Drop every buffered sample (the rejection counter is kept).
+    /// The runtime controller clears its decision windows at a
+    /// configuration switch so post-switch decisions only see the new
+    /// shape's samples.
+    pub fn clear(&mut self) {
+        self.samples.clear();
     }
 
     pub fn len(&self) -> usize {
@@ -627,6 +652,32 @@ mod tests {
         assert_eq!(w.len(), 1);
         assert_eq!(w.p50(), 40.0);
         assert_eq!(w.max(), 40.0);
+    }
+
+    /// Regression (ISSUE 8): out-of-order pushes used to be only
+    /// `debug_assert!`ed — a release build silently walked the
+    /// eviction loop with a stale `at`, stranding old samples in the
+    /// window.  Now the sample is rejected identically in every build
+    /// and the rejection is counted.
+    #[test]
+    fn windowed_stats_rejects_out_of_order_in_all_builds() {
+        let mut w = WindowedStats::new(Time::s(1.0));
+        w.push(Time::s(5.0), 10.0);
+        // Out of order: must be dropped, not evict-corrupt the queue.
+        w.push(Time::s(1.0), 99.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.dropped_out_of_order(), 1);
+        assert_eq!(w.max(), 10.0);
+        // Equal timestamps are in order (FIFO ties are fine).
+        w.push(Time::s(5.0), 20.0);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.dropped_out_of_order(), 1);
+        // clear() empties the window but keeps the feed diagnostic.
+        w.clear();
+        assert!(w.is_empty());
+        assert_eq!(w.dropped_out_of_order(), 1);
+        w.push(Time::s(6.0), 1.0);
+        assert_eq!(w.len(), 1);
     }
 
     #[test]

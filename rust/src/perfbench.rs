@@ -189,9 +189,20 @@ pub struct CheckRow {
     pub baseline: f64,
     /// Freshly measured factor.
     pub fresh: f64,
-    /// `fresh / baseline`; passes at `>= 1 − CHECK_MAX_REGRESSION`.
+    /// Rounded `fresh / baseline` at artifact precision; the gate
+    /// passes at `rounded(fresh) >= rounded(baseline × (1 −
+    /// CHECK_MAX_REGRESSION))`, boundary-inclusive.
     pub ratio: f64,
     pub pass: bool,
+}
+
+/// Round to the 3-decimal precision `BENCH_perf.json` stores factors
+/// at (`to_json` writes `{v:.3}`), so the gate compares exactly what
+/// the artifact records (ISSUE 8 bugfix): raw float math used to make
+/// a headline sitting exactly on the floor pass or fail depending on
+/// rounding direction across the serialize/reparse trip.
+fn round_to_artifact(v: f64) -> f64 {
+    format!("{v:.3}").parse().expect("rounded factor reparses")
 }
 
 /// Compare a fresh report's `speedups[]` against the committed
@@ -202,6 +213,12 @@ pub struct CheckRow {
 /// a missing headline is itself a failure (a silently dropped benchmark
 /// must not pass the gate).  Returns one row per baseline headline;
 /// callers fail on any `!pass`.
+///
+/// The comparison is deterministic at artifact precision: both the
+/// fresh factor and the regression floor are rounded to the 3 decimals
+/// the artifact stores before the boundary-inclusive `>=` — a factor
+/// that prints equal to the floor passes regardless of sub-thousandth
+/// noise.
 pub fn check_against(report: &PerfReport, baseline_json: &str) -> Result<Vec<CheckRow>> {
     use crate::error::Error;
     let doc = crate::json::parse(baseline_json)?;
@@ -229,14 +246,11 @@ pub fn check_against(report: &PerfReport, baseline_json: &str) -> Result<Vec<Che
         let fresh = report.speedup(&name).ok_or_else(|| {
             Error::Runtime(format!("baseline headline `{name}` missing from the fresh run"))
         })?;
-        let ratio = fresh / baseline;
-        rows.push(CheckRow {
-            name,
-            baseline,
-            fresh,
-            ratio,
-            pass: ratio >= 1.0 - CHECK_MAX_REGRESSION,
-        });
+        let fresh_r = round_to_artifact(fresh);
+        let base_r = round_to_artifact(baseline);
+        let floor = round_to_artifact(baseline * (1.0 - CHECK_MAX_REGRESSION));
+        let ratio = if base_r > 0.0 { fresh_r / base_r } else { f64::INFINITY };
+        rows.push(CheckRow { name, baseline, fresh, ratio, pass: fresh_r >= floor });
     }
     Ok(rows)
 }
@@ -439,6 +453,41 @@ mod tests {
             assert!(r.pass, "{}: self-check must pass", r.name);
             assert!((r.ratio - 1.0).abs() < 1e-2, "{}: ratio {}", r.name, r.ratio);
         }
+    }
+
+    /// Regression (ISSUE 8): the gate used raw float math
+    /// (`fresh/baseline >= 0.75`) while the artifact rounds factors to
+    /// 3 decimals — a fresh factor printing exactly at the floor could
+    /// fail by a sub-thousandth.  Pin the exact edge: baseline 4.000,
+    /// floor 3.000; a fresh 2.9996 *prints* as 3.000 and must pass,
+    /// 2.9994 prints as 2.999 and must fail.
+    #[test]
+    fn check_gate_boundary_is_inclusive_at_artifact_precision() {
+        let at = |fresh: f64| PerfReport {
+            quick: true,
+            threads: 1,
+            cases: Vec::new(),
+            speedups: vec![Speedup {
+                name: "edge".into(),
+                reference: "ref".into(),
+                fast: "fast".into(),
+                factor: fresh,
+            }],
+        };
+        let baseline = r#"{"speedups": [{"name": "edge", "factor": 4.0}]}"#;
+        // Exactly on the floor: inclusive pass.
+        let rows = check_against(&at(3.0), baseline).unwrap();
+        assert!(rows[0].pass, "boundary must be inclusive");
+        // Rounds up to the floor: pass (pre-fix: 2.9996/4 = 0.7499 < 0.75).
+        assert!(check_against(&at(2.9996), baseline).unwrap()[0].pass);
+        // Rounds below the floor: fail.
+        assert!(!check_against(&at(2.9994), baseline).unwrap()[0].pass);
+        // The artifact round-trip is the identity for the gate: a
+        // factor and its 3-decimal print compare identically.
+        assert_eq!(
+            check_against(&at(3.000_4), baseline).unwrap()[0].pass,
+            check_against(&at(3.0), baseline).unwrap()[0].pass
+        );
     }
 
     #[test]

@@ -60,6 +60,21 @@
 //! routing splits the Poisson stream exactly per class, and the 1-class
 //! mix degenerates bitwise to the homogeneous PR 5 path.
 //!
+//! **Closed-loop control** (E15, DESIGN.md §14): [`open_loop_controlled`]
+//! runs the same engine under a [`Controller`] that watches windowed
+//! p95 / depth / utilization / rate on the sim-time axis and switches
+//! the deployment shape, batching policy and service model mid-run.  A
+//! switch is a *graceful drain* through the double-buffer barrier:
+//! in-service batches complete on the old shape, pending requests
+//! re-route to the new one, and new dispatches pause for the target
+//! rung's priced rebuild + re-upload cost.  The pause is billed as
+//! `switch_downtime` and emitted as a `ctrl.switch` span whose duration
+//! is the *same f64 expression* (`resume − start`), so span sums
+//! reconcile bit-exactly with the report.  A controller that never
+//! fires leaves the run bit-identical to [`open_loop`] at its initial
+//! rung (property-tested in `rust/tests/controller.rs`).
+//!
+//! [`Controller`]: crate::controller::Controller
 //! [`RoundEngine::assemble`]: crate::coordinator::RoundEngine::assemble
 //! [`LatencyProvider`]: crate::coordinator::LatencyProvider
 //! [`sim::EventQueue`]: crate::sim::EventQueue
@@ -70,10 +85,11 @@ pub use arrivals::{ArrivalProcess, ThinkTime};
 
 use std::collections::VecDeque;
 
+use crate::controller::{ControlledReport, Controller, CtrlView, SwitchRecord};
 use crate::coordinator::{Arrival, LatencyProvider, LatencyStats};
 use crate::error::{Error, Result};
 use crate::netmodel::{NetModel, Topology};
-use crate::obs::Obs;
+use crate::obs::{Obs, WindowedStats};
 use crate::sim::faults::{FaultConfig, FaultKind, FaultPlan};
 use crate::sim::EventQueue;
 use crate::testing::Rng;
@@ -365,6 +381,9 @@ enum Ev {
     Crash { server: usize },
     /// Fault-plan crash window closes: the server comes back up.
     Recover { server: usize },
+    /// A controller switch's dispatch pause ends: every active queue
+    /// re-evaluates dispatch.
+    Resume,
 }
 
 struct ServerState {
@@ -383,9 +402,32 @@ struct ServerState {
     down_total: Time,
 }
 
+/// Live controller state carried by a controlled engine run: the
+/// decision windows (on the sim-time axis), the dwell anchors, and the
+/// honest switch ledger.
+struct CtrlState<'a> {
+    controller: &'a Controller,
+    /// Index of the active rung in the controller's ladder.
+    current: usize,
+    /// Windowed response times (seconds), sampled at batch completion.
+    resp_w: WindowedStats,
+    /// Windowed total pending depth, sampled at batch completion.
+    depth_w: WindowedStats,
+    /// Windowed busy fraction of the active fleet.
+    util_w: WindowedStats,
+    /// Arrival markers — `len / window` is the windowed arrival rate.
+    /// Kept across switches (arrivals are shape-independent truth).
+    rate_w: WindowedStats,
+    last_switch_resume: Option<Time>,
+    last_down_resume: Option<Time>,
+    switches: Vec<SwitchRecord>,
+    switch_downtime: Time,
+    switch_affected: usize,
+}
+
 struct Engine<'a> {
     policy: BatchPolicy,
-    service: &'a ServiceModel,
+    service: ServiceModel,
     obs: &'a Obs,
     servers: Vec<ServerState>,
     queue: EventQueue<Ev>,
@@ -405,6 +447,14 @@ struct Engine<'a> {
     area_s: f64,
     max_depth: usize,
     batch_log: Vec<BatchRecord>,
+    // Controller state (None on static runs; `active == servers.len()`
+    // and `pause_until == ZERO` then, so the static hot path is
+    // bit-identical to the pre-controller engine).
+    /// Queues currently serving: requests route `node % active`.
+    active: usize,
+    /// New dispatches are blocked until this instant (switch barrier).
+    pause_until: Time,
+    ctrl: Option<CtrlState<'a>>,
     // Fault state (all empty / false on fault-free runs, so the hot
     // path takes no degraded branches).
     faulted: bool,
@@ -426,7 +476,7 @@ struct ClosedLoop {
 impl<'a> Engine<'a> {
     fn new(
         servers: usize,
-        service: &'a ServiceModel,
+        service: ServiceModel,
         policy: BatchPolicy,
         obs: &'a Obs,
     ) -> Result<Engine<'a>> {
@@ -463,6 +513,9 @@ impl<'a> Engine<'a> {
             area_s: 0.0,
             max_depth: 0,
             batch_log: Vec::new(),
+            active: servers,
+            pause_until: Time::ZERO,
+            ctrl: None,
             faulted: false,
             slow: Vec::new(),
             link: Vec::new(),
@@ -536,13 +589,21 @@ impl<'a> Engine<'a> {
     }
 
     fn route(&self, node: usize) -> usize {
-        node % self.servers.len()
+        node % self.active
     }
 
     /// A request (already recorded) joins its server's pending queue.
     fn on_request(&mut self, req: usize, now: Time) {
         self.tick_area(now);
         self.in_system += 1;
+        if let Some(st) = self.ctrl.as_mut() {
+            st.rate_w.push(now, 1.0);
+            // An arrival landing inside a switch pause waits it out —
+            // it counts against the switch's honest blast radius.
+            if now < self.pause_until {
+                st.switch_affected += 1;
+            }
+        }
         let s = self.route(self.node[req]);
         self.servers[s].pending.push_back(req);
         self.max_depth = self.max_depth.max(self.servers[s].pending.len());
@@ -559,7 +620,10 @@ impl<'a> Engine<'a> {
     /// batch at once; the deadline policy arms an idle-wait timer when
     /// the pending tail is short and fresh.
     fn maybe_dispatch(&mut self, s: usize, now: Time) {
-        if !self.servers[s].up
+        // Inside a switch pause no new batch may form; the queued
+        // `Resume` event re-evaluates every active queue at pause end.
+        if now < self.pause_until
+            || !self.servers[s].up
             || self.servers[s].in_service.is_some()
             || self.servers[s].pending.is_empty()
         {
@@ -665,7 +729,119 @@ impl<'a> Engine<'a> {
             dispatched_at,
             done_at: now,
         });
+        // Controller sampling happens *before* the redispatch below, so
+        // the depth sample sees the post-completion backlog; the
+        // decision runs after it, on up-to-date windows.
+        if self.ctrl.is_some() {
+            let total_pending: usize = self.servers.iter().map(|v| v.pending.len()).sum();
+            let busy = self.servers[..self.active]
+                .iter()
+                .filter(|v| v.in_service.is_some())
+                .count();
+            let active = self.active;
+            let st = self.ctrl.as_mut().expect("checked above");
+            for &r in &reqs {
+                st.resp_w.push(now, (now - self.arrival[r]).as_s());
+            }
+            st.depth_w.push(now, total_pending as f64);
+            st.util_w.push(now, busy as f64 / active as f64);
+        }
         self.maybe_dispatch(s, now);
+        if self.ctrl.is_some() {
+            self.ctrl_tick(now);
+        }
+    }
+
+    /// Build the controller's observation snapshot and execute its
+    /// decision, if any.  Runs after every completed batch.
+    fn ctrl_tick(&mut self, now: Time) {
+        let decision = {
+            let st = self.ctrl.as_ref().expect("ctrl_tick without a controller");
+            let total_pending: usize = self.servers.iter().map(|v| v.pending.len()).sum();
+            let window_s = st.controller.hysteresis().window.as_s();
+            let view = CtrlView {
+                now,
+                current: st.current,
+                windowed_p95: Time::s(st.resp_w.quantile(0.95)),
+                resp_samples: st.resp_w.len(),
+                mean_depth: st.depth_w.mean(),
+                utilization: st.util_w.mean(),
+                arrival_rate_per_s: st.rate_w.len() as f64 / window_s,
+                total_pending,
+                last_switch_resume: st.last_switch_resume,
+                last_down_resume: st.last_down_resume,
+            };
+            st.controller.decide(&view)
+        };
+        if let Some(to) = decision {
+            self.execute_switch(to, now);
+        }
+    }
+
+    /// Execute a controller switch as a graceful drain through the
+    /// double-buffer barrier: in-service batches complete on the old
+    /// shape, pending requests re-route to the new one in arrival
+    /// order, and new dispatches pause for the target rung's priced
+    /// rebuild + re-upload cost.  The accrued `switch_downtime` adds
+    /// `resume − now` — the identical f64 expression as the
+    /// `ctrl.switch` span's duration — so the two reconcile bit-exactly.
+    fn execute_switch(&mut self, to: usize, now: Time) {
+        let (from, cfg) = {
+            let st = self.ctrl.as_ref().expect("switch without a controller");
+            (st.current, st.controller.configs()[to])
+        };
+        let mut moved: Vec<usize> = Vec::new();
+        for srv in &mut self.servers {
+            moved.extend(srv.pending.drain(..));
+        }
+        // Open-loop request ids are assigned in (arrival, node) order,
+        // so index order *is* arrival order across queues.
+        moved.sort_unstable();
+        self.active = cfg.queues.servers();
+        self.service = cfg.service;
+        self.policy = cfg.policy;
+        for &r in &moved {
+            let s = self.node[r] % self.active;
+            self.servers[s].pending.push_back(r);
+        }
+        for srv in &self.servers[..self.active] {
+            self.max_depth = self.max_depth.max(srv.pending.len());
+        }
+        let resume = now + cfg.switch_cost;
+        self.pause_until = resume;
+        self.queue.push(resume, Ev::Resume);
+        if self.obs.is_enabled() {
+            self.obs.tracer.record_at(
+                "ctrl.switch",
+                0,
+                now,
+                resume,
+                vec![("from", from.into()), ("to", to.into()), ("moved", moved.len().into())],
+            );
+            self.obs.metrics.inc("ctrl.switches", 1);
+            self.obs.metrics.observe("ctrl.switch_ms", (resume - now).as_ms());
+        }
+        let st = self.ctrl.as_mut().expect("switch without a controller");
+        st.current = to;
+        st.switch_downtime += resume - now;
+        st.switch_affected += moved.len();
+        st.switches.push(SwitchRecord {
+            at: now,
+            from,
+            to,
+            cost: cfg.switch_cost,
+            moved: moved.len(),
+        });
+        st.last_switch_resume = Some(resume);
+        if to < from {
+            st.last_down_resume = Some(resume);
+        }
+        // Post-switch decisions must only see the new shape's samples;
+        // the arrival-rate window survives (arrivals are shape-
+        // independent truth).
+        st.resp_w.clear();
+        st.depth_w.clear();
+        st.util_w.clear();
     }
 
     /// A crash window opens: the server goes down and its in-service
@@ -733,8 +909,10 @@ impl<'a> Engine<'a> {
                 // Stale unless the armed request still fronts the queue
                 // and the server is still idle and up (a busy server
                 // re-checks the deadline itself at its next Done; a
-                // down server redispatches at recovery).
-                if self.servers[server].up
+                // down server redispatches at recovery; a paused engine
+                // redispatches at its Resume).
+                if now >= self.pause_until
+                    && self.servers[server].up
                     && self.servers[server].in_service.is_none()
                     && self.servers[server].pending.front() == Some(&oldest)
                 {
@@ -751,6 +929,11 @@ impl<'a> Engine<'a> {
             }
             Ev::Crash { server } => self.on_crash(server, now),
             Ev::Recover { server } => self.on_recover(server, now),
+            Ev::Resume => {
+                for s in 0..self.active {
+                    self.maybe_dispatch(s, now);
+                }
+            }
         }
     }
 
@@ -765,10 +948,12 @@ impl<'a> Engine<'a> {
             let t = self.now;
             let mut flushed = false;
             for s in 0..self.servers.len() {
-                // Every crash window schedules its Recover, so by drain
-                // time all servers are back up and the flush reaches
+                // Every crash window schedules its Recover and every
+                // switch its Resume, so by drain time all servers are
+                // back up, no pause is active, and the flush reaches
                 // every pending tail.
-                if self.servers[s].up
+                if t >= self.pause_until
+                    && self.servers[s].up
                     && self.servers[s].in_service.is_none()
                     && !self.servers[s].pending.is_empty()
                 {
@@ -801,7 +986,11 @@ impl<'a> Engine<'a> {
             * (1.0 / n as f64);
         let busy: Time = self.servers.iter().map(|s| s.busy_total).sum();
         let batches = self.batch_log.len();
-        let capacity_s = (self.servers.len() as f64 * makespan.as_s()).max(1e-30);
+        // Capacity counts the *active* queues — the final rung on a
+        // controlled run; identical to `servers.len()` on static runs
+        // (a controlled run's engine is sized to its largest rung, and
+        // inactive queues never accrue busy time).
+        let capacity_s = (self.active as f64 * makespan.as_s()).max(1e-30);
         let downtime: Time = self.servers.iter().map(|s| s.down_total).sum();
         let availability = (1.0 - downtime.as_s() / capacity_s).clamp(0.0, 1.0);
         let mttr = if self.fault_windows > 0 {
@@ -825,7 +1014,7 @@ impl<'a> Engine<'a> {
             }
         }
         Ok(TrafficReport {
-            servers: self.servers.len(),
+            servers: self.active,
             offered: n,
             completed: n,
             makespan,
@@ -897,7 +1086,16 @@ pub fn open_loop_faulted(
     if arrivals.is_empty() {
         return Err(Error::Sim("open-loop run needs at least one arrival".into()));
     }
-    let mut eng = Engine::new(servers, service, policy, obs)?;
+    let mut eng = Engine::new(servers, *service, policy, obs)?;
+    schedule_open_loop(&mut eng, arrivals)?;
+    eng.install_faults(faults)?;
+    eng.run_to_completion();
+    eng.report()
+}
+
+/// Canonicalize and schedule an open-loop arrival stream (shared by the
+/// static and controlled entry points, so they cannot drift).
+fn schedule_open_loop(eng: &mut Engine<'_>, arrivals: &[Arrival]) -> Result<()> {
     for a in arrivals {
         if !(a.at.as_s() >= 0.0) || !a.at.is_finite() {
             return Err(Error::Sim("arrival times must be finite and >= 0".into()));
@@ -915,9 +1113,67 @@ pub fn open_loop_faulted(
         eng.client_of.push(usize::MAX);
         eng.queue.push(a.at, Ev::Arrive { req: i });
     }
+    Ok(())
+}
+
+/// Run an open-loop arrival list under a closed-loop
+/// [`Controller`](crate::controller::Controller) (module docs): the
+/// engine is sized to the ladder's largest rung, requests route over
+/// the *active* rung's queues, and every switch is billed as a paused
+/// graceful drain.  Only [`FaultKind::LinkDegrade`] plans compose with
+/// controlled runs — per-server crash/straggle targets are meaningless
+/// across a shape change, so such plans are rejected rather than
+/// silently misattributed.
+pub fn open_loop_controlled(
+    controller: &Controller,
+    arrivals: &[Arrival],
+    faults: &FaultPlan,
+    obs: &Obs,
+) -> Result<ControlledReport> {
+    if arrivals.is_empty() {
+        return Err(Error::Sim("controlled run needs at least one arrival".into()));
+    }
+    for e in faults.events() {
+        if !matches!(e.kind, FaultKind::LinkDegrade { .. }) {
+            return Err(Error::Sim(
+                "controlled runs compose only with link-degrade faults: per-server \
+                 crash/straggle targets do not survive a deployment switch"
+                    .into(),
+            ));
+        }
+    }
+    let cfgs = controller.configs();
+    let init = cfgs[controller.initial()];
+    let max_servers =
+        cfgs.iter().map(|c| c.queues.servers()).max().expect("ladder is non-empty");
+    let mut eng = Engine::new(max_servers, init.service, init.policy, obs)?;
+    eng.active = init.queues.servers();
+    let window = controller.hysteresis().window;
+    eng.ctrl = Some(CtrlState {
+        controller,
+        current: controller.initial(),
+        resp_w: WindowedStats::new(window),
+        depth_w: WindowedStats::new(window),
+        util_w: WindowedStats::new(window),
+        rate_w: WindowedStats::new(window),
+        last_switch_resume: None,
+        last_down_resume: None,
+        switches: Vec::new(),
+        switch_downtime: Time::ZERO,
+        switch_affected: 0,
+    });
+    schedule_open_loop(&mut eng, arrivals)?;
     eng.install_faults(faults)?;
     eng.run_to_completion();
-    eng.report()
+    let st = eng.ctrl.take().expect("controlled run keeps its ctrl state");
+    let report = eng.report()?;
+    Ok(ControlledReport {
+        report,
+        switches: st.switches,
+        switch_downtime: st.switch_downtime,
+        switch_affected: st.switch_affected,
+        final_config: st.current,
+    })
 }
 
 /// Closed-loop workload: a fixed fleet of clients, each cycling
@@ -955,7 +1211,7 @@ pub fn closed_loop_observed(
     if cfg.fleet == 0 || cfg.nodes == 0 || !(cfg.horizon.as_s() > 0.0) {
         return Err(Error::Sim("closed loop needs fleet, nodes and a positive horizon".into()));
     }
-    let mut eng = Engine::new(servers, service, policy, obs)?;
+    let mut eng = Engine::new(servers, *service, policy, obs)?;
     let mut rng = Rng::new(cfg.seed);
     for client in 0..cfg.fleet {
         let at = cfg.think.sample(&mut rng);
@@ -1993,6 +2249,98 @@ mod tests {
         // Merged quantiles are monotone and bracketed by the classes.
         assert!(m.p50() <= m.p95() && m.p95() <= m.p99());
         assert!(m.slo_attainment(Time::s(1e6)) > 0.999);
+    }
+
+    use crate::controller::{CtrlConfig, Hysteresis};
+
+    fn ladder_2() -> Vec<CtrlConfig> {
+        use crate::autotune::{OperatingPoint, Partitioner};
+        vec![
+            CtrlConfig {
+                point: OperatingPoint::centralized(),
+                queues: DeploymentQueues::Leader,
+                service: svc(10.0, 0.01),
+                policy: BatchPolicy::Deadline { max: 16, max_wait: Time::ms(2.5) },
+                switch_cost: Time::ms(5.0),
+            },
+            CtrlConfig {
+                point: OperatingPoint::semi(10, 2.0, Partitioner::FixedSize),
+                queues: DeploymentQueues::ClusterHeads { clusters: 8 },
+                service: svc(30.0, 0.01),
+                policy: BatchPolicy::Deadline { max: 16, max_wait: Time::ms(7.5) },
+                switch_cost: Time::ms(20.0),
+            },
+        ]
+    }
+
+    #[test]
+    fn controlled_run_rejects_per_server_fault_plans() {
+        let h = Hysteresis::never(Time::ms(100.0), Time::ms(300.0));
+        let c = Controller::new(ladder_2(), 0, h).unwrap();
+        let arrivals = [at(0.0, 0), at(1.0, 1)];
+        let crash =
+            FaultPlan::from_events(vec![crash_window(1.0, 5.0, 0)], 8).unwrap();
+        let err = open_loop_controlled(&c, &arrivals, &crash, &Obs::disabled());
+        assert!(err.is_err(), "crash plans don't survive re-shaping");
+        let link = FaultPlan::from_events(
+            vec![FaultEvent {
+                at: Time::ZERO,
+                until: Time::ms(2.0),
+                kind: FaultKind::LinkDegrade { factor: 2.0 },
+            }],
+            8,
+        )
+        .unwrap();
+        assert!(open_loop_controlled(&c, &arrivals, &link, &Obs::disabled()).is_ok());
+    }
+
+    #[test]
+    fn switch_is_a_priced_graceful_drain() {
+        // Overload the centralized rung with a 2 kHz burst: the
+        // controller escalates exactly once, the in-service batch
+        // completes on the old shape, and every pending request
+        // migrates to the 8-queue rung behind a 20 ms pause.
+        let h = Hysteresis {
+            window: Time::ms(100.0),
+            dwell: Time::ms(300.0),
+            p95_hi: Time::ms(50.0),
+            depth_hi: 16.0,
+            min_samples: 8,
+            down_fraction: 0.0, // never de-escalate in this test
+            util_hi: 0.5,
+        };
+        let c = Controller::new(ladder_2(), 0, h).unwrap();
+        let arrivals: Vec<Arrival> =
+            (0..600).map(|i| at(100.0 + 0.5 * i as f64, i)).collect();
+        let r = open_loop_controlled(&c, &arrivals, &FaultPlan::none(), &Obs::disabled())
+            .unwrap();
+        assert_eq!(r.switches.len(), 1, "one escalation, no flap");
+        let sw = r.switches[0];
+        assert_eq!((sw.from, sw.to), (0, 1));
+        assert_eq!(sw.cost, Time::ms(20.0));
+        assert!(sw.moved > 0, "pending requests migrate");
+        assert_eq!(r.switch_downtime, Time::ms(20.0));
+        assert!(r.switch_affected >= sw.moved);
+        assert_eq!(r.final_config, 1);
+        assert_eq!(r.report.servers, 8, "report reflects the final rung");
+        // Graceful drain: exactly one batch completes after the switch
+        // started but dispatched before it (the old shape's in-flight
+        // work), and no batch dispatches inside the pause.
+        let resume = sw.at + sw.cost;
+        for b in &r.report.batch_log {
+            assert!(
+                b.dispatched_at <= sw.at || b.dispatched_at >= resume,
+                "no dispatch inside the pause"
+            );
+        }
+        let in_flight = r
+            .report
+            .batch_log
+            .iter()
+            .filter(|b| b.dispatched_at <= sw.at && b.done_at > sw.at)
+            .count();
+        assert_eq!(in_flight, 1, "the old shape's in-service batch completed");
+        assert!(r.report.littles_law_gap() < 1e-9, "Little's law survives switches");
     }
 }
 

@@ -1,0 +1,228 @@
+//! Property tests for the E15 closed-loop runtime controller
+//! (`controller::Controller` driven by `traffic::open_loop_controlled`):
+//!
+//! * hysteresis — the min-dwell contract holds under arrivals built to
+//!   oscillate around the escalation threshold, so the controller never
+//!   flaps;
+//! * identity — a controller that can never fire leaves the run
+//!   bit-identical to the plain `open_loop` path at its initial rung;
+//! * reconciliation — `ctrl.switch` span durations sum *bit-exactly*
+//!   to the reported `switch_downtime` (same f64 expression on both
+//!   sides of the ledger).
+
+use ima_gnn::autotune::{OperatingPoint, Partitioner};
+use ima_gnn::controller::{Controller, CtrlConfig, Hysteresis};
+use ima_gnn::coordinator::Arrival;
+use ima_gnn::experiments::{control_cell, control_setup};
+use ima_gnn::graph::datasets;
+use ima_gnn::obs::Obs;
+use ima_gnn::sim::FaultPlan;
+use ima_gnn::testing::{forall, Rng};
+use ima_gnn::traffic::{
+    open_loop, open_loop_controlled, BatchPolicy, DeploymentQueues, ServiceModel, TrafficReport,
+};
+use ima_gnn::units::Time;
+
+/// A synthetic ladder rung: `servers` parallel queues at
+/// `per_req_ms`/request, switched into for `cost_ms`.
+fn rung(servers: usize, per_req_ms: f64, cost_ms: f64) -> CtrlConfig {
+    let (point, queues) = if servers == 1 {
+        (OperatingPoint::centralized(), DeploymentQueues::Leader)
+    } else {
+        (
+            OperatingPoint::semi(servers, 1.0, Partitioner::FixedSize),
+            DeploymentQueues::ClusterHeads { clusters: servers },
+        )
+    };
+    CtrlConfig {
+        point,
+        queues,
+        service: ServiceModel::new(Time::ZERO, Time::ms(per_req_ms)).expect("valid service"),
+        policy: BatchPolicy::Deadline { max: 8, max_wait: Time::ms(per_req_ms * 0.25) },
+        switch_cost: Time::ms(cost_ms),
+    }
+}
+
+/// Two-rung ladder: 1×1 ms/req (saturates at 1000 req/s) below
+/// 4×0.5 ms/req (8000 req/s).
+fn ladder(cost_ms: f64) -> Vec<CtrlConfig> {
+    vec![rung(1, 1.0, cost_ms), rung(4, 0.5, cost_ms)]
+}
+
+fn hyst() -> Hysteresis {
+    Hysteresis {
+        window: Time::ms(100.0),
+        dwell: Time::ms(400.0),
+        p95_hi: Time::ms(5.0),
+        depth_hi: 6.0,
+        min_samples: 4,
+        down_fraction: 0.7,
+        util_hi: 0.5,
+    }
+}
+
+/// 200 ms bursts at ~3000 req/s (3× the cheap rung's saturation)
+/// alternating with 200 ms of silence — load that straddles the
+/// escalation threshold every phase, the worst case for flapping.
+fn oscillating(rng: &mut Rng, horizon_s: f64) -> Vec<Arrival> {
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    while t < horizon_s {
+        let phase = (t / 0.2) as u64;
+        if phase % 2 == 0 {
+            out.push(Arrival { at: Time::s(t), node: rng.index(64) });
+            t += rng.f64_in(0.8, 1.2) / 3000.0;
+        } else {
+            t = (phase + 1) as f64 * 0.2;
+        }
+    }
+    out
+}
+
+/// Field-by-field bitwise comparison (TrafficReport holds f64s, so
+/// `==` on the seconds' bit patterns is the strongest claim possible).
+fn assert_reports_identical(a: &TrafficReport, b: &TrafficReport) {
+    assert_eq!(a.servers, b.servers);
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.max_queue_depth, b.max_queue_depth);
+    assert_eq!(a.fault_windows, b.fault_windows);
+    let bits = [
+        (a.makespan.as_s(), b.makespan.as_s()),
+        (a.throughput_per_s, b.throughput_per_s),
+        (a.utilization, b.utilization),
+        (a.mean_wait.as_s(), b.mean_wait.as_s()),
+        (a.latency.p50().as_s(), b.latency.p50().as_s()),
+        (a.latency.p95().as_s(), b.latency.p95().as_s()),
+        (a.latency.p99().as_s(), b.latency.p99().as_s()),
+        (a.latency.mean().as_s(), b.latency.mean().as_s()),
+        (a.mean_batch, b.mean_batch),
+        (a.time_avg_in_system, b.time_avg_in_system),
+        (a.sum_response.as_s(), b.sum_response.as_s()),
+        (a.downtime.as_s(), b.downtime.as_s()),
+        (a.availability, b.availability),
+    ];
+    for (i, (x, y)) in bits.iter().enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "field {i}: {x} != {y}");
+    }
+}
+
+#[test]
+fn min_dwell_is_respected_under_oscillating_arrivals() {
+    forall(16, |rng| {
+        let horizon_s = 4.0;
+        let arrivals = oscillating(rng, horizon_s);
+        let h = hyst();
+        let controller = Controller::new(ladder(20.0), 0, h).expect("valid controller");
+        let cr = open_loop_controlled(&controller, &arrivals, &FaultPlan::none(), &Obs::disabled())
+            .expect("controlled run");
+        // Dwell is measured from the end of the previous switch pause.
+        for w in cr.switches.windows(2) {
+            let earliest = w[0].at + w[0].cost + h.dwell;
+            assert!(
+                w[1].at.as_s() + 1e-12 >= earliest.as_s(),
+                "flap: switch at {} before {}",
+                w[1].at,
+                earliest
+            );
+        }
+        // No-flap corollary: the dwell bounds the total switch count
+        // even though the load crosses the threshold every 200 ms.
+        let max_switches = (horizon_s / h.dwell.as_s()).ceil() as usize + 1;
+        assert!(
+            cr.switches.len() <= max_switches,
+            "{} switches exceed the dwell bound {max_switches}",
+            cr.switches.len()
+        );
+    });
+}
+
+#[test]
+fn never_firing_controller_is_bit_identical_to_open_loop() {
+    forall(16, |rng| {
+        let steps = 1 + rng.index(3);
+        let mut arrivals = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..steps * 400 {
+            t += rng.f64_in(0.5, 1.5) / 600.0;
+            arrivals.push(Arrival { at: Time::s(t), node: rng.index(64) });
+        }
+        let lad = ladder(0.0);
+        let h = Hysteresis::never(Time::ms(100.0), Time::ms(400.0));
+        let controller = Controller::new(lad.clone(), 0, h).expect("valid controller");
+        let cr = open_loop_controlled(&controller, &arrivals, &FaultPlan::none(), &Obs::disabled())
+            .expect("controlled run");
+        assert!(cr.switches.is_empty(), "never-threshold controller fired");
+        assert_eq!(cr.switch_downtime.as_s().to_bits(), 0f64.to_bits());
+        assert_eq!(cr.switch_affected, 0);
+        assert_eq!(cr.final_config, 0);
+        let plain = open_loop(1, &lad[0].service, lad[0].policy, &arrivals).expect("plain run");
+        assert_reports_identical(&plain, &cr.report);
+    });
+}
+
+#[test]
+fn switch_spans_reconcile_bit_exactly_with_downtime() {
+    forall(8, |rng| {
+        // Sustained 3× overload, then a quiet tail: at least one
+        // escalation must fire, and a de-escalation usually follows.
+        let mut arrivals = Vec::new();
+        let mut t = 0.0;
+        while t < 1.5 {
+            arrivals.push(Arrival { at: Time::s(t), node: rng.index(64) });
+            t += rng.f64_in(0.8, 1.2) / 3000.0;
+        }
+        while t < 3.5 {
+            arrivals.push(Arrival { at: Time::s(t), node: rng.index(64) });
+            t += rng.f64_in(0.8, 1.2) / 100.0;
+        }
+        let controller = Controller::new(ladder(25.0), 0, hyst()).expect("valid controller");
+        let obs = Obs::new(4_096);
+        let cr = open_loop_controlled(&controller, &arrivals, &FaultPlan::none(), &obs)
+            .expect("controlled run");
+        assert!(!cr.switches.is_empty(), "overload never escalated");
+        assert_eq!(cr.report.dropped_spans, 0);
+        let span_sum: Time = obs
+            .tracer
+            .spans()
+            .iter()
+            .filter(|s| s.name == "ctrl.switch")
+            .map(|s| s.end - s.start)
+            .sum();
+        assert_eq!(
+            span_sum.as_s().to_bits(),
+            cr.switch_downtime.as_s().to_bits(),
+            "span sum {span_sum} != ledger {}",
+            cr.switch_downtime
+        );
+        assert_eq!(obs.metrics.counter_value("ctrl.switches"), cr.switches.len() as u64);
+        let ledger: Time = cr.switches.iter().map(|w| w.cost).sum();
+        let rel = ((ledger - cr.switch_downtime).as_s() / cr.switch_downtime.as_s()).abs();
+        assert!(rel < 1e-12, "per-switch costs drift from the ledger by {rel:.3e}");
+    });
+}
+
+#[test]
+fn e15_cell_composes_with_link_degrade_faults() {
+    // Use whichever Table 2 dataset builds the deepest capacity ladder
+    // at this sample cap — the most interesting cell to exercise.
+    let (d, setup) = datasets::all()
+        .into_iter()
+        .map(|d| {
+            let s = control_setup(&d, 120).expect("control setup");
+            (d, s)
+        })
+        .max_by_key(|(_, s)| s.ladder.len())
+        .expect("at least one dataset");
+    assert!(setup.slo.as_s() > 0.0);
+    let cell = control_cell(&setup, "linkfault", d.nodes, 300, 7).expect("cell");
+    assert!(!cell.plan.is_empty(), "linkfault cell carries no fault plan");
+    let cr = open_loop_controlled(&cell.controller, &cell.arrivals, &cell.plan, &Obs::disabled())
+        .expect("controlled run");
+    assert_eq!(cr.report.offered, cell.arrivals.len());
+    assert!(cr.report.littles_law_gap() < 1e-9, "Little's law broke under control + faults");
+    for w in cr.switches.windows(2) {
+        assert!(w[1].at.as_s() + 1e-12 >= (w[0].at + w[0].cost + cell.dwell).as_s());
+    }
+}
