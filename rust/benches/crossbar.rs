@@ -70,6 +70,27 @@ fn main() {
         rf_bin / bi.max(1e-9)
     );
 
+    b.section("accumulate_rows dense/sparse dispatch (512x512)");
+    let mut rng = Rng::new(11);
+    let mut sparse_mask = vec![0u64; 8];
+    let mut dense_mask = vec![0u64; 8];
+    for r in 0..512 {
+        if rng.index(16) == 0 {
+            sparse_mask[r / 64] |= 1u64 << (r % 64); // ~32 rows: sparse walk
+        }
+        if rng.index(8) != 0 {
+            dense_mask[r / 64] |= 1u64 << (r % 64); // ~7/8 dense: word lanes
+        }
+    }
+    b.case("sparse mask (~1/16 rows)", || {
+        agg.accumulate_rows(&sparse_mask, &mut out).unwrap();
+        black_box(out[0])
+    });
+    b.case("dense mask (~7/8 rows)", || {
+        agg.accumulate_rows(&dense_mask, &mut out).unwrap();
+        black_box(out[0])
+    });
+
     b.section("CAM crossbar (traversal core ops)");
     let cfg = presets::decentralized();
     let mut cam = CamCrossbar::new(cfg.traversal.geometry, cfg.device.clone()).unwrap();

@@ -17,7 +17,7 @@
 //! pipeline is bit-identical to the unsharded seed path (asserted in
 //! `rust/tests/sharded_serving.rs`).
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
 use std::time::{Duration, Instant};
 
 use crate::cores::{FeatureMatrix, GnnWorkload};
@@ -25,6 +25,7 @@ use crate::error::{Error, Result};
 use crate::graph::{Csr, NeighborSampler, ShardPlan};
 use crate::netmodel::{NetModel, Setting, Topology};
 use crate::obs::{MetricsRegistry, Tracer};
+use crate::par;
 use crate::runtime::{ArtifactSpec, Tensor};
 use crate::span;
 use crate::units::Time;
@@ -183,6 +184,57 @@ pub struct ShardBatch {
     pub nbr_idx: Vec<i32>,
 }
 
+/// Reused allocations of the `assemble` hot path: the per-shard group
+/// index (a dense `Vec` keyed by shard id plus the touched-shard list
+/// for cheap clearing — replacing the per-call `BTreeMap` and its fresh
+/// position vectors) and the sequential path's slot buffer.  Lives
+/// behind a `RefCell` because `assemble` is `&self` (shared-ref callers
+/// in the serving tests); the engine is `!Sync` anyway (its `Tracer`
+/// uses interior mutability), so no cross-thread aliasing can exist.
+#[derive(Debug, Default)]
+struct AssembleScratch {
+    /// `groups[s]` — positions (indices into the request slice) homed on
+    /// shard `s`.  Only the entries named in `touched` are live.
+    groups: Vec<Vec<usize>>,
+    /// Shards with a non-empty group this call, ascending.
+    touched: Vec<usize>,
+    /// Per-chunk slot buffer of the sequential path.
+    slots: Vec<usize>,
+}
+
+/// Build one padded [`ShardBatch`]: slot lookup, last-slot padding,
+/// run-coalesced feature gather, neighbor-row concatenation.  A free
+/// function over the engine's fields (not a method) so the parallel
+/// `assemble` path can call it without capturing `&RoundEngine` — the
+/// `RefCell` scratch makes the engine `!Sync`.
+fn build_shard_batch(
+    binding: &GcnLayerBinding,
+    plan: &ShardPlan,
+    stores: &[FeatureStore],
+    nodes: &[usize],
+    s: usize,
+    chunk: &[usize],
+    slots: &mut Vec<usize>,
+) -> Result<ShardBatch> {
+    let shard = &plan.shards()[s];
+    slots.clear();
+    slots.extend(chunk.iter().map(|&i| plan.home(nodes[i]).1));
+    let pad = *slots.last().expect("chunks are non-empty");
+    slots.resize(binding.batch, pad);
+    let x_self = stores[s].gather(slots)?;
+    let mut nbr_idx = Vec::with_capacity(binding.batch * binding.sample);
+    for &slot in slots.iter() {
+        nbr_idx.extend_from_slice(shard.member_nbr_row(slot, binding.sample));
+    }
+    Ok(ShardBatch {
+        shard: s,
+        nodes: chunk.iter().map(|&i| nodes[i]).collect(),
+        positions: chunk.to_vec(),
+        x_self,
+        nbr_idx,
+    })
+}
+
 /// Outputs of one engine execution over a request list.
 #[derive(Debug, Clone)]
 pub struct EngineOutput {
@@ -213,6 +265,11 @@ pub struct RoundEngine {
     /// disabled by default ([`RoundEngine::enable_tracing`] opts in),
     /// so untraced runs stay bit-identical.
     tracer: Tracer,
+    /// Reused `assemble` allocations (see [`AssembleScratch`]).
+    scratch: RefCell<AssembleScratch>,
+    /// Worker threads `assemble` fans per-shard batch construction over
+    /// (1 = sequential, the default; output is identical at any count).
+    assembly_threads: usize,
 }
 
 impl RoundEngine {
@@ -250,7 +307,18 @@ impl RoundEngine {
             table_tensors,
             metrics: MetricsRegistry::new(),
             tracer: Tracer::disabled(),
+            scratch: RefCell::new(AssembleScratch::default()),
+            assembly_threads: 1,
         })
+    }
+
+    /// Configure how many worker threads [`RoundEngine::assemble`] fans
+    /// per-shard batch construction over (capped by the number of work
+    /// items; 1 = sequential).  Assembly output is byte-identical at
+    /// every setting — results land slot-indexed, like the sweep
+    /// drivers (asserted in tests and in perfbench before timing).
+    pub fn set_assembly_threads(&mut self, threads: usize) {
+        self.assembly_threads = threads.max(1);
     }
 
     /// Opt in to span recording on the serve / assemble / round-barrier
@@ -371,6 +439,19 @@ impl RoundEngine {
     /// within a shard), chunk to the static batch size and pad by
     /// repeating the last entry — exactly the seed pipeline, per shard.
     pub fn assemble(&self, nodes: &[usize]) -> Result<Vec<ShardBatch>> {
+        self.assemble_with_threads(nodes, self.assembly_threads)
+    }
+
+    /// [`RoundEngine::assemble`] with an explicit worker count.  The
+    /// grouping pass runs once on the caller (reused scratch); per-shard
+    /// batch construction then fans over [`par::par_try_map`] with
+    /// slot-indexed results, so the output is byte-identical to the
+    /// sequential path at every thread count.
+    pub fn assemble_with_threads(
+        &self,
+        nodes: &[usize],
+        threads: usize,
+    ) -> Result<Vec<ShardBatch>> {
         let _span = span!(self.tracer, "engine.assemble", nodes = nodes.len());
         let b = &self.binding;
         if nodes.is_empty() {
@@ -381,34 +462,55 @@ impl RoundEngine {
                 return Err(Error::Coordinator(format!("node {v} not in graph")));
             }
         }
-        let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-        for (i, &v) in nodes.iter().enumerate() {
-            groups.entry(self.plan.home(v).0).or_default().push(i);
+        let mut scratch = self.scratch.borrow_mut();
+        let AssembleScratch { groups, touched, slots } = &mut *scratch;
+        groups.resize_with(self.plan.num_shards(), Vec::new);
+        for &s in touched.iter() {
+            groups[s].clear();
         }
-        let mut out = Vec::new();
-        for (s, positions) in groups {
-            let shard = &self.plan.shards()[s];
-            let store = &self.stores[s];
-            for chunk in positions.chunks(b.batch) {
-                let mut slots: Vec<usize> =
-                    chunk.iter().map(|&i| self.plan.home(nodes[i]).1).collect();
-                let pad = *slots.last().expect("chunks are non-empty");
-                slots.resize(b.batch, pad);
-                let x_self = store.gather(&slots)?;
-                let mut nbr_idx = Vec::with_capacity(b.batch * b.sample);
-                for &slot in &slots {
-                    nbr_idx.extend_from_slice(shard.member_nbr_row(slot, b.sample));
+        touched.clear();
+        for (i, &v) in nodes.iter().enumerate() {
+            let s = self.plan.home(v).0;
+            if groups[s].is_empty() {
+                touched.push(s);
+            }
+            groups[s].push(i);
+        }
+        // Ascending shard order — the output contract the BTreeMap
+        // grouping used to provide.
+        touched.sort_unstable();
+
+        if threads <= 1 {
+            let mut out = Vec::new();
+            for &s in touched.iter() {
+                for chunk in groups[s].chunks(b.batch) {
+                    out.push(build_shard_batch(
+                        b,
+                        &self.plan,
+                        &self.stores,
+                        nodes,
+                        s,
+                        chunk,
+                        slots,
+                    )?);
                 }
-                out.push(ShardBatch {
-                    shard: s,
-                    nodes: chunk.iter().map(|&i| nodes[i]).collect(),
-                    positions: chunk.to_vec(),
-                    x_self,
-                    nbr_idx,
-                });
+            }
+            return Ok(out);
+        }
+        // One work item per (shard, chunk); the closure captures
+        // individual engine fields, never `&self` (the scratch
+        // `RefCell` makes the engine `!Sync`).
+        let mut items: Vec<(usize, &[usize])> = Vec::new();
+        for &s in touched.iter() {
+            for chunk in groups[s].chunks(b.batch) {
+                items.push((s, chunk));
             }
         }
-        Ok(out)
+        let (plan, stores) = (&self.plan, &self.stores);
+        par::par_try_map(&items, threads, |&(s, chunk)| {
+            let mut slots = Vec::with_capacity(b.batch);
+            build_shard_batch(b, plan, stores, nodes, s, chunk, &mut slots)
+        })
     }
 
     /// Execute one request list through the PJRT funnel: assemble,
@@ -422,7 +524,9 @@ impl RoundEngine {
         let mut wall = Duration::ZERO;
         let mut served = 0u64;
         for sb in batches {
-            // Round-constant tensors come from the end_round cache.
+            // Round-constant tensors come from the end_round cache; the
+            // clones are refcount bumps over the shared buffers (tensor
+            // payloads are Arc-backed), not per-batch table copies.
             let table_tensor = self.table_tensors[sb.shard]
                 .clone()
                 .ok_or_else(|| Error::Coordinator("serve before end_round barrier".into()))?;
@@ -637,6 +741,66 @@ mod tests {
         // Out-of-range and empty requests fail loudly.
         assert!(e.assemble(&[]).is_err());
         assert!(e.assemble(&[999]).is_err());
+    }
+
+    /// Tentpole invariant: parallel per-shard batch construction is
+    /// byte-identical to the sequential path on a multi-shard plan, at
+    /// every thread count, through both the explicit and the
+    /// engine-configured entry points — and the reused scratch leaks no
+    /// state between calls.
+    #[test]
+    fn parallel_assembly_is_byte_identical_to_sequential() {
+        let mut e = engine(256);
+        assert!(e.plan().num_shards() > 1);
+        let mut rng = Rng::new(9);
+        for node in 0..256 {
+            let f: Vec<f32> = (0..64).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+            e.upload(node, &f).unwrap();
+        }
+        e.end_round();
+        // Interleaved shards, duplicates, and a shard-crossing tail.
+        let mut nodes: Vec<usize> = (0..256).rev().collect();
+        nodes.extend([3, 3, 17, 250]);
+        let seq = e.assemble_with_threads(&nodes, 1).unwrap();
+        assert!(seq.len() > 2);
+        for threads in [2, 3, 8, 64] {
+            let par = e.assemble_with_threads(&nodes, threads).unwrap();
+            assert_eq!(par, seq, "threads={threads}");
+        }
+        e.set_assembly_threads(4);
+        assert_eq!(e.assemble(&nodes).unwrap(), seq);
+        // A small follow-up request reuses the scratch cleanly, and the
+        // parallel path reports errors like the sequential one.
+        let small = e.assemble(&[1, 2]).unwrap();
+        assert_eq!(small, e.assemble_with_threads(&[1, 2], 1).unwrap());
+        assert!(e.assemble_with_threads(&[999], 4).is_err());
+        assert!(e.assemble_with_threads(&[], 4).is_err());
+    }
+
+    /// Satellite regression: handing the round-constant caches to a
+    /// batch is a refcount bump over the shared buffer, never a table
+    /// copy — and reading/cloning the cache is not a rebuild
+    /// (`table_builds` stays pinned).
+    #[test]
+    fn round_constant_tensor_clones_share_their_buffers() {
+        let mut e = engine(256);
+        e.end_round();
+        let builds = e.table_builds();
+        let t = e.table_tensor(0).unwrap();
+        let c = t.clone();
+        assert_eq!(c, *t);
+        assert_eq!(
+            t.as_f32().unwrap().as_ptr(),
+            c.as_f32().unwrap().as_ptr(),
+            "table clone must alias the cached buffer"
+        );
+        let w0 = e.w_tensor.clone();
+        assert_eq!(
+            w0.as_f32().unwrap().as_ptr(),
+            e.w_tensor.as_f32().unwrap().as_ptr(),
+            "weight clone must alias the cached buffer"
+        );
+        assert_eq!(e.table_builds(), builds, "cache reads must not rebuild tensors");
     }
 
     #[test]

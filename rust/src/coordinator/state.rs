@@ -101,11 +101,34 @@ impl FeatureStore {
 
     /// Gather a batch of rows (front buffer) into a flat matrix.
     pub fn gather(&self, nodes: &[usize]) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(nodes.len() * self.feature_len);
-        for &n in nodes {
-            out.extend_from_slice(self.read(n)?);
-        }
+        let mut out = Vec::new();
+        self.gather_into(nodes, &mut out)?;
         Ok(out)
+    }
+
+    /// [`Self::gather`] into a reused buffer (cleared on entry; contents
+    /// unspecified after an error).  Runs of consecutive node ids
+    /// coalesce into one contiguous copy over the feature dimension —
+    /// the cache-blocked path the engine's full-table build (one memcpy
+    /// of the whole front buffer) and batch assembly ride.
+    pub fn gather_into(&self, nodes: &[usize], out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        out.reserve(nodes.len() * self.feature_len);
+        let f = self.feature_len;
+        let mut i = 0;
+        while i < nodes.len() {
+            self.check(nodes[i], f)?;
+            // Extend the run while ids stay consecutive and in range.
+            let mut j = i + 1;
+            while j < nodes.len() && nodes[j] < self.num_nodes && nodes[j] == nodes[j - 1] + 1
+            {
+                j += 1;
+            }
+            let at = nodes[i] * f;
+            out.extend_from_slice(&self.front[at..at + (j - i) * f]);
+            i = j;
+        }
+        Ok(())
     }
 }
 
@@ -153,6 +176,44 @@ mod tests {
         s.write(2, &[5.0, 6.0]).unwrap();
         s.swap();
         assert_eq!(s.gather(&[2, 0]).unwrap(), vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    /// The run-coalesced gather is the per-row gather, bit for bit:
+    /// identity ranges (one memcpy), scattered ids, duplicates, and
+    /// descending ids all agree with the row-at-a-time reference.
+    #[test]
+    fn gather_coalescing_matches_per_row_reference() {
+        forall(16, |rng: &mut Rng| {
+            let n = rng.index(12) + 1;
+            let f = rng.index(5) + 1;
+            let mut s = FeatureStore::new(n, f);
+            for node in 0..n {
+                let vals: Vec<f32> = (0..f).map(|_| rng.f64() as f32).collect();
+                s.write(node, &vals).unwrap();
+            }
+            s.swap();
+            // Full-range identity: exactly the front buffer.
+            let all: Vec<usize> = (0..n).collect();
+            assert_eq!(s.gather(&all).unwrap(), s.front);
+            // Random id lists (runs, repeats, reversals all arise).
+            for _ in 0..4 {
+                let ids: Vec<usize> = (0..rng.index(3 * n)).map(|_| rng.index(n)).collect();
+                let want: Vec<f32> =
+                    ids.iter().flat_map(|&v| s.read(v).unwrap().iter().copied()).collect();
+                let mut out = vec![7.0f32; 3]; // stale contents must not survive
+                s.gather_into(&ids, &mut out).unwrap();
+                assert_eq!(out, want);
+            }
+        });
+    }
+
+    #[test]
+    fn gather_rejects_out_of_range_ids_anywhere_in_a_run() {
+        let s = FeatureStore::new(3, 2);
+        let mut out = Vec::new();
+        assert!(s.gather_into(&[0, 1, 2, 3], &mut out).is_err()); // run exits the store
+        assert!(s.gather_into(&[5], &mut out).is_err());
+        assert!(s.gather(&[1, 9, 0]).is_err());
     }
 
     #[test]

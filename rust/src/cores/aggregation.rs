@@ -27,6 +27,10 @@ pub struct AggregationCore {
     window: Option<(usize, usize)>,
     /// Scratch: packed row-activation mask (one bit per crossbar row).
     mask: Vec<u64>,
+    /// High-water mark of possibly-nonzero `mask` words: `accumulate_into`
+    /// packs/clears only this prefix instead of refilling the whole
+    /// array-sized mask for every (usually much smaller) window.
+    mask_live: usize,
     /// Always-on counters (`aggregation.programs` counts the RRAM cache
     /// misses the `programs()` accessor reports).
     metrics: MetricsRegistry,
@@ -41,6 +45,7 @@ impl AggregationCore {
             config,
             window: None,
             mask: vec![0u64; mask_words],
+            mask_live: 0,
             metrics: MetricsRegistry::new(),
         })
     }
@@ -142,12 +147,24 @@ impl AggregationCore {
                 out.len()
             )));
         }
-        self.mask.fill(0);
-        for (r, &a) in active.iter().enumerate() {
-            if a {
-                self.mask[r / 64] |= 1u64 << (r % 64);
-            }
+        // Pack word-at-a-time over exactly the window's rows.  Every
+        // packed word is fully assigned (never OR-ed), so only whole
+        // words beyond this window's coverage can carry stale bits —
+        // clear those up to the previous high-water mark and leave the
+        // (array-sized) tail alone: all rows past the window are
+        // always-false and their words were never touched.
+        let words = rows.div_ceil(64);
+        for w in self.mask[words..self.mask_live.max(words)].iter_mut() {
+            *w = 0;
         }
+        for (w, chunk) in active.chunks(64).enumerate() {
+            let mut bits = 0u64;
+            for (i, &a) in chunk.iter().enumerate() {
+                bits |= (a as u64) << i;
+            }
+            self.mask[w] = bits;
+        }
+        self.mask_live = words;
         self.xbar.accumulate_rows(&self.mask, out)
     }
 
@@ -296,6 +313,52 @@ mod tests {
         c.aggregate_into(&wide, &[true], &mut out4).unwrap();
         assert_eq!(out4, vec![-5, 2, 3, 4]);
         assert_eq!(c.programs(), 3);
+    }
+
+    /// The word-at-a-time repack covers the ragged tail word (window
+    /// rows % 64 ≠ 0) exactly: activations in the partial last chunk
+    /// land, bits beyond it stay clear.
+    #[test]
+    fn ragged_tail_word_packs_exactly() {
+        let mut c = core();
+        // 70 rows: word 0 full, word 1 a 6-bit tail.
+        let features = Tile::from_fn(70, 3, |r, col| ((r + col) % 15) as i32 - 7);
+        let mut active = vec![false; 70];
+        for r in 60..70 {
+            active[r] = true; // straddles the word boundary
+        }
+        let mut out = vec![0i64; 3];
+        c.aggregate_into(&features, &active, &mut out).unwrap();
+        for col in 0..3 {
+            let want: i64 = (60..70).map(|r| ((r + col) % 15) as i64 - 7).sum();
+            assert_eq!(out[col], want, "col {col}");
+        }
+        assert_eq!(c.mask[0], !0u64 << 60);
+        assert_eq!(c.mask[1], 0b11_1111);
+        assert!(c.mask[2..].iter().all(|&w| w == 0), "rows past the window stay clear");
+    }
+
+    /// Shrinking the window must clear the larger window's stale mask
+    /// words beyond the new coverage (the high-water mark) — a stale set
+    /// bit would select array rows outside the window on every later
+    /// sweep.
+    #[test]
+    fn window_shrink_clears_stale_high_words() {
+        let mut c = core();
+        let big = Tile::from_fn(130, 2, |_, _| 1); // 3 mask words
+        let mut out = vec![0i64; 2];
+        c.aggregate_into(&big, &vec![true; 130], &mut out).unwrap();
+        assert_eq!(out, vec![130, 130]);
+        assert_eq!(c.mask_live, 3);
+        assert_eq!(c.mask[2], 0b11); // rows 128..130
+        let small = Tile::from_fn(2, 2, |_, _| 5); // 1 mask word
+        c.aggregate_into(&small, &[true, true], &mut out).unwrap();
+        assert_eq!(out, vec![10, 10]);
+        assert_eq!(c.mask_live, 1);
+        assert!(c.mask[1..].iter().all(|&w| w == 0), "stale high words must be cleared");
+        // Growing again repacks cleanly on top of the shrunk state.
+        c.aggregate_into(&big, &vec![true; 130], &mut out).unwrap();
+        assert_eq!(out, vec![130, 130]);
     }
 
     #[test]

@@ -21,6 +21,10 @@ pub struct FeatureExtractionCore {
     xbar: MvmCrossbar,
     /// Scratch: zero-padded DAC codes (geometry rows).
     padded: Vec<u32>,
+    /// Live prefix of `padded` (the previous call's input length):
+    /// everything past it is already zero, so `transform_into` zeroes
+    /// only the stale delta instead of the whole row dimension.
+    padded_live: usize,
     /// Scratch: full-width crossbar output (geometry cols).
     full_out: Vec<i64>,
     /// Shape of the last programmed layer — the cache gate that makes
@@ -42,6 +46,7 @@ impl FeatureExtractionCore {
             config,
             device,
             padded: vec![0u32; rows],
+            padded_live: 0,
             full_out: vec![0i64; cols],
             resident_shape: None,
             programs: 0,
@@ -125,7 +130,12 @@ impl FeatureExtractionCore {
             )));
         }
         self.padded[..input.len()].copy_from_slice(input);
-        self.padded[input.len()..].fill(0);
+        // Zero only the stale tail a previous longer input left behind
+        // (rows past `padded_live` never held data).
+        if self.padded_live > input.len() {
+            self.padded[input.len()..self.padded_live].fill(0);
+        }
+        self.padded_live = input.len();
         self.xbar.evaluate_into(&self.padded, &mut self.full_out)?;
         // Activation unit: ReLU.
         out.clear();
@@ -265,5 +275,23 @@ mod tests {
         // A longer input must not survive into a shorter one's padding.
         c.transform_into(&[5], 2, &mut out).unwrap();
         assert_eq!(out, vec![5, 0]);
+    }
+
+    /// The delta-zeroing of the padded scratch survives arbitrary
+    /// grow/shrink sequences of the input length — every call must see
+    /// zeros past its own input, regardless of history.
+    #[test]
+    fn padding_stays_clean_across_length_changes() {
+        let mut c = core();
+        // W = I₂ padded: out mirrors the first two inputs.
+        c.program_weights(&[1, 0, 0, 1], 2, 2).unwrap();
+        let mut out = Vec::new();
+        for len in [2usize, 1, 2, 1, 1, 2] {
+            let input = vec![9u32; len];
+            c.transform_into(&input, 2, &mut out).unwrap();
+            let want = if len >= 2 { vec![9, 9] } else { vec![9, 0] };
+            assert_eq!(out, want, "len {len}");
+            assert!(c.padded[len..].iter().all(|&v| v == 0), "stale padding at len {len}");
+        }
     }
 }

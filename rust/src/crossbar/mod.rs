@@ -8,4 +8,4 @@ mod cam;
 mod mvm;
 
 pub use cam::CamCrossbar;
-pub use mvm::MvmCrossbar;
+pub use mvm::{MvmCrossbar, DENSE_WORD_THRESHOLD};

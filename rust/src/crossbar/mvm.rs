@@ -16,6 +16,50 @@ use crate::device::{Adc, Dac, RramCell, SampleHold, ShiftAdd};
 use crate::error::{Error, Result};
 use crate::units::{Energy, Power, Time};
 
+/// Popcount at or above which a 64-bit mask word takes the dense
+/// row-slab path of [`MvmCrossbar::accumulate_rows`] (below it, the
+/// sparse `bits &= bits - 1` walk wins — see DESIGN.md §15).  Public so
+/// the differential fuzz harness can force masks onto both sides of the
+/// dispatch boundary.
+pub const DENSE_WORD_THRESHOLD: u32 = 32;
+
+/// Lane width of the unrolled inner loops (§15): fixed-trip-count
+/// chunks the compiler can keep in registers / autovectorize.  i64
+/// integer accumulators make any reassociation across lanes exact, so
+/// every lane path stays bit-identical to the scalar reference.
+const LANES: usize = 8;
+
+/// `out[c] += row[c]`, LANES-wide unrolled over the common prefix
+/// (`out.len() == row.len()` by construction at every call site).
+#[inline]
+fn add_row_lanes(out: &mut [i64], row: &[i32]) {
+    let mut o = out.chunks_exact_mut(LANES);
+    let mut r = row.chunks_exact(LANES);
+    for (oc, rc) in (&mut o).zip(&mut r) {
+        for (ov, &rv) in oc.iter_mut().zip(rc) {
+            *ov += rv as i64;
+        }
+    }
+    for (ov, &rv) in o.into_remainder().iter_mut().zip(r.remainder()) {
+        *ov += rv as i64;
+    }
+}
+
+/// `out[c] += x * row[c]`, the scaled (fused multi-bit) lane variant.
+#[inline]
+fn add_row_scaled_lanes(out: &mut [i64], row: &[i32], x: i64) {
+    let mut o = out.chunks_exact_mut(LANES);
+    let mut r = row.chunks_exact(LANES);
+    for (oc, rc) in (&mut o).zip(&mut r) {
+        for (ov, &rv) in oc.iter_mut().zip(rc) {
+            *ov += x * rv as i64;
+        }
+    }
+    for (ov, &rv) in o.into_remainder().iter_mut().zip(r.remainder()) {
+        *ov += x * rv as i64;
+    }
+}
+
 /// One resistive MVM crossbar array.
 #[derive(Debug, Clone)]
 pub struct MvmCrossbar {
@@ -246,17 +290,15 @@ impl MvmCrossbar {
                 "activation mask selects rows beyond the {rows}-row array"
             )));
         }
-        let k = out.len();
         out.fill(0);
         for (w, &word) in mask.iter().enumerate() {
-            let mut bits = word;
-            while bits != 0 {
-                let r = w * 64 + bits.trailing_zeros() as usize;
-                bits &= bits - 1;
-                let row = &self.weights[r * cols..r * cols + k];
-                for (o, &wt) in out.iter_mut().zip(row.iter()) {
-                    *o += wt as i64;
-                }
+            if word == 0 {
+                continue;
+            }
+            if word.count_ones() >= DENSE_WORD_THRESHOLD {
+                self.accumulate_word_dense(w, word, out);
+            } else {
+                self.accumulate_word_sparse(w, word, out);
             }
         }
         let (lo, hi) = self.adc_range();
@@ -264,6 +306,51 @@ impl MvmCrossbar {
             *o = (*o).clamp(lo, hi);
         }
         Ok(())
+    }
+
+    /// Sparse side of the [`DENSE_WORD_THRESHOLD`] dispatch: walk the
+    /// word's set bits (`bits &= bits - 1`) and add each selected row
+    /// with the lane-unrolled kernel.
+    fn accumulate_word_sparse(&self, w: usize, word: u64, out: &mut [i64]) {
+        let cols = self.geometry.cols;
+        let k = out.len();
+        let mut bits = word;
+        while bits != 0 {
+            let r = w * 64 + bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            add_row_lanes(out, &self.weights[r * cols..r * cols + k]);
+        }
+    }
+
+    /// Dense side of the dispatch: the word selects most of its ≤64-row
+    /// slab, so column-block the adds instead — one `[i64; LANES]`
+    /// register accumulator per column block, streaming every selected
+    /// row of the slab through it before the block is written back to
+    /// `out` once.  Reassociates the per-column sum across rows, which
+    /// is exact for i64 integer adds (DESIGN.md §15).
+    fn accumulate_word_dense(&self, w: usize, word: u64, out: &mut [i64]) {
+        let cols = self.geometry.cols;
+        let base = w * 64;
+        let slab_rows = (self.geometry.rows - base).min(64);
+        let k = out.len();
+        let mut c0 = 0;
+        while c0 < k {
+            let width = LANES.min(k - c0);
+            let mut acc = [0i64; LANES];
+            for dr in 0..slab_rows {
+                if (word >> dr) & 1 == 0 {
+                    continue;
+                }
+                let at = (base + dr) * cols + c0;
+                for (a, &wt) in acc.iter_mut().zip(&self.weights[at..at + width]) {
+                    *a += wt as i64;
+                }
+            }
+            for (o, &a) in out[c0..c0 + width].iter_mut().zip(&acc) {
+                *o += a;
+            }
+            c0 += width;
+        }
     }
 
     /// Shared input validation (arity + DAC range).
@@ -291,7 +378,9 @@ impl MvmCrossbar {
 
     /// Single-plane path for binary inputs: only bit-plane 0 carries
     /// activations, so one row sweep + one clamp reproduces the full
-    /// bit-serial result.
+    /// bit-serial result.  Row-major on purpose — the full weight
+    /// matrix does not fit L1, so each active row streams through the
+    /// lane-unrolled add once (§15).
     fn evaluate_binary(&self, input: &[u32], out: &mut [i64]) {
         let cols = self.geometry.cols;
         out.fill(0);
@@ -299,10 +388,7 @@ impl MvmCrossbar {
             if x == 0 {
                 continue;
             }
-            let row = &self.weights[r * cols..(r + 1) * cols];
-            for (o, &w) in out.iter_mut().zip(row.iter()) {
-                *o += w as i64;
-            }
+            add_row_lanes(out, &self.weights[r * cols..(r + 1) * cols]);
         }
         let (lo, hi) = self.adc_range();
         for o in out.iter_mut() {
@@ -311,7 +397,8 @@ impl MvmCrossbar {
     }
 
     /// Clip-free fused path: with no reachable plane sum outside the ADC
-    /// range, `Σ_b 2^b·Σ_r bit_b(x_r)·G = Σ_r x_r·G` exactly.
+    /// range, `Σ_b 2^b·Σ_r bit_b(x_r)·G = Σ_r x_r·G` exactly.  Same
+    /// row-major lane treatment as the binary path.
     fn evaluate_fused(&self, input: &[u32], out: &mut [i64]) {
         let cols = self.geometry.cols;
         out.fill(0);
@@ -319,11 +406,7 @@ impl MvmCrossbar {
             if x == 0 {
                 continue;
             }
-            let x = x as i64;
-            let row = &self.weights[r * cols..(r + 1) * cols];
-            for (o, &w) in out.iter_mut().zip(row.iter()) {
-                *o += x * w as i64;
-            }
+            add_row_scaled_lanes(out, &self.weights[r * cols..(r + 1) * cols], x as i64);
         }
     }
 
@@ -598,6 +681,83 @@ mod tests {
         w[0] = 1;
         xb.program(&w).unwrap();
         assert!(xb.clip_free());
+    }
+
+    /// The dense-word / sparse-word dispatch of `accumulate_rows` is
+    /// bit-identical to the bit-serial reference at every mask density —
+    /// empty and full words, words straddling `DENSE_WORD_THRESHOLD`,
+    /// and ragged tail words (rows % 64 ≠ 0) — in both the clipping and
+    /// the non-clipping ADC regime.
+    #[test]
+    fn dense_and_sparse_mask_words_match_the_reference() {
+        forall(40, |rng: &mut Rng| {
+            let rows = rng.index(220) + 1; // up to 4 words, tails common
+            let cols = rng.index(40) + 1;
+            let mut g = CrossbarGeometry::new(rows, cols);
+            g.cell_bits = rng.u64_in(2, 5) as u32;
+            g.adc_bits = rng.u64_in(3, 16) as u32; // narrow ADCs clip
+            let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+            let (lo, hi) = xb.weight_range();
+            let weights: Vec<i32> =
+                (0..rows * cols).map(|_| rng.i64_in(lo as i64, hi as i64) as i32).collect();
+            xb.program(&weights).unwrap();
+            // Per word, force a density class: empty, full, sparse, or
+            // straddling the dense dispatch threshold.
+            let mut mask = vec![0u64; rows.div_ceil(64)];
+            for (w, word) in mask.iter_mut().enumerate() {
+                let slab = (rows - w * 64).min(64) as u64;
+                let ones = match rng.index(5) {
+                    0 => 0,
+                    1 => slab,
+                    2 => rng.u64_in(1, 8.min(slab)),
+                    3 => rng.u64_in(1, slab),
+                    _ => rng.u64_in(28.min(slab), 36.min(slab)),
+                };
+                let mut bits = 0u64;
+                let mut set = 0;
+                while set < ones {
+                    let b = rng.index(slab as usize) as u64;
+                    if bits >> b & 1 == 0 {
+                        bits |= 1 << b;
+                        set += 1;
+                    }
+                }
+                *word = bits;
+            }
+            let input: Vec<u32> =
+                (0..rows).map(|r| (mask[r / 64] >> (r % 64) & 1) as u32).collect();
+            let want = xb.evaluate_reference(&input).unwrap();
+            let mut out = vec![0i64; cols];
+            xb.accumulate_rows(&mask, &mut out).unwrap();
+            assert_eq!(out, want, "{rows}x{cols} adc={} mask={mask:?}", g.adc_bits);
+            // Prefix outputs (a programmed sub-tile's column group)
+            // agree with the leading reference columns on both paths.
+            let k = rng.index(cols) + 1;
+            let mut head = vec![0i64; k];
+            xb.accumulate_rows(&mask, &mut head).unwrap();
+            assert_eq!(head, want[..k], "column-group prefix mismatch");
+        });
+    }
+
+    #[test]
+    fn empty_and_full_masks_hit_both_dispatch_sides() {
+        // 100 rows: word 0 full (dense path), word 1 a ragged 36-row
+        // tail — full tail popcount 36 ≥ threshold, so dense too.
+        let mut xb = xbar(100, 8);
+        let weights: Vec<i32> = (0..100 * 8).map(|i| (i % 15) as i32 - 8).collect();
+        xb.program(&weights).unwrap();
+        let want = xb.evaluate_reference(&vec![1u32; 100]).unwrap();
+        let mut out = vec![0i64; 8];
+        xb.accumulate_rows(&[!0u64, (1u64 << 36) - 1], &mut out).unwrap();
+        assert_eq!(out, want, "full mask");
+        // Empty mask: zeros (clamped 0), no rows touched.
+        xb.accumulate_rows(&[0, 0], &mut out).unwrap();
+        assert_eq!(out, vec![0i64; 8]);
+        // One word dense, the other sparse, in the same call.
+        let mask = [!0u64, 0b101];
+        let input: Vec<u32> = (0..100).map(|r| (mask[r / 64] >> (r % 64) & 1) as u32).collect();
+        xb.accumulate_rows(&mask, &mut out).unwrap();
+        assert_eq!(out, xb.evaluate_reference(&input).unwrap());
     }
 
     #[test]

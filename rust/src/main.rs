@@ -841,13 +841,15 @@ fn cmd_perf(argv: &[String]) -> Result<()> {
         let rows = ima_gnn::perfbench::check_against(&report, &baseline)?;
         let mut t = Table::new(
             format!("perf regression gate vs {baseline_path} (floor: baseline x 0.75)"),
-            &["Headline", "Baseline", "Fresh", "Ratio", "Gate"],
+            &["Headline", "Baseline", "Fresh", "Floor", "Margin", "Ratio", "Gate"],
         );
         for r in &rows {
             t.row(&[
                 r.name.clone(),
                 format!("{:.3}x", r.baseline),
                 format!("{:.3}x", r.fresh),
+                format!("{:.3}x", r.floor),
+                format!("{:+.3}", r.margin),
                 format!("{:.2}", r.ratio),
                 if r.pass { "pass".into() } else { "FAIL".into() },
             ]);

@@ -3,21 +3,27 @@
 //! Times the simulator's compute hot spots — crossbar evaluate (seed
 //! bit-serial reference vs the dispatched fast paths), the 512×512
 //! binary-activation aggregate kernel (seed re-program-every-call path vs
-//! the flat program-once/packed path), CSR construction, the netsim
-//! star/mesh scenarios, and the E9 sweep grid sequential vs parallel —
-//! and emits `BENCH_perf.json`, the perf-trajectory artifact CI uploads
-//! next to `BENCH_netsim.json`.  Headline `speedups` compare each fast
-//! path against its seed-equivalent baseline on the same inputs.
+//! the flat program-once/packed path), the dense-mask `accumulate_rows`
+//! dispatch (seed sparse bit-walk vs the SWAR word-dense lanes), CSR
+//! construction, the netsim star/mesh scenarios, the E9 sweep grid
+//! sequential vs parallel, multi-shard batch assembly sequential vs
+//! parallel, and the end-to-end offline round (upload → barrier →
+//! assemble) — and emits `BENCH_perf.json`, the perf-trajectory artifact
+//! CI uploads next to `BENCH_netsim.json`.  Headline `speedups` compare
+//! each fast path against its seed-equivalent baseline on the same
+//! inputs, with bit-/byte-identity asserted before anything is timed.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::bench::{black_box, Bench, Stats};
 use crate::config::{presets, CrossbarGeometry, DeviceParams};
+use crate::coordinator::{FeatureStore, GcnLayerBinding, RoundEngine, ShardBatch};
 use crate::cores::{AggregationCore, GnnWorkload, Tile};
 use crate::crossbar::MvmCrossbar;
 use crate::error::Result;
 use crate::experiments::NetsimSweep;
-use crate::graph::Csr;
+use crate::graph::{generate, Csr, NeighborSampler, ShardPlan};
 use crate::netmodel::{NetModel, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
 use crate::obs::MetricsRegistry;
@@ -81,6 +87,106 @@ fn seed_aggregate(
         }
     }
     out[..cols].to_vec()
+}
+
+/// Frozen replica of the pre-lane `MvmCrossbar::accumulate_rows` body —
+/// the sparse `bits &= bits - 1` walk that adds each selected row one
+/// column at a time, then clamps.  On a dense mask this touches every
+/// row anyway but pays the per-bit dispatch and scalar column loop the
+/// word-dense SWAR path removes.  Replicated (not called through the
+/// live crossbar) so the baseline stays exactly the seed's cost.
+fn seed_accumulate_rows(
+    weights: &[i32],
+    cols: usize,
+    adc_bits: u32,
+    mask: &[u64],
+    out: &mut [i64],
+) {
+    let k = out.len();
+    out.fill(0);
+    for (w, &word) in mask.iter().enumerate() {
+        let mut bits = word;
+        while bits != 0 {
+            let r = w * 64 + bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let row = &weights[r * cols..r * cols + k];
+            for (o, &wt) in out.iter_mut().zip(row.iter()) {
+                *o += wt as i64;
+            }
+        }
+    }
+    let lo = -(1i64 << (adc_bits - 1));
+    let hi = (1i64 << (adc_bits - 1)) - 1;
+    for o in out.iter_mut() {
+        *o = (*o).clamp(lo, hi);
+    }
+}
+
+/// Frozen replica of the seed offline round: staged per-node uploads
+/// (home + every halo site), then a per-shard barrier doing the
+/// buffer flip and a row-at-a-time table gather, then a BTreeMap-grouped
+/// assemble that allocates fresh slot / `x_self` / `nbr_idx` vectors per
+/// chunk and gathers `x_self` one row at a time.  Built only on the
+/// public `FeatureStore` / `ShardPlan` APIs so it cannot inherit the
+/// engine's improvements (run-coalesced gather, reused group index,
+/// parallel per-shard construction, tensor handle reuse).  Returns the
+/// per-shard tables and the assembled batches so `run` can assert
+/// equality with the live engine before timing either side.
+fn seed_offline_round(
+    binding: &GcnLayerBinding,
+    plan: &ShardPlan,
+    stores: &mut [FeatureStore],
+    row: &[f32],
+    nodes: &[usize],
+) -> (Vec<Vec<f32>>, Vec<ShardBatch>) {
+    // upload(): home member slot plus every halo replica.
+    for &node in nodes {
+        let (s, slot) = plan.home(node);
+        stores[s].write(slot, row).unwrap();
+        for &(hs, hslot) in plan.halo_sites(node) {
+            stores[hs].write(hslot, row).unwrap();
+        }
+    }
+    // end_round(): flip, then gather the full table one row at a time.
+    let mut tables = Vec::with_capacity(stores.len());
+    for store in stores.iter_mut() {
+        store.swap();
+        let mut x_table = Vec::with_capacity(binding.table * binding.feature);
+        for n in 0..binding.table {
+            x_table.extend_from_slice(store.read(n).unwrap());
+        }
+        tables.push(x_table);
+    }
+    // assemble(): BTreeMap grouping, fresh vectors per chunk.
+    let mut groups: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, &v) in nodes.iter().enumerate() {
+        groups.entry(plan.home(v).0).or_default().push(i);
+    }
+    let mut out = Vec::new();
+    for (s, positions) in groups {
+        let shard = &plan.shards()[s];
+        for chunk in positions.chunks(binding.batch) {
+            let mut slots: Vec<usize> = chunk.iter().map(|&i| plan.home(nodes[i]).1).collect();
+            let pad = *slots.last().expect("chunks are non-empty");
+            slots.resize(binding.batch, pad);
+            let mut x_self = Vec::with_capacity(binding.batch * binding.feature);
+            for &slot in &slots {
+                x_self.extend_from_slice(stores[s].read(slot).unwrap());
+            }
+            let mut nbr_idx = Vec::with_capacity(binding.batch * binding.sample);
+            for &slot in &slots {
+                nbr_idx.extend_from_slice(shard.member_nbr_row(slot, binding.sample));
+            }
+            out.push(ShardBatch {
+                shard: s,
+                nodes: chunk.iter().map(|&i| nodes[i]).collect(),
+                positions: chunk.to_vec(),
+                x_self,
+                nbr_idx,
+            });
+        }
+    }
+    (tables, out)
 }
 
 /// One headline comparison: `reference` / `fast` median, by case name.
@@ -193,6 +299,12 @@ pub struct CheckRow {
     /// passes at `rounded(fresh) >= rounded(baseline × (1 −
     /// CHECK_MAX_REGRESSION))`, boundary-inclusive.
     pub ratio: f64,
+    /// The effective pass floor `rounded(baseline × (1 −
+    /// CHECK_MAX_REGRESSION))` — what the fresh factor is gated against.
+    pub floor: f64,
+    /// `rounded(fresh) − floor`: how much headroom the headline has
+    /// above its gate (negative exactly when `pass` is false).
+    pub margin: f64,
     pub pass: bool,
 }
 
@@ -250,7 +362,16 @@ pub fn check_against(report: &PerfReport, baseline_json: &str) -> Result<Vec<Che
         let base_r = round_to_artifact(baseline);
         let floor = round_to_artifact(baseline * (1.0 - CHECK_MAX_REGRESSION));
         let ratio = if base_r > 0.0 { fresh_r / base_r } else { f64::INFINITY };
-        rows.push(CheckRow { name, baseline, fresh, ratio, pass: fresh_r >= floor });
+        let margin = fresh_r - floor;
+        rows.push(CheckRow {
+            name,
+            baseline,
+            fresh,
+            ratio,
+            floor,
+            margin,
+            pass: fresh_r >= floor,
+        });
     }
     Ok(rows)
 }
@@ -335,6 +456,33 @@ pub fn run(quick: bool) -> Result<PerfReport> {
         black_box(mvm_out[0])
     });
 
+    // --- dense-mask accumulate_rows: seed bit-walk vs SWAR lanes. -------
+    // A ~7/8-dense activation mask over the 512×512 array programmed
+    // above: every word clears DENSE_WORD_THRESHOLD, so the live call
+    // takes the word-dense column-block path while the seed replica pays
+    // the per-bit walk with a scalar column loop.
+    b.section("accumulate_rows (512x512, ~7/8-dense mask)");
+    let mut dense_mask = vec![0u64; 512 / 64];
+    for r in 0..512 {
+        if rng.index(8) != 0 {
+            dense_mask[r / 64] |= 1u64 << (r % 64);
+        }
+    }
+    let adc_bits = mvm.geometry().adc_bits;
+    let mut accum_out = vec![0i64; 512];
+    let mut accum_seed_out = vec![0i64; 512];
+    mvm.accumulate_rows(&dense_mask, &mut accum_out)?;
+    seed_accumulate_rows(&weights, 512, adc_bits, &dense_mask, &mut accum_seed_out);
+    assert_eq!(accum_out, accum_seed_out, "dense accumulate diverged from the seed replica");
+    b.case("accum/seed: sparse bit-walk", || {
+        seed_accumulate_rows(&weights, 512, adc_bits, &dense_mask, &mut accum_seed_out);
+        black_box(accum_seed_out[0])
+    });
+    b.case("accum/fast: dense word lanes", || {
+        mvm.accumulate_rows(&dense_mask, &mut accum_out).unwrap();
+        black_box(accum_out[0])
+    });
+
     // --- CSR construction (the graph ingestion hot path). ---------------
     b.section("csr build");
     let n_nodes = if quick { 2_000 } else { 10_000 };
@@ -363,6 +511,87 @@ pub fn run(quick: bool) -> Result<PerfReport> {
         )
     });
 
+    let threads = par::available_threads();
+
+    // --- multi-shard batch assembly: sequential vs parallel. ------------
+    // A LiveJournal-shaped serving plan: a regular graph sharded into
+    // 64 (8 in quick mode) 128-row tables, with every node requested —
+    // hundreds of per-shard chunk builds, each gathering a 32×256 f32
+    // batch, so the work items are large enough to amortize the
+    // scoped-thread fan-out `assemble_with_threads` uses.
+    b.section("batch assembly (multi-shard plan, sequential vs parallel)");
+    let asm_n = if quick { 1_024 } else { 8_192 };
+    let asm_binding = GcnLayerBinding {
+        artifact: "gcn_layer_perf".to_string(),
+        batch: 32,
+        sample: 8,
+        feature: 256,
+        hidden: 16,
+        table: 128,
+    };
+    let asm_graph = generate::regular(asm_n, 6, 3)?;
+    let asm_sampler = NeighborSampler::new(asm_binding.sample, 7);
+    let asm_plan = ShardPlan::build(&asm_graph, &asm_sampler, asm_binding.table)?;
+    let asm_weights = vec![0.01f32; asm_binding.feature * asm_binding.hidden];
+    let mut engine = RoundEngine::new(asm_binding.clone(), asm_plan, asm_weights)?;
+    let req: Vec<usize> = (0..asm_n).collect();
+    // Sequential and parallel assembly must be byte-identical before
+    // either is timed.
+    let asm_seq = engine.assemble_with_threads(&req, 1)?;
+    assert_eq!(
+        asm_seq,
+        engine.assemble_with_threads(&req, threads)?,
+        "parallel assembly diverged from sequential"
+    );
+    b.case("assemble/seed: sequential per-shard batches", || {
+        black_box(engine.assemble_with_threads(&req, 1).unwrap().len())
+    });
+    b.case("assemble/fast: parallel per-shard batches", || {
+        black_box(engine.assemble_with_threads(&req, threads).unwrap().len())
+    });
+
+    // --- end-to-end offline round: seed replica vs live engine. ---------
+    // One full round — upload every node's features (home + halo), run
+    // the barrier (flip + table build), assemble every batch.  The seed
+    // side replays the pre-engine composition (per-row gathers, fresh
+    // allocations, BTreeMap grouping); the live side is `upload` /
+    // `end_round` / `assemble` with parallel assembly enabled.
+    b.section("offline round (upload + barrier + assemble)");
+    engine.set_assembly_threads(threads);
+    let feat_row = vec![0.3f32; asm_binding.feature];
+    for node in 0..asm_n {
+        engine.upload(node, &feat_row)?;
+    }
+    engine.end_round();
+    let live_batches = engine.assemble(&req)?;
+    let mut seed_stores: Vec<FeatureStore> = (0..engine.plan().num_shards())
+        .map(|_| FeatureStore::new(asm_binding.table, asm_binding.feature))
+        .collect();
+    let (seed_tables, seed_batches) =
+        seed_offline_round(&asm_binding, engine.plan(), &mut seed_stores, &feat_row, &req);
+    assert_eq!(live_batches, seed_batches, "engine round diverged from the seed replica");
+    for (s, table) in seed_tables.iter().enumerate() {
+        assert_eq!(
+            engine.table_tensor(s).expect("barrier ran").as_f32()?,
+            &table[..],
+            "table tensor {s} diverged from the seed replica"
+        );
+    }
+    b.case("round/seed: per-row gather + fresh-alloc assemble", || {
+        black_box(
+            seed_offline_round(&asm_binding, engine.plan(), &mut seed_stores, &feat_row, &req)
+                .1
+                .len(),
+        )
+    });
+    b.case("round/fast: engine barrier + assemble", || {
+        for node in 0..asm_n {
+            engine.upload(node, &feat_row).unwrap();
+        }
+        engine.end_round();
+        black_box(engine.assemble(&req).unwrap().len())
+    });
+
     // --- E9 sweep grid: sequential vs parallel driver. ------------------
     b.section("E9 sweep grid (sequential vs parallel)");
     let (grid_nodes, grid_cs): (&[usize], &[usize]) = if quick {
@@ -371,7 +600,6 @@ pub fn run(quick: bool) -> Result<PerfReport> {
         (&[500, 1_000, 2_000], &[5, 10, 25])
     };
     let reps = if quick { 1 } else { 3 };
-    let threads = par::available_threads();
     let workload = GnnWorkload::taxi();
     let grid_case = |name: &str, t: usize| -> Result<Stats> {
         let mut samples = Vec::with_capacity(reps);
@@ -411,6 +639,21 @@ pub fn run(quick: bool) -> Result<PerfReport> {
         "mvm/seed: bit-serial reference",
         "mvm/fast: fused clip-free evaluate_into",
     );
+    report.push_speedup(
+        "accumulate_dense_mask",
+        "accum/seed: sparse bit-walk",
+        "accum/fast: dense word lanes",
+    );
+    report.push_speedup(
+        "assemble_par",
+        "assemble/seed: sequential per-shard batches",
+        "assemble/fast: parallel per-shard batches",
+    );
+    report.push_speedup(
+        "round_offline",
+        "round/seed: per-row gather + fresh-alloc assemble",
+        "round/fast: engine barrier + assemble",
+    );
     report.push_speedup("e9_sweep_parallel", "e9/seed: sequential sweep", "e9/fast: parallel sweep");
     Ok(report)
 }
@@ -429,8 +672,15 @@ mod tests {
     #[test]
     fn quick_run_produces_a_wellformed_artifact() {
         let report = run(true).unwrap();
-        assert!(report.cases.len() >= 8);
-        for name in ["aggregate_512_binary", "mvm_512_8bit", "e9_sweep_parallel"] {
+        assert!(report.cases.len() >= 14);
+        for name in [
+            "aggregate_512_binary",
+            "mvm_512_8bit",
+            "accumulate_dense_mask",
+            "assemble_par",
+            "round_offline",
+            "e9_sweep_parallel",
+        ] {
             let f = report.speedup(name).unwrap();
             assert!(f.is_finite() && f > 0.0, "{name}: {f}");
         }
@@ -442,16 +692,18 @@ mod tests {
         assert_eq!(cases.len(), report.cases.len());
         assert!(cases[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
         let speedups = doc.get("speedups").unwrap().as_arr().unwrap();
-        assert_eq!(speedups.len(), 3);
+        assert_eq!(speedups.len(), 6);
 
         // The regression gate round-trips through the artifact: a fresh
         // run checked against its own JSON passes every headline with
         // ratio ~1 (the artifact rounds factors to 3 decimals).
         let rows = check_against(&report, &json).unwrap();
-        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.len(), 6);
         for r in &rows {
             assert!(r.pass, "{}: self-check must pass", r.name);
             assert!((r.ratio - 1.0).abs() < 1e-2, "{}: ratio {}", r.name, r.ratio);
+            assert!(r.margin >= 0.0, "{}: margin {}", r.name, r.margin);
+            assert!((r.floor + r.margin - round_to_artifact(r.fresh)).abs() < 1e-9, "{}", r.name);
         }
     }
 
@@ -475,13 +727,17 @@ mod tests {
             }],
         };
         let baseline = r#"{"speedups": [{"name": "edge", "factor": 4.0}]}"#;
-        // Exactly on the floor: inclusive pass.
+        // Exactly on the floor: inclusive pass, zero margin.
         let rows = check_against(&at(3.0), baseline).unwrap();
         assert!(rows[0].pass, "boundary must be inclusive");
+        assert_eq!(rows[0].floor, 3.0);
+        assert_eq!(rows[0].margin, 0.0);
         // Rounds up to the floor: pass (pre-fix: 2.9996/4 = 0.7499 < 0.75).
         assert!(check_against(&at(2.9996), baseline).unwrap()[0].pass);
-        // Rounds below the floor: fail.
-        assert!(!check_against(&at(2.9994), baseline).unwrap()[0].pass);
+        // Rounds below the floor: fail, with a negative margin.
+        let below = check_against(&at(2.9994), baseline).unwrap();
+        assert!(!below[0].pass);
+        assert!(below[0].margin < 0.0);
         // The artifact round-trip is the identity for the gate: a
         // factor and its 3-decimal print compare identically.
         assert_eq!(

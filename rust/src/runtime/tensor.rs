@@ -1,5 +1,7 @@
 //! Host-side tensors exchanged with the PJRT runtime.
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
 use crate::pjrt as xla;
 
@@ -27,11 +29,14 @@ impl DType {
     }
 }
 
-/// Tensor payload.
+/// Tensor payload.  The buffer sits behind an `Arc`, so cloning a
+/// tensor — the engine hands its round-constant table/weight caches to
+/// every served batch — is a refcount bump, not a data copy; `PartialEq`
+/// still compares the pointed-to values.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
 }
 
 impl TensorData {
@@ -63,13 +68,13 @@ pub struct Tensor {
 
 impl Tensor {
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
-        let t = Tensor { shape: shape.to_vec(), data: TensorData::F32(data) };
+        let t = Tensor { shape: shape.to_vec(), data: TensorData::F32(Arc::new(data)) };
         t.check()?;
         Ok(t)
     }
 
     pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Tensor> {
-        let t = Tensor { shape: shape.to_vec(), data: TensorData::I32(data) };
+        let t = Tensor { shape: shape.to_vec(), data: TensorData::I32(Arc::new(data)) };
         t.check()?;
         Ok(t)
     }
@@ -77,7 +82,7 @@ impl Tensor {
     pub fn zeros_f32(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
-            data: TensorData::F32(vec![0.0; shape.iter().product()]),
+            data: TensorData::F32(Arc::new(vec![0.0; shape.iter().product()])),
         }
     }
 
@@ -103,14 +108,14 @@ impl Tensor {
 
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
-            TensorData::F32(v) => Ok(v),
+            TensorData::F32(v) => Ok(v.as_slice()),
             _ => Err(Error::Runtime("tensor is not f32".into())),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
-            TensorData::I32(v) => Ok(v),
+            TensorData::I32(v) => Ok(v.as_slice()),
             _ => Err(Error::Runtime("tensor is not i32".into())),
         }
     }
@@ -119,8 +124,8 @@ impl Tensor {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
-            TensorData::F32(v) => xla::Literal::vec1(v),
-            TensorData::I32(v) => xla::Literal::vec1(v),
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
         };
         Ok(lit.reshape(&dims)?)
     }
@@ -130,8 +135,8 @@ impl Tensor {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         let data = match shape.ty() {
-            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
-            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::F32 => TensorData::F32(Arc::new(lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => TensorData::I32(Arc::new(lit.to_vec::<i32>()?)),
             other => {
                 return Err(Error::Runtime(format!("unsupported literal type {other:?}")))
             }
@@ -190,5 +195,26 @@ mod tests {
         let t = Tensor::i32(&[3], vec![-1, 0, 7]).unwrap();
         let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
         assert_eq!(back, t);
+    }
+
+    /// Clones share the payload allocation (refcount bump, no copy) —
+    /// the contract that makes the engine's per-batch cache handoff
+    /// cheap — while an independently built tensor with equal contents
+    /// compares equal without sharing.
+    #[test]
+    fn clone_is_a_cheap_handle_over_shared_data() {
+        let a = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(
+            a.as_f32().unwrap().as_ptr(),
+            b.as_f32().unwrap().as_ptr(),
+            "clone must alias the buffer"
+        );
+        let c = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(a, c);
+        assert_ne!(a.as_f32().unwrap().as_ptr(), c.as_f32().unwrap().as_ptr());
+        let i = Tensor::i32(&[1], vec![5]).unwrap();
+        assert_eq!(i.as_i32().unwrap().as_ptr(), i.clone().as_i32().unwrap().as_ptr());
     }
 }

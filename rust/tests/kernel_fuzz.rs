@@ -1,0 +1,171 @@
+//! Differential fuzz harness for the crossbar / core kernel fast paths
+//! (E10): random geometries, weights, inputs and activation masks driven
+//! through the seed bit-serial reference, the dispatched `evaluate`
+//! paths (binary single-plane, clip-free fused, clipping fallback), the
+//! dense/sparse `accumulate_rows` lanes, and the two cores that ride
+//! them — with bit-identity asserted everywhere.  This is the external
+//! (public-API) counterpart of the property tests inside `crossbar::mvm`:
+//! it can only use what the crate exports, so it also pins that the lane
+//! kernels are reachable and exact through the cores' public surface.
+
+use ima_gnn::config::{CoreConfig, CrossbarGeometry, DeviceParams};
+use ima_gnn::cores::{AggregationCore, FeatureExtractionCore, Tile};
+use ima_gnn::crossbar::{MvmCrossbar, DENSE_WORD_THRESHOLD};
+use ima_gnn::testing::{forall, Rng};
+
+/// Random crossbar with random bit-widths; weights span the full
+/// conductance range so clipping and clip-free regimes both arise.
+fn random_xbar(rng: &mut Rng, max_rows: usize, max_cols: usize) -> MvmCrossbar {
+    let rows = rng.index(max_rows) + 1;
+    let cols = rng.index(max_cols) + 1;
+    let mut g = CrossbarGeometry::new(rows, cols);
+    g.cell_bits = rng.u64_in(2, 5) as u32;
+    g.adc_bits = rng.u64_in(3, 16) as u32;
+    g.input_bits = rng.u64_in(1, 8) as u32;
+    let mut xb = MvmCrossbar::new(g, DeviceParams::default_45nm()).unwrap();
+    let (lo, hi) = xb.weight_range();
+    let weights: Vec<i32> =
+        (0..rows * cols).map(|_| rng.i64_in(lo as i64, hi as i64) as i32).collect();
+    xb.program(&weights).unwrap();
+    xb
+}
+
+/// Every `evaluate` dispatch (binary single-plane, clip-free fused,
+/// clipping bit-serial fallback) and the buffer-reusing `evaluate_into`
+/// agree with `evaluate_reference` bit for bit, across input regimes
+/// chosen to hit each dispatch arm.
+#[test]
+fn evaluate_dispatch_is_bit_identical_to_the_reference() {
+    forall(32, |rng: &mut Rng| {
+        let xb = random_xbar(rng, 160, 48);
+        let g = *xb.geometry();
+        let max_code = (1u64 << g.input_bits) - 1; // input_bits ≤ 8 here
+        // Three regimes: binary (single-plane path), general multi-bit,
+        // and sparse multi-bit (mostly-zero rows, the fused path's skip).
+        let regime = rng.index(3);
+        let input: Vec<u32> = (0..g.rows)
+            .map(|_| match regime {
+                0 => rng.u64_in(0, 1) as u32,
+                1 => rng.u64_in(0, max_code) as u32,
+                _ => {
+                    if rng.index(4) == 0 {
+                        rng.u64_in(0, max_code) as u32
+                    } else {
+                        0
+                    }
+                }
+            })
+            .collect();
+        let want = xb.evaluate_reference(&input).unwrap();
+        assert_eq!(
+            xb.evaluate(&input).unwrap(),
+            want,
+            "{}x{} cell={} adc={} in={} regime={regime} clip_free={}",
+            g.rows,
+            g.cols,
+            g.cell_bits,
+            g.adc_bits,
+            g.input_bits,
+            xb.clip_free()
+        );
+        // Into a dirty reused buffer: stale contents must not leak.
+        let mut out = vec![i64::MIN; g.cols];
+        xb.evaluate_into(&input, &mut out).unwrap();
+        assert_eq!(out, want);
+    });
+}
+
+/// `accumulate_rows` agrees with the reference on masks engineered to
+/// sit on, above and below `DENSE_WORD_THRESHOLD` — the dispatch
+/// boundary between the sparse bit-walk and the dense word-slab lanes —
+/// including empty words, full words, and ragged tail words.
+#[test]
+fn accumulate_rows_density_sweep_is_bit_identical() {
+    forall(32, |rng: &mut Rng| {
+        let xb = random_xbar(rng, 200, 40);
+        let g = *xb.geometry();
+        let t = DENSE_WORD_THRESHOLD as u64;
+        let mut mask = vec![0u64; g.rows.div_ceil(64)];
+        for (w, word) in mask.iter_mut().enumerate() {
+            let slab = (g.rows - w * 64).min(64) as u64;
+            // Density classes: empty, full, and popcounts right at the
+            // dispatch boundary (t-1 / t / t+1, clipped to the slab).
+            let ones = match rng.index(5) {
+                0 => 0,
+                1 => slab,
+                2 => (t - 1).min(slab),
+                3 => t.min(slab),
+                _ => (t + 1).min(slab),
+            };
+            let mut bits = 0u64;
+            let mut set = 0;
+            while set < ones {
+                let b = rng.index(slab as usize) as u64;
+                if bits >> b & 1 == 0 {
+                    bits |= 1 << b;
+                    set += 1;
+                }
+            }
+            *word = bits;
+        }
+        // The reference path: the same selection as explicit binary codes.
+        let input: Vec<u32> =
+            (0..g.rows).map(|r| (mask[r / 64] >> (r % 64) & 1) as u32).collect();
+        let want = xb.evaluate_reference(&input).unwrap();
+        let mut out = vec![0i64; g.cols];
+        xb.accumulate_rows(&mask, &mut out).unwrap();
+        assert_eq!(out, want, "{}x{} adc={} mask={mask:?}", g.rows, g.cols, g.adc_bits);
+        // Column-group prefix (narrower `out`) on the same mask.
+        let k = rng.index(g.cols) + 1;
+        let mut head = vec![0i64; k];
+        xb.accumulate_rows(&mask, &mut head).unwrap();
+        assert_eq!(head, want[..k]);
+    });
+}
+
+/// The cores ride the same lane kernels through their public surface:
+/// `AggregationCore::accumulate_into` equals the scalar masked row-sum
+/// (single binary plane, clamped once to the ADC range) and
+/// `FeatureExtractionCore::transform` equals `relu(x @ W)` — for window
+/// and input shapes where the fused paths are provably exact.
+#[test]
+fn cores_match_their_scalar_oracles_under_fuzz() {
+    forall(24, |rng: &mut Rng| {
+        // Aggregation: 256×32 default geometry (adc_bits 13) — any row
+        // subset sums to at most 256·8 < 2^12, so the final clamp is the
+        // identity and the oracle is the plain masked sum.  Mostly-true
+        // activations push whole words over DENSE_WORD_THRESHOLD.
+        let n = rng.index(256) + 1;
+        let f = rng.index(24) + 1;
+        let window = Tile::from_fn(n, f, |_, _| rng.i64_in(-8, 7) as i32);
+        let dense = rng.bool();
+        let active: Vec<bool> =
+            (0..n).map(|_| if dense { rng.index(8) != 0 } else { rng.bool() }).collect();
+        let mut agg =
+            AggregationCore::new(CoreConfig::new(1, 256, 32), DeviceParams::default_45nm())
+                .unwrap();
+        let got = agg.aggregate(&window, &active).unwrap();
+        for col in 0..f {
+            let want: i64 = (0..n).filter(|&r| active[r]).map(|r| window.get(r, col) as i64).sum();
+            assert_eq!(got[col], want, "agg col {col} (dense={dense})");
+        }
+
+        // Feature extraction: 128×32 geometry stays clip-free for any
+        // 4-bit weights (|plane sum| ≤ 128·8 < 2^12), so the fused path
+        // is an exact integer matmul and the oracle is relu(x @ W).
+        let fin = rng.index(32) + 1;
+        let fout = rng.index(16) + 1;
+        let weights: Vec<i32> = (0..fin * fout).map(|_| rng.i64_in(-8, 7) as i32).collect();
+        let input: Vec<u32> = (0..fin).map(|_| rng.u64_in(0, 255) as u32).collect();
+        let mut fe =
+            FeatureExtractionCore::new(CoreConfig::new(1, 128, 32), DeviceParams::default_45nm())
+                .unwrap();
+        fe.program_weights(&weights, fin, fout).unwrap();
+        let got = fe.transform(&input, fout).unwrap();
+        for o in 0..fout {
+            let raw: i64 =
+                (0..fin).map(|i| input[i] as i64 * weights[i * fout + o] as i64).sum();
+            assert_eq!(got[o], raw.max(0), "fe col {o}");
+        }
+    });
+}
