@@ -1,0 +1,68 @@
+//! P1 bench — the E16 residency tier: compact-CSR encode/decode, the
+//! quantized feature codec, and the resident-set fetch paths
+//! (DESIGN.md §16).  No PJRT needed.  `cargo bench --bench residency`
+
+use ima_gnn::bench::{black_box, Bench};
+use ima_gnn::graph::{generate, CompactCsr, FeatureQuant, QuantizedFeatures, ResidentSet};
+use ima_gnn::testing::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(6);
+
+    b.section("compact CSR (100k-node LiveJournal-shape R-MAT)");
+    let g = generate::rmat(100_000, 900_000, &generate::RmatParams::default(), 0xE16).unwrap();
+    let c = CompactCsr::from_csr(&g).unwrap();
+    println!(
+        "    -> {} edges: {} B compact vs {} B seed ({:.2}x)",
+        c.num_edges(),
+        c.encoded_bytes(),
+        c.seed_bytes(),
+        c.compression_ratio()
+    );
+    b.case("encode (renumber + delta + varint)", || {
+        black_box(CompactCsr::from_csr(&g).unwrap().encoded_bytes())
+    });
+    let mut buf = Vec::new();
+    let hub = c.new_id(0); // densest row after degree-descending renumbering
+    b.case("decode the densest row", || {
+        c.decode_row(black_box(hub), &mut buf).unwrap();
+        black_box(buf.len())
+    });
+
+    b.section("feature quantization (4096x64 shard)");
+    let vals: Vec<f32> = (0..4_096 * 64).map(|_| rng.index(512) as f32).collect();
+    for quant in [FeatureQuant::ExactI32, FeatureQuant::U16, FeatureQuant::U8] {
+        let blob = QuantizedFeatures::encode(quant, &vals).unwrap();
+        b.case(&format!("encode {quant:?}"), || {
+            black_box(QuantizedFeatures::encode(quant, &vals).unwrap().encoded_bytes())
+        });
+        let mut out = Vec::new();
+        b.case(&format!("decode {quant:?}"), || {
+            blob.decode_into(&mut out);
+            black_box(out.len())
+        });
+    }
+
+    b.section("resident-set fetch (8 shards, 2-shard budget)");
+    let rows = 4_096usize;
+    let feature = 64usize;
+    let shard_bytes = rows * feature * std::mem::size_of::<f32>();
+    let mut set = ResidentSet::new(8, feature, FeatureQuant::ExactI32, 2 * shard_bytes).unwrap();
+    for s in 0..8 {
+        set.store(s, &vals).unwrap();
+    }
+    set.fetch(0).unwrap();
+    b.case("warm hit (pinned shard)", || black_box(set.fetch(0).unwrap()));
+    let mut shard = 0usize;
+    b.case("streaming scan (decode + evict per step)", || {
+        shard = (shard + 1) % 8;
+        black_box(set.fetch(shard).unwrap())
+    });
+    println!(
+        "    -> peak {} B <= budget {} B, hit rate {:.1}%",
+        set.peak_bytes(),
+        set.budget_bytes(),
+        set.hit_rate() * 100.0
+    );
+}

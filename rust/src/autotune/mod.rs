@@ -22,6 +22,8 @@
 //! the earliest point — so `explore` is bit-identical across thread
 //! counts and runs, and equals exhaustive brute-force enumeration
 //! (asserted in `rust/tests/autotune_cross_validation.rs`).
+//!
+//! DESIGN.md: §9 (operating-point autotuner).
 
 mod pareto;
 

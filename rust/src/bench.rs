@@ -3,6 +3,8 @@
 //! Warmup + timed iterations with median / MAD / min / mean reporting and a
 //! `black_box` to defeat constant folding.  Every `rust/benches/*.rs` target
 //! (declared `harness = false`) drives this.
+//!
+//! DESIGN.md: §8 (fast paths and the perf trajectory this harness times).
 
 use std::hint;
 use std::time::{Duration, Instant};

@@ -2,6 +2,8 @@
 //!
 //! Supports subcommands, `--flag`, `--key value` / `--key=value` options and
 //! positional arguments, with generated usage text.
+//!
+//! DESIGN.md: §1 (the L3 binary surface this parser fronts).
 
 use std::collections::BTreeMap;
 

@@ -7,6 +7,8 @@
 //!   (IEEE 802.11n ch. 9, 2.452 GHz, −31 dBm, 20 MHz; paper ref [20]):
 //!   per-hop store-and-forward delay plus serialization at the effective
 //!   goodput, with a connection-establishment time tₑ per peer session.
+//!
+//! DESIGN.md: §4 (network model); §6 reuses these link timings.
 
 use crate::config::CommConfig;
 use crate::units::{Energy, Power, Time};

@@ -6,6 +6,8 @@
 //! (application level).  `presets::centralized()` / `presets::decentralized()`
 //! reproduce §4.1's core sizings: 2K×(512×32), 1K×(512×512), 256×(128×128)
 //! vs 512×32, 512×512, 128×128.
+//!
+//! DESIGN.md: §2 (circuit level).
 
 pub mod parser;
 

@@ -4,6 +4,8 @@
 //! headers, `key = value` pairs with string / integer / float / boolean /
 //! homogeneous-array values, `#` comments and blank lines.  Keys are
 //! flattened to `section.sub.key` paths in a [`RawConfig`] map.
+//!
+//! DESIGN.md: §2 (circuit level; presets load through this parser).
 
 use std::collections::BTreeMap;
 

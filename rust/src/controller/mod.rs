@@ -31,6 +31,8 @@
 //! through the double-buffer barrier, and emits a `ctrl.switch` span
 //! whose duration reconciles bit-exactly with the report's accrued
 //! switch downtime.
+//!
+//! DESIGN.md: §14 (closed-loop adaptive runtime control).
 
 use crate::autotune::OperatingPoint;
 use crate::error::{Error, Result};

@@ -5,6 +5,8 @@
 //! requests or when its oldest request has waited `max_wait`.  Short
 //! batches are padded by the executor path (repeat-last), so a closed
 //! batch is always artifact-shaped.
+//!
+//! DESIGN.md: §7 (serving coordinator).
 
 use std::time::{Duration, Instant};
 

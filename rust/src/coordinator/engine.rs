@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use crate::cores::{FeatureMatrix, GnnWorkload};
 use crate::error::{Error, Result};
-use crate::graph::{Csr, NeighborSampler, ShardPlan};
+use crate::graph::{Csr, FeatureQuant, NeighborSampler, ResidentSet, ShardPlan};
 use crate::netmodel::{NetModel, Setting, Topology};
 use crate::obs::{MetricsRegistry, Tracer};
 use crate::par;
@@ -270,6 +270,12 @@ pub struct RoundEngine {
     /// Worker threads `assemble` fans per-shard batch construction over
     /// (1 = sequential, the default; output is identical at any count).
     assembly_threads: usize,
+    /// Out-of-core residency tier (DESIGN.md §16).  `None` (default)
+    /// keeps the seed behavior: every shard's table tensor cached
+    /// unbounded in `table_tensors`.  When enabled, `end_round` encodes
+    /// tables into the tier instead and serve-path fetches decode them
+    /// through its byte-budgeted LRU.
+    resident: Option<ResidentSet>,
 }
 
 impl RoundEngine {
@@ -309,7 +315,42 @@ impl RoundEngine {
             tracer: Tracer::disabled(),
             scratch: RefCell::new(AssembleScratch::default()),
             assembly_threads: 1,
+            resident: None,
         })
+    }
+
+    /// Switch table storage to the out-of-core residency tier: from the
+    /// next [`RoundEngine::end_round`] barrier on, shard tables are
+    /// encoded at `quant` precision and decoded on demand through an
+    /// LRU holding at most `budget_bytes` of decoded payload
+    /// (DESIGN.md §16).  With [`FeatureQuant::ExactI32`] and integral
+    /// features the served tensors are bit-identical to the seed path
+    /// (asserted in `rust/tests/residency.rs`); U8/U16 trade precision
+    /// for footprint.  The budget must fit at least one decoded shard.
+    pub fn enable_residency(&mut self, quant: FeatureQuant, budget_bytes: usize) -> Result<()> {
+        let shard_bytes = self.binding.table * self.binding.feature * std::mem::size_of::<f32>();
+        if shard_bytes > budget_bytes {
+            return Err(Error::Coordinator(format!(
+                "residency budget {budget_bytes} B cannot hold one decoded shard \
+                 ({shard_bytes} B)"
+            )));
+        }
+        self.resident = Some(ResidentSet::new(
+            self.plan.num_shards(),
+            self.binding.feature,
+            quant,
+            budget_bytes,
+        )?);
+        // Drop the unbounded cache — the tier owns table state now.
+        self.table_tensors = vec![None; self.plan.num_shards()];
+        Ok(())
+    }
+
+    /// The residency tier, when [`RoundEngine::enable_residency`] was
+    /// called (its metrics carry the hit/miss/prefetch counters and the
+    /// `resident.bytes` / `resident.peak_bytes` gauges).
+    pub fn resident(&self) -> Option<&ResidentSet> {
+        self.resident.as_ref()
     }
 
     /// Configure how many worker threads [`RoundEngine::assemble`] fans
@@ -375,8 +416,17 @@ impl RoundEngine {
 
     /// Round barrier: every shard's staged uploads become the serving
     /// state and its round-constant table tensor is rebuilt here (once per
-    /// shard per round, never per served batch).
+    /// shard per round, never per served batch).  Infallible on the seed
+    /// path; panics if the residency tier rejects a table (see
+    /// [`RoundEngine::try_end_round`] for the fallible form).
     pub fn end_round(&mut self) {
+        self.try_end_round().expect("round barrier failed");
+    }
+
+    /// [`RoundEngine::end_round`], surfacing residency-tier errors (the
+    /// only fallible step: [`FeatureQuant::ExactI32`] rejects
+    /// non-integral features).  Without residency this cannot fail.
+    pub fn try_end_round(&mut self) -> Result<()> {
         let b = &self.binding;
         let all: Vec<usize> = (0..b.table).collect();
         for (s, store) in self.stores.iter_mut().enumerate() {
@@ -388,10 +438,22 @@ impl RoundEngine {
                 store.swap();
             }
             let x_table = store.gather(&all).expect("table rows are in range");
-            self.table_tensors[s] =
-                Some(Tensor::f32(&[b.table, b.feature], x_table).expect("shape is static"));
-            self.metrics.inc("engine.table_builds", 1);
+            match self.resident.as_mut() {
+                Some(tier) => {
+                    // Residency: encode into the out-of-core tier; the
+                    // decoded tensor materializes lazily at fetch time,
+                    // under the tier's byte budget.
+                    tier.store(s, &x_table)?;
+                    self.metrics.inc("engine.shard_encodes", 1);
+                }
+                None => {
+                    self.table_tensors[s] =
+                        Some(Tensor::f32(&[b.table, b.feature], x_table).expect("shape is static"));
+                    self.metrics.inc("engine.table_builds", 1);
+                }
+            }
         }
+        Ok(())
     }
 
     /// Load a full feature matrix and run the round barrier — the semi
@@ -428,10 +490,35 @@ impl RoundEngine {
         self.metrics.counter_value("engine.served_batches")
     }
 
+    /// Thin read of the `engine.shard_encodes` counter — the residency
+    /// analogue of [`RoundEngine::table_builds`]: one increment per
+    /// shard per barrier, never per served batch.
+    pub fn shard_encodes(&self) -> u64 {
+        self.metrics.counter_value("engine.shard_encodes")
+    }
+
     /// The cached table tensor of one shard (`None` before the first
-    /// round barrier).
+    /// round barrier, and always `None` in residency mode — use
+    /// [`RoundEngine::fetch_table`] there).
     pub fn table_tensor(&self, shard: usize) -> Option<&Tensor> {
         self.table_tensors.get(shard).and_then(Option::as_ref)
+    }
+
+    /// The serve path's table source: a clone of the round-constant
+    /// cache on the seed path (a refcount bump), or a fetch through the
+    /// residency tier's byte-budgeted LRU when
+    /// [`RoundEngine::enable_residency`] is on.  Either way the tensor
+    /// reflects the last [`RoundEngine::end_round`] barrier.
+    pub fn fetch_table(&self, shard: usize) -> Result<Tensor> {
+        match self.resident.as_ref() {
+            Some(tier) => tier.fetch(shard),
+            None => self
+                .table_tensors
+                .get(shard)
+                .and_then(Option::as_ref)
+                .cloned()
+                .ok_or_else(|| Error::Coordinator("serve before end_round barrier".into())),
+        }
     }
 
     /// Split a request list into padded per-shard artifact batches:
@@ -524,12 +611,10 @@ impl RoundEngine {
         let mut wall = Duration::ZERO;
         let mut served = 0u64;
         for sb in batches {
-            // Round-constant tensors come from the end_round cache; the
-            // clones are refcount bumps over the shared buffers (tensor
-            // payloads are Arc-backed), not per-batch table copies.
-            let table_tensor = self.table_tensors[sb.shard]
-                .clone()
-                .ok_or_else(|| Error::Coordinator("serve before end_round barrier".into()))?;
+            // Round-constant tensors come from the end_round cache (a
+            // refcount bump over the shared Arc-backed buffer) or, in
+            // residency mode, from the tier's byte-budgeted LRU.
+            let table_tensor = self.fetch_table(sb.shard)?;
             let inputs = vec![
                 Tensor::f32(&[b.batch, b.feature], sb.x_self)?,
                 Tensor::i32(&[b.batch, b.sample], sb.nbr_idx)?,
@@ -801,6 +886,44 @@ mod tests {
             "weight clone must alias the cached buffer"
         );
         assert_eq!(e.table_builds(), builds, "cache reads must not rebuild tensors");
+    }
+
+    /// Residency mode must be invisible to the serve inputs: every
+    /// shard's fetched table is bit-identical to the seed cache's (the
+    /// ExactI32 contract), the unbounded cache stays empty, and the
+    /// encode counter replaces `table_builds` one-for-one.
+    #[test]
+    fn residency_mode_serves_the_same_tables_as_the_seed_cache() {
+        use crate::graph::FeatureQuant;
+        let mut seed = engine(256);
+        let mut res = engine(256);
+        let shard_bytes = 64 * 64 * 4; // table rows × feature width × f32
+        assert!(res.enable_residency(FeatureQuant::ExactI32, shard_bytes - 1).is_err());
+        res.enable_residency(FeatureQuant::ExactI32, 2 * shard_bytes).unwrap();
+        let mut rng = Rng::new(4);
+        for node in 0..256 {
+            let f: Vec<f32> = (0..64).map(|_| rng.index(100) as f32).collect();
+            seed.upload(node, &f).unwrap();
+            res.upload(node, &f).unwrap();
+        }
+        seed.end_round();
+        res.try_end_round().unwrap();
+        assert_eq!(res.table_builds(), 0, "residency must not build unbounded tensors");
+        assert_eq!(res.shard_encodes(), res.plan().num_shards() as u64);
+        for s in 0..seed.plan().num_shards() {
+            assert!(res.table_tensor(s).is_none());
+            assert_eq!(
+                res.fetch_table(s).unwrap().as_f32().unwrap(),
+                seed.fetch_table(s).unwrap().as_f32().unwrap(),
+                "shard {s}"
+            );
+        }
+        let tier = res.resident().unwrap();
+        assert!(tier.peak_bytes() <= 2 * shard_bytes);
+        assert!(tier.peak_bytes() > 0);
+        // Assembly is untouched by residency — identical on both engines.
+        let nodes: Vec<usize> = (0..256).rev().collect();
+        assert_eq!(res.assemble(&nodes).unwrap(), seed.assemble(&nodes).unwrap());
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! the artifact's `table` dimension shard transparently through the
 //! engine's [`ShardPlan`] (id-order shards, halo-replicated boundaries) —
 //! the seed's "shard the graph" rejection is gone.
+//!
+//! DESIGN.md: §7 (serving coordinator).
 
 use std::time::Duration;
 

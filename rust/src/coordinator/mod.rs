@@ -27,6 +27,8 @@
 //! the [`InferenceService`] thread; Python is never on this path.
 //!
 //! [`ShardPlan`]: crate::graph::ShardPlan
+//!
+//! DESIGN.md: §7 (serving coordinator); §10 (the shared engine).
 
 mod batcher;
 mod engine;

@@ -1,6 +1,8 @@
 //! Request router: maps inference requests for graph nodes to the edge
 //! device that owns them (decentralized / semi-decentralized) or to a
 //! leader replica (centralized).
+//!
+//! DESIGN.md: §7 (serving coordinator).
 
 use crate::error::{Error, Result};
 use crate::graph::Clustering;

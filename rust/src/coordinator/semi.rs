@@ -10,6 +10,8 @@
 //! the modeled per-cluster latency comes from the engine's
 //! [`LatencyProvider`] — the boundary-aware clustered E8 by default, a
 //! packet-level `netsim` figure on demand.
+//!
+//! DESIGN.md: §7 (serving coordinator).
 
 use std::time::Duration;
 

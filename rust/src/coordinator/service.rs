@@ -5,6 +5,8 @@
 //! thread; callers talk tensors over channels.  This mirrors the
 //! single-accelerator reality of an edge device: one compute engine,
 //! many requesters.
+//!
+//! DESIGN.md: §5 (runtime).
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};

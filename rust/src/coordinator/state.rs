@@ -7,6 +7,8 @@
 //! round boundary — exactly the semantics the accelerator's buffer array
 //! provides, and what keeps a serving round consistent while the next
 //! round's features stream in.
+//!
+//! DESIGN.md: §7 (serving coordinator).
 
 use crate::error::{Error, Result};
 

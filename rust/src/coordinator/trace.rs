@@ -5,6 +5,8 @@
 //! replays them through the size-or-deadline batching policy in virtual
 //! time (execution cost supplied by the caller — measured PJRT wall on the
 //! real path, a model in tests), and reports p50/p90/p99/max.
+//!
+//! DESIGN.md: §7 (serving coordinator).
 
 use crate::error::{Error, Result};
 use crate::units::Time;

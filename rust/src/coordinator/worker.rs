@@ -5,6 +5,8 @@
 //! The threads do *real* message passing (so the dataflow and results are
 //! genuine); the edge-network latencies are accounted with the calibrated
 //! model (Eq. 4) since wall-clock channel hops are not radio hops.
+//!
+//! DESIGN.md: §7 (serving coordinator).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};

@@ -6,6 +6,8 @@
 //! vector generator & scheduler renders a binary row-activation vector from
 //! the traversal core's output, and one evaluate pass accumulates all
 //! active neighbors per column — the in-situ Σ of the Z matrix (Fig. 1).
+//!
+//! DESIGN.md: §3 (architecture level).
 
 use crate::config::{CoreConfig, DeviceParams};
 use crate::crossbar::MvmCrossbar;

@@ -4,6 +4,8 @@
 //! The aggregated representation Z streams through bit-serial passes
 //! against the stationary weight matrix; the activation unit applies the
 //! non-linearity once per node.
+//!
+//! DESIGN.md: §3 (architecture level).
 
 use crate::config::{CoreConfig, DeviceParams};
 use crate::crossbar::MvmCrossbar;

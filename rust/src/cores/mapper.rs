@@ -7,6 +7,8 @@
 //! parallel.  This is the PUMA-style compilation step the latency model's
 //! `passes_per_node` abstracts; the mapper makes it explicit, checkable
 //! and reusable by the scaling study.
+//!
+//! DESIGN.md: §3 (architecture level).
 
 use crate::config::CrossbarGeometry;
 use crate::error::{Error, Result};

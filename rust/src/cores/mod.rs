@@ -5,6 +5,8 @@
 //! per-core energies that §3's network model composes into Eqs. (2)–(3);
 //! with the paper presets and the taxi workload the values reproduce
 //! Table 1 (see tests).
+//!
+//! DESIGN.md: §3 (architecture level).
 
 mod aggregation;
 mod feature;

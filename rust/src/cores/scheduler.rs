@@ -4,6 +4,8 @@
 //! scan-CAM result (source nodes with edges into the destination) and
 //! renders the binary row-activation vectors for the aggregation crossbar,
 //! window by window under the node-stationary placement.
+//!
+//! DESIGN.md: §3 (architecture level).
 
 use crate::error::{Error, Result};
 

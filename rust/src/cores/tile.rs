@@ -8,6 +8,8 @@
 //! levels) feeds the aggregation window and the feature-extraction
 //! weights; [`FeatureMatrix`] (f32) carries raw device features through
 //! the coordinator.
+//!
+//! DESIGN.md: §8 (flat memory layout).
 
 use crate::error::{Error, Result};
 

@@ -6,6 +6,8 @@
 //! edges point at that destination.  The *scan CAM* stores the Row-Pointer
 //! (RP) array; comparing an edge position against it yields the source node
 //! owning that edge.  Together: `incoming(dst) -> [src]`.
+//!
+//! DESIGN.md: §3 (architecture level).
 
 use crate::config::{CoreConfig, DeviceParams};
 use crate::crossbar::CamCrossbar;

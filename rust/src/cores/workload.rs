@@ -5,6 +5,8 @@
 //! GCN-style inference over the four §4.3 datasets.  A workload maps to
 //! crossbar *passes* per node in the aggregation / feature-extraction cores
 //! and CAM lookups in the traversal core.
+//!
+//! DESIGN.md: §3 (architecture level).
 
 /// Per-node GNN workload parameters.
 #[derive(Debug, Clone, PartialEq)]

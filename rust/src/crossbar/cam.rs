@@ -4,6 +4,8 @@
 //! search data on every row in parallel (*search*), or an order comparison
 //! against calibrated bit-line voltages (*compare*, used by the scan CAM).
 //! Functionally equivalent to `python/compile/kernels/cam.py`.
+//!
+//! DESIGN.md: §3 (architecture level).
 
 use crate::config::{CrossbarGeometry, DeviceParams};
 use crate::device::{Driver, MatchLineSense};

@@ -3,6 +3,8 @@
 //! Each array is both *functional* (bit-exact fixed-point MVM / CAM ops,
 //! matching the Layer-1 Pallas kernels and their jnp oracles) and a
 //! *timing/energy roll-up* composed from the `device` component models.
+//!
+//! DESIGN.md: §3 (architecture level).
 
 mod cam;
 mod mvm;

@@ -10,6 +10,8 @@
 //! Timing/energy model: one *pass* = DAC drive + array settle + Sample&Hold
 //! + (cols / ADCs) sequential conversions + Shift&Add, composed from the
 //! `device` components.
+//!
+//! DESIGN.md: §3 (architecture level); §8 (the fast evaluate paths).
 
 use crate::config::{CrossbarGeometry, DeviceParams};
 use crate::device::{Adc, Dac, RramCell, SampleHold, ShiftAdd};

@@ -4,6 +4,8 @@
 //! dominated), a 2T2R TCAM cell twice that; peripheral blocks use
 //! published NVSIM-class footprints.  Areas feed deployment cost analysis
 //! (a decentralized node must be small; the centralized bank need not).
+//!
+//! DESIGN.md: §2 (circuit level).
 
 use crate::config::{AcceleratorConfig, CoreConfig, CrossbarGeometry};
 use crate::units::Area;

@@ -9,6 +9,8 @@
 //! Constants live in [`crate::config::DeviceParams`]; the values are
 //! calibrated so the composed per-core figures land on Table 1 (see
 //! `cores::calibration` tests).
+//!
+//! DESIGN.md: §2 (circuit level).
 
 pub mod area;
 

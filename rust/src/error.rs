@@ -3,6 +3,8 @@
 //! Hand-rolled `Display`/`Error` impls keep the crate dependency-free (the
 //! offline build has no `thiserror`); the variants and messages match the
 //! original derive exactly.
+//!
+//! DESIGN.md: §1 (crate layering; every layer returns this type).
 
 use std::fmt;
 

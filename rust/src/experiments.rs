@@ -8,10 +8,12 @@ use crate::autotune::{
     TunerConfig,
 };
 use crate::controller::{Controller, CtrlConfig, Hysteresis, SwitchRecord};
-use crate::coordinator::{Arrival, LatencyProvider, RoundEngine};
+use crate::coordinator::{Arrival, GcnLayerBinding, LatencyProvider, RoundEngine, ShardBatch};
 use crate::cores::GnnWorkload;
-use crate::error::Result;
-use crate::graph::{datasets, fixed_size, generate, Csr, DatasetStats, ShardPlan};
+use crate::error::{Error, Result};
+use crate::graph::{
+    datasets, fixed_size, generate, CompactCsr, Csr, DatasetStats, FeatureQuant, ShardPlan,
+};
 use crate::netmodel::{NetModel, Setting, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
 use crate::obs::{MetricsRegistry, Obs};
@@ -2634,6 +2636,372 @@ impl ControllerSweep {
     }
 }
 
+/// E16 scale grid: LiveJournal-shape graphs from warm-up to the
+/// million-node headline (`--max-nodes` filters it; CI's quick mode
+/// stops at 100 k).
+pub const RESIDENCY_GRID: [usize; 3] = [10_000, 100_000, 1_000_000];
+/// E16 average out-degree — LiveJournal's Table 2 Avg Cₛ, so the R-MAT
+/// graphs match the paper's edge-per-node budget.
+pub const RESIDENCY_DEGREE: usize = 9;
+/// E16 default byte budget, in decoded shards.  Two shards is the
+/// minimum that lets the deterministic next-shard prefetch coexist with
+/// the pinned fetch target (DESIGN.md §16).
+pub const RESIDENCY_BUDGET_SHARDS: usize = 2;
+
+/// The E16 artifact binding: a wide table (4096 rows) with a narrow
+/// feature so million-node graphs shard into hundreds of tables while
+/// the per-row work stays cheap enough for debug-mode tests.
+pub fn residency_binding() -> GcnLayerBinding {
+    GcnLayerBinding {
+        artifact: "gcn_layer_b64_s2_f1_h8_t4096".into(),
+        batch: 64,
+        sample: 2,
+        feature: 1,
+        hidden: 8,
+        table: 4096,
+    }
+}
+
+/// One scale point of the E16 residency sweep.  Every field except the
+/// two wall clocks is a pure function of (nodes, rounds, budget_shards)
+/// — the parallel byte-identical contract; the walls are attached only
+/// in timed runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResidencyRow {
+    pub nodes: usize,
+    pub edges: usize,
+    pub shards: usize,
+    pub table: usize,
+    /// Resident-set byte ceiling the run is held under.
+    pub budget_bytes: usize,
+    /// High-water mark of decoded bytes — asserted ≤ `budget_bytes`.
+    pub peak_bytes: usize,
+    /// What an unbounded cache (the seed path) would hold decoded.
+    pub unbounded_bytes: usize,
+    /// Compact CSR footprint (varint neighbors + offsets + permutations).
+    pub graph_encoded_bytes: usize,
+    /// Seed CSR footprint the ratio is measured against.
+    pub graph_seed_bytes: usize,
+    pub compression_ratio: f64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub hit_rate: f64,
+    /// Barrier-time shard encodes (= shards × rounds, replacing the seed
+    /// path's `table_builds`).
+    pub shard_encodes: u64,
+    pub batches_per_round: u64,
+    pub rounds: usize,
+    /// Wall of the resident (decode-on-fetch) serve loop.
+    pub resident_wall_s: Option<f64>,
+    /// Wall of the identical loop on the seed (unbounded-cache) engine.
+    pub seed_wall_s: Option<f64>,
+}
+
+impl ResidencyRow {
+    /// Decode overhead headline: resident wall over seed wall (`None`
+    /// in untimed determinism runs).
+    pub fn decode_overhead(&self) -> Option<f64> {
+        match (self.resident_wall_s, self.seed_wall_s) {
+            (Some(r), Some(s)) if s > 0.0 => Some(r / s),
+            _ => None,
+        }
+    }
+}
+
+/// FNV-1a fold of one little-endian word into the digest `h`.
+fn digest_word(h: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *h = (*h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Digest one served batch: the fetched table tensor plus the assembled
+/// `x_self` / `nbr_idx` inputs, all via `to_bits` so the comparison is
+/// bit-exact, not approximate.
+fn digest_batch(h: &mut u64, table: &[f32], b: &ShardBatch) {
+    digest_word(h, b.shard as u64);
+    for v in table {
+        digest_word(h, u64::from(v.to_bits()));
+    }
+    for v in &b.x_self {
+        digest_word(h, u64::from(v.to_bits()));
+    }
+    for &v in &b.nbr_idx {
+        digest_word(h, u64::from(v as u32));
+    }
+}
+
+/// E16 — million-node residency sweep: LiveJournal-shape R-MAT graphs
+/// served through the [`RoundEngine`] with the byte-budgeted
+/// [`crate::graph::ResidentSet`] tier enabled, emitting
+/// `BENCH_residency.json` (DESIGN.md §16).
+///
+/// Each scale runs the same upload → barrier → assemble → fetch loop
+/// twice — once on the resident engine (ExactI32 quantization, budget =
+/// `budget_shards` decoded shards) and once on the seed engine with its
+/// unbounded tensor cache — and folds every fetched table and assembled
+/// batch into an FNV digest.  The row errors if the digests diverge
+/// (the bit-identity contract) or if `peak_bytes` exceeds the budget
+/// (the residency ceiling).  Rows are computed via `par::par_try_map`;
+/// untimed output is byte-identical across thread counts.
+pub struct ResidencySweep {
+    pub rows: Vec<ResidencyRow>,
+    pub max_nodes: usize,
+    pub rounds: usize,
+    pub budget_shards: usize,
+}
+
+impl ResidencySweep {
+    /// Timed sweep over all available cores (the CLI / CI entry point).
+    pub fn run(max_nodes: usize, rounds: usize, budget_shards: usize) -> Result<ResidencySweep> {
+        ResidencySweep::run_with_threads(
+            max_nodes,
+            rounds,
+            budget_shards,
+            par::available_threads(),
+            true,
+        )
+    }
+
+    /// One timed scale point at exactly `nodes` — the CLI's single-run
+    /// mode (the sweep grid only carries the standard E16 scales).
+    pub fn single(nodes: usize, rounds: usize, budget_shards: usize) -> Result<ResidencyRow> {
+        ResidencySweep::row(nodes, rounds, budget_shards, true)
+    }
+
+    /// Fully parameterized sweep; `timed = false` drops the wall fields
+    /// so the output is reproducible bit-for-bit across thread counts.
+    pub fn run_with_threads(
+        max_nodes: usize,
+        rounds: usize,
+        budget_shards: usize,
+        threads: usize,
+        timed: bool,
+    ) -> Result<ResidencySweep> {
+        let mut scales: Vec<usize> =
+            RESIDENCY_GRID.iter().copied().filter(|&n| n <= max_nodes).collect();
+        if scales.is_empty() {
+            scales.push(max_nodes);
+        }
+        let rows = par::par_try_map(&scales, threads, |&n| {
+            ResidencySweep::row(n, rounds, budget_shards, timed)
+        })?;
+        Ok(ResidencySweep { rows, max_nodes, rounds, budget_shards })
+    }
+
+    fn row(
+        nodes: usize,
+        rounds: usize,
+        budget_shards: usize,
+        timed: bool,
+    ) -> Result<ResidencyRow> {
+        let g = generate::rmat(
+            nodes,
+            nodes * RESIDENCY_DEGREE,
+            &generate::RmatParams::default(),
+            0xE16,
+        )?;
+        let compact = CompactCsr::from_csr(&g)?;
+        let binding = residency_binding();
+        let (feature, hidden, table) = (binding.feature, binding.hidden, binding.table);
+        let plan = ShardPlan::build(&g, &binding.sampler(), table)?;
+        let weights = vec![0.01; feature * hidden];
+        let mut res = RoundEngine::new(binding, plan.clone(), weights.clone())?;
+        let shard_bytes = table * feature * std::mem::size_of::<f32>();
+        let budget = budget_shards.max(1) * shard_bytes;
+        res.enable_residency(FeatureQuant::ExactI32, budget)?;
+        let mut seed = RoundEngine::new(residency_binding(), plan, weights)?;
+        let n = g.num_nodes();
+        let all: Vec<usize> = (0..n).collect();
+        // Integer-valued features, drawn OUTSIDE the timed windows: the
+        // ExactI32 codec is bit-exact on these (DESIGN.md §16), which is
+        // what the digest comparison asserts; the walls measure the
+        // engines, not the test RNG.
+        let round_features: Vec<Vec<f32>> = (0..rounds)
+            .map(|round| {
+                let mut rng = Rng::new(0xE16C + round as u64);
+                (0..n * feature).map(|_| rng.index(512) as f32).collect()
+            })
+            .collect();
+        let drive = |engine: &mut RoundEngine| -> Result<(u64, u64, f64)> {
+            let mut digest = 0xcbf2_9ce4_8422_2325u64;
+            let mut batches_per_round = 0u64;
+            let t0 = std::time::Instant::now();
+            for feats in &round_features {
+                for node in 0..n {
+                    engine.upload(node, &feats[node * feature..(node + 1) * feature])?;
+                }
+                engine.try_end_round()?;
+                let batches = engine.assemble(&all)?;
+                batches_per_round = batches.len() as u64;
+                // Batches come back shard-ascending, so the fetch scan is
+                // sequential in plan order — the pattern the next-shard
+                // prefetch turns into hits.
+                for b in &batches {
+                    let t = engine.fetch_table(b.shard)?;
+                    digest_batch(&mut digest, t.as_f32()?, b);
+                }
+            }
+            Ok((digest, batches_per_round, t0.elapsed().as_secs_f64()))
+        };
+        let (res_digest, batches_per_round, res_wall) = drive(&mut res)?;
+        let (seed_digest, _, seed_wall) = drive(&mut seed)?;
+        if res_digest != seed_digest {
+            return Err(Error::Graph(format!(
+                "residency serve diverged from the seed path at {nodes} nodes"
+            )));
+        }
+        let tier = res.resident().expect("residency enabled above");
+        if tier.peak_bytes() > budget {
+            return Err(Error::Graph(format!(
+                "peak resident bytes {} exceed the {budget}-byte budget at {nodes} nodes",
+                tier.peak_bytes()
+            )));
+        }
+        let m = tier.metrics();
+        Ok(ResidencyRow {
+            nodes: n,
+            edges: g.num_edges(),
+            shards: res.plan().num_shards(),
+            table,
+            budget_bytes: budget,
+            peak_bytes: tier.peak_bytes(),
+            unbounded_bytes: tier.unbounded_bytes(),
+            graph_encoded_bytes: compact.encoded_bytes(),
+            graph_seed_bytes: compact.seed_bytes(),
+            compression_ratio: compact.compression_ratio(),
+            hits: m.counter_value("resident.hits"),
+            misses: m.counter_value("resident.misses"),
+            evictions: m.counter_value("resident.evictions"),
+            prefetch_issued: m.counter_value("resident.prefetch_issued"),
+            prefetch_hits: m.counter_value("resident.prefetch_hits"),
+            hit_rate: tier.hit_rate(),
+            shard_encodes: res.shard_encodes(),
+            batches_per_round,
+            rounds,
+            resident_wall_s: timed.then_some(res_wall),
+            seed_wall_s: timed.then_some(seed_wall),
+        })
+    }
+
+    /// Post-hoc metrics view — the `.metrics.json` sidecar the CLI
+    /// writes next to `BENCH_residency.json`.  Wall-clock fields are
+    /// excluded so the snapshot stays byte-deterministic.
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        let m = MetricsRegistry::new();
+        m.inc("residency.scales", self.rows.len() as u64);
+        for r in &self.rows {
+            m.inc("residency.hits", r.hits);
+            m.inc("residency.misses", r.misses);
+            m.inc("residency.evictions", r.evictions);
+            m.inc("residency.prefetch_hits", r.prefetch_hits);
+            m.inc("residency.shard_encodes", r.shard_encodes);
+            m.raise_gauge("residency.peak_bytes", r.peak_bytes as f64);
+            m.raise_gauge("residency.compression_ratio", r.compression_ratio);
+            m.observe("residency.hit_rate", r.hit_rate);
+        }
+        m
+    }
+
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            "E16 — residency: LiveJournal-shape graphs under a byte budget",
+            &[
+                "Nodes",
+                "Edges",
+                "Shards",
+                "Budget B",
+                "Peak B",
+                "Unbounded B",
+                "CSR ratio",
+                "Hit rate",
+                "Overhead",
+            ],
+        );
+        for r in &self.rows {
+            t.row(&[
+                r.nodes.to_string(),
+                r.edges.to_string(),
+                r.shards.to_string(),
+                r.budget_bytes.to_string(),
+                r.peak_bytes.to_string(),
+                r.unbounded_bytes.to_string(),
+                format!("{:.2}x", r.compression_ratio),
+                format!("{:.1}%", r.hit_rate * 100.0),
+                r.decode_overhead()
+                    .map(|o| format!("{o:.2}x"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// The `BENCH_residency.json` artifact.
+    pub fn to_json(&self) -> String {
+        let num = |v: f64| format!("{v:.6e}");
+        let opt = |v: Option<f64>| v.map(&num).unwrap_or_else(|| "null".into());
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for r in &self.rows {
+            rows.push(format!(
+                "    {{\"nodes\": {}, \"edges\": {}, \"shards\": {}, \"table\": {}, \
+                 \"budget_bytes\": {}, \"peak_bytes\": {}, \"unbounded_bytes\": {}, \
+                 \"graph\": {{\"encoded_bytes\": {}, \"seed_bytes\": {}, \
+                 \"compression_ratio\": {}}}, \"cache\": {{\"hits\": {}, \"misses\": {}, \
+                 \"evictions\": {}, \"prefetch_issued\": {}, \"prefetch_hits\": {}, \
+                 \"hit_rate\": {}}}, \"shard_encodes\": {}, \"batches_per_round\": {}, \
+                 \"rounds\": {}, \"resident_wall_s\": {}, \"seed_wall_s\": {}, \
+                 \"decode_overhead\": {}}}",
+                r.nodes,
+                r.edges,
+                r.shards,
+                r.table,
+                r.budget_bytes,
+                r.peak_bytes,
+                r.unbounded_bytes,
+                r.graph_encoded_bytes,
+                r.graph_seed_bytes,
+                num(r.compression_ratio),
+                r.hits,
+                r.misses,
+                r.evictions,
+                r.prefetch_issued,
+                r.prefetch_hits,
+                num(r.hit_rate),
+                r.shard_encodes,
+                r.batches_per_round,
+                r.rounds,
+                opt(r.resident_wall_s),
+                opt(r.seed_wall_s),
+                opt(r.decode_overhead()),
+            ));
+        }
+        let within = self.rows.iter().all(|r| r.peak_bytes <= r.budget_bytes);
+        let min_ratio =
+            self.rows.iter().map(|r| r.compression_ratio).fold(f64::INFINITY, f64::min);
+        let min_hit = self.rows.iter().map(|r| r.hit_rate).fold(f64::INFINITY, f64::min);
+        format!(
+            "{{\n  \"experiment\": \"residency_sweep\",\n  \"config\": {{\
+             \"max_nodes\": {}, \"rounds\": {}, \"budget_shards\": {}, \
+             \"degree\": {}, \"quant\": \"exact_i32\"}},\n  \
+             \"summary\": {{\"scales\": {}, \"peak_within_budget\": {}, \
+             \"min_compression_ratio\": {}, \"min_hit_rate\": {}}},\n  \
+             \"rows\": [\n{}\n  ]\n}}\n",
+            self.max_nodes,
+            self.rounds,
+            self.budget_shards,
+            RESIDENCY_DEGREE,
+            self.rows.len(),
+            within,
+            num(min_ratio),
+            num(min_hit),
+            rows.join(",\n"),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -3075,6 +3443,53 @@ mod tests {
         assert_eq!(seq.to_json(), par4.to_json());
         let again = ControllerSweep::run_with_threads(150, 400, 1).unwrap();
         assert_eq!(seq.to_json(), again.to_json());
+    }
+
+    /// E16 at the grid's warm-up scale: the budget genuinely binds
+    /// (unbounded footprint exceeds it, evictions happen), the peak
+    /// stays under it, the compact CSR compresses a skewed graph, and
+    /// the sequential fetch scan rides the prefetch.  The row itself
+    /// errors on resident/seed digest divergence, so a clean run *is*
+    /// the bit-identity assertion.
+    #[test]
+    fn residency_sweep_holds_the_budget_and_rides_the_prefetch() {
+        let sweep =
+            ResidencySweep::run_with_threads(10_000, 2, RESIDENCY_BUDGET_SHARDS, 1, false)
+                .unwrap();
+        assert_eq!(sweep.rows.len(), 1);
+        let r = &sweep.rows[0];
+        assert_eq!(r.nodes, 10_000);
+        assert!(r.shards > 1, "grid scale must shard: {r:?}");
+        assert!(r.peak_bytes <= r.budget_bytes, "{r:?}");
+        assert!(r.unbounded_bytes > r.budget_bytes, "budget must actually bind: {r:?}");
+        assert!(r.evictions > 0, "{r:?}");
+        assert!(r.compression_ratio > 1.0, "{r:?}");
+        assert!(r.hit_rate > 0.5, "prefetch should carry the shard-order scan: {r:?}");
+        assert_eq!(r.shard_encodes, (r.shards * r.rounds) as u64);
+        assert_eq!(r.misses + r.hits, r.batches_per_round * r.rounds as u64);
+        let json = sweep.to_json();
+        assert!(json.contains("\"experiment\": \"residency_sweep\""));
+        assert!(json.contains("\"peak_within_budget\": true"));
+        assert!(json.contains("\"resident_wall_s\": null"));
+        assert!(sweep.render().render().contains("Hit rate"));
+        assert!(sweep.metrics_snapshot().to_json().contains("residency.peak_bytes"));
+    }
+
+    /// E16 determinism: untimed sweeps emit byte-identical
+    /// `BENCH_residency.json` at every thread count, and rerunning is
+    /// reproducible.
+    #[test]
+    fn residency_sweep_parallel_is_byte_identical_to_sequential() {
+        let seq = ResidencySweep::run_with_threads(10_000, 2, 2, 1, false).unwrap();
+        let par4 = ResidencySweep::run_with_threads(10_000, 2, 2, 4, false).unwrap();
+        assert_eq!(seq.rows, par4.rows);
+        assert_eq!(seq.to_json(), par4.to_json());
+        let again = ResidencySweep::run_with_threads(10_000, 2, 2, 1, false).unwrap();
+        assert_eq!(seq.to_json(), again.to_json());
+        assert_eq!(
+            seq.metrics_snapshot().to_json(),
+            par4.metrics_snapshot().to_json(),
+        );
     }
 
     #[test]

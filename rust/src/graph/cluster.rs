@@ -6,6 +6,8 @@
 //! study uses a uniform cₛ = 10) and locality-greedy growth (BFS from
 //! unassigned seeds), which keeps intra-cluster edges high on structured
 //! graphs.
+//!
+//! DESIGN.md: §10 (shard plans pack whole clusters via `from_clustering`).
 
 use std::collections::VecDeque;
 

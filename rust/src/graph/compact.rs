@@ -1,0 +1,521 @@
+//! Compressed CSR and quantized feature storage for million-node graph
+//! residency (DESIGN.md §16).
+//!
+//! [`CompactCsr`] renumbers nodes degree-descending (stable: degree
+//! desc, then old id asc — a pure function of the input graph), sorts
+//! each neighbor list in the new id space and stores it delta-encoded
+//! as LEB128 varints.  On skewed graphs the hubs land on small ids, so
+//! both absolute first values and the gaps between sorted neighbors
+//! stay short and most varints collapse to one or two bytes.  The
+//! encoding is structure-exact: [`CompactCsr::to_csr`] rebuilds the
+//! original graph bit-for-bit, multigraph duplicates included (edge
+//! weights are not encoded — the decoded graph is uniform-weight, like
+//! every generator output).
+//!
+//! [`QuantizedFeatures`] packs f32 feature blocks at u8 / u16
+//! precision (affine `offset + q·step`, error ≤ step/2 up to f32
+//! rounding) or as [`FeatureQuant::ExactI32`] — bit-exact for integral
+//! values with |v| ≤ 2²⁴, the path the resident serving tier
+//! (`graph::resident`) rides to stay bit-identical to the uncompressed
+//! engine.
+
+use crate::error::{Error, Result};
+
+use super::csr::Csr;
+
+/// Append `v` as an LEB128 varint (7 payload bits per byte, high bit =
+/// continuation).
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read one LEB128 varint starting at `*at`, advancing `*at` past it.
+fn read_varint(bytes: &[u8], at: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes
+            .get(*at)
+            .ok_or_else(|| Error::Graph("varint ran off the encoded buffer".into()))?;
+        *at += 1;
+        v |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err(Error::Graph("varint longer than 64 bits".into()));
+        }
+    }
+}
+
+/// Degree-renumbered, delta+varint compressed CSR (module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompactCsr {
+    num_nodes: usize,
+    num_edges: usize,
+    /// `new_of_old[old] = new` — the degree-rank permutation.
+    new_of_old: Vec<u32>,
+    /// `old_of_new[new] = old` — its inverse.
+    old_of_new: Vec<u32>,
+    /// Byte offset of each new-id row in `bytes` (`num_nodes + 1`
+    /// entries; empty rows occupy zero bytes).
+    row_offsets: Vec<usize>,
+    /// Per-row: first neighbor absolute, then non-negative gaps (gap 0
+    /// keeps multigraph duplicates), all in new-id space, LEB128.
+    bytes: Vec<u8>,
+}
+
+impl CompactCsr {
+    /// Encode a seed [`Csr`].  Deterministic: the renumbering and the
+    /// byte stream are pure functions of the graph structure.
+    pub fn from_csr(g: &Csr) -> Result<CompactCsr> {
+        let n = g.num_nodes();
+        if n > u32::MAX as usize {
+            return Err(Error::Graph(format!("{n} nodes exceed the u32 id space")));
+        }
+        // Degree-descending renumbering, stable on old id: hubs first.
+        let mut old_of_new: Vec<u32> = (0..n as u32).collect();
+        old_of_new.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v as usize)), v));
+        let mut new_of_old = vec![0u32; n];
+        for (new, &old) in old_of_new.iter().enumerate() {
+            new_of_old[old as usize] = new as u32;
+        }
+        let mut row_offsets = Vec::with_capacity(n + 1);
+        row_offsets.push(0usize);
+        let mut bytes = Vec::new();
+        let mut row: Vec<u32> = Vec::new();
+        for &old in &old_of_new {
+            row.clear();
+            row.extend(g.neighbors(old as usize).iter().map(|&d| new_of_old[d]));
+            row.sort_unstable();
+            let mut prev = 0u64;
+            for (k, &d) in row.iter().enumerate() {
+                let d = u64::from(d);
+                let delta = if k == 0 { d } else { d - prev };
+                push_varint(&mut bytes, delta);
+                prev = d;
+            }
+            row_offsets.push(bytes.len());
+        }
+        Ok(CompactCsr {
+            num_nodes: n,
+            num_edges: g.num_edges(),
+            new_of_old,
+            old_of_new,
+            row_offsets,
+            bytes,
+        })
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    /// New (degree-rank) id of an old node.
+    pub fn new_id(&self, old: usize) -> usize {
+        self.new_of_old[old] as usize
+    }
+
+    /// Old id of a new (degree-rank) id — the inverse permutation.
+    pub fn old_id(&self, new: usize) -> usize {
+        self.old_of_new[new] as usize
+    }
+
+    /// Decode one row in new-id space into `out` (cleared on entry):
+    /// ascending new ids, duplicates kept.
+    pub fn decode_row(&self, new: usize, out: &mut Vec<usize>) -> Result<()> {
+        if new >= self.num_nodes {
+            return Err(Error::Graph(format!("row {new} out of range ({} nodes)", self.num_nodes)));
+        }
+        out.clear();
+        let mut at = self.row_offsets[new];
+        let end = self.row_offsets[new + 1];
+        let mut prev = 0u64;
+        while at < end {
+            let delta = read_varint(&self.bytes, &mut at)?;
+            prev = if out.is_empty() { delta } else { prev + delta };
+            if prev >= self.num_nodes as u64 {
+                return Err(Error::Graph("decoded neighbor out of range".into()));
+            }
+            out.push(prev as usize);
+        }
+        Ok(())
+    }
+
+    /// Neighbors of an *old* node id into `out` — ascending old id with
+    /// duplicates kept, i.e. exactly the seed [`Csr::neighbors`] order.
+    pub fn neighbors(&self, old: usize, out: &mut Vec<usize>) -> Result<()> {
+        if old >= self.num_nodes {
+            return Err(Error::Graph(format!(
+                "node {old} out of range ({} nodes)",
+                self.num_nodes
+            )));
+        }
+        self.decode_row(self.new_of_old[old] as usize, out)?;
+        for v in out.iter_mut() {
+            *v = self.old_of_new[*v] as usize;
+        }
+        out.sort_unstable();
+        Ok(())
+    }
+
+    /// Exact structural roundtrip: rebuild the original graph (uniform
+    /// edge weights — the encoding stores structure only).
+    pub fn to_csr(&self) -> Result<Csr> {
+        let mut edges = Vec::with_capacity(self.num_edges);
+        let mut row = Vec::new();
+        for new in 0..self.num_nodes {
+            self.decode_row(new, &mut row)?;
+            let src = self.old_of_new[new] as usize;
+            for &d in &row {
+                edges.push((src, self.old_of_new[d] as usize));
+            }
+        }
+        Csr::from_edges(self.num_nodes, &edges)
+    }
+
+    /// Heap footprint of the encoding: neighbor bytes + row offsets +
+    /// both permutation arrays.
+    pub fn encoded_bytes(&self) -> usize {
+        self.bytes.len()
+            + self.row_offsets.len() * std::mem::size_of::<usize>()
+            + (self.new_of_old.len() + self.old_of_new.len()) * std::mem::size_of::<u32>()
+    }
+
+    /// Heap footprint of the seed [`Csr`] arrays (RP + CI as usize, E
+    /// as f32) for the same graph.
+    pub fn seed_bytes(&self) -> usize {
+        (self.num_nodes + 1 + self.num_edges) * std::mem::size_of::<usize>()
+            + self.num_edges * std::mem::size_of::<f32>()
+    }
+
+    /// Structure compression ratio: seed footprint / encoded footprint.
+    pub fn compression_ratio(&self) -> f64 {
+        self.seed_bytes() as f64 / self.encoded_bytes() as f64
+    }
+}
+
+/// Feature storage precision of the encoded tier (DESIGN.md §16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureQuant {
+    /// 8-bit affine (256 levels): 4× smaller than f32, lossy
+    /// (error ≤ step/2 up to f32 rounding).
+    U8,
+    /// 16-bit affine (65 536 levels): 2× smaller, lossy.
+    U16,
+    /// 32-bit integer: same size as f32, *bit-exact* roundtrip for
+    /// integral values with |v| ≤ 2²⁴ (rejects anything else) — the
+    /// resident path that stays bit-identical to the seed engine.
+    ExactI32,
+}
+
+impl FeatureQuant {
+    /// Bytes per encoded value.
+    pub fn value_bytes(self) -> usize {
+        match self {
+            FeatureQuant::U8 => 1,
+            FeatureQuant::U16 => 2,
+            FeatureQuant::ExactI32 => 4,
+        }
+    }
+
+    /// Quantization levels of the affine modes (0 for ExactI32).
+    fn levels(self) -> f32 {
+        match self {
+            FeatureQuant::U8 => 255.0,
+            FeatureQuant::U16 => 65_535.0,
+            FeatureQuant::ExactI32 => 0.0,
+        }
+    }
+}
+
+/// One encoded feature block (a shard's table, in the resident tier).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedFeatures {
+    quant: FeatureQuant,
+    len: usize,
+    /// Affine dequantization `v = offset + q·step` (U8/U16; step 0
+    /// when the block is constant, so every value decodes to `offset`).
+    offset: f32,
+    step: f32,
+    data: Vec<u8>,
+}
+
+impl QuantizedFeatures {
+    /// Encode a block.  Deterministic; the affine modes derive
+    /// (offset, step) from the block's min/max, ExactI32 rejects
+    /// non-integral or out-of-range values.
+    pub fn encode(quant: FeatureQuant, values: &[f32]) -> Result<QuantizedFeatures> {
+        if let FeatureQuant::ExactI32 = quant {
+            let mut data = Vec::with_capacity(values.len() * 4);
+            for &v in values {
+                if v.fract() != 0.0 || v.abs() > 16_777_216.0 {
+                    return Err(Error::Graph(format!(
+                        "ExactI32 requires integral values with |v| <= 2^24, got {v}"
+                    )));
+                }
+                data.extend_from_slice(&(v as i32).to_le_bytes());
+            }
+            return Ok(QuantizedFeatures {
+                quant,
+                len: values.len(),
+                offset: 0.0,
+                step: 0.0,
+                data,
+            });
+        }
+        let levels = quant.levels();
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in values {
+            if !v.is_finite() {
+                return Err(Error::Graph("cannot quantize non-finite features".into()));
+            }
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if values.is_empty() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let step = if hi > lo { (hi - lo) / levels } else { 0.0 };
+        let mut data = Vec::with_capacity(values.len() * quant.value_bytes());
+        for &v in values {
+            let q = if step > 0.0 { ((v - lo) / step).round().clamp(0.0, levels) } else { 0.0 };
+            match quant {
+                FeatureQuant::U8 => data.push(q as u8),
+                FeatureQuant::U16 => data.extend_from_slice(&(q as u16).to_le_bytes()),
+                FeatureQuant::ExactI32 => unreachable!("handled above"),
+            }
+        }
+        Ok(QuantizedFeatures { quant, len: values.len(), offset: lo, step, data })
+    }
+
+    pub fn quant(&self) -> FeatureQuant {
+        self.quant
+    }
+
+    /// Number of encoded values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Affine dequantization offset (the block minimum for U8/U16).
+    pub fn offset(&self) -> f32 {
+        self.offset
+    }
+
+    /// Affine dequantization step — the worst-case absolute error of
+    /// the lossy modes is step/2 (up to f32 rounding); 0 for ExactI32
+    /// and for constant blocks.
+    pub fn step(&self) -> f32 {
+        self.step
+    }
+
+    /// Decode the full block into `out` (cleared on entry).
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len);
+        match self.quant {
+            FeatureQuant::ExactI32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32);
+                }
+            }
+            FeatureQuant::U8 => {
+                for &b in &self.data {
+                    out.push(self.offset + f32::from(b) * self.step);
+                }
+            }
+            FeatureQuant::U16 => {
+                for c in self.data.chunks_exact(2) {
+                    out.push(self.offset + f32::from(u16::from_le_bytes([c[0], c[1]])) * self.step);
+                }
+            }
+        }
+    }
+
+    /// [`Self::decode_into`] into a fresh buffer.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Encoded heap footprint in bytes.
+    pub fn encoded_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Decoded (f32) footprint in bytes.
+    pub fn decoded_bytes(&self) -> usize {
+        self.len * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::testing::{forall, Rng};
+
+    #[test]
+    fn varint_roundtrips_across_the_width_boundaries() {
+        let probes = [
+            0u64,
+            1,
+            127,
+            128,
+            16_383,
+            16_384,
+            u64::from(u32::MAX),
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        let mut buf = Vec::new();
+        for &v in &probes {
+            push_varint(&mut buf, v);
+        }
+        let mut at = 0;
+        for &v in &probes {
+            assert_eq!(read_varint(&buf, &mut at).unwrap(), v);
+        }
+        assert_eq!(at, buf.len());
+        // A dangling continuation bit fails loudly.
+        assert!(read_varint(&[0x80], &mut 0).is_err());
+        // More than 64 payload bits fails loudly.
+        let too_long = [0x80u8; 10];
+        assert!(read_varint(&too_long, &mut 0).is_err());
+    }
+
+    #[test]
+    fn renumbering_is_degree_descending_and_stable() {
+        // Star: node 0 has degree 4, everyone else 1 (back-edges).
+        let edges = [(0, 1), (0, 2), (0, 3), (0, 4), (1, 0), (2, 0), (3, 0), (4, 0)];
+        let g = Csr::from_edges(5, &edges).unwrap();
+        let c = CompactCsr::from_csr(&g).unwrap();
+        assert_eq!(c.new_id(0), 0, "the hub must get rank 0");
+        // Equal degrees keep old-id order.
+        for old in 1..4 {
+            assert!(c.new_id(old) < c.new_id(old + 1));
+        }
+        for new in 0..5 {
+            assert_eq!(c.new_id(c.old_id(new)), new);
+        }
+    }
+
+    #[test]
+    fn empty_rows_occupy_zero_bytes() {
+        let g = Csr::from_edges(6, &[(0, 5)]).unwrap();
+        let c = CompactCsr::from_csr(&g).unwrap();
+        let mut out = Vec::new();
+        for old in 1..5 {
+            c.neighbors(old, &mut out).unwrap();
+            assert!(out.is_empty(), "node {old} must decode empty");
+        }
+        c.neighbors(0, &mut out).unwrap();
+        assert_eq!(out, vec![5]);
+        assert_eq!(c.to_csr().unwrap(), g);
+    }
+
+    #[test]
+    fn multigraph_duplicates_survive_the_roundtrip() {
+        let g = Csr::from_edges(3, &[(0, 1), (0, 1), (0, 1), (2, 0), (2, 0)]).unwrap();
+        let c = CompactCsr::from_csr(&g).unwrap();
+        assert_eq!(c.to_csr().unwrap(), g);
+        let mut out = Vec::new();
+        c.neighbors(0, &mut out).unwrap();
+        assert_eq!(out, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn property_compact_roundtrips_random_graphs() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.index(40) + 1;
+            let m = rng.index(120);
+            let edges: Vec<(usize, usize)> =
+                (0..m).map(|_| (rng.index(n), rng.index(n))).collect();
+            let g = Csr::from_edges(n, &edges).unwrap();
+            let c = CompactCsr::from_csr(&g).unwrap();
+            assert_eq!(c.num_nodes(), n);
+            assert_eq!(c.num_edges(), m);
+            assert_eq!(c.to_csr().unwrap(), g);
+            let mut out = Vec::new();
+            for old in 0..n {
+                c.neighbors(old, &mut out).unwrap();
+                assert_eq!(out, g.neighbors(old), "node {old}");
+            }
+        });
+    }
+
+    #[test]
+    fn skewed_graphs_compress_below_the_seed_footprint() {
+        let g = generate::rmat(1 << 12, 9 << 12, &generate::RmatParams::default(), 5).unwrap();
+        let c = CompactCsr::from_csr(&g).unwrap();
+        assert!(
+            c.compression_ratio() > 1.5,
+            "ratio {:.2} (encoded {} vs seed {})",
+            c.compression_ratio(),
+            c.encoded_bytes(),
+            c.seed_bytes()
+        );
+        assert_eq!(c.to_csr().unwrap(), g);
+    }
+
+    #[test]
+    fn exact_i32_roundtrips_bit_for_bit_and_rejects_out_of_range() {
+        let vals = vec![0.0f32, 1.0, -1.0, 513.0, -16_777_216.0, 16_777_216.0];
+        let q = QuantizedFeatures::encode(FeatureQuant::ExactI32, &vals).unwrap();
+        assert_eq!(q.decode(), vals);
+        assert_eq!(q.step(), 0.0);
+        assert!(QuantizedFeatures::encode(FeatureQuant::ExactI32, &[0.5]).is_err());
+        assert!(QuantizedFeatures::encode(FeatureQuant::ExactI32, &[16_777_218.0]).is_err());
+    }
+
+    #[test]
+    fn affine_modes_bound_error_by_half_a_step() {
+        forall(16, |rng: &mut Rng| {
+            let n = rng.index(200) + 1;
+            let lo = rng.f64_in(-50.0, 50.0);
+            let hi = lo + rng.f64_in(0.0, 100.0);
+            let vals: Vec<f32> = (0..n).map(|_| rng.f64_in(lo, hi) as f32).collect();
+            for quant in [FeatureQuant::U8, FeatureQuant::U16] {
+                let q = QuantizedFeatures::encode(quant, &vals).unwrap();
+                assert_eq!(q.encoded_bytes(), n * quant.value_bytes());
+                let dec = q.decode();
+                let tol = 0.51 * q.step() + 1e-4;
+                for (a, b) in vals.iter().zip(&dec) {
+                    assert!((a - b).abs() <= tol, "{a} vs {b} (step {})", q.step());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn constant_and_empty_blocks_decode_exactly() {
+        let q = QuantizedFeatures::encode(FeatureQuant::U8, &[3.25; 9]).unwrap();
+        assert_eq!(q.step(), 0.0);
+        assert_eq!(q.decode(), vec![3.25f32; 9]);
+        let e = QuantizedFeatures::encode(FeatureQuant::U16, &[]).unwrap();
+        assert!(e.is_empty());
+        assert!(e.decode().is_empty());
+        assert!(QuantizedFeatures::encode(FeatureQuant::U8, &[f32::NAN]).is_err());
+    }
+}

@@ -2,6 +2,8 @@
 //!
 //! The traversal core consumes exactly these three arrays: the Edge weight
 //! array (E), the Column Index array (CI) and the Row Pointer array (RP).
+//!
+//! DESIGN.md: §10 (table-sharded execution); §16 (the compact encoding).
 
 use crate::error::{Error, Result};
 

@@ -1,16 +1,21 @@
 //! Graph substrate: CSR storage, generators, the Table 2 dataset registry,
-//! neighbor sampling, cluster partitioning and table-sharded execution
-//! plans.
+//! neighbor sampling, cluster partitioning, table-sharded execution
+//! plans, and the million-node residency tier (compressed CSR +
+//! byte-budgeted shard streaming, DESIGN.md §16).
 
 mod cluster;
+mod compact;
 mod csr;
 pub mod datasets;
 pub mod generate;
+mod resident;
 mod sample;
 mod shard;
 
 pub use cluster::{fixed_size, locality, Clustering};
+pub use compact::{CompactCsr, FeatureQuant, QuantizedFeatures};
 pub use csr::Csr;
 pub use datasets::DatasetStats;
+pub use resident::ResidentSet;
 pub use sample::NeighborSampler;
 pub use shard::{Shard, ShardPlan};

@@ -1,0 +1,433 @@
+//! Out-of-core shard residency: a byte-budgeted LRU of decoded shard
+//! tables over a quantized encoded tier (DESIGN.md §16).
+//!
+//! [`ResidentSet`] holds every shard's feature table in *encoded* form
+//! ([`QuantizedFeatures`] — the out-of-core tier) and decodes shards on
+//! demand into an LRU cache whose decoded footprint never exceeds
+//! `budget_bytes` (`peak_bytes() ≤ budget`, asserted in tests).  After
+//! every fetch the next shard in [`ShardPlan`] order is prefetched —
+//! decoded into the cache while the current shard's batch is in the
+//! PJRT funnel — unless it cannot fit without evicting the shard just
+//! returned (then it is skipped and counted).  All bookkeeping lives
+//! behind a `RefCell`, so fetches take `&self` (matching the engine's
+//! serve path) and the set is `!Sync`: the access sequence, and with it
+//! the eviction order, is a deterministic function of the fetch order
+//! alone — never of thread count (asserted in tests).
+//!
+//! Accounting surfaces as `obs` metrics: `resident.hits` /
+//! `resident.misses` / `resident.evictions` /
+//! `resident.prefetch_issued` / `resident.prefetch_hits` /
+//! `resident.prefetch_skipped` counters and the `resident.bytes` /
+//! `resident.peak_bytes` gauges.
+//!
+//! [`ShardPlan`]: crate::graph::ShardPlan
+
+use std::cell::RefCell;
+
+use crate::error::{Error, Result};
+use crate::obs::MetricsRegistry;
+use crate::runtime::Tensor;
+
+use super::compact::{FeatureQuant, QuantizedFeatures};
+
+/// LRU bookkeeping (interior-mutable so fetches take `&self`).
+#[derive(Debug, Default)]
+struct Lru {
+    /// Decoded shard tables; tensor payloads are Arc-backed, so handing
+    /// one to a serve batch is a refcount bump, not a copy.
+    cached: Vec<Option<Tensor>>,
+    /// Monotonic last-access stamp per shard (0 = not resident).
+    stamp: Vec<u64>,
+    /// Cached by prefetch and not yet served (cleared on first hit).
+    speculative: Vec<bool>,
+    seq: u64,
+    bytes: usize,
+    peak: usize,
+}
+
+/// Byte-budgeted resident tier over encoded shard tables (module docs).
+#[derive(Debug)]
+pub struct ResidentSet {
+    quant: FeatureQuant,
+    budget: usize,
+    feature: usize,
+    /// Encoded (out-of-core) tier, one blob per shard once stored.
+    encoded: Vec<Option<QuantizedFeatures>>,
+    metrics: MetricsRegistry,
+    lru: RefCell<Lru>,
+}
+
+impl ResidentSet {
+    /// A set over `shards` shard slots of `feature`-wide rows, holding
+    /// at most `budget_bytes` of decoded f32 payload at once.
+    pub fn new(
+        shards: usize,
+        feature: usize,
+        quant: FeatureQuant,
+        budget_bytes: usize,
+    ) -> Result<ResidentSet> {
+        if feature == 0 {
+            return Err(Error::Graph("resident set needs a non-zero feature width".into()));
+        }
+        Ok(ResidentSet {
+            quant,
+            budget: budget_bytes,
+            feature,
+            encoded: (0..shards).map(|_| None).collect(),
+            metrics: MetricsRegistry::new(),
+            lru: RefCell::new(Lru {
+                cached: vec![None; shards],
+                stamp: vec![0; shards],
+                speculative: vec![false; shards],
+                ..Lru::default()
+            }),
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.encoded.len()
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    pub fn quant(&self) -> FeatureQuant {
+        self.quant
+    }
+
+    /// Encode a shard's decoded table into the out-of-core tier,
+    /// invalidating any cached copy.  `values.len()` must be a multiple
+    /// of the feature width, and the decoded payload must fit the
+    /// budget on its own (otherwise no fetch could ever serve it).
+    pub fn store(&mut self, shard: usize, values: &[f32]) -> Result<()> {
+        if shard >= self.encoded.len() {
+            return Err(Error::Graph(format!(
+                "shard {shard} out of range ({} shards)",
+                self.encoded.len()
+            )));
+        }
+        if values.len() % self.feature != 0 {
+            return Err(Error::Graph(format!(
+                "shard payload {} is not a multiple of feature width {}",
+                values.len(),
+                self.feature
+            )));
+        }
+        let decoded = values.len() * std::mem::size_of::<f32>();
+        if decoded > self.budget {
+            return Err(Error::Graph(format!(
+                "shard {shard} needs {decoded} decoded bytes, over the {}-byte budget",
+                self.budget
+            )));
+        }
+        self.encoded[shard] = Some(QuantizedFeatures::encode(self.quant, values)?);
+        // A stale decoded copy must not serve the old round's table.
+        let lru = self.lru.get_mut();
+        if let Some(old) = lru.cached[shard].take() {
+            lru.bytes -= tensor_bytes(&old);
+            lru.stamp[shard] = 0;
+            lru.speculative[shard] = false;
+        }
+        Ok(())
+    }
+
+    /// Fetch a shard's decoded table, decoding on miss and prefetching
+    /// its successor (`(shard + 1) % shards`).  The returned tensor is
+    /// `[rows, feature]`-shaped; cloning it is a refcount bump.
+    pub fn fetch(&self, shard: usize) -> Result<Tensor> {
+        let blob_exists = self
+            .encoded
+            .get(shard)
+            .map(Option::is_some)
+            .unwrap_or(false);
+        if !blob_exists {
+            return Err(Error::Graph(format!(
+                "shard {shard} has no encoded table (store before fetch)"
+            )));
+        }
+        let mut lru = self.lru.borrow_mut();
+        let tensor = if let Some(t) = lru.cached[shard].clone() {
+            lru.seq += 1;
+            let seq = lru.seq;
+            lru.stamp[shard] = seq;
+            self.metrics.inc("resident.hits", 1);
+            if lru.speculative[shard] {
+                lru.speculative[shard] = false;
+                self.metrics.inc("resident.prefetch_hits", 1);
+            }
+            t
+        } else {
+            self.metrics.inc("resident.misses", 1);
+            let t = self.decode(shard)?;
+            self.insert(&mut lru, shard, t.clone(), shard, false)?;
+            t
+        };
+        self.prefetch_next(&mut lru, shard)?;
+        self.publish_gauges(&lru);
+        Ok(tensor)
+    }
+
+    /// Decoded bytes currently resident in the LRU.
+    pub fn bytes_resident(&self) -> usize {
+        self.lru.borrow().bytes
+    }
+
+    /// High-water mark of [`Self::bytes_resident`] over the set's life.
+    pub fn peak_bytes(&self) -> usize {
+        self.lru.borrow().peak
+    }
+
+    /// Whether a shard is currently decoded in the cache.
+    pub fn is_resident(&self, shard: usize) -> bool {
+        self.lru.borrow().cached.get(shard).map(Option::is_some).unwrap_or(false)
+    }
+
+    /// Total encoded footprint of the out-of-core tier.
+    pub fn encoded_bytes(&self) -> usize {
+        self.encoded.iter().flatten().map(QuantizedFeatures::encoded_bytes).sum()
+    }
+
+    /// Total decoded footprint if every stored shard were resident at
+    /// once — what an unbounded cache would hold.
+    pub fn unbounded_bytes(&self) -> usize {
+        self.encoded.iter().flatten().map(QuantizedFeatures::decoded_bytes).sum()
+    }
+
+    /// Hit/miss/prefetch counters and the bytes/peak gauges.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Fraction of fetches served from the cache (1.0 before any).
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.metrics.counter_value("resident.hits") as f64;
+        let misses = self.metrics.counter_value("resident.misses") as f64;
+        if hits + misses == 0.0 {
+            return 1.0;
+        }
+        hits / (hits + misses)
+    }
+
+    fn decode(&self, shard: usize) -> Result<Tensor> {
+        let blob = self.encoded[shard].as_ref().expect("caller checked the blob exists");
+        let mut values = Vec::new();
+        blob.decode_into(&mut values);
+        let rows = values.len() / self.feature;
+        Tensor::f32(&[rows, self.feature], values)
+    }
+
+    /// Insert a decoded tensor, evicting least-recently-used shards
+    /// (never `pin`) until it fits.  Errors if it cannot fit.
+    fn insert(
+        &self,
+        lru: &mut Lru,
+        shard: usize,
+        tensor: Tensor,
+        pin: usize,
+        speculative: bool,
+    ) -> Result<()> {
+        let size = tensor_bytes(&tensor);
+        while lru.bytes + size > self.budget {
+            let victim = lru
+                .cached
+                .iter()
+                .enumerate()
+                .filter(|(s, t)| t.is_some() && *s != pin)
+                .min_by_key(|&(s, _)| lru.stamp[s])
+                .map(|(s, _)| s);
+            match victim {
+                Some(v) => {
+                    let evicted = lru.cached[v].take().expect("victim is cached");
+                    lru.bytes -= tensor_bytes(&evicted);
+                    lru.stamp[v] = 0;
+                    lru.speculative[v] = false;
+                    self.metrics.inc("resident.evictions", 1);
+                }
+                None => {
+                    return Err(Error::Graph(format!(
+                        "shard {shard} ({size} B) cannot fit the {}-byte budget \
+                         without evicting the pinned shard {pin}",
+                        self.budget
+                    )))
+                }
+            }
+        }
+        lru.bytes += size;
+        lru.peak = lru.peak.max(lru.bytes);
+        lru.seq += 1;
+        lru.stamp[shard] = lru.seq;
+        lru.speculative[shard] = speculative;
+        lru.cached[shard] = Some(tensor);
+        Ok(())
+    }
+
+    /// Deterministic next-shard prefetch: decode `(shard + 1) % shards`
+    /// ahead of its fetch unless that would evict `shard` itself (its
+    /// batch is still in flight through the PJRT funnel).
+    fn prefetch_next(&self, lru: &mut Lru, shard: usize) -> Result<()> {
+        let shards = self.encoded.len();
+        if shards < 2 {
+            return Ok(());
+        }
+        let next = (shard + 1) % shards;
+        if next == shard || lru.cached[next].is_some() {
+            return Ok(());
+        }
+        let blob = match self.encoded[next].as_ref() {
+            Some(b) => b,
+            None => return Ok(()),
+        };
+        let pinned = decoded_bytes(&lru.cached, shard);
+        if blob.decoded_bytes() + pinned > self.budget {
+            self.metrics.inc("resident.prefetch_skipped", 1);
+            return Ok(());
+        }
+        let t = self.decode(next)?;
+        self.insert(lru, next, t, shard, true)?;
+        self.metrics.inc("resident.prefetch_issued", 1);
+        Ok(())
+    }
+
+    fn publish_gauges(&self, lru: &Lru) {
+        self.metrics.set_gauge("resident.bytes", lru.bytes as f64);
+        self.metrics.raise_gauge("resident.peak_bytes", lru.peak as f64);
+    }
+}
+
+fn tensor_bytes(t: &Tensor) -> usize {
+    t.as_f32().map(|v| v.len()).unwrap_or(0) * std::mem::size_of::<f32>()
+}
+
+fn decoded_bytes(cached: &[Option<Tensor>], shard: usize) -> usize {
+    cached.get(shard).and_then(Option::as_ref).map(tensor_bytes).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ints(seed: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| ((seed * 31 + i * 7) % 512) as f32).collect()
+    }
+
+    fn set(shards: usize, rows: usize, budget_shards: usize) -> ResidentSet {
+        let feature = 2;
+        let budget = rows * feature * 4 * budget_shards;
+        let mut s = ResidentSet::new(shards, feature, FeatureQuant::ExactI32, budget).unwrap();
+        for shard in 0..shards {
+            s.store(shard, &ints(shard, rows * feature)).unwrap();
+        }
+        s
+    }
+
+    #[test]
+    fn fetch_decodes_exactly_and_counts_hits_and_misses() {
+        let s = set(4, 8, 4);
+        let t = s.fetch(2).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &ints(2, 16)[..]);
+        assert_eq!(s.metrics().counter_value("resident.misses"), 1);
+        let again = s.fetch(2).unwrap();
+        assert_eq!(again.as_f32().unwrap(), t.as_f32().unwrap());
+        assert_eq!(s.metrics().counter_value("resident.hits"), 1);
+    }
+
+    #[test]
+    fn peak_never_exceeds_the_budget() {
+        let s = set(6, 8, 2);
+        let shard_bytes = 8 * 2 * 4;
+        for shard in [0, 3, 1, 4, 2, 5, 0, 5, 3] {
+            s.fetch(shard).unwrap();
+            assert!(s.bytes_resident() <= s.budget_bytes());
+        }
+        assert!(s.peak_bytes() <= s.budget_bytes());
+        assert_eq!(s.peak_bytes(), 2 * shard_bytes);
+        assert!(s.metrics().counter_value("resident.evictions") > 0);
+        assert!(s.unbounded_bytes() > s.budget_bytes());
+    }
+
+    #[test]
+    fn sequential_order_turns_prefetches_into_hits() {
+        let s = set(5, 8, 3);
+        for shard in 0..5 {
+            s.fetch(shard).unwrap();
+        }
+        // Shard 0 misses cold; 1..4 were each prefetched by the
+        // previous fetch.
+        assert_eq!(s.metrics().counter_value("resident.misses"), 1);
+        assert_eq!(s.metrics().counter_value("resident.prefetch_hits"), 4);
+        assert!(s.metrics().counter_value("resident.prefetch_issued") >= 4);
+        assert!(s.hit_rate() > 0.7);
+    }
+
+    #[test]
+    fn prefetch_never_evicts_the_pinned_shard() {
+        // Budget of exactly one shard: the successor can never join the
+        // just-fetched shard, so every prefetch is skipped and the
+        // pinned shard stays resident.
+        let s = set(3, 8, 1);
+        for shard in [0, 1, 2, 0] {
+            s.fetch(shard).unwrap();
+            assert!(s.is_resident(shard));
+        }
+        assert_eq!(s.metrics().counter_value("resident.prefetch_issued"), 0);
+        assert_eq!(s.metrics().counter_value("resident.prefetch_skipped"), 4);
+        assert_eq!(s.metrics().counter_value("resident.misses"), 4);
+    }
+
+    #[test]
+    fn mixed_shard_sizes_stay_under_budget() {
+        // Adversarial mix: shard payloads of very different sizes.
+        let feature = 1;
+        let sizes = [4usize, 64, 16, 256, 8, 128];
+        let budget = 300 * 4; // fits the biggest shard, not the sum
+        let mut s = ResidentSet::new(6, feature, FeatureQuant::ExactI32, budget).unwrap();
+        for (shard, &len) in sizes.iter().enumerate() {
+            s.store(shard, &ints(shard, len)).unwrap();
+        }
+        for round in 0..3 {
+            for shard in [3, 0, 5, 1, 4, 2, 3, 5] {
+                let t = s.fetch(shard).unwrap();
+                assert_eq!(t.as_f32().unwrap(), &ints(shard, sizes[shard])[..], "round {round}");
+                assert!(s.bytes_resident() <= budget);
+            }
+        }
+        assert!(s.peak_bytes() <= budget);
+    }
+
+    #[test]
+    fn store_rejects_oversized_and_misaligned_payloads() {
+        let mut s = ResidentSet::new(2, 4, FeatureQuant::ExactI32, 64).unwrap();
+        assert!(s.store(0, &ints(0, 6)).is_err(), "not a multiple of feature width");
+        assert!(s.store(0, &ints(0, 32)).is_err(), "128 B payload over a 64 B budget");
+        assert!(s.store(9, &ints(0, 4)).is_err(), "shard out of range");
+        assert!(s.fetch(0).is_err(), "fetch before store");
+        s.store(0, &ints(0, 8)).unwrap();
+        assert!(s.fetch(0).is_ok());
+    }
+
+    #[test]
+    fn restoring_a_shard_invalidates_its_cached_copy() {
+        let mut s = set(2, 4, 2);
+        let before = s.fetch(0).unwrap().as_f32().unwrap().to_vec();
+        let fresh = ints(7, 8);
+        s.store(0, &fresh).unwrap();
+        let after = s.fetch(0).unwrap();
+        assert_eq!(after.as_f32().unwrap(), &fresh[..]);
+        assert_ne!(after.as_f32().unwrap(), &before[..]);
+        assert!(s.bytes_resident() <= s.budget_bytes());
+    }
+
+    #[test]
+    fn eviction_order_is_a_pure_function_of_the_fetch_sequence() {
+        let pattern = [0usize, 2, 4, 1, 3, 0, 4, 2, 2, 1, 0, 3];
+        let run = || {
+            let s = set(5, 8, 2);
+            for &shard in &pattern {
+                s.fetch(shard).unwrap();
+            }
+            s.metrics().to_json()
+        };
+        assert_eq!(run(), run());
+    }
+}

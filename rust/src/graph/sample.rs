@@ -6,6 +6,8 @@
 //! sample size, seed) — re-sampling yields the same neighbors, as required
 //! for reproducible inference and for matching the AOT artifact's `[B, S]`
 //! neighbor-index input.
+//!
+//! DESIGN.md: §10 (sampling feeds the shard plan and the round engine).
 
 use crate::testing::Rng;
 

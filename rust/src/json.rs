@@ -10,6 +10,8 @@
 //! serialize in sorted order for free, and number formatting is a pure
 //! function of the value — the output is byte-deterministic regardless
 //! of thread count, matching the E9/E11/E13 byte-identity contract.
+//!
+//! DESIGN.md: §4 (experiment artifacts are emitted and checked through this).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

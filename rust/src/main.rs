@@ -15,9 +15,12 @@
 //! ima-gnn tune [options]          # E11: hybrid operating-point autotuner
 //! ima-gnn perf [options]          # E10: hot-kernel perf baseline
 //! ima-gnn serve [options]         # serve a GCN layer over PJRT artifacts
+//! ima-gnn resident [options]      # E16: million-node residency under a byte budget
 //! ima-gnn trace [options]         # traced E13 round -> Perfetto timeline
 //! ima-gnn info                    # artifact + platform info
 //! ```
+//!
+//! DESIGN.md: §1 (layering); README.md maps subcommands to experiments.
 
 use std::time::Duration;
 
@@ -30,8 +33,9 @@ use ima_gnn::cores::GnnWorkload;
 use ima_gnn::error::{Error, Result};
 use ima_gnn::experiments::{
     control_cell, control_setup, hybrid_target, scaling_sweep, table2, ControllerSweep,
-    FaultSweep, Fig8, HybridSweep, NetsimSweep, ServingSweep, Table1, TrafficSweep,
-    CTRL_SCENARIOS, FAULT_DEGRADED_FACTOR, TRAFFIC_MAX_BATCH, TRAFFIC_WAIT_MS,
+    FaultSweep, Fig8, HybridSweep, NetsimSweep, ResidencySweep, ServingSweep, Table1,
+    TrafficSweep, CTRL_SCENARIOS, FAULT_DEGRADED_FACTOR, RESIDENCY_BUDGET_SHARDS,
+    TRAFFIC_MAX_BATCH, TRAFFIC_WAIT_MS,
 };
 use ima_gnn::graph::{generate, ShardPlan};
 use ima_gnn::netmodel::{NetModel, Setting, Topology};
@@ -76,6 +80,7 @@ fn run(argv: &[String]) -> Result<()> {
         "tune" => cmd_tune(rest),
         "perf" => cmd_perf(rest),
         "serve" => cmd_serve(rest),
+        "resident" => cmd_resident(rest),
         "trace" => cmd_trace(rest),
         "area" => cmd_area(rest),
         "info" => cmd_info(rest),
@@ -122,6 +127,8 @@ fn print_help() {
          perf       hot-kernel perf baseline, emits BENCH_perf.fresh.json; --check\n             gates against the committed BENCH_perf.json floors (E10)\n  \
          serve      serve GCN-layer inference over the PJRT artifacts; --sweep runs\n             \
          the E12 sharded-serving sweep, emits BENCH_serving.json\n  \
+         resident   million-node residency: compact CSR + byte-budgeted shard\n             \
+         streaming; --sweep emits BENCH_residency.json (E16)\n  \
          trace      traced E13 round across the three deployment settings; exports a\n             \
          Perfetto-loadable Chrome trace-event timeline + a metrics snapshot\n  \
          area       silicon-area report for both accelerator presets\n  \
@@ -949,6 +956,61 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         leader.served_batches(),
         wall_total.as_secs_f64() * 1e3 / served.max(1) as f64,
     );
+    Ok(())
+}
+
+fn cmd_resident(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("resident", "E16 million-node residency under a byte budget")
+        .opt("nodes", "graph nodes for a single run", Some("100000"))
+        .opt("max-nodes", "sweep scale ceiling (filters the E16 grid)", Some("1000000"))
+        .opt("rounds", "serving rounds per scale", Some("2"))
+        .opt("budget-shards", "resident-set byte budget, in decoded shards", Some("2"))
+        .opt("json", "sweep artifact path", Some("BENCH_residency.json"))
+        .flag("sweep", "run the E16 residency sweep over the scale grid");
+    let args = cmd.parse(argv)?;
+    let rounds = args.usize_or("rounds", 2)?.max(1);
+    let budget_shards = args.usize_or("budget-shards", RESIDENCY_BUDGET_SHARDS)?.max(1);
+
+    if args.flag("sweep") {
+        let max_nodes = args.usize_or("max-nodes", 1_000_000)?.max(1);
+        let sweep = ResidencySweep::run(max_nodes, rounds, budget_shards)?;
+        sweep.render().print();
+        let top = sweep.rows.iter().max_by_key(|r| r.nodes).expect("sweep has rows");
+        println!(
+            "largest scale: {} nodes served under a {} B ceiling (peak {} B; an \
+             unbounded cache would hold {} B); outputs bit-identical to the seed path",
+            top.nodes, top.budget_bytes, top.peak_bytes, top.unbounded_bytes
+        );
+        let path = args.get_or("json", "BENCH_residency.json").to_string();
+        std::fs::write(&path, sweep.to_json())?;
+        let sidecar = write_metrics_sidecar(&path, &sweep.metrics_snapshot())?;
+        println!("wrote {path} and {sidecar}");
+        return Ok(());
+    }
+
+    let nodes = args.usize_or("nodes", 100_000)?.max(1);
+    // `single` errors on budget violation or resident/seed digest
+    // divergence, so reaching the prints below IS the invariant check.
+    let r = ResidencySweep::single(nodes, rounds, budget_shards)?;
+    println!(
+        "{} nodes / {} edges -> {} shards; compact CSR {:.2}x smaller ({} -> {} B)",
+        r.nodes, r.edges, r.shards, r.compression_ratio, r.graph_seed_bytes, r.graph_encoded_bytes
+    );
+    println!(
+        "peak resident {} B <= budget {} B (unbounded cache: {} B)",
+        r.peak_bytes, r.budget_bytes, r.unbounded_bytes
+    );
+    println!(
+        "cache: {} hits / {} misses / {} evictions, {:.1}% hit rate ({} prefetch hits)",
+        r.hits,
+        r.misses,
+        r.evictions,
+        r.hit_rate * 100.0,
+        r.prefetch_hits
+    );
+    if let Some(o) = r.decode_overhead() {
+        println!("decode-on-fetch overhead vs the seed path: {o:.2}x (bit-identical outputs)");
+    }
     Ok(())
 }
 

@@ -12,6 +12,8 @@
 //! * Eq. (5)  `T_comm-cent = t(L_n)` (concurrent transfers)
 //! * Eq. (6)  `P_Net = P_compute + P_communicate`            → [`NetModel::power`]
 //! * Eq. (7)  `P_comm-dec = (1/t(L_c)) Σ_{x=1}^{X−1} α(x+1)·E_perBit`
+//!
+//! DESIGN.md: §4 (network model and the experiment code path).
 
 use crate::comm::{InterClusterLink, InterNetworkLink};
 use crate::config::{AcceleratorConfig, CommConfig};

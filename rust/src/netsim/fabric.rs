@@ -7,6 +7,8 @@
 //! function of the scenario + seed (the determinism the event queue's
 //! FIFO tie-break guarantees at the event level extends to the resource
 //! level).
+//!
+//! DESIGN.md: §6 (simulation).
 
 use crate::units::Time;
 

@@ -29,6 +29,8 @@
 //! Entry points: [`simulate_fabric`] for one round of one scenario, and
 //! [`NetSim`] as a [`CommFabric`] implementation that `netmodel`
 //! consumes via [`NetModel::latency_via`].
+//!
+//! DESIGN.md: §6 (simulation).
 
 mod fabric;
 mod scenario;

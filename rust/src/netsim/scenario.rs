@@ -9,6 +9,8 @@
 //! events).  With every capacity knob left unlimited the schedules
 //! collapse to the closed-form Eqs. (4)/(5) — the cross-validation
 //! invariant `netsim_cross_validation.rs` asserts.
+//!
+//! DESIGN.md: §6 (simulation).
 
 use crate::error::{Error, Result};
 use crate::netmodel::{NetModel, Topology};

@@ -10,6 +10,8 @@
 //! document is byte-deterministic per seed via [`crate::json::Json::dump`].
 //!
 //! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+//!
+//! DESIGN.md: §12 (observability).
 
 use std::collections::BTreeMap;
 

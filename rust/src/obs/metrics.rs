@@ -13,6 +13,8 @@
 //! exact nearest-rank percentile `x` satisfies `x ≤ e ≤ x·2^(1/8)` —
 //! at most [`MAX_REL_ERROR`] ≈ 9.05 % relative error — while merges are
 //! exact bucket-count additions (associative and commutative).
+//!
+//! DESIGN.md: §12 (observability).
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};

@@ -21,6 +21,8 @@
 //! reduce every instrumentation point to one predictable branch with no
 //! allocation, and disabled runs produce bit-identical outputs to
 //! uninstrumented builds — tracing can stay compiled in everywhere.
+//!
+//! DESIGN.md: §12 (observability).
 
 pub mod chrome;
 pub mod metrics;

@@ -15,6 +15,8 @@
 //! A disabled tracer ([`Tracer::disabled`]) costs one branch per call
 //! and performs no allocation or clock movement, so instrumented and
 //! uninstrumented runs are bit-identical in every output.
+//!
+//! DESIGN.md: §12 (observability).
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;

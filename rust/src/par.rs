@@ -8,6 +8,8 @@
 //! is **order-stable and bit-identical** to the sequential
 //! `items.iter().map(f)` regardless of thread count or OS scheduling.
 //! Worker panics are re-raised on the caller.
+//!
+//! DESIGN.md: §8 (threading and determinism).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -12,6 +12,8 @@
 //! CI uploads next to `BENCH_netsim.json`.  Headline `speedups` compare
 //! each fast path against its seed-equivalent baseline on the same
 //! inputs, with bit-/byte-identity asserted before anything is timed.
+//!
+//! DESIGN.md: §8 (fast paths and the perf trajectory).
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -23,11 +25,14 @@ use crate::cores::{AggregationCore, GnnWorkload, Tile};
 use crate::crossbar::MvmCrossbar;
 use crate::error::Result;
 use crate::experiments::NetsimSweep;
-use crate::graph::{generate, Csr, NeighborSampler, ShardPlan};
+use crate::graph::{
+    generate, Csr, FeatureQuant, NeighborSampler, QuantizedFeatures, ResidentSet, ShardPlan,
+};
 use crate::netmodel::{NetModel, Topology};
 use crate::netsim::{simulate_fabric, NetSimConfig, Scenario};
 use crate::obs::MetricsRegistry;
 use crate::par;
+use crate::runtime::Tensor;
 use crate::testing::Rng;
 
 /// Frozen replica of the seed's `AggregationCore::aggregate` hot path —
@@ -494,6 +499,29 @@ pub fn run(quick: bool) -> Result<PerfReport> {
         black_box(Csr::from_edges(n_nodes, &edges).unwrap())
     });
 
+    // --- resident-set fetch: warm LRU hit vs decode-every-call. ---------
+    // One 4096×64 shard (a 1 MiB decoded table, the E16 residency tier's
+    // unit of caching).  The seed side pays what every fetch would cost
+    // without the LRU — decode the quantized blob and materialize a
+    // fresh tensor per call; the fast side is a warm `ResidentSet::fetch`
+    // (an Arc clone plus LRU bookkeeping).  Both must return the same
+    // tensor before either is timed.
+    b.section("resident fetch (4096x64 shard, warm cache vs decode)");
+    let res_rows = 4_096usize;
+    let res_feature = 64usize;
+    let res_vals: Vec<f32> =
+        (0..res_rows * res_feature).map(|_| rng.index(512) as f32).collect();
+    let res_bytes = res_vals.len() * std::mem::size_of::<f32>();
+    let mut res_set = ResidentSet::new(1, res_feature, FeatureQuant::ExactI32, res_bytes)?;
+    res_set.store(0, &res_vals)?;
+    let warm = res_set.fetch(0)?; // prime the cache
+    let res_blob = QuantizedFeatures::encode(FeatureQuant::ExactI32, &res_vals)?;
+    let seed_fetch =
+        || Tensor::f32(&[res_rows, res_feature], res_blob.decode()).unwrap();
+    assert_eq!(seed_fetch(), warm, "decode replica diverged from the resident fetch");
+    b.case("resident/seed: decode every fetch", || black_box(seed_fetch()));
+    b.case("resident/fast: warm LRU fetch", || black_box(res_set.fetch(0).unwrap()));
+
     // --- netsim scenarios (the event-loop hot path). --------------------
     b.section("netsim scenarios");
     let model = NetModel::paper(&GnnWorkload::taxi())?;
@@ -654,6 +682,11 @@ pub fn run(quick: bool) -> Result<PerfReport> {
         "round/seed: per-row gather + fresh-alloc assemble",
         "round/fast: engine barrier + assemble",
     );
+    report.push_speedup(
+        "resident_warm_fetch",
+        "resident/seed: decode every fetch",
+        "resident/fast: warm LRU fetch",
+    );
     report.push_speedup("e9_sweep_parallel", "e9/seed: sequential sweep", "e9/fast: parallel sweep");
     Ok(report)
 }
@@ -672,13 +705,14 @@ mod tests {
     #[test]
     fn quick_run_produces_a_wellformed_artifact() {
         let report = run(true).unwrap();
-        assert!(report.cases.len() >= 14);
+        assert!(report.cases.len() >= 16);
         for name in [
             "aggregate_512_binary",
             "mvm_512_8bit",
             "accumulate_dense_mask",
             "assemble_par",
             "round_offline",
+            "resident_warm_fetch",
             "e9_sweep_parallel",
         ] {
             let f = report.speedup(name).unwrap();
@@ -692,13 +726,13 @@ mod tests {
         assert_eq!(cases.len(), report.cases.len());
         assert!(cases[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
         let speedups = doc.get("speedups").unwrap().as_arr().unwrap();
-        assert_eq!(speedups.len(), 6);
+        assert_eq!(speedups.len(), 7);
 
         // The regression gate round-trips through the artifact: a fresh
         // run checked against its own JSON passes every headline with
         // ratio ~1 (the artifact rounds factors to 3 decimals).
         let rows = check_against(&report, &json).unwrap();
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 7);
         for r in &rows {
             assert!(r.pass, "{}: self-check must pass", r.name);
             assert!((r.ratio - 1.0).abs() < 1e-2, "{}: ratio {}", r.name, r.ratio);

@@ -2,6 +2,8 @@
 //!
 //! `Table` renders aligned ASCII tables shaped like the paper's Table 1/2;
 //! `BarSeries` renders log-scale horizontal bars shaped like Fig. 8.
+//!
+//! DESIGN.md: §4 (experiment tables and figure series render through this).
 
 use std::fmt::Write as _;
 

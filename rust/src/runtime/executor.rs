@@ -4,6 +4,8 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `PjRtClient::compile` → `execute`.  Compilation happens once per
 //! artifact; the hot path is `execute` only.
+//!
+//! DESIGN.md: §5 (runtime).
 
 use std::path::Path;
 

@@ -1,4 +1,6 @@
 //! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! DESIGN.md: §5 (runtime).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -3,6 +3,8 @@
 //! Python runs only at build time (`make artifacts`); this module makes the
 //! compiled HLO-text models callable as plain rust functions.  One PJRT CPU
 //! client is shared; compiled executables are cached per artifact name.
+//!
+//! DESIGN.md: §5 (runtime).
 
 mod executor;
 mod manifest;

@@ -1,4 +1,6 @@
 //! Host-side tensors exchanged with the PJRT runtime.
+//!
+//! DESIGN.md: §5 (runtime).
 
 use std::sync::Arc;
 

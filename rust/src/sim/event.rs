@@ -1,4 +1,6 @@
 //! Deterministic discrete-event queue.
+//!
+//! DESIGN.md: §6 (simulation).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

@@ -7,6 +7,8 @@
 //! completion times coincide with Eqs. (1)–(5); the extra knobs
 //! (`link_jitter`, `shared_medium`, `overlap_cores`) then explore effects
 //! the closed-form model cannot express — they feed the ablation benches.
+//!
+//! DESIGN.md: §6 (simulation).
 
 mod event;
 pub mod faults;

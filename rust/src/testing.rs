@@ -14,6 +14,8 @@
 //!     assert_eq!(a + b, b + a);
 //! });
 //! ```
+//!
+//! DESIGN.md: §8 (determinism contract the property tests lean on).
 
 /// Deterministic xorshift64* PRNG — reproducible across runs and platforms.
 #[derive(Debug, Clone)]

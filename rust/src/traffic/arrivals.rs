@@ -11,6 +11,8 @@
 //! completion — so it lives inside the engine's event loop
 //! ([`super::closed_loop`]); [`ThinkTime`] here only samples the think
 //! delays.
+//!
+//! DESIGN.md: §11 (traffic engine).
 
 use crate::coordinator::Arrival;
 use crate::error::{Error, Result};

@@ -5,6 +5,8 @@
 //! arithmetic honest (`Energy / Time = Power`, etc.) and `Display` picks a
 //! human scale (`14.27 µs`, `780.1 mW`) so reports read like the paper's
 //! tables.
+//!
+//! DESIGN.md: §2 (circuit level; every hardware figure is unit-typed).
 
 use std::fmt;
 use std::iter::Sum;

@@ -1,4 +1,6 @@
 //! Application workload generators.
+//!
+//! DESIGN.md: §4 (workloads drive the experiment code path).
 
 mod taxi;
 

@@ -1,0 +1,286 @@
+//! Integration: million-node residency — the compact CSR codec, the
+//! byte-budgeted resident set, and the round engine's streaming serve
+//! path (DESIGN.md §16, E16).
+//!
+//! The codec property tests exercise arbitrary random graphs through
+//! `testing::forall`; the LRU tests pin down the determinism contract
+//! (eviction order is a pure function of the fetch sequence, never of
+//! the assembly thread count); and the acceptance test serves a
+//! LiveJournal-shape graph at a full million nodes under an asserted
+//! byte ceiling — the scale the E11/E12 sweeps cap away.
+
+use ima_gnn::coordinator::RoundEngine;
+use ima_gnn::experiments::{residency_binding, ResidencySweep, RESIDENCY_DEGREE};
+use ima_gnn::graph::{generate, CompactCsr, FeatureQuant, ResidentSet, ShardPlan};
+use ima_gnn::testing::{forall, gcn_layer_binding, Rng};
+
+/// A small multi-shard engine with integer-valued features uploaded and
+/// the first barrier driven — the fixture for the serve-path tests.
+/// `budget_shards = 0` leaves residency off (the seed path).
+fn engine_fixture(nodes: usize, budget_shards: usize, seed: u64) -> RoundEngine {
+    let b = gcn_layer_binding();
+    let g = generate::uniform(nodes, nodes * 4, 9).unwrap();
+    let plan = ShardPlan::build(&g, &b.sampler(), b.table).unwrap();
+    let feature = b.feature;
+    let shard_bytes = b.table * b.feature * std::mem::size_of::<f32>();
+    let mut eng = RoundEngine::new(b.clone(), plan, vec![0.01; b.feature * b.hidden]).unwrap();
+    if budget_shards > 0 {
+        eng.enable_residency(FeatureQuant::ExactI32, budget_shards * shard_bytes).unwrap();
+    }
+    let mut rng = Rng::new(seed);
+    for node in 0..nodes {
+        let f: Vec<f32> = (0..feature).map(|_| rng.index(512) as f32).collect();
+        eng.upload(node, &f).unwrap();
+    }
+    eng.try_end_round().unwrap();
+    eng
+}
+
+/// One full fetch scan in assemble order: every batch's shard table plus
+/// its assembled inputs, flattened to comparable bytes.
+fn scan(eng: &RoundEngine, nodes: &[usize], threads: usize) -> Vec<(Vec<u32>, Vec<f32>)> {
+    let mut out = Vec::new();
+    for b in eng.assemble_with_threads(nodes, threads).unwrap() {
+        let table = eng.fetch_table(b.shard).unwrap();
+        let bits: Vec<u32> = table.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+        out.push((bits, b.x_self.clone()));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Codec property tests (ISSUE satellite: varint/delta, renumbering,
+// quantization, neighbor-order equivalence).
+// ---------------------------------------------------------------------
+
+/// Renumbering is a permutation (every old id maps to exactly one new id
+/// and back), neighbor iteration through the compact form equals the
+/// seed CSR's order exactly, and the structural roundtrip is lossless —
+/// over arbitrary random graphs including empty rows.
+#[test]
+fn property_compact_codec_roundtrips_arbitrary_graphs() {
+    forall(20, |rng: &mut Rng| {
+        let n = rng.index(300) + 2;
+        let e = rng.index(n * 5);
+        let g = generate::uniform(n, e, rng.next_u64()).unwrap();
+        let c = CompactCsr::from_csr(&g).unwrap();
+        assert_eq!(c.num_nodes(), g.num_nodes());
+        assert_eq!(c.num_edges(), g.num_edges());
+
+        let mut seen = vec![false; g.num_nodes()];
+        for old in 0..g.num_nodes() {
+            let new = c.new_id(old);
+            assert!(!seen[new], "new id {new} assigned twice");
+            seen[new] = true;
+            assert_eq!(c.old_id(new), old, "inverse mapping broken at {old}");
+        }
+
+        let mut buf = Vec::new();
+        for old in 0..g.num_nodes() {
+            c.neighbors(old, &mut buf).unwrap();
+            assert_eq!(buf, g.neighbors(old), "neighbor order diverged at node {old}");
+        }
+        assert_eq!(c.to_csr().unwrap(), g, "structural roundtrip lost information");
+    });
+}
+
+/// A max-degree row (a star hub adjacent to every other node) survives
+/// the delta+varint encoding and keeps the seed's sorted neighbor order.
+#[test]
+fn max_degree_rows_roundtrip() {
+    let n = 600;
+    let edges: Vec<(usize, usize)> = (1..n).flat_map(|v| [(0, v), (v, 0)]).collect();
+    let g = ima_gnn::graph::Csr::from_edges(n, &edges).unwrap();
+    let c = CompactCsr::from_csr(&g).unwrap();
+    assert_eq!(c.new_id(0), 0, "the hub has max degree, so it renumbers first");
+    let mut buf = Vec::new();
+    c.neighbors(0, &mut buf).unwrap();
+    assert_eq!(buf, g.neighbors(0));
+    assert_eq!(c.to_csr().unwrap(), g);
+    assert!(c.compression_ratio() > 1.0, "a star is maximally delta-friendly");
+}
+
+/// In-range integral features roundtrip bit-for-bit through the ExactI32
+/// path — the property the engine's bit-identity contract rests on.
+#[test]
+fn property_exact_i32_features_roundtrip_bitwise() {
+    use ima_gnn::graph::QuantizedFeatures;
+    forall(20, |rng: &mut Rng| {
+        let len = rng.index(200) + 1;
+        let vals: Vec<f32> = (0..len)
+            .map(|_| (rng.index(33_554_433) as i64 - 16_777_216) as f32)
+            .collect();
+        let q = QuantizedFeatures::encode(FeatureQuant::ExactI32, &vals).unwrap();
+        let back = q.decode();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "ExactI32 must be bit-exact");
+        }
+        assert!(QuantizedFeatures::encode(FeatureQuant::ExactI32, &[0.5]).is_err());
+        assert!(QuantizedFeatures::encode(FeatureQuant::ExactI32, &[16_777_218.0]).is_err());
+    });
+}
+
+// ---------------------------------------------------------------------
+// LRU / prefetch determinism (ISSUE satellite).
+// ---------------------------------------------------------------------
+
+/// Eviction order — and therefore every cache counter — is a pure
+/// function of the fetch sequence: driving the identical round through
+/// assembly at 1, 2 and 8 threads produces byte-identical resident-set
+/// metrics and byte-identical served tables.
+#[test]
+fn eviction_order_is_independent_of_assembly_thread_count() {
+    let all: Vec<usize> = (0..256).collect();
+    let mut runs = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let eng = engine_fixture(256, 2, 11);
+        let served = scan(&eng, &all, threads);
+        let tier = eng.resident().unwrap();
+        runs.push((served, tier.metrics().to_json(), tier.peak_bytes()));
+    }
+    assert_eq!(runs[0], runs[1], "2-thread assembly changed the cache story");
+    assert_eq!(runs[0], runs[2], "8-thread assembly changed the cache story");
+    assert!(runs[0].1.contains("resident.evictions"));
+}
+
+/// Adversarial shard-size mixes never pierce the budget: random per-shard
+/// row counts, random fetch sequences, `bytes_resident` checked after
+/// every fetch and `peak_bytes` at the end.
+#[test]
+fn property_peak_bytes_respects_budget_on_adversarial_mixes() {
+    forall(20, |rng: &mut Rng| {
+        let shards = rng.index(6) + 2;
+        let rows: Vec<usize> = (0..shards).map(|_| rng.index(64) + 1).collect();
+        let max_rows = *rows.iter().max().unwrap();
+        let budget = max_rows * 4 * (rng.index(3) + 1);
+        let mut set = ResidentSet::new(shards, 1, FeatureQuant::ExactI32, budget).unwrap();
+        for (s, &r) in rows.iter().enumerate() {
+            let vals: Vec<f32> = (0..r).map(|i| ((s * 31 + i * 7) % 500) as f32).collect();
+            set.store(s, &vals).unwrap();
+        }
+        for _ in 0..40 {
+            set.fetch(rng.index(shards)).unwrap();
+            assert!(
+                set.bytes_resident() <= budget,
+                "resident {} B over the {budget} B budget",
+                set.bytes_resident()
+            );
+        }
+        assert!(set.peak_bytes() <= budget);
+    });
+}
+
+/// Cold (all misses) and warm (hit/miss mix) serve scans return
+/// bit-identical tables and assembled inputs, and both match the seed
+/// engine with residency off.
+#[test]
+fn cold_and_warm_serves_are_bit_identical_to_the_seed_path() {
+    let all: Vec<usize> = (0..256).rev().collect();
+    let res = engine_fixture(256, 2, 11);
+    let cold = scan(&res, &all, 1);
+    let warm = scan(&res, &all, 1);
+    assert_eq!(cold, warm, "warm reuse changed served bytes");
+    let tier = res.resident().unwrap();
+    assert!(tier.metrics().counter_value("resident.hits") > 0, "warm scan never hit");
+
+    let seed = engine_fixture(256, 0, 11);
+    assert_eq!(cold, scan(&seed, &all, 1), "residency diverged from the seed path");
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: one million nodes under an asserted byte ceiling.
+// ---------------------------------------------------------------------
+
+/// E16 acceptance — a LiveJournal-shape (R-MAT, avg degree 9) graph at
+/// 1,000,000 nodes is compacted, sharded and served through the round
+/// engine while decoded shard bytes never exceed a two-shard budget that
+/// is orders of magnitude below the unbounded cache's footprint.
+#[test]
+fn million_node_livejournal_shape_graph_serves_under_budget() {
+    let nodes = 1_000_000;
+    let g = generate::rmat(
+        nodes,
+        nodes * RESIDENCY_DEGREE,
+        &generate::RmatParams::default(),
+        0xE16,
+    )
+    .unwrap();
+    assert!(g.num_nodes() >= nodes);
+
+    let c = CompactCsr::from_csr(&g).unwrap();
+    assert!(
+        c.compression_ratio() > 1.5,
+        "skewed million-node CSR should compress: {:.2}x",
+        c.compression_ratio()
+    );
+    // Spot-check neighbor equivalence on a scatter of nodes (the full
+    // scan is property-tested at small scale).
+    let mut buf = Vec::new();
+    let mut rng = Rng::new(5);
+    for _ in 0..64 {
+        let v = rng.index(g.num_nodes());
+        c.neighbors(v, &mut buf).unwrap();
+        assert_eq!(buf, g.neighbors(v), "compact neighbors diverged at node {v}");
+    }
+
+    let b = residency_binding();
+    let plan = ShardPlan::build(&g, &b.sampler(), b.table).unwrap();
+    assert!(plan.num_shards() >= nodes / b.table, "a 4096-row table must shard 1M nodes");
+    let shard_bytes = b.table * b.feature * std::mem::size_of::<f32>();
+    let budget = 2 * shard_bytes;
+    let feature = b.feature;
+    let mut eng = RoundEngine::new(b.clone(), plan, vec![0.01; b.feature * b.hidden]).unwrap();
+    eng.enable_residency(FeatureQuant::ExactI32, budget).unwrap();
+
+    let mut rng = Rng::new(0xE16C);
+    for node in 0..g.num_nodes() {
+        let f: Vec<f32> = (0..feature).map(|_| rng.index(512) as f32).collect();
+        eng.upload(node, &f).unwrap();
+    }
+    eng.try_end_round().unwrap();
+    let shards = eng.plan().num_shards();
+    assert_eq!(eng.shard_encodes(), shards as u64);
+    assert_eq!(eng.table_builds(), 0, "residency must not materialize unbounded tensors");
+
+    // Serve a slice of requests end to end, then sweep every shard's
+    // table in plan order — the budget has to hold at every step.
+    let some: Vec<usize> = (0..4096).collect();
+    for batch in eng.assemble(&some).unwrap() {
+        eng.fetch_table(batch.shard).unwrap();
+        assert!(eng.resident().unwrap().bytes_resident() <= budget);
+    }
+    for s in 0..shards {
+        eng.fetch_table(s).unwrap();
+        assert!(eng.resident().unwrap().bytes_resident() <= budget);
+    }
+    let tier = eng.resident().unwrap();
+    assert!(tier.peak_bytes() <= budget, "peak {} B over {budget} B", tier.peak_bytes());
+    assert!(
+        tier.unbounded_bytes() >= shards * shard_bytes / 2,
+        "unbounded footprint should dwarf the budget"
+    );
+    assert!(
+        tier.metrics().counter_value("resident.prefetch_hits") > 0,
+        "the plan-order sweep must ride the prefetch"
+    );
+}
+
+/// The E16 sweep's smallest grid scale runs end to end through the
+/// public API (`run_with_threads`, untimed) — the same entry CI's quick
+/// mode uses — and its JSON artifact carries the headline fields.
+#[test]
+fn residency_sweep_quick_mode_emits_the_artifact_shape() {
+    let sweep = ResidencySweep::run_with_threads(10_000, 1, 2, 2, false).unwrap();
+    assert_eq!(sweep.rows.len(), 1);
+    let json = sweep.to_json();
+    for key in [
+        "\"experiment\": \"residency_sweep\"",
+        "\"peak_within_budget\": true",
+        "\"compression_ratio\"",
+        "\"prefetch_hits\"",
+        "\"decode_overhead\": null",
+    ] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+}
